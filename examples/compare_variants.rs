@@ -1,0 +1,77 @@
+//! Head-to-head implementation comparison on this substrate (the measured
+//! half of Figures 6/7): all four AOT kernel variants through PJRT plus
+//! the three native CPU baselines, same corpus, same hyperparameters.
+//!
+//! Absolute words/sec are CPU-substrate numbers; the reproduction target
+//! is the ordering (FULL-W2V fastest, per-pair baselines slowest).
+//!
+//! Run: `cargo run --release --example compare_variants [-- --words 200000]`
+
+use anyhow::Result;
+use fullw2v::config::TrainConfig;
+use fullw2v::corpus::synthetic::SyntheticSpec;
+use fullw2v::util::tables::{f, Table};
+use fullw2v::workbench::Workbench;
+
+fn main() -> Result<()> {
+    let args: Vec<String> = std::env::args().collect();
+    let words: u64 = args
+        .iter()
+        .position(|a| a == "--words")
+        .and_then(|i| args.get(i + 1))
+        .and_then(|v| v.parse().ok())
+        .unwrap_or(200_000);
+
+    let mut spec = SyntheticSpec::text8_mini();
+    spec.total_words = words;
+    let wb = Workbench::prepare(spec, 5);
+    println!(
+        "corpus: {} words, vocab {}\n",
+        wb.total_words,
+        wb.vocab.len()
+    );
+
+    let train = TrainConfig::default(); // d=128, N=5, W=5 -> Wf=3
+    let impls = [
+        "full_w2v",
+        "full_register",
+        "acc_sgns",
+        "wombat",
+        "pword2vec",
+        "psgnscc",
+        "mikolov",
+    ];
+    let mut table = Table::new(
+        "Figure 6 (measured on this substrate): throughput by implementation",
+        &["implementation", "words/s", "loss/word", "vs FULL-W2V"],
+    );
+    let mut rows: Vec<(String, f64, f64)> = Vec::new();
+    for name in impls {
+        let mut tr = wb.trainer(name, &train)?;
+        let rep = tr.train_epoch(&wb.sentences, 0)?;
+        println!(
+            "{:28} {:>10.0} words/s   loss/word {:.4}",
+            tr.name(),
+            rep.words_per_sec,
+            rep.loss_per_word
+        );
+        rows.push((tr.name(), rep.words_per_sec, rep.loss_per_word));
+    }
+    let full = rows[0].1;
+    for (name, wps, loss) in &rows {
+        table.row(vec![
+            name.clone(),
+            f(*wps, 0),
+            f(*loss, 4),
+            format!("{:.2}x", wps / full),
+        ]);
+    }
+    println!("\n{}", table.render());
+    println!(
+        "\nNOTE: measured on the CPU-PJRT substrate. Orderings within the\n\
+         PJRT group reflect kernel structure under XLA-CPU; absolute GPU\n\
+         ratios and cross-architecture scaling are projected by\n\
+         `gpusim_report` / `cargo bench` (see EXPERIMENTS.md)."
+    );
+    Ok(())
+}

@@ -1,0 +1,176 @@
+//! Full analytical report: regenerates the paper's Tables 2, 4, 5, 6 and
+//! the Figure 1 roofline / Figures 6-7 cross-architecture projections
+//! from the memory-traffic and GPU execution models.
+//!
+//! Run: `cargo run --release --example gpusim_report`
+
+use fullw2v::gpusim::{occupancy, project_all, ArchSpec, KernelProfile};
+use fullw2v::memmodel::{table4, Variant, Workload};
+use fullw2v::util::tables::{f, Table};
+
+fn main() {
+    let w = Workload::text8_paper();
+
+    // ---- Table 2: platforms -----------------------------------------
+    let mut t2 = Table::new(
+        "Table 2: evaluation platforms (model inputs)",
+        &["GPU", "gen", "SMs", "TFLOP/s", "GB/s", "warp sched", "L2 MB"],
+    );
+    for a in ArchSpec::all() {
+        t2.row(vec![
+            a.name.into(),
+            a.generation.into(),
+            a.sms.to_string(),
+            f(a.peak_tflops, 2),
+            f(a.mem_bw_gbs, 0),
+            a.warp_schedulers.to_string(),
+            f(a.l2_bytes / 1e6, 1),
+        ]);
+    }
+    println!("{}", t2.render());
+
+    // ---- Table 4: memory demand -------------------------------------
+    let v100 = ArchSpec::v100();
+    let mut t4 = Table::new(
+        "Table 4: memory demand in GB/epoch (modeled, Text8 params, V100 L2)",
+        &["implementation", "L1/TEX", "L2", "DRAM", "Sum", "AI(total)"],
+    );
+    for r in table4(&w, v100.l2_bytes) {
+        t4.row(vec![
+            r.variant.name().into(),
+            f(r.l1_gb, 1),
+            f(r.l2_gb, 1),
+            f(r.dram_gb, 1),
+            f(r.sum_gb(), 1),
+            f(r.ai_total, 2),
+        ]);
+    }
+    println!("{}", t4.render());
+
+    // ---- Figure 1: roofline -----------------------------------------
+    let mut f1 = Table::new(
+        "Figure 1: V100 roofline placement (modeled)",
+        &["implementation", "AI (flop/DRAM-byte)", "achieved GF/s",
+          "roofline GF/s", "bound"],
+    );
+    let projections = project_all(&w);
+    for &v in &Variant::ALL {
+        let p = projections
+            .iter()
+            .find(|p| p.arch == "V100" && p.variant == v)
+            .unwrap();
+        let tr = fullw2v::memmodel::traffic(v, &w, v100.l2_bytes);
+        f1.row(vec![
+            v.name().into(),
+            f(tr.arithmetic_intensity, 2),
+            f(p.sim.achieved_gflops, 0),
+            f(v100.roofline_gflops(tr.arithmetic_intensity), 0),
+            p.sim.bound.into(),
+        ]);
+    }
+    println!(
+        "(roofline knee at {:.1} flop/byte)\n{}",
+        v100.roofline_knee(),
+        f1.render()
+    );
+
+    // ---- Table 5: IPC + stalls --------------------------------------
+    let mut t5 = Table::new(
+        "Table 5: IPC and thread stall breakdown (modeled, % of warp time)",
+        &["arch", "implementation", "IPC", "long sb", "short sb",
+          "arith", "overhead"],
+    );
+    for arch in ["TitanXP", "V100"] {
+        for &v in &[Variant::FullRegister, Variant::FullW2v] {
+            let p = projections
+                .iter()
+                .find(|p| p.arch == arch && p.variant == v)
+                .unwrap();
+            t5.row(vec![
+                arch.into(),
+                v.name().into(),
+                f(p.sim.ipc, 2),
+                f(p.sim.long_scoreboard_pct, 2),
+                f(p.sim.short_scoreboard_pct, 2),
+                f(p.sim.arithmetic_pct, 2),
+                f(p.sim.overhead_pct, 2),
+            ]);
+        }
+    }
+    println!("{}", t5.render());
+
+    // ---- Table 6: occupancy -----------------------------------------
+    let mut t6 = Table::new(
+        "Table 6: warps per scheduler (modeled)",
+        &["arch", "implementation", "max", "active", "eligible", "limiter"],
+    );
+    for arch in [ArchSpec::titan_xp(), ArchSpec::v100()] {
+        for &v in &Variant::ALL {
+            let occ = occupancy(&KernelProfile::for_variant(v), &arch);
+            let p = projections
+                .iter()
+                .find(|p| p.arch == arch.name && p.variant == v)
+                .unwrap();
+            t6.row(vec![
+                arch.name.into(),
+                v.name().into(),
+                f(occ.max_warps, 1),
+                f(occ.active_warps, 2),
+                f(p.sim.eligible_warps, 2),
+                occ.limiter.into(),
+            ]);
+        }
+    }
+    println!("{}", t6.render());
+
+    // ---- Figures 6/7: projected throughput ---------------------------
+    let mut f6 = Table::new(
+        "Figures 6/7: projected throughput (Mwords/s) by architecture",
+        &["implementation", "P100", "TitanXP", "V100", "P100->V100"],
+    );
+    for &v in &Variant::ALL {
+        let get = |arch: &str| {
+            projections
+                .iter()
+                .find(|p| p.arch == arch && p.variant == v)
+                .unwrap()
+                .sim
+                .words_per_sec
+        };
+        f6.row(vec![
+            v.name().into(),
+            f(get("P100") / 1e6, 1),
+            f(get("TitanXP") / 1e6, 1),
+            f(get("V100") / 1e6, 1),
+            format!("{:.2}x", get("V100") / get("P100")),
+        ]);
+    }
+    println!("{}", f6.render());
+
+    // headline claims
+    let wps = |arch: &str, v: Variant| {
+        projections
+            .iter()
+            .find(|p| p.arch == arch && p.variant == v)
+            .unwrap()
+            .sim
+            .words_per_sec
+    };
+    println!("headline ratios (paper / modeled):");
+    println!(
+        "  V100 FULL-W2V vs accSGNS : 5.72x / {:.2}x",
+        wps("V100", Variant::FullW2v) / wps("V100", Variant::AccSgns)
+    );
+    println!(
+        "  V100 FULL-W2V vs Wombat  : 8.65x / {:.2}x",
+        wps("V100", Variant::FullW2v) / wps("V100", Variant::Wombat)
+    );
+    println!(
+        "  P100 FULL-W2V vs accSGNS : 6.75x / {:.2}x",
+        wps("P100", Variant::FullW2v) / wps("P100", Variant::AccSgns)
+    );
+    println!(
+        "  P100->V100 FULL-W2V scale: 2.97x / {:.2}x",
+        wps("V100", Variant::FullW2v) / wps("P100", Variant::FullW2v)
+    );
+}

@@ -1,0 +1,68 @@
+//! Quickstart: train FULL-W2V on a tiny synthetic corpus through the full
+//! three-layer stack (Rust pipeline -> AOT Pallas/XLA step on PJRT ->
+//! Hogwild scatter) and inspect the learned embeddings.
+//!
+//! Run: `make artifacts && cargo run --release --example quickstart`
+
+use anyhow::Result;
+use fullw2v::config::{Config, TrainConfig};
+use fullw2v::coordinator::{train_all, SgnsTrainer};
+use fullw2v::corpus::synthetic::SyntheticSpec;
+use fullw2v::workbench::Workbench;
+
+fn main() -> Result<()> {
+    println!("== FULL-W2V quickstart ==");
+    let wb = Workbench::prepare(SyntheticSpec::tiny(), 1);
+    let stats = wb.stats();
+    println!(
+        "corpus: {} sentences, {} words, vocab {}",
+        stats.sentences, stats.words_per_epoch, stats.vocabulary
+    );
+
+    let mut cfg = Config::new();
+    cfg.train = TrainConfig {
+        variant: "full_w2v".into(),
+        dim: 64,
+        window: 5,
+        negatives: 5,
+        epochs: 3,
+        subsample: 1e-3,
+        batch_sentences: 16,
+        sentence_chunk: 16,
+        ..TrainConfig::default()
+    };
+    let exe = cfg.train.executable_name();
+    let mut coord = wb.coordinator(cfg)?;
+    println!("executable: {exe} on {}", coord.engine().platform());
+
+    let report = train_all(&mut coord, &wb.sentences, 3)?;
+    for e in &report.epochs {
+        println!(
+            "epoch {}: {:>8.0} words/s  loss/word {:.4}  lr_end {:.5}",
+            e.epoch, e.words_per_sec, e.loss_per_word, e.lr_end
+        );
+    }
+    let (first, last) = report.loss_trajectory();
+    println!("loss/word: {first:.4} -> {last:.4}");
+
+    // nearest neighbors of a frequent word: same-cluster words should rank
+    let probe = wb.vocab.word(0).to_string();
+    let probe_id = wb.vocab.id(&probe).unwrap();
+    println!("\nnearest neighbors of '{probe}':");
+    for (id, sim) in coord.model().nearest(probe_id, 5) {
+        println!("  {:20} cos {:.3}", wb.vocab.word(id), sim);
+    }
+
+    // gold-similarity recovery (the WS-353 analogue)
+    let gold = wb.corpus.gold_similarity_pairs(200, 42);
+    let rep = fullw2v::eval::similarity::evaluate_similarity(
+        coord.model(),
+        &wb.vocab,
+        &gold,
+    );
+    println!(
+        "\nlatent-similarity spearman: {:.3} over {} pairs",
+        rep.spearman, rep.used
+    );
+    Ok(())
+}

@@ -1,0 +1,129 @@
+//! End-to-end validation driver (EXPERIMENTS.md Section E2E): trains the
+//! full FULL-W2V system on the text8-mini synthetic corpus — hundreds of
+//! PJRT batch steps over ~1M words — logging the loss curve, throughput,
+//! batching rate, and final embedding quality (similarity + analogies).
+//!
+//! Run: `cargo run --release --example train_full [-- --words 1000000 --epochs 3]`
+
+use anyhow::Result;
+use fullw2v::config::{Config, TrainConfig};
+use fullw2v::coordinator::{train_all, SgnsTrainer};
+use fullw2v::corpus::synthetic::SyntheticSpec;
+use fullw2v::eval::analogy::{solve_analogies, AnalogyMethod};
+use fullw2v::eval::similarity::evaluate_similarity;
+use fullw2v::util::json::{obj, Json};
+use fullw2v::workbench::Workbench;
+
+fn main() -> Result<()> {
+    let args: Vec<String> = std::env::args().collect();
+    let arg = |name: &str| {
+        args.iter()
+            .position(|a| a == name)
+            .and_then(|i| args.get(i + 1).cloned())
+    };
+    let words: u64 =
+        arg("--words").and_then(|v| v.parse().ok()).unwrap_or(1_000_000);
+    let epochs: usize =
+        arg("--epochs").and_then(|v| v.parse().ok()).unwrap_or(3);
+    // default to the perf-optimized kernel (EXPERIMENTS.md §Perf); pass
+    // --variant full_w2v for the paper-structural per-sentence kernel
+    let variant =
+        arg("--variant").unwrap_or_else(|| "full_w2v_batched".into());
+
+    println!("== FULL-W2V end-to-end driver (text8-mini) ==");
+    let mut spec = SyntheticSpec::text8_mini();
+    spec.total_words = words;
+    let wb = Workbench::prepare(spec, 5);
+    let stats = wb.stats();
+    println!(
+        "corpus: vocab {} | words/epoch {} | sentences {}",
+        stats.vocabulary, stats.words_per_epoch, stats.sentences
+    );
+
+    let mut cfg = Config::new();
+    cfg.train = TrainConfig {
+        variant,
+        epochs,
+        ..TrainConfig::default() // paper defaults: d=128 N=5 W=5 -> Wf=3
+    };
+    let train_cfg = cfg.train.clone();
+    let mut coord = wb.coordinator(cfg)?;
+
+    let report = train_all(&mut coord, &wb.sentences, epochs)?;
+    println!("\nloss curve (per-word NS loss):");
+    for e in &report.epochs {
+        println!(
+            "  epoch {}: loss/word {:.4} | {:>9.0} words/s | batching {:>10.0} w/s | {} batches",
+            e.epoch, e.loss_per_word, e.words_per_sec, e.batching_rate,
+            e.batches
+        );
+    }
+    let (first, last) = report.loss_trajectory();
+    if epochs > 1 {
+        assert!(last < first, "loss must decrease");
+    }
+
+    // quality evaluation against the generator's latent gold
+    let gold = wb.corpus.gold_similarity_pairs(500, 7);
+    let sim = evaluate_similarity(coord.model(), &wb.vocab, &gold);
+    let analogies = wb.corpus.gold_analogies(200, 7);
+    let add = solve_analogies(
+        coord.model(),
+        &wb.vocab,
+        &analogies,
+        AnalogyMethod::CosAdd,
+    );
+    let mul = solve_analogies(
+        coord.model(),
+        &wb.vocab,
+        &analogies,
+        AnalogyMethod::CosMul,
+    );
+    println!("\nquality:");
+    println!(
+        "  similarity spearman : {:.4} ({} pairs)",
+        sim.spearman, sim.used
+    );
+    println!(
+        "  analogy COS-ADD     : {:.2}% ({}/{})",
+        100.0 * add.accuracy(),
+        add.correct,
+        add.total
+    );
+    println!(
+        "  analogy COS-MUL     : {:.2}% ({}/{})",
+        100.0 * mul.accuracy(),
+        mul.correct,
+        mul.total
+    );
+
+    let es = coord.engine().stats();
+    println!(
+        "\nruntime: {} executions, {:.2}s exec, {:.2}s compile",
+        es.executions, es.exec_seconds, es.compile_seconds
+    );
+    let ph = &coord.phase;
+    let tot = (ph.gather_secs + ph.execute_secs + ph.scatter_secs).max(1e-9);
+    println!(
+        "hot-path breakdown: gather {:.1}% | execute {:.1}% | scatter {:.1}%",
+        100.0 * ph.gather_secs / tot,
+        100.0 * ph.execute_secs / tot,
+        100.0 * ph.scatter_secs / tot
+    );
+
+    // machine-readable row for EXPERIMENTS.md
+    let row = obj(vec![
+        ("experiment", Json::Str("e2e_text8_mini".into())),
+        ("config", Json::Str(train_cfg.executable_name())),
+        ("words_per_epoch", Json::Num(stats.words_per_epoch as f64)),
+        ("epochs", Json::Num(epochs as f64)),
+        ("loss_first", Json::Num(first)),
+        ("loss_last", Json::Num(last)),
+        ("words_per_sec", Json::Num(report.words_per_sec())),
+        ("spearman", Json::Num(sim.spearman)),
+        ("cos_add", Json::Num(add.accuracy())),
+        ("cos_mul", Json::Num(mul.accuracy())),
+    ]);
+    println!("\nEXPERIMENT-ROW {row}");
+    Ok(())
+}

@@ -1,0 +1,101 @@
+"""AOT driver: lower every (variant x shape) configuration to HLO text.
+
+Run as ``python -m compile.aot --out-dir ../artifacts`` (see Makefile).
+Python runs only here, at build time; the Rust coordinator loads the emitted
+``*.hlo.txt`` through the xla crate's PJRT CPU client and is self-contained
+afterwards.
+
+Emits:
+  artifacts/<name>.hlo.txt       one per StepConfig
+  artifacts/manifest.json        machine-readable index (shapes, dtypes)
+"""
+from __future__ import annotations
+
+import argparse
+import hashlib
+import json
+import os
+import sys
+import time
+
+from .model import StepConfig, lower_to_hlo_text
+
+# The artifact set. One flagship config per variant for the head-to-head
+# benches (Figs 6/7, Table 4), a small-batch config for the quickstart
+# example/tests, and shape ablations for the flagship kernel.
+DEFAULT_CONFIGS = [
+    # head-to-head set (paper defaults d=128, N=5, W=5 -> W_f=3)
+    StepConfig("full_w2v", b=64, s=32, d=128, n=5, wf=3),
+    StepConfig("full_register", b=64, s=32, d=128, n=5, wf=3),
+    StepConfig("acc_sgns", b=64, s=32, d=128, n=5, wf=3),
+    StepConfig("wombat", b=64, s=32, d=128, n=5, wf=3),
+    # quickstart / integration-test / quality-bench configs
+    StepConfig("full_w2v", b=16, s=16, d=64, n=5, wf=3),
+    StepConfig("full_register", b=16, s=16, d=64, n=5, wf=3),
+    StepConfig("acc_sgns", b=16, s=16, d=64, n=5, wf=3),
+    StepConfig("wombat", b=16, s=16, d=64, n=5, wf=3),
+    # ablations for the flagship kernel
+    StepConfig("full_w2v", b=64, s=32, d=64, n=5, wf=3),
+    StepConfig("full_w2v", b=64, s=32, d=128, n=5, wf=2),
+    # perf-optimized batched restructure (EXPERIMENTS.md Section Perf)
+    StepConfig("full_w2v_batched", b=64, s=32, d=128, n=5, wf=3),
+    StepConfig("full_w2v_batched", b=16, s=16, d=64, n=5, wf=3),
+    StepConfig("full_w2v_batched", b=256, s=32, d=128, n=5, wf=3),
+    # padding-efficiency sweep (most sentences fit in 24 slots after
+    # subsampling; see EXPERIMENTS.md Section Perf)
+    StepConfig("full_w2v_batched", b=128, s=24, d=128, n=5, wf=3),
+]
+
+
+def build(out_dir: str, configs=None, verbose: bool = True) -> dict:
+    configs = configs or DEFAULT_CONFIGS
+    os.makedirs(out_dir, exist_ok=True)
+    entries = []
+    for cfg in configs:
+        t0 = time.time()
+        text = lower_to_hlo_text(cfg)
+        fname = cfg.name + ".hlo.txt"
+        path = os.path.join(out_dir, fname)
+        with open(path, "w") as f:
+            f.write(text)
+        sha = hashlib.sha256(text.encode()).hexdigest()[:16]
+        entry = {
+            "name": cfg.name,
+            "variant": cfg.variant,
+            "file": fname,
+            "b": cfg.b, "s": cfg.s, "d": cfg.d, "n": cfg.n, "wf": cfg.wf,
+            "sha256_16": sha,
+            **cfg.io_manifest(),
+        }
+        entries.append(entry)
+        if verbose:
+            print(f"  lowered {cfg.name}: {len(text)} chars "
+                  f"({time.time() - t0:.1f}s)", file=sys.stderr)
+    manifest = {
+        "format": 1,
+        "interchange": "hlo-text",
+        "executables": entries,
+    }
+    with open(os.path.join(out_dir, "manifest.json"), "w") as f:
+        json.dump(manifest, f, indent=1)
+    return manifest
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--out-dir", default="../artifacts")
+    ap.add_argument("--only", default=None,
+                    help="comma-separated variant filter")
+    args = ap.parse_args()
+    configs = DEFAULT_CONFIGS
+    if args.only:
+        keep = set(args.only.split(","))
+        configs = [c for c in configs if c.variant in keep]
+    t0 = time.time()
+    manifest = build(args.out_dir, configs)
+    print(f"wrote {len(manifest['executables'])} artifacts to "
+          f"{args.out_dir} in {time.time() - t0:.1f}s", file=sys.stderr)
+
+
+if __name__ == "__main__":
+    main()

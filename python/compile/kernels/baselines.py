@@ -1,0 +1,121 @@
+"""L1 baseline kernels: accSGNS-like and Wombat-like SGNS sentence kernels.
+
+These reproduce the *comparator* implementations from the paper's evaluation
+(Section 5) inside the same AOT framework, so throughput and traffic can be
+compared like-for-like:
+
+* ``acc_sgns`` — Bae & Yi's accSGNS: CPU-style word2vec.c on the GPU.
+  Per-pair processing with immediate output-side updates; no negative
+  sharing *structure* (each target row is touched with an individual
+  scalar-dot + axpy sequence), no context caching.  Emits the scalar-dot
+  HLO structure that mirrors accSGNS's thread-per-dimension mapping.
+
+* ``wombat`` — Simonton's Wombat: per-(center, context-row) processing with
+  the window's (N+1, d) output block treated as a small shared-memory
+  matrix (vectorized matvec + rank-1 update), but no lifetime context reuse
+  and no cross-row negative batching.
+
+Both implement the word2vec.c per-pair semantics validated against
+``ref.sgns_perpair_ref``: within a window, context rows are processed in
+ascending position order and the output block U is updated after each row;
+each row's syn0 update uses the pre-update U of its own pairing.  Negatives
+are shared per window (the paper equalizes reuse policies across
+counterparts for fairness — Section 5.3.3).
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from .full_w2v import _window_geometry, _make_pallas_step
+
+
+def _load_u(syn1_ref, neg_ref, t):
+    """Window-start output block U = [syn1[t]; neg[t]] -> (N+1, d)."""
+    u_pos = pl.load(syn1_ref, (pl.dslice(t, 1), slice(None)))       # (1,d)
+    u_negs = pl.load(neg_ref, (pl.dslice(t, 1), slice(None),
+                               slice(None)))[0]                     # (N,d)
+    return jnp.concatenate([u_pos, u_negs], axis=0)
+
+
+def _store_du(d1_ref, dn_ref, t, du):
+    pl.store(d1_ref, (pl.dslice(t, 1), slice(None)), du[:1])
+    pl.store(dn_ref, (pl.dslice(t, 1), slice(None), slice(None)),
+             du[1:][None])
+
+
+def _perpair_kernel(lens_ref, lr_ref, syn0_ref, syn1_ref, neg_ref,
+                    d0_ref, d1_ref, dn_ref, loss_ref, *, wf, vectorized):
+    """Shared body for acc_sgns (vectorized=False) and wombat (True)."""
+    s, d = syn0_ref.shape
+    n = neg_ref.shape[1]
+    k = 2 * wf + 1
+    length = lens_ref[0]
+    lr = lr_ref[0, 0]
+
+    d0_ref[...] = jnp.zeros((s, d), jnp.float32)
+    lbl = jnp.concatenate(
+        [jnp.ones((1,), jnp.float32), jnp.zeros((n,), jnp.float32)])
+
+    def window(t, loss):
+        base, _, mask = _window_geometry(t, wf, k, s, length)
+        u0 = _load_u(syn1_ref, neg_ref, t)                          # (N+1,d)
+
+        def row(i, carry):
+            ucur, loss = carry
+            j = base + i
+            rowvalid = mask[i, 0]
+            orig = pl.load(syn0_ref, (pl.dslice(j, 1), slice(None)))[0]
+            acc = pl.load(d0_ref, (pl.dslice(j, 1), slice(None)))[0]
+            h = orig + acc                                          # (d,)
+            if vectorized:
+                # Wombat: one matvec against the in-"shared-memory" U block.
+                z = jax.lax.dot_general(
+                    ucur, h[:, None], (((1,), (0,)), ((), ())),
+                    preferred_element_type=jnp.float32)[:, 0]       # (N+1,)
+                g = (lbl - jax.nn.sigmoid(z)) * lr * rowvalid
+                neu1e = jax.lax.dot_general(
+                    g[None, :], ucur, (((1,), (0,)), ((), ())),
+                    preferred_element_type=jnp.float32)[0]          # (d,)
+                unew = ucur + g[:, None] * h[None, :]
+                wl = jax.nn.softplus(-z[0]) + jnp.sum(jax.nn.softplus(z[1:]))
+            else:
+                # accSGNS: unrolled scalar dot + axpy per target row,
+                # mirroring the per-pair thread mapping.
+                zs, gs = [], []
+                neu1e = jnp.zeros((d,), jnp.float32)
+                rows_new = []
+                for kk in range(n + 1):
+                    zk = jnp.vdot(h, ucur[kk])
+                    gk = (lbl[kk] - jax.nn.sigmoid(zk)) * lr * rowvalid
+                    neu1e = neu1e + gk * ucur[kk]
+                    rows_new.append(ucur[kk] + gk * h)
+                    zs.append(zk)
+                unew = jnp.stack(rows_new, axis=0)
+                wl = jax.nn.softplus(-zs[0]) + sum(
+                    jax.nn.softplus(z) for z in zs[1:])
+            pl.store(d0_ref, (pl.dslice(j, 1), slice(None)),
+                     (acc + neu1e)[None])
+            return unew, loss + rowvalid * wl
+
+        ufin, loss = jax.lax.fori_loop(0, k, row, (u0, loss))
+        _store_du(d1_ref, dn_ref, t, ufin - u0)
+        return loss
+
+    loss = jax.lax.fori_loop(0, s, window, jnp.float32(0.0))
+    loss_ref[0] = loss
+
+
+def make_acc_sgns_step(b, s, d, n, wf):
+    """Batched accSGNS-style training step (per-pair scalar processing)."""
+    kernel = functools.partial(_perpair_kernel, vectorized=False)
+    return _make_pallas_step(kernel, b, s, d, n, wf)
+
+
+def make_wombat_step(b, s, d, n, wf):
+    """Batched Wombat-style training step (per-row matvec, no reuse)."""
+    kernel = functools.partial(_perpair_kernel, vectorized=True)
+    return _make_pallas_step(kernel, b, s, d, n, wf)

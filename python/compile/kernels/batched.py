@@ -1,0 +1,123 @@
+"""Perf-optimized FULL-W2V kernel: window update vectorized across the
+whole sentence batch.
+
+The flagship `full_w2v` kernel mirrors the paper's GPU decomposition —
+one grid cell per sentence — which on the CPU-PJRT substrate serializes
+B tiny (2W_f x (N+1) x d) matmuls per window position.  Since the
+*sequential* dependence is only along window positions (strict window
+ordering within a sentence), the B sentences can be processed in
+lockstep: one batched [B, K, N+1, d] update per window position.  Same
+semantics, identical numerics modulo f32 reduction order, ~B-times
+larger matmuls for XLA-CPU to chew on.  This is also the natural MXU
+shape on a real TPU (the 7x6 per-window tile underfills the systolic
+array; the batched form restores utilization) — see EXPERIMENTS.md §Perf.
+
+The clamped window base depends only on t (not the sentence), so the
+batched dynamic slice is uniform; per-sentence masking handles ragged
+lengths exactly like the per-sentence kernel.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _batched_kernel(lens_ref, lr_ref, syn0_ref, syn1_ref, neg_ref,
+                    d0_ref, d1_ref, dn_ref, loss_ref, *, wf):
+    b, s, d = syn0_ref.shape
+    n = neg_ref.shape[2]
+    k = 2 * wf + 1
+    lens = lens_ref[...]                       # (B,) int32
+    lr = lr_ref[0, 0]
+
+    s0 = syn0_ref[...]                         # (B, S, d) resident block
+    lbl = jnp.concatenate(
+        [jnp.ones((1, k, 1), jnp.float32),
+         jnp.zeros((1, k, n), jnp.float32)],
+        axis=2)                                # broadcast over B; (1,K,N+1)
+
+    def body(t, carry):
+        s0blk, loss = carry
+        base = jnp.clip(t - wf, 0, s - k)
+        offs = base + jax.lax.iota(jnp.int32, k)            # (K,)
+        valid = ((offs[None, :] != t)
+                 & (offs[None, :] < lens[:, None])
+                 & (t < lens)[:, None]
+                 & (jnp.abs(offs[None, :] - t) <= wf))      # (B, K)
+        mask = valid.astype(jnp.float32)[:, :, None]        # (B, K, 1)
+
+        rows = jax.lax.dynamic_slice(
+            s0blk, (0, base, 0), (b, k, d))                 # (B, K, d)
+        u_pos = jax.lax.dynamic_slice(
+            syn1_ref[...], (0, t, 0), (b, 1, d))            # (B, 1, d)
+        u_neg = jax.lax.dynamic_slice(
+            neg_ref[...], (0, t, 0, 0), (b, 1, n, d))[:, 0]  # (B, N, d)
+        U = jnp.concatenate([u_pos, u_neg], axis=1)          # (B, N+1, d)
+
+        # Z[b] = rows[b] @ U[b]^T  -> (B, K, N+1)
+        Z = jax.lax.dot_general(
+            rows, U, (((2,), (2,)), ((0,), (0,))),
+            preferred_element_type=jnp.float32)
+        F = jax.nn.sigmoid(Z)
+        G = (lbl - F) * lr * mask                            # (B, K, N+1)
+        dC = jax.lax.dot_general(
+            G, U, (((2,), (1,)), ((0,), (0,))),
+            preferred_element_type=jnp.float32)              # (B, K, d)
+        dU = jax.lax.dot_general(
+            G, rows, (((1,), (1,)), ((0,), (0,))),
+            preferred_element_type=jnp.float32)              # (B, N+1, d)
+
+        s0blk = jax.lax.dynamic_update_slice(
+            s0blk, rows + dC, (0, base, 0))
+        d1_ref[:, t, :] = dU[:, 0, :]
+        dn_ref[:, t, :, :] = dU[:, 1:, :]
+        wloss = jnp.sum(
+            (jax.nn.softplus(-Z[:, :, :1])
+             + jnp.sum(jax.nn.softplus(Z[:, :, 1:]), axis=2,
+                       keepdims=True)) * mask,
+            axis=(1, 2))                                     # (B,)
+        return s0blk, loss + wloss
+
+    s0_fin, loss = jax.lax.fori_loop(
+        0, s, body, (s0, jnp.zeros((b,), jnp.float32)))
+    d0_ref[...] = s0_fin - syn0_ref[...]
+    loss_ref[...] = loss
+
+
+def make_full_w2v_batched_step(b, s, d, n, wf):
+    """Batched FULL-W2V step: same I/O contract as the per-sentence kernel."""
+    import functools
+
+    kernel = functools.partial(_batched_kernel, wf=wf)
+    call = pl.pallas_call(
+        kernel,
+        grid=(),
+        in_specs=[
+            pl.BlockSpec((b,), lambda: (0,)),
+            pl.BlockSpec((1, 1), lambda: (0, 0)),
+            pl.BlockSpec((b, s, d), lambda: (0, 0, 0)),
+            pl.BlockSpec((b, s, d), lambda: (0, 0, 0)),
+            pl.BlockSpec((b, s, n, d), lambda: (0, 0, 0, 0)),
+        ],
+        out_specs=[
+            pl.BlockSpec((b, s, d), lambda: (0, 0, 0)),
+            pl.BlockSpec((b, s, d), lambda: (0, 0, 0)),
+            pl.BlockSpec((b, s, n, d), lambda: (0, 0, 0, 0)),
+            pl.BlockSpec((b,), lambda: (0,)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((b, s, d), jnp.float32),
+            jax.ShapeDtypeStruct((b, s, d), jnp.float32),
+            jax.ShapeDtypeStruct((b, s, n, d), jnp.float32),
+            jax.ShapeDtypeStruct((b,), jnp.float32),
+        ],
+        interpret=True,
+    )
+
+    def step(syn0, syn1, neg, lens, lr):
+        lr2 = jnp.asarray(lr, jnp.float32).reshape(1, 1)
+        d0, d1, dn, loss = call(lens.astype(jnp.int32), lr2, syn0, syn1, neg)
+        return d0, d1, dn, loss
+
+    return step

@@ -1,0 +1,199 @@
+"""L1 Pallas kernels: FULL-W2V and FULL-Register SGNS sentence kernels.
+
+Hardware adaptation (DESIGN.md Section 3): the paper's CUDA formulation is
+re-expressed for TPU/Pallas.
+
+* ``full_w2v`` — the flagship kernel.  One grid cell per sentence (the
+  paper's "thread block per sentence").  The sentence's syn0 block is loaded
+  into a VMEM-resident value once and carried through the sequential window
+  loop (the paper's shared-memory *ring buffer* providing lifetime reuse of
+  context words); the per-window (N+1, d) output block is assembled, updated
+  and written back once per window (the paper's *register cache* exploiting
+  independence of negative samples).  HBO->VMEM traffic per sentence is one
+  [S,d] read + one [S,d] delta write for syn0 instead of one window-sized
+  read-modify-write per window.
+
+* ``full_register`` — the ablation from Section 5 (negatives-only reuse):
+  identical math, but context rows are re-read from / re-written to the
+  (HBM-backed) refs on every window instead of living in VMEM.  Numerically
+  identical to ``full_w2v``; structurally it performs 2W_f extra block
+  row reads and writes per window, which is exactly what `memmodel` charges
+  it for.
+
+Both kernels implement the shared-negative window-matrix semantics validated
+against ``ref.sgns_window_ref``.  All pallas_call sites use interpret=True —
+the CPU PJRT plugin cannot execute Mosaic custom-calls (see
+/opt/xla-example/README.md).
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _window_geometry(t, wf, k, s, length):
+    """Clamped window base and validity mask for center ``t``.
+
+    Returns (base, offs, mask) where ``base`` is the start row of the fixed
+    K-row slice, ``offs`` the absolute positions of its rows, and ``mask``
+    a float (K, 1) validity mask excluding the center, positions beyond the
+    sentence, and whole windows past the sentence end.
+    """
+    base = jnp.clip(t - wf, 0, s - k)
+    offs = base + jax.lax.iota(jnp.int32, k)
+    # The clamped fixed-size slice can cover rows outside [t-wf, t+wf] when t
+    # is near a boundary; mask them out along with the center, padding rows,
+    # and whole windows past the sentence end.
+    valid = ((offs != t) & (offs < length) & (t < length)
+             & (jnp.abs(offs - t) <= wf))
+    return base, offs, valid.astype(jnp.float32)[:, None]
+
+
+def _window_update(rows, u_pos, u_negs, lr, mask):
+    """One shared-negative window-matrix SGNS update.
+
+    rows   : (K, d) context candidate rows (pre-update)
+    u_pos  : (1, d) center output row
+    u_negs : (N, d) negative output rows
+    mask   : (K, 1) row validity
+
+    Returns (dC, dU, loss) with invalid rows contributing zero.
+    """
+    n = u_negs.shape[0]
+    k = rows.shape[0]
+    U = jnp.concatenate([u_pos, u_negs], axis=0)              # (N+1, d)
+    Z = jax.lax.dot_general(
+        rows, U, (((1,), (1,)), ((), ())),
+        preferred_element_type=jnp.float32)                    # (K, N+1)
+    F = jax.nn.sigmoid(Z)
+    lbl = jnp.concatenate(
+        [jnp.ones((k, 1), jnp.float32), jnp.zeros((k, n), jnp.float32)],
+        axis=1)
+    G = (lbl - F) * lr * mask                                  # (K, N+1)
+    dC = jax.lax.dot_general(
+        G, U, (((1,), (0,)), ((), ())),
+        preferred_element_type=jnp.float32)                    # (K, d)
+    dU = jax.lax.dot_general(
+        G, rows, (((0,), (0,)), ((), ())),
+        preferred_element_type=jnp.float32)                    # (N+1, d)
+    # NS loss with pre-update values: softplus(-z_pos) + sum softplus(z_neg)
+    loss_rows = jax.nn.softplus(-Z[:, :1]) + jnp.sum(
+        jax.nn.softplus(Z[:, 1:]), axis=1, keepdims=True)      # (K, 1)
+    loss = jnp.sum(loss_rows * mask)
+    return dC, dU, loss
+
+
+def _full_w2v_kernel(lens_ref, lr_ref, syn0_ref, syn1_ref, neg_ref,
+                     d0_ref, d1_ref, dn_ref, loss_ref, *, wf):
+    """Lifetime context reuse: syn0 block carried in VMEM across windows."""
+    s, d = syn0_ref.shape
+    n = neg_ref.shape[1]
+    k = 2 * wf + 1
+    length = lens_ref[0]
+    lr = lr_ref[0, 0]
+
+    s0 = syn0_ref[...]  # whole sentence block -> VMEM "ring buffer"
+
+    def body(t, carry):
+        s0blk, loss = carry
+        base, _, mask = _window_geometry(t, wf, k, s, length)
+        rows = jax.lax.dynamic_slice(s0blk, (base, 0), (k, d))
+        u_pos = pl.load(syn1_ref, (pl.dslice(t, 1), slice(None)))     # (1,d)
+        u_negs = pl.load(neg_ref, (pl.dslice(t, 1), slice(None),
+                                   slice(None)))[0]                   # (N,d)
+        dC, dU, wloss = _window_update(rows, u_pos, u_negs, lr, mask)
+        s0blk = jax.lax.dynamic_update_slice(s0blk, rows + dC, (base, 0))
+        # Center/negative rows are touched exactly once (window t), so the
+        # per-window dU *is* the delta; masked windows contribute zeros.
+        pl.store(d1_ref, (pl.dslice(t, 1), slice(None)), dU[:1])
+        pl.store(dn_ref, (pl.dslice(t, 1), slice(None), slice(None)),
+                 dU[1:][None])
+        return s0blk, loss + wloss
+
+    s0_fin, loss = jax.lax.fori_loop(0, s, body, (s0, jnp.float32(0.0)))
+    d0_ref[...] = s0_fin - syn0_ref[...]
+    loss_ref[0] = loss
+
+
+def _full_register_kernel(lens_ref, lr_ref, syn0_ref, syn1_ref, neg_ref,
+                          d0_ref, d1_ref, dn_ref, loss_ref, *, wf):
+    """Negatives-only reuse: context rows round-trip the refs every window."""
+    s, d = syn0_ref.shape
+    k = 2 * wf + 1
+    length = lens_ref[0]
+    lr = lr_ref[0, 0]
+
+    d0_ref[...] = jnp.zeros((s, d), jnp.float32)
+
+    def body(t, loss):
+        base, _, mask = _window_geometry(t, wf, k, s, length)
+        # Re-read original rows + accumulated deltas each window: the
+        # global-memory read-modify-write pattern of FULL-Register.
+        orig = pl.load(syn0_ref, (pl.dslice(base, k), slice(None)))
+        acc = pl.load(d0_ref, (pl.dslice(base, k), slice(None)))
+        rows = orig + acc
+        u_pos = pl.load(syn1_ref, (pl.dslice(t, 1), slice(None)))
+        u_negs = pl.load(neg_ref, (pl.dslice(t, 1), slice(None),
+                                   slice(None)))[0]
+        dC, dU, wloss = _window_update(rows, u_pos, u_negs, lr, mask)
+        pl.store(d0_ref, (pl.dslice(base, k), slice(None)), acc + dC)
+        pl.store(d1_ref, (pl.dslice(t, 1), slice(None)), dU[:1])
+        pl.store(dn_ref, (pl.dslice(t, 1), slice(None), slice(None)),
+                 dU[1:][None])
+        return loss + wloss
+
+    loss = jax.lax.fori_loop(0, s, body, jnp.float32(0.0))
+    loss_ref[0] = loss
+
+
+def _make_pallas_step(kernel_fn, b, s, d, n, wf):
+    """Wrap a sentence kernel in a batched pallas_call (grid over sentences)."""
+    kernel = functools.partial(kernel_fn, wf=wf)
+    grid = (b,)
+    in_specs = [
+        pl.BlockSpec((1,), lambda i: (i,)),                    # lens
+        pl.BlockSpec((1, 1), lambda i: (0, 0)),                # lr
+        pl.BlockSpec((None, s, d), lambda i: (i, 0, 0)),       # syn0
+        pl.BlockSpec((None, s, d), lambda i: (i, 0, 0)),       # syn1
+        pl.BlockSpec((None, s, n, d), lambda i: (i, 0, 0, 0)),  # neg
+    ]
+    out_specs = [
+        pl.BlockSpec((None, s, d), lambda i: (i, 0, 0)),       # d_syn0
+        pl.BlockSpec((None, s, d), lambda i: (i, 0, 0)),       # d_syn1
+        pl.BlockSpec((None, s, n, d), lambda i: (i, 0, 0, 0)),  # d_neg
+        pl.BlockSpec((1,), lambda i: (i,)),                    # loss
+    ]
+    out_shape = [
+        jax.ShapeDtypeStruct((b, s, d), jnp.float32),
+        jax.ShapeDtypeStruct((b, s, d), jnp.float32),
+        jax.ShapeDtypeStruct((b, s, n, d), jnp.float32),
+        jax.ShapeDtypeStruct((b,), jnp.float32),
+    ]
+    call = pl.pallas_call(
+        kernel,
+        grid=grid,
+        in_specs=in_specs,
+        out_specs=out_specs,
+        out_shape=out_shape,
+        interpret=True,  # CPU PJRT cannot run Mosaic custom-calls
+    )
+
+    def step(syn0, syn1, neg, lens, lr):
+        lr2 = jnp.asarray(lr, jnp.float32).reshape(1, 1)
+        d0, d1, dn, loss = call(lens.astype(jnp.int32), lr2, syn0, syn1, neg)
+        return d0, d1, dn, loss
+
+    return step
+
+
+def make_full_w2v_step(b, s, d, n, wf):
+    """Batched FULL-W2V training step: (syn0, syn1, neg, lens, lr) -> deltas."""
+    return _make_pallas_step(_full_w2v_kernel, b, s, d, n, wf)
+
+
+def make_full_register_step(b, s, d, n, wf):
+    """Batched FULL-Register training step (ablation: no context caching)."""
+    return _make_pallas_step(_full_register_kernel, b, s, d, n, wf)

@@ -1,0 +1,139 @@
+"""Pure-numpy correctness oracles for the FULL-W2V SGNS kernels.
+
+Two semantic families, matching the paper (Section 3 / Table 7 discussion):
+
+* ``sgns_window_ref`` — pWord2Vec / FULL-W2V *shared-negative, window-matrix*
+  semantics: within one context window every context row is paired against
+  the (N+1) output rows (center target + N shared negatives) using the
+  window's *pre-update* values; both sides are updated once per window,
+  before the window slides.  Strict sequential window ordering inside a
+  sentence (required for convergence, per the paper).
+
+* ``sgns_perpair_ref`` — word2vec.c / accSGNS / Wombat semantics: context
+  rows are processed sequentially within a window and the output-side block
+  U is updated immediately after each context row.  Shared per-window
+  negatives (the paper equalizes negative-reuse policy across counterparts
+  for fairness — Section 5.3.3).
+
+Both operate on *gathered* blocks, the same I/O contract the AOT kernels
+use (DESIGN.md Section 8):
+
+    syn0 : f32[B, S, d]   input-side rows of sentence words
+    syn1 : f32[B, S, d]   output-side rows of sentence words (center use)
+    neg  : f32[B, S, N, d] output-side rows of per-window negatives
+    lens : i32[B]         true sentence lengths (<= S)
+    lr   : f32            learning rate
+
+Returns (d_syn0, d_syn1, d_neg, loss) where the ``d_*`` are deltas against
+the inputs and ``loss[b]`` is the negative-sampling loss of sentence ``b``
+computed with pre-update values.
+"""
+from __future__ import annotations
+
+import numpy as np
+
+
+def _sigmoid(x):
+    return 1.0 / (1.0 + np.exp(-x))
+
+
+def _softplus(x):
+    # log(1 + e^x), stable
+    return np.logaddexp(0.0, x)
+
+
+def _window_positions(t: int, wf: int, length: int):
+    """Context positions for the window centered at t (center excluded)."""
+    lo = max(0, t - wf)
+    hi = min(length - 1, t + wf)
+    return [j for j in range(lo, hi + 1) if j != t]
+
+
+def sgns_window_ref(syn0, syn1, neg, lens, lr, wf):
+    """Shared-negative window-matrix SGNS (FULL-W2V / pWord2Vec semantics)."""
+    syn0 = np.asarray(syn0, dtype=np.float32)
+    syn1 = np.asarray(syn1, dtype=np.float32)
+    neg = np.asarray(neg, dtype=np.float32)
+    lens = np.asarray(lens, dtype=np.int64)
+    B, S, d = syn0.shape
+    N = neg.shape[2]
+    lr = np.float32(lr)
+
+    s0 = syn0.copy()
+    s1 = syn1.copy()
+    ng = neg.copy()
+    loss = np.zeros((B,), dtype=np.float32)
+
+    for b in range(B):
+        L = int(lens[b])
+        for t in range(min(L, S)):
+            ctx = _window_positions(t, wf, L)
+            if not ctx:
+                continue
+            C = s0[b, ctx]                       # (m, d)
+            U = np.concatenate([s1[b, t:t + 1], ng[b, t]], axis=0)  # (N+1, d)
+            Z = C @ U.T                          # (m, N+1)
+            F = _sigmoid(Z)
+            lbl = np.zeros((len(ctx), N + 1), dtype=np.float32)
+            lbl[:, 0] = 1.0
+            G = (lbl - F) * lr                   # (m, N+1)
+            dC = G @ U                           # (m, d)
+            dU = G.T @ C                         # (N+1, d)
+            # loss with pre-update values
+            loss[b] += np.sum(_softplus(-Z[:, 0])) + np.sum(_softplus(Z[:, 1:]))
+            s0[b, ctx] += dC
+            s1[b, t] += dU[0]
+            ng[b, t] += dU[1:]
+    return s0 - syn0, s1 - syn1, ng - neg, loss
+
+
+def sgns_perpair_ref(syn0, syn1, neg, lens, lr, wf):
+    """Per-pair immediate-update SGNS (word2vec.c / accSGNS / Wombat).
+
+    Context rows are processed in ascending position order; the output block
+    U is updated after each context row, so later context rows in the same
+    window see earlier rows' output updates.  syn0 updates (neu1e) use the
+    pre-update U of that row's pairing, exactly as word2vec.c does.
+    """
+    syn0 = np.asarray(syn0, dtype=np.float32)
+    syn1 = np.asarray(syn1, dtype=np.float32)
+    neg = np.asarray(neg, dtype=np.float32)
+    lens = np.asarray(lens, dtype=np.int64)
+    B, S, d = syn0.shape
+    N = neg.shape[2]
+    lr = np.float32(lr)
+
+    s0 = syn0.copy()
+    s1 = syn1.copy()
+    ng = neg.copy()
+    loss = np.zeros((B,), dtype=np.float32)
+
+    for b in range(B):
+        L = int(lens[b])
+        for t in range(min(L, S)):
+            ctx = _window_positions(t, wf, L)
+            if not ctx:
+                continue
+            U = np.concatenate([s1[b, t:t + 1], ng[b, t]], axis=0)  # (N+1, d)
+            lbl = np.zeros((N + 1,), dtype=np.float32)
+            lbl[0] = 1.0
+            for j in ctx:
+                h = s0[b, j].copy()
+                z = U @ h                        # (N+1,)
+                f = _sigmoid(z)
+                g = (lbl - f) * lr               # (N+1,)
+                loss[b] += _softplus(-z[0]) + np.sum(_softplus(z[1:]))
+                s0[b, j] += g @ U                # uses pre-update U
+                U += np.outer(g, h)
+            s1[b, t] = U[0]
+            ng[b, t] = U[1:]
+    return s0 - syn0, s1 - syn1, ng - neg, loss
+
+
+def random_case(rng, B=2, S=16, d=32, N=3, scale=0.5, min_len=1):
+    """Generate a random test case with mixed sentence lengths."""
+    syn0 = rng.standard_normal((B, S, d)).astype(np.float32) * scale
+    syn1 = rng.standard_normal((B, S, d)).astype(np.float32) * scale
+    neg = rng.standard_normal((B, S, N, d)).astype(np.float32) * scale
+    lens = rng.integers(min_len, S + 1, size=(B,)).astype(np.int32)
+    return syn0, syn1, neg, lens

@@ -1,0 +1,134 @@
+"""L2: the batched SGNS training-step computation.
+
+This is the JAX model layer of the three-layer stack.  It assembles the L1
+Pallas sentence kernels into the batched training step that the Rust
+coordinator executes via PJRT, and owns the AOT-facing I/O contract
+(DESIGN.md Section 8):
+
+    inputs : syn0 f32[B,S,d], syn1 f32[B,S,d], neg f32[B,S,N,d],
+             lens i32[B], lr f32[]
+    outputs: d_syn0 f32[B,S,d], d_syn1 f32[B,S,d], d_neg f32[B,S,N,d],
+             loss f32[B]
+
+The Rust side gathers embedding rows into the input blocks (the paper's
+"CPU handles all indirection" design, Section 4.1) and scatter-adds the
+returned deltas into the model.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Callable, Dict
+
+import jax
+import jax.numpy as jnp
+
+from .kernels.full_w2v import make_full_w2v_step, make_full_register_step
+from .kernels.baselines import make_acc_sgns_step, make_wombat_step
+from .kernels.batched import make_full_w2v_batched_step
+
+
+@dataclasses.dataclass(frozen=True)
+class StepConfig:
+    """Static shape/hyperparameter configuration of one AOT executable."""
+    variant: str   # full_w2v | full_register | acc_sgns | wombat
+    b: int         # sentences per batch (grid size)
+    s: int         # max words per sentence chunk
+    d: int         # embedding dimension
+    n: int         # negatives per window
+    wf: int        # fixed context width W_f = ceil(W/2)
+
+    @property
+    def name(self) -> str:
+        return (f"{self.variant}_b{self.b}_s{self.s}_d{self.d}"
+                f"_n{self.n}_w{self.wf}")
+
+    def arg_specs(self):
+        """ShapeDtypeStructs in AOT argument order."""
+        return (
+            jax.ShapeDtypeStruct((self.b, self.s, self.d), jnp.float32),
+            jax.ShapeDtypeStruct((self.b, self.s, self.d), jnp.float32),
+            jax.ShapeDtypeStruct((self.b, self.s, self.n, self.d),
+                                 jnp.float32),
+            jax.ShapeDtypeStruct((self.b,), jnp.int32),
+            jax.ShapeDtypeStruct((), jnp.float32),
+        )
+
+    def io_manifest(self):
+        """Input/output descriptors for the artifact manifest."""
+        b, s, d, n = self.b, self.s, self.d, self.n
+        return {
+            "inputs": [
+                {"name": "syn0", "dtype": "f32", "shape": [b, s, d]},
+                {"name": "syn1", "dtype": "f32", "shape": [b, s, d]},
+                {"name": "neg", "dtype": "f32", "shape": [b, s, n, d]},
+                {"name": "lens", "dtype": "i32", "shape": [b]},
+                {"name": "lr", "dtype": "f32", "shape": []},
+            ],
+            "outputs": [
+                {"name": "d_syn0", "dtype": "f32", "shape": [b, s, d]},
+                {"name": "d_syn1", "dtype": "f32", "shape": [b, s, d]},
+                {"name": "d_neg", "dtype": "f32", "shape": [b, s, n, d]},
+                {"name": "loss", "dtype": "f32", "shape": [b]},
+            ],
+        }
+
+
+_VARIANTS: Dict[str, Callable] = {
+    "full_w2v": make_full_w2v_step,
+    "full_register": make_full_register_step,
+    "acc_sgns": make_acc_sgns_step,
+    "wombat": make_wombat_step,
+    # perf-optimized restructure (EXPERIMENTS.md §Perf): identical
+    # semantics, window update vectorized across the sentence batch
+    "full_w2v_batched": make_full_w2v_batched_step,
+}
+
+
+def variant_names():
+    return sorted(_VARIANTS)
+
+
+def make_step(cfg: StepConfig):
+    """Build the batched training step function for ``cfg``.
+
+    The returned function has the AOT signature
+    ``step(syn0, syn1, neg, lens, lr) -> (d_syn0, d_syn1, d_neg, loss)``.
+    """
+    if cfg.variant not in _VARIANTS:
+        raise ValueError(f"unknown variant {cfg.variant!r}; "
+                         f"expected one of {variant_names()}")
+    if cfg.s < 2 * cfg.wf + 1:
+        raise ValueError(f"S={cfg.s} must be >= 2*Wf+1={2 * cfg.wf + 1}")
+    kernel_step = _VARIANTS[cfg.variant](cfg.b, cfg.s, cfg.d, cfg.n, cfg.wf)
+
+    def step(syn0, syn1, neg, lens, lr):
+        return kernel_step(syn0, syn1, neg, lens, lr)
+
+    return step
+
+
+def lower_to_hlo_text(cfg: StepConfig) -> str:
+    """AOT-lower ``cfg``'s step to HLO *text*.
+
+    HLO text (not ``.serialize()``) is the interchange format: jax >= 0.5
+    emits HloModuleProtos with 64-bit instruction ids that the runtime's
+    xla_extension 0.5.1 rejects; the text parser reassigns ids (see
+    /opt/xla-example/README.md).
+
+    ``print_large_constants=True`` is load-bearing: the default elides any
+    non-scalar constant as ``{...}``, which the old text parser silently
+    reads back as *zeros* — e.g. the SGNS label matrix becomes all-zero and
+    every positive update flips sign.
+    """
+    from jax._src.lib import xla_client as xc
+
+    step = make_step(cfg)
+    lowered = jax.jit(step).lower(*cfg.arg_specs())
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True)
+    text = comp.as_hlo_text(print_large_constants=True)
+    if "{...}" in text:
+        raise RuntimeError(
+            f"{cfg.name}: HLO text still contains elided constants")
+    return text

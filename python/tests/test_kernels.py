@@ -1,0 +1,221 @@
+"""L1 kernel correctness: Pallas kernels vs pure-numpy oracles.
+
+This is the core build-time correctness signal for the whole stack: the HLO
+the Rust runtime executes is lowered from exactly these kernels.
+"""
+import numpy as np
+import pytest
+import jax
+import jax.numpy as jnp
+from hypothesis import given, settings, strategies as st
+
+from compile.kernels import ref
+from compile.kernels.full_w2v import (make_full_w2v_step,
+                                      make_full_register_step)
+from compile.kernels.baselines import make_acc_sgns_step, make_wombat_step
+
+RTOL, ATOL = 3e-5, 3e-6
+
+WINDOW_VARIANTS = {
+    "full_w2v": make_full_w2v_step,
+    "full_register": make_full_register_step,
+}
+PERPAIR_VARIANTS = {
+    "acc_sgns": make_acc_sgns_step,
+    "wombat": make_wombat_step,
+}
+ORACLES = {**{k: ref.sgns_window_ref for k in WINDOW_VARIANTS},
+           **{k: ref.sgns_perpair_ref for k in PERPAIR_VARIANTS}}
+MAKERS = {**WINDOW_VARIANTS, **PERPAIR_VARIANTS}
+
+_STEP_CACHE = {}
+
+
+def get_step(variant, b, s, d, n, wf):
+    key = (variant, b, s, d, n, wf)
+    if key not in _STEP_CACHE:
+        _STEP_CACHE[key] = jax.jit(MAKERS[variant](b, s, d, n, wf))
+    return _STEP_CACHE[key]
+
+
+def run_and_compare(variant, syn0, syn1, neg, lens, lr, wf):
+    b, s, d = syn0.shape
+    n = neg.shape[2]
+    step = get_step(variant, b, s, d, n, wf)
+    got = step(syn0, syn1, neg, lens, lr)
+    want = ORACLES[variant](syn0, syn1, neg, lens, lr, wf)
+    names = ["d_syn0", "d_syn1", "d_neg", "loss"]
+    for g, w, name in zip(got, want, names):
+        np.testing.assert_allclose(
+            np.asarray(g), w, rtol=RTOL, atol=ATOL,
+            err_msg=f"{variant}: {name} mismatch")
+
+
+@pytest.mark.parametrize("variant", sorted(MAKERS))
+def test_basic_correctness(variant):
+    rng = np.random.default_rng(42)
+    syn0, syn1, neg, lens = ref.random_case(rng, B=3, S=12, d=16, N=3)
+    run_and_compare(variant, syn0, syn1, neg, lens, 0.025, wf=2)
+
+
+@pytest.mark.parametrize("variant", sorted(MAKERS))
+@pytest.mark.parametrize("wf", [1, 2, 3])
+def test_window_widths(variant, wf):
+    rng = np.random.default_rng(wf)
+    syn0, syn1, neg, lens = ref.random_case(rng, B=2, S=10, d=8, N=2)
+    run_and_compare(variant, syn0, syn1, neg, lens, 0.05, wf=wf)
+
+
+@pytest.mark.parametrize("variant", sorted(MAKERS))
+def test_full_length_sentences(variant):
+    """All sentences exactly S words — no padding path."""
+    rng = np.random.default_rng(7)
+    syn0, syn1, neg, _ = ref.random_case(rng, B=2, S=9, d=8, N=2)
+    lens = np.full((2,), 9, dtype=np.int32)
+    run_and_compare(variant, syn0, syn1, neg, lens, 0.025, wf=2)
+
+
+@pytest.mark.parametrize("variant", sorted(MAKERS))
+def test_single_word_sentence(variant):
+    """len=1: no context positions at all -> zero deltas for that sentence."""
+    rng = np.random.default_rng(8)
+    syn0, syn1, neg, _ = ref.random_case(rng, B=2, S=8, d=8, N=2)
+    lens = np.array([1, 5], dtype=np.int32)
+    b, s, d = syn0.shape
+    step = get_step(variant, b, s, d, neg.shape[2], 2)
+    d0, d1, dn, loss = step(syn0, syn1, neg, lens, 0.025)
+    assert np.allclose(np.asarray(d0)[0], 0.0)
+    assert np.allclose(np.asarray(d1)[0], 0.0)
+    assert np.allclose(np.asarray(dn)[0], 0.0)
+    assert float(loss[0]) == 0.0
+    run_and_compare(variant, syn0, syn1, neg, lens, 0.025, wf=2)
+
+
+@pytest.mark.parametrize("variant", sorted(MAKERS))
+def test_zero_length_sentence(variant):
+    """len=0 (empty slot in a ragged batch) must be a no-op."""
+    rng = np.random.default_rng(9)
+    syn0, syn1, neg, _ = ref.random_case(rng, B=2, S=8, d=8, N=2)
+    lens = np.array([0, 8], dtype=np.int32)
+    run_and_compare(variant, syn0, syn1, neg, lens, 0.025, wf=2)
+
+
+@pytest.mark.parametrize("variant", sorted(MAKERS))
+def test_zero_lr_is_noop(variant):
+    rng = np.random.default_rng(10)
+    syn0, syn1, neg, lens = ref.random_case(rng, B=2, S=10, d=8, N=2)
+    b, s, d = syn0.shape
+    step = get_step(variant, b, s, d, neg.shape[2], 2)
+    d0, d1, dn, loss = step(syn0, syn1, neg, lens, 0.0)
+    assert np.allclose(np.asarray(d0), 0.0)
+    assert np.allclose(np.asarray(d1), 0.0)
+    assert np.allclose(np.asarray(dn), 0.0)
+    assert np.all(np.asarray(loss) > 0.0)  # loss is still measured
+
+
+@pytest.mark.parametrize("variant", sorted(MAKERS))
+def test_zero_embeddings_loss(variant):
+    """All-zero vectors: sigmoid(0)=0.5 -> loss = windows*(N+1)*log 2."""
+    b, s, d, n, wf = 1, 6, 8, 2, 1
+    syn0 = np.zeros((b, s, d), np.float32)
+    syn1 = np.zeros((b, s, d), np.float32)
+    neg = np.zeros((b, s, n, d), np.float32)
+    lens = np.array([6], np.int32)
+    step = get_step(variant, b, s, d, n, wf)
+    _, _, _, loss = step(syn0, syn1, neg, lens, 0.025)
+    # context pair count for len=6, wf=1: interior words have 2 ctx,
+    # boundary words 1 -> total pairs = 2*6-2 = 10
+    pairs = 10
+    want = pairs * (n + 1) * np.log(2.0)
+    np.testing.assert_allclose(float(loss[0]), want, rtol=1e-5)
+
+
+def test_full_w2v_equals_full_register():
+    """The ablation pair must agree up to f32 accumulation-order noise."""
+    rng = np.random.default_rng(11)
+    syn0, syn1, neg, lens = ref.random_case(rng, B=4, S=14, d=16, N=4)
+    a = get_step("full_w2v", 4, 14, 16, 4, 3)(syn0, syn1, neg, lens, 0.025)
+    b = get_step("full_register", 4, 14, 16, 4, 3)(syn0, syn1, neg, lens,
+                                                   0.025)
+    for x, y in zip(a, b):
+        np.testing.assert_allclose(np.asarray(x), np.asarray(y),
+                                   rtol=3e-5, atol=3e-6)
+
+
+def test_acc_sgns_equals_wombat():
+    """Both per-pair baselines implement identical word2vec.c semantics."""
+    rng = np.random.default_rng(12)
+    syn0, syn1, neg, lens = ref.random_case(rng, B=3, S=10, d=8, N=3)
+    a = get_step("acc_sgns", 3, 10, 8, 3, 2)(syn0, syn1, neg, lens, 0.025)
+    b = get_step("wombat", 3, 10, 8, 3, 2)(syn0, syn1, neg, lens, 0.025)
+    for x, y in zip(a, b):
+        np.testing.assert_allclose(np.asarray(x), np.asarray(y),
+                                   rtol=1e-5, atol=1e-6)
+
+
+@pytest.mark.parametrize("variant", sorted(MAKERS))
+def test_deltas_shrink_loss(variant):
+    """Applying the returned deltas must reduce the NS loss (SGD step)."""
+    rng = np.random.default_rng(13)
+    syn0, syn1, neg, lens = ref.random_case(rng, B=2, S=10, d=16, N=3)
+    b, s, d = syn0.shape
+    step = get_step(variant, b, s, d, neg.shape[2], 2)
+    d0, d1, dn, loss0 = step(syn0, syn1, neg, lens, 0.05)
+    _, _, _, loss1 = step(syn0 + np.asarray(d0), syn1 + np.asarray(d1),
+                          neg + np.asarray(dn), lens, 0.05)
+    assert float(np.sum(loss1)) < float(np.sum(loss0))
+
+
+# ---------------------------------------------------------------------------
+# hypothesis sweeps: shapes, lengths, lr, wf
+# ---------------------------------------------------------------------------
+
+@settings(max_examples=15, deadline=None)
+@given(
+    s=st.integers(min_value=7, max_value=20),
+    d=st.integers(min_value=4, max_value=48),
+    n=st.integers(min_value=1, max_value=6),
+    wf=st.integers(min_value=1, max_value=3),
+    lr=st.floats(min_value=1e-4, max_value=0.2),
+    seed=st.integers(min_value=0, max_value=2**31 - 1),
+)
+def test_hypothesis_full_w2v(s, d, n, wf, lr, seed):
+    if s < 2 * wf + 1:
+        s = 2 * wf + 1
+    rng = np.random.default_rng(seed)
+    syn0, syn1, neg, lens = ref.random_case(rng, B=2, S=s, d=d, N=n,
+                                            min_len=0 if seed % 3 else 1)
+    run_and_compare("full_w2v", syn0, syn1, neg, lens, np.float32(lr), wf)
+
+
+@settings(max_examples=8, deadline=None)
+@given(
+    s=st.integers(min_value=7, max_value=16),
+    d=st.integers(min_value=4, max_value=32),
+    n=st.integers(min_value=1, max_value=4),
+    wf=st.integers(min_value=1, max_value=3),
+    seed=st.integers(min_value=0, max_value=2**31 - 1),
+)
+def test_hypothesis_perpair(s, d, n, wf, seed):
+    if s < 2 * wf + 1:
+        s = 2 * wf + 1
+    rng = np.random.default_rng(seed)
+    syn0, syn1, neg, lens = ref.random_case(rng, B=2, S=s, d=d, N=n)
+    run_and_compare("wombat", syn0, syn1, neg, lens, 0.025, wf)
+
+
+@settings(max_examples=6, deadline=None)
+@given(seed=st.integers(min_value=0, max_value=2**31 - 1))
+def test_hypothesis_window_vs_perpair_close(seed):
+    """The two semantic families differ only by in-window update ordering;
+    for small lr one window-slide they should be close (sanity link)."""
+    rng = np.random.default_rng(seed)
+    syn0, syn1, neg, lens = ref.random_case(rng, B=1, S=8, d=8, N=2,
+                                            scale=0.1)
+    lr = 0.01
+    a = ref.sgns_window_ref(syn0, syn1, neg, lens, lr, 2)
+    b = ref.sgns_perpair_ref(syn0, syn1, neg, lens, lr, 2)
+    # loose: same order of magnitude / direction
+    na = float(np.linalg.norm(a[0]))
+    nb = float(np.linalg.norm(b[0]))
+    assert abs(na - nb) <= 0.2 * max(na, nb) + 1e-6

@@ -1,0 +1,98 @@
+"""L2/AOT tests: StepConfig validation, manifest integrity, HLO lowering."""
+import json
+import os
+import tempfile
+
+import numpy as np
+import pytest
+import jax
+
+from compile.model import StepConfig, make_step, lower_to_hlo_text, \
+    variant_names
+from compile import aot
+from compile.kernels import ref
+
+
+def test_variant_names():
+    assert variant_names() == ["acc_sgns", "full_register", "full_w2v",
+                               "full_w2v_batched", "wombat"]
+
+
+def test_unknown_variant_rejected():
+    with pytest.raises(ValueError, match="unknown variant"):
+        make_step(StepConfig("nope", 1, 8, 8, 2, 2))
+
+
+def test_too_small_s_rejected():
+    with pytest.raises(ValueError, match="must be >="):
+        make_step(StepConfig("full_w2v", 1, 4, 8, 2, 3))
+
+
+def test_config_name_roundtrip():
+    cfg = StepConfig("full_w2v", 64, 32, 128, 5, 3)
+    assert cfg.name == "full_w2v_b64_s32_d128_n5_w3"
+
+
+def test_io_manifest_shapes():
+    cfg = StepConfig("wombat", 4, 8, 16, 3, 2)
+    m = cfg.io_manifest()
+    assert [i["name"] for i in m["inputs"]] == ["syn0", "syn1", "neg",
+                                                "lens", "lr"]
+    assert m["inputs"][2]["shape"] == [4, 8, 3, 16]
+    assert m["outputs"][3]["shape"] == [4]
+
+
+def test_step_runs_and_matches_ref():
+    cfg = StepConfig("full_w2v", 2, 9, 8, 2, 2)
+    step = jax.jit(make_step(cfg))
+    rng = np.random.default_rng(0)
+    syn0, syn1, neg, lens = ref.random_case(rng, B=2, S=9, d=8, N=2)
+    got = step(syn0, syn1, neg, lens, np.float32(0.025))
+    want = ref.sgns_window_ref(syn0, syn1, neg, lens, 0.025, 2)
+    for g, w in zip(got, want):
+        np.testing.assert_allclose(np.asarray(g), w, rtol=3e-5, atol=3e-6)
+
+
+def test_lower_to_hlo_text_structure():
+    cfg = StepConfig("full_w2v", 2, 8, 8, 2, 2)
+    text = lower_to_hlo_text(cfg)
+    assert text.startswith("HloModule")
+    assert "ENTRY" in text
+    # 5 params in declared order
+    for i in range(5):
+        assert f"parameter({i})" in text
+    # output is a tuple of 4
+    assert "f32[2,8,8]" in text
+    assert "f32[2,8,2,8]" in text
+
+
+def test_hlo_is_deterministic():
+    cfg = StepConfig("wombat", 1, 7, 4, 1, 1)
+    assert lower_to_hlo_text(cfg) == lower_to_hlo_text(cfg)
+
+
+def test_aot_build_writes_manifest():
+    cfgs = [StepConfig("full_w2v", 1, 7, 4, 1, 1),
+            StepConfig("acc_sgns", 1, 7, 4, 1, 1)]
+    with tempfile.TemporaryDirectory() as td:
+        manifest = aot.build(td, cfgs, verbose=False)
+        with open(os.path.join(td, "manifest.json")) as f:
+            on_disk = json.load(f)
+        assert on_disk == manifest
+        assert on_disk["interchange"] == "hlo-text"
+        assert len(on_disk["executables"]) == 2
+        for e in on_disk["executables"]:
+            path = os.path.join(td, e["file"])
+            assert os.path.exists(path)
+            with open(path) as f:
+                assert f.read().startswith("HloModule")
+
+
+def test_default_config_set_covers_all_variants():
+    variants = {c.variant for c in aot.DEFAULT_CONFIGS}
+    assert variants == set(variant_names())
+    # flagship head-to-head shapes are identical across variants (4 paper
+    # variants + the perf-optimized batched restructure)
+    flag = [c for c in aot.DEFAULT_CONFIGS
+            if (c.b, c.s, c.d, c.n, c.wf) == (64, 32, 128, 5, 3)]
+    assert len(flag) == 5

@@ -1,0 +1,62 @@
+//! Table 3: corpus information (vocabulary, words/epoch, sentences) for
+//! the synthetic stand-ins, plus reader throughput — establishing the
+//! workload parameters every other bench uses.
+
+use fullw2v::corpus::reader::{read_all, ReaderOptions};
+use fullw2v::corpus::synthetic::SyntheticSpec;
+use fullw2v::util::benchkit::{banner, bench};
+use fullw2v::util::tables::Table;
+use fullw2v::workbench::Workbench;
+
+fn main() {
+    banner("bench_corpus", "Table 3: corpus information");
+    let mut table = Table::new(
+        "Table 3: corpus information (min_count=5, synthetic stand-ins)",
+        &["corpus", "vocabulary", "words/epoch", "sentences"],
+    );
+    for (name, spec) in [
+        ("text8-mini", SyntheticSpec::text8_mini()),
+        ("1bw-mini", {
+            let mut s = SyntheticSpec::obw_mini();
+            s.total_words = 2_000_000; // bench-budget cap
+            s
+        }),
+    ] {
+        let wb = Workbench::prepare(spec, 5);
+        let stats = wb.stats();
+        table.row(vec![
+            name.into(),
+            stats.vocabulary.to_string(),
+            stats.words_per_epoch.to_string(),
+            stats.sentences.to_string(),
+        ]);
+        println!(
+            "{name}: vocab {} words {} sentences {}",
+            stats.vocabulary, stats.words_per_epoch, stats.sentences
+        );
+    }
+    println!("\n{}", table.render());
+
+    // reader throughput (tokenize + vocab lookup + sentence capping)
+    let wb = Workbench::prepare(
+        {
+            let mut s = SyntheticSpec::text8_mini();
+            s.total_words = 300_000;
+            s
+        },
+        5,
+    );
+    let text = wb.corpus.to_text();
+    let stats = bench(1, 3, || {
+        let (sents, raw) = read_all(
+            text.as_bytes(),
+            &wb.vocab,
+            ReaderOptions::default(),
+        );
+        std::hint::black_box((sents.len(), raw));
+    });
+    println!(
+        "reader throughput: {:.2} Mwords/s",
+        stats.rate(300_000.0) / 1e6
+    );
+}

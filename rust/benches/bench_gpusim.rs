@@ -1,0 +1,141 @@
+//! Tables 5 & 6 and the Figures 6/7 cross-architecture projection, from
+//! the GPU execution model, with the paper's measured values inline for
+//! shape comparison.
+
+use fullw2v::gpusim::{occupancy, project_all, ArchSpec, KernelProfile};
+use fullw2v::memmodel::{Variant, Workload};
+use fullw2v::util::benchkit::banner;
+use fullw2v::util::tables::{f, Table};
+
+fn main() {
+    banner("bench_gpusim", "Tables 5/6 + Figs 6/7 cross-arch projection");
+    let w = Workload::text8_paper();
+    let ps = project_all(&w);
+    let find = |arch: &str, v: Variant| {
+        ps.iter().find(|p| p.arch == arch && p.variant == v).unwrap()
+    };
+
+    // ---- Table 5 ------------------------------------------------------
+    // paper: (XP FULL-Register, XP FULL-W2V, V100 FULL-Register, V100
+    // FULL-W2V) IPC = 1.19, 2.78, 2.38, 3.22; long sb = 38.66, 1.25,
+    // 11.00, 0.97
+    let mut t5 = Table::new(
+        "Table 5: IPC and stalls (modeled vs paper)",
+        &["arch", "impl", "IPC", "IPC paper", "long sb", "lsb paper"],
+    );
+    let paper5 = [
+        ("TitanXP", Variant::FullRegister, 1.19, 38.66),
+        ("TitanXP", Variant::FullW2v, 2.78, 1.25),
+        ("V100", Variant::FullRegister, 2.38, 11.00),
+        ("V100", Variant::FullW2v, 3.22, 0.97),
+    ];
+    for (arch, v, ipc_p, lsb_p) in paper5 {
+        let p = find(arch, v);
+        t5.row(vec![
+            arch.into(),
+            v.name().into(),
+            f(p.sim.ipc, 2),
+            f(ipc_p, 2),
+            f(p.sim.long_scoreboard_pct, 2),
+            f(lsb_p, 2),
+        ]);
+    }
+    println!("{}", t5.render());
+
+    // shape assertions
+    assert!(
+        find("V100", Variant::FullW2v).sim.ipc
+            > find("V100", Variant::FullRegister).sim.ipc
+    );
+    assert!(
+        find("V100", Variant::FullW2v).sim.long_scoreboard_pct
+            < find("V100", Variant::FullRegister).sim.long_scoreboard_pct
+    );
+
+    // ---- Table 6 ------------------------------------------------------
+    let mut t6 = Table::new(
+        "Table 6: warps per scheduler (modeled vs paper)",
+        &["arch", "impl", "max", "max paper", "active", "act paper",
+          "eligible", "elig paper"],
+    );
+    let paper6 = [
+        ("TitanXP", Variant::Wombat, 11.03, 4.59, 0.16),
+        ("TitanXP", Variant::AccSgns, 12.0, 11.08, 1.33),
+        ("TitanXP", Variant::FullRegister, 16.0, 15.86, 0.42),
+        ("TitanXP", Variant::FullW2v, 13.0, 9.59, 0.99),
+        ("V100", Variant::Wombat, 11.03, 4.66, 0.18),
+        ("V100", Variant::AccSgns, 12.0, 9.41, 1.09),
+        ("V100", Variant::FullRegister, 16.0, 14.92, 1.86),
+        ("V100", Variant::FullW2v, 9.0, 8.99, 1.90),
+    ];
+    for (arch, v, max_p, act_p, elig_p) in paper6 {
+        let p = find(arch, v);
+        t6.row(vec![
+            arch.into(),
+            v.name().into(),
+            f(p.occupancy.max_warps, 1),
+            f(max_p, 1),
+            f(p.occupancy.active_warps, 2),
+            f(act_p, 2),
+            f(p.sim.eligible_warps, 2),
+            f(elig_p, 2),
+        ]);
+    }
+    println!("{}", t6.render());
+
+    // ---- Figures 6/7 projection ----------------------------------------
+    let mut f6 = Table::new(
+        "Figures 6/7: projected throughput (Mwords/s)",
+        &["impl", "P100", "TitanXP", "V100", "P100->V100 scale"],
+    );
+    for &v in &Variant::ALL {
+        let g = |a: &str| find(a, v).sim.words_per_sec / 1e6;
+        f6.row(vec![
+            v.name().into(),
+            f(g("P100"), 1),
+            f(g("TitanXP"), 1),
+            f(g("V100"), 1),
+            format!("{:.2}x", g("V100") / g("P100")),
+        ]);
+    }
+    println!("{}", f6.render());
+
+    let wps =
+        |a: &str, v: Variant| find(a, v).sim.words_per_sec;
+    println!("headline ratios (modeled / paper):");
+    println!(
+        "  V100 vs accSGNS  {:.2}x / 5.72x",
+        wps("V100", Variant::FullW2v) / wps("V100", Variant::AccSgns)
+    );
+    println!(
+        "  V100 vs Wombat   {:.2}x / 8.65x",
+        wps("V100", Variant::FullW2v) / wps("V100", Variant::Wombat)
+    );
+    println!(
+        "  P100 vs accSGNS  {:.2}x / 6.75x",
+        wps("P100", Variant::FullW2v) / wps("P100", Variant::AccSgns)
+    );
+    println!(
+        "  P100 vs Wombat   {:.2}x / 5.91x",
+        wps("P100", Variant::FullW2v) / wps("P100", Variant::Wombat)
+    );
+    println!(
+        "  P100->V100 scale {:.2}x / 2.97x",
+        wps("V100", Variant::FullW2v) / wps("P100", Variant::FullW2v)
+    );
+
+    // occupancy-limiter summary (useful for DESIGN.md Section Perf)
+    println!("\noccupancy limiters (V100):");
+    for &v in &Variant::ALL {
+        let occ = occupancy(
+            &KernelProfile::for_variant(v),
+            &ArchSpec::v100(),
+        );
+        println!(
+            "  {:14} blocks/SM {:2}  limiter {}",
+            v.name(),
+            occ.blocks_per_sm,
+            occ.limiter
+        );
+    }
+}

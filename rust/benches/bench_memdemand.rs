@@ -1,0 +1,65 @@
+//! Table 4: memory demand in GB/epoch at each hierarchy level, from the
+//! analytical traffic model, with the paper's measured values alongside
+//! for shape comparison.
+
+use fullw2v::gpusim::ArchSpec;
+use fullw2v::memmodel::{table4, Variant, Workload};
+use fullw2v::util::benchkit::banner;
+use fullw2v::util::tables::{f, Table};
+
+/// Paper Table 4 (GB over 20 Text8 epochs -> per-epoch here).
+const PAPER: [(&str, f64, f64, f64); 4] = [
+    ("FULL-W2V", 94.760, 88.723, 41.851),
+    ("FULL-Register", 885.065, 781.576, 66.555),
+    ("accSGNS", 1134.448, 493.614, 226.578),
+    ("Wombat", 2303.525, 1432.774, 45.799),
+];
+
+fn main() {
+    banner("bench_memdemand", "Table 4: memory demand (GB/epoch)");
+    let w = Workload::text8_paper();
+    let arch = ArchSpec::v100();
+    let reports = table4(&w, arch.l2_bytes);
+
+    let mut t = Table::new(
+        "Table 4: modeled memory demand, Text8 params, V100 L2 (GB/epoch)",
+        &["implementation", "L1/TEX", "L2", "DRAM", "Sum",
+          "paper sum (20ep)"],
+    );
+    for r in &reports {
+        let paper_sum: f64 = PAPER
+            .iter()
+            .find(|(n, ..)| *n == r.variant.name())
+            .map(|(_, a, b, c)| a + b + c)
+            .unwrap();
+        t.row(vec![
+            r.variant.name().into(),
+            f(r.l1_gb, 1),
+            f(r.l2_gb, 1),
+            f(r.dram_gb, 1),
+            f(r.sum_gb(), 1),
+            f(paper_sum, 1),
+        ]);
+    }
+    println!("{}", t.render());
+
+    // headline reductions (paper Section 5.3.1)
+    let get = |v: Variant| reports.iter().find(|r| r.variant == v).unwrap();
+    let vs_wombat =
+        100.0 * (1.0 - get(Variant::FullW2v).sum_gb() / get(Variant::Wombat).sum_gb());
+    let vs_acc = 100.0
+        * (1.0 - get(Variant::FullW2v).sum_gb() / get(Variant::AccSgns).sum_gb());
+    let vs_reg = 100.0
+        * (1.0
+            - get(Variant::FullW2v).sum_gb()
+                / get(Variant::FullRegister).sum_gb());
+    println!("total-demand reduction of FULL-W2V (modeled / paper):");
+    println!("  vs Wombat        : {vs_wombat:.1}% / 94.0%");
+    println!("  vs accSGNS       : {vs_acc:.1}% / 87.9%");
+    println!("  vs FULL-Register : {vs_reg:.1}% / 87.0%");
+
+    // DRAM ordering assertions (the shape the paper measures)
+    assert!(get(Variant::AccSgns).dram_gb > get(Variant::Wombat).dram_gb);
+    assert!(get(Variant::FullW2v).dram_gb < get(Variant::FullRegister).dram_gb);
+    assert!(vs_wombat > 85.0);
+}

@@ -1,0 +1,120 @@
+//! Table 7: embedding quality equivalence across implementations —
+//! similarity spearman (WS-353/SimLex analogue vs the generator's latent
+//! gold) and analogy COS-ADD / COS-MUL, mean over repeated trials.
+//!
+//! The paper's claim is *statistical equivalence* between FULL-W2V,
+//! Wombat and pWord2Vec under identical reuse policies; the absolute
+//! numbers here are synthetic-gold values, not WS-353 scores.
+//!
+//! Args: `cargo bench --bench bench_quality [-- --trials 2 --words 150000]`
+
+use fullw2v::config::TrainConfig;
+use fullw2v::coordinator::train_all;
+use fullw2v::corpus::synthetic::SyntheticSpec;
+use fullw2v::eval::analogy::{solve_analogies, AnalogyMethod};
+use fullw2v::eval::similarity::evaluate_similarity;
+use fullw2v::util::benchkit::banner;
+use fullw2v::util::tables::{f, Table};
+use fullw2v::workbench::{have_artifacts, Workbench};
+
+fn main() {
+    banner("bench_quality", "Table 7: embedding quality equivalence");
+    if !have_artifacts() {
+        println!("SKIP: no artifacts (run `make artifacts`)");
+        return;
+    }
+    let args: Vec<String> = std::env::args().collect();
+    let arg = |name: &str| {
+        args.iter()
+            .position(|a| a == name)
+            .and_then(|i| args.get(i + 1).cloned())
+    };
+    let trials: usize =
+        arg("--trials").and_then(|v| v.parse().ok()).unwrap_or(1);
+    let words: u64 =
+        arg("--words").and_then(|v| v.parse().ok()).unwrap_or(60_000);
+
+    let mut spec = SyntheticSpec::tiny();
+    spec.total_words = words;
+    spec.vocab_size = 600;
+    spec.clusters = 10;
+    spec.roles = 4;
+    let wb = Workbench::prepare(spec, 1);
+    let gold_sim = wb.corpus.gold_similarity_pairs(300, 17);
+    let gold_ana = wb.corpus.gold_analogies(120, 17);
+    println!(
+        "corpus: {} words, vocab {}; {} gold pairs, {} analogies",
+        wb.total_words,
+        wb.vocab.len(),
+        gold_sim.len(),
+        gold_ana.len()
+    );
+
+    // the three Table 7 counterparts (same reuse policies)
+    let impls = ["pword2vec", "wombat", "full_w2v"];
+    let mut t = Table::new(
+        "Table 7: mean embedding quality over trials (synthetic gold)",
+        &["implementation", "similarity rho", "COS-ADD", "COS-MUL"],
+    );
+    let mut rhos = Vec::new();
+    for name in impls {
+        let (mut rho_sum, mut add_sum, mut mul_sum) = (0.0, 0.0, 0.0);
+        for trial in 0..trials {
+            let train = TrainConfig {
+                dim: 64,
+                window: 5,
+                negatives: 5,
+                epochs: 3,
+                subsample: 1e-3,
+                batch_sentences: 16,
+                sentence_chunk: 16,
+                seed: 100 + trial as u64,
+                ..TrainConfig::default()
+            };
+            let mut tr = wb.trainer(name, &train).unwrap();
+            train_all(&mut *tr, &wb.sentences, 3).unwrap();
+            let sim = evaluate_similarity(tr.model(), &wb.vocab, &gold_sim);
+            let add = solve_analogies(
+                tr.model(),
+                &wb.vocab,
+                &gold_ana,
+                AnalogyMethod::CosAdd,
+            );
+            let mul = solve_analogies(
+                tr.model(),
+                &wb.vocab,
+                &gold_ana,
+                AnalogyMethod::CosMul,
+            );
+            rho_sum += sim.spearman;
+            add_sum += add.accuracy();
+            mul_sum += mul.accuracy();
+        }
+        let k = trials as f64;
+        println!(
+            "  {name:12} rho {:.4}  cos-add {:.1}%  cos-mul {:.1}%",
+            rho_sum / k,
+            100.0 * add_sum / k,
+            100.0 * mul_sum / k
+        );
+        t.row(vec![
+            name.into(),
+            f(rho_sum / k, 4),
+            format!("{:.2}%", 100.0 * add_sum / k),
+            format!("{:.2}%", 100.0 * mul_sum / k),
+        ]);
+        rhos.push(rho_sum / k);
+    }
+    println!("\n{}", t.render());
+
+    // equivalence: all three within a band (paper: statistically equal)
+    let max = rhos.iter().cloned().fold(f64::MIN, f64::max);
+    let min = rhos.iter().cloned().fold(f64::MAX, f64::min);
+    println!("rho spread across implementations: {:.4}", max - min);
+    assert!(
+        max - min < 0.15,
+        "implementations should produce equivalent quality (spread {})",
+        max - min
+    );
+    assert!(min > 0.2, "all implementations must learn structure");
+}

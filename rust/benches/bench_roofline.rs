@@ -1,0 +1,57 @@
+//! Figure 1: roofline placement of every implementation on the V100 —
+//! arithmetic intensity (x) and achieved GFLOP/s (y) against the
+//! peak/bandwidth boundary, printed as a series suitable for replotting.
+
+use fullw2v::gpusim::{occupancy, simulate, ArchSpec, KernelProfile};
+use fullw2v::memmodel::{traffic, Variant, Workload};
+use fullw2v::util::benchkit::banner;
+use fullw2v::util::tables::{f, Table};
+
+fn main() {
+    banner("bench_roofline", "Figure 1: V100 roofline");
+    let w = Workload::text8_paper();
+    let arch = ArchSpec::v100();
+
+    // the boundary itself, as a plottable series
+    println!("roofline boundary (AI flop/byte -> attainable GFLOP/s):");
+    for ai in [0.5, 1.0, 2.0, 4.0, 8.0, 15.56, 32.0, 64.0, 128.0] {
+        println!("  {:>7.2} -> {:>8.0}", ai, arch.roofline_gflops(ai));
+    }
+    println!("knee at {:.2} flop/byte\n", arch.roofline_knee());
+
+    let mut t = Table::new(
+        "Figure 1 series: kernels on the V100 roofline (modeled)",
+        &["implementation", "AI (DRAM)", "AI (total)", "achieved GF/s",
+          "ceiling GF/s", "% of ceiling", "bound"],
+    );
+    for &v in &Variant::ALL {
+        let tr = traffic(v, &w, arch.l2_bytes);
+        let occ = occupancy(&KernelProfile::for_variant(v), &arch);
+        let sim = simulate(v, &w, &arch, &occ);
+        let ceiling = arch.roofline_gflops(tr.arithmetic_intensity);
+        t.row(vec![
+            v.name().into(),
+            f(tr.arithmetic_intensity, 2),
+            f(tr.ai_total, 3),
+            f(sim.achieved_gflops, 0),
+            f(ceiling, 0),
+            f(100.0 * sim.achieved_gflops / ceiling, 1),
+            sim.bound.into(),
+        ]);
+    }
+    println!("{}", t.render());
+
+    // Figure 1's qualitative claim: prior GPU work sits far below its
+    // ceiling; FULL-W2V climbs substantially.
+    let gf = |v: Variant| {
+        let occ = occupancy(&KernelProfile::for_variant(v), &arch);
+        simulate(v, &w, &arch, &occ).achieved_gflops
+    };
+    assert!(gf(Variant::FullW2v) > 4.0 * gf(Variant::AccSgns));
+    assert!(gf(Variant::FullW2v) > 4.0 * gf(Variant::Wombat));
+    println!(
+        "FULL-W2V achieved-GFLOP/s gain: {:.1}x over accSGNS, {:.1}x over Wombat",
+        gf(Variant::FullW2v) / gf(Variant::AccSgns),
+        gf(Variant::FullW2v) / gf(Variant::Wombat)
+    );
+}

@@ -1,0 +1,101 @@
+//! Figures 6/7, measured half: end-to-end training throughput of every
+//! implementation on this substrate (CPU PJRT for the kernel variants,
+//! native Rust for the CPU baselines), on text8-mini and 1bw-mini.
+//!
+//! Absolute words/sec are substrate numbers; the GPU-relative factors are
+//! projected by bench_gpusim.  The shape that must hold here: FULL-W2V is
+//! the fastest PJRT variant and the per-pair accSGNS kernel is the
+//! slowest.
+//!
+//! Args: `cargo bench --bench bench_throughput [-- --words N --corpus both]`
+
+use fullw2v::config::TrainConfig;
+use fullw2v::corpus::synthetic::SyntheticSpec;
+use fullw2v::util::benchkit::banner;
+use fullw2v::util::tables::{f, Table};
+use fullw2v::workbench::{have_artifacts, Workbench};
+
+fn main() {
+    banner("bench_throughput", "Figures 6/7 (measured on this substrate)");
+    if !have_artifacts() {
+        println!("SKIP: no artifacts (run `make artifacts`)");
+        return;
+    }
+    let args: Vec<String> = std::env::args().collect();
+    let arg = |name: &str| {
+        args.iter()
+            .position(|a| a == name)
+            .and_then(|i| args.get(i + 1).cloned())
+    };
+    let words: u64 =
+        arg("--words").and_then(|v| v.parse().ok()).unwrap_or(50_000);
+    let corpus = arg("--corpus").unwrap_or_else(|| "text8".into());
+
+    let mut corpora = vec![("text8-mini", {
+        let mut s = SyntheticSpec::text8_mini();
+        s.total_words = words;
+        s
+    })];
+    if corpus == "both" || corpus == "1bw" {
+        corpora.push(("1bw-mini", {
+            let mut s = SyntheticSpec::obw_mini();
+            s.total_words = words;
+            s
+        }));
+        if corpus == "1bw" {
+            corpora.remove(0);
+        }
+    }
+
+    for (cname, spec) in corpora {
+        let wb = Workbench::prepare(spec, 5);
+        println!(
+            "\ncorpus {cname}: {} words, vocab {}",
+            wb.total_words,
+            wb.vocab.len()
+        );
+        let train = TrainConfig::default();
+        let mut t = Table::new(
+            &format!("Figure 6/7 measured ({cname}): one-epoch throughput"),
+            &["implementation", "words/s", "vs FULL-W2V", "loss/word"],
+        );
+        let mut results: Vec<(String, f64, f64)> = Vec::new();
+        for name in [
+            "full_w2v",
+            "full_register",
+            "acc_sgns",
+            "wombat",
+            "pword2vec",
+            "psgnscc",
+            "mikolov",
+        ] {
+            let mut tr = wb.trainer(name, &train).unwrap();
+            // warmup pass on a slice is skipped: epoch 0 includes compile,
+            // so run two epochs and report the second
+            tr.train_epoch(&wb.sentences, 0).unwrap();
+            let rep = tr.train_epoch(&wb.sentences, 1).unwrap();
+            println!(
+                "  {:28} {:>10.0} w/s  loss/word {:.4}",
+                tr.name(),
+                rep.words_per_sec,
+                rep.loss_per_word
+            );
+            results.push((tr.name(), rep.words_per_sec, rep.loss_per_word));
+        }
+        let full = results[0].1;
+        for (name, wps, loss) in &results {
+            t.row(vec![
+                name.clone(),
+                f(*wps, 0),
+                format!("{:.2}x", wps / full),
+                f(*loss, 4),
+            ]);
+        }
+        println!("\n{}", t.render());
+
+        // substrate shape assertions
+        let wps = |i: usize| results[i].1;
+        assert!(wps(0) > wps(2), "FULL-W2V must beat accSGNS kernel");
+        assert!(wps(0) > wps(1), "FULL-W2V must beat FULL-Register kernel");
+    }
+}

@@ -1,0 +1,437 @@
+//! Batch assembly: the CPU side of the paper's CPU/GPU coordination
+//! (Section 4.1).
+//!
+//! The batcher performs *all* indirection on the CPU — subsampling,
+//! sentence chunking, negative sampling — and hands the training step a
+//! fixed-shape index batch.  The coordinator then gathers embedding rows
+//! into contiguous buffers (the HBM-fetch analogue) and scatter-adds the
+//! returned deltas (Hogwild-style, duplicates sum).
+//!
+//! `naive` contains the window-expansion batcher the baselines (Wombat /
+//! accSGNS style) use, which Table 1 compares against.
+
+pub mod naive;
+pub mod pipeline;
+
+use crate::config::TrainConfig;
+use crate::corpus::subsample::Subsampler;
+use crate::model::EmbeddingModel;
+use crate::runtime::{StepInputs, StepOutputs};
+use crate::sampler::unigram::UnigramTable;
+use crate::util::rng::Pcg32;
+
+/// Padding sentinel for unused word slots.
+pub const PAD: u32 = u32::MAX;
+
+/// A fixed-shape index batch matching one AOT executable's (B, S, N).
+#[derive(Debug, Clone, PartialEq)]
+pub struct IndexBatch {
+    pub b: usize,
+    pub s: usize,
+    pub n: usize,
+    /// Word ids, row-major [B, S]; `PAD` beyond each sentence's length.
+    pub words: Vec<u32>,
+    /// True sentence lengths [B].
+    pub lens: Vec<i32>,
+    /// Negative word ids, row-major [B, S, N]; arbitrary beyond length
+    /// (the kernel masks windows past the sentence end).
+    pub negs: Vec<u32>,
+    /// Total real words in the batch.
+    pub word_count: usize,
+}
+
+impl IndexBatch {
+    pub fn empty(b: usize, s: usize, n: usize) -> Self {
+        IndexBatch {
+            b,
+            s,
+            n,
+            words: vec![PAD; b * s],
+            lens: vec![0; b],
+            negs: vec![0; b * s * n],
+            word_count: 0,
+        }
+    }
+
+    /// Word id at (sentence, position).
+    #[inline]
+    pub fn word(&self, bi: usize, si: usize) -> u32 {
+        self.words[bi * self.s + si]
+    }
+
+    /// Negative id at (sentence, position, k).
+    #[inline]
+    pub fn neg(&self, bi: usize, si: usize, k: usize) -> u32 {
+        self.negs[(bi * self.s + si) * self.n + k]
+    }
+
+    /// Structural invariants (used by tests and debug assertions).
+    pub fn check(&self, vocab_size: usize) -> Result<(), String> {
+        if self.words.len() != self.b * self.s
+            || self.lens.len() != self.b
+            || self.negs.len() != self.b * self.s * self.n
+        {
+            return Err("buffer sizes inconsistent".into());
+        }
+        for bi in 0..self.b {
+            let len = self.lens[bi] as usize;
+            if len > self.s {
+                return Err(format!("sentence {bi} length {len} > S"));
+            }
+            for si in 0..self.s {
+                let w = self.word(bi, si);
+                if si < len {
+                    if w == PAD {
+                        return Err(format!("PAD inside sentence {bi}@{si}"));
+                    }
+                    if (w as usize) >= vocab_size {
+                        return Err(format!("word id {w} out of range"));
+                    }
+                    for k in 0..self.n {
+                        let g = self.neg(bi, si, k);
+                        if (g as usize) >= vocab_size {
+                            return Err(format!("neg id {g} out of range"));
+                        }
+                    }
+                } else if w != PAD {
+                    return Err(format!("non-PAD past length {bi}@{si}"));
+                }
+            }
+        }
+        Ok(())
+    }
+}
+
+/// Incremental batch builder: feed sentences, emit batches when full.
+pub struct BatchBuilder {
+    b: usize,
+    s: usize,
+    n: usize,
+    subsampler: Subsampler,
+    negatives: UnigramTable,
+    rng: Pcg32,
+    current: IndexBatch,
+    fill: usize,
+}
+
+impl BatchBuilder {
+    pub fn new(
+        cfg: &TrainConfig,
+        subsampler: Subsampler,
+        negatives: UnigramTable,
+        rng: Pcg32,
+    ) -> Self {
+        let (b, s, n) =
+            (cfg.batch_sentences, cfg.sentence_chunk, cfg.negatives);
+        BatchBuilder {
+            b,
+            s,
+            n,
+            subsampler,
+            negatives,
+            rng,
+            current: IndexBatch::empty(b, s, n),
+            fill: 0,
+        }
+    }
+
+    /// Feed one sentence; returns completed batches (possibly several when
+    /// a long sentence splits into many chunks).
+    pub fn push_sentence(&mut self, sentence: &[u32]) -> Vec<IndexBatch> {
+        let mut kept: Vec<u32> = sentence.to_vec();
+        self.subsampler.filter(&mut kept, &mut self.rng);
+        let mut done = Vec::new();
+        for chunk in kept.chunks(self.s) {
+            // single-word chunks generate no training pairs; skip them
+            if chunk.len() < 2 {
+                continue;
+            }
+            self.place_chunk(chunk);
+            if self.fill == self.b {
+                done.push(self.take_batch());
+            }
+        }
+        done
+    }
+
+    fn place_chunk(&mut self, chunk: &[u32]) {
+        let bi = self.fill;
+        let base = bi * self.s;
+        for (si, &w) in chunk.iter().enumerate() {
+            self.current.words[base + si] = w;
+            // per-window shared negatives, avoiding the center word
+            let negbase = (base + si) * self.n;
+            self.negatives.fill(
+                &mut self.rng,
+                w,
+                &mut self.current.negs[negbase..negbase + self.n],
+            );
+        }
+        self.current.lens[bi] = chunk.len() as i32;
+        self.current.word_count += chunk.len();
+        self.fill += 1;
+    }
+
+    fn take_batch(&mut self) -> IndexBatch {
+        self.fill = 0;
+        std::mem::replace(
+            &mut self.current,
+            IndexBatch::empty(self.b, self.s, self.n),
+        )
+    }
+
+    /// Flush a final partial batch (remaining slots stay empty: len=0,
+    /// which the kernel treats as a no-op).
+    pub fn flush(&mut self) -> Option<IndexBatch> {
+        if self.fill == 0 {
+            None
+        } else {
+            Some(self.take_batch())
+        }
+    }
+}
+
+/// Gather embedding rows for a batch into step inputs.
+/// Padded word slots gather row 0 — harmless since their deltas are zero.
+pub fn gather(model: &EmbeddingModel, batch: &IndexBatch, inp: &mut StepInputs) {
+    let d = model.dim;
+    debug_assert_eq!(inp.syn0.len(), batch.b * batch.s * d);
+    for bi in 0..batch.b {
+        let len = batch.lens[bi] as usize;
+        for si in 0..batch.s {
+            let row = (bi * batch.s + si) * d;
+            if si < len {
+                let w = batch.word(bi, si);
+                inp.syn0[row..row + d].copy_from_slice(model.syn0_row(w));
+                inp.syn1[row..row + d].copy_from_slice(model.syn1_row(w));
+                for k in 0..batch.n {
+                    let g = batch.neg(bi, si, k);
+                    let nrow = ((bi * batch.s + si) * batch.n + k) * d;
+                    inp.neg[nrow..nrow + d]
+                        .copy_from_slice(model.syn1_row(g));
+                }
+            } else {
+                inp.syn0[row..row + d].fill(0.0);
+                inp.syn1[row..row + d].fill(0.0);
+                let nrow = (bi * batch.s + si) * batch.n * d;
+                inp.neg[nrow..nrow + batch.n * d].fill(0.0);
+            }
+        }
+        inp.lens[bi] = batch.lens[bi];
+    }
+}
+
+/// Scatter-add step deltas back into the model (Hogwild-style: duplicate
+/// rows within a batch simply sum, like unsynchronized threads would).
+pub fn scatter(model: &mut EmbeddingModel, batch: &IndexBatch, out: &StepOutputs) {
+    let d = model.dim;
+    for bi in 0..batch.b {
+        let len = batch.lens[bi] as usize;
+        for si in 0..len {
+            let row = (bi * batch.s + si) * d;
+            let w = batch.word(bi, si);
+            {
+                let dst = model.syn0_row_mut(w);
+                for (x, g) in dst.iter_mut().zip(&out.d_syn0[row..row + d]) {
+                    *x += g;
+                }
+            }
+            {
+                let dst = model.syn1_row_mut(w);
+                for (x, g) in dst.iter_mut().zip(&out.d_syn1[row..row + d]) {
+                    *x += g;
+                }
+            }
+            for k in 0..batch.n {
+                let g_id = batch.neg(bi, si, k);
+                let nrow = ((bi * batch.s + si) * batch.n + k) * d;
+                let dst = model.syn1_row_mut(g_id);
+                for (x, g) in dst.iter_mut().zip(&out.d_neg[nrow..nrow + d]) {
+                    *x += g;
+                }
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::corpus::vocab::Vocab;
+
+    fn vocab(n: usize) -> Vocab {
+        Vocab::from_counts(
+            (0..n).map(|i| (format!("w{i}"), (n - i) as u64 * 10)),
+            1,
+        )
+    }
+
+    fn cfg(b: usize, s: usize, n: usize) -> TrainConfig {
+        TrainConfig {
+            batch_sentences: b,
+            sentence_chunk: s,
+            negatives: n,
+            subsample: 0.0,
+            ..TrainConfig::default()
+        }
+    }
+
+    fn builder(b: usize, s: usize, n: usize, v: &Vocab) -> BatchBuilder {
+        let c = cfg(b, s, n);
+        BatchBuilder::new(
+            &c,
+            Subsampler::new(v, 0.0),
+            UnigramTable::new(v, 0.75),
+            Pcg32::new(1),
+        )
+    }
+
+    #[test]
+    fn fills_batches_in_order() {
+        let v = vocab(50);
+        let mut bb = builder(2, 8, 3, &v);
+        assert!(bb.push_sentence(&[1, 2, 3]).is_empty());
+        let done = bb.push_sentence(&[4, 5, 6, 7]);
+        assert_eq!(done.len(), 1);
+        let batch = &done[0];
+        batch.check(50).unwrap();
+        assert_eq!(batch.lens, vec![3, 4]);
+        assert_eq!(batch.word(0, 0), 1);
+        assert_eq!(batch.word(1, 3), 7);
+        assert_eq!(batch.word(0, 3), PAD);
+        assert_eq!(batch.word_count, 7);
+    }
+
+    #[test]
+    fn long_sentence_splits_into_chunks() {
+        let v = vocab(50);
+        let mut bb = builder(2, 4, 2, &v);
+        let sent: Vec<u32> = (0..10).collect(); // 10 words, S=4 -> 4+4+2
+        let done = bb.push_sentence(&sent);
+        assert_eq!(done.len(), 1); // first two chunks fill batch of 2
+        assert_eq!(done[0].lens, vec![4, 4]);
+        let rest = bb.flush().unwrap();
+        assert_eq!(rest.lens[0], 2);
+        rest.check(50).unwrap();
+    }
+
+    #[test]
+    fn single_word_chunks_skipped() {
+        let v = vocab(50);
+        let mut bb = builder(1, 8, 2, &v);
+        assert!(bb.push_sentence(&[3]).is_empty());
+        assert!(bb.flush().is_none());
+    }
+
+    #[test]
+    fn negatives_avoid_center_and_in_range() {
+        let v = vocab(20);
+        let mut bb = builder(1, 8, 5, &v);
+        let done = bb.push_sentence(&[1, 2, 3, 4, 5, 6]);
+        let batch = done.into_iter().next().or_else(|| bb.flush()).unwrap();
+        batch.check(20).unwrap();
+        for si in 0..6 {
+            let w = batch.word(0, si);
+            for k in 0..5 {
+                let g = batch.neg(0, si, k);
+                assert_ne!(g, w);
+                assert!((g as usize) < 20);
+            }
+        }
+    }
+
+    #[test]
+    fn flush_emits_partial_batch_with_empty_slots() {
+        let v = vocab(50);
+        let mut bb = builder(4, 8, 2, &v);
+        bb.push_sentence(&[1, 2, 3]);
+        let batch = bb.flush().unwrap();
+        assert_eq!(batch.lens, vec![3, 0, 0, 0]);
+        batch.check(50).unwrap();
+        assert!(bb.flush().is_none());
+    }
+
+    #[test]
+    fn subsampling_reduces_word_count() {
+        let v = vocab(10); // small vocab -> high frequencies -> aggressive
+        let c = cfg(1, 32, 2);
+        let mut bb = BatchBuilder::new(
+            &c,
+            Subsampler::new(&v, 1e-4),
+            UnigramTable::new(&v, 0.75),
+            Pcg32::new(7),
+        );
+        let sent: Vec<u32> = (0..10).cycle().take(32).collect();
+        let mut total = 0;
+        let mut batches = bb.push_sentence(&sent);
+        if let Some(b) = bb.flush() {
+            batches.push(b);
+        }
+        for b in &batches {
+            total += b.word_count;
+        }
+        assert!(total < 32, "subsampling kept everything ({total})");
+    }
+
+    #[test]
+    fn gather_scatter_roundtrip_consistency() {
+        use crate::runtime::{ExecSpec, StepInputs, StepOutputs};
+        let v = vocab(30);
+        let mut model = EmbeddingModel::init(30, 4, 9);
+        let snapshot = model.clone();
+        let mut bb = builder(2, 6, 2, &v);
+        let mut batches = bb.push_sentence(&[1, 2, 3, 4]);
+        batches.extend(bb.push_sentence(&[5, 6, 7]));
+        batches.extend(bb.flush());
+        let batch = batches.into_iter().next().unwrap();
+        let spec = ExecSpec {
+            name: "t".into(),
+            variant: "x".into(),
+            file: "/dev/null".into(),
+            b: 2,
+            s: 6,
+            d: 4,
+            n: 2,
+            wf: 2,
+            inputs: vec![],
+            outputs: vec![],
+        };
+        let mut inp = StepInputs::zeroed(&spec);
+        gather(&model, &batch, &mut inp);
+        // gathered rows match the model
+        assert_eq!(&inp.syn0[0..4], model.syn0_row(1));
+        assert_eq!(&inp.syn1[4..8], model.syn1_row(2));
+        // zero deltas leave the model unchanged
+        let out = StepOutputs {
+            d_syn0: vec![0.0; 2 * 6 * 4],
+            d_syn1: vec![0.0; 2 * 6 * 4],
+            d_neg: vec![0.0; 2 * 6 * 2 * 4],
+            loss: vec![0.0; 2],
+        };
+        scatter(&mut model, &batch, &out);
+        assert_eq!(model.syn0, snapshot.syn0);
+        assert_eq!(model.syn1, snapshot.syn1);
+    }
+
+    #[test]
+    fn scatter_adds_duplicate_rows() {
+        let v = vocab(10);
+        let mut model = EmbeddingModel::init(10, 2, 1);
+        let w5_before = model.syn0_row(5).to_vec();
+        let mut bb = builder(1, 4, 1, &v);
+        // duplicate word in one sentence; B=1 so the batch completes here
+        let batch =
+            bb.push_sentence(&[5, 5, 5]).into_iter().next().unwrap();
+        let out = StepOutputs {
+            d_syn0: vec![1.0; 4 * 2],
+            d_syn1: vec![0.0; 4 * 2],
+            d_neg: vec![0.0; 4 * 1 * 2],
+            loss: vec![0.0; 1],
+        };
+        scatter(&mut model, &batch, &out);
+        // three occurrences, each adding 1.0 -> +3 total
+        for (x, x0) in model.syn0_row(5).iter().zip(&w5_before) {
+            assert!((x - (x0 + 3.0)).abs() < 1e-6);
+        }
+    }
+}

@@ -1,0 +1,105 @@
+//! The window-expansion batcher used by the baseline implementations.
+//!
+//! Wombat and accSGNS expand every context window into explicit
+//! (center, context[], negatives[]) records before transfer (the paper's
+//! Section 4.1 contrasts this with FULL-W2V, which ships only sentence
+//! indices).  Expansion multiplies the per-word batching work by the
+//! window size, which is exactly why their batching rates in Table 1 are
+//! an order of magnitude lower.
+
+use crate::corpus::subsample::Subsampler;
+use crate::sampler::unigram::UnigramTable;
+use crate::sampler::window::context_positions;
+use crate::util::rng::Pcg32;
+
+/// One fully-expanded training window (the baseline batch record).
+#[derive(Debug, Clone)]
+pub struct ExpandedWindow {
+    pub center: u32,
+    pub context: Vec<u32>,
+    pub negatives: Vec<u32>,
+}
+
+/// Expand a sentence into per-window records, replicating context words
+/// (the data-amplification the naive format pays).
+pub fn expand_sentence(
+    sentence: &[u32],
+    wf: usize,
+    n_neg: usize,
+    subsampler: &Subsampler,
+    negatives: &UnigramTable,
+    rng: &mut Pcg32,
+) -> Vec<ExpandedWindow> {
+    let mut kept: Vec<u32> = sentence.to_vec();
+    subsampler.filter(&mut kept, rng);
+    let mut out = Vec::with_capacity(kept.len());
+    for t in 0..kept.len() {
+        let ctx = context_positions(t, wf, kept.len());
+        if ctx.is_empty() {
+            continue;
+        }
+        let mut negs = vec![0u32; n_neg];
+        negatives.fill(rng, kept[t], &mut negs);
+        out.push(ExpandedWindow {
+            center: kept[t],
+            context: ctx.iter().map(|&j| kept[j]).collect(),
+            negatives: negs,
+        });
+    }
+    out
+}
+
+/// Total ids materialized by the expansion (the traffic-amplification
+/// metric Table 1's rate differences come from).
+pub fn expanded_id_count(windows: &[ExpandedWindow]) -> usize {
+    windows
+        .iter()
+        .map(|w| 1 + w.context.len() + w.negatives.len())
+        .sum()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::corpus::vocab::Vocab;
+
+    fn fixtures() -> (Subsampler, UnigramTable) {
+        let v = Vocab::from_counts(
+            (0..30).map(|i| (format!("w{i}"), 10u64)),
+            1,
+        );
+        (Subsampler::new(&v, 0.0), UnigramTable::new(&v, 0.75))
+    }
+
+    #[test]
+    fn expansion_matches_window_geometry() {
+        let (ss, ut) = fixtures();
+        let mut rng = Pcg32::new(1);
+        let sent: Vec<u32> = (0..8).collect();
+        let ws = expand_sentence(&sent, 2, 3, &ss, &ut, &mut rng);
+        assert_eq!(ws.len(), 8);
+        assert_eq!(ws[0].center, 0);
+        assert_eq!(ws[0].context, vec![1, 2]);
+        assert_eq!(ws[4].context, vec![2, 3, 5, 6]);
+        assert!(ws.iter().all(|w| w.negatives.len() == 3));
+        assert!(ws.iter().all(|w| w.negatives.iter().all(|&g| g != w.center)));
+    }
+
+    #[test]
+    fn amplification_factor_is_large() {
+        let (ss, ut) = fixtures();
+        let mut rng = Pcg32::new(2);
+        let sent: Vec<u32> = (0..20).collect();
+        let ws = expand_sentence(&sent, 3, 5, &ss, &ut, &mut rng);
+        let ids = expanded_id_count(&ws);
+        // naive format materializes ~(2Wf + N + 1) ids per word vs 1+N
+        assert!(ids > 8 * sent.len(), "ids={ids}");
+    }
+
+    #[test]
+    fn single_word_no_windows() {
+        let (ss, ut) = fixtures();
+        let mut rng = Pcg32::new(3);
+        assert!(expand_sentence(&[5], 3, 2, &ss, &ut, &mut rng).is_empty());
+    }
+}

@@ -1,0 +1,256 @@
+//! Multi-stream batching pipeline: the thread/channel analogue of the
+//! paper's CPU-threads + CUDA-streams coordination (Section 4.1, Figure 4).
+//!
+//! N batcher threads ("streams") each consume a strided shard of the
+//! epoch's sentences, run subsampling + negative sampling + batch
+//! assembly, and push completed [`IndexBatch`]es into one bounded channel.
+//! The bound provides backpressure: when the trainer (the GPU analogue)
+//! falls behind, batchers block instead of ballooning memory.  Batching
+//! throughput is metered per stream — this is the quantity the paper's
+//! Table 1 reports in Mwords/s.
+
+use super::{BatchBuilder, IndexBatch};
+use crate::config::{PipelineConfig, TrainConfig};
+use crate::corpus::subsample::Subsampler;
+use crate::sampler::unigram::UnigramTable;
+use crate::util::rng::{Pcg32, SplitMix64};
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::mpsc::{sync_channel, Receiver};
+use std::sync::Arc;
+use std::thread::JoinHandle;
+
+/// Shared batching-throughput counters.
+#[derive(Debug, Default)]
+pub struct PipelineStats {
+    /// Real words placed into batches.
+    pub words: AtomicU64,
+    /// Batches emitted.
+    pub batches: AtomicU64,
+    /// Nanoseconds the batcher threads spent busy (excludes channel
+    /// blocking — Table 1 measures pure batching speed).
+    pub busy_nanos: AtomicU64,
+}
+
+impl PipelineStats {
+    /// Pure batching rate in words/sec.
+    pub fn batching_rate(&self) -> f64 {
+        let w = self.words.load(Ordering::Relaxed) as f64;
+        let ns = self.busy_nanos.load(Ordering::Relaxed) as f64;
+        if ns == 0.0 {
+            0.0
+        } else {
+            w / (ns / 1e9)
+        }
+    }
+}
+
+/// A running pipeline: drain `rx`, then `join()`.
+pub struct Pipeline {
+    pub rx: Receiver<IndexBatch>,
+    pub stats: Arc<PipelineStats>,
+    handles: Vec<JoinHandle<()>>,
+}
+
+impl Pipeline {
+    /// Launch batcher streams over an in-memory epoch of sentences.
+    ///
+    /// `epoch_seed` must differ across epochs so subsampling and negative
+    /// draws are re-randomized (word2vec semantics).
+    pub fn launch(
+        sentences: Arc<Vec<Vec<u32>>>,
+        train: &TrainConfig,
+        pipe: &PipelineConfig,
+        subsampler: &Subsampler,
+        negatives: &UnigramTable,
+        epoch_seed: u64,
+    ) -> Pipeline {
+        let streams = pipe.resolved_streams();
+        let depth = pipe.queue_depth.max(1) * streams;
+        let (tx, rx) = sync_channel::<IndexBatch>(depth);
+        let stats = Arc::new(PipelineStats::default());
+        let mut seeder = SplitMix64::new(epoch_seed ^ train.seed);
+        let mut handles = Vec::with_capacity(streams);
+        for stream_id in 0..streams {
+            let tx = tx.clone();
+            let sentences = sentences.clone();
+            let stats = stats.clone();
+            let mut builder = BatchBuilder::new(
+                train,
+                subsampler.clone(),
+                negatives.clone(),
+                Pcg32::with_stream(seeder.next_u64(), stream_id as u64),
+            );
+            handles.push(std::thread::spawn(move || {
+                let mut local_words = 0u64;
+                let mut local_batches = 0u64;
+                let mut busy = 0u64;
+                let send =
+                    |batch: IndexBatch,
+                     words: &mut u64,
+                     batches: &mut u64|
+                     -> bool {
+                        *words += batch.word_count as u64;
+                        *batches += 1;
+                        tx.send(batch).is_ok()
+                    };
+                'outer: for sent in sentences
+                    .iter()
+                    .skip(stream_id)
+                    .step_by(streams)
+                {
+                    let t0 = std::time::Instant::now();
+                    let done = builder.push_sentence(sent);
+                    busy += t0.elapsed().as_nanos() as u64;
+                    for b in done {
+                        if !send(b, &mut local_words, &mut local_batches) {
+                            break 'outer; // receiver hung up
+                        }
+                    }
+                }
+                let t0 = std::time::Instant::now();
+                let last = builder.flush();
+                busy += t0.elapsed().as_nanos() as u64;
+                if let Some(b) = last {
+                    send(b, &mut local_words, &mut local_batches);
+                }
+                stats.words.fetch_add(local_words, Ordering::Relaxed);
+                stats.batches.fetch_add(local_batches, Ordering::Relaxed);
+                stats.busy_nanos.fetch_add(busy, Ordering::Relaxed);
+            }));
+        }
+        drop(tx); // receiver sees EOF once all streams finish
+        Pipeline { rx, stats, handles }
+    }
+
+    /// Join all batcher threads (call after draining `rx`).
+    pub fn join(self) {
+        for h in self.handles {
+            let _ = h.join();
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::corpus::vocab::Vocab;
+
+    fn fixtures(v: usize) -> (Vocab, Subsampler, UnigramTable) {
+        let vocab = Vocab::from_counts(
+            (0..v).map(|i| (format!("w{i}"), 10u64)),
+            1,
+        );
+        let ss = Subsampler::new(&vocab, 0.0);
+        let ut = UnigramTable::new(&vocab, 0.75);
+        (vocab, ss, ut)
+    }
+
+    fn sentences(n: usize, len: usize, vmax: u32) -> Arc<Vec<Vec<u32>>> {
+        Arc::new(
+            (0..n)
+                .map(|i| {
+                    (0..len).map(|j| ((i * 7 + j * 3) as u32) % vmax).collect()
+                })
+                .collect(),
+        )
+    }
+
+    fn cfg(b: usize, streams: usize) -> (TrainConfig, PipelineConfig) {
+        (
+            TrainConfig {
+                batch_sentences: b,
+                sentence_chunk: 16,
+                negatives: 3,
+                subsample: 0.0,
+                ..TrainConfig::default()
+            },
+            PipelineConfig { streams, queue_depth: 2 },
+        )
+    }
+
+    #[test]
+    fn all_words_arrive_exactly_once() {
+        let (vocab, ss, ut) = fixtures(40);
+        let sents = sentences(57, 9, 40);
+        let want: usize = sents.iter().map(|s| s.len()).sum();
+        let (tc, pc) = cfg(4, 3);
+        let p = Pipeline::launch(sents, &tc, &pc, &ss, &ut, 1);
+        let mut got = 0usize;
+        let mut batches = 0usize;
+        for b in p.rx.iter() {
+            b.check(vocab.len()).unwrap();
+            got += b.word_count;
+            batches += 1;
+        }
+        p.join();
+        assert_eq!(got, want);
+        assert!(batches >= 57 / 4);
+    }
+
+    #[test]
+    fn stats_are_accounted() {
+        let (_, ss, ut) = fixtures(40);
+        let sents = sentences(40, 9, 40);
+        let (tc, pc) = cfg(4, 2);
+        let p = Pipeline::launch(sents, &tc, &pc, &ss, &ut, 2);
+        let stats = p.stats.clone();
+        for _ in p.rx.iter() {}
+        p.join();
+        assert_eq!(stats.words.load(Ordering::Relaxed), 40 * 9);
+        assert!(stats.batches.load(Ordering::Relaxed) > 0);
+        assert!(stats.batching_rate() > 0.0);
+    }
+
+    #[test]
+    fn receiver_drop_stops_streams() {
+        let (_, ss, ut) = fixtures(40);
+        let sents = sentences(5000, 9, 40);
+        let (tc, pc) = cfg(1, 2); // queue_depth 2 -> blocks quickly
+        let p = Pipeline::launch(sents, &tc, &pc, &ss, &ut, 3);
+        // take a few batches, then hang up
+        let mut it = p.rx.iter();
+        for _ in 0..3 {
+            it.next().unwrap();
+        }
+        drop(it);
+        drop(p.rx);
+        // streams must exit instead of deadlocking
+        for h in p.handles {
+            h.join().unwrap();
+        }
+    }
+
+    #[test]
+    fn epoch_seed_changes_negatives() {
+        let (_, ss, ut) = fixtures(40);
+        let sents = sentences(8, 9, 40);
+        let (tc, pc) = cfg(2, 1);
+        let collect = |seed: u64| -> Vec<IndexBatch> {
+            let p = Pipeline::launch(
+                sents.clone(),
+                &tc,
+                &pc,
+                &ss,
+                &ut,
+                seed,
+            );
+            let v: Vec<_> = p.rx.iter().collect();
+            p.join();
+            v
+        };
+        let a = collect(1);
+        let b = collect(1);
+        let c = collect(2);
+        assert_eq!(a.len(), b.len());
+        // determinism for equal seeds
+        for (x, y) in a.iter().zip(&b) {
+            assert_eq!(x, y);
+        }
+        // different negatives for different epoch seeds
+        assert!(a.iter().zip(&c).any(|(x, y)| x.negs != y.negs));
+        // but the same words/lens (subsampling off)
+        for (x, y) in a.iter().zip(&c) {
+            assert_eq!(x.words, y.words);
+        }
+    }
+}

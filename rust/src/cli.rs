@@ -1,0 +1,207 @@
+//! Command-line interface (hand-rolled; clap is unavailable offline).
+//!
+//! Subcommands:
+//!   train       train a model on a corpus file or synthetic spec
+//!   eval        evaluate a saved model (similarity vs gold file)
+//!   nn          nearest neighbors of a word in a saved model
+//!   gen-corpus  write a synthetic corpus (+ gold sets) to disk
+//!   gpusim      print the analytical Tables 4/5/6 + projections
+//!   manifest    list AOT executables
+//!
+//! Global flags: -c/--config FILE, -s/--set section.key=value (repeat),
+//! -v/--verbose, -q/--quiet.
+
+use crate::config::Config;
+use crate::util::log::{self, Level};
+use anyhow::{anyhow, bail, Result};
+
+/// Parsed invocation.
+#[derive(Debug, Clone)]
+pub struct Cli {
+    pub command: Command,
+    pub config: Config,
+}
+
+#[derive(Debug, Clone, PartialEq)]
+pub enum Command {
+    Train {
+        corpus: Option<String>,
+        synthetic: Option<String>,
+        out: Option<String>,
+    },
+    Eval {
+        model: String,
+        pairs: String,
+    },
+    Nn {
+        model: String,
+        word: String,
+        k: usize,
+    },
+    GenCorpus {
+        spec: String,
+        out: String,
+    },
+    GpuSim,
+    Manifest,
+    Help,
+    Version,
+}
+
+pub const USAGE: &str = "\
+fullw2v — FULL-W2V reproduction (Rust + JAX + Pallas, AOT via PJRT)
+
+USAGE:
+  fullw2v [FLAGS] <COMMAND> [ARGS]
+
+COMMANDS:
+  train [--corpus FILE | --synthetic tiny|text8|1bw] [--out MODEL]
+  eval --model MODEL.txt --pairs PAIRS.tsv
+  nn --model MODEL.txt --word WORD [--k K]
+  gen-corpus --spec tiny|text8|1bw --out DIR
+  gpusim
+  manifest
+  help | version
+
+FLAGS:
+  -c, --config FILE          TOML config file
+  -s, --set section.key=val  config override (repeatable)
+  -v, --verbose              debug logging
+  -q, --quiet                errors only
+";
+
+/// Parse argv (excluding argv[0]).
+pub fn parse(args: &[String]) -> Result<Cli> {
+    let mut config = Config::new();
+    let mut positional: Vec<String> = Vec::new();
+    let mut opts: Vec<(String, String)> = Vec::new();
+    let mut config_file: Option<String> = None;
+    let mut overrides: Vec<String> = Vec::new();
+
+    let mut i = 0;
+    while i < args.len() {
+        let a = &args[i];
+        let take_value = |i: &mut usize| -> Result<String> {
+            *i += 1;
+            args.get(*i)
+                .cloned()
+                .ok_or_else(|| anyhow!("flag {a} needs a value"))
+        };
+        match a.as_str() {
+            "-c" | "--config" => config_file = Some(take_value(&mut i)?),
+            "-s" | "--set" => overrides.push(take_value(&mut i)?),
+            "-v" | "--verbose" => log::set_level(Level::Debug),
+            "-q" | "--quiet" => log::set_level(Level::Error),
+            "--corpus" | "--synthetic" | "--out" | "--model" | "--pairs"
+            | "--word" | "--k" | "--spec" => {
+                let key = a.trim_start_matches('-').to_string();
+                opts.push((key, take_value(&mut i)?));
+            }
+            _ if a.starts_with('-') => bail!("unknown flag '{a}'\n{USAGE}"),
+            _ => positional.push(a.clone()),
+        }
+        i += 1;
+    }
+
+    if let Some(path) = config_file {
+        config = Config::from_file(std::path::Path::new(&path))
+            .map_err(anyhow::Error::msg)?;
+    }
+    for ov in &overrides {
+        config.apply_override(ov).map_err(anyhow::Error::msg)?;
+    }
+
+    let get = |key: &str| -> Option<String> {
+        opts.iter().find(|(k, _)| k == key).map(|(_, v)| v.clone())
+    };
+    let cmd = positional.first().map(String::as_str).unwrap_or("help");
+    let command = match cmd {
+        "train" => Command::Train {
+            corpus: get("corpus"),
+            synthetic: get("synthetic"),
+            out: get("out"),
+        },
+        "eval" => Command::Eval {
+            model: get("model").ok_or_else(|| anyhow!("eval needs --model"))?,
+            pairs: get("pairs").ok_or_else(|| anyhow!("eval needs --pairs"))?,
+        },
+        "nn" => Command::Nn {
+            model: get("model").ok_or_else(|| anyhow!("nn needs --model"))?,
+            word: get("word").ok_or_else(|| anyhow!("nn needs --word"))?,
+            k: get("k").and_then(|v| v.parse().ok()).unwrap_or(10),
+        },
+        "gen-corpus" => Command::GenCorpus {
+            spec: get("spec").unwrap_or_else(|| "tiny".into()),
+            out: get("out")
+                .ok_or_else(|| anyhow!("gen-corpus needs --out"))?,
+        },
+        "gpusim" => Command::GpuSim,
+        "manifest" => Command::Manifest,
+        "version" | "--version" => Command::Version,
+        "help" | "--help" => Command::Help,
+        other => bail!("unknown command '{other}'\n{USAGE}"),
+    };
+    Ok(Cli { command, config })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn p(args: &[&str]) -> Result<Cli> {
+        parse(&args.iter().map(|s| s.to_string()).collect::<Vec<_>>())
+    }
+
+    #[test]
+    fn train_with_overrides() {
+        let cli = p(&[
+            "train",
+            "--synthetic",
+            "tiny",
+            "-s",
+            "train.dim=64",
+            "-s",
+            "train.variant=wombat",
+        ])
+        .unwrap();
+        assert_eq!(cli.config.train.dim, 64);
+        assert_eq!(cli.config.train.variant, "wombat");
+        match cli.command {
+            Command::Train { synthetic, corpus, .. } => {
+                assert_eq!(synthetic.as_deref(), Some("tiny"));
+                assert!(corpus.is_none());
+            }
+            _ => panic!("wrong command"),
+        }
+    }
+
+    #[test]
+    fn nn_defaults_k() {
+        let cli = p(&["nn", "--model", "m.txt", "--word", "cat"]).unwrap();
+        match cli.command {
+            Command::Nn { k, word, .. } => {
+                assert_eq!(k, 10);
+                assert_eq!(word, "cat");
+            }
+            _ => panic!(),
+        }
+    }
+
+    #[test]
+    fn missing_required_flag_errors() {
+        assert!(p(&["eval", "--model", "m"]).is_err());
+        assert!(p(&["nn", "--word", "w"]).is_err());
+    }
+
+    #[test]
+    fn unknown_flag_and_command_error() {
+        assert!(p(&["train", "--bogus", "x"]).is_err());
+        assert!(p(&["frobnicate"]).is_err());
+    }
+
+    #[test]
+    fn no_args_is_help() {
+        let cli = p(&[]).unwrap();
+        assert_eq!(cli.command, Command::Help);
+    }
+}

@@ -1,0 +1,371 @@
+//! Configuration system: typed configs + a TOML-subset file format + CLI
+//! overrides.
+//!
+//! The file format supports what real deployment configs need — sections,
+//! strings, ints, floats, bools, comments — a strict subset of TOML:
+//!
+//! ```toml
+//! # fullw2v.toml
+//! [train]
+//! variant = "full_w2v"
+//! dim = 128
+//! window = 5
+//! negatives = 5
+//! epochs = 20
+//! lr = 0.025
+//!
+//! [pipeline]
+//! streams = 4
+//! queue_depth = 8
+//! ```
+
+mod toml;
+
+pub use toml::{parse_toml, TomlError, TomlValue};
+
+use std::collections::BTreeMap;
+use std::path::Path;
+
+/// Word2Vec training hyperparameters (paper defaults, Section 5.1).
+#[derive(Debug, Clone, PartialEq)]
+pub struct TrainConfig {
+    /// Kernel variant: full_w2v | full_register | acc_sgns | wombat.
+    pub variant: String,
+    /// Embedding dimension d.
+    pub dim: usize,
+    /// Mikolov window hyperparameter W; the fixed width is `ceil(W/2)`.
+    pub window: usize,
+    /// Negative samples per context window N.
+    pub negatives: usize,
+    /// Training epochs.
+    pub epochs: usize,
+    /// Initial learning rate (linearly decayed to `min_lr_ratio * lr`).
+    pub lr: f32,
+    /// Floor for the linear lr decay, as a fraction of `lr`.
+    pub min_lr_ratio: f32,
+    /// Discard words with fewer than this many corpus occurrences.
+    pub min_count: usize,
+    /// Subsampling threshold t (0 disables), word2vec's `-sample`.
+    pub subsample: f64,
+    /// Sentences per GPU batch (the AOT executable's B).
+    pub batch_sentences: usize,
+    /// Max words per sentence chunk (the AOT executable's S).
+    pub sentence_chunk: usize,
+    /// Hard cap on corpus sentence length (paper: 1000).
+    pub max_sentence_len: usize,
+    /// Ignore sentence delimiters, packing words into fixed-length
+    /// pseudo-sentences (paper Section 4.1 does this for GPU utilization).
+    pub ignore_delimiters: bool,
+    /// RNG seed.
+    pub seed: u64,
+}
+
+impl Default for TrainConfig {
+    fn default() -> Self {
+        TrainConfig {
+            variant: "full_w2v".into(),
+            dim: 128,
+            window: 5,
+            negatives: 5,
+            epochs: 5,
+            lr: 0.025,
+            min_lr_ratio: 1e-4,
+            min_count: 5,
+            subsample: 1e-3,
+            batch_sentences: 64,
+            sentence_chunk: 32,
+            max_sentence_len: 1000,
+            ignore_delimiters: false,
+            seed: 1,
+        }
+    }
+}
+
+impl TrainConfig {
+    /// Fixed context width W_f = ceil(W/2) (paper Section 3.2).
+    pub fn fixed_width(&self) -> usize {
+        self.window.div_ceil(2)
+    }
+
+    /// Validate invariants; returns a descriptive error string.
+    pub fn validate(&self) -> Result<(), String> {
+        if self.dim == 0 {
+            return Err("dim must be > 0".into());
+        }
+        if self.window == 0 {
+            return Err("window must be > 0".into());
+        }
+        if self.sentence_chunk < 2 * self.fixed_width() + 1 {
+            return Err(format!(
+                "sentence_chunk={} must be >= 2*W_f+1={}",
+                self.sentence_chunk,
+                2 * self.fixed_width() + 1
+            ));
+        }
+        if self.batch_sentences == 0 {
+            return Err("batch_sentences must be > 0".into());
+        }
+        if !(self.lr > 0.0) {
+            return Err("lr must be > 0".into());
+        }
+        if self.subsample < 0.0 {
+            return Err("subsample must be >= 0".into());
+        }
+        Ok(())
+    }
+
+    /// The AOT executable name this config requires.
+    pub fn executable_name(&self) -> String {
+        format!(
+            "{}_b{}_s{}_d{}_n{}_w{}",
+            self.variant,
+            self.batch_sentences,
+            self.sentence_chunk,
+            self.dim,
+            self.negatives,
+            self.fixed_width()
+        )
+    }
+
+    fn apply_kv(&mut self, key: &str, v: &TomlValue) -> Result<(), String> {
+        match key {
+            "variant" => self.variant = v.as_str_or(key)?,
+            "dim" => self.dim = v.as_usize_or(key)?,
+            "window" => self.window = v.as_usize_or(key)?,
+            "negatives" => self.negatives = v.as_usize_or(key)?,
+            "epochs" => self.epochs = v.as_usize_or(key)?,
+            "lr" => self.lr = v.as_f64_or(key)? as f32,
+            "min_lr_ratio" => self.min_lr_ratio = v.as_f64_or(key)? as f32,
+            "min_count" => self.min_count = v.as_usize_or(key)?,
+            "subsample" => self.subsample = v.as_f64_or(key)?,
+            "batch_sentences" => self.batch_sentences = v.as_usize_or(key)?,
+            "sentence_chunk" => self.sentence_chunk = v.as_usize_or(key)?,
+            "max_sentence_len" => {
+                self.max_sentence_len = v.as_usize_or(key)?
+            }
+            "ignore_delimiters" => {
+                self.ignore_delimiters = v.as_bool_or(key)?
+            }
+            "seed" => self.seed = v.as_usize_or(key)? as u64,
+            _ => return Err(format!("unknown [train] key '{key}'")),
+        }
+        Ok(())
+    }
+}
+
+/// Batching-pipeline configuration (the paper's CPU-thread / CUDA-stream
+/// coordination layer, Section 4.1).
+#[derive(Debug, Clone, PartialEq)]
+pub struct PipelineConfig {
+    /// Number of batcher threads ("streams"). 0 = one per available core.
+    pub streams: usize,
+    /// Bounded queue depth per stream (backpressure).
+    pub queue_depth: usize,
+}
+
+impl Default for PipelineConfig {
+    fn default() -> Self {
+        PipelineConfig { streams: 0, queue_depth: 4 }
+    }
+}
+
+impl PipelineConfig {
+    pub fn resolved_streams(&self) -> usize {
+        if self.streams > 0 {
+            self.streams
+        } else {
+            std::thread::available_parallelism()
+                .map(|n| n.get())
+                .unwrap_or(1)
+        }
+    }
+
+    fn apply_kv(&mut self, key: &str, v: &TomlValue) -> Result<(), String> {
+        match key {
+            "streams" => self.streams = v.as_usize_or(key)?,
+            "queue_depth" => self.queue_depth = v.as_usize_or(key)?,
+            _ => return Err(format!("unknown [pipeline] key '{key}'")),
+        }
+        Ok(())
+    }
+}
+
+/// Full application config: train + pipeline + paths.
+#[derive(Debug, Clone, Default, PartialEq)]
+pub struct Config {
+    pub train: TrainConfig,
+    pub pipeline: PipelineConfig,
+    /// Directory holding AOT artifacts + manifest.json.
+    pub artifacts_dir: String,
+}
+
+impl Config {
+    pub fn new() -> Self {
+        Config {
+            train: TrainConfig::default(),
+            pipeline: PipelineConfig::default(),
+            artifacts_dir: "artifacts".into(),
+        }
+    }
+
+    /// Load from a TOML-subset file.
+    pub fn from_file(path: &Path) -> Result<Self, String> {
+        let text = std::fs::read_to_string(path)
+            .map_err(|e| format!("read {}: {e}", path.display()))?;
+        Self::from_toml_str(&text)
+    }
+
+    pub fn from_toml_str(text: &str) -> Result<Self, String> {
+        let doc = parse_toml(text).map_err(|e| e.to_string())?;
+        let mut cfg = Config::new();
+        cfg.apply_sections(&doc)?;
+        cfg.train.validate()?;
+        Ok(cfg)
+    }
+
+    fn apply_sections(
+        &mut self,
+        doc: &BTreeMap<String, BTreeMap<String, TomlValue>>,
+    ) -> Result<(), String> {
+        for (section, kvs) in doc {
+            for (k, v) in kvs {
+                match section.as_str() {
+                    "train" => self.train.apply_kv(k, v)?,
+                    "pipeline" => self.pipeline.apply_kv(k, v)?,
+                    "paths" => match k.as_str() {
+                        "artifacts_dir" => {
+                            self.artifacts_dir = v.as_str_or(k)?
+                        }
+                        _ => {
+                            return Err(format!("unknown [paths] key '{k}'"))
+                        }
+                    },
+                    "" => return Err(format!("top-level key '{k}' not allowed; use a section")),
+                    _ => return Err(format!("unknown section [{section}]")),
+                }
+            }
+        }
+        Ok(())
+    }
+
+    /// Apply a `section.key=value` CLI override.
+    pub fn apply_override(&mut self, spec: &str) -> Result<(), String> {
+        let (path, raw) = spec
+            .split_once('=')
+            .ok_or_else(|| format!("override '{spec}' must be key=value"))?;
+        let (section, key) = path
+            .split_once('.')
+            .ok_or_else(|| format!("override key '{path}' must be section.key"))?;
+        let v = toml::parse_value(raw.trim())
+            .map_err(|e| format!("override '{spec}': {e}"))?;
+        match section {
+            "train" => self.train.apply_kv(key.trim(), &v),
+            "pipeline" => self.pipeline.apply_kv(key.trim(), &v),
+            "paths" if key.trim() == "artifacts_dir" => {
+                self.artifacts_dir = v.as_str_or(key)?;
+                Ok(())
+            }
+            _ => Err(format!("unknown override section '{section}'")),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn defaults_are_paper_defaults() {
+        let c = TrainConfig::default();
+        assert_eq!(c.dim, 128);
+        assert_eq!(c.window, 5);
+        assert_eq!(c.negatives, 5);
+        assert_eq!(c.fixed_width(), 3); // ceil(5/2)
+        assert_eq!(c.min_count, 5);
+        assert!(c.validate().is_ok());
+        assert_eq!(c.executable_name(), "full_w2v_b64_s32_d128_n5_w3");
+    }
+
+    #[test]
+    fn fixed_width_rounding() {
+        let mut c = TrainConfig::default();
+        for (w, wf) in [(1, 1), (2, 1), (3, 2), (4, 2), (5, 3), (10, 5)] {
+            c.window = w;
+            assert_eq!(c.fixed_width(), wf, "W={w}");
+        }
+    }
+
+    #[test]
+    fn parse_full_file() {
+        let cfg = Config::from_toml_str(
+            r#"
+            # comment
+            [train]
+            variant = "wombat"
+            dim = 64
+            window = 4
+            lr = 0.05
+            ignore_delimiters = true
+
+            [pipeline]
+            streams = 2
+            queue_depth = 16
+
+            [paths]
+            artifacts_dir = "my_artifacts"
+            "#,
+        )
+        .unwrap();
+        assert_eq!(cfg.train.variant, "wombat");
+        assert_eq!(cfg.train.dim, 64);
+        assert_eq!(cfg.train.fixed_width(), 2);
+        assert!((cfg.train.lr - 0.05).abs() < 1e-9);
+        assert!(cfg.train.ignore_delimiters);
+        assert_eq!(cfg.pipeline.streams, 2);
+        assert_eq!(cfg.pipeline.queue_depth, 16);
+        assert_eq!(cfg.artifacts_dir, "my_artifacts");
+    }
+
+    #[test]
+    fn rejects_unknown_keys() {
+        assert!(Config::from_toml_str("[train]\nbogus = 1").is_err());
+        assert!(Config::from_toml_str("[nope]\nx = 1").is_err());
+    }
+
+    #[test]
+    fn rejects_invalid_hyperparams() {
+        assert!(Config::from_toml_str("[train]\ndim = 0").is_err());
+        assert!(
+            Config::from_toml_str("[train]\nsentence_chunk = 3").is_err()
+        );
+    }
+
+    #[test]
+    fn cli_overrides() {
+        let mut cfg = Config::new();
+        cfg.apply_override("train.dim=256").unwrap();
+        cfg.apply_override("train.variant=\"acc_sgns\"").unwrap();
+        cfg.apply_override("pipeline.streams=8").unwrap();
+        assert_eq!(cfg.train.dim, 256);
+        assert_eq!(cfg.train.variant, "acc_sgns");
+        assert_eq!(cfg.pipeline.streams, 8);
+        assert!(cfg.apply_override("train.nope=1").is_err());
+        assert!(cfg.apply_override("no-equals").is_err());
+    }
+
+    #[test]
+    fn bare_string_override() {
+        // unquoted strings are accepted in overrides for ergonomics
+        let mut cfg = Config::new();
+        cfg.apply_override("train.variant=wombat").unwrap();
+        assert_eq!(cfg.train.variant, "wombat");
+    }
+
+    #[test]
+    fn resolved_streams_nonzero() {
+        let p = PipelineConfig { streams: 0, queue_depth: 1 };
+        assert!(p.resolved_streams() >= 1);
+        let p = PipelineConfig { streams: 3, queue_depth: 1 };
+        assert_eq!(p.resolved_streams(), 3);
+    }
+}

@@ -1,0 +1,203 @@
+//! TOML-subset parser: `[section]` headers and `key = value` lines where
+//! value is a quoted string, integer, float, or boolean.  Comments (`#`)
+//! and blank lines are skipped.  This covers what deployment configs use
+//! without pulling in a full TOML dependency (unavailable offline).
+
+use std::collections::BTreeMap;
+use std::fmt;
+
+/// A parsed TOML scalar.
+#[derive(Debug, Clone, PartialEq)]
+pub enum TomlValue {
+    Str(String),
+    Int(i64),
+    Float(f64),
+    Bool(bool),
+}
+
+impl TomlValue {
+    pub fn as_str_or(&self, key: &str) -> Result<String, String> {
+        match self {
+            TomlValue::Str(s) => Ok(s.clone()),
+            other => Err(format!("key '{key}' expects a string, got {other:?}")),
+        }
+    }
+
+    pub fn as_usize_or(&self, key: &str) -> Result<usize, String> {
+        match self {
+            TomlValue::Int(i) if *i >= 0 => Ok(*i as usize),
+            other => Err(format!(
+                "key '{key}' expects a non-negative integer, got {other:?}"
+            )),
+        }
+    }
+
+    pub fn as_f64_or(&self, key: &str) -> Result<f64, String> {
+        match self {
+            TomlValue::Float(f) => Ok(*f),
+            TomlValue::Int(i) => Ok(*i as f64),
+            other => Err(format!("key '{key}' expects a number, got {other:?}")),
+        }
+    }
+
+    pub fn as_bool_or(&self, key: &str) -> Result<bool, String> {
+        match self {
+            TomlValue::Bool(b) => Ok(*b),
+            other => Err(format!("key '{key}' expects a bool, got {other:?}")),
+        }
+    }
+}
+
+/// Parse error with line number.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct TomlError {
+    pub line: usize,
+    pub msg: String,
+}
+
+impl fmt::Display for TomlError {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(f, "toml parse error on line {}: {}", self.line, self.msg)
+    }
+}
+
+impl std::error::Error for TomlError {}
+
+/// Parse a single scalar value (also used for CLI overrides).
+/// Unquoted text that is not an int/float/bool parses as a bare string.
+pub fn parse_value(raw: &str) -> Result<TomlValue, String> {
+    let raw = raw.trim();
+    if raw.is_empty() {
+        return Err("empty value".into());
+    }
+    if let Some(stripped) = raw.strip_prefix('"') {
+        let inner = stripped
+            .strip_suffix('"')
+            .ok_or_else(|| format!("unterminated string: {raw}"))?;
+        if inner.contains('"') {
+            return Err(format!("embedded quote in string: {raw}"));
+        }
+        return Ok(TomlValue::Str(inner.to_string()));
+    }
+    match raw {
+        "true" => return Ok(TomlValue::Bool(true)),
+        "false" => return Ok(TomlValue::Bool(false)),
+        _ => {}
+    }
+    if let Ok(i) = raw.parse::<i64>() {
+        return Ok(TomlValue::Int(i));
+    }
+    if let Ok(f) = raw.parse::<f64>() {
+        return Ok(TomlValue::Float(f));
+    }
+    // bare string (ergonomic for CLI overrides like train.variant=wombat)
+    if raw.chars().all(|c| c.is_alphanumeric() || "_-./".contains(c)) {
+        return Ok(TomlValue::Str(raw.to_string()));
+    }
+    Err(format!("cannot parse value: {raw}"))
+}
+
+/// Parse a TOML-subset document into section -> key -> value.
+/// Keys before any section header land in the "" section.
+pub fn parse_toml(
+    text: &str,
+) -> Result<BTreeMap<String, BTreeMap<String, TomlValue>>, TomlError> {
+    let mut doc: BTreeMap<String, BTreeMap<String, TomlValue>> =
+        BTreeMap::new();
+    let mut section = String::new();
+    for (lineno, raw_line) in text.lines().enumerate() {
+        let line = strip_comment(raw_line).trim().to_string();
+        if line.is_empty() {
+            continue;
+        }
+        let err = |msg: String| TomlError { line: lineno + 1, msg };
+        if let Some(inner) = line.strip_prefix('[') {
+            let name = inner
+                .strip_suffix(']')
+                .ok_or_else(|| err("unterminated section header".into()))?
+                .trim();
+            if name.is_empty() {
+                return Err(err("empty section name".into()));
+            }
+            section = name.to_string();
+            doc.entry(section.clone()).or_default();
+            continue;
+        }
+        let (key, value) = line
+            .split_once('=')
+            .ok_or_else(|| err(format!("expected key = value, got '{line}'")))?;
+        let key = key.trim();
+        if key.is_empty() {
+            return Err(err("empty key".into()));
+        }
+        let v = parse_value(value).map_err(|m| err(m))?;
+        let dup = doc
+            .entry(section.clone())
+            .or_default()
+            .insert(key.to_string(), v);
+        if dup.is_some() {
+            return Err(err(format!("duplicate key '{key}'")));
+        }
+    }
+    Ok(doc)
+}
+
+/// Strip a `#` comment, respecting quoted strings.
+fn strip_comment(line: &str) -> &str {
+    let mut in_str = false;
+    for (i, c) in line.char_indices() {
+        match c {
+            '"' => in_str = !in_str,
+            '#' if !in_str => return &line[..i],
+            _ => {}
+        }
+    }
+    line
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn scalar_kinds() {
+        assert_eq!(parse_value("42").unwrap(), TomlValue::Int(42));
+        assert_eq!(parse_value("-7").unwrap(), TomlValue::Int(-7));
+        assert_eq!(parse_value("2.5e-3").unwrap(), TomlValue::Float(0.0025));
+        assert_eq!(parse_value("true").unwrap(), TomlValue::Bool(true));
+        assert_eq!(
+            parse_value("\"hi\"").unwrap(),
+            TomlValue::Str("hi".into())
+        );
+        assert_eq!(
+            parse_value("bare_word").unwrap(),
+            TomlValue::Str("bare_word".into())
+        );
+        assert!(parse_value("\"unterminated").is_err());
+        assert!(parse_value("").is_err());
+    }
+
+    #[test]
+    fn sections_and_comments() {
+        let doc = parse_toml(
+            "# leading comment\n[a]\nx = 1 # trailing\ny = \"q#q\"\n\n[b]\nz = true\n",
+        )
+        .unwrap();
+        assert_eq!(doc["a"]["x"], TomlValue::Int(1));
+        assert_eq!(doc["a"]["y"], TomlValue::Str("q#q".into()));
+        assert_eq!(doc["b"]["z"], TomlValue::Bool(true));
+    }
+
+    #[test]
+    fn errors_carry_line_numbers() {
+        let e = parse_toml("[a]\ngood = 1\nbad line\n").unwrap_err();
+        assert_eq!(e.line, 3);
+        let e = parse_toml("[unterminated\n").unwrap_err();
+        assert_eq!(e.line, 1);
+    }
+
+    #[test]
+    fn duplicate_keys_rejected() {
+        assert!(parse_toml("[a]\nx = 1\nx = 2\n").is_err());
+    }
+}

@@ -1,0 +1,83 @@
+//! word2vec.c's linear learning-rate decay:
+//! `alpha = alpha0 * max(1 - processed/(total+1), floor)`.
+
+/// Linear LR schedule over a planned total word count.
+#[derive(Debug, Clone)]
+pub struct LrSchedule {
+    lr0: f32,
+    floor_ratio: f32,
+    total: u64,
+    processed: u64,
+}
+
+impl LrSchedule {
+    pub fn new(lr0: f32, floor_ratio: f32, total_words: u64) -> Self {
+        LrSchedule {
+            lr0,
+            floor_ratio,
+            total: total_words,
+            processed: 0,
+        }
+    }
+
+    pub fn current(&self) -> f32 {
+        let frac = if self.total == 0 {
+            0.0
+        } else {
+            self.processed as f64 / (self.total + 1) as f64
+        };
+        let scale = (1.0 - frac).max(self.floor_ratio as f64);
+        (self.lr0 as f64 * scale) as f32
+    }
+
+    /// Record progress; returns the new lr.
+    pub fn advance(&mut self, words: u64) -> f32 {
+        self.processed = self.processed.saturating_add(words);
+        self.current()
+    }
+
+    pub fn processed(&self) -> u64 {
+        self.processed
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn starts_at_lr0_and_decays_linearly() {
+        let mut s = LrSchedule::new(0.025, 1e-4, 1000);
+        assert!((s.current() - 0.025).abs() < 1e-9);
+        s.advance(500);
+        let mid = s.current();
+        assert!((mid - 0.025 * (1.0 - 500.0 / 1001.0) as f32).abs() < 1e-6);
+        assert!(mid < 0.025 && mid > 0.012);
+    }
+
+    #[test]
+    fn floors_at_ratio() {
+        let mut s = LrSchedule::new(0.025, 1e-2, 100);
+        s.advance(10_000); // way past the end
+        assert!((s.current() - 0.025 * 1e-2).abs() < 1e-9);
+    }
+
+    #[test]
+    fn zero_total_stays_at_lr0() {
+        let mut s = LrSchedule::new(0.05, 1e-4, 0);
+        assert_eq!(s.current(), 0.05);
+        s.advance(100);
+        assert_eq!(s.current(), 0.05);
+    }
+
+    #[test]
+    fn monotone_nonincreasing() {
+        let mut s = LrSchedule::new(0.025, 1e-4, 10_000);
+        let mut prev = s.current();
+        for _ in 0..100 {
+            let next = s.advance(150);
+            assert!(next <= prev + 1e-12);
+            prev = next;
+        }
+    }
+}

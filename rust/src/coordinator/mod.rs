@@ -1,0 +1,191 @@
+//! The L3 training coordinator: drives epochs end-to-end.
+//!
+//! Per epoch (Figure 4 of the paper): the multi-stream pipeline batches
+//! sentences on CPU threads; the coordinator drains the bounded channel,
+//! gathers embedding rows, executes the AOT-compiled training step on the
+//! PJRT runtime, and scatter-adds the returned deltas (Hogwild-style).
+//! The learning rate decays linearly over total planned words, exactly as
+//! word2vec.c does.
+
+pub mod lr;
+
+use crate::batcher::pipeline::{Pipeline, PipelineStats};
+use crate::batcher::{gather, scatter, IndexBatch};
+use crate::config::Config;
+use crate::corpus::subsample::Subsampler;
+use crate::corpus::vocab::Vocab;
+use crate::metrics::{EpochReport, TrainReport};
+use crate::model::EmbeddingModel;
+use crate::runtime::{Engine, StepInputs};
+use crate::sampler::unigram::UnigramTable;
+use anyhow::{Context, Result};
+use lr::LrSchedule;
+use std::sync::Arc;
+
+/// Common interface over the PJRT coordinator and the CPU baselines, so
+/// benches and examples can run every implementation uniformly.
+pub trait SgnsTrainer {
+    fn name(&self) -> String;
+    /// Train one epoch over the sentences; `epoch` indexes the schedule.
+    fn train_epoch(
+        &mut self,
+        sentences: &Arc<Vec<Vec<u32>>>,
+        epoch: usize,
+    ) -> Result<EpochReport>;
+    fn model(&self) -> &EmbeddingModel;
+    fn model_mut(&mut self) -> &mut EmbeddingModel;
+}
+
+/// Run a full training job with any trainer.
+pub fn train_all(
+    trainer: &mut dyn SgnsTrainer,
+    sentences: &Arc<Vec<Vec<u32>>>,
+    epochs: usize,
+) -> Result<TrainReport> {
+    let mut report = TrainReport {
+        implementation: trainer.name(),
+        epochs: Vec::with_capacity(epochs),
+    };
+    for e in 0..epochs {
+        let rep = trainer.train_epoch(sentences, e)?;
+        crate::log_debug!(
+            "epoch {e}: {:.0} w/s loss/word {:.4}",
+            rep.words_per_sec,
+            rep.loss_per_word
+        );
+        report.epochs.push(rep);
+    }
+    Ok(report)
+}
+
+/// The PJRT-backed coordinator (the paper's FULL-W2V system proper).
+pub struct Coordinator {
+    pub cfg: Config,
+    engine: Engine,
+    step: Arc<crate::runtime::TrainStep>,
+    model: EmbeddingModel,
+    subsampler: Subsampler,
+    negatives: UnigramTable,
+    schedule: LrSchedule,
+    /// Reused input buffers (no allocation on the hot path).
+    inputs: StepInputs,
+    /// Hot-path phase breakdown (seconds), for the §Perf profile.
+    pub phase: PhaseStats,
+}
+
+/// Cumulative per-phase timings of the training hot path.
+#[derive(Debug, Clone, Default)]
+pub struct PhaseStats {
+    pub gather_secs: f64,
+    pub execute_secs: f64,
+    pub scatter_secs: f64,
+}
+
+impl Coordinator {
+    /// Build a coordinator: loads + compiles the AOT executable the config
+    /// names, initializes the model.
+    pub fn new(cfg: Config, vocab: &Vocab, total_words_hint: u64) -> Result<Self> {
+        cfg.train.validate().map_err(anyhow::Error::msg)?;
+        let mut engine = Engine::new(std::path::Path::new(&cfg.artifacts_dir))
+            .context("creating PJRT engine")?;
+        let exe_name = cfg.train.executable_name();
+        let step = engine
+            .load(&exe_name)
+            .with_context(|| format!("loading executable '{exe_name}'"))?;
+        let model =
+            EmbeddingModel::init(vocab.len(), cfg.train.dim, cfg.train.seed);
+        let subsampler = Subsampler::new(vocab, cfg.train.subsample);
+        let negatives = UnigramTable::new(vocab, UnigramTable::DEFAULT_ALPHA);
+        let schedule = LrSchedule::new(
+            cfg.train.lr,
+            cfg.train.min_lr_ratio,
+            total_words_hint * cfg.train.epochs as u64,
+        );
+        let inputs = StepInputs::zeroed(&step.spec);
+        Ok(Coordinator {
+            cfg,
+            engine,
+            step,
+            model,
+            subsampler,
+            negatives,
+            schedule,
+            inputs,
+            phase: PhaseStats::default(),
+        })
+    }
+
+    pub fn engine(&self) -> &Engine {
+        &self.engine
+    }
+
+    /// Process one batch: gather -> execute -> scatter.  Returns summed loss.
+    fn process_batch(&mut self, batch: &IndexBatch, lr: f32) -> Result<f64> {
+        let t0 = std::time::Instant::now();
+        gather(&self.model, batch, &mut self.inputs);
+        self.inputs.lr = lr;
+        let t1 = std::time::Instant::now();
+        let out = self.engine.run(&self.step, &self.inputs)?;
+        let t2 = std::time::Instant::now();
+        scatter(&mut self.model, batch, &out);
+        let t3 = std::time::Instant::now();
+        self.phase.gather_secs += (t1 - t0).as_secs_f64();
+        self.phase.execute_secs += (t2 - t1).as_secs_f64();
+        self.phase.scatter_secs += (t3 - t2).as_secs_f64();
+        Ok(out.loss.iter().map(|&x| x as f64).sum())
+    }
+}
+
+impl SgnsTrainer for Coordinator {
+    fn name(&self) -> String {
+        format!("{} (pjrt)", self.cfg.train.variant)
+    }
+
+    fn train_epoch(
+        &mut self,
+        sentences: &Arc<Vec<Vec<u32>>>,
+        epoch: usize,
+    ) -> Result<EpochReport> {
+        let t0 = std::time::Instant::now();
+        let pipeline = Pipeline::launch(
+            sentences.clone(),
+            &self.cfg.train,
+            &self.cfg.pipeline,
+            &self.subsampler,
+            &self.negatives,
+            epoch as u64 + 1,
+        );
+        let stats: Arc<PipelineStats> = pipeline.stats.clone();
+        let mut rep = EpochReport { epoch, ..Default::default() };
+        let mut lr = self.schedule.current();
+        // Drain the stream channel; the bounded queue applies backpressure
+        // to the batcher threads while we're inside the PJRT call.
+        for batch in pipeline.rx.iter() {
+            rep.loss_sum += self.process_batch(&batch, lr)?;
+            rep.words += batch.word_count as u64;
+            rep.batches += 1;
+            lr = self.schedule.advance(batch.word_count as u64);
+        }
+        pipeline.join();
+        rep.lr_end = lr;
+        rep.seconds = t0.elapsed().as_secs_f64();
+        rep.batching_rate = stats.batching_rate();
+        rep.finalize();
+        Ok(rep)
+    }
+
+    fn model(&self) -> &EmbeddingModel {
+        &self.model
+    }
+
+    fn model_mut(&mut self) -> &mut EmbeddingModel {
+        &mut self.model
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    //! Coordinator integration tests (need artifacts) live in
+    //! `rust/tests/train_integration.rs`; the lr schedule has its own
+    //! unit tests in `lr.rs`.
+}

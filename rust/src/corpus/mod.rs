@@ -1,0 +1,31 @@
+//! Corpus handling: vocabulary construction, streaming tokenization,
+//! frequency-based subsampling, and the synthetic corpus generator that
+//! substitutes for Text8 / One Billion Words (DESIGN.md Section 4).
+
+pub mod reader;
+pub mod subsample;
+pub mod synthetic;
+pub mod vocab;
+
+pub use reader::{CorpusReader, ReaderOptions};
+pub use subsample::Subsampler;
+pub use synthetic::{SyntheticCorpus, SyntheticSpec};
+pub use vocab::Vocab;
+
+/// Summary statistics matching the paper's Table 3 columns.
+#[derive(Debug, Clone, PartialEq)]
+pub struct CorpusStats {
+    pub vocabulary: usize,
+    pub words_per_epoch: u64,
+    pub sentences: u64,
+}
+
+impl CorpusStats {
+    pub fn compute(vocab: &Vocab, sentences: &[Vec<u32>]) -> Self {
+        CorpusStats {
+            vocabulary: vocab.len(),
+            words_per_epoch: sentences.iter().map(|s| s.len() as u64).sum(),
+            sentences: sentences.len() as u64,
+        }
+    }
+}

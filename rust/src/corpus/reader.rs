@@ -1,0 +1,215 @@
+//! Streaming corpus reader: tokenizes text into sentences of word ids.
+//!
+//! Handles the paper's corpus-treatment details (Sections 4.1, 5.1):
+//! sentence length capping (1000 words), optional *delimiter ignoring*
+//! (FULL-W2V packs words into fixed-size pseudo-sentences to raise
+//! per-batch work), and OOV dropping against a fixed vocabulary.
+
+use super::vocab::Vocab;
+use std::io::{BufRead, BufReader, Read};
+
+/// Reader behaviour knobs.
+#[derive(Debug, Clone)]
+pub struct ReaderOptions {
+    /// Hard cap on sentence length; longer sentences are split.
+    pub max_sentence_len: usize,
+    /// If true, newline boundaries are ignored and words are packed into
+    /// `pack_len`-word pseudo-sentences (paper Section 4.1).
+    pub ignore_delimiters: bool,
+    /// Pseudo-sentence length used when `ignore_delimiters` is set.
+    pub pack_len: usize,
+}
+
+impl Default for ReaderOptions {
+    fn default() -> Self {
+        ReaderOptions {
+            max_sentence_len: 1000,
+            ignore_delimiters: false,
+            pack_len: 1000,
+        }
+    }
+}
+
+/// Tokenize a line on ASCII whitespace, lowercasing (text8 convention).
+pub fn tokenize(line: &str) -> impl Iterator<Item = String> + '_ {
+    line.split_whitespace().map(|w| w.to_lowercase())
+}
+
+/// Streaming sentence reader over any `Read`.
+pub struct CorpusReader<R: Read> {
+    lines: std::io::Lines<BufReader<R>>,
+    vocab: Vocab,
+    opts: ReaderOptions,
+    carry: Vec<u32>,
+    pending: std::collections::VecDeque<Vec<u32>>,
+    /// Raw (pre-OOV-filter) token count seen so far.
+    pub raw_tokens: u64,
+}
+
+impl<R: Read> CorpusReader<R> {
+    pub fn new(reader: R, vocab: &Vocab, opts: ReaderOptions) -> Self {
+        CorpusReader {
+            lines: BufReader::new(reader).lines(),
+            vocab: vocab.clone(),
+            opts,
+            carry: Vec::new(),
+            pending: Default::default(),
+            raw_tokens: 0,
+        }
+    }
+
+    fn push_sentence(&mut self, ids: Vec<u32>) {
+        if ids.is_empty() {
+            return;
+        }
+        let cap = self.opts.max_sentence_len.max(1);
+        for chunk in ids.chunks(cap) {
+            if !chunk.is_empty() {
+                self.pending.push_back(chunk.to_vec());
+            }
+        }
+    }
+
+    fn ingest_line(&mut self, line: &str) {
+        let mut ids = Vec::new();
+        for tok in tokenize(line) {
+            self.raw_tokens += 1;
+            if let Some(id) = self.vocab.id(&tok) {
+                ids.push(id);
+            }
+        }
+        if self.opts.ignore_delimiters {
+            self.carry.extend(ids);
+            let pack = self.opts.pack_len.max(1);
+            while self.carry.len() >= pack {
+                let rest = self.carry.split_off(pack);
+                let full = std::mem::replace(&mut self.carry, rest);
+                self.push_sentence(full);
+            }
+        } else {
+            self.push_sentence(ids);
+        }
+    }
+
+    fn flush_carry(&mut self) {
+        if !self.carry.is_empty() {
+            let c = std::mem::take(&mut self.carry);
+            self.push_sentence(c);
+        }
+    }
+}
+
+impl<R: Read> Iterator for CorpusReader<R> {
+    type Item = Vec<u32>;
+
+    fn next(&mut self) -> Option<Vec<u32>> {
+        loop {
+            if let Some(s) = self.pending.pop_front() {
+                return Some(s);
+            }
+            match self.lines.next() {
+                Some(Ok(line)) => self.ingest_line(&line),
+                Some(Err(_)) | None => {
+                    self.flush_carry();
+                    return self.pending.pop_front();
+                }
+            }
+        }
+    }
+}
+
+/// Read an entire corpus into memory (convenience for small corpora and
+/// tests); returns (sentences, raw_token_count).
+pub fn read_all<R: Read>(
+    reader: R,
+    vocab: &Vocab,
+    opts: ReaderOptions,
+) -> (Vec<Vec<u32>>, u64) {
+    let mut r = CorpusReader::new(reader, vocab, opts);
+    let mut out = Vec::new();
+    for s in &mut r {
+        out.push(s);
+    }
+    let raw = r.raw_tokens;
+    (out, raw)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn vocab() -> Vocab {
+        Vocab::build(
+            "a a a b b b c c c d d d".split_whitespace(),
+            1,
+        )
+    }
+
+    #[test]
+    fn sentences_follow_lines() {
+        let v = vocab();
+        let text = "a b c\nc b a d\n";
+        let (sents, raw) =
+            read_all(text.as_bytes(), &v, ReaderOptions::default());
+        assert_eq!(sents.len(), 2);
+        assert_eq!(sents[0].len(), 3);
+        assert_eq!(sents[1].len(), 4);
+        assert_eq!(raw, 7);
+    }
+
+    #[test]
+    fn oov_dropped_lowercased() {
+        let v = vocab();
+        let text = "A zzz B\n";
+        let (sents, raw) =
+            read_all(text.as_bytes(), &v, ReaderOptions::default());
+        assert_eq!(raw, 3);
+        assert_eq!(sents.len(), 1);
+        assert_eq!(sents[0].len(), 2); // zzz dropped, A/B lowercased
+    }
+
+    #[test]
+    fn long_sentences_split() {
+        let v = vocab();
+        let text = "a b c d a b c d a b\n"; // 10 words
+        let opts = ReaderOptions { max_sentence_len: 4, ..Default::default() };
+        let (sents, _) = read_all(text.as_bytes(), &v, opts);
+        assert_eq!(
+            sents.iter().map(|s| s.len()).collect::<Vec<_>>(),
+            vec![4, 4, 2]
+        );
+    }
+
+    #[test]
+    fn ignore_delimiters_packs() {
+        let v = vocab();
+        let text = "a b\nc d\na b\nc\n"; // 7 words over 4 lines
+        let opts = ReaderOptions {
+            ignore_delimiters: true,
+            pack_len: 3,
+            ..Default::default()
+        };
+        let (sents, _) = read_all(text.as_bytes(), &v, opts);
+        assert_eq!(
+            sents.iter().map(|s| s.len()).collect::<Vec<_>>(),
+            vec![3, 3, 1]
+        );
+    }
+
+    #[test]
+    fn empty_input() {
+        let v = vocab();
+        let (sents, raw) =
+            read_all("".as_bytes(), &v, ReaderOptions::default());
+        assert!(sents.is_empty());
+        assert_eq!(raw, 0);
+    }
+
+    #[test]
+    fn blank_lines_skipped() {
+        let v = vocab();
+        let (sents, _) =
+            read_all("a b\n\n\nc\n".as_bytes(), &v, ReaderOptions::default());
+        assert_eq!(sents.len(), 2);
+    }
+}

@@ -1,0 +1,122 @@
+//! Frequent-word subsampling (Mikolov et al. 2013b, word2vec's `-sample`).
+//!
+//! A word w with corpus frequency f(w) is *kept* with probability
+//! `p(w) = (sqrt(f/t) + 1) * t / f` (clamped to 1), the exact formula
+//! word2vec.c implements.  Subsampling happens at batching time, before
+//! context windows are formed, so it shrinks effective sentence length —
+//! the same placement the paper's CPU batching layer uses.
+
+use super::vocab::Vocab;
+use crate::util::rng::Pcg32;
+
+/// Precomputed keep-probabilities for one vocabulary.
+#[derive(Debug, Clone)]
+pub struct Subsampler {
+    keep: Vec<f32>,
+    enabled: bool,
+}
+
+impl Subsampler {
+    pub fn new(vocab: &Vocab, t: f64) -> Self {
+        if t <= 0.0 || vocab.is_empty() {
+            return Subsampler { keep: vec![1.0; vocab.len()], enabled: false };
+        }
+        let keep = (0..vocab.len() as u32)
+            .map(|id| {
+                let f = vocab.frequency(id);
+                if f <= 0.0 {
+                    return 1.0;
+                }
+                let p = ((f / t).sqrt() + 1.0) * (t / f);
+                p.min(1.0) as f32
+            })
+            .collect();
+        Subsampler { keep, enabled: true }
+    }
+
+    pub fn enabled(&self) -> bool {
+        self.enabled
+    }
+
+    /// Keep-probability of a word id.
+    pub fn keep_prob(&self, id: u32) -> f32 {
+        self.keep[id as usize]
+    }
+
+    /// Filter a sentence in place.
+    pub fn filter(&self, sentence: &mut Vec<u32>, rng: &mut Pcg32) {
+        if !self.enabled {
+            return;
+        }
+        sentence.retain(|&id| rng.next_f32() < self.keep[id as usize]);
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn zipf_vocab(n: usize) -> Vocab {
+        // counts ~ 1/rank over `n` words, scaled so the head is frequent
+        let counts = (0..n).map(|i| {
+            (format!("w{i}"), (100_000 / (i + 1)) as u64)
+        });
+        Vocab::from_counts(counts, 1)
+    }
+
+    #[test]
+    fn frequent_words_suppressed_more() {
+        let v = zipf_vocab(100);
+        let s = Subsampler::new(&v, 1e-3);
+        assert!(s.enabled());
+        // head word is far more frequent -> lower keep prob
+        assert!(s.keep_prob(0) < s.keep_prob(50));
+        assert!(s.keep_prob(0) < 1.0);
+        // tail words are kept almost surely
+        assert!((s.keep_prob(99) - 1.0).abs() < 1e-6);
+    }
+
+    #[test]
+    fn formula_matches_word2vec() {
+        let v = zipf_vocab(10);
+        let t = 1e-3;
+        let s = Subsampler::new(&v, t);
+        for id in 0..10u32 {
+            let f = v.frequency(id);
+            let want = (((f / t).sqrt() + 1.0) * (t / f)).min(1.0) as f32;
+            assert!((s.keep_prob(id) - want).abs() < 1e-6);
+        }
+    }
+
+    #[test]
+    fn disabled_keeps_everything() {
+        let v = zipf_vocab(10);
+        let s = Subsampler::new(&v, 0.0);
+        assert!(!s.enabled());
+        let mut sent = vec![0u32, 1, 2, 3];
+        let mut rng = Pcg32::new(1);
+        s.filter(&mut sent, &mut rng);
+        assert_eq!(sent, vec![0, 1, 2, 3]);
+    }
+
+    #[test]
+    fn empirical_keep_rate_matches_probability() {
+        let v = zipf_vocab(50);
+        let s = Subsampler::new(&v, 1e-3);
+        let mut rng = Pcg32::new(42);
+        let id = 0u32;
+        let trials = 40_000;
+        let mut kept = 0usize;
+        for _ in 0..trials {
+            let mut sent = vec![id];
+            s.filter(&mut sent, &mut rng);
+            kept += sent.len();
+        }
+        let rate = kept as f64 / trials as f64;
+        let want = s.keep_prob(id) as f64;
+        assert!(
+            (rate - want).abs() < 0.02,
+            "empirical {rate} vs expected {want}"
+        );
+    }
+}

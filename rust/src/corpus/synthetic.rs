@@ -1,0 +1,526 @@
+//! Synthetic corpus generator with latent semantic ground truth.
+//!
+//! Substitutes for Text8 / One Billion Words and the WS-353 / SimLex-999 /
+//! Mikolov-analogy evaluation sets, none of which are available offline
+//! (DESIGN.md Section 4).  The generator produces:
+//!
+//! * a corpus whose unigram distribution is Zipfian (like natural text) and
+//!   whose co-occurrence structure encodes a *latent semantic model*: every
+//!   word belongs to a topic **cluster** and carries a syntactic **role**;
+//!   sentences are topically coherent, so SGNS can recover the structure;
+//! * gold similarity pairs scored by the latent cosine (the analogue of
+//!   human similarity judgements);
+//! * gold analogies `a:b :: c:d` built from (cluster, role) compositions,
+//!   solvable to the extent embeddings recover the latent geometry.
+//!
+//! Absolute quality numbers differ from the paper's human benchmarks; what
+//! Table 7 needs is *equivalence between implementations trained on the
+//! same corpus*, which this preserves.
+
+use crate::util::rng::Pcg32;
+
+/// Generator parameters.
+#[derive(Debug, Clone)]
+pub struct SyntheticSpec {
+    /// Number of distinct words.
+    pub vocab_size: usize,
+    /// Latent topic clusters.
+    pub clusters: usize,
+    /// Latent syntactic roles.
+    pub roles: usize,
+    /// Total corpus size in words.
+    pub total_words: u64,
+    /// Mean sentence length (geometric-ish around this).
+    pub mean_sentence_len: usize,
+    /// Zipf exponent for within-cluster word frequencies.
+    pub zipf_exponent: f64,
+    /// Probability a word is drawn from the sentence's topic cluster.
+    pub topic_coherence: f64,
+    /// Probability a word is drawn from the sentence's role.
+    pub role_coherence: f64,
+    /// Latent space dimension used for gold similarity scores.
+    pub latent_dim: usize,
+    pub seed: u64,
+}
+
+impl SyntheticSpec {
+    /// "text8-mini": throughput-bench scale (fast epochs, real vocab size).
+    pub fn text8_mini() -> Self {
+        SyntheticSpec {
+            vocab_size: 10_000,
+            clusters: 40,
+            roles: 8,
+            total_words: 1_000_000,
+            mean_sentence_len: 24,
+            zipf_exponent: 1.0,
+            topic_coherence: 0.75,
+            role_coherence: 0.5,
+            latent_dim: 16,
+            seed: 0x7e58,
+        }
+    }
+
+    /// "1bw-mini": quality-eval scale (bigger vocab, more text).
+    pub fn obw_mini() -> Self {
+        SyntheticSpec {
+            vocab_size: 30_000,
+            clusters: 80,
+            roles: 10,
+            total_words: 4_000_000,
+            mean_sentence_len: 24,
+            zipf_exponent: 1.0,
+            topic_coherence: 0.75,
+            role_coherence: 0.5,
+            latent_dim: 16,
+            seed: 0x1b3,
+        }
+    }
+
+    /// Tiny spec for unit/integration tests.
+    pub fn tiny() -> Self {
+        SyntheticSpec {
+            vocab_size: 300,
+            clusters: 6,
+            roles: 3,
+            total_words: 60_000,
+            mean_sentence_len: 16,
+            zipf_exponent: 1.0,
+            topic_coherence: 0.85,
+            role_coherence: 0.4,
+            latent_dim: 8,
+            seed: 7,
+        }
+    }
+}
+
+/// A gold similarity judgement (the WS-353/SimLex analogue).
+#[derive(Debug, Clone)]
+pub struct GoldPair {
+    pub a: String,
+    pub b: String,
+    pub score: f64,
+}
+
+/// A gold analogy `a : b :: c : d` (answer = d).
+#[derive(Debug, Clone)]
+pub struct GoldAnalogy {
+    pub a: String,
+    pub b: String,
+    pub c: String,
+    pub d: String,
+}
+
+/// The generated corpus plus its ground truth.
+#[derive(Debug)]
+pub struct SyntheticCorpus {
+    pub spec: SyntheticSpec,
+    /// Sentences of word strings (pre-vocab; feed through the normal
+    /// reader/vocab path like any real corpus).
+    pub sentences: Vec<Vec<u32>>,
+    /// Word id -> surface form ("w<cluster>c<role>r<idx>").
+    pub words: Vec<String>,
+    /// Word id -> latent vector (ground truth).
+    pub latents: Vec<Vec<f32>>,
+    /// Word id -> (cluster, role).
+    pub labels: Vec<(u16, u16)>,
+}
+
+impl SyntheticCorpus {
+    /// Generate the corpus.
+    pub fn generate(spec: SyntheticSpec) -> Self {
+        assert!(spec.vocab_size >= spec.clusters * spec.roles.max(1));
+        let mut rng = Pcg32::with_stream(spec.seed, 0x535f);
+
+        // --- latent geometry -------------------------------------------
+        let centroids: Vec<Vec<f32>> = (0..spec.clusters)
+            .map(|_| random_unit(&mut rng, spec.latent_dim))
+            .collect();
+        let rolevecs: Vec<Vec<f32>> = (0..spec.roles)
+            .map(|_| random_unit(&mut rng, spec.latent_dim))
+            .collect();
+
+        // --- word inventory --------------------------------------------
+        // Words are dealt round-robin over (cluster, role) cells so every
+        // cell spans the Zipf frequency range.
+        let mut words = Vec::with_capacity(spec.vocab_size);
+        let mut latents = Vec::with_capacity(spec.vocab_size);
+        let mut labels = Vec::with_capacity(spec.vocab_size);
+        // members[cluster][role] -> word ids, frequency-ranked
+        let mut members: Vec<Vec<Vec<u32>>> =
+            vec![vec![Vec::new(); spec.roles]; spec.clusters];
+        for id in 0..spec.vocab_size {
+            let c = id % spec.clusters;
+            let r = (id / spec.clusters) % spec.roles;
+            let idx = id / (spec.clusters * spec.roles);
+            words.push(format!("w{c}c{r}r{idx}"));
+            let mut v = centroids[c].clone();
+            for (vi, ri) in v.iter_mut().zip(&rolevecs[r]) {
+                *vi += 0.6 * ri;
+            }
+            // small per-word identity noise
+            for vi in v.iter_mut() {
+                *vi += 0.15 * (rng.next_f32() * 2.0 - 1.0);
+            }
+            normalize(&mut v);
+            latents.push(v);
+            labels.push((c as u16, r as u16));
+            members[c][r].push(id as u32);
+        }
+
+        // --- Zipf samplers ----------------------------------------------
+        // One alias-free CDF per (cluster, role) cell and per cluster.
+        let cell_cdfs: Vec<Vec<Vec<f64>>> = members
+            .iter()
+            .map(|roles| {
+                roles.iter().map(|ids| zipf_cdf(ids.len(), spec.zipf_exponent)).collect()
+            })
+            .collect();
+        let cluster_all: Vec<Vec<u32>> = members
+            .iter()
+            .map(|roles| roles.iter().flatten().copied().collect())
+            .collect();
+        let cluster_cdfs: Vec<Vec<f64>> = cluster_all
+            .iter()
+            .map(|ids| zipf_cdf(ids.len(), spec.zipf_exponent))
+            .collect();
+
+        // --- sentence generation ----------------------------------------
+        let mut sentences = Vec::new();
+        let mut emitted: u64 = 0;
+        while emitted < spec.total_words {
+            let topic = rng.next_bounded(spec.clusters as u32) as usize;
+            let srole = rng.next_bounded(spec.roles as u32) as usize;
+            // sentence length: uniform in [mean/2, 3*mean/2]
+            let lo = (spec.mean_sentence_len / 2).max(2);
+            let hi = spec.mean_sentence_len * 3 / 2;
+            let len =
+                lo + rng.next_bounded((hi - lo + 1) as u32) as usize;
+            let mut sent = Vec::with_capacity(len);
+            for _ in 0..len {
+                let c = if (rng.next_f64()) < spec.topic_coherence {
+                    topic
+                } else {
+                    rng.next_bounded(spec.clusters as u32) as usize
+                };
+                let id = if rng.next_f64() < spec.role_coherence {
+                    let r = srole.min(spec.roles - 1);
+                    let ids = &members[c][r];
+                    if ids.is_empty() {
+                        sample_cdf(&cluster_all[c], &cluster_cdfs[c], &mut rng)
+                    } else {
+                        sample_cdf(ids, &cell_cdfs[c][r], &mut rng)
+                    }
+                } else {
+                    sample_cdf(&cluster_all[c], &cluster_cdfs[c], &mut rng)
+                };
+                sent.push(id);
+            }
+            emitted += sent.len() as u64;
+            sentences.push(sent);
+        }
+
+        SyntheticCorpus { spec, sentences, words, latents, labels }
+    }
+
+    /// Render as text lines (one sentence per line) — lets the synthetic
+    /// corpus flow through the same reader path as a real file.
+    pub fn to_text(&self) -> String {
+        let mut out = String::new();
+        for s in &self.sentences {
+            let mut first = true;
+            for &id in s {
+                if !first {
+                    out.push(' ');
+                }
+                out.push_str(&self.words[id as usize]);
+                first = false;
+            }
+            out.push('\n');
+        }
+        out
+    }
+
+    /// Latent cosine similarity between two word ids.
+    pub fn latent_similarity(&self, a: u32, b: u32) -> f64 {
+        cosine(&self.latents[a as usize], &self.latents[b as usize])
+    }
+
+    /// Sample `n` gold similarity pairs (the WS-353/SimLex analogue).
+    /// Pairs are stratified: 1/3 same-cluster, 1/3 same-role, 1/3 random,
+    /// giving the score distribution spread a rank correlation needs.
+    pub fn gold_similarity_pairs(&self, n: usize, seed: u64) -> Vec<GoldPair> {
+        let mut rng = Pcg32::with_stream(seed, 0x90_1d);
+        let v = self.words.len() as u32;
+        let mut out = Vec::with_capacity(n);
+        while out.len() < n {
+            let a = rng.next_bounded(v);
+            let b = match out.len() % 3 {
+                0 => {
+                    // same cluster
+                    let (c, _) = self.labels[a as usize];
+                    let cands: Vec<u32> = (0..v)
+                        .filter(|&x| self.labels[x as usize].0 == c && x != a)
+                        .collect();
+                    if cands.is_empty() {
+                        continue;
+                    }
+                    cands[rng.next_bounded(cands.len() as u32) as usize]
+                }
+                1 => {
+                    let (_, r) = self.labels[a as usize];
+                    let cands: Vec<u32> = (0..v)
+                        .filter(|&x| self.labels[x as usize].1 == r && x != a)
+                        .collect();
+                    if cands.is_empty() {
+                        continue;
+                    }
+                    cands[rng.next_bounded(cands.len() as u32) as usize]
+                }
+                _ => {
+                    let b = rng.next_bounded(v);
+                    if b == a {
+                        continue;
+                    }
+                    b
+                }
+            };
+            out.push(GoldPair {
+                a: self.words[a as usize].clone(),
+                b: self.words[b as usize].clone(),
+                score: self.latent_similarity(a, b),
+            });
+        }
+        out
+    }
+
+    /// Sample `n` gold analogies from (cluster, role) compositions:
+    /// a=(c1,r1), b=(c1,r2), c=(c2,r1), d=(c2,r2).  Only head-frequency
+    /// words (rank 0 within their cell) are used, mirroring how the Mikolov
+    /// set uses common words.
+    pub fn gold_analogies(&self, n: usize, seed: u64) -> Vec<GoldAnalogy> {
+        let mut rng = Pcg32::with_stream(seed, 0xa41);
+        let nc = self.spec.clusters as u32;
+        let nr = self.spec.roles as u32;
+        let head = |c: u32, r: u32| -> Option<&String> {
+            let id = (r * nc + c) as usize; // idx 0 word of the cell
+            if id < self.words.len() {
+                Some(&self.words[id])
+            } else {
+                None
+            }
+        };
+        let mut out = Vec::with_capacity(n);
+        let mut guard = 0;
+        while out.len() < n && guard < n * 50 {
+            guard += 1;
+            let c1 = rng.next_bounded(nc);
+            let c2 = rng.next_bounded(nc);
+            let r1 = rng.next_bounded(nr);
+            let r2 = rng.next_bounded(nr);
+            if c1 == c2 || r1 == r2 {
+                continue;
+            }
+            if let (Some(a), Some(b), Some(c), Some(d)) = (
+                head(c1, r1),
+                head(c1, r2),
+                head(c2, r1),
+                head(c2, r2),
+            ) {
+                out.push(GoldAnalogy {
+                    a: a.clone(),
+                    b: b.clone(),
+                    c: c.clone(),
+                    d: d.clone(),
+                });
+            }
+        }
+        out
+    }
+}
+
+fn random_unit(rng: &mut Pcg32, dim: usize) -> Vec<f32> {
+    // Box-Muller-ish: sum of uniforms is fine for direction sampling
+    let mut v: Vec<f32> =
+        (0..dim).map(|_| rng.next_f32() * 2.0 - 1.0).collect();
+    normalize(&mut v);
+    v
+}
+
+fn normalize(v: &mut [f32]) {
+    let n = v.iter().map(|x| (x * x) as f64).sum::<f64>().sqrt() as f32;
+    if n > 0.0 {
+        for x in v.iter_mut() {
+            *x /= n;
+        }
+    }
+}
+
+fn cosine(a: &[f32], b: &[f32]) -> f64 {
+    let dot: f64 = a.iter().zip(b).map(|(x, y)| (x * y) as f64).sum();
+    let na: f64 = a.iter().map(|x| (x * x) as f64).sum::<f64>().sqrt();
+    let nb: f64 = b.iter().map(|x| (x * x) as f64).sum::<f64>().sqrt();
+    if na == 0.0 || nb == 0.0 {
+        0.0
+    } else {
+        dot / (na * nb)
+    }
+}
+
+/// Zipf CDF over ranks 0..n (rank 0 most frequent).
+fn zipf_cdf(n: usize, s: f64) -> Vec<f64> {
+    let mut cdf = Vec::with_capacity(n);
+    let mut acc = 0.0;
+    for i in 0..n {
+        acc += 1.0 / ((i + 1) as f64).powf(s);
+        cdf.push(acc);
+    }
+    for c in cdf.iter_mut() {
+        *c /= acc;
+    }
+    cdf
+}
+
+fn sample_cdf(ids: &[u32], cdf: &[f64], rng: &mut Pcg32) -> u32 {
+    debug_assert_eq!(ids.len(), cdf.len());
+    let u = rng.next_f64();
+    let pos = cdf.partition_point(|&c| c < u);
+    ids[pos.min(ids.len() - 1)]
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn generates_requested_size() {
+        let spec = SyntheticSpec::tiny();
+        let c = SyntheticCorpus::generate(spec.clone());
+        let total: u64 = c.sentences.iter().map(|s| s.len() as u64).sum();
+        assert!(total >= spec.total_words);
+        assert!(total < spec.total_words + 2 * spec.mean_sentence_len as u64);
+        assert_eq!(c.words.len(), spec.vocab_size);
+        assert_eq!(c.latents.len(), spec.vocab_size);
+    }
+
+    #[test]
+    fn deterministic_for_seed() {
+        let a = SyntheticCorpus::generate(SyntheticSpec::tiny());
+        let b = SyntheticCorpus::generate(SyntheticSpec::tiny());
+        assert_eq!(a.sentences, b.sentences);
+    }
+
+    #[test]
+    fn zipfian_head_dominates() {
+        let c = SyntheticCorpus::generate(SyntheticSpec::tiny());
+        let mut counts = vec![0u64; c.words.len()];
+        for s in &c.sentences {
+            for &id in s {
+                counts[id as usize] += 1;
+            }
+        }
+        let mut sorted = counts.clone();
+        sorted.sort_unstable_by(|a, b| b.cmp(a));
+        let total: u64 = sorted.iter().sum();
+        let top10: u64 = sorted.iter().take(c.words.len() / 10).sum();
+        // Zipf: top 10% of words should carry well over a third of the mass
+        assert!(
+            top10 as f64 / total as f64 > 0.35,
+            "top10 share {}",
+            top10 as f64 / total as f64
+        );
+    }
+
+    #[test]
+    fn same_cluster_pairs_score_higher() {
+        let c = SyntheticCorpus::generate(SyntheticSpec::tiny());
+        let mut same = Vec::new();
+        let mut diff = Vec::new();
+        for a in 0..c.words.len() as u32 {
+            for b in (a + 1)..(a + 20).min(c.words.len() as u32) {
+                let s = c.latent_similarity(a, b);
+                if c.labels[a as usize].0 == c.labels[b as usize].0 {
+                    same.push(s);
+                } else {
+                    diff.push(s);
+                }
+            }
+        }
+        let mean = |v: &[f64]| v.iter().sum::<f64>() / v.len().max(1) as f64;
+        assert!(mean(&same) > mean(&diff) + 0.15);
+    }
+
+    #[test]
+    fn cooccurrence_encodes_clusters() {
+        // Words from the same cluster must co-occur in sentences far more
+        // often than chance — the property SGNS training relies on.
+        let c = SyntheticCorpus::generate(SyntheticSpec::tiny());
+        let mut same = 0u64;
+        let mut total = 0u64;
+        for s in &c.sentences {
+            for w in s.windows(2) {
+                total += 1;
+                if c.labels[w[0] as usize].0 == c.labels[w[1] as usize].0 {
+                    same += 1;
+                }
+            }
+        }
+        let rate = same as f64 / total as f64;
+        let chance = 1.0 / c.spec.clusters as f64;
+        assert!(
+            rate > 3.0 * chance,
+            "same-cluster adjacency {rate:.3} vs chance {chance:.3}"
+        );
+    }
+
+    #[test]
+    fn gold_pairs_have_score_spread() {
+        let c = SyntheticCorpus::generate(SyntheticSpec::tiny());
+        let pairs = c.gold_similarity_pairs(120, 5);
+        assert_eq!(pairs.len(), 120);
+        let scores: Vec<f64> = pairs.iter().map(|p| p.score).collect();
+        let max = scores.iter().cloned().fold(f64::MIN, f64::max);
+        let min = scores.iter().cloned().fold(f64::MAX, f64::min);
+        assert!(max - min > 0.4, "spread {max}-{min}");
+    }
+
+    #[test]
+    fn gold_analogies_wellformed() {
+        let c = SyntheticCorpus::generate(SyntheticSpec::tiny());
+        let an = c.gold_analogies(50, 5);
+        assert!(an.len() >= 40);
+        for g in &an {
+            // a,b share a cluster; c,d share a cluster; a,c share a role
+            let id = |w: &str| {
+                c.words.iter().position(|x| x == w).unwrap() as usize
+            };
+            let (la, lb, lc, ld) = (
+                c.labels[id(&g.a)],
+                c.labels[id(&g.b)],
+                c.labels[id(&g.c)],
+                c.labels[id(&g.d)],
+            );
+            assert_eq!(la.0, lb.0);
+            assert_eq!(lc.0, ld.0);
+            assert_eq!(la.1, lc.1);
+            assert_eq!(lb.1, ld.1);
+            assert_ne!(la.0, lc.0);
+        }
+    }
+
+    #[test]
+    fn text_roundtrip_through_reader() {
+        use crate::corpus::{reader, vocab::Vocab};
+        let c = SyntheticCorpus::generate(SyntheticSpec::tiny());
+        let text = c.to_text();
+        let all_tokens: Vec<&str> = text.split_whitespace().collect();
+        let v = Vocab::build(all_tokens.iter().copied(), 1);
+        let (sents, raw) = reader::read_all(
+            text.as_bytes(),
+            &v,
+            reader::ReaderOptions::default(),
+        );
+        assert_eq!(sents.len(), c.sentences.len());
+        let total: u64 = c.sentences.iter().map(|s| s.len() as u64).sum();
+        assert_eq!(raw, total);
+    }
+}

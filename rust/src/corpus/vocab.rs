@@ -1,0 +1,199 @@
+//! Vocabulary: word <-> id maps with occurrence counts, min-count
+//! filtering, and word2vec-compatible persistence.
+//!
+//! Ids are assigned in descending frequency order (ties broken
+//! lexicographically) — the layout word2vec.c produces after its vocab
+//! sort, which downstream consumers (unigram table, subsampler) rely on.
+
+use std::collections::HashMap;
+use std::io::{BufRead, BufReader, Write};
+use std::path::Path;
+
+/// An immutable, frequency-sorted vocabulary.
+#[derive(Debug, Clone, Default)]
+pub struct Vocab {
+    words: Vec<String>,
+    counts: Vec<u64>,
+    index: HashMap<String, u32>,
+    total_count: u64,
+}
+
+impl Vocab {
+    /// Build from raw (word, count) pairs, dropping words with
+    /// `count < min_count` (paper: 5).
+    pub fn from_counts<I>(counts: I, min_count: usize) -> Self
+    where
+        I: IntoIterator<Item = (String, u64)>,
+    {
+        let mut kept: Vec<(String, u64)> = counts
+            .into_iter()
+            .filter(|(_, c)| *c >= min_count as u64)
+            .collect();
+        kept.sort_by(|a, b| b.1.cmp(&a.1).then_with(|| a.0.cmp(&b.0)));
+        let mut v = Vocab::default();
+        for (w, c) in kept {
+            v.index.insert(w.clone(), v.words.len() as u32);
+            v.words.push(w);
+            v.counts.push(c);
+            v.total_count += c;
+        }
+        v
+    }
+
+    /// Count words in an iterator of tokens and build the vocabulary.
+    pub fn build<'a, I>(tokens: I, min_count: usize) -> Self
+    where
+        I: IntoIterator<Item = &'a str>,
+    {
+        let mut counts: HashMap<String, u64> = HashMap::new();
+        for t in tokens {
+            *counts.entry(t.to_string()).or_insert(0) += 1;
+        }
+        Self::from_counts(counts, min_count)
+    }
+
+    pub fn len(&self) -> usize {
+        self.words.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.words.is_empty()
+    }
+
+    /// Total count of kept (in-vocabulary) word occurrences.
+    pub fn total_count(&self) -> u64 {
+        self.total_count
+    }
+
+    pub fn id(&self, word: &str) -> Option<u32> {
+        self.index.get(word).copied()
+    }
+
+    pub fn word(&self, id: u32) -> &str {
+        &self.words[id as usize]
+    }
+
+    pub fn count(&self, id: u32) -> u64 {
+        self.counts[id as usize]
+    }
+
+    pub fn counts(&self) -> &[u64] {
+        &self.counts
+    }
+
+    pub fn words(&self) -> &[String] {
+        &self.words
+    }
+
+    /// Corpus frequency of a word id.
+    pub fn frequency(&self, id: u32) -> f64 {
+        self.counts[id as usize] as f64 / self.total_count.max(1) as f64
+    }
+
+    /// Map a token sentence to ids, dropping OOV tokens.
+    pub fn encode_sentence(&self, tokens: &[&str]) -> Vec<u32> {
+        tokens.iter().filter_map(|t| self.id(t)).collect()
+    }
+
+    /// Persist as `word<TAB>count` lines, frequency order.
+    pub fn save(&self, path: &Path) -> std::io::Result<()> {
+        let mut f = std::io::BufWriter::new(std::fs::File::create(path)?);
+        for (w, c) in self.words.iter().zip(&self.counts) {
+            writeln!(f, "{w}\t{c}")?;
+        }
+        Ok(())
+    }
+
+    /// Load from `word<TAB>count` lines.
+    pub fn load(path: &Path) -> std::io::Result<Self> {
+        let f = BufReader::new(std::fs::File::open(path)?);
+        let mut counts = Vec::new();
+        for line in f.lines() {
+            let line = line?;
+            if line.is_empty() {
+                continue;
+            }
+            let (w, c) = line.split_once('\t').ok_or_else(|| {
+                std::io::Error::new(
+                    std::io::ErrorKind::InvalidData,
+                    format!("bad vocab line: {line}"),
+                )
+            })?;
+            let c: u64 = c.parse().map_err(|_| {
+                std::io::Error::new(
+                    std::io::ErrorKind::InvalidData,
+                    format!("bad count in: {line}"),
+                )
+            })?;
+            counts.push((w.to_string(), c));
+        }
+        // File is already sorted, but re-sorting keeps the invariant even
+        // for hand-edited files.
+        Ok(Self::from_counts(counts, 0))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn sample() -> Vocab {
+        let toks = "the cat sat on the mat the cat sat the";
+        Vocab::build(toks.split_whitespace(), 2)
+    }
+
+    #[test]
+    fn frequency_order_ids() {
+        let v = sample();
+        // the:4, cat:2, sat:2; on/mat dropped by min_count=2
+        assert_eq!(v.len(), 3);
+        assert_eq!(v.word(0), "the");
+        assert_eq!(v.count(0), 4);
+        // tie between cat/sat broken lexicographically
+        assert_eq!(v.word(1), "cat");
+        assert_eq!(v.word(2), "sat");
+        assert_eq!(v.total_count(), 8);
+    }
+
+    #[test]
+    fn id_lookup_and_oov() {
+        let v = sample();
+        assert_eq!(v.id("the"), Some(0));
+        assert_eq!(v.id("on"), None); // filtered
+        assert_eq!(v.id("zebra"), None);
+    }
+
+    #[test]
+    fn encode_drops_oov() {
+        let v = sample();
+        let ids = v.encode_sentence(&["the", "zebra", "sat"]);
+        assert_eq!(ids, vec![0, 2]);
+    }
+
+    #[test]
+    fn frequencies_sum_to_one() {
+        let v = sample();
+        let sum: f64 = (0..v.len() as u32).map(|i| v.frequency(i)).sum();
+        assert!((sum - 1.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn save_load_roundtrip() {
+        let v = sample();
+        let dir = std::env::temp_dir().join("fullw2v_vocab_test");
+        std::fs::create_dir_all(&dir).unwrap();
+        let path = dir.join("vocab.tsv");
+        v.save(&path).unwrap();
+        let v2 = Vocab::load(&path).unwrap();
+        assert_eq!(v.words(), v2.words());
+        assert_eq!(v.counts(), v2.counts());
+        std::fs::remove_file(path).ok();
+    }
+
+    #[test]
+    fn empty_vocab() {
+        let v = Vocab::build([].into_iter(), 5);
+        assert!(v.is_empty());
+        assert_eq!(v.total_count(), 0);
+    }
+}

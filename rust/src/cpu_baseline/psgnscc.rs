@@ -1,0 +1,286 @@
+//! pSGNScc (Rengasamy et al.): context-combined batched SGNS on CPU.
+//!
+//! Consecutive context windows are *combined* into one larger matrix
+//! operation sharing a single negative set, raising arithmetic intensity
+//! on CPUs (the paper's strongest CPU comparator).  We combine `CC`
+//! windows per block: the block's context rows form C ((m1+..+mCC) x d)
+//! and the output block stacks the CC centers + the shared negatives
+//! ((CC + N) x d); the label matrix marks each context row's own center
+//! positive, everything else negative.  Updates apply once per block.
+
+use super::math::{dot, sigmoid, softplus};
+use super::{epoch_loop, BaseTrainer};
+use crate::config::TrainConfig;
+use crate::coordinator::SgnsTrainer;
+use crate::corpus::vocab::Vocab;
+use crate::metrics::EpochReport;
+use crate::model::EmbeddingModel;
+use crate::sampler::window::context_positions;
+use crate::util::rng::Pcg32;
+use anyhow::Result;
+use std::sync::Arc;
+
+/// Windows combined per block (the paper's batching knob).
+pub const COMBINE: usize = 4;
+
+pub struct PsgnsccTrainer {
+    base: BaseTrainer,
+    scratch: Scratch,
+}
+
+#[derive(Default)]
+struct Scratch {
+    c: Vec<f32>,
+    u: Vec<f32>,
+    g: Vec<f32>,
+    dc: Vec<f32>,
+    du: Vec<f32>,
+    negs: Vec<u32>,
+    ctx_ids: Vec<u32>,
+    /// Which combined-window each context row belongs to.
+    row_window: Vec<usize>,
+    centers: Vec<u32>,
+}
+
+impl PsgnsccTrainer {
+    pub fn new(cfg: &TrainConfig, vocab: &Vocab, total_words_hint: u64) -> Self {
+        PsgnsccTrainer {
+            base: BaseTrainer::new(cfg, vocab, total_words_hint),
+            scratch: Scratch::default(),
+        }
+    }
+
+    fn train_sentence(
+        base: &mut BaseTrainer,
+        sc: &mut Scratch,
+        sent: &[u32],
+        lr: f32,
+        rng: &mut Pcg32,
+    ) -> f64 {
+        let wf = base.cfg.fixed_width();
+        let n_neg = base.cfg.negatives;
+        let d = base.model.dim;
+        sc.negs.resize(n_neg, 0);
+        let mut loss = 0.0f64;
+        let mut t = 0;
+        while t < sent.len() {
+            let block_end = (t + COMBINE).min(sent.len());
+            // assemble combined block
+            sc.ctx_ids.clear();
+            sc.row_window.clear();
+            sc.centers.clear();
+            for (wi, tt) in (t..block_end).enumerate() {
+                sc.centers.push(sent[tt]);
+                for j in context_positions(tt, wf, sent.len()) {
+                    sc.ctx_ids.push(sent[j]);
+                    sc.row_window.push(wi);
+                }
+            }
+            let m = sc.ctx_ids.len();
+            let ncenters = sc.centers.len();
+            if m == 0 {
+                t = block_end;
+                continue;
+            }
+            // one shared negative set per block, avoiding all centers
+            for slot in sc.negs.iter_mut() {
+                loop {
+                    let g = base.negatives.sample(rng);
+                    if !sc.centers.contains(&g) {
+                        *slot = g;
+                        break;
+                    }
+                }
+            }
+            let cols = ncenters + n_neg;
+
+            // gather
+            sc.c.resize(m * d, 0.0);
+            for (i, &w) in sc.ctx_ids.iter().enumerate() {
+                sc.c[i * d..(i + 1) * d]
+                    .copy_from_slice(base.model.syn0_row(w));
+            }
+            sc.u.resize(cols * d, 0.0);
+            for (k, &w) in sc.centers.iter().enumerate() {
+                sc.u[k * d..(k + 1) * d]
+                    .copy_from_slice(base.model.syn1_row(w));
+            }
+            for (k, &g) in sc.negs.iter().enumerate() {
+                let kk = ncenters + k;
+                sc.u[kk * d..(kk + 1) * d]
+                    .copy_from_slice(base.model.syn1_row(g));
+            }
+
+            // gradients: row i's positive column is its own window's center
+            sc.g.resize(m * cols, 0.0);
+            for i in 0..m {
+                let own = sc.row_window[i];
+                for k in 0..cols {
+                    let z = dot(
+                        &sc.c[i * d..(i + 1) * d],
+                        &sc.u[k * d..(k + 1) * d],
+                    );
+                    // a context row trains only against its own center and
+                    // the shared negatives (not other windows' centers)
+                    let (label, active) = if k == own {
+                        (1.0, true)
+                    } else if k >= ncenters {
+                        (0.0, true)
+                    } else {
+                        (0.0, false)
+                    };
+                    sc.g[i * cols + k] = if active {
+                        loss += if k == own {
+                            softplus(-z)
+                        } else {
+                            softplus(z)
+                        };
+                        (label - sigmoid(z)) * lr
+                    } else {
+                        0.0
+                    };
+                }
+            }
+
+            // dC = G U, dU = G^T C
+            sc.dc.resize(m * d, 0.0);
+            sc.dc.iter_mut().for_each(|x| *x = 0.0);
+            sc.du.resize(cols * d, 0.0);
+            sc.du.iter_mut().for_each(|x| *x = 0.0);
+            for i in 0..m {
+                for k in 0..cols {
+                    let g = sc.g[i * cols + k];
+                    if g != 0.0 {
+                        for x in 0..d {
+                            sc.dc[i * d + x] += g * sc.u[k * d + x];
+                            sc.du[k * d + x] += g * sc.c[i * d + x];
+                        }
+                    }
+                }
+            }
+
+            // scatter
+            for (i, &w) in sc.ctx_ids.iter().enumerate() {
+                let row = base.model.syn0_row_mut(w);
+                for x in 0..d {
+                    row[x] += sc.dc[i * d + x];
+                }
+            }
+            for (k, &w) in sc.centers.iter().enumerate() {
+                let row = base.model.syn1_row_mut(w);
+                for x in 0..d {
+                    row[x] += sc.du[k * d + x];
+                }
+            }
+            for (k, &g) in sc.negs.iter().enumerate() {
+                let kk = ncenters + k;
+                let row = base.model.syn1_row_mut(g);
+                for x in 0..d {
+                    row[x] += sc.du[kk * d + x];
+                }
+            }
+            t = block_end;
+        }
+        loss
+    }
+}
+
+impl SgnsTrainer for PsgnsccTrainer {
+    fn name(&self) -> String {
+        "pSGNScc (cpu combined)".into()
+    }
+
+    fn train_epoch(
+        &mut self,
+        sentences: &Arc<Vec<Vec<u32>>>,
+        epoch: usize,
+    ) -> Result<EpochReport> {
+        let sc = &mut self.scratch;
+        let rep = epoch_loop(&mut self.base, sentences, epoch, |b, s, lr, rng| {
+            Self::train_sentence(b, sc, s, lr, rng)
+        });
+        Ok(rep)
+    }
+
+    fn model(&self) -> &EmbeddingModel {
+        &self.base.model
+    }
+
+    fn model_mut(&mut self) -> &mut EmbeddingModel {
+        &mut self.base.model
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::coordinator::train_all;
+    use crate::corpus::synthetic::{SyntheticCorpus, SyntheticSpec};
+
+    #[test]
+    fn loss_decreases_and_is_comparable_to_pword2vec() {
+        let corpus = SyntheticCorpus::generate(SyntheticSpec::tiny());
+        let text = corpus.to_text();
+        let vocab = Vocab::build(text.split_whitespace(), 1);
+        let sentences: Arc<Vec<Vec<u32>>> = Arc::new(
+            corpus
+                .sentences
+                .iter()
+                .map(|s| {
+                    s.iter()
+                        .map(|&id| {
+                            vocab.id(&corpus.words[id as usize]).unwrap()
+                        })
+                        .collect()
+                })
+                .collect(),
+        );
+        let cfg = TrainConfig {
+            dim: 16,
+            window: 4,
+            negatives: 3,
+            epochs: 2,
+            subsample: 0.0,
+            sentence_chunk: 32,
+            ..TrainConfig::default()
+        };
+        let total: u64 = sentences.iter().map(|s| s.len() as u64).sum();
+        let mut tr = PsgnsccTrainer::new(&cfg, &vocab, total * 2);
+        let rep = train_all(&mut tr, &sentences, 2).unwrap();
+        let (first, last) = rep.loss_trajectory();
+        assert!(last < first, "{first} -> {last}");
+
+        let mut pw =
+            crate::cpu_baseline::PWord2VecTrainer::new(&cfg, &vocab, total * 2);
+        let rep_pw = train_all(&mut pw, &sentences, 2).unwrap();
+        // combined batching changes arithmetic order but must converge to a
+        // similar loss region
+        let (_, last_pw) = rep_pw.loss_trajectory();
+        assert!(
+            (last - last_pw).abs() < 0.35 * last_pw.max(last),
+            "pSGNScc {last} vs pWord2Vec {last_pw}"
+        );
+    }
+
+    #[test]
+    fn negatives_avoid_block_centers() {
+        // direct check of the block-negative invariant via a small corpus
+        let vocab = Vocab::from_counts(
+            (0..10).map(|i| (format!("w{i}"), 10u64)),
+            1,
+        );
+        let cfg = TrainConfig {
+            dim: 4,
+            window: 2,
+            negatives: 3,
+            subsample: 0.0,
+            sentence_chunk: 16,
+            ..TrainConfig::default()
+        };
+        let mut tr = PsgnsccTrainer::new(&cfg, &vocab, 100);
+        // run a few epochs; the inner loop asserts via the retry loop —
+        // here we just ensure it terminates and trains
+        let sents = Arc::new(vec![vec![0u32, 1, 2, 3, 4, 5, 6, 7]]);
+        tr.train_epoch(&sents, 0).unwrap();
+    }
+}

@@ -1,0 +1,181 @@
+//! Analogy reconstruction: `a : b :: c : ?` solved over normalized
+//! embeddings with 3COSADD and 3COSMUL (Levy & Goldberg / Hyperwords),
+//! the protocol the paper's Table 7 COS-ADD / COS-MUL columns use.
+
+use crate::corpus::synthetic::GoldAnalogy;
+use crate::corpus::vocab::Vocab;
+use crate::model::embeddings::EmbeddingModel;
+
+/// Which objective ranks candidate answers.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum AnalogyMethod {
+    /// argmax cos(d, b) - cos(d, a) + cos(d, c)
+    CosAdd,
+    /// argmax cos'(d,b) * cos'(d,c) / (cos'(d,a) + eps), cos' in [0,1]
+    CosMul,
+}
+
+/// Aggregate accuracy over an analogy set.
+#[derive(Debug, Clone)]
+pub struct AnalogyReport {
+    pub correct: usize,
+    pub total: usize,
+    pub skipped: usize,
+}
+
+impl AnalogyReport {
+    pub fn accuracy(&self) -> f64 {
+        if self.total == 0 {
+            0.0
+        } else {
+            self.correct as f64 / self.total as f64
+        }
+    }
+}
+
+/// Solve a set of analogies; `a`, `b`, `c` are excluded from candidates
+/// (standard protocol).
+pub fn solve_analogies(
+    model: &EmbeddingModel,
+    vocab: &Vocab,
+    analogies: &[GoldAnalogy],
+    method: AnalogyMethod,
+) -> AnalogyReport {
+    let norm = model.normalized_syn0();
+    let d = model.dim;
+    let v = model.vocab_size;
+    let row = |id: u32| -> &[f32] {
+        &norm[id as usize * d..(id as usize + 1) * d]
+    };
+    let mut correct = 0;
+    let mut total = 0;
+    let mut skipped = 0;
+    for g in analogies {
+        let ids = (
+            vocab.id(&g.a),
+            vocab.id(&g.b),
+            vocab.id(&g.c),
+            vocab.id(&g.d),
+        );
+        let (ia, ib, ic, id_ans) = match ids {
+            (Some(a), Some(b), Some(c), Some(dd)) => (a, b, c, dd),
+            _ => {
+                skipped += 1;
+                continue;
+            }
+        };
+        total += 1;
+        // precompute cosines of every candidate against a, b, c
+        let (ra, rb, rc) = (row(ia), row(ib), row(ic));
+        let mut best: Option<(u32, f64)> = None;
+        for cand in 0..v as u32 {
+            if cand == ia || cand == ib || cand == ic {
+                continue;
+            }
+            let rd = row(cand);
+            let ca = dot(rd, ra);
+            let cb = dot(rd, rb);
+            let cc = dot(rd, rc);
+            let score = match method {
+                AnalogyMethod::CosAdd => cb - ca + cc,
+                AnalogyMethod::CosMul => {
+                    // shift cosines into [0,1] as Levy & Goldberg do
+                    let (ca, cb, cc) =
+                        ((ca + 1.0) / 2.0, (cb + 1.0) / 2.0, (cc + 1.0) / 2.0);
+                    cb * cc / (ca + 1e-3)
+                }
+            };
+            if best.map(|(_, s)| score > s).unwrap_or(true) {
+                best = Some((cand, score));
+            }
+        }
+        if best.map(|(w, _)| w == id_ans).unwrap_or(false) {
+            correct += 1;
+        }
+    }
+    AnalogyReport { correct, total, skipped }
+}
+
+#[inline]
+fn dot(a: &[f32], b: &[f32]) -> f64 {
+    a.iter().zip(b).map(|(x, y)| (*x as f64) * (*y as f64)).sum()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    /// Build a model with perfect compositional geometry:
+    /// vec(word) = cluster_axis + role_axis in a 4-d space.
+    fn planted() -> (EmbeddingModel, Vocab, Vec<GoldAnalogy>) {
+        // 2 clusters x 2 roles = 4 words: c0r0, c0r1, c1r0, c1r1
+        let words = ["c0r0", "c0r1", "c1r0", "c1r1"];
+        let vecs: [[f32; 4]; 4] = [
+            [1.0, 0.0, 1.0, 0.0], // c0 + r0
+            [1.0, 0.0, 0.0, 1.0], // c0 + r1
+            [0.0, 1.0, 1.0, 0.0], // c1 + r0
+            [0.0, 1.0, 0.0, 1.0], // c1 + r1
+        ];
+        let v = Vocab::from_counts(
+            words.iter().map(|w| (w.to_string(), 10u64)),
+            1,
+        );
+        let mut m = EmbeddingModel::init(4, 4, 1);
+        for (i, w) in words.iter().enumerate() {
+            let id = v.id(w).unwrap();
+            m.syn0_row_mut(id).copy_from_slice(&vecs[i]);
+        }
+        let gold = vec![GoldAnalogy {
+            a: "c0r0".into(),
+            b: "c0r1".into(),
+            c: "c1r0".into(),
+            d: "c1r1".into(),
+        }];
+        (m, v, gold)
+    }
+
+    #[test]
+    fn planted_analogy_solved_by_both_methods() {
+        let (m, v, gold) = planted();
+        for method in [AnalogyMethod::CosAdd, AnalogyMethod::CosMul] {
+            let rep = solve_analogies(&m, &v, &gold, method);
+            assert_eq!(rep.total, 1);
+            assert_eq!(rep.correct, 1, "{method:?}");
+        }
+    }
+
+    #[test]
+    fn oov_analogies_skipped() {
+        let (m, v, mut gold) = planted();
+        gold.push(GoldAnalogy {
+            a: "c0r0".into(),
+            b: "nope".into(),
+            c: "c1r0".into(),
+            d: "c1r1".into(),
+        });
+        let rep = solve_analogies(&m, &v, &gold, AnalogyMethod::CosAdd);
+        assert_eq!(rep.total, 1);
+        assert_eq!(rep.skipped, 1);
+        assert!((rep.accuracy() - 1.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn random_model_fails_planted_analogy() {
+        let (_, v, gold) = planted();
+        // fresh random init without the planted geometry: with 1 candidate
+        // and random vectors, accuracy is not guaranteed 1
+        let m = EmbeddingModel::init(4, 4, 99);
+        let rep = solve_analogies(&m, &v, &gold, AnalogyMethod::CosAdd);
+        assert_eq!(rep.total, 1);
+        // either way it must not crash; accuracy is 0 or 1 here
+        assert!(rep.correct <= 1);
+    }
+
+    #[test]
+    fn empty_set() {
+        let (m, v, _) = planted();
+        let rep = solve_analogies(&m, &v, &[], AnalogyMethod::CosMul);
+        assert_eq!(rep.total, 0);
+        assert_eq!(rep.accuracy(), 0.0);
+    }
+}

@@ -1,0 +1,9 @@
+//! Embedding-quality evaluation (paper Section 5.1 "Training quality"):
+//! Spearman rank correlation against similarity judgements and analogy
+//! reconstruction with 3COSADD / 3COSMUL.
+
+pub mod analogy;
+pub mod similarity;
+
+pub use analogy::{solve_analogies, AnalogyMethod, AnalogyReport};
+pub use similarity::{evaluate_similarity, spearman, SimilarityReport};

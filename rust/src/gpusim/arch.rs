@@ -1,0 +1,150 @@
+//! Architecture descriptors: the paper's Table 2 platforms.
+
+/// One GPU architecture's modeling parameters.  Specs not in Table 2
+/// (latencies, L2 size, register file) use the vendor's published values.
+#[derive(Debug, Clone)]
+pub struct ArchSpec {
+    pub name: &'static str,
+    pub generation: &'static str,
+    /// Streaming multiprocessors.
+    pub sms: usize,
+    /// Peak single-precision TFLOP/s.
+    pub peak_tflops: f64,
+    /// Device memory bandwidth, GB/s.
+    pub mem_bw_gbs: f64,
+    /// Warp schedulers per SM (paper Table 2).
+    pub warp_schedulers: usize,
+    /// Max resident warps per scheduler (paper Table 6 note: 16).
+    pub max_warps_per_scheduler: usize,
+    /// Shared memory per SM, bytes.
+    pub shared_per_sm: usize,
+    /// 32-bit registers per SM.
+    pub regs_per_sm: usize,
+    /// L2 cache, bytes.
+    pub l2_bytes: f64,
+    /// Core clock, GHz.
+    pub clock_ghz: f64,
+    /// Average latencies in cycles (vendor microbenchmark literature).
+    pub lat_l1: f64,
+    pub lat_l2: f64,
+    pub lat_dram: f64,
+}
+
+impl ArchSpec {
+    /// Nvidia V100 (Gen-6 Volta): 80 SMs, 14 TFLOP/s, 900 GB/s, 4 sched.
+    pub fn v100() -> Self {
+        ArchSpec {
+            name: "V100",
+            generation: "Volta",
+            sms: 80,
+            peak_tflops: 14.0,
+            mem_bw_gbs: 900.0,
+            warp_schedulers: 4,
+            max_warps_per_scheduler: 16,
+            shared_per_sm: 96 * 1024,
+            regs_per_sm: 65536,
+            l2_bytes: 6.0 * 1024.0 * 1024.0,
+            clock_ghz: 1.53,
+            lat_l1: 28.0,
+            lat_l2: 193.0,
+            lat_dram: 400.0,
+        }
+    }
+
+    /// Nvidia Titan XP (Gen-5 Pascal): 60 SMs, 12.15 TFLOP/s, 548 GB/s.
+    pub fn titan_xp() -> Self {
+        ArchSpec {
+            name: "TitanXP",
+            generation: "Pascal",
+            sms: 60,
+            peak_tflops: 12.15,
+            mem_bw_gbs: 548.0,
+            warp_schedulers: 2,
+            max_warps_per_scheduler: 16,
+            shared_per_sm: 96 * 1024,
+            regs_per_sm: 65536,
+            l2_bytes: 3.0 * 1024.0 * 1024.0,
+            clock_ghz: 1.58,
+            lat_l1: 82.0,
+            lat_l2: 216.0,
+            lat_dram: 440.0,
+        }
+    }
+
+    /// Nvidia P100 (Gen-5 Pascal): 56 SMs, 9.3 TFLOP/s, 549 GB/s HBM2.
+    pub fn p100() -> Self {
+        ArchSpec {
+            name: "P100",
+            generation: "Pascal",
+            sms: 56,
+            peak_tflops: 9.3,
+            mem_bw_gbs: 549.0,
+            warp_schedulers: 2,
+            max_warps_per_scheduler: 16,
+            shared_per_sm: 64 * 1024,
+            regs_per_sm: 65536,
+            l2_bytes: 4.0 * 1024.0 * 1024.0,
+            clock_ghz: 1.33,
+            lat_l1: 82.0,
+            lat_l2: 234.0,
+            lat_dram: 500.0,
+        }
+    }
+
+    pub fn all() -> Vec<ArchSpec> {
+        vec![Self::v100(), Self::titan_xp(), Self::p100()]
+    }
+
+    /// Roofline knee: FLOP/byte where compute- and memory-bound meet
+    /// (Figure 1's dotted line).
+    pub fn roofline_knee(&self) -> f64 {
+        self.peak_tflops * 1e12 / (self.mem_bw_gbs * 1e9)
+    }
+
+    /// Attainable GFLOP/s at a given arithmetic intensity (Figure 1's
+    /// solid roofline boundary).
+    pub fn roofline_gflops(&self, ai: f64) -> f64 {
+        (self.peak_tflops * 1e3).min(ai * self.mem_bw_gbs)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn table2_values() {
+        let v = ArchSpec::v100();
+        assert_eq!(v.sms, 80);
+        assert_eq!(v.warp_schedulers, 4);
+        assert_eq!(v.peak_tflops, 14.0);
+        let xp = ArchSpec::titan_xp();
+        assert_eq!(xp.sms, 60);
+        assert_eq!(xp.warp_schedulers, 2);
+        let p = ArchSpec::p100();
+        assert_eq!(p.sms, 56);
+        assert_eq!(p.mem_bw_gbs, 549.0);
+    }
+
+    #[test]
+    fn roofline_math() {
+        let v = ArchSpec::v100();
+        // knee = 14e12 / 900e9 ≈ 15.6 flop/byte
+        assert!((v.roofline_knee() - 15.555).abs() < 0.1);
+        // memory-bound region scales with AI
+        assert!((v.roofline_gflops(1.0) - 900.0).abs() < 1.0);
+        // compute-bound region flat at peak
+        assert!((v.roofline_gflops(100.0) - 14_000.0).abs() < 1.0);
+    }
+
+    #[test]
+    fn newer_arch_strictly_better() {
+        let v = ArchSpec::v100();
+        let p = ArchSpec::p100();
+        assert!(v.sms > p.sms);
+        assert!(v.peak_tflops > p.peak_tflops);
+        assert!(v.mem_bw_gbs > p.mem_bw_gbs);
+        assert!(v.warp_schedulers > p.warp_schedulers);
+        assert!(v.lat_dram < p.lat_dram);
+    }
+}

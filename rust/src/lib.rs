@@ -1,0 +1,37 @@
+//! # FULL-W2V — Rust + JAX + Pallas reproduction
+//!
+//! Reproduction of *"FULL-W2V: Fully Exploiting Data Reuse for W2V on
+//! GPU-Accelerated Systems"* (Randall, Allen, Ge — ICS'21) as a
+//! three-layer system:
+//!
+//! * **L3 (this crate)** — the coordinator: corpus/vocab pipeline,
+//!   multi-stream batching with backpressure, PJRT runtime, training
+//!   loop with Hogwild-style delta scatter, CPU baselines, evaluation
+//!   harness, and the analytical GPU models that regenerate the paper's
+//!   tables.
+//! * **L2 (python/compile/model.py)** — the batched SGNS step in JAX,
+//!   AOT-lowered to HLO text at build time.
+//! * **L1 (python/compile/kernels/)** — Pallas sentence kernels
+//!   implementing the paper's data-reuse optimizations.
+//!
+//! See DESIGN.md for the system inventory and per-experiment index.
+
+pub mod batcher;
+pub mod cli;
+pub mod config;
+pub mod coordinator;
+pub mod corpus;
+pub mod cpu_baseline;
+pub mod eval;
+pub mod gpusim;
+pub mod memmodel;
+pub mod metrics;
+pub mod model;
+pub mod runtime;
+pub mod sampler;
+pub mod util;
+pub mod workbench;
+
+pub fn version() -> &'static str {
+    env!("CARGO_PKG_VERSION")
+}

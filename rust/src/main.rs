@@ -1,0 +1,226 @@
+//! fullw2v — leader binary: CLI over the FULL-W2V training system.
+
+use anyhow::{anyhow, Context, Result};
+use fullw2v::cli::{self, Cli, Command};
+use fullw2v::config::Config;
+use fullw2v::coordinator::{train_all, SgnsTrainer};
+use fullw2v::corpus::reader::{read_all, ReaderOptions};
+use fullw2v::corpus::synthetic::SyntheticSpec;
+use fullw2v::corpus::vocab::Vocab;
+use fullw2v::eval::similarity::spearman;
+use fullw2v::model::EmbeddingModel;
+use fullw2v::util::log;
+use fullw2v::workbench::Workbench;
+use std::path::Path;
+use std::sync::Arc;
+
+fn main() {
+    log::init_from_env();
+    let args: Vec<String> = std::env::args().skip(1).collect();
+    let cli = match cli::parse(&args) {
+        Ok(c) => c,
+        Err(e) => {
+            eprintln!("{e}");
+            std::process::exit(2);
+        }
+    };
+    if let Err(e) = run(cli) {
+        eprintln!("error: {e:#}");
+        std::process::exit(1);
+    }
+}
+
+fn spec_by_name(name: &str) -> Result<SyntheticSpec> {
+    Ok(match name {
+        "tiny" => SyntheticSpec::tiny(),
+        "text8" | "text8-mini" => SyntheticSpec::text8_mini(),
+        "1bw" | "1bw-mini" => SyntheticSpec::obw_mini(),
+        other => return Err(anyhow!("unknown synthetic spec '{other}'")),
+    })
+}
+
+fn run(cli: Cli) -> Result<()> {
+    match cli.command {
+        Command::Help => {
+            println!("{}", cli::USAGE);
+            Ok(())
+        }
+        Command::Version => {
+            println!("fullw2v {}", fullw2v::version());
+            Ok(())
+        }
+        Command::Manifest => {
+            let dir = fullw2v::workbench::default_artifacts_dir();
+            let m = fullw2v::runtime::Manifest::load(Path::new(&dir))?;
+            println!("artifacts in {dir}:");
+            for e in &m.executables {
+                println!(
+                    "  {:36} variant={:13} B={} S={} d={} N={} Wf={}",
+                    e.name, e.variant, e.b, e.s, e.d, e.n, e.wf
+                );
+            }
+            Ok(())
+        }
+        Command::GpuSim => {
+            let w = fullw2v::memmodel::Workload::text8_paper();
+            for p in fullw2v::gpusim::project_all(&w) {
+                println!(
+                    "{:8} {:14} {:>8.1} Mwords/s  ipc {:.2}  occupancy {:.0}%",
+                    p.arch,
+                    p.variant.name(),
+                    p.sim.words_per_sec / 1e6,
+                    p.sim.ipc,
+                    100.0 * p.occupancy.occupancy_frac
+                );
+            }
+            println!(
+                "(full tables: cargo run --release --example gpusim_report)"
+            );
+            Ok(())
+        }
+        Command::GenCorpus { spec, out } => {
+            let spec = spec_by_name(&spec)?;
+            let corpus =
+                fullw2v::corpus::synthetic::SyntheticCorpus::generate(spec);
+            std::fs::create_dir_all(&out)?;
+            let dir = Path::new(&out);
+            std::fs::write(dir.join("corpus.txt"), corpus.to_text())?;
+            let mut pairs = String::new();
+            for p in corpus.gold_similarity_pairs(500, 7) {
+                pairs.push_str(&format!(
+                    "{}\t{}\t{:.6}\n",
+                    p.a, p.b, p.score
+                ));
+            }
+            std::fs::write(dir.join("gold_pairs.tsv"), pairs)?;
+            let mut ana = String::new();
+            for g in corpus.gold_analogies(300, 7) {
+                ana.push_str(&format!("{} {} {} {}\n", g.a, g.b, g.c, g.d));
+            }
+            std::fs::write(dir.join("gold_analogies.txt"), ana)?;
+            println!(
+                "wrote corpus.txt, gold_pairs.tsv, gold_analogies.txt to {out}"
+            );
+            Ok(())
+        }
+        Command::Train { corpus, synthetic, out } => {
+            train_cmd(cli.config, corpus, synthetic, out)
+        }
+        Command::Eval { model, pairs } => eval_cmd(&model, &pairs),
+        Command::Nn { model, word, k } => nn_cmd(&model, &word, k),
+    }
+}
+
+fn train_cmd(
+    cfg: Config,
+    corpus: Option<String>,
+    synthetic: Option<String>,
+    out: Option<String>,
+) -> Result<()> {
+    let epochs = cfg.train.epochs;
+    let (vocab, report, model) = match (corpus, synthetic) {
+        (Some(path), None) => {
+            let text = std::fs::read_to_string(&path)
+                .with_context(|| format!("reading corpus {path}"))?;
+            let vocab =
+                Vocab::build(text.split_whitespace(), cfg.train.min_count);
+            let opts = ReaderOptions {
+                max_sentence_len: cfg.train.max_sentence_len,
+                ignore_delimiters: cfg.train.ignore_delimiters,
+                pack_len: cfg.train.max_sentence_len,
+            };
+            let (sents, raw) = read_all(text.as_bytes(), &vocab, opts);
+            log::log(
+                log::Level::Info,
+                format_args!(
+                    "corpus: {raw} raw tokens, vocab {}, {} sentences",
+                    vocab.len(),
+                    sents.len()
+                ),
+            );
+            let sentences = Arc::new(sents);
+            let total: u64 = sentences.iter().map(|s| s.len() as u64).sum();
+            let mut cfg = cfg;
+            if cfg.artifacts_dir == "artifacts" {
+                cfg.artifacts_dir =
+                    fullw2v::workbench::default_artifacts_dir();
+            }
+            let mut coord =
+                fullw2v::coordinator::Coordinator::new(cfg, &vocab, total)?;
+            let report = train_all(&mut coord, &sentences, epochs)?;
+            let model = coord.model().clone();
+            (vocab, report, model)
+        }
+        (None, syn) => {
+            let spec = spec_by_name(&syn.unwrap_or_else(|| "tiny".into()))?;
+            let wb = Workbench::prepare(spec, cfg.train.min_count);
+            let mut coord = wb.coordinator(cfg)?;
+            let report = train_all(&mut coord, &wb.sentences, epochs)?;
+            let model = coord.model().clone();
+            (wb.vocab, report, model)
+        }
+        (Some(_), Some(_)) => {
+            return Err(anyhow!("--corpus and --synthetic are exclusive"))
+        }
+    };
+    for e in &report.epochs {
+        println!(
+            "epoch {}: {:>9.0} words/s  loss/word {:.4}  batching {:>9.0} w/s",
+            e.epoch, e.words_per_sec, e.loss_per_word, e.batching_rate
+        );
+    }
+    println!("aggregate: {:.0} words/s", report.words_per_sec());
+    if let Some(path) = out {
+        model.save_text(&vocab, Path::new(&path))?;
+        println!("model written to {path} (word2vec text format)");
+    }
+    Ok(())
+}
+
+fn eval_cmd(model_path: &str, pairs_path: &str) -> Result<()> {
+    let (words, model) = EmbeddingModel::load_text(Path::new(model_path))?;
+    let index: std::collections::HashMap<&str, u32> = words
+        .iter()
+        .enumerate()
+        .map(|(i, w)| (w.as_str(), i as u32))
+        .collect();
+    let text = std::fs::read_to_string(pairs_path)?;
+    let mut model_scores = Vec::new();
+    let mut gold_scores = Vec::new();
+    let mut skipped = 0;
+    for line in text.lines() {
+        let mut it = line.split('\t');
+        let (a, b, score) = match (it.next(), it.next(), it.next()) {
+            (Some(a), Some(b), Some(s)) => (a, b, s),
+            _ => continue,
+        };
+        match (index.get(a), index.get(b), score.parse::<f64>()) {
+            (Some(&ia), Some(&ib), Ok(s)) => {
+                model_scores.push(fullw2v::model::embeddings::cosine(
+                    model.syn0_row(ia),
+                    model.syn0_row(ib),
+                ));
+                gold_scores.push(s);
+            }
+            _ => skipped += 1,
+        }
+    }
+    println!(
+        "spearman {:.4} over {} pairs ({skipped} skipped)",
+        spearman(&model_scores, &gold_scores),
+        model_scores.len()
+    );
+    Ok(())
+}
+
+fn nn_cmd(model_path: &str, word: &str, k: usize) -> Result<()> {
+    let (words, model) = EmbeddingModel::load_text(Path::new(model_path))?;
+    let id = words
+        .iter()
+        .position(|w| w == word)
+        .ok_or_else(|| anyhow!("word '{word}' not in model"))? as u32;
+    for (nid, sim) in model.nearest(id, k) {
+        println!("{:24} {:.4}", words[nid as usize], sim);
+    }
+    Ok(())
+}

@@ -1,0 +1,144 @@
+//! Training/benchmark metrics and experiment-row emission.
+
+use crate::util::json::{obj, Json};
+
+/// Per-epoch training metrics.
+#[derive(Debug, Clone, Default)]
+pub struct EpochReport {
+    pub epoch: usize,
+    /// Real words trained this epoch (post-subsampling).
+    pub words: u64,
+    pub batches: u64,
+    /// Sum of per-sentence NS losses.
+    pub loss_sum: f64,
+    /// Mean NS loss per trained word.
+    pub loss_per_word: f64,
+    /// Wall-clock seconds for the epoch.
+    pub seconds: f64,
+    /// End-to-end training throughput (words/sec).
+    pub words_per_sec: f64,
+    /// Pure batching rate (words/sec, Table 1 metric).
+    pub batching_rate: f64,
+    /// Final learning rate of the epoch.
+    pub lr_end: f32,
+}
+
+impl EpochReport {
+    pub fn finalize(&mut self) {
+        if self.seconds > 0.0 {
+            self.words_per_sec = self.words as f64 / self.seconds;
+        }
+        if self.words > 0 {
+            self.loss_per_word = self.loss_sum / self.words as f64;
+        }
+    }
+
+    pub fn to_json(&self) -> Json {
+        obj(vec![
+            ("epoch", Json::Num(self.epoch as f64)),
+            ("words", Json::Num(self.words as f64)),
+            ("batches", Json::Num(self.batches as f64)),
+            ("loss_per_word", Json::Num(self.loss_per_word)),
+            ("seconds", Json::Num(self.seconds)),
+            ("words_per_sec", Json::Num(self.words_per_sec)),
+            ("batching_rate", Json::Num(self.batching_rate)),
+            ("lr_end", Json::Num(self.lr_end as f64)),
+        ])
+    }
+}
+
+/// Whole-run training metrics.
+#[derive(Debug, Clone, Default)]
+pub struct TrainReport {
+    pub implementation: String,
+    pub epochs: Vec<EpochReport>,
+}
+
+impl TrainReport {
+    pub fn total_words(&self) -> u64 {
+        self.epochs.iter().map(|e| e.words).sum()
+    }
+
+    pub fn total_seconds(&self) -> f64 {
+        self.epochs.iter().map(|e| e.seconds).sum()
+    }
+
+    /// Aggregate throughput over all epochs.
+    pub fn words_per_sec(&self) -> f64 {
+        let s = self.total_seconds();
+        if s > 0.0 {
+            self.total_words() as f64 / s
+        } else {
+            0.0
+        }
+    }
+
+    /// First/last epoch loss — the convergence signal examples log.
+    pub fn loss_trajectory(&self) -> (f64, f64) {
+        let first = self.epochs.first().map(|e| e.loss_per_word).unwrap_or(0.0);
+        let last = self.epochs.last().map(|e| e.loss_per_word).unwrap_or(0.0);
+        (first, last)
+    }
+
+    pub fn to_json(&self) -> Json {
+        obj(vec![
+            ("implementation", Json::Str(self.implementation.clone())),
+            ("words_per_sec", Json::Num(self.words_per_sec())),
+            (
+                "epochs",
+                Json::Arr(self.epochs.iter().map(|e| e.to_json()).collect()),
+            ),
+        ])
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn finalize_computes_rates() {
+        let mut e = EpochReport {
+            words: 1000,
+            loss_sum: 2500.0,
+            seconds: 2.0,
+            ..Default::default()
+        };
+        e.finalize();
+        assert!((e.words_per_sec - 500.0).abs() < 1e-9);
+        assert!((e.loss_per_word - 2.5).abs() < 1e-9);
+    }
+
+    #[test]
+    fn report_aggregates() {
+        let mut r = TrainReport {
+            implementation: "x".into(),
+            epochs: vec![],
+        };
+        for i in 0..3 {
+            let mut e = EpochReport {
+                epoch: i,
+                words: 100,
+                loss_sum: (100 * (3 - i)) as f64,
+                seconds: 1.0,
+                ..Default::default()
+            };
+            e.finalize();
+            r.epochs.push(e);
+        }
+        assert_eq!(r.total_words(), 300);
+        assert!((r.words_per_sec() - 100.0).abs() < 1e-9);
+        let (first, last) = r.loss_trajectory();
+        assert!(first > last); // decreasing loss
+    }
+
+    #[test]
+    fn json_emission() {
+        let mut e = EpochReport { epoch: 1, words: 10, seconds: 1.0, ..Default::default() };
+        e.finalize();
+        let r = TrainReport { implementation: "t".into(), epochs: vec![e] };
+        let j = r.to_json().to_string();
+        assert!(j.contains("\"implementation\":\"t\""));
+        assert!(j.contains("\"epochs\":["));
+    }
+}

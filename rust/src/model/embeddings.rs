@@ -1,0 +1,292 @@
+//! Embedding matrices and model I/O.
+//!
+//! Initialization follows word2vec.c: syn0 uniform in
+//! `[-0.5/d, 0.5/d)` per component, syn1neg zeroed.  Persistence supports
+//! the word2vec text format (interoperable with gensim et al.) and a raw
+//! binary format for fast checkpointing.
+
+use crate::corpus::vocab::Vocab;
+use crate::util::rng::Pcg32;
+use std::io::{BufRead, BufReader, BufWriter, Read, Write};
+use std::path::Path;
+
+/// Dense row-major matrix of word embeddings.
+#[derive(Debug, Clone)]
+pub struct EmbeddingModel {
+    /// Input-side vectors (syn0), V x d row-major.
+    pub syn0: Vec<f32>,
+    /// Output-side vectors (syn1neg), V x d row-major.
+    pub syn1: Vec<f32>,
+    pub vocab_size: usize,
+    pub dim: usize,
+}
+
+impl EmbeddingModel {
+    /// word2vec-style initialization.
+    pub fn init(vocab_size: usize, dim: usize, seed: u64) -> Self {
+        let mut rng = Pcg32::with_stream(seed, 0xE3B);
+        let scale = 1.0 / dim as f32;
+        let syn0 = (0..vocab_size * dim)
+            .map(|_| (rng.next_f32() - 0.5) * scale)
+            .collect();
+        let syn1 = vec![0.0; vocab_size * dim];
+        EmbeddingModel { syn0, syn1, vocab_size, dim }
+    }
+
+    #[inline]
+    pub fn syn0_row(&self, id: u32) -> &[f32] {
+        let i = id as usize * self.dim;
+        &self.syn0[i..i + self.dim]
+    }
+
+    #[inline]
+    pub fn syn1_row(&self, id: u32) -> &[f32] {
+        let i = id as usize * self.dim;
+        &self.syn1[i..i + self.dim]
+    }
+
+    #[inline]
+    pub fn syn0_row_mut(&mut self, id: u32) -> &mut [f32] {
+        let i = id as usize * self.dim;
+        &mut self.syn0[i..i + self.dim]
+    }
+
+    #[inline]
+    pub fn syn1_row_mut(&mut self, id: u32) -> &mut [f32] {
+        let i = id as usize * self.dim;
+        &mut self.syn1[i..i + self.dim]
+    }
+
+    /// Cosine similarity between two word ids (input vectors).
+    pub fn cosine(&self, a: u32, b: u32) -> f64 {
+        cosine(self.syn0_row(a), self.syn0_row(b))
+    }
+
+    /// Top-k nearest neighbors of `id` by cosine, excluding itself.
+    pub fn nearest(&self, id: u32, k: usize) -> Vec<(u32, f64)> {
+        let mut scored: Vec<(u32, f64)> = (0..self.vocab_size as u32)
+            .filter(|&x| x != id)
+            .map(|x| (x, self.cosine(id, x)))
+            .collect();
+        scored.sort_by(|a, b| b.1.total_cmp(&a.1));
+        scored.truncate(k);
+        scored
+    }
+
+    /// L2-normalized copy of syn0 (rows), used by the analogy solver.
+    pub fn normalized_syn0(&self) -> Vec<f32> {
+        let mut out = self.syn0.clone();
+        for r in 0..self.vocab_size {
+            let row = &mut out[r * self.dim..(r + 1) * self.dim];
+            let n = row.iter().map(|x| (x * x) as f64).sum::<f64>().sqrt()
+                as f32;
+            if n > 0.0 {
+                for x in row.iter_mut() {
+                    *x /= n;
+                }
+            }
+        }
+        out
+    }
+
+    /// Save in word2vec *text* format: header `V d`, then
+    /// `word v1 v2 ... vd` lines.
+    pub fn save_text(&self, vocab: &Vocab, path: &Path) -> std::io::Result<()> {
+        let mut f = BufWriter::new(std::fs::File::create(path)?);
+        writeln!(f, "{} {}", self.vocab_size, self.dim)?;
+        for id in 0..self.vocab_size as u32 {
+            write!(f, "{}", vocab.word(id))?;
+            for x in self.syn0_row(id) {
+                write!(f, " {x}")?;
+            }
+            writeln!(f)?;
+        }
+        Ok(())
+    }
+
+    /// Load from word2vec text format; returns (words, model).
+    pub fn load_text(path: &Path) -> std::io::Result<(Vec<String>, Self)> {
+        let f = BufReader::new(std::fs::File::open(path)?);
+        let mut lines = f.lines();
+        let header = lines.next().ok_or_else(|| bad("empty file"))??;
+        let (v, d) = header.split_once(' ').ok_or_else(|| bad("bad header"))?;
+        let vocab_size: usize = v.parse().map_err(|_| bad("bad V"))?;
+        let dim: usize = d.trim().parse().map_err(|_| bad("bad d"))?;
+        let mut words = Vec::with_capacity(vocab_size);
+        let mut syn0 = Vec::with_capacity(vocab_size * dim);
+        for line in lines {
+            let line = line?;
+            if line.is_empty() {
+                continue;
+            }
+            let mut it = line.split_whitespace();
+            let w = it.next().ok_or_else(|| bad("missing word"))?;
+            words.push(w.to_string());
+            let before = syn0.len();
+            for tok in it {
+                syn0.push(tok.parse::<f32>().map_err(|_| bad("bad float"))?);
+            }
+            if syn0.len() - before != dim {
+                return Err(bad("wrong vector length"));
+            }
+        }
+        if words.len() != vocab_size {
+            return Err(bad("wrong word count"));
+        }
+        let syn1 = vec![0.0; vocab_size * dim];
+        Ok((words, EmbeddingModel { syn0, syn1, vocab_size, dim }))
+    }
+
+    /// Save both matrices in a raw little-endian binary checkpoint.
+    pub fn save_binary(&self, path: &Path) -> std::io::Result<()> {
+        let mut f = BufWriter::new(std::fs::File::create(path)?);
+        f.write_all(b"FW2V")?;
+        f.write_all(&(self.vocab_size as u64).to_le_bytes())?;
+        f.write_all(&(self.dim as u64).to_le_bytes())?;
+        for m in [&self.syn0, &self.syn1] {
+            for x in m {
+                f.write_all(&x.to_le_bytes())?;
+            }
+        }
+        Ok(())
+    }
+
+    /// Load a raw binary checkpoint.
+    pub fn load_binary(path: &Path) -> std::io::Result<Self> {
+        let mut f = BufReader::new(std::fs::File::open(path)?);
+        let mut magic = [0u8; 4];
+        f.read_exact(&mut magic)?;
+        if &magic != b"FW2V" {
+            return Err(bad("bad magic"));
+        }
+        let mut u = [0u8; 8];
+        f.read_exact(&mut u)?;
+        let vocab_size = u64::from_le_bytes(u) as usize;
+        f.read_exact(&mut u)?;
+        let dim = u64::from_le_bytes(u) as usize;
+        let mut read_mat = |n: usize| -> std::io::Result<Vec<f32>> {
+            let mut bytes = vec![0u8; n * 4];
+            f.read_exact(&mut bytes)?;
+            Ok(bytes
+                .chunks_exact(4)
+                .map(|b| f32::from_le_bytes([b[0], b[1], b[2], b[3]]))
+                .collect())
+        };
+        let syn0 = read_mat(vocab_size * dim)?;
+        let syn1 = read_mat(vocab_size * dim)?;
+        Ok(EmbeddingModel { syn0, syn1, vocab_size, dim })
+    }
+}
+
+fn bad(msg: &str) -> std::io::Error {
+    std::io::Error::new(std::io::ErrorKind::InvalidData, msg.to_string())
+}
+
+/// Cosine similarity of two equal-length vectors.
+pub fn cosine(a: &[f32], b: &[f32]) -> f64 {
+    let mut dot = 0.0f64;
+    let mut na = 0.0f64;
+    let mut nb = 0.0f64;
+    for (x, y) in a.iter().zip(b) {
+        dot += (*x as f64) * (*y as f64);
+        na += (*x as f64) * (*x as f64);
+        nb += (*y as f64) * (*y as f64);
+    }
+    if na == 0.0 || nb == 0.0 {
+        0.0
+    } else {
+        dot / (na.sqrt() * nb.sqrt())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn vocab3() -> Vocab {
+        Vocab::from_counts(
+            vec![("a".into(), 30u64), ("b".into(), 20), ("c".into(), 10)],
+            1,
+        )
+    }
+
+    #[test]
+    fn init_ranges() {
+        let m = EmbeddingModel::init(100, 64, 1);
+        assert_eq!(m.syn0.len(), 6400);
+        assert!(m.syn1.iter().all(|&x| x == 0.0));
+        let bound = 0.5 / 64.0 + 1e-9;
+        assert!(m.syn0.iter().all(|&x| x >= -bound && x < bound));
+        // not all identical
+        assert!(m.syn0.iter().any(|&x| x != m.syn0[0]));
+    }
+
+    #[test]
+    fn deterministic_init() {
+        let a = EmbeddingModel::init(10, 8, 42);
+        let b = EmbeddingModel::init(10, 8, 42);
+        assert_eq!(a.syn0, b.syn0);
+        let c = EmbeddingModel::init(10, 8, 43);
+        assert_ne!(a.syn0, c.syn0);
+    }
+
+    #[test]
+    fn cosine_properties() {
+        assert!((cosine(&[1.0, 0.0], &[1.0, 0.0]) - 1.0).abs() < 1e-12);
+        assert!(cosine(&[1.0, 0.0], &[0.0, 1.0]).abs() < 1e-12);
+        assert!((cosine(&[1.0, 0.0], &[-1.0, 0.0]) + 1.0).abs() < 1e-12);
+        assert_eq!(cosine(&[0.0, 0.0], &[1.0, 1.0]), 0.0);
+    }
+
+    #[test]
+    fn nearest_finds_planted_neighbor() {
+        let mut m = EmbeddingModel::init(5, 4, 1);
+        m.syn0_row_mut(0).copy_from_slice(&[1.0, 0.0, 0.0, 0.0]);
+        m.syn0_row_mut(3).copy_from_slice(&[0.9, 0.1, 0.0, 0.0]);
+        let nn = m.nearest(0, 2);
+        assert_eq!(nn[0].0, 3);
+        assert!(nn[0].1 > 0.9);
+    }
+
+    #[test]
+    fn text_roundtrip() {
+        let v = vocab3();
+        let m = EmbeddingModel::init(3, 4, 7);
+        let dir = std::env::temp_dir().join("fullw2v_model_test");
+        std::fs::create_dir_all(&dir).unwrap();
+        let p = dir.join("emb.txt");
+        m.save_text(&v, &p).unwrap();
+        let (words, m2) = EmbeddingModel::load_text(&p).unwrap();
+        assert_eq!(words, vec!["a", "b", "c"]);
+        assert_eq!(m2.dim, 4);
+        for (x, y) in m.syn0.iter().zip(&m2.syn0) {
+            assert!((x - y).abs() < 1e-5);
+        }
+        std::fs::remove_file(p).ok();
+    }
+
+    #[test]
+    fn binary_roundtrip_exact() {
+        let m = EmbeddingModel::init(7, 5, 3);
+        let dir = std::env::temp_dir().join("fullw2v_model_test");
+        std::fs::create_dir_all(&dir).unwrap();
+        let p = dir.join("emb.bin");
+        m.save_binary(&p).unwrap();
+        let m2 = EmbeddingModel::load_binary(&p).unwrap();
+        assert_eq!(m.syn0, m2.syn0);
+        assert_eq!(m.syn1, m2.syn1);
+        assert_eq!(m.vocab_size, m2.vocab_size);
+        std::fs::remove_file(p).ok();
+    }
+
+    #[test]
+    fn normalized_rows_are_unit() {
+        let m = EmbeddingModel::init(4, 8, 9);
+        let n = m.normalized_syn0();
+        for r in 0..4 {
+            let row = &n[r * 8..(r + 1) * 8];
+            let norm: f64 = row.iter().map(|x| (x * x) as f64).sum();
+            assert!((norm - 1.0).abs() < 1e-5);
+        }
+    }
+}

@@ -1,0 +1,7 @@
+//! The embedding model state: syn0 (input vectors) / syn1neg (output
+//! vectors), word2vec-compatible initialization, persistence, and
+//! similarity queries.
+
+pub mod embeddings;
+
+pub use embeddings::EmbeddingModel;

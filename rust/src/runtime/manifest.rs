@@ -1,0 +1,254 @@
+//! Artifact manifest: the machine-readable index `python/compile/aot.py`
+//! writes next to the HLO text files.
+
+use crate::util::json::Json;
+use anyhow::{anyhow, bail, Context, Result};
+use std::path::{Path, PathBuf};
+
+/// Tensor descriptor (dtype + shape) from the manifest.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct TensorSpec {
+    pub name: String,
+    pub dtype: String,
+    pub shape: Vec<usize>,
+}
+
+impl TensorSpec {
+    pub fn element_count(&self) -> usize {
+        self.shape.iter().product::<usize>().max(1)
+    }
+
+    fn from_json(v: &Json) -> Result<Self> {
+        Ok(TensorSpec {
+            name: str_field(v, "name")?,
+            dtype: str_field(v, "dtype")?,
+            shape: v
+                .get("shape")
+                .and_then(Json::as_arr)
+                .ok_or_else(|| anyhow!("tensor missing shape"))?
+                .iter()
+                .map(|x| x.as_usize().ok_or_else(|| anyhow!("bad dim")))
+                .collect::<Result<_>>()?,
+        })
+    }
+}
+
+/// One AOT executable's description.
+#[derive(Debug, Clone)]
+pub struct ExecSpec {
+    pub name: String,
+    pub variant: String,
+    pub file: PathBuf,
+    pub b: usize,
+    pub s: usize,
+    pub d: usize,
+    pub n: usize,
+    pub wf: usize,
+    pub inputs: Vec<TensorSpec>,
+    pub outputs: Vec<TensorSpec>,
+}
+
+/// The parsed manifest.
+#[derive(Debug, Clone)]
+pub struct Manifest {
+    pub dir: PathBuf,
+    pub executables: Vec<ExecSpec>,
+}
+
+fn str_field(v: &Json, key: &str) -> Result<String> {
+    v.get(key)
+        .and_then(Json::as_str)
+        .map(|s| s.to_string())
+        .ok_or_else(|| anyhow!("missing string field '{key}'"))
+}
+
+fn usize_field(v: &Json, key: &str) -> Result<usize> {
+    v.get(key)
+        .and_then(Json::as_usize)
+        .ok_or_else(|| anyhow!("missing integer field '{key}'"))
+}
+
+impl Manifest {
+    /// Load and validate `<dir>/manifest.json`.
+    pub fn load(dir: &Path) -> Result<Self> {
+        let path = dir.join("manifest.json");
+        let text = std::fs::read_to_string(&path)
+            .with_context(|| format!("reading {}", path.display()))?;
+        Self::parse(dir, &text)
+    }
+
+    pub fn parse(dir: &Path, text: &str) -> Result<Self> {
+        let doc = Json::parse(text).context("parsing manifest.json")?;
+        let format = usize_field(&doc, "format")?;
+        if format != 1 {
+            bail!("unsupported manifest format {format}");
+        }
+        let interchange = str_field(&doc, "interchange")?;
+        if interchange != "hlo-text" {
+            bail!("unsupported interchange '{interchange}'");
+        }
+        let mut executables = Vec::new();
+        for e in doc
+            .get("executables")
+            .and_then(Json::as_arr)
+            .ok_or_else(|| anyhow!("manifest missing executables"))?
+        {
+            let spec = ExecSpec {
+                name: str_field(e, "name")?,
+                variant: str_field(e, "variant")?,
+                file: dir.join(str_field(e, "file")?),
+                b: usize_field(e, "b")?,
+                s: usize_field(e, "s")?,
+                d: usize_field(e, "d")?,
+                n: usize_field(e, "n")?,
+                wf: usize_field(e, "wf")?,
+                inputs: e
+                    .get("inputs")
+                    .and_then(Json::as_arr)
+                    .ok_or_else(|| anyhow!("missing inputs"))?
+                    .iter()
+                    .map(TensorSpec::from_json)
+                    .collect::<Result<_>>()?,
+                outputs: e
+                    .get("outputs")
+                    .and_then(Json::as_arr)
+                    .ok_or_else(|| anyhow!("missing outputs"))?
+                    .iter()
+                    .map(TensorSpec::from_json)
+                    .collect::<Result<_>>()?,
+            };
+            spec.validate()?;
+            executables.push(spec);
+        }
+        Ok(Manifest { dir: dir.to_path_buf(), executables })
+    }
+
+    pub fn find(&self, name: &str) -> Option<&ExecSpec> {
+        self.executables.iter().find(|e| e.name == name)
+    }
+
+    /// All executables of a given kernel variant.
+    pub fn by_variant(&self, variant: &str) -> Vec<&ExecSpec> {
+        self.executables.iter().filter(|e| e.variant == variant).collect()
+    }
+}
+
+impl ExecSpec {
+    /// Check the I/O contract matches what the coordinator expects
+    /// (DESIGN.md Section 8) so shape bugs fail at load, not at scatter.
+    pub fn validate(&self) -> Result<()> {
+        let (b, s, d, n) = (self.b, self.s, self.d, self.n);
+        let want_inputs = [
+            ("syn0", "f32", vec![b, s, d]),
+            ("syn1", "f32", vec![b, s, d]),
+            ("neg", "f32", vec![b, s, n, d]),
+            ("lens", "i32", vec![b]),
+            ("lr", "f32", vec![]),
+        ];
+        if self.inputs.len() != want_inputs.len() {
+            bail!("{}: expected 5 inputs, got {}", self.name, self.inputs.len());
+        }
+        for (got, (name, dtype, shape)) in self.inputs.iter().zip(&want_inputs)
+        {
+            if got.name != *name || got.dtype != *dtype || got.shape != *shape
+            {
+                bail!(
+                    "{}: input mismatch: got {:?}, want ({name}, {dtype}, {shape:?})",
+                    self.name,
+                    got
+                );
+            }
+        }
+        let want_outputs = [
+            ("d_syn0", vec![b, s, d]),
+            ("d_syn1", vec![b, s, d]),
+            ("d_neg", vec![b, s, n, d]),
+            ("loss", vec![b]),
+        ];
+        if self.outputs.len() != want_outputs.len() {
+            bail!("{}: expected 4 outputs", self.name);
+        }
+        for (got, (name, shape)) in self.outputs.iter().zip(&want_outputs) {
+            if got.name != *name || got.shape != *shape {
+                bail!("{}: output mismatch: {:?}", self.name, got);
+            }
+        }
+        if self.s < 2 * self.wf + 1 {
+            bail!("{}: S < 2*Wf+1", self.name);
+        }
+        Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn entry(name: &str, b: usize) -> String {
+        let (s, d, n) = (8, 4, 2);
+        format!(
+            r#"{{"name":"{name}","variant":"full_w2v","file":"{name}.hlo.txt",
+              "b":{b},"s":{s},"d":{d},"n":{n},"wf":2,
+              "inputs":[
+               {{"name":"syn0","dtype":"f32","shape":[{b},{s},{d}]}},
+               {{"name":"syn1","dtype":"f32","shape":[{b},{s},{d}]}},
+               {{"name":"neg","dtype":"f32","shape":[{b},{s},{n},{d}]}},
+               {{"name":"lens","dtype":"i32","shape":[{b}]}},
+               {{"name":"lr","dtype":"f32","shape":[]}}],
+              "outputs":[
+               {{"name":"d_syn0","dtype":"f32","shape":[{b},{s},{d}]}},
+               {{"name":"d_syn1","dtype":"f32","shape":[{b},{s},{d}]}},
+               {{"name":"d_neg","dtype":"f32","shape":[{b},{s},{n},{d}]}},
+               {{"name":"loss","dtype":"f32","shape":[{b}]}}]}}"#
+        )
+    }
+
+    fn doc(entries: &[String]) -> String {
+        format!(
+            r#"{{"format":1,"interchange":"hlo-text","executables":[{}]}}"#,
+            entries.join(",")
+        )
+    }
+
+    #[test]
+    fn parses_valid_manifest() {
+        let text = doc(&[entry("k1", 2), entry("k2", 4)]);
+        let m = Manifest::parse(Path::new("/tmp/a"), &text).unwrap();
+        assert_eq!(m.executables.len(), 2);
+        let e = m.find("k1").unwrap();
+        assert_eq!(e.b, 2);
+        assert_eq!(e.inputs[2].shape, vec![2, 8, 2, 4]);
+        assert_eq!(e.file, Path::new("/tmp/a/k1.hlo.txt"));
+        assert_eq!(m.by_variant("full_w2v").len(), 2);
+        assert!(m.find("nope").is_none());
+    }
+
+    #[test]
+    fn rejects_bad_format() {
+        let text = r#"{"format":2,"interchange":"hlo-text","executables":[]}"#;
+        assert!(Manifest::parse(Path::new("."), text).is_err());
+        let text = r#"{"format":1,"interchange":"proto","executables":[]}"#;
+        assert!(Manifest::parse(Path::new("."), text).is_err());
+    }
+
+    #[test]
+    fn rejects_io_contract_violation() {
+        // wrong neg shape: swap n and d
+        let bad = entry("k", 2).replace("[2,8,2,4]", "[2,8,4,2]");
+        let text = doc(&[bad]);
+        assert!(Manifest::parse(Path::new("."), &text).is_err());
+    }
+
+    #[test]
+    fn loads_real_artifacts_if_present() {
+        let dir = Path::new(env!("CARGO_MANIFEST_DIR")).join("artifacts");
+        if dir.join("manifest.json").exists() {
+            let m = Manifest::load(&dir).unwrap();
+            assert!(!m.executables.is_empty());
+            assert!(m.find("full_w2v_b64_s32_d128_n5_w3").is_some());
+            for e in &m.executables {
+                assert!(e.file.exists(), "missing {}", e.file.display());
+            }
+        }
+    }
+}

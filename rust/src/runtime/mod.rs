@@ -1,0 +1,242 @@
+//! PJRT runtime: loads AOT HLO-text artifacts and executes them from the
+//! Rust hot path.
+//!
+//! Wraps the `xla` crate: `PjRtClient::cpu()` →
+//! `HloModuleProto::from_text_file` → `client.compile` → `execute`.
+//! HLO *text* is the interchange format (the bundled xla_extension 0.5.1
+//! rejects jax≥0.5's 64-bit-id serialized protos; the text parser
+//! reassigns ids).  Python never runs on this path.
+
+pub mod manifest;
+
+pub use manifest::{ExecSpec, Manifest, TensorSpec};
+
+use anyhow::{anyhow, Context, Result};
+use std::collections::HashMap;
+use std::path::Path;
+use std::time::Instant;
+
+/// Flat input buffers for one training-step execution.
+#[derive(Debug, Clone)]
+pub struct StepInputs {
+    /// f32[B,S,d] gathered input-side rows.
+    pub syn0: Vec<f32>,
+    /// f32[B,S,d] gathered output-side rows of sentence words.
+    pub syn1: Vec<f32>,
+    /// f32[B,S,N,d] gathered output-side rows of per-window negatives.
+    pub neg: Vec<f32>,
+    /// i32[B] true sentence lengths.
+    pub lens: Vec<i32>,
+    /// learning rate.
+    pub lr: f32,
+}
+
+impl StepInputs {
+    /// Allocate zeroed buffers for a spec (reused across batches).
+    pub fn zeroed(spec: &ExecSpec) -> Self {
+        StepInputs {
+            syn0: vec![0.0; spec.b * spec.s * spec.d],
+            syn1: vec![0.0; spec.b * spec.s * spec.d],
+            neg: vec![0.0; spec.b * spec.s * spec.n * spec.d],
+            lens: vec![0; spec.b],
+            lr: 0.0,
+        }
+    }
+}
+
+/// Flat output buffers of one training-step execution.
+#[derive(Debug, Clone)]
+pub struct StepOutputs {
+    pub d_syn0: Vec<f32>,
+    pub d_syn1: Vec<f32>,
+    pub d_neg: Vec<f32>,
+    pub loss: Vec<f32>,
+}
+
+/// Cumulative executor statistics.
+#[derive(Debug, Clone, Default)]
+pub struct ExecStats {
+    pub executions: u64,
+    pub exec_seconds: f64,
+    pub compile_seconds: f64,
+}
+
+/// A compiled training-step executable.
+pub struct TrainStep {
+    pub spec: ExecSpec,
+    exe: xla::PjRtLoadedExecutable,
+}
+
+impl TrainStep {
+    /// Execute one batch.  Validates buffer sizes against the spec.
+    pub fn run(&self, inp: &StepInputs) -> Result<StepOutputs> {
+        let (b, s, d, n) = (self.spec.b, self.spec.s, self.spec.d, self.spec.n);
+        anyhow::ensure!(
+            inp.syn0.len() == b * s * d,
+            "syn0 len {} != {}",
+            inp.syn0.len(),
+            b * s * d
+        );
+        anyhow::ensure!(inp.syn1.len() == b * s * d, "syn1 len mismatch");
+        anyhow::ensure!(inp.neg.len() == b * s * n * d, "neg len mismatch");
+        anyhow::ensure!(inp.lens.len() == b, "lens len mismatch");
+
+        // single-copy marshaling (perf: Literal::vec1 + reshape would copy
+        // each buffer twice — EXPERIMENTS.md §Perf iteration 1)
+        let f32_lit = |data: &[f32], dims: &[usize]| {
+            xla::Literal::create_from_shape_and_untyped_data(
+                xla::ElementType::F32,
+                dims,
+                bytemuck_f32(data),
+            )
+        };
+        let syn0 = f32_lit(&inp.syn0, &[b, s, d])?;
+        let syn1 = f32_lit(&inp.syn1, &[b, s, d])?;
+        let neg = f32_lit(&inp.neg, &[b, s, n, d])?;
+        let lens = xla::Literal::create_from_shape_and_untyped_data(
+            xla::ElementType::S32,
+            &[b],
+            bytemuck_i32(&inp.lens),
+        )?;
+        let lr = xla::Literal::scalar(inp.lr);
+
+        let result = self
+            .exe
+            .execute::<xla::Literal>(&[syn0, syn1, neg, lens, lr])?[0][0]
+            .to_literal_sync()?;
+        let (o0, o1, o2, o3) = result.to_tuple4()?;
+        Ok(StepOutputs {
+            d_syn0: o0.to_vec::<f32>()?,
+            d_syn1: o1.to_vec::<f32>()?,
+            d_neg: o2.to_vec::<f32>()?,
+            loss: o3.to_vec::<f32>()?,
+        })
+    }
+}
+
+/// View an f32 slice as bytes (native endianness; XLA literals are host
+/// layout).  Safe: any f32 bit pattern is a valid byte sequence and u8
+/// alignment is 1.
+fn bytemuck_f32(data: &[f32]) -> &[u8] {
+    unsafe {
+        std::slice::from_raw_parts(data.as_ptr() as *const u8, data.len() * 4)
+    }
+}
+
+fn bytemuck_i32(data: &[i32]) -> &[u8] {
+    unsafe {
+        std::slice::from_raw_parts(data.as_ptr() as *const u8, data.len() * 4)
+    }
+}
+
+/// The PJRT engine: one client + a cache of compiled executables.
+pub struct Engine {
+    client: xla::PjRtClient,
+    manifest: Manifest,
+    cache: HashMap<String, std::sync::Arc<TrainStep>>,
+    stats: ExecStats,
+}
+
+impl Engine {
+    /// Create a CPU PJRT engine over an artifacts directory.
+    pub fn new(artifacts_dir: &Path) -> Result<Self> {
+        let manifest = Manifest::load(artifacts_dir)?;
+        let client = xla::PjRtClient::cpu()
+            .map_err(|e| anyhow!("PJRT cpu client: {e}"))?;
+        Ok(Engine {
+            client,
+            manifest,
+            cache: HashMap::new(),
+            stats: ExecStats::default(),
+        })
+    }
+
+    pub fn manifest(&self) -> &Manifest {
+        &self.manifest
+    }
+
+    pub fn platform(&self) -> String {
+        self.client.platform_name()
+    }
+
+    pub fn stats(&self) -> &ExecStats {
+        &self.stats
+    }
+
+    /// Load + compile an executable by manifest name (cached).
+    pub fn load(&mut self, name: &str) -> Result<std::sync::Arc<TrainStep>> {
+        if let Some(step) = self.cache.get(name) {
+            return Ok(step.clone());
+        }
+        let spec = self
+            .manifest
+            .find(name)
+            .ok_or_else(|| {
+                anyhow!(
+                    "executable '{name}' not in manifest (have: {})",
+                    self.manifest
+                        .executables
+                        .iter()
+                        .map(|e| e.name.as_str())
+                        .collect::<Vec<_>>()
+                        .join(", ")
+                )
+            })?
+            .clone();
+        let t0 = Instant::now();
+        let proto = xla::HloModuleProto::from_text_file(
+            spec.file.to_str().ok_or_else(|| anyhow!("non-utf8 path"))?,
+        )
+        .map_err(|e| anyhow!("parse {}: {e}", spec.file.display()))?;
+        let comp = xla::XlaComputation::from_proto(&proto);
+        let exe = self
+            .client
+            .compile(&comp)
+            .map_err(|e| anyhow!("compile {name}: {e}"))
+            .with_context(|| format!("artifact {}", spec.file.display()))?;
+        self.stats.compile_seconds += t0.elapsed().as_secs_f64();
+        let step = std::sync::Arc::new(TrainStep { spec, exe });
+        self.cache.insert(name.to_string(), step.clone());
+        Ok(step)
+    }
+
+    /// Execute a loaded step, accounting stats.
+    pub fn run(&mut self, step: &TrainStep, inp: &StepInputs) -> Result<StepOutputs> {
+        let t0 = Instant::now();
+        let out = step.run(inp)?;
+        self.stats.executions += 1;
+        self.stats.exec_seconds += t0.elapsed().as_secs_f64();
+        Ok(out)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    //! Engine round-trip tests live in `rust/tests/` (they need built
+    //! artifacts); here we cover the pure helpers.
+    use super::*;
+
+    fn spec() -> ExecSpec {
+        ExecSpec {
+            name: "t".into(),
+            variant: "full_w2v".into(),
+            file: "/dev/null".into(),
+            b: 2,
+            s: 8,
+            d: 4,
+            n: 2,
+            wf: 2,
+            inputs: vec![],
+            outputs: vec![],
+        }
+    }
+
+    #[test]
+    fn zeroed_inputs_sized_from_spec() {
+        let inp = StepInputs::zeroed(&spec());
+        assert_eq!(inp.syn0.len(), 64);
+        assert_eq!(inp.syn1.len(), 64);
+        assert_eq!(inp.neg.len(), 128);
+        assert_eq!(inp.lens.len(), 2);
+    }
+}

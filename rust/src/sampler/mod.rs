@@ -1,0 +1,9 @@
+//! Negative sampling: the unigram^0.75 distribution (word2vec's noise
+//! distribution) with O(1) draws via the alias method, plus window
+//! geometry helpers shared by the batcher and the CPU baselines.
+
+pub mod unigram;
+pub mod window;
+
+pub use unigram::UnigramTable;
+pub use window::{context_positions, window_pair_count};

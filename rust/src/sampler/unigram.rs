@@ -1,0 +1,191 @@
+//! Unigram^alpha negative-sampling table.
+//!
+//! word2vec.c materializes a 100M-entry table; we use Vose's alias method:
+//! identical distribution, O(V) memory, O(1) draws — this is part of why
+//! the FULL-W2V-style batcher (Table 1) outruns the baseline batchers.
+
+use crate::corpus::vocab::Vocab;
+use crate::util::rng::Pcg32;
+
+/// Alias-method sampler over word ids with probability ∝ count^alpha.
+#[derive(Debug, Clone)]
+pub struct UnigramTable {
+    prob: Vec<f32>,
+    alias: Vec<u32>,
+}
+
+impl UnigramTable {
+    /// Standard word2vec distortion alpha = 0.75.
+    pub const DEFAULT_ALPHA: f64 = 0.75;
+
+    pub fn new(vocab: &Vocab, alpha: f64) -> Self {
+        let weights: Vec<f64> = vocab
+            .counts()
+            .iter()
+            .map(|&c| (c as f64).powf(alpha))
+            .collect();
+        Self::from_weights(&weights)
+    }
+
+    /// Build from arbitrary non-negative weights (exposed for tests and for
+    /// the pSGNScc baseline's modified noise distribution).
+    pub fn from_weights(weights: &[f64]) -> Self {
+        let n = weights.len();
+        assert!(n > 0, "empty weight vector");
+        let sum: f64 = weights.iter().sum();
+        assert!(sum > 0.0, "weights must not all be zero");
+        // Vose's alias method
+        let mut prob = vec![0f32; n];
+        let mut alias = vec![0u32; n];
+        let scaled: Vec<f64> =
+            weights.iter().map(|w| w * n as f64 / sum).collect();
+        let mut small: Vec<usize> = Vec::new();
+        let mut large: Vec<usize> = Vec::new();
+        for (i, &p) in scaled.iter().enumerate() {
+            if p < 1.0 {
+                small.push(i);
+            } else {
+                large.push(i);
+            }
+        }
+        let mut scaled = scaled;
+        while let (Some(&s), Some(&l)) = (small.last(), large.last()) {
+            small.pop();
+            prob[s] = scaled[s] as f32;
+            alias[s] = l as u32;
+            scaled[l] = (scaled[l] + scaled[s]) - 1.0;
+            if scaled[l] < 1.0 {
+                large.pop();
+                small.push(l);
+            }
+        }
+        for &l in &large {
+            prob[l] = 1.0;
+        }
+        for &s in &small {
+            prob[s] = 1.0; // numerical leftovers
+        }
+        UnigramTable { prob, alias }
+    }
+
+    pub fn len(&self) -> usize {
+        self.prob.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.prob.is_empty()
+    }
+
+    /// Draw one word id.
+    #[inline]
+    pub fn sample(&self, rng: &mut Pcg32) -> u32 {
+        let i = rng.next_bounded(self.prob.len() as u32) as usize;
+        if rng.next_f32() < self.prob[i] {
+            i as u32
+        } else {
+            self.alias[i]
+        }
+    }
+
+    /// Draw a negative that differs from `avoid` (word2vec redraws when the
+    /// negative equals the target word).
+    #[inline]
+    pub fn sample_avoiding(&self, rng: &mut Pcg32, avoid: u32) -> u32 {
+        if self.len() == 1 {
+            return 0;
+        }
+        loop {
+            let s = self.sample(rng);
+            if s != avoid {
+                return s;
+            }
+        }
+    }
+
+    /// Fill a slice with negatives avoiding `avoid`.
+    pub fn fill(&self, rng: &mut Pcg32, avoid: u32, out: &mut [u32]) {
+        for slot in out.iter_mut() {
+            *slot = self.sample_avoiding(rng, avoid);
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::corpus::vocab::Vocab;
+
+    #[test]
+    fn empirical_matches_distorted_distribution() {
+        let counts =
+            vec![("a".to_string(), 1000u64), ("b".to_string(), 100), ("c".to_string(), 10)];
+        let v = Vocab::from_counts(counts, 1);
+        let t = UnigramTable::new(&v, 0.75);
+        let mut rng = Pcg32::new(123);
+        let mut hist = [0u64; 3];
+        let n = 200_000;
+        for _ in 0..n {
+            hist[t.sample(&mut rng) as usize] += 1;
+        }
+        let want: Vec<f64> = v
+            .counts()
+            .iter()
+            .map(|&c| (c as f64).powf(0.75))
+            .collect();
+        let wsum: f64 = want.iter().sum();
+        for i in 0..3 {
+            let got = hist[i] as f64 / n as f64;
+            let expect = want[i] / wsum;
+            assert!(
+                (got - expect).abs() < 0.01,
+                "id {i}: got {got:.4} want {expect:.4}"
+            );
+        }
+    }
+
+    #[test]
+    fn uniform_weights_uniform_draws() {
+        let t = UnigramTable::from_weights(&[1.0; 8]);
+        let mut rng = Pcg32::new(5);
+        let mut hist = [0u64; 8];
+        for _ in 0..80_000 {
+            hist[t.sample(&mut rng) as usize] += 1;
+        }
+        for &h in &hist {
+            let p = h as f64 / 80_000.0;
+            assert!((p - 0.125).abs() < 0.01);
+        }
+    }
+
+    #[test]
+    fn avoids_target() {
+        let t = UnigramTable::from_weights(&[100.0, 1.0]);
+        let mut rng = Pcg32::new(9);
+        for _ in 0..1000 {
+            assert_eq!(t.sample_avoiding(&mut rng, 0), 1);
+        }
+    }
+
+    #[test]
+    fn fill_length_and_range() {
+        let t = UnigramTable::from_weights(&[1.0, 2.0, 3.0, 4.0]);
+        let mut rng = Pcg32::new(2);
+        let mut out = [0u32; 16];
+        t.fill(&mut rng, 2, &mut out);
+        assert!(out.iter().all(|&x| x < 4 && x != 2));
+    }
+
+    #[test]
+    fn degenerate_single_word() {
+        let t = UnigramTable::from_weights(&[5.0]);
+        let mut rng = Pcg32::new(3);
+        assert_eq!(t.sample(&mut rng), 0);
+        assert_eq!(t.sample_avoiding(&mut rng, 0), 0); // can't avoid
+    }
+
+    #[test]
+    #[should_panic(expected = "empty")]
+    fn empty_weights_panic() {
+        UnigramTable::from_weights(&[]);
+    }
+}

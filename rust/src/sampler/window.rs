@@ -1,0 +1,85 @@
+//! Context-window geometry (fixed width W_f, paper Section 3.2).
+//!
+//! FULL-W2V replaces word2vec's per-position random width `b ∈ [1, W]`
+//! with the fixed width `W_f = ceil(W/2)` (the mean of the random
+//! distribution), which is what makes the shared-memory ring buffer
+//! statically sizable.  These helpers define the window shape used by the
+//! batcher, the CPU baselines, and the analytical memory model, and they
+//! must agree with the Pallas kernels' `_window_geometry`.
+
+/// Context positions of the window centered at `t` in a sentence of
+/// `len` words with fixed width `wf` (center excluded).
+pub fn context_positions(t: usize, wf: usize, len: usize) -> Vec<usize> {
+    if t >= len {
+        return Vec::new();
+    }
+    let lo = t.saturating_sub(wf);
+    let hi = (t + wf).min(len - 1);
+    (lo..=hi).filter(|&j| j != t).collect()
+}
+
+/// Total (context, center) pair count of a sentence: the unit the paper's
+/// throughput metric (words/sec) multiplies into training work.
+pub fn window_pair_count(len: usize, wf: usize) -> usize {
+    (0..len).map(|t| context_positions(t, wf, len).len()).sum()
+}
+
+/// Closed-form pair count (used to cross-check the enumeration and by the
+/// analytical memory model where sentences are long).
+pub fn window_pair_count_closed(len: usize, wf: usize) -> usize {
+    if len <= 1 {
+        return 0;
+    }
+    let full = 2 * wf * len;
+    // boundary loss: first/last wf positions lose (wf - i) pairs each side
+    let loss: usize = (0..wf.min(len))
+        .map(|i| (wf - i).min(len.saturating_sub(1)))
+        .sum();
+    full.saturating_sub(2 * loss).min(len * (len - 1))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn interior_window() {
+        assert_eq!(context_positions(5, 2, 20), vec![3, 4, 6, 7]);
+    }
+
+    #[test]
+    fn boundary_windows() {
+        assert_eq!(context_positions(0, 3, 10), vec![1, 2, 3]);
+        assert_eq!(context_positions(9, 3, 10), vec![6, 7, 8]);
+        assert_eq!(context_positions(1, 3, 10), vec![0, 2, 3, 4]);
+    }
+
+    #[test]
+    fn short_sentences() {
+        assert_eq!(context_positions(0, 3, 1), Vec::<usize>::new());
+        assert_eq!(context_positions(0, 3, 2), vec![1]);
+        assert_eq!(context_positions(0, 2, 0), Vec::<usize>::new());
+        assert_eq!(context_positions(5, 2, 3), Vec::<usize>::new()); // t >= len
+    }
+
+    #[test]
+    fn pair_count_enumeration_vs_closed_form() {
+        for len in 0..40 {
+            for wf in 1..6 {
+                assert_eq!(
+                    window_pair_count(len, wf),
+                    window_pair_count_closed(len, wf),
+                    "len={len} wf={wf}"
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn pair_count_examples() {
+        // len=6, wf=1: 2*6-2 = 10 (matches the kernel test's expectation)
+        assert_eq!(window_pair_count(6, 1), 10);
+        // every word pairs with every other when wf >= len
+        assert_eq!(window_pair_count(4, 10), 12);
+    }
+}

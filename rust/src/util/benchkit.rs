@@ -1,0 +1,77 @@
+//! Minimal benchmark harness (criterion is unavailable offline):
+//! warmup + repeated timing with trimmed-mean reporting.  Every
+//! `cargo bench` target uses this so results are comparable.
+
+use std::time::Instant;
+
+/// Timing statistics over repeated runs.
+#[derive(Debug, Clone)]
+pub struct BenchStats {
+    pub iters: usize,
+    pub mean_secs: f64,
+    pub min_secs: f64,
+    pub max_secs: f64,
+}
+
+impl BenchStats {
+    /// Rate given work items per iteration.
+    pub fn rate(&self, items_per_iter: f64) -> f64 {
+        if self.mean_secs > 0.0 {
+            items_per_iter / self.mean_secs
+        } else {
+            0.0
+        }
+    }
+}
+
+/// Run `f` `warmup` times untimed, then `iters` times timed; returns the
+/// trimmed mean (drops the single slowest run when iters >= 3).
+pub fn bench<F: FnMut()>(warmup: usize, iters: usize, mut f: F) -> BenchStats {
+    assert!(iters > 0);
+    for _ in 0..warmup {
+        f();
+    }
+    let mut times = Vec::with_capacity(iters);
+    for _ in 0..iters {
+        let t0 = Instant::now();
+        f();
+        times.push(t0.elapsed().as_secs_f64());
+    }
+    times.sort_by(f64::total_cmp);
+    let min = times[0];
+    let max = *times.last().unwrap();
+    let use_n = if iters >= 3 { iters - 1 } else { iters };
+    let mean = times[..use_n].iter().sum::<f64>() / use_n as f64;
+    BenchStats { iters, mean_secs: mean, min_secs: min, max_secs: max }
+}
+
+/// Standard bench banner so outputs are greppable in bench_output.txt.
+pub fn banner(name: &str, what: &str) {
+    println!("\n################################################");
+    println!("# BENCH {name}: {what}");
+    println!("################################################");
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn stats_sane() {
+        let mut count = 0;
+        let stats = bench(2, 5, || {
+            count += 1;
+            std::hint::black_box(count);
+        });
+        assert_eq!(count, 7); // 2 warmup + 5 timed
+        assert!(stats.mean_secs >= 0.0);
+        assert!(stats.min_secs <= stats.max_secs);
+        assert!(stats.rate(100.0) > 0.0);
+    }
+
+    #[test]
+    #[should_panic]
+    fn zero_iters_panics() {
+        bench(0, 0, || {});
+    }
+}

@@ -1,0 +1,86 @@
+//! Shared utilities: RNG, minimal JSON, logging, ASCII tables, timing.
+
+pub mod benchkit;
+pub mod json;
+pub mod log;
+pub mod rng;
+pub mod tables;
+
+use std::time::Instant;
+
+/// Simple stopwatch used by benches and the coordinator's metering.
+#[derive(Debug)]
+pub struct Stopwatch {
+    start: Instant,
+}
+
+impl Stopwatch {
+    pub fn start() -> Self {
+        Stopwatch { start: Instant::now() }
+    }
+
+    pub fn elapsed_secs(&self) -> f64 {
+        self.start.elapsed().as_secs_f64()
+    }
+
+    pub fn restart(&mut self) -> f64 {
+        let e = self.elapsed_secs();
+        self.start = Instant::now();
+        e
+    }
+}
+
+/// Format a rate (items/sec) with engineering suffixes, e.g. "12.3M".
+pub fn fmt_rate(rate: f64) -> String {
+    if rate >= 1e9 {
+        format!("{:.3}G", rate / 1e9)
+    } else if rate >= 1e6 {
+        format!("{:.3}M", rate / 1e6)
+    } else if rate >= 1e3 {
+        format!("{:.3}K", rate / 1e3)
+    } else {
+        format!("{:.3}", rate)
+    }
+}
+
+/// Format a byte count, e.g. "1.50 GB".
+pub fn fmt_bytes(bytes: f64) -> String {
+    const KB: f64 = 1024.0;
+    if bytes >= KB * KB * KB {
+        format!("{:.3} GB", bytes / (KB * KB * KB))
+    } else if bytes >= KB * KB {
+        format!("{:.3} MB", bytes / (KB * KB))
+    } else if bytes >= KB {
+        format!("{:.3} KB", bytes / KB)
+    } else {
+        format!("{:.0} B", bytes)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn rate_suffixes() {
+        assert_eq!(fmt_rate(1_500.0), "1.500K");
+        assert_eq!(fmt_rate(2_500_000.0), "2.500M");
+        assert_eq!(fmt_rate(3.25e9), "3.250G");
+        assert_eq!(fmt_rate(12.0), "12.000");
+    }
+
+    #[test]
+    fn byte_suffixes() {
+        assert_eq!(fmt_bytes(512.0), "512 B");
+        assert_eq!(fmt_bytes(2048.0), "2.000 KB");
+        assert!(fmt_bytes(3.0 * 1024.0 * 1024.0 * 1024.0).ends_with("GB"));
+    }
+
+    #[test]
+    fn stopwatch_monotone() {
+        let sw = Stopwatch::start();
+        let a = sw.elapsed_secs();
+        let b = sw.elapsed_secs();
+        assert!(b >= a);
+    }
+}

@@ -1,0 +1,229 @@
+//! Deterministic pseudo-random number generators.
+//!
+//! Three generators, each matched to its consumer:
+//!
+//! * [`SplitMix64`] — seeding / stream-splitting.
+//! * [`Pcg32`] — general-purpose draws in the batcher and corpus generator
+//!   (small state, excellent statistical quality).
+//! * [`W2vLcg`] — the exact 64-bit LCG word2vec.c uses
+//!   (`next = next * 25214903917 + 11`), kept for the scalar CPU baseline so
+//!   its sampling sequence matches the original implementation family.
+//!
+//! No external `rand` crate is available offline; these are self-contained
+//! and unit-tested against reference values.
+
+/// SplitMix64 (Steele et al.) — used to derive independent stream seeds.
+#[derive(Debug, Clone)]
+pub struct SplitMix64 {
+    state: u64,
+}
+
+impl SplitMix64 {
+    pub fn new(seed: u64) -> Self {
+        SplitMix64 { state: seed }
+    }
+
+    #[inline]
+    pub fn next_u64(&mut self) -> u64 {
+        self.state = self.state.wrapping_add(0x9E3779B97F4A7C15);
+        let mut z = self.state;
+        z = (z ^ (z >> 30)).wrapping_mul(0xBF58476D1CE4E5B9);
+        z = (z ^ (z >> 27)).wrapping_mul(0x94D049BB133111EB);
+        z ^ (z >> 31)
+    }
+}
+
+/// PCG-XSH-RR 32-bit output, 64-bit state (O'Neill 2014).
+#[derive(Debug, Clone)]
+pub struct Pcg32 {
+    state: u64,
+    inc: u64,
+}
+
+impl Pcg32 {
+    pub const MULT: u64 = 6364136223846793005;
+
+    /// Create from a seed; the stream id is fixed.
+    pub fn new(seed: u64) -> Self {
+        Self::with_stream(seed, 0xDA3E39CB94B95BDB)
+    }
+
+    /// Create with an explicit stream id (distinct streams are independent).
+    pub fn with_stream(seed: u64, stream: u64) -> Self {
+        let inc = (stream << 1) | 1;
+        let mut rng = Pcg32 { state: 0, inc };
+        rng.next_u32();
+        rng.state = rng.state.wrapping_add(seed);
+        rng.next_u32();
+        rng
+    }
+
+    #[inline]
+    pub fn next_u32(&mut self) -> u32 {
+        let old = self.state;
+        self.state = old.wrapping_mul(Self::MULT).wrapping_add(self.inc);
+        let xorshifted = (((old >> 18) ^ old) >> 27) as u32;
+        let rot = (old >> 59) as u32;
+        xorshifted.rotate_right(rot)
+    }
+
+    #[inline]
+    pub fn next_u64(&mut self) -> u64 {
+        ((self.next_u32() as u64) << 32) | self.next_u32() as u64
+    }
+
+    /// Uniform in [0, bound) without modulo bias (Lemire).
+    #[inline]
+    pub fn next_bounded(&mut self, bound: u32) -> u32 {
+        debug_assert!(bound > 0);
+        let mut x = self.next_u32();
+        let mut m = (x as u64) * (bound as u64);
+        let mut l = m as u32;
+        if l < bound {
+            let t = bound.wrapping_neg() % bound;
+            while l < t {
+                x = self.next_u32();
+                m = (x as u64) * (bound as u64);
+                l = m as u32;
+            }
+        }
+        (m >> 32) as u32
+    }
+
+    /// Uniform f32 in [0, 1).
+    #[inline]
+    pub fn next_f32(&mut self) -> f32 {
+        (self.next_u32() >> 8) as f32 * (1.0 / (1u32 << 24) as f32)
+    }
+
+    /// Uniform f64 in [0, 1).
+    #[inline]
+    pub fn next_f64(&mut self) -> f64 {
+        (self.next_u64() >> 11) as f64 * (1.0 / (1u64 << 53) as f64)
+    }
+
+    /// Fisher-Yates shuffle.
+    pub fn shuffle<T>(&mut self, xs: &mut [T]) {
+        for i in (1..xs.len()).rev() {
+            let j = self.next_bounded(i as u32 + 1) as usize;
+            xs.swap(i, j);
+        }
+    }
+}
+
+/// The exact LCG of word2vec.c: `next_random = next_random * 25214903917 + 11`.
+#[derive(Debug, Clone)]
+pub struct W2vLcg {
+    state: u64,
+}
+
+impl W2vLcg {
+    pub fn new(seed: u64) -> Self {
+        W2vLcg { state: seed }
+    }
+
+    #[inline]
+    pub fn next_u64(&mut self) -> u64 {
+        self.state = self
+            .state
+            .wrapping_mul(25214903917)
+            .wrapping_add(11);
+        self.state
+    }
+
+    /// word2vec.c draws table indices with `(next_random >> 16) % size`.
+    #[inline]
+    pub fn next_index(&mut self, size: usize) -> usize {
+        ((self.next_u64() >> 16) % size as u64) as usize
+    }
+
+    /// Uniform f32 in [0,1) the way word2vec.c derives probabilities
+    /// (`(next_random & 0xFFFF) / 65536`).
+    #[inline]
+    pub fn next_f32(&mut self) -> f32 {
+        (self.next_u64() & 0xFFFF) as f32 / 65536.0
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn splitmix_deterministic_and_seed_sensitive() {
+        let a: Vec<u64> = {
+            let mut r = SplitMix64::new(1234567);
+            (0..4).map(|_| r.next_u64()).collect()
+        };
+        let b: Vec<u64> = {
+            let mut r = SplitMix64::new(1234567);
+            (0..4).map(|_| r.next_u64()).collect()
+        };
+        let c: Vec<u64> = {
+            let mut r = SplitMix64::new(1234568);
+            (0..4).map(|_| r.next_u64()).collect()
+        };
+        assert_eq!(a, b);
+        assert_ne!(a, c);
+        // outputs are well-mixed: no two consecutive draws equal
+        assert!(a.windows(2).all(|w| w[0] != w[1]));
+    }
+
+    #[test]
+    fn pcg_determinism_and_stream_independence() {
+        let mut a = Pcg32::new(42);
+        let mut b = Pcg32::new(42);
+        assert_eq!(a.next_u32(), b.next_u32());
+        let mut c = Pcg32::with_stream(42, 1);
+        let mut d = Pcg32::with_stream(42, 2);
+        let sc: Vec<u32> = (0..8).map(|_| c.next_u32()).collect();
+        let sd: Vec<u32> = (0..8).map(|_| d.next_u32()).collect();
+        assert_ne!(sc, sd);
+    }
+
+    #[test]
+    fn bounded_is_in_range_and_covers() {
+        let mut r = Pcg32::new(7);
+        let mut seen = [false; 10];
+        for _ in 0..1000 {
+            let x = r.next_bounded(10) as usize;
+            assert!(x < 10);
+            seen[x] = true;
+        }
+        assert!(seen.iter().all(|&s| s));
+    }
+
+    #[test]
+    fn f32_unit_interval_mean() {
+        let mut r = Pcg32::new(99);
+        let n = 20_000;
+        let mean: f64 = (0..n).map(|_| r.next_f32() as f64).sum::<f64>()
+            / n as f64;
+        assert!((mean - 0.5).abs() < 0.01, "mean={mean}");
+        for _ in 0..1000 {
+            let x = r.next_f32();
+            assert!((0.0..1.0).contains(&x));
+        }
+    }
+
+    #[test]
+    fn w2v_lcg_matches_closed_form() {
+        let mut r = W2vLcg::new(1);
+        assert_eq!(r.next_u64(), 25214903928); // 1*25214903917 + 11
+        assert_eq!(
+            r.next_u64(),
+            25214903928u64.wrapping_mul(25214903917).wrapping_add(11)
+        );
+    }
+
+    #[test]
+    fn shuffle_is_permutation() {
+        let mut r = Pcg32::new(5);
+        let mut xs: Vec<u32> = (0..100).collect();
+        r.shuffle(&mut xs);
+        let mut sorted = xs.clone();
+        sorted.sort_unstable();
+        assert_eq!(sorted, (0..100).collect::<Vec<u32>>());
+        assert_ne!(xs, (0..100).collect::<Vec<u32>>()); // astronomically unlikely
+    }
+}

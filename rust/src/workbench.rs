@@ -1,0 +1,146 @@
+//! Shared scaffolding for examples, benches and the CLI: synthetic-corpus
+//! preparation and trainer construction, so every entry point exercises
+//! the identical public pipeline (generator -> text -> reader -> vocab ->
+//! ids) a real corpus file would take.
+
+use crate::config::{Config, TrainConfig};
+use crate::coordinator::{Coordinator, SgnsTrainer};
+use crate::corpus::reader::{read_all, ReaderOptions};
+use crate::corpus::synthetic::{SyntheticCorpus, SyntheticSpec};
+use crate::corpus::vocab::Vocab;
+use crate::corpus::CorpusStats;
+use anyhow::Result;
+use std::sync::Arc;
+
+/// A corpus prepared for training: vocab + id sentences + gold sets.
+pub struct Workbench {
+    pub corpus: SyntheticCorpus,
+    pub vocab: Vocab,
+    pub sentences: Arc<Vec<Vec<u32>>>,
+    pub total_words: u64,
+}
+
+impl Workbench {
+    /// Generate a synthetic corpus and push it through the *real* text
+    /// pipeline (render to text, tokenize, vocab with min_count, encode).
+    pub fn prepare(spec: SyntheticSpec, min_count: usize) -> Self {
+        let corpus = SyntheticCorpus::generate(spec);
+        let text = corpus.to_text();
+        let vocab = Vocab::build(text.split_whitespace(), min_count);
+        let (sentences, _raw) =
+            read_all(text.as_bytes(), &vocab, ReaderOptions::default());
+        let total_words: u64 = sentences.iter().map(|s| s.len() as u64).sum();
+        Workbench {
+            corpus,
+            vocab,
+            sentences: Arc::new(sentences),
+            total_words,
+        }
+    }
+
+    /// Table 3-style stats.
+    pub fn stats(&self) -> CorpusStats {
+        CorpusStats::compute(&self.vocab, &self.sentences)
+    }
+
+    /// Build the PJRT coordinator for a train config over this corpus.
+    pub fn coordinator(&self, mut cfg: Config) -> Result<Coordinator> {
+        if cfg.artifacts_dir == "artifacts" {
+            cfg.artifacts_dir = default_artifacts_dir();
+        }
+        Coordinator::new(cfg, &self.vocab, self.total_words)
+    }
+
+    /// Build any trainer by implementation name:
+    /// pjrt variants (`full_w2v`, ...) or CPU baselines
+    /// (`mikolov`, `pword2vec`, `psgnscc`).
+    pub fn trainer(
+        &self,
+        implementation: &str,
+        train: &TrainConfig,
+    ) -> Result<Box<dyn SgnsTrainer>> {
+        let hint = self.total_words * train.epochs.max(1) as u64;
+        Ok(match implementation {
+            "mikolov" => Box::new(crate::cpu_baseline::MikolovTrainer::new(
+                train,
+                &self.vocab,
+                hint,
+            )),
+            "pword2vec" => {
+                Box::new(crate::cpu_baseline::PWord2VecTrainer::new(
+                    train,
+                    &self.vocab,
+                    hint,
+                ))
+            }
+            "psgnscc" => Box::new(crate::cpu_baseline::PsgnsccTrainer::new(
+                train,
+                &self.vocab,
+                hint,
+            )),
+            variant => {
+                let mut cfg = Config::new();
+                cfg.artifacts_dir = default_artifacts_dir();
+                cfg.train = train.clone();
+                cfg.train.variant = variant.to_string();
+                Box::new(Coordinator::new(cfg, &self.vocab, self.total_words)?)
+            }
+        })
+    }
+}
+
+/// The artifacts directory relative to the crate root (works from
+/// examples, benches and tests regardless of cwd).
+pub fn default_artifacts_dir() -> String {
+    let from_env = std::env::var("FULLW2V_ARTIFACTS").ok();
+    from_env.unwrap_or_else(|| {
+        format!("{}/artifacts", env!("CARGO_MANIFEST_DIR"))
+    })
+}
+
+/// True if AOT artifacts are present (benches degrade gracefully).
+pub fn have_artifacts() -> bool {
+    std::path::Path::new(&default_artifacts_dir())
+        .join("manifest.json")
+        .exists()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn prepare_runs_real_pipeline() {
+        let wb = Workbench::prepare(SyntheticSpec::tiny(), 1);
+        assert_eq!(wb.sentences.len(), wb.corpus.sentences.len());
+        assert!(wb.total_words > 0);
+        let stats = wb.stats();
+        assert_eq!(stats.sentences as usize, wb.sentences.len());
+        assert!(stats.vocabulary <= wb.corpus.words.len());
+    }
+
+    #[test]
+    fn min_count_shrinks_vocab() {
+        // tiny spec: ~60K words over 300 types (mean ~200) — a min_count
+        // above the mean must drop the Zipf tail (median < mean)
+        let a = Workbench::prepare(SyntheticSpec::tiny(), 1);
+        let b = Workbench::prepare(SyntheticSpec::tiny(), 500);
+        assert!(b.vocab.len() < a.vocab.len());
+        // encoded words can only shrink
+        assert!(b.total_words < a.total_words);
+    }
+
+    #[test]
+    fn cpu_trainer_construction() {
+        let wb = Workbench::prepare(SyntheticSpec::tiny(), 1);
+        let cfg = TrainConfig {
+            dim: 8,
+            subsample: 0.0,
+            ..TrainConfig::default()
+        };
+        for name in ["mikolov", "pword2vec", "psgnscc"] {
+            let t = wb.trainer(name, &cfg).unwrap();
+            assert!(t.name().len() > 3);
+        }
+    }
+}

@@ -1,0 +1,128 @@
+//! Embedding-quality integration (the Table 7 protocol at test scale):
+//! train on a tiny synthetic corpus and verify the embeddings recover the
+//! generator's latent similarity structure better than a random init.
+
+use fullw2v::config::{Config, TrainConfig};
+use fullw2v::coordinator::{train_all, Coordinator, SgnsTrainer};
+use fullw2v::corpus::synthetic::{SyntheticCorpus, SyntheticSpec};
+use fullw2v::corpus::vocab::Vocab;
+use fullw2v::eval::similarity::evaluate_similarity;
+use fullw2v::model::EmbeddingModel;
+use std::path::PathBuf;
+use std::sync::Arc;
+
+fn artifacts_dir() -> PathBuf {
+    PathBuf::from(env!("CARGO_MANIFEST_DIR")).join("artifacts")
+}
+
+fn have_artifacts() -> bool {
+    artifacts_dir().join("manifest.json").exists()
+}
+
+struct Setup {
+    corpus: SyntheticCorpus,
+    vocab: Vocab,
+    sentences: Arc<Vec<Vec<u32>>>,
+    cfg: TrainConfig,
+}
+
+fn setup() -> Setup {
+    let mut spec = SyntheticSpec::tiny();
+    spec.total_words = 120_000; // a bit more signal for quality checks
+    let corpus = SyntheticCorpus::generate(spec);
+    let text = corpus.to_text();
+    let vocab = Vocab::build(text.split_whitespace(), 1);
+    let sentences: Arc<Vec<Vec<u32>>> = Arc::new(
+        corpus
+            .sentences
+            .iter()
+            .map(|s| {
+                s.iter()
+                    .map(|&id| vocab.id(&corpus.words[id as usize]).unwrap())
+                    .collect()
+            })
+            .collect(),
+    );
+    let cfg = TrainConfig {
+        variant: "full_w2v".into(),
+        dim: 64,
+        window: 5,
+        negatives: 5,
+        epochs: 3,
+        subsample: 1e-3,
+        batch_sentences: 16,
+        sentence_chunk: 16,
+        seed: 11,
+        ..TrainConfig::default()
+    };
+    Setup { corpus, vocab, sentences, cfg }
+}
+
+fn spearman_vs_gold(
+    s: &Setup,
+    model: &EmbeddingModel,
+) -> f64 {
+    let gold = s.corpus.gold_similarity_pairs(300, 99);
+    let rep = evaluate_similarity(model, &s.vocab, &gold);
+    assert!(rep.used > 200, "too many OOV pairs: used {}", rep.used);
+    rep.spearman
+}
+
+#[test]
+fn trained_embeddings_recover_latent_similarity() {
+    if !have_artifacts() {
+        eprintln!("skipping: no artifacts");
+        return;
+    }
+    let s = setup();
+    let total: u64 = s.sentences.iter().map(|x| x.len() as u64).sum();
+    let mut cfg = Config::new();
+    cfg.artifacts_dir = artifacts_dir().to_str().unwrap().to_string();
+    cfg.train = s.cfg.clone();
+    let mut coord = Coordinator::new(cfg, &s.vocab, total).unwrap();
+
+    let rho_before = spearman_vs_gold(&s, coord.model());
+    train_all(&mut coord, &s.sentences, 3).unwrap();
+    let rho_after = spearman_vs_gold(&s, coord.model());
+
+    assert!(
+        rho_before.abs() < 0.25,
+        "random init should not correlate: {rho_before}"
+    );
+    assert!(
+        rho_after > rho_before + 0.2,
+        "training must improve latent-similarity recovery: \
+         {rho_before} -> {rho_after}"
+    );
+    assert!(rho_after > 0.25, "absolute recovery too weak: {rho_after}");
+}
+
+#[test]
+fn pjrt_and_cpu_trainers_statistically_equivalent() {
+    // Table 7's claim at test scale: FULL-W2V (PJRT) and pWord2Vec (CPU)
+    // produce equivalent-quality embeddings on the same corpus.
+    if !have_artifacts() {
+        eprintln!("skipping: no artifacts");
+        return;
+    }
+    let s = setup();
+    let total: u64 = s.sentences.iter().map(|x| x.len() as u64).sum();
+
+    let mut cfg = Config::new();
+    cfg.artifacts_dir = artifacts_dir().to_str().unwrap().to_string();
+    cfg.train = s.cfg.clone();
+    let mut coord = Coordinator::new(cfg, &s.vocab, total).unwrap();
+    train_all(&mut coord, &s.sentences, 3).unwrap();
+    let rho_gpu = spearman_vs_gold(&s, coord.model());
+
+    let mut cpu = fullw2v::cpu_baseline::PWord2VecTrainer::new(
+        &s.cfg, &s.vocab, total * 3,
+    );
+    train_all(&mut cpu, &s.sentences, 3).unwrap();
+    let rho_cpu = spearman_vs_gold(&s, cpu.model());
+
+    assert!(
+        (rho_gpu - rho_cpu).abs() < 0.15,
+        "quality divergence: pjrt {rho_gpu} vs cpu {rho_cpu}"
+    );
+}

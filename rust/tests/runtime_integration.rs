@@ -1,0 +1,246 @@
+//! Runtime integration: load real AOT artifacts, execute on the PJRT CPU
+//! client, and validate numerics against a Rust re-implementation of the
+//! window-matrix oracle.  Requires `make artifacts` to have run.
+
+use fullw2v::runtime::{Engine, StepInputs};
+use fullw2v::util::rng::Pcg32;
+use std::path::PathBuf;
+
+fn artifacts_dir() -> PathBuf {
+    PathBuf::from(env!("CARGO_MANIFEST_DIR")).join("artifacts")
+}
+
+fn have_artifacts() -> bool {
+    artifacts_dir().join("manifest.json").exists()
+}
+
+/// Rust-side oracle: shared-negative window-matrix SGNS, identical to
+/// python/compile/kernels/ref.py::sgns_window_ref.
+#[allow(clippy::too_many_arguments)]
+fn window_oracle(
+    syn0: &[f32],
+    syn1: &[f32],
+    neg: &[f32],
+    lens: &[i32],
+    lr: f32,
+    b: usize,
+    s: usize,
+    n: usize,
+    d: usize,
+    wf: usize,
+) -> (Vec<f32>, Vec<f32>, Vec<f32>, Vec<f32>) {
+    let mut s0 = syn0.to_vec();
+    let mut s1 = syn1.to_vec();
+    let mut ng = neg.to_vec();
+    let mut loss = vec![0.0f32; b];
+    let sigmoid = |x: f32| 1.0 / (1.0 + (-x).exp());
+    let softplus = |x: f32| (x as f64).exp().ln_1p() as f32;
+    for bi in 0..b {
+        let len = lens[bi] as usize;
+        for t in 0..len.min(s) {
+            let ctx: Vec<usize> = (t.saturating_sub(wf)..=(t + wf).min(len - 1))
+                .filter(|&j| j != t)
+                .collect();
+            if ctx.is_empty() {
+                continue;
+            }
+            let m = ctx.len();
+            let cols = n + 1;
+            // gather U = [center; negs]
+            let mut u = vec![0.0f32; cols * d];
+            u[0..d].copy_from_slice(
+                &s1[(bi * s + t) * d..(bi * s + t + 1) * d],
+            );
+            for k in 0..n {
+                let src = ((bi * s + t) * n + k) * d;
+                u[(k + 1) * d..(k + 2) * d]
+                    .copy_from_slice(&ng[src..src + d]);
+            }
+            // G and loss
+            let mut g = vec![0.0f32; m * cols];
+            for (i, &j) in ctx.iter().enumerate() {
+                let c = &s0[(bi * s + j) * d..(bi * s + j + 1) * d];
+                for k in 0..cols {
+                    let z: f32 = c
+                        .iter()
+                        .zip(&u[k * d..(k + 1) * d])
+                        .map(|(x, y)| x * y)
+                        .sum();
+                    let label = if k == 0 { 1.0 } else { 0.0 };
+                    g[i * cols + k] = (label - sigmoid(z)) * lr;
+                    loss[bi] += if k == 0 { softplus(-z) } else { softplus(z) };
+                }
+            }
+            // dU then dC (pre-update operands)
+            let mut du = vec![0.0f32; cols * d];
+            for (i, &j) in ctx.iter().enumerate() {
+                let c = s0[(bi * s + j) * d..(bi * s + j + 1) * d].to_vec();
+                for k in 0..cols {
+                    let gg = g[i * cols + k];
+                    for x in 0..d {
+                        du[k * d + x] += gg * c[x];
+                    }
+                }
+            }
+            let mut dc = vec![0.0f32; m * d];
+            for i in 0..m {
+                for k in 0..cols {
+                    let gg = g[i * cols + k];
+                    for x in 0..d {
+                        dc[i * d + x] += gg * u[k * d + x];
+                    }
+                }
+            }
+            for (i, &j) in ctx.iter().enumerate() {
+                for x in 0..d {
+                    s0[(bi * s + j) * d + x] += dc[i * d + x];
+                }
+            }
+            for x in 0..d {
+                s1[(bi * s + t) * d + x] += du[x];
+            }
+            for k in 0..n {
+                let dst = ((bi * s + t) * n + k) * d;
+                for x in 0..d {
+                    ng[dst + x] += du[(k + 1) * d + x];
+                }
+            }
+        }
+    }
+    let d0: Vec<f32> = s0.iter().zip(syn0).map(|(a, b)| a - b).collect();
+    let d1: Vec<f32> = s1.iter().zip(syn1).map(|(a, b)| a - b).collect();
+    let dn: Vec<f32> = ng.iter().zip(neg).map(|(a, b)| a - b).collect();
+    (d0, d1, dn, loss)
+}
+
+fn random_inputs(
+    b: usize,
+    s: usize,
+    n: usize,
+    d: usize,
+    seed: u64,
+) -> StepInputs {
+    let mut rng = Pcg32::new(seed);
+    let mut randv = |len: usize| -> Vec<f32> {
+        (0..len).map(|_| (rng.next_f32() - 0.5) * 0.8).collect()
+    };
+    let syn0 = randv(b * s * d);
+    let syn1 = randv(b * s * d);
+    let neg = randv(b * s * n * d);
+    let mut rng2 = Pcg32::new(seed + 1);
+    let lens: Vec<i32> =
+        (0..b).map(|_| rng2.next_bounded(s as u32 + 1) as i32).collect();
+    StepInputs { syn0, syn1, neg, lens, lr: 0.025 }
+}
+
+#[test]
+fn engine_lists_manifest() {
+    if !have_artifacts() {
+        eprintln!("skipping: no artifacts");
+        return;
+    }
+    let engine = Engine::new(&artifacts_dir()).unwrap();
+    assert!(engine.manifest().executables.len() >= 4);
+    assert!(engine.platform().to_lowercase().contains("cpu")
+        || engine.platform().to_lowercase().contains("host"));
+    for variant in ["full_w2v", "full_register", "acc_sgns", "wombat"] {
+        assert!(
+            !engine.manifest().by_variant(variant).is_empty(),
+            "missing variant {variant}"
+        );
+    }
+}
+
+#[test]
+fn quickstart_artifact_matches_oracle() {
+    if !have_artifacts() {
+        eprintln!("skipping: no artifacts");
+        return;
+    }
+    let mut engine = Engine::new(&artifacts_dir()).unwrap();
+    let step = engine.load("full_w2v_b16_s16_d64_n5_w3").unwrap();
+    let (b, s, n, d, wf) = (16, 16, 5, 64, 3);
+    let inp = random_inputs(b, s, n, d, 7);
+    let out = engine.run(&step, &inp).unwrap();
+    let (d0, d1, dn, loss) = window_oracle(
+        &inp.syn0, &inp.syn1, &inp.neg, &inp.lens, inp.lr, b, s, n, d, wf,
+    );
+    let check = |got: &[f32], want: &[f32], name: &str| {
+        assert_eq!(got.len(), want.len(), "{name} length");
+        let max_err = got
+            .iter()
+            .zip(want)
+            .map(|(a, b)| (a - b).abs())
+            .fold(0.0f32, f32::max);
+        assert!(max_err < 2e-4, "{name} max err {max_err}");
+    };
+    check(&out.d_syn0, &d0, "d_syn0");
+    check(&out.d_syn1, &d1, "d_syn1");
+    check(&out.d_neg, &dn, "d_neg");
+    check(&out.loss, &loss, "loss");
+    assert!(out.loss.iter().any(|&l| l > 0.0));
+}
+
+#[test]
+fn full_and_register_artifacts_agree() {
+    if !have_artifacts() {
+        eprintln!("skipping: no artifacts");
+        return;
+    }
+    let mut engine = Engine::new(&artifacts_dir()).unwrap();
+    let a = engine.load("full_w2v_b64_s32_d128_n5_w3").unwrap();
+    let b_ = engine.load("full_register_b64_s32_d128_n5_w3").unwrap();
+    let inp = random_inputs(64, 32, 5, 128, 11);
+    let out_a = engine.run(&a, &inp).unwrap();
+    let out_b = engine.run(&b_, &inp).unwrap();
+    let close = |x: &[f32], y: &[f32]| {
+        x.iter().zip(y).all(|(p, q)| (p - q).abs() < 3e-4)
+    };
+    assert!(close(&out_a.d_syn0, &out_b.d_syn0));
+    assert!(close(&out_a.d_syn1, &out_b.d_syn1));
+    assert!(close(&out_a.d_neg, &out_b.d_neg));
+}
+
+#[test]
+fn zero_lr_zero_deltas() {
+    if !have_artifacts() {
+        eprintln!("skipping: no artifacts");
+        return;
+    }
+    let mut engine = Engine::new(&artifacts_dir()).unwrap();
+    let step = engine.load("full_w2v_b16_s16_d64_n5_w3").unwrap();
+    let mut inp = random_inputs(16, 16, 5, 64, 3);
+    inp.lr = 0.0;
+    let out = engine.run(&step, &inp).unwrap();
+    assert!(out.d_syn0.iter().all(|&x| x == 0.0));
+    assert!(out.d_syn1.iter().all(|&x| x == 0.0));
+    assert!(out.d_neg.iter().all(|&x| x == 0.0));
+}
+
+#[test]
+fn wrong_buffer_size_rejected() {
+    if !have_artifacts() {
+        eprintln!("skipping: no artifacts");
+        return;
+    }
+    let mut engine = Engine::new(&artifacts_dir()).unwrap();
+    let step = engine.load("full_w2v_b16_s16_d64_n5_w3").unwrap();
+    let mut inp = random_inputs(16, 16, 5, 64, 3);
+    inp.syn0.pop();
+    assert!(step.run(&inp).is_err());
+}
+
+#[test]
+fn unknown_executable_is_helpful_error() {
+    if !have_artifacts() {
+        eprintln!("skipping: no artifacts");
+        return;
+    }
+    let mut engine = Engine::new(&artifacts_dir()).unwrap();
+    let err = match engine.load("nonexistent_kernel") {
+        Ok(_) => panic!("expected error"),
+        Err(e) => e.to_string(),
+    };
+    assert!(err.contains("not in manifest"));
+    assert!(err.contains("full_w2v"), "error should list alternatives");
+}

@@ -1,0 +1,160 @@
+//! End-to-end coordinator integration: corpus -> pipeline -> PJRT ->
+//! scatter, on a tiny synthetic corpus.  Requires built artifacts.
+
+use fullw2v::config::{Config, TrainConfig};
+use fullw2v::coordinator::{train_all, Coordinator, SgnsTrainer};
+use fullw2v::corpus::synthetic::{SyntheticCorpus, SyntheticSpec};
+use fullw2v::corpus::vocab::Vocab;
+use std::path::PathBuf;
+use std::sync::Arc;
+
+fn artifacts_dir() -> PathBuf {
+    PathBuf::from(env!("CARGO_MANIFEST_DIR")).join("artifacts")
+}
+
+fn have_artifacts() -> bool {
+    artifacts_dir().join("manifest.json").exists()
+}
+
+/// Tiny corpus + the quickstart executable config (b16 s16 d64 n5 w3).
+fn setup() -> (Config, Vocab, Arc<Vec<Vec<u32>>>) {
+    let corpus = SyntheticCorpus::generate(SyntheticSpec::tiny());
+    let text = corpus.to_text();
+    let vocab = Vocab::build(text.split_whitespace(), 1);
+    let sentences: Vec<Vec<u32>> = corpus
+        .sentences
+        .iter()
+        .map(|s| {
+            s.iter()
+                .map(|&id| vocab.id(&corpus.words[id as usize]).unwrap())
+                .collect()
+        })
+        .collect();
+    let mut cfg = Config::new();
+    cfg.artifacts_dir = artifacts_dir().to_str().unwrap().to_string();
+    cfg.train = TrainConfig {
+        variant: "full_w2v".into(),
+        dim: 64,
+        window: 5, // wf = 3
+        negatives: 5,
+        epochs: 2,
+        subsample: 0.0,
+        batch_sentences: 16,
+        sentence_chunk: 16,
+        seed: 3,
+        ..TrainConfig::default()
+    };
+    cfg.pipeline.streams = 2;
+    (cfg, vocab, Arc::new(sentences))
+}
+
+#[test]
+fn coordinator_trains_and_loss_decreases() {
+    if !have_artifacts() {
+        eprintln!("skipping: no artifacts");
+        return;
+    }
+    let (cfg, vocab, sents) = setup();
+    let total: u64 = sents.iter().map(|s| s.len() as u64).sum();
+    let mut coord = Coordinator::new(cfg, &vocab, total).unwrap();
+    let report = train_all(&mut coord, &sents, 2).unwrap();
+    assert_eq!(report.epochs.len(), 2);
+    let (first, last) = report.loss_trajectory();
+    assert!(
+        last < first,
+        "PJRT training loss did not decrease: {first} -> {last}"
+    );
+    // nearly all words trained each epoch (no subsampling; only 1-word
+    // tail chunks are dropped, as they generate no training pairs)
+    for e in &report.epochs {
+        assert!(e.words as f64 > 0.99 * total as f64,
+                "{} of {total}", e.words);
+        assert!(e.words <= total);
+        assert!(e.words_per_sec > 0.0);
+        assert!(e.batching_rate > 0.0);
+    }
+    // lr decayed
+    assert!(report.epochs[1].lr_end < report.epochs[0].lr_end);
+    assert!(report.epochs[1].lr_end < 0.025);
+}
+
+#[test]
+fn coordinator_matches_cpu_pword2vec_semantics() {
+    // The PJRT path (window-matrix kernels) and the pWord2Vec CPU baseline
+    // implement the same update rule; after two epochs from the same init
+    // they won't be bit-identical (different batch boundaries / negative
+    // draws) but must land in the same loss region.
+    if !have_artifacts() {
+        eprintln!("skipping: no artifacts");
+        return;
+    }
+    let (cfg, vocab, sents) = setup();
+    let total: u64 = sents.iter().map(|s| s.len() as u64).sum();
+    let mut coord = Coordinator::new(cfg.clone(), &vocab, total).unwrap();
+    let rep_gpu = train_all(&mut coord, &sents, 2).unwrap();
+    let mut cpu = fullw2v::cpu_baseline::PWord2VecTrainer::new(
+        &cfg.train, &vocab, total * 2,
+    );
+    let rep_cpu = train_all(&mut cpu, &sents, 2).unwrap();
+    let (_, gpu_last) = rep_gpu.loss_trajectory();
+    let (_, cpu_last) = rep_cpu.loss_trajectory();
+    assert!(
+        (gpu_last - cpu_last).abs() < 0.35 * cpu_last.max(gpu_last),
+        "loss divergence: pjrt {gpu_last} vs cpu {cpu_last}"
+    );
+}
+
+#[test]
+fn variant_coordinators_all_train() {
+    if !have_artifacts() {
+        eprintln!("skipping: no artifacts");
+        return;
+    }
+    // All four head-to-head artifacts run end-to-end (b64 s32 d128).
+    let corpus = SyntheticCorpus::generate(SyntheticSpec::tiny());
+    let text = corpus.to_text();
+    let vocab = Vocab::build(text.split_whitespace(), 1);
+    let sentences: Arc<Vec<Vec<u32>>> = Arc::new(
+        corpus
+            .sentences
+            .iter()
+            .take(300)
+            .map(|s| {
+                s.iter()
+                    .map(|&id| vocab.id(&corpus.words[id as usize]).unwrap())
+                    .collect()
+            })
+            .collect(),
+    );
+    let total: u64 = sentences.iter().map(|s| s.len() as u64).sum();
+    for variant in ["full_w2v", "full_register", "acc_sgns", "wombat"] {
+        let mut cfg = Config::new();
+        cfg.artifacts_dir = artifacts_dir().to_str().unwrap().to_string();
+        cfg.train.variant = variant.into();
+        cfg.train.epochs = 1;
+        cfg.train.subsample = 0.0;
+        let mut coord = Coordinator::new(cfg, &vocab, total).unwrap();
+        let rep = coord.train_epoch(&sentences, 0).unwrap();
+        assert!(rep.words > 0, "{variant}: no words trained");
+        assert!(rep.loss_sum > 0.0, "{variant}: zero loss");
+    }
+}
+
+#[test]
+fn model_save_load_after_training() {
+    if !have_artifacts() {
+        eprintln!("skipping: no artifacts");
+        return;
+    }
+    let (cfg, vocab, sents) = setup();
+    let mut coord = Coordinator::new(cfg, &vocab, 1000).unwrap();
+    coord.train_epoch(&sents, 0).unwrap();
+    let dir = std::env::temp_dir().join("fullw2v_train_it");
+    std::fs::create_dir_all(&dir).unwrap();
+    let path = dir.join("model.bin");
+    coord.model().save_binary(&path).unwrap();
+    let loaded =
+        fullw2v::model::EmbeddingModel::load_binary(&path).unwrap();
+    assert_eq!(loaded.syn0, coord.model().syn0);
+    std::fs::remove_file(path).ok();
+}
