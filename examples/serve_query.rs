@@ -1,0 +1,151 @@
+//! Serving quickstart: train a small model on the CPU baseline, export a
+//! 4-shard serving store (f32 + int8), and answer batched top-k queries
+//! through the micro-batching engine at both precisions.
+//!
+//! The acceptance check at the end: quantized top-1 must match exact
+//! top-1 on >= 95% of queries (counting near-ties — exact-score gap
+//! below 0.01 — as matches, since either answer is correct there).
+//!
+//! Run: `cargo run --release --example serve_query`
+
+use anyhow::{ensure, Result};
+use fullw2v::config::TrainConfig;
+use fullw2v::coordinator::{train_all, SgnsTrainer};
+use fullw2v::corpus::synthetic::SyntheticSpec;
+use fullw2v::model::embeddings;
+use fullw2v::serve::{
+    export_store, zipf_ids, Neighbor, Precision, ServeEngine, ServeOptions,
+    ShardedStore,
+};
+use fullw2v::workbench::Workbench;
+use std::sync::Arc;
+
+const K: usize = 5;
+const QUERIES: usize = 200;
+
+fn main() -> Result<()> {
+    println!("== FULL-W2V serving quickstart ==");
+
+    // 1. train (CPU baseline — no AOT artifacts needed)
+    let wb = Workbench::prepare(SyntheticSpec::tiny(), 1);
+    let stats = wb.stats();
+    println!(
+        "corpus: {} sentences, vocab {}",
+        stats.sentences, stats.vocabulary
+    );
+    let train = TrainConfig {
+        dim: 32,
+        window: 5,
+        negatives: 5,
+        subsample: 1e-3,
+        ..TrainConfig::default()
+    };
+    let mut trainer = wb.trainer("pword2vec", &train)?;
+    let report = train_all(trainer.as_mut(), &wb.sentences, 2)?;
+    let (first, last) = report.loss_trajectory();
+    println!("trained pword2vec 2 epochs: loss/word {first:.4} -> {last:.4}");
+
+    // 2. export a 4-shard store
+    let dir = std::env::temp_dir().join("fullw2v_serve_query_store");
+    std::fs::create_dir_all(&dir)?;
+    let model = trainer.model();
+    let manifest = export_store(model, &wb.vocab, &dir, 4)?;
+    println!(
+        "store: {} rows x {} dims in {} shards -> {}",
+        manifest.vocab_size,
+        manifest.dim,
+        manifest.shards.len(),
+        dir.display()
+    );
+
+    // 3. engines at both precisions
+    let opts = ServeOptions {
+        cache_capacity: 256,
+        protected_rows: 64,
+        ..ServeOptions::default()
+    };
+    let exact_store = Arc::new(ShardedStore::open(&dir, Precision::Exact)?);
+    let quant_store =
+        Arc::new(ShardedStore::open(&dir, Precision::Quantized)?);
+    let exact = ServeEngine::start(exact_store, opts.clone());
+    let quant = ServeEngine::start(quant_store, opts);
+
+    // 4. a Zipf-skewed query stream (traffic concentrates on the head,
+    // which is what the cache tier is built for)
+    let ids = zipf_ids(QUERIES, wb.vocab.len(), 7);
+
+    // 5. batched queries: submit everything, then collect
+    let run = |engine: &ServeEngine| -> Result<Vec<Vec<Neighbor>>> {
+        let client = engine.client();
+        let pending: Vec<_> =
+            ids.iter().map(|&id| client.submit_id(id, K)).collect();
+        pending
+            .into_iter()
+            .map(|rx| {
+                rx.recv()
+                    .unwrap_or_else(|_| Err("engine stopped".into()))
+                    .map_err(anyhow::Error::msg)
+            })
+            .collect()
+    };
+    let exact_results = run(&exact)?;
+    let quant_results = run(&quant)?;
+
+    // 6. exact/quantized top-1 agreement
+    let rows = model.normalized_rows();
+    let d = model.dim;
+    let cos = |a: u32, b: u32| {
+        embeddings::cosine(
+            &rows[a as usize * d..(a as usize + 1) * d],
+            &rows[b as usize * d..(b as usize + 1) * d],
+        )
+    };
+    let mut strict = 0usize;
+    let mut tolerant = 0usize;
+    for ((&q, e), r) in
+        ids.iter().zip(&exact_results).zip(&quant_results)
+    {
+        let (et, qt) = (e[0].id, r[0].id);
+        if et == qt {
+            strict += 1;
+            tolerant += 1;
+        } else if (cos(q, et) - cos(q, qt)).abs() < 0.01 {
+            tolerant += 1; // near-tie: either neighbor is correct
+        }
+    }
+    let n = ids.len() as f64;
+    println!(
+        "top-1 agreement over {QUERIES} queries: strict {:.1}%, \
+         with-ties {:.1}%",
+        100.0 * strict as f64 / n,
+        100.0 * tolerant as f64 / n
+    );
+
+    // 7. a few readable neighbor lists
+    println!("\nsample neighbors (exact):");
+    for (i, &q) in ids.iter().enumerate().take(3) {
+        let line: Vec<String> = exact_results[i]
+            .iter()
+            .map(|nb| format!("{}:{:.3}", wb.vocab.word(nb.id), nb.score))
+            .collect();
+        println!("  {:16} {}", wb.vocab.word(q), line.join(" "));
+    }
+
+    let exact_report = exact.shutdown();
+    let quant_report = quant.shutdown();
+    println!("\nexact:     {}", exact_report.summary());
+    println!("quantized: {}", quant_report.summary());
+
+    ensure!(
+        exact_report.queries == QUERIES as u64,
+        "exact engine served {} of {QUERIES} queries",
+        exact_report.queries
+    );
+    ensure!(
+        tolerant as f64 / n >= 0.95,
+        "quantized/exact top-1 agreement {:.1}% below 95%",
+        100.0 * tolerant as f64 / n
+    );
+    println!("\nOK: quantized matches exact top-1 on >= 95% of queries");
+    Ok(())
+}

@@ -1,0 +1,186 @@
+//! Serving-engine benchmark: single-query latency and batched QPS as a
+//! function of shard count, hot-cache capacity, and store precision.
+//!
+//! The shape that must hold: QPS scales with shards (worker parallelism)
+//! until core count saturates; cache hit rate rises with capacity under
+//! a Zipf query stream; the int8 store trades a little score fidelity
+//! for footprint at comparable throughput.
+//!
+//! Args: `cargo bench --bench bench_serve [-- --rows N --dim D --queries Q]`
+
+use fullw2v::corpus::vocab::Vocab;
+use fullw2v::model::EmbeddingModel;
+use fullw2v::serve::{
+    export_store, zipf_ids, Precision, ServeEngine, ServeOptions,
+    ServeReport, ShardedStore,
+};
+use fullw2v::util::benchkit::{banner, bench};
+use fullw2v::util::tables::{f, Table};
+use std::path::PathBuf;
+use std::sync::Arc;
+use std::time::Instant;
+
+/// Issue `ids` from 4 client threads, pipelining submits in windows of
+/// 32 so the dispatcher sees concurrent traffic to micro-batch.
+fn drive(engine: &ServeEngine, ids: &[u32], k: usize) -> (f64, ServeReport) {
+    let threads = 4;
+    let t0 = Instant::now();
+    std::thread::scope(|s| {
+        for t in 0..threads {
+            let client = engine.client();
+            let slice: Vec<u32> = ids
+                .iter()
+                .skip(t)
+                .step_by(threads)
+                .copied()
+                .collect();
+            s.spawn(move || {
+                for window in slice.chunks(32) {
+                    let pending: Vec<_> = window
+                        .iter()
+                        .map(|&id| client.submit_id(id, k))
+                        .collect();
+                    for rx in pending {
+                        rx.recv()
+                            .expect("engine alive")
+                            .expect("valid query");
+                    }
+                }
+            });
+        }
+    });
+    let wall = t0.elapsed().as_secs_f64();
+    (ids.len() as f64 / wall, engine.report())
+}
+
+fn store_dir(name: &str) -> PathBuf {
+    let d = std::env::temp_dir().join("fullw2v_bench_serve").join(name);
+    std::fs::create_dir_all(&d).unwrap();
+    d
+}
+
+fn main() {
+    banner("bench_serve", "serving QPS / latency vs shards, cache, precision");
+    let args: Vec<String> = std::env::args().collect();
+    let arg = |name: &str| {
+        args.iter()
+            .position(|a| a == name)
+            .and_then(|i| args.get(i + 1).cloned())
+    };
+    let rows: usize =
+        arg("--rows").and_then(|v| v.parse().ok()).unwrap_or(8000);
+    let dim: usize = arg("--dim").and_then(|v| v.parse().ok()).unwrap_or(64);
+    let queries: usize =
+        arg("--queries").and_then(|v| v.parse().ok()).unwrap_or(2000);
+
+    let vocab = Vocab::from_counts(
+        (0..rows).map(|i| (format!("w{i:05}"), (rows - i) as u64 + 1)),
+        1,
+    );
+    let model = EmbeddingModel::init(rows, dim, 11);
+    let ids = zipf_ids(queries, rows, 42);
+
+    // --- QPS and latency vs shard count (cache off isolates sharding) ---
+    let mut t1 = Table::new(
+        &format!("serving vs shards ({rows} rows x {dim}d, exact, no cache)"),
+        &["shards", "workers", "p50_us", "p99_us", "qps"],
+    );
+    for shards in [1usize, 2, 4, 8] {
+        let dir = store_dir(&format!("shards{shards}"));
+        export_store(&model, &vocab, &dir, shards).unwrap();
+        let store =
+            Arc::new(ShardedStore::open(&dir, Precision::Exact).unwrap());
+        let engine = ServeEngine::start(
+            store,
+            ServeOptions {
+                cache_capacity: 0,
+                warm_cache: false,
+                ..ServeOptions::default()
+            },
+        );
+        let (qps, report) = drive(&engine, &ids, 10);
+        t1.row(vec![
+            shards.to_string(),
+            report.workers.to_string(),
+            f(report.latency.p50_us, 0),
+            f(report.latency.p99_us, 0),
+            f(qps, 0),
+        ]);
+        engine.shutdown();
+    }
+    print!("{}", t1.render());
+
+    // --- cache hit rate vs capacity (Zipf head served from RAM) ---
+    let dir4 = store_dir("cache4");
+    export_store(&model, &vocab, &dir4, 4).unwrap();
+    let mut t2 = Table::new(
+        "hot-cache tier at 4 shards (Zipf queries)",
+        &["capacity", "protected", "hit_rate", "p50_us", "qps"],
+    );
+    for (capacity, protected) in [(0usize, 0usize), (512, 128), (4096, 512)] {
+        let store =
+            Arc::new(ShardedStore::open(&dir4, Precision::Exact).unwrap());
+        let engine = ServeEngine::start(
+            store,
+            ServeOptions {
+                cache_capacity: capacity,
+                protected_rows: protected,
+                ..ServeOptions::default()
+            },
+        );
+        let (qps, report) = drive(&engine, &ids, 10);
+        t2.row(vec![
+            capacity.to_string(),
+            protected.to_string(),
+            f(report.cache_hit_rate(), 3),
+            f(report.latency.p50_us, 0),
+            f(qps, 0),
+        ]);
+        engine.shutdown();
+    }
+    print!("{}", t2.render());
+
+    // --- precision: exact vs int8 ---
+    let mut t3 = Table::new(
+        "precision at 4 shards",
+        &["precision", "payload_mb", "p50_us", "qps"],
+    );
+    for precision in [Precision::Exact, Precision::Quantized] {
+        let store =
+            Arc::new(ShardedStore::open(&dir4, precision).unwrap());
+        let engine =
+            ServeEngine::start(store.clone(), ServeOptions::default());
+        let (qps, report) = drive(&engine, &ids, 10);
+        let payload: usize = (0..store.num_shards())
+            .map(|i| store.shard(i).map(|s| s.payload_bytes()).unwrap_or(0))
+            .sum();
+        t3.row(vec![
+            precision.name().to_string(),
+            f(payload as f64 / (1024.0 * 1024.0), 2),
+            f(report.latency.p50_us, 0),
+            f(qps, 0),
+        ]);
+        engine.shutdown();
+    }
+    print!("{}", t3.render());
+
+    // --- single-query latency (unbatched path, benchkit timing) ---
+    let store =
+        Arc::new(ShardedStore::open(&dir4, Precision::Exact).unwrap());
+    let engine = ServeEngine::start(store, ServeOptions::default());
+    let client = engine.client();
+    let mut i = 0usize;
+    let stats = bench(50, 500, || {
+        let id = ids[i % ids.len()];
+        i += 1;
+        client.query_id(id, 10).expect("valid query");
+    });
+    println!(
+        "single-query latency: mean {:.0}us min {:.0}us ({:.0} q/s serial)",
+        stats.mean_secs * 1e6,
+        stats.min_secs * 1e6,
+        stats.rate(1.0)
+    );
+    drop(client);
+    engine.shutdown();
+}

@@ -1,12 +1,14 @@
 //! Command-line interface (hand-rolled; clap is unavailable offline).
 //!
 //! Subcommands:
-//!   train       train a model on a corpus file or synthetic spec
-//!   eval        evaluate a saved model (similarity vs gold file)
-//!   nn          nearest neighbors of a word in a saved model
-//!   gen-corpus  write a synthetic corpus (+ gold sets) to disk
-//!   gpusim      print the analytical Tables 4/5/6 + projections
-//!   manifest    list AOT executables
+//!   train        train a model on a corpus file or synthetic spec
+//!   eval         evaluate a saved model (similarity vs gold file)
+//!   nn           nearest neighbors of a word (saved model or store)
+//!   export-store shard a saved model into a serving store directory
+//!   serve        answer a batch of top-k queries from a store
+//!   gen-corpus   write a synthetic corpus (+ gold sets) to disk
+//!   gpusim       print the analytical Tables 4/5/6 + projections
+//!   manifest     list AOT executables
 //!
 //! Global flags: -c/--config FILE, -s/--set section.key=value (repeat),
 //! -v/--verbose, -q/--quiet.
@@ -28,15 +30,31 @@ pub enum Command {
         corpus: Option<String>,
         synthetic: Option<String>,
         out: Option<String>,
+        /// Export a sharded serving store here after training.
+        store: Option<String>,
+        shards: usize,
     },
     Eval {
         model: String,
         pairs: String,
     },
     Nn {
-        model: String,
+        model: Option<String>,
+        store: Option<String>,
         word: String,
         k: usize,
+        quantized: bool,
+    },
+    ExportStore {
+        model: String,
+        out: String,
+        shards: usize,
+    },
+    Serve {
+        store: String,
+        queries: String,
+        k: usize,
+        quantized: bool,
     },
     GenCorpus {
         spec: String,
@@ -56,8 +74,11 @@ USAGE:
 
 COMMANDS:
   train [--corpus FILE | --synthetic tiny|text8|1bw] [--out MODEL]
+        [--store DIR [--shards N]]
   eval --model MODEL.txt --pairs PAIRS.tsv
-  nn --model MODEL.txt --word WORD [--k K]
+  nn (--model MODEL.txt | --store DIR [--quantized]) --word WORD [--k K]
+  export-store --model MODEL.txt --out DIR [--shards N]
+  serve --store DIR --queries FILE [--k K] [--quantized]
   gen-corpus --spec tiny|text8|1bw --out DIR
   gpusim
   manifest
@@ -93,9 +114,13 @@ pub fn parse(args: &[String]) -> Result<Cli> {
             "-v" | "--verbose" => log::set_level(Level::Debug),
             "-q" | "--quiet" => log::set_level(Level::Error),
             "--corpus" | "--synthetic" | "--out" | "--model" | "--pairs"
-            | "--word" | "--k" | "--spec" => {
+            | "--word" | "--k" | "--spec" | "--store" | "--queries"
+            | "--shards" => {
                 let key = a.trim_start_matches('-').to_string();
                 opts.push((key, take_value(&mut i)?));
+            }
+            "--quantized" => {
+                opts.push(("quantized".to_string(), "true".to_string()));
             }
             _ if a.starts_with('-') => bail!("unknown flag '{a}'\n{USAGE}"),
             _ => positional.push(a.clone()),
@@ -115,20 +140,62 @@ pub fn parse(args: &[String]) -> Result<Cli> {
         opts.iter().find(|(k, _)| k == key).map(|(_, v)| v.clone())
     };
     let cmd = positional.first().map(String::as_str).unwrap_or("help");
+    // numeric flags bail on garbage instead of silently using defaults
+    let int_flag = |key: &str, default: usize| -> Result<usize> {
+        match get(key) {
+            None => Ok(default),
+            Some(v) => v
+                .parse()
+                .map_err(|_| anyhow!("--{key} needs an integer, got '{v}'")),
+        }
+    };
     let command = match cmd {
         "train" => Command::Train {
             corpus: get("corpus"),
             synthetic: get("synthetic"),
             out: get("out"),
+            store: get("store"),
+            shards: int_flag("shards", 4)?,
         },
         "eval" => Command::Eval {
             model: get("model").ok_or_else(|| anyhow!("eval needs --model"))?,
             pairs: get("pairs").ok_or_else(|| anyhow!("eval needs --pairs"))?,
         },
-        "nn" => Command::Nn {
-            model: get("model").ok_or_else(|| anyhow!("nn needs --model"))?,
-            word: get("word").ok_or_else(|| anyhow!("nn needs --word"))?,
-            k: get("k").and_then(|v| v.parse().ok()).unwrap_or(10),
+        "nn" => {
+            let model = get("model");
+            let store = get("store");
+            if model.is_none() && store.is_none() {
+                bail!("nn needs --model or --store");
+            }
+            if model.is_some() && store.is_some() {
+                bail!("nn takes --model or --store, not both");
+            }
+            if model.is_some() && get("quantized").is_some() {
+                bail!("--quantized only applies to --store");
+            }
+            Command::Nn {
+                model,
+                store,
+                word: get("word")
+                    .ok_or_else(|| anyhow!("nn needs --word"))?,
+                k: int_flag("k", 10)?,
+                quantized: get("quantized").is_some(),
+            }
+        }
+        "export-store" => Command::ExportStore {
+            model: get("model")
+                .ok_or_else(|| anyhow!("export-store needs --model"))?,
+            out: get("out")
+                .ok_or_else(|| anyhow!("export-store needs --out"))?,
+            shards: int_flag("shards", 4)?,
+        },
+        "serve" => Command::Serve {
+            store: get("store")
+                .ok_or_else(|| anyhow!("serve needs --store"))?,
+            queries: get("queries")
+                .ok_or_else(|| anyhow!("serve needs --queries"))?,
+            k: int_flag("k", 10)?,
+            quantized: get("quantized").is_some(),
         },
         "gen-corpus" => Command::GenCorpus {
             spec: get("spec").unwrap_or_else(|| "tiny".into()),
@@ -203,5 +270,83 @@ mod tests {
     fn no_args_is_help() {
         let cli = p(&[]).unwrap();
         assert_eq!(cli.command, Command::Help);
+    }
+
+    #[test]
+    fn nn_accepts_store_or_model_not_both() {
+        let cli =
+            p(&["nn", "--store", "d", "--word", "w", "--quantized"]).unwrap();
+        match cli.command {
+            Command::Nn { store, model, quantized, .. } => {
+                assert_eq!(store.as_deref(), Some("d"));
+                assert!(model.is_none());
+                assert!(quantized);
+            }
+            _ => panic!(),
+        }
+        assert!(p(&["nn", "--store", "d", "--model", "m", "--word", "w"])
+            .is_err());
+        // --quantized is a store-path option
+        assert!(p(&["nn", "--model", "m", "--word", "w", "--quantized"])
+            .is_err());
+    }
+
+    #[test]
+    fn export_store_and_serve_parse() {
+        let cli = p(&[
+            "export-store",
+            "--model",
+            "m.txt",
+            "--out",
+            "dir",
+            "--shards",
+            "8",
+        ])
+        .unwrap();
+        assert_eq!(
+            cli.command,
+            Command::ExportStore {
+                model: "m.txt".into(),
+                out: "dir".into(),
+                shards: 8
+            }
+        );
+        let cli =
+            p(&["serve", "--store", "dir", "--queries", "q.txt"]).unwrap();
+        match cli.command {
+            Command::Serve { k, quantized, .. } => {
+                assert_eq!(k, 10);
+                assert!(!quantized);
+            }
+            _ => panic!(),
+        }
+        assert!(p(&["serve", "--store", "dir"]).is_err());
+    }
+
+    #[test]
+    fn garbage_numeric_flags_bail() {
+        // "1O" (letter O) must error, not silently become the default
+        assert!(p(&[
+            "export-store", "--model", "m", "--out", "d", "--shards", "1O"
+        ])
+        .is_err());
+        assert!(p(&[
+            "serve", "--store", "d", "--queries", "q", "--k", "abc"
+        ])
+        .is_err());
+    }
+
+    #[test]
+    fn train_store_export_flags() {
+        let cli =
+            p(&["train", "--synthetic", "tiny", "--store", "s", "--shards", "2"])
+                .unwrap();
+        match cli.command {
+            Command::Train { store, shards, .. } => {
+                assert_eq!(store.as_deref(), Some("s"));
+                assert_eq!(shards, 2);
+            }
+            _ => panic!(),
+        }
     }
 }

@@ -14,6 +14,14 @@
 //! * **L1 (python/compile/kernels/)** — Pallas sentence kernels
 //!   implementing the paper's data-reuse optimizations.
 //!
+//! Beyond training, the crate now covers the online half of an embedding
+//! system's life: [`serve`] turns a trained [`model::EmbeddingModel`]
+//! into a query engine — an on-disk sharded store (f32 + int8-quantized
+//! shards), a frequency-aware hot-word cache for the Zipf head, and a
+//! micro-batching top-k front-end that reports p50/p99 latency and QPS.
+//! It applies the paper's locality-hierarchy insight to inference; see
+//! the [`serve`] module docs for the tier-by-tier mapping.
+//!
 //! See DESIGN.md for the system inventory and per-experiment index.
 
 pub mod batcher;
@@ -29,6 +37,7 @@ pub mod metrics;
 pub mod model;
 pub mod runtime;
 pub mod sampler;
+pub mod serve;
 pub mod util;
 pub mod workbench;
 

@@ -103,11 +103,20 @@ fn run(cli: Cli) -> Result<()> {
             );
             Ok(())
         }
-        Command::Train { corpus, synthetic, out } => {
-            train_cmd(cli.config, corpus, synthetic, out)
+        Command::Train { corpus, synthetic, out, store, shards } => {
+            train_cmd(cli.config, corpus, synthetic, out, store, shards)
         }
         Command::Eval { model, pairs } => eval_cmd(&model, &pairs),
-        Command::Nn { model, word, k } => nn_cmd(&model, &word, k),
+        Command::Nn { model, store, word, k, quantized } => match store {
+            Some(dir) => nn_store_cmd(&dir, &word, k, quantized),
+            None => nn_cmd(&model.expect("cli enforces one source"), &word, k),
+        },
+        Command::ExportStore { model, out, shards } => {
+            export_store_cmd(&model, &out, shards)
+        }
+        Command::Serve { store, queries, k, quantized } => {
+            serve_cmd(&store, &queries, k, quantized)
+        }
     }
 }
 
@@ -116,6 +125,8 @@ fn train_cmd(
     corpus: Option<String>,
     synthetic: Option<String>,
     out: Option<String>,
+    store: Option<String>,
+    shards: usize,
 ) -> Result<()> {
     let epochs = cfg.train.epochs;
     let (vocab, report, model) = match (corpus, synthetic) {
@@ -174,6 +185,18 @@ fn train_cmd(
         model.save_text(&vocab, Path::new(&path))?;
         println!("model written to {path} (word2vec text format)");
     }
+    if let Some(dir) = store {
+        let manifest = fullw2v::serve::export_store(
+            &model,
+            &vocab,
+            Path::new(&dir),
+            shards,
+        )?;
+        println!(
+            "serving store written to {dir} ({} shards, f32 + int8)",
+            manifest.shards.len()
+        );
+    }
     Ok(())
 }
 
@@ -222,5 +245,127 @@ fn nn_cmd(model_path: &str, word: &str, k: usize) -> Result<()> {
     for (nid, sim) in model.nearest(id, k) {
         println!("{:24} {:.4}", words[nid as usize], sim);
     }
+    Ok(())
+}
+
+fn store_precision(quantized: bool) -> fullw2v::serve::Precision {
+    if quantized {
+        fullw2v::serve::Precision::Quantized
+    } else {
+        fullw2v::serve::Precision::Exact
+    }
+}
+
+/// Load a store directory's vocab and check it matches the manifest, so
+/// a stale/truncated vocab.tsv surfaces as an error instead of an
+/// out-of-bounds panic when printing neighbor words.
+fn load_store_vocab(
+    dir: &Path,
+    store: &fullw2v::serve::ShardedStore,
+) -> Result<Vocab> {
+    let vocab = Vocab::load(&dir.join("vocab.tsv"))?;
+    if vocab.len() != store.vocab_size() {
+        return Err(anyhow!(
+            "vocab.tsv has {} words but the store manifest says {} — \
+             stale or truncated store directory?",
+            vocab.len(),
+            store.vocab_size()
+        ));
+    }
+    Ok(vocab)
+}
+
+fn nn_store_cmd(
+    store_dir: &str,
+    word: &str,
+    k: usize,
+    quantized: bool,
+) -> Result<()> {
+    use fullw2v::serve::{ServeEngine, ServeOptions, ShardedStore};
+    let dir = Path::new(store_dir);
+    let store =
+        Arc::new(ShardedStore::open(dir, store_precision(quantized))?);
+    let vocab = load_store_vocab(dir, &store)?;
+    let id = vocab
+        .id(word)
+        .ok_or_else(|| anyhow!("word '{word}' not in store vocab"))?;
+    let engine = ServeEngine::start(store, ServeOptions::default());
+    let client = engine.client();
+    let neighbors = client.query_id(id, k).map_err(anyhow::Error::msg)?;
+    for n in &neighbors {
+        println!("{:24} {:.4}", vocab.word(n.id), n.score);
+    }
+    drop(client);
+    engine.shutdown();
+    Ok(())
+}
+
+fn export_store_cmd(model_path: &str, out: &str, shards: usize) -> Result<()> {
+    let (words, model) = EmbeddingModel::load_text(Path::new(model_path))?;
+    // text models carry no counts; synthesize strictly-descending counts
+    // so store ids keep the model's row order (= frequency rank)
+    let n = words.len() as u64;
+    let vocab = Vocab::from_counts(
+        words.into_iter().enumerate().map(|(i, w)| (w, n - i as u64)),
+        1,
+    );
+    let manifest =
+        fullw2v::serve::export_store(&model, &vocab, Path::new(out), shards)?;
+    println!(
+        "store written to {out}: {} rows x {} dims in {} shards (f32 + int8)",
+        manifest.vocab_size,
+        manifest.dim,
+        manifest.shards.len()
+    );
+    Ok(())
+}
+
+fn serve_cmd(
+    store_dir: &str,
+    queries_path: &str,
+    k: usize,
+    quantized: bool,
+) -> Result<()> {
+    use fullw2v::serve::{ServeEngine, ServeOptions, ShardedStore};
+    let dir = Path::new(store_dir);
+    let store =
+        Arc::new(ShardedStore::open(dir, store_precision(quantized))?);
+    let vocab = load_store_vocab(dir, &store)?;
+    let engine = ServeEngine::start(store, ServeOptions::default());
+    let client = engine.client();
+
+    let text = std::fs::read_to_string(queries_path)
+        .with_context(|| format!("reading queries {queries_path}"))?;
+    let words: Vec<&str> =
+        text.lines().map(str::trim).filter(|w| !w.is_empty()).collect();
+    // submit everything first so concurrent requests micro-batch
+    let submitted: Vec<_> = words
+        .iter()
+        .map(|&w| match vocab.id(w) {
+            Some(id) => Ok(client.submit_id(id, k)),
+            None => Err(format!("word '{w}' not in store vocab")),
+        })
+        .collect();
+    for (w, sub) in words.iter().zip(submitted) {
+        match sub {
+            Ok(rx) => match rx.recv() {
+                Ok(Ok(neighbors)) => {
+                    let line: Vec<String> = neighbors
+                        .iter()
+                        .map(|n| {
+                            format!("{}:{:.3}", vocab.word(n.id), n.score)
+                        })
+                        .collect();
+                    println!("{w:20} {}", line.join(" "));
+                }
+                Ok(Err(e)) => println!("{w:20} ERROR {e}"),
+                Err(_) => println!("{w:20} ERROR engine stopped"),
+            },
+            Err(e) => println!("{w:20} ERROR {e}"),
+        }
+    }
+    drop(client);
+    let report = engine.shutdown();
+    println!("\n{}", report.summary());
     Ok(())
 }

@@ -92,6 +92,56 @@ impl TrainReport {
     }
 }
 
+/// Latency distribution summary for the serving engine.
+///
+/// Built from raw per-request nanosecond samples; quantiles use the
+/// nearest-rank method on the sorted sample set.
+#[derive(Debug, Clone, Default, PartialEq)]
+pub struct LatencyStats {
+    pub count: u64,
+    pub p50_us: f64,
+    pub p99_us: f64,
+    pub max_us: f64,
+    /// Completed queries per second over the observation window.
+    pub qps: f64,
+}
+
+impl LatencyStats {
+    /// Summarize raw nanosecond samples over `wall_seconds` of serving.
+    pub fn from_nanos(samples: &[u64], wall_seconds: f64) -> Self {
+        if samples.is_empty() {
+            return LatencyStats::default();
+        }
+        let mut sorted = samples.to_vec();
+        sorted.sort_unstable();
+        let q = |frac: f64| -> f64 {
+            let idx = ((sorted.len() - 1) as f64 * frac).round() as usize;
+            sorted[idx] as f64 / 1e3
+        };
+        LatencyStats {
+            count: samples.len() as u64,
+            p50_us: q(0.50),
+            p99_us: q(0.99),
+            max_us: *sorted.last().unwrap() as f64 / 1e3,
+            qps: if wall_seconds > 0.0 {
+                samples.len() as f64 / wall_seconds
+            } else {
+                0.0
+            },
+        }
+    }
+
+    pub fn to_json(&self) -> Json {
+        obj(vec![
+            ("count", Json::Num(self.count as f64)),
+            ("p50_us", Json::Num(self.p50_us)),
+            ("p99_us", Json::Num(self.p99_us)),
+            ("max_us", Json::Num(self.max_us)),
+            ("qps", Json::Num(self.qps)),
+        ])
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -130,6 +180,19 @@ mod tests {
         assert!((r.words_per_sec() - 100.0).abs() < 1e-9);
         let (first, last) = r.loss_trajectory();
         assert!(first > last); // decreasing loss
+    }
+
+    #[test]
+    fn latency_quantiles() {
+        // 1..=100 microseconds, in nanos
+        let samples: Vec<u64> = (1..=100u64).map(|x| x * 1_000).collect();
+        let s = LatencyStats::from_nanos(&samples, 2.0);
+        assert_eq!(s.count, 100);
+        assert!((s.p50_us - 50.0).abs() <= 1.0);
+        assert!((s.p99_us - 99.0).abs() <= 1.0);
+        assert_eq!(s.max_us, 100.0);
+        assert!((s.qps - 50.0).abs() < 1e-9);
+        assert_eq!(LatencyStats::from_nanos(&[], 1.0), LatencyStats::default());
     }
 
     #[test]

@@ -35,8 +35,23 @@ impl EmbeddingModel {
 
     #[inline]
     pub fn syn0_row(&self, id: u32) -> &[f32] {
+        debug_assert!((id as usize) < self.vocab_size, "row id {id} >= V");
         let i = id as usize * self.dim;
         &self.syn0[i..i + self.dim]
+    }
+
+    /// Bounds-checked row accessor: `None` for ids at or past the vocab
+    /// boundary (and on index overflow), instead of a slice panic.  For
+    /// callers that index rows with ids from external input (files,
+    /// queries) rather than the vocabulary itself.
+    #[inline]
+    pub fn try_syn0_row(&self, id: u32) -> Option<&[f32]> {
+        if (id as usize) >= self.vocab_size {
+            return None;
+        }
+        let i = (id as usize).checked_mul(self.dim)?;
+        let end = i.checked_add(self.dim)?;
+        self.syn0.get(i..end)
     }
 
     #[inline]
@@ -75,17 +90,17 @@ impl EmbeddingModel {
 
     /// L2-normalized copy of syn0 (rows), used by the analogy solver.
     pub fn normalized_syn0(&self) -> Vec<f32> {
+        self.normalized_rows()
+    }
+
+    /// L2-normalized copy of the input-side rows (V x d row-major).
+    ///
+    /// Cosine similarity over normalized rows reduces to a dot product,
+    /// so the serving store normalizes once at export time and every
+    /// query afterwards is dot-only.  Zero rows are left as zeros.
+    pub fn normalized_rows(&self) -> Vec<f32> {
         let mut out = self.syn0.clone();
-        for r in 0..self.vocab_size {
-            let row = &mut out[r * self.dim..(r + 1) * self.dim];
-            let n = row.iter().map(|x| (x * x) as f64).sum::<f64>().sqrt()
-                as f32;
-            if n > 0.0 {
-                for x in row.iter_mut() {
-                    *x /= n;
-                }
-            }
-        }
+        normalize_rows_in_place(&mut out, self.dim);
         out
     }
 
@@ -180,6 +195,24 @@ impl EmbeddingModel {
 
 fn bad(msg: &str) -> std::io::Error {
     std::io::Error::new(std::io::ErrorKind::InvalidData, msg.to_string())
+}
+
+/// L2-normalize each `dim`-wide row of a row-major matrix in place.
+/// Zero rows are left untouched.  The slice length must be a multiple of
+/// `dim`, so the final chunk is always a full row (the vocab-boundary
+/// guarantee the serving store relies on).
+pub fn normalize_rows_in_place(rows: &mut [f32], dim: usize) {
+    assert!(dim > 0, "dim must be positive");
+    assert_eq!(rows.len() % dim, 0, "rows length not a multiple of dim");
+    for row in rows.chunks_exact_mut(dim) {
+        let n = row.iter().map(|x| (*x as f64) * (*x as f64)).sum::<f64>();
+        let n = n.sqrt() as f32;
+        if n > 0.0 {
+            for x in row.iter_mut() {
+                *x /= n;
+            }
+        }
+    }
 }
 
 /// Cosine similarity of two equal-length vectors.
@@ -288,5 +321,41 @@ mod tests {
             let norm: f64 = row.iter().map(|x| (x * x) as f64).sum();
             assert!((norm - 1.0).abs() < 1e-5);
         }
+    }
+
+    #[test]
+    fn normalized_rows_last_row_is_full_width() {
+        // regression: the final row must be a complete dim-wide slice and
+        // normalize like any interior row (vocab-boundary case)
+        let m = EmbeddingModel::init(5, 3, 11);
+        let n = m.normalized_rows();
+        assert_eq!(n.len(), 5 * 3);
+        let last = &n[4 * 3..5 * 3];
+        assert_eq!(last.len(), 3);
+        let norm: f64 = last.iter().map(|x| (x * x) as f64).sum();
+        assert!((norm - 1.0).abs() < 1e-5);
+        // direction preserved vs the unnormalized row
+        let raw = m.syn0_row(4);
+        let c = cosine(raw, last);
+        assert!((c - 1.0).abs() < 1e-6);
+    }
+
+    #[test]
+    fn normalized_rows_keep_zero_rows() {
+        let mut m = EmbeddingModel::init(3, 4, 2);
+        m.syn0_row_mut(1).fill(0.0);
+        let n = m.normalized_rows();
+        assert!(n[4..8].iter().all(|&x| x == 0.0));
+    }
+
+    #[test]
+    fn try_row_bounds() {
+        let m = EmbeddingModel::init(3, 4, 5);
+        // last valid row: full width, identical to the panicking accessor
+        assert_eq!(m.try_syn0_row(2).unwrap(), m.syn0_row(2));
+        assert_eq!(m.try_syn0_row(2).unwrap().len(), 4);
+        // first invalid id: None instead of a slice panic
+        assert!(m.try_syn0_row(3).is_none());
+        assert!(m.try_syn0_row(u32::MAX).is_none());
     }
 }

@@ -1,0 +1,229 @@
+//! Top-k cosine search over sharded, normalized rows.
+//!
+//! Rows are L2-normalized at export, so cosine similarity is a plain dot
+//! product here.  Each shard is scanned with a bounded min-heap (only the
+//! current k-th best is ever compared against), and per-shard heaps merge
+//! associatively — which is what lets the engine give each worker thread
+//! a disjoint shard range and combine partial results at the end.
+//!
+//! Ordering is fully deterministic: ties in score break toward the
+//! smaller word id, in both the heap and the final sort.
+
+use super::store::Shard;
+use std::cmp::{Ordering, Reverse};
+use std::collections::BinaryHeap;
+
+/// One search result.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct Neighbor {
+    pub id: u32,
+    pub score: f32,
+}
+
+/// Heap entry ordered by (score asc, id desc) so that among equal scores
+/// the *larger* id is considered smaller and evicted first.
+#[derive(Debug, Clone, Copy, PartialEq)]
+struct Entry {
+    score: f32,
+    id: u32,
+}
+
+impl Eq for Entry {}
+
+impl Ord for Entry {
+    fn cmp(&self, other: &Self) -> Ordering {
+        self.score
+            .total_cmp(&other.score)
+            .then_with(|| other.id.cmp(&self.id))
+    }
+}
+
+impl PartialOrd for Entry {
+    fn partial_cmp(&self, other: &Self) -> Option<Ordering> {
+        Some(self.cmp(other))
+    }
+}
+
+/// Bounded top-k accumulator (min-heap of at most k entries).
+#[derive(Debug, Clone)]
+pub struct TopK {
+    k: usize,
+    heap: BinaryHeap<Reverse<Entry>>,
+}
+
+impl TopK {
+    pub fn new(k: usize) -> Self {
+        // the capacity is only a hint: cap it so a huge caller-supplied
+        // k cannot force an allocation crash (the heap grows on demand,
+        // and holds at most k entries)
+        let hint = k.saturating_add(1).min(1024);
+        TopK { k, heap: BinaryHeap::with_capacity(hint) }
+    }
+
+    pub fn k(&self) -> usize {
+        self.k
+    }
+
+    pub fn len(&self) -> usize {
+        self.heap.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.heap.is_empty()
+    }
+
+    /// Offer a candidate; keeps only the best k seen so far.
+    #[inline]
+    pub fn consider(&mut self, id: u32, score: f32) {
+        if self.k == 0 {
+            return;
+        }
+        let e = Entry { score, id };
+        if self.heap.len() < self.k {
+            self.heap.push(Reverse(e));
+        } else if e > self.heap.peek().expect("non-empty").0 {
+            self.heap.pop();
+            self.heap.push(Reverse(e));
+        }
+    }
+
+    /// Merge another accumulator into this one (associative, so partial
+    /// per-shard results can be combined in any order).
+    pub fn merge(&mut self, other: TopK) {
+        for Reverse(e) in other.heap {
+            self.consider(e.id, e.score);
+        }
+    }
+
+    /// Consume into a descending-score (then ascending-id) list.
+    pub fn into_sorted(self) -> Vec<Neighbor> {
+        let mut out: Vec<Neighbor> = self
+            .heap
+            .into_iter()
+            .map(|Reverse(e)| Neighbor { id: e.id, score: e.score })
+            .collect();
+        out.sort_by(|a, b| {
+            b.score.total_cmp(&a.score).then_with(|| a.id.cmp(&b.id))
+        });
+        out
+    }
+}
+
+/// Scan one shard, accumulating into `topk`.  `query` must be normalized
+/// for scores to be cosines; `exclude` drops one id (typically the query
+/// word itself).
+pub fn search_shard(
+    shard: &Shard,
+    query: &[f32],
+    exclude: Option<u32>,
+    topk: &mut TopK,
+) {
+    match exclude {
+        None => shard.for_each_score(query, |id, s| topk.consider(id, s)),
+        Some(x) => shard.for_each_score(query, |id, s| {
+            if id != x {
+                topk.consider(id, s);
+            }
+        }),
+    }
+}
+
+/// Brute-force reference over a flat row-major matrix (tests and the
+/// exact/quantized agreement check in `examples/serve_query.rs`).
+pub fn search_rows(
+    rows: &[f32],
+    dim: usize,
+    query: &[f32],
+    k: usize,
+    exclude: Option<u32>,
+) -> Vec<Neighbor> {
+    let mut topk = TopK::new(k);
+    for (i, row) in rows.chunks_exact(dim).enumerate() {
+        let id = i as u32;
+        if exclude == Some(id) {
+            continue;
+        }
+        topk.consider(id, super::store::dot(row, query));
+    }
+    topk.into_sorted()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn keeps_best_k() {
+        let mut t = TopK::new(3);
+        for (id, s) in
+            [(0, 0.1), (1, 0.9), (2, 0.5), (3, 0.7), (4, 0.2), (5, 0.8)]
+        {
+            t.consider(id, s);
+        }
+        let got = t.into_sorted();
+        assert_eq!(
+            got.iter().map(|n| n.id).collect::<Vec<_>>(),
+            vec![1, 5, 3]
+        );
+        assert!(got[0].score >= got[1].score && got[1].score >= got[2].score);
+    }
+
+    #[test]
+    fn ties_break_toward_smaller_id() {
+        let mut t = TopK::new(2);
+        t.consider(9, 0.5);
+        t.consider(3, 0.5);
+        t.consider(6, 0.5);
+        let got = t.into_sorted();
+        assert_eq!(got.iter().map(|n| n.id).collect::<Vec<_>>(), vec![3, 6]);
+    }
+
+    #[test]
+    fn merge_equals_single_pass() {
+        let scores: Vec<(u32, f32)> =
+            (0..40).map(|i| (i, ((i * 13 % 17) as f32) / 17.0)).collect();
+        let mut whole = TopK::new(5);
+        for &(id, s) in &scores {
+            whole.consider(id, s);
+        }
+        let mut left = TopK::new(5);
+        let mut right = TopK::new(5);
+        for &(id, s) in &scores[..20] {
+            left.consider(id, s);
+        }
+        for &(id, s) in &scores[20..] {
+            right.consider(id, s);
+        }
+        left.merge(right);
+        assert_eq!(whole.into_sorted(), left.into_sorted());
+    }
+
+    #[test]
+    fn k_zero_and_fewer_candidates() {
+        let mut t = TopK::new(0);
+        t.consider(1, 1.0);
+        assert!(t.into_sorted().is_empty());
+
+        let mut t = TopK::new(10);
+        t.consider(1, 0.5);
+        t.consider(2, 0.9);
+        let got = t.into_sorted();
+        assert_eq!(got.len(), 2);
+        assert_eq!(got[0].id, 2);
+    }
+
+    #[test]
+    fn search_rows_excludes_and_ranks() {
+        // 4 rows in 2-d, unit-ish
+        let rows: Vec<f32> = vec![
+            1.0, 0.0, //
+            0.0, 1.0, //
+            0.9, 0.1, //
+            -1.0, 0.0,
+        ];
+        let got = search_rows(&rows, 2, &[1.0, 0.0], 3, Some(0));
+        assert_eq!(got[0].id, 2);
+        assert_eq!(got.last().unwrap().id, 3);
+        assert!(!got.iter().any(|n| n.id == 0));
+    }
+}

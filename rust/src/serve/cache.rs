@@ -1,0 +1,322 @@
+//! Hot-word cache: the RAM tier between queries and the sharded store.
+//!
+//! The paper's lifetime analysis shows W2V's row accesses follow the
+//! corpus's Zipf law — a small head of words accounts for most touches —
+//! and exploits it with registers/shared memory.  Serving sees the same
+//! skew in query traffic, so this tier keeps the head resident:
+//!
+//! * an exact LRU over recently fetched rows (intrusive doubly-linked
+//!   list, O(1) touch/insert), and
+//! * a *protected* set: vocabulary ids below `protected` are pinned once
+//!   inserted and never evicted.  Ids in this codebase are assigned in
+//!   descending frequency order, so `id < protected` **is** the Zipf
+//!   head — no separate frequency table is needed.
+//!
+//! The cache is owned by the engine's dispatcher thread, so it needs no
+//! interior locking.
+
+use std::collections::HashMap;
+
+const NIL: usize = usize::MAX;
+
+struct Node {
+    id: u32,
+    prev: usize,
+    next: usize,
+    pinned: bool,
+    row: Vec<f32>,
+}
+
+/// Hit/miss counters (monotonic over the cache's lifetime).
+#[derive(Debug, Clone, Copy, Default, PartialEq, Eq)]
+pub struct CacheStats {
+    pub hits: u64,
+    pub misses: u64,
+    pub evictions: u64,
+    pub len: usize,
+    pub pinned: usize,
+}
+
+impl CacheStats {
+    pub fn hit_rate(&self) -> f64 {
+        let total = self.hits + self.misses;
+        if total == 0 {
+            0.0
+        } else {
+            self.hits as f64 / total as f64
+        }
+    }
+}
+
+/// Bounded LRU row cache with a pinned frequency head.
+pub struct HotCache {
+    dim: usize,
+    capacity: usize,
+    protected: u32,
+    map: HashMap<u32, usize>,
+    nodes: Vec<Node>,
+    free: Vec<usize>,
+    head: usize,
+    tail: usize,
+    stats: CacheStats,
+}
+
+impl HotCache {
+    /// `capacity` rows total (0 disables caching); ids `< protected` are
+    /// never evicted once inserted.  `protected` is clamped to
+    /// `capacity` so pinning can never exceed the budget — note that
+    /// `protected == capacity` deliberately dedicates the whole cache
+    /// to the head: tail rows are then never cached (see
+    /// `full_pinned_cache_skips_inserts`), which is the right trade
+    /// when the head dominates traffic.
+    pub fn new(dim: usize, capacity: usize, protected: usize) -> Self {
+        HotCache {
+            dim,
+            capacity,
+            protected: protected.min(capacity) as u32,
+            map: HashMap::new(),
+            nodes: Vec::new(),
+            free: Vec::new(),
+            head: NIL,
+            tail: NIL,
+            stats: CacheStats::default(),
+        }
+    }
+
+    pub fn len(&self) -> usize {
+        self.map.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.map.is_empty()
+    }
+
+    pub fn capacity(&self) -> usize {
+        self.capacity
+    }
+
+    pub fn stats(&self) -> CacheStats {
+        CacheStats { len: self.len(), ..self.stats }
+    }
+
+    pub fn contains(&self, id: u32) -> bool {
+        self.map.contains_key(&id)
+    }
+
+    /// Look up a row, counting a hit or miss and refreshing recency.
+    pub fn get(&mut self, id: u32) -> Option<&[f32]> {
+        match self.map.get(&id).copied() {
+            Some(i) => {
+                self.stats.hits += 1;
+                self.detach(i);
+                self.push_front(i);
+                Some(&self.nodes[i].row)
+            }
+            None => {
+                self.stats.misses += 1;
+                None
+            }
+        }
+    }
+
+    /// Insert a row fetched from the cold tier, evicting the LRU
+    /// unpinned entry when full.  A full cache of pinned rows (or
+    /// capacity 0) silently skips the insert.
+    pub fn insert(&mut self, id: u32, row: &[f32]) {
+        assert_eq!(row.len(), self.dim, "row width mismatch");
+        if self.capacity == 0 {
+            return;
+        }
+        if let Some(&i) = self.map.get(&id) {
+            self.nodes[i].row.copy_from_slice(row);
+            self.detach(i);
+            self.push_front(i);
+            return;
+        }
+        if self.map.len() == self.capacity && !self.evict_one() {
+            return; // everything pinned
+        }
+        let pinned = id < self.protected;
+        if pinned {
+            self.stats.pinned += 1;
+        }
+        let node = Node {
+            id,
+            prev: NIL,
+            next: NIL,
+            pinned,
+            row: row.to_vec(),
+        };
+        let i = match self.free.pop() {
+            Some(i) => {
+                self.nodes[i] = node;
+                i
+            }
+            None => {
+                self.nodes.push(node);
+                self.nodes.len() - 1
+            }
+        };
+        self.push_front(i);
+        self.map.insert(id, i);
+    }
+
+    /// Pre-load the protected head from a row source (e.g. the store at
+    /// startup), so the first wave of hot queries doesn't fault.
+    pub fn warm<F: FnMut(u32, &mut [f32]) -> bool>(&mut self, mut fetch: F) {
+        let mut buf = vec![0.0f32; self.dim];
+        for id in 0..self.protected {
+            if self.contains(id) {
+                continue;
+            }
+            if fetch(id, &mut buf) {
+                self.insert(id, &buf);
+            }
+        }
+    }
+
+    /// Evict the least-recently-used unpinned entry; false if none.
+    fn evict_one(&mut self) -> bool {
+        let mut i = self.tail;
+        while i != NIL && self.nodes[i].pinned {
+            i = self.nodes[i].prev;
+        }
+        if i == NIL {
+            return false;
+        }
+        self.detach(i);
+        self.map.remove(&self.nodes[i].id);
+        self.nodes[i].row = Vec::new(); // release the payload now
+        self.free.push(i);
+        self.stats.evictions += 1;
+        true
+    }
+
+    fn detach(&mut self, i: usize) {
+        let (prev, next) = (self.nodes[i].prev, self.nodes[i].next);
+        if prev != NIL {
+            self.nodes[prev].next = next;
+        } else if self.head == i {
+            self.head = next;
+        }
+        if next != NIL {
+            self.nodes[next].prev = prev;
+        } else if self.tail == i {
+            self.tail = prev;
+        }
+        self.nodes[i].prev = NIL;
+        self.nodes[i].next = NIL;
+    }
+
+    fn push_front(&mut self, i: usize) {
+        self.nodes[i].prev = NIL;
+        self.nodes[i].next = self.head;
+        if self.head != NIL {
+            self.nodes[self.head].prev = i;
+        }
+        self.head = i;
+        if self.tail == NIL {
+            self.tail = i;
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn row(v: f32, d: usize) -> Vec<f32> {
+        vec![v; d]
+    }
+
+    #[test]
+    fn lru_eviction_order() {
+        let mut c = HotCache::new(2, 3, 0);
+        c.insert(10, &row(1.0, 2));
+        c.insert(11, &row(2.0, 2));
+        c.insert(12, &row(3.0, 2));
+        // touch 10 so 11 becomes LRU
+        assert!(c.get(10).is_some());
+        c.insert(13, &row(4.0, 2));
+        assert!(c.contains(10));
+        assert!(!c.contains(11), "LRU entry should have been evicted");
+        assert!(c.contains(12) && c.contains(13));
+        assert_eq!(c.stats().evictions, 1);
+    }
+
+    #[test]
+    fn pinned_head_survives_pressure() {
+        // ids < 2 are protected
+        let mut c = HotCache::new(2, 3, 2);
+        c.insert(0, &row(0.0, 2));
+        c.insert(1, &row(1.0, 2));
+        for id in 100..120 {
+            c.insert(id, &row(id as f32, 2));
+        }
+        assert!(c.contains(0) && c.contains(1), "pinned rows evicted");
+        assert_eq!(c.len(), 3);
+    }
+
+    #[test]
+    fn full_pinned_cache_skips_inserts() {
+        let mut c = HotCache::new(2, 2, 2);
+        c.insert(0, &row(0.0, 2));
+        c.insert(1, &row(1.0, 2));
+        c.insert(50, &row(5.0, 2));
+        assert!(!c.contains(50));
+        assert_eq!(c.len(), 2);
+    }
+
+    #[test]
+    fn hit_miss_accounting() {
+        let mut c = HotCache::new(2, 2, 0);
+        assert!(c.get(7).is_none());
+        c.insert(7, &row(7.0, 2));
+        assert_eq!(c.get(7).unwrap(), &[7.0, 7.0]);
+        assert!(c.get(8).is_none());
+        let s = c.stats();
+        assert_eq!((s.hits, s.misses), (1, 2));
+        assert!((s.hit_rate() - 1.0 / 3.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn capacity_zero_disables() {
+        let mut c = HotCache::new(4, 0, 10);
+        c.insert(1, &row(1.0, 4));
+        assert!(c.get(1).is_none());
+        assert_eq!(c.len(), 0);
+    }
+
+    #[test]
+    fn reinsert_updates_payload() {
+        let mut c = HotCache::new(2, 2, 0);
+        c.insert(3, &row(1.0, 2));
+        c.insert(3, &row(9.0, 2));
+        assert_eq!(c.len(), 1);
+        assert_eq!(c.get(3).unwrap(), &[9.0, 9.0]);
+    }
+
+    #[test]
+    fn warm_prefills_protected_head() {
+        let mut c = HotCache::new(2, 4, 3);
+        c.warm(|id, out| {
+            out.fill(id as f32);
+            true
+        });
+        assert_eq!(c.len(), 3);
+        for id in 0..3 {
+            assert_eq!(c.get(id).unwrap(), &[id as f32, id as f32]);
+        }
+    }
+
+    #[test]
+    fn eviction_reuses_slots() {
+        let mut c = HotCache::new(2, 2, 0);
+        for id in 0..50 {
+            c.insert(id, &row(id as f32, 2));
+        }
+        assert_eq!(c.len(), 2);
+        assert!(c.nodes.len() <= 3, "slab should recycle freed slots");
+        assert!(c.contains(48) && c.contains(49));
+    }
+}

@@ -1,0 +1,781 @@
+//! Serving engine: micro-batched top-k queries over a sharded store.
+//!
+//! Mirrors the training pipeline's CPU/GPU split (`batcher::pipeline`):
+//! clients push requests into one *bounded* channel (backpressure — a
+//! slow engine blocks producers instead of ballooning memory), a
+//! dispatcher thread drains up to `batch_max` pending requests into a
+//! micro-batch, resolves query vectors through the [`HotCache`] tier,
+//! and fans the batch out to worker threads that each own a disjoint
+//! shard range.  Per-worker partial top-k heaps merge associatively at
+//! the front.
+//!
+//! Per-request latency (enqueue to reply) and cache traffic are recorded
+//! and summarized as a [`ServeReport`] via [`crate::metrics::LatencyStats`].
+
+use super::ann::{search_shard, Neighbor, TopK};
+use super::cache::HotCache;
+use super::store::ShardedStore;
+use crate::metrics::LatencyStats;
+use crate::util::json::{obj, Json};
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::mpsc::{channel, sync_channel, Receiver, SyncSender};
+use std::sync::{Arc, Mutex};
+use std::thread::JoinHandle;
+use std::time::Instant;
+
+/// Engine tuning knobs.
+#[derive(Debug, Clone)]
+pub struct ServeOptions {
+    /// Worker threads; 0 = one per shard, capped at the core count.
+    pub workers: usize,
+    /// Max requests folded into one micro-batch.
+    pub batch_max: usize,
+    /// Bounded request-queue depth (backpressure bound).
+    pub queue_depth: usize,
+    /// Hot-cache capacity in rows; 0 disables the cache tier.
+    pub cache_capacity: usize,
+    /// Ids below this are pinned in the cache (the Zipf head; vocabulary
+    /// ids are frequency-ranked, so this is a rank threshold).
+    pub protected_rows: usize,
+    /// Pre-load the protected head at startup.
+    pub warm_cache: bool,
+}
+
+impl Default for ServeOptions {
+    fn default() -> Self {
+        ServeOptions {
+            workers: 0,
+            batch_max: 32,
+            queue_depth: 64,
+            cache_capacity: 4096,
+            protected_rows: 512,
+            warm_cache: true,
+        }
+    }
+}
+
+/// Per-query outcome: ranked neighbors, or a message for malformed
+/// queries (out-of-range id, zero vector) and engine failures.
+pub type QueryResponse = Result<Vec<Neighbor>, String>;
+
+enum QueryKind {
+    ById(u32),
+    ByVector(Vec<f32>),
+}
+
+struct Request {
+    kind: QueryKind,
+    k: usize,
+    reply: SyncSender<QueryResponse>,
+    enqueued: Instant,
+}
+
+/// Channel message: a query, or the engine telling the dispatcher to
+/// exit even while cloned clients still hold senders (their later
+/// queries then fail with "serving engine stopped" instead of the
+/// engine's Drop blocking on them forever).
+enum Msg {
+    Req(Request),
+    Shutdown,
+}
+
+struct ResolvedQuery {
+    vector: Arc<Vec<f32>>,
+    k: usize,
+    exclude: Option<u32>,
+}
+
+struct BatchJob {
+    queries: Vec<ResolvedQuery>,
+}
+
+type WorkerResult = Result<Vec<TopK>, String>;
+
+struct EngineShared {
+    latencies: Mutex<Vec<u64>>,
+    queries: AtomicU64,
+    batches: AtomicU64,
+    cache_hits: AtomicU64,
+    cache_misses: AtomicU64,
+    cache_evictions: AtomicU64,
+    /// Serving window, as nanos since engine start: set at the first
+    /// batch's start and advanced past each batch's end, so reported QPS
+    /// covers time actually spent serving, not engine lifetime.
+    window_first_ns: AtomicU64,
+    window_last_ns: AtomicU64,
+}
+
+impl Default for EngineShared {
+    fn default() -> Self {
+        EngineShared {
+            latencies: Mutex::new(Vec::new()),
+            queries: AtomicU64::new(0),
+            batches: AtomicU64::new(0),
+            cache_hits: AtomicU64::new(0),
+            cache_misses: AtomicU64::new(0),
+            cache_evictions: AtomicU64::new(0),
+            window_first_ns: AtomicU64::new(u64::MAX),
+            window_last_ns: AtomicU64::new(0),
+        }
+    }
+}
+
+impl EngineShared {
+    fn window_seconds(&self) -> f64 {
+        let first = self.window_first_ns.load(Ordering::Relaxed);
+        let last = self.window_last_ns.load(Ordering::Relaxed);
+        if first == u64::MAX || last <= first {
+            0.0
+        } else {
+            (last - first) as f64 / 1e9
+        }
+    }
+}
+
+/// Aggregate serving metrics, built at [`ServeEngine::report`] /
+/// [`ServeEngine::shutdown`].
+#[derive(Debug, Clone, Default)]
+pub struct ServeReport {
+    pub latency: LatencyStats,
+    pub queries: u64,
+    pub batches: u64,
+    pub cache_hits: u64,
+    pub cache_misses: u64,
+    pub cache_evictions: u64,
+    pub workers: usize,
+    pub shards: usize,
+    pub loaded_shards: usize,
+    pub precision: String,
+}
+
+impl ServeReport {
+    pub fn cache_hit_rate(&self) -> f64 {
+        let total = self.cache_hits + self.cache_misses;
+        if total == 0 {
+            0.0
+        } else {
+            self.cache_hits as f64 / total as f64
+        }
+    }
+
+    /// Mean requests per micro-batch (the batching win).
+    pub fn batch_fill(&self) -> f64 {
+        if self.batches == 0 {
+            0.0
+        } else {
+            self.queries as f64 / self.batches as f64
+        }
+    }
+
+    pub fn to_json(&self) -> Json {
+        obj(vec![
+            ("latency", self.latency.to_json()),
+            ("queries", Json::Num(self.queries as f64)),
+            ("batches", Json::Num(self.batches as f64)),
+            ("batch_fill", Json::Num(self.batch_fill())),
+            ("cache_hit_rate", Json::Num(self.cache_hit_rate())),
+            ("cache_evictions", Json::Num(self.cache_evictions as f64)),
+            ("workers", Json::Num(self.workers as f64)),
+            ("shards", Json::Num(self.shards as f64)),
+            ("loaded_shards", Json::Num(self.loaded_shards as f64)),
+            ("precision", Json::Str(self.precision.clone())),
+        ])
+    }
+
+    /// One-line human summary for CLI/example output.
+    pub fn summary(&self) -> String {
+        format!(
+            "{} queries in {} batches (fill {:.1}) | p50 {:.0}us p99 {:.0}us \
+             {:.0} qps | cache hit {:.0}% | {}/{} shards loaded ({})",
+            self.queries,
+            self.batches,
+            self.batch_fill(),
+            self.latency.p50_us,
+            self.latency.p99_us,
+            self.latency.qps,
+            100.0 * self.cache_hit_rate(),
+            self.loaded_shards,
+            self.shards,
+            self.precision,
+        )
+    }
+}
+
+/// Cloneable handle for submitting queries.  Outliving the engine is
+/// safe: once the engine shuts down, queries fail with
+/// "serving engine stopped".
+#[derive(Clone)]
+pub struct QueryClient {
+    tx: SyncSender<Msg>,
+}
+
+impl QueryClient {
+    fn submit(&self, kind: QueryKind, k: usize) -> Receiver<QueryResponse> {
+        let (rtx, rrx) = sync_channel(1);
+        let req =
+            Request { kind, k, reply: rtx, enqueued: Instant::now() };
+        // a failed send drops `req` (and its reply sender), so the
+        // receiver observes a hangup and query_* maps it to an error
+        let _ = self.tx.send(Msg::Req(req));
+        rrx
+    }
+
+    /// Asynchronous submit by word id; received results are ranked
+    /// neighbors excluding the query word itself.
+    pub fn submit_id(&self, id: u32, k: usize) -> Receiver<QueryResponse> {
+        self.submit(QueryKind::ById(id), k)
+    }
+
+    /// Asynchronous submit of a raw (not necessarily normalized) vector.
+    pub fn submit_vector(
+        &self,
+        vector: Vec<f32>,
+        k: usize,
+    ) -> Receiver<QueryResponse> {
+        self.submit(QueryKind::ByVector(vector), k)
+    }
+
+    /// Blocking query by word id.
+    pub fn query_id(&self, id: u32, k: usize) -> QueryResponse {
+        recv_response(self.submit_id(id, k))
+    }
+
+    /// Blocking query by vector.
+    pub fn query_vector(&self, vector: Vec<f32>, k: usize) -> QueryResponse {
+        recv_response(self.submit_vector(vector, k))
+    }
+}
+
+fn recv_response(rx: Receiver<QueryResponse>) -> QueryResponse {
+    rx.recv()
+        .unwrap_or_else(|_| Err("serving engine stopped".to_string()))
+}
+
+/// A running engine: dispatcher + workers over an opened store.
+pub struct ServeEngine {
+    tx: Option<SyncSender<Msg>>,
+    dispatcher: Option<JoinHandle<()>>,
+    shared: Arc<EngineShared>,
+    store: Arc<ShardedStore>,
+    workers: usize,
+}
+
+impl ServeEngine {
+    pub fn start(store: Arc<ShardedStore>, opts: ServeOptions) -> ServeEngine {
+        let batch_max = opts.batch_max.max(1);
+        let queue_depth = opts.queue_depth.max(1);
+        let shards = store.num_shards();
+        let cores = std::thread::available_parallelism()
+            .map(|n| n.get())
+            .unwrap_or(1);
+        let workers = if opts.workers == 0 {
+            shards.clamp(1, cores)
+        } else {
+            opts.workers.clamp(1, shards.max(1))
+        };
+
+        let (tx, rx) = sync_channel::<Msg>(queue_depth);
+        let shared = Arc::new(EngineShared::default());
+        let epoch = Instant::now();
+        let dispatcher = {
+            let store = store.clone();
+            let shared = shared.clone();
+            let opts = opts.clone();
+            std::thread::spawn(move || {
+                dispatch_loop(
+                    rx, store, shared, opts, workers, batch_max, epoch,
+                )
+            })
+        };
+        ServeEngine {
+            tx: Some(tx),
+            dispatcher: Some(dispatcher),
+            shared,
+            store,
+            workers,
+        }
+    }
+
+    pub fn client(&self) -> QueryClient {
+        QueryClient { tx: self.tx.clone().expect("engine running") }
+    }
+
+    /// Snapshot of the metrics so far.  QPS is computed over the serving
+    /// window (first batch start to last batch end), not engine lifetime.
+    pub fn report(&self) -> ServeReport {
+        let samples = self.shared.latencies.lock().unwrap().clone();
+        let wall = self.shared.window_seconds();
+        let queries = self.shared.queries.load(Ordering::Relaxed);
+        let mut latency = LatencyStats::from_nanos(&samples, wall);
+        // the sample buffer is capped (quantiles stay representative);
+        // count and QPS must come from the true totals
+        latency.count = queries;
+        latency.qps =
+            if wall > 0.0 { queries as f64 / wall } else { 0.0 };
+        ServeReport {
+            latency,
+            queries,
+            batches: self.shared.batches.load(Ordering::Relaxed),
+            cache_hits: self.shared.cache_hits.load(Ordering::Relaxed),
+            cache_misses: self.shared.cache_misses.load(Ordering::Relaxed),
+            cache_evictions: self
+                .shared
+                .cache_evictions
+                .load(Ordering::Relaxed),
+            workers: self.workers,
+            shards: self.store.num_shards(),
+            loaded_shards: self.store.loaded_shards(),
+            precision: self.store.precision().name().to_string(),
+        }
+    }
+
+    /// Stop the engine and return the final report.  In-flight batches
+    /// finish; [`QueryClient`]s still alive afterwards get
+    /// "serving engine stopped" errors on later queries.
+    pub fn shutdown(mut self) -> ServeReport {
+        self.stop();
+        self.report()
+    }
+
+    fn stop(&mut self) {
+        if let Some(tx) = self.tx.take() {
+            // sentinel wakes the dispatcher even while cloned clients
+            // still hold senders; send only fails if it already exited
+            let _ = tx.send(Msg::Shutdown);
+        }
+        if let Some(h) = self.dispatcher.take() {
+            let _ = h.join();
+        }
+    }
+}
+
+impl Drop for ServeEngine {
+    fn drop(&mut self) {
+        self.stop();
+    }
+}
+
+/// Split `shards` into `workers` near-equal contiguous ranges.
+fn shard_ranges(shards: usize, workers: usize) -> Vec<(usize, usize)> {
+    let base = shards / workers;
+    let extra = shards % workers;
+    let mut out = Vec::with_capacity(workers);
+    let mut start = 0;
+    for w in 0..workers {
+        let len = base + usize::from(w < extra);
+        out.push((start, start + len));
+        start += len;
+    }
+    out
+}
+
+#[allow(clippy::too_many_arguments)]
+fn dispatch_loop(
+    rx: Receiver<Msg>,
+    store: Arc<ShardedStore>,
+    shared: Arc<EngineShared>,
+    opts: ServeOptions,
+    workers: usize,
+    batch_max: usize,
+    epoch: Instant,
+) {
+    let dim = store.dim();
+    let mut cache =
+        HotCache::new(dim, opts.cache_capacity, opts.protected_rows);
+    if opts.warm_cache {
+        cache.warm(|id, out| {
+            matches!(store.fetch_row(id, out), Ok(Some(())))
+        });
+    }
+
+    // one job + one result channel PER worker (depth 1 is enough — the
+    // dispatcher processes a single batch at a time).  Per-worker result
+    // channels are what make a worker death detectable: a thread that
+    // panics drops its own result sender, so the dispatcher's recv on
+    // that worker errors immediately instead of waiting forever on a
+    // channel other workers keep alive.
+    struct WorkerLink {
+        job_tx: SyncSender<Arc<BatchJob>>,
+        result_rx: Receiver<WorkerResult>,
+    }
+    let mut links = Vec::with_capacity(workers);
+    let mut handles = Vec::with_capacity(workers);
+    for (lo, hi) in shard_ranges(store.num_shards(), workers) {
+        let (job_tx, job_rx) = sync_channel::<Arc<BatchJob>>(1);
+        let (result_tx, result_rx) = channel::<WorkerResult>();
+        links.push(WorkerLink { job_tx, result_rx });
+        let store = store.clone();
+        handles.push(std::thread::spawn(move || {
+            for job in job_rx.iter() {
+                let out = scan_range(&store, lo, hi, &job);
+                if result_tx.send(out).is_err() {
+                    break;
+                }
+            }
+        }));
+    }
+
+    struct Pending {
+        reply: SyncSender<QueryResponse>,
+        enqueued: Instant,
+        slot: Result<usize, String>,
+    }
+
+    // reservoir sample of request latencies: bounded memory, stays
+    // representative of the whole run (not frozen on the first window)
+    const SAMPLE_CAP: usize = 1 << 20;
+    let mut sample_rng = crate::util::rng::SplitMix64::new(0x5EED_CAFE);
+    let mut lat_seen: u64 = 0;
+
+    let mut stopping = false;
+    while !stopping {
+        let first = match rx.recv() {
+            Ok(Msg::Req(r)) => r,
+            // engine Drop/shutdown sentinel, or every sender dropped
+            Ok(Msg::Shutdown) | Err(_) => break,
+        };
+        let batch_start_ns = epoch.elapsed().as_nanos() as u64;
+        let mut reqs = vec![first];
+        while reqs.len() < batch_max {
+            match rx.try_recv() {
+                Ok(Msg::Req(r)) => reqs.push(r),
+                Ok(Msg::Shutdown) => {
+                    stopping = true; // finish this batch, then exit
+                    break;
+                }
+                Err(_) => break,
+            }
+        }
+
+        let mut resolved: Vec<ResolvedQuery> = Vec::new();
+        let mut pendings: Vec<Pending> = Vec::with_capacity(reqs.len());
+        for req in reqs {
+            let Request { kind, k, reply, enqueued } = req;
+            // a store can never return more than V neighbors; clamping
+            // here also bounds every downstream heap allocation against
+            // absurd client-supplied k
+            let k = k.min(store.vocab_size());
+            let slot = match resolve(kind, &store, &mut cache) {
+                Ok((vector, exclude)) => {
+                    resolved.push(ResolvedQuery { vector, k, exclude });
+                    Ok(resolved.len() - 1)
+                }
+                Err(e) => Err(e),
+            };
+            pendings.push(Pending { reply, enqueued, slot });
+        }
+
+        let mut results: Vec<Option<QueryResponse>> = Vec::new();
+        if !resolved.is_empty() {
+            let job = Arc::new(BatchJob { queries: resolved });
+            let mut sent = vec![false; links.len()];
+            for (link, s) in links.iter().zip(sent.iter_mut()) {
+                *s = link.job_tx.send(job.clone()).is_ok();
+            }
+            let mut merged: Vec<TopK> =
+                job.queries.iter().map(|q| TopK::new(q.k)).collect();
+            // a dead worker means its shard range would be silently
+            // missing from every result: that is a hard error, not a
+            // degraded answer
+            let mut failure: Option<String> = None;
+            for (link, s) in links.iter().zip(&sent) {
+                if !*s {
+                    failure =
+                        Some("worker thread died (job rejected)".into());
+                    continue;
+                }
+                match link.result_rx.recv() {
+                    Ok(Ok(parts)) => {
+                        for (m, p) in merged.iter_mut().zip(parts) {
+                            m.merge(p);
+                        }
+                    }
+                    Ok(Err(e)) => failure = Some(e),
+                    // the worker accepted the job then died: its result
+                    // sender is dropped, so this errors immediately
+                    Err(_) => {
+                        failure =
+                            Some("worker thread died mid-batch".into());
+                    }
+                }
+            }
+            results = match failure {
+                None => merged
+                    .into_iter()
+                    .map(|t| Some(Ok(t.into_sorted())))
+                    .collect(),
+                Some(e) => job
+                    .queries
+                    .iter()
+                    .map(|_| Some(Err(e.clone())))
+                    .collect(),
+            };
+        }
+
+        // account the whole batch *before* any reply goes out, so a
+        // report() taken right after the last reply arrives always
+        // includes this batch
+        let mut outbox = Vec::with_capacity(pendings.len());
+        {
+            let mut lat = shared.latencies.lock().unwrap();
+            for p in pendings {
+                let response = match p.slot {
+                    Ok(i) => results[i].take().expect("one reply per slot"),
+                    Err(e) => Err(e),
+                };
+                let nanos = p.enqueued.elapsed().as_nanos() as u64;
+                lat_seen += 1;
+                if lat.len() < SAMPLE_CAP {
+                    lat.push(nanos);
+                } else {
+                    let j = (sample_rng.next_u64() % lat_seen) as usize;
+                    if j < SAMPLE_CAP {
+                        lat[j] = nanos;
+                    }
+                }
+                outbox.push((p.reply, response));
+            }
+        }
+        shared.queries.fetch_add(outbox.len() as u64, Ordering::Relaxed);
+        shared.batches.fetch_add(1, Ordering::Relaxed);
+        let cs = cache.stats();
+        shared.cache_hits.store(cs.hits, Ordering::Relaxed);
+        shared.cache_misses.store(cs.misses, Ordering::Relaxed);
+        shared.cache_evictions.store(cs.evictions, Ordering::Relaxed);
+        shared
+            .window_first_ns
+            .fetch_min(batch_start_ns, Ordering::Relaxed);
+        shared
+            .window_last_ns
+            .fetch_max(epoch.elapsed().as_nanos() as u64, Ordering::Relaxed);
+        for (reply, response) in outbox {
+            let _ = reply.send(response);
+        }
+    }
+
+    drop(links); // workers see job-channel EOF
+    for h in handles {
+        let _ = h.join();
+    }
+}
+
+/// Turn a request into a normalized query vector + exclusion id,
+/// serving `ById` lookups through the hot-cache tier.
+fn resolve(
+    kind: QueryKind,
+    store: &ShardedStore,
+    cache: &mut HotCache,
+) -> Result<(Arc<Vec<f32>>, Option<u32>), String> {
+    match kind {
+        QueryKind::ById(id) => {
+            if let Some(row) = cache.get(id) {
+                return Ok((Arc::new(row.to_vec()), Some(id)));
+            }
+            let mut buf = vec![0.0f32; store.dim()];
+            match store.fetch_row(id, &mut buf) {
+                Ok(Some(())) => {
+                    cache.insert(id, &buf);
+                    Ok((Arc::new(buf), Some(id)))
+                }
+                Ok(None) => Err(format!(
+                    "row id {id} out of range (vocab {})",
+                    store.vocab_size()
+                )),
+                Err(e) => Err(format!("{e:#}")),
+            }
+        }
+        QueryKind::ByVector(mut v) => {
+            if v.len() != store.dim() {
+                return Err(format!(
+                    "query dim {} != store dim {}",
+                    v.len(),
+                    store.dim()
+                ));
+            }
+            let norm = v
+                .iter()
+                .map(|x| (*x as f64) * (*x as f64))
+                .sum::<f64>()
+                .sqrt() as f32;
+            if norm == 0.0 || !norm.is_finite() {
+                return Err(
+                    "query vector must be non-zero and finite".to_string()
+                );
+            }
+            for x in v.iter_mut() {
+                *x /= norm;
+            }
+            Ok((Arc::new(v), None))
+        }
+    }
+}
+
+/// Worker body: scan shards [lo, hi) for every query in the batch.
+fn scan_range(
+    store: &ShardedStore,
+    lo: usize,
+    hi: usize,
+    job: &BatchJob,
+) -> WorkerResult {
+    let mut parts: Vec<TopK> =
+        job.queries.iter().map(|q| TopK::new(q.k)).collect();
+    for si in lo..hi {
+        let shard = store.shard(si).map_err(|e| format!("{e:#}"))?;
+        for (q, t) in job.queries.iter().zip(parts.iter_mut()) {
+            search_shard(shard, &q.vector, q.exclude, t);
+        }
+    }
+    Ok(parts)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::corpus::vocab::Vocab;
+    use crate::model::EmbeddingModel;
+    use crate::serve::ann::search_rows;
+    use crate::serve::store::{export_store, Precision};
+    use std::path::PathBuf;
+
+    fn setup(name: &str, v: usize, d: usize) -> (EmbeddingModel, PathBuf) {
+        let vocab = Vocab::from_counts(
+            (0..v).map(|i| (format!("w{i:03}"), (v - i) as u64 * 10)),
+            1,
+        );
+        let model = EmbeddingModel::init(v, d, 42);
+        let dir =
+            std::env::temp_dir().join("fullw2v_engine_test").join(name);
+        std::fs::create_dir_all(&dir).unwrap();
+        export_store(&model, &vocab, &dir, 4).unwrap();
+        (model, dir)
+    }
+
+    fn opts() -> ServeOptions {
+        ServeOptions {
+            workers: 2,
+            batch_max: 8,
+            queue_depth: 16,
+            cache_capacity: 16,
+            protected_rows: 4,
+            warm_cache: true,
+        }
+    }
+
+    #[test]
+    fn engine_matches_brute_force() {
+        let (model, dir) = setup("brute", 30, 8);
+        let store =
+            Arc::new(ShardedStore::open(&dir, Precision::Exact).unwrap());
+        let engine = ServeEngine::start(store, opts());
+        let client = engine.client();
+        let rows = model.normalized_rows();
+        for id in [0u32, 7, 15, 29] {
+            let got = client.query_id(id, 5).unwrap();
+            let want =
+                search_rows(&rows, 8, &rows[id as usize * 8..][..8], 5, Some(id));
+            assert_eq!(
+                got.iter().map(|n| n.id).collect::<Vec<_>>(),
+                want.iter().map(|n| n.id).collect::<Vec<_>>(),
+                "query {id}"
+            );
+        }
+        drop(client);
+        let report = engine.shutdown();
+        assert_eq!(report.queries, 4);
+        assert!(report.latency.count == 4);
+        assert_eq!(report.loaded_shards, 4);
+    }
+
+    #[test]
+    fn concurrent_clients_batch_up() {
+        let (_, dir) = setup("concurrent", 40, 8);
+        let store =
+            Arc::new(ShardedStore::open(&dir, Precision::Exact).unwrap());
+        let engine = ServeEngine::start(store, opts());
+        let mut joins = Vec::new();
+        for t in 0..4 {
+            let client = engine.client();
+            joins.push(std::thread::spawn(move || {
+                let mut ok = 0;
+                for i in 0..25u32 {
+                    let id = (i * 7 + t) % 40;
+                    if client.query_id(id, 3).is_ok() {
+                        ok += 1;
+                    }
+                }
+                ok
+            }));
+        }
+        let total: usize = joins.into_iter().map(|j| j.join().unwrap()).sum();
+        assert_eq!(total, 100);
+        let report = engine.shutdown();
+        assert_eq!(report.queries, 100);
+        assert!(report.batches <= 100);
+        assert!(report.cache_hits > 0, "repeated ids must hit the cache");
+    }
+
+    #[test]
+    fn bad_queries_get_errors_not_hangs() {
+        let (_, dir) = setup("bad", 10, 4);
+        let store =
+            Arc::new(ShardedStore::open(&dir, Precision::Exact).unwrap());
+        let engine = ServeEngine::start(store, opts());
+        let client = engine.client();
+        assert!(client.query_id(10, 3).is_err()); // out of range
+        assert!(client.query_vector(vec![0.0; 4], 3).is_err()); // zero
+        assert!(client.query_vector(vec![1.0; 3], 3).is_err()); // bad dim
+        // non-finite vectors are rejected, not served as NaN scores
+        assert!(client
+            .query_vector(vec![f32::INFINITY, 0.0, 0.0, 0.0], 3)
+            .is_err());
+        assert!(client.query_vector(vec![f32::NAN; 4], 3).is_err());
+        // absurd k is clamped to the vocabulary, not allocated
+        let all = client.query_id(0, usize::MAX).unwrap();
+        assert_eq!(all.len(), 9); // V=10 minus the excluded query word
+        let ok = client.query_vector(vec![1.0, 0.0, 0.0, 0.0], 3).unwrap();
+        assert_eq!(ok.len(), 3);
+        drop(client);
+        engine.shutdown();
+    }
+
+    #[test]
+    fn vector_query_has_no_exclusion() {
+        let (model, dir) = setup("noexcl", 12, 4);
+        let store =
+            Arc::new(ShardedStore::open(&dir, Precision::Exact).unwrap());
+        let engine = ServeEngine::start(store, opts());
+        let client = engine.client();
+        // query with row 3's own vector: row 3 itself must rank first
+        let rows = model.normalized_rows();
+        let got =
+            client.query_vector(rows[3 * 4..4 * 4].to_vec(), 1).unwrap();
+        assert_eq!(got[0].id, 3);
+        drop(client);
+        engine.shutdown();
+    }
+
+    #[test]
+    fn client_outliving_engine_gets_errors_not_hangs() {
+        let (_, dir) = setup("outlive", 10, 4);
+        let store =
+            Arc::new(ShardedStore::open(&dir, Precision::Exact).unwrap());
+        let engine = ServeEngine::start(store, opts());
+        let client = engine.client();
+        assert!(client.query_id(1, 2).is_ok());
+        // dropping the engine with a live client must not deadlock...
+        drop(engine);
+        // ...and the orphaned client fails cleanly afterwards
+        assert!(client.query_id(1, 2).is_err());
+    }
+
+    #[test]
+    fn shard_ranges_cover_all() {
+        assert_eq!(shard_ranges(4, 2), vec![(0, 2), (2, 4)]);
+        assert_eq!(shard_ranges(5, 2), vec![(0, 3), (3, 5)]);
+        assert_eq!(shard_ranges(2, 2), vec![(0, 1), (1, 2)]);
+        let r = shard_ranges(7, 3);
+        assert_eq!(r.last().unwrap().1, 7);
+        let covered: usize = r.iter().map(|(a, b)| b - a).sum();
+        assert_eq!(covered, 7);
+    }
+}

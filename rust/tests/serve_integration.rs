@@ -1,0 +1,258 @@
+//! End-to-end serving integration: model -> sharded store on disk ->
+//! engine -> top-k answers, covering both precisions and the store
+//! round-trip guarantees the serving layer is built on.
+//!
+//! Unlike the training integrations this needs no AOT artifacts — the
+//! store is exported from a directly-constructed model with planted
+//! cluster structure, so it always runs.
+
+use fullw2v::corpus::vocab::Vocab;
+use fullw2v::model::EmbeddingModel;
+use fullw2v::serve::{
+    export_store, search_rows, Precision, ServeEngine, ServeOptions,
+    ShardedStore,
+};
+use fullw2v::util::rng::Pcg32;
+use std::path::PathBuf;
+use std::sync::Arc;
+
+const V: usize = 101; // odd on purpose: uneven last shard
+const D: usize = 16;
+const CLUSTERS: usize = 4;
+
+fn vocab() -> Vocab {
+    Vocab::from_counts(
+        (0..V).map(|i| (format!("w{i:03}"), (V - i) as u64 * 7)),
+        1,
+    )
+}
+
+/// A model with planted cluster structure: row i sits near the center of
+/// cluster `i % CLUSTERS`, so nearest neighbors are unambiguous and the
+/// exact/quantized comparison isn't dominated by ties.
+fn clustered_model() -> EmbeddingModel {
+    let mut m = EmbeddingModel::init(V, D, 5);
+    let mut rng = Pcg32::new(9);
+    let mut centers = vec![0.0f32; CLUSTERS * D];
+    for c in centers.iter_mut() {
+        *c = rng.next_f32() * 2.0 - 1.0;
+    }
+    for i in 0..V {
+        let c = i % CLUSTERS;
+        let row = m.syn0_row_mut(i as u32);
+        for (j, x) in row.iter_mut().enumerate() {
+            *x = centers[c * D + j] + (rng.next_f32() - 0.5) * 0.2;
+        }
+    }
+    m
+}
+
+fn export(name: &str, model: &EmbeddingModel, shards: usize) -> PathBuf {
+    let dir = std::env::temp_dir()
+        .join("fullw2v_serve_integration")
+        .join(name);
+    std::fs::create_dir_all(&dir).unwrap();
+    export_store(model, &vocab(), &dir, shards).unwrap();
+    dir
+}
+
+#[test]
+fn f32_store_roundtrips_exactly() {
+    let model = clustered_model();
+    let dir = export("roundtrip", &model, 4);
+    let store = ShardedStore::open(&dir, Precision::Exact).unwrap();
+    assert_eq!(store.vocab_size(), V);
+    assert_eq!(store.dim(), D);
+    let normalized = model.normalized_rows();
+    let mut out = vec![0.0f32; D];
+    for id in 0..V as u32 {
+        store.fetch_row(id, &mut out).unwrap().unwrap();
+        // bit-exact: f32 write/read must not lose anything
+        assert_eq!(&out, &normalized[id as usize * D..(id as usize + 1) * D]);
+    }
+}
+
+#[test]
+fn shards_tile_vocab_with_uneven_tail() {
+    let model = clustered_model();
+    let dir = export("tiling", &model, 4);
+    let store = ShardedStore::open(&dir, Precision::Exact).unwrap();
+    let metas = &store.manifest().shards;
+    assert_eq!(metas.len(), 4);
+    // 101 rows over 4 shards: 26 + 26 + 26 + 23
+    assert_eq!(metas[0].rows, 26);
+    assert_eq!(metas[3].rows, 23);
+    let covered: usize = metas.iter().map(|s| s.rows).sum();
+    assert_eq!(covered, V);
+    // boundary ids resolve to the right shard
+    assert_eq!(store.locate(25), Some((0, 25)));
+    assert_eq!(store.locate(26), Some((1, 0)));
+    assert_eq!(store.locate(100), Some((3, 22)));
+    assert_eq!(store.locate(101), None);
+}
+
+#[test]
+fn quantized_rows_stay_within_error_bound() {
+    let model = clustered_model();
+    let dir = export("qbound", &model, 3);
+    let store = ShardedStore::open(&dir, Precision::Quantized).unwrap();
+    let normalized = model.normalized_rows();
+    let mut out = vec![0.0f32; D];
+    for id in 0..V as u32 {
+        store.fetch_row(id, &mut out).unwrap().unwrap();
+        let row = &normalized[id as usize * D..(id as usize + 1) * D];
+        let max_abs = row.iter().fold(0.0f32, |a, x| a.max(x.abs()));
+        let bound = max_abs / 127.0 * 0.5 + 1e-7;
+        for (x, y) in row.iter().zip(&out) {
+            assert!(
+                (x - y).abs() <= bound,
+                "row {id}: err {} > bound {bound}",
+                (x - y).abs()
+            );
+        }
+    }
+}
+
+#[test]
+fn engine_agrees_with_brute_force() {
+    let model = clustered_model();
+    let dir = export("agree", &model, 4);
+    let store =
+        Arc::new(ShardedStore::open(&dir, Precision::Exact).unwrap());
+    let engine = ServeEngine::start(store, ServeOptions::default());
+    let client = engine.client();
+    let rows = model.normalized_rows();
+    for id in (0..V as u32).step_by(7) {
+        let got = client.query_id(id, 10).unwrap();
+        let want = search_rows(
+            &rows,
+            D,
+            &rows[id as usize * D..(id as usize + 1) * D],
+            10,
+            Some(id),
+        );
+        assert_eq!(
+            got.iter().map(|n| n.id).collect::<Vec<_>>(),
+            want.iter().map(|n| n.id).collect::<Vec<_>>(),
+            "query {id}"
+        );
+    }
+    drop(client);
+    engine.shutdown();
+}
+
+#[test]
+fn quantized_top1_matches_exact_on_95_percent() {
+    // random directions, not the clustered model: cluster-mates sit at
+    // near-tie distances below the int8 error, which would make strict
+    // top-1 comparison test quantization noise instead of correctness
+    let model = EmbeddingModel::init(V, D, 27);
+    let dir = export("quantagree", &model, 4);
+    let exact =
+        Arc::new(ShardedStore::open(&dir, Precision::Exact).unwrap());
+    let quant =
+        Arc::new(ShardedStore::open(&dir, Precision::Quantized).unwrap());
+    let e_exact = ServeEngine::start(exact, ServeOptions::default());
+    let e_quant = ServeEngine::start(quant, ServeOptions::default());
+    let (ce, cq) = (e_exact.client(), e_quant.client());
+    let rows = model.normalized_rows();
+    let score = |a: u32, b: u32| {
+        fullw2v::model::embeddings::cosine(
+            &rows[a as usize * D..(a as usize + 1) * D],
+            &rows[b as usize * D..(b as usize + 1) * D],
+        )
+    };
+    let mut agree = 0usize;
+    for id in 0..V as u32 {
+        let a = ce.query_id(id, 1).unwrap();
+        let b = cq.query_id(id, 1).unwrap();
+        // match, or a near-tie in the exact metric (either answer right)
+        if a[0].id == b[0].id
+            || (score(id, a[0].id) - score(id, b[0].id)).abs() < 0.01
+        {
+            agree += 1;
+        }
+    }
+    assert!(
+        agree as f64 / V as f64 >= 0.95,
+        "quantized/exact top-1 agreement {agree}/{V} below 95%"
+    );
+    drop((ce, cq));
+    e_exact.shutdown();
+    e_quant.shutdown();
+}
+
+#[test]
+fn neighbors_respect_planted_clusters() {
+    let model = clustered_model();
+    let dir = export("clusters", &model, 4);
+    let store =
+        Arc::new(ShardedStore::open(&dir, Precision::Exact).unwrap());
+    let engine = ServeEngine::start(store, ServeOptions::default());
+    let client = engine.client();
+    // for a sample of queries, most top-5 neighbors share the cluster
+    let mut same = 0usize;
+    let mut total = 0usize;
+    for id in (0..V as u32).step_by(11) {
+        for n in client.query_id(id, 5).unwrap() {
+            total += 1;
+            if n.id as usize % CLUSTERS == id as usize % CLUSTERS {
+                same += 1;
+            }
+        }
+    }
+    assert!(
+        same as f64 / total as f64 > 0.9,
+        "only {same}/{total} neighbors in-cluster"
+    );
+    drop(client);
+    engine.shutdown();
+}
+
+#[test]
+fn export_is_idempotent() {
+    let model = clustered_model();
+    let dir = export("idempotent", &model, 2);
+    // second export over the same directory must leave a valid store
+    export_store(&model, &vocab(), &dir, 2).unwrap();
+    let store = ShardedStore::open(&dir, Precision::Exact).unwrap();
+    let mut out = vec![0.0f32; D];
+    store.fetch_row((V - 1) as u32, &mut out).unwrap().unwrap();
+    let normalized = model.normalized_rows();
+    assert_eq!(&out, &normalized[(V - 1) * D..]);
+}
+
+#[test]
+fn cache_tier_reports_hits_under_skew() {
+    let model = clustered_model();
+    let dir = export("cachehits", &model, 4);
+    let store =
+        Arc::new(ShardedStore::open(&dir, Precision::Exact).unwrap());
+    let engine = ServeEngine::start(
+        store,
+        ServeOptions {
+            cache_capacity: 32,
+            protected_rows: 8,
+            warm_cache: true,
+            ..ServeOptions::default()
+        },
+    );
+    let client = engine.client();
+    // head-heavy traffic: ids 0..8 repeatedly
+    for round in 0..10u32 {
+        for id in 0..8u32 {
+            client.query_id(id, 3).unwrap();
+            let _ = round;
+        }
+    }
+    drop(client);
+    let report = engine.shutdown();
+    assert_eq!(report.queries, 80);
+    assert!(
+        report.cache_hit_rate() > 0.9,
+        "warmed pinned head should serve hits, got {:.2}",
+        report.cache_hit_rate()
+    );
+    assert!(report.latency.count == 80);
+    assert!(report.latency.p50_us <= report.latency.p99_us);
+}

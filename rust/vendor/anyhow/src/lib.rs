@@ -1,0 +1,270 @@
+//! Vendored, dependency-free subset of the `anyhow` API.
+//!
+//! The build environment has no crates.io access, so this crate provides
+//! the exact surface the workspace uses: [`Error`], [`Result`], the
+//! [`anyhow!`] / [`bail!`] / [`ensure!`] macros, [`Context`], and
+//! [`Error::msg`].  Semantics match upstream where it matters:
+//!
+//! * `Error` intentionally does **not** implement `std::error::Error`,
+//!   which is what makes the blanket `From<E: std::error::Error>` and the
+//!   `Context` impl for `Result<T, Error>` coexist (same coherence trick
+//!   as upstream anyhow).
+//! * `Display` shows the outermost message; the alternate form (`{:#}`)
+//!   joins the context chain outermost-first with `: ` like upstream.
+
+use std::fmt::{self, Debug, Display};
+
+/// Error type: a message plus a chain of contexts.
+///
+/// `chain[0]` is the root cause; later entries are contexts added with
+/// [`Context::context`], outermost last.
+pub struct Error {
+    chain: Vec<String>,
+}
+
+/// `Result` with a defaulted error type, like `anyhow::Result`.
+pub type Result<T, E = Error> = std::result::Result<T, E>;
+
+impl Error {
+    /// Create an error from any displayable message.
+    pub fn msg<M: Display + Debug + Send + Sync + 'static>(msg: M) -> Self {
+        Error { chain: vec![msg.to_string()] }
+    }
+
+    /// Add a context message (becomes the new outermost message).
+    pub fn context<C: Display + Send + Sync + 'static>(
+        mut self,
+        context: C,
+    ) -> Self {
+        self.chain.push(context.to_string());
+        self
+    }
+
+    /// The context chain, outermost first (like `anyhow::Error::chain`).
+    pub fn chain(&self) -> impl Iterator<Item = &str> {
+        self.chain.iter().rev().map(String::as_str)
+    }
+
+    /// The root cause message (innermost).
+    pub fn root_cause(&self) -> &str {
+        &self.chain[0]
+    }
+}
+
+impl Display for Error {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        let outer = self.chain.last().expect("non-empty chain");
+        if f.alternate() {
+            // `{:#}`: outermost-first, `: `-joined, matching anyhow.
+            write!(f, "{outer}")?;
+            for c in self.chain.iter().rev().skip(1) {
+                write!(f, ": {c}")?;
+            }
+            Ok(())
+        } else {
+            write!(f, "{outer}")
+        }
+    }
+}
+
+impl Debug for Error {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        let outer = self.chain.last().expect("non-empty chain");
+        write!(f, "{outer}")?;
+        if self.chain.len() > 1 {
+            write!(f, "\n\nCaused by:")?;
+            for c in self.chain.iter().rev().skip(1) {
+                write!(f, "\n    {c}")?;
+            }
+        }
+        Ok(())
+    }
+}
+
+impl<E> From<E> for Error
+where
+    E: std::error::Error + Send + Sync + 'static,
+{
+    fn from(e: E) -> Self {
+        let mut chain = Vec::new();
+        // flatten the source chain so context is not lost
+        let mut src: Option<&(dyn std::error::Error + 'static)> = e.source();
+        while let Some(s) = src {
+            chain.push(s.to_string());
+            src = s.source();
+        }
+        chain.reverse();
+        chain.push(e.to_string());
+        Error { chain }
+    }
+}
+
+/// Extension trait adding `.context()` / `.with_context()` to results.
+pub trait Context<T, E>: Sized {
+    fn context<C: Display + Send + Sync + 'static>(
+        self,
+        context: C,
+    ) -> Result<T>;
+
+    fn with_context<C, F>(self, f: F) -> Result<T>
+    where
+        C: Display + Send + Sync + 'static,
+        F: FnOnce() -> C;
+}
+
+impl<T, E> Context<T, E> for std::result::Result<T, E>
+where
+    E: std::error::Error + Send + Sync + 'static,
+{
+    fn context<C: Display + Send + Sync + 'static>(
+        self,
+        context: C,
+    ) -> Result<T> {
+        self.map_err(|e| Error::from(e).context(context))
+    }
+
+    fn with_context<C, F>(self, f: F) -> Result<T>
+    where
+        C: Display + Send + Sync + 'static,
+        F: FnOnce() -> C,
+    {
+        self.map_err(|e| Error::from(e).context(f()))
+    }
+}
+
+// Coherent with the blanket impl above because `Error` does not implement
+// `std::error::Error` (and, being foreign to downstream crates, never can).
+impl<T> Context<T, Error> for std::result::Result<T, Error> {
+    fn context<C: Display + Send + Sync + 'static>(
+        self,
+        context: C,
+    ) -> Result<T> {
+        self.map_err(|e| e.context(context))
+    }
+
+    fn with_context<C, F>(self, f: F) -> Result<T>
+    where
+        C: Display + Send + Sync + 'static,
+        F: FnOnce() -> C,
+    {
+        self.map_err(|e| e.context(f()))
+    }
+}
+
+impl<T> Context<T, ()> for Option<T> {
+    fn context<C: Display + Send + Sync + 'static>(
+        self,
+        context: C,
+    ) -> Result<T> {
+        self.ok_or_else(|| Error::msg(context.to_string()))
+    }
+
+    fn with_context<C, F>(self, f: F) -> Result<T>
+    where
+        C: Display + Send + Sync + 'static,
+        F: FnOnce() -> C,
+    {
+        self.ok_or_else(|| Error::msg(f().to_string()))
+    }
+}
+
+/// Construct an [`Error`] from a format string.
+#[macro_export]
+macro_rules! anyhow {
+    ($msg:literal $(,)?) => {
+        $crate::Error::msg(format!($msg))
+    };
+    ($fmt:expr, $($arg:tt)*) => {
+        $crate::Error::msg(format!($fmt, $($arg)*))
+    };
+    ($msg:expr $(,)?) => {
+        $crate::Error::msg($msg)
+    };
+}
+
+/// Return early with an error.
+#[macro_export]
+macro_rules! bail {
+    ($($arg:tt)*) => {
+        return Err($crate::anyhow!($($arg)*))
+    };
+}
+
+/// Return early with an error if a condition is false.
+#[macro_export]
+macro_rules! ensure {
+    ($cond:expr $(,)?) => {
+        if !($cond) {
+            return Err($crate::Error::msg(concat!(
+                "condition failed: ",
+                stringify!($cond)
+            )));
+        }
+    };
+    ($cond:expr, $($arg:tt)*) => {
+        if !($cond) {
+            return Err($crate::anyhow!($($arg)*));
+        }
+    };
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn io_err() -> std::io::Error {
+        std::io::Error::new(std::io::ErrorKind::NotFound, "gone")
+    }
+
+    #[test]
+    fn display_and_alternate() {
+        let e: Error = io_err().into();
+        let e = e.context("reading file").context("loading model");
+        assert_eq!(format!("{e}"), "loading model");
+        assert_eq!(format!("{e:#}"), "loading model: reading file: gone");
+    }
+
+    #[test]
+    fn question_mark_converts() {
+        fn inner() -> Result<()> {
+            Err(io_err())?;
+            Ok(())
+        }
+        assert!(inner().is_err());
+    }
+
+    #[test]
+    fn context_on_std_and_anyhow_results() {
+        let r: std::result::Result<(), std::io::Error> = Err(io_err());
+        let e = r.context("ctx").unwrap_err();
+        assert_eq!(format!("{e}"), "ctx");
+
+        let r2: Result<()> = Err(Error::msg("root"));
+        let e2 = r2.with_context(|| format!("outer {}", 1)).unwrap_err();
+        assert_eq!(format!("{e2:#}"), "outer 1: root");
+    }
+
+    #[test]
+    fn macros() {
+        fn f(x: usize) -> Result<usize> {
+            ensure!(x > 1, "x too small: {x}");
+            if x > 10 {
+                bail!("x too big: {}", x);
+            }
+            Ok(x)
+        }
+        assert!(f(0).is_err());
+        assert_eq!(f(5).unwrap(), 5);
+        assert!(f(11).is_err());
+        let e = anyhow!("plain {}", "fmt");
+        assert_eq!(format!("{e}"), "plain fmt");
+    }
+
+    #[test]
+    fn error_msg_from_string() {
+        // the `map_err(anyhow::Error::msg)` pattern used across the crate
+        let r: std::result::Result<(), String> = Err("bad".into());
+        let e = r.map_err(Error::msg).unwrap_err();
+        assert_eq!(format!("{e}"), "bad");
+    }
+}

@@ -1,0 +1,226 @@
+//! Stub of the `xla` crate (PJRT bindings) for hosts without the
+//! `xla_extension` shared library.
+//!
+//! The coordinator's PJRT path (`runtime::Engine`) links against this API.
+//! On hosts where the real bindings are unavailable, [`PjRtClient::cpu`]
+//! returns an error, so engine construction fails cleanly and every
+//! artifact-gated caller (benches, integration tests, examples) takes its
+//! existing "no artifacts" skip path.  [`Literal`] is implemented for
+//! real so marshaling code stays testable; execution is unreachable
+//! because no [`PjRtLoadedExecutable`] can ever be constructed here.
+
+use std::fmt;
+
+/// Error type mirroring `xla::Error`'s role: displayable, `?`-convertible.
+#[derive(Debug, Clone)]
+pub struct Error(pub String);
+
+impl fmt::Display for Error {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(f, "{}", self.0)
+    }
+}
+
+impl std::error::Error for Error {}
+
+pub type Result<T> = std::result::Result<T, Error>;
+
+fn unavailable(what: &str) -> Error {
+    Error(format!(
+        "{what}: xla_extension is not available on this host \
+         (stub xla crate; rebuild with the real PJRT bindings)"
+    ))
+}
+
+/// Element types used by the training-step marshaling code.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum ElementType {
+    F32,
+    S32,
+}
+
+impl ElementType {
+    pub fn byte_size(self) -> usize {
+        4
+    }
+}
+
+/// Host-side typed buffer (functional in the stub).
+#[derive(Debug, Clone)]
+pub struct Literal {
+    pub element_type: ElementType,
+    pub dims: Vec<usize>,
+    bytes: Vec<u8>,
+}
+
+/// Element types that can be copied out of a [`Literal`].
+pub trait NativeType: Copy {
+    const ELEMENT: ElementType;
+    fn from_le_bytes(b: [u8; 4]) -> Self;
+}
+
+impl NativeType for f32 {
+    const ELEMENT: ElementType = ElementType::F32;
+    fn from_le_bytes(b: [u8; 4]) -> Self {
+        f32::from_le_bytes(b)
+    }
+}
+
+impl NativeType for i32 {
+    const ELEMENT: ElementType = ElementType::S32;
+    fn from_le_bytes(b: [u8; 4]) -> Self {
+        i32::from_le_bytes(b)
+    }
+}
+
+impl Literal {
+    pub fn create_from_shape_and_untyped_data(
+        element_type: ElementType,
+        dims: &[usize],
+        data: &[u8],
+    ) -> Result<Literal> {
+        let want: usize =
+            dims.iter().product::<usize>() * element_type.byte_size();
+        if data.len() != want {
+            return Err(Error(format!(
+                "literal data size {} != shape size {want}",
+                data.len()
+            )));
+        }
+        Ok(Literal {
+            element_type,
+            dims: dims.to_vec(),
+            bytes: data.to_vec(),
+        })
+    }
+
+    pub fn scalar(v: f32) -> Literal {
+        Literal {
+            element_type: ElementType::F32,
+            dims: vec![],
+            bytes: v.to_le_bytes().to_vec(),
+        }
+    }
+
+    pub fn to_vec<T: NativeType>(&self) -> Result<Vec<T>> {
+        if self.element_type != T::ELEMENT {
+            return Err(Error("literal element type mismatch".into()));
+        }
+        Ok(self
+            .bytes
+            .chunks_exact(4)
+            .map(|b| T::from_le_bytes([b[0], b[1], b[2], b[3]]))
+            .collect())
+    }
+
+    /// Destructure a 4-tuple literal.  Tuple literals only exist as
+    /// execution outputs, which the stub cannot produce.
+    pub fn to_tuple4(&self) -> Result<(Literal, Literal, Literal, Literal)> {
+        Err(unavailable("Literal::to_tuple4"))
+    }
+}
+
+/// Parsed HLO module (opaque in the stub).
+pub struct HloModuleProto {
+    _private: (),
+}
+
+impl HloModuleProto {
+    pub fn from_text_file(_path: &str) -> Result<HloModuleProto> {
+        Err(unavailable("HloModuleProto::from_text_file"))
+    }
+}
+
+/// An XLA computation (opaque in the stub).
+pub struct XlaComputation {
+    _private: (),
+}
+
+impl XlaComputation {
+    pub fn from_proto(_proto: &HloModuleProto) -> XlaComputation {
+        XlaComputation { _private: () }
+    }
+}
+
+/// PJRT client handle.  Never constructible in the stub.
+pub struct PjRtClient {
+    _private: (),
+}
+
+impl PjRtClient {
+    pub fn cpu() -> Result<PjRtClient> {
+        Err(unavailable("PjRtClient::cpu"))
+    }
+
+    pub fn platform_name(&self) -> String {
+        "stub".to_string()
+    }
+
+    pub fn compile(
+        &self,
+        _computation: &XlaComputation,
+    ) -> Result<PjRtLoadedExecutable> {
+        Err(unavailable("PjRtClient::compile"))
+    }
+}
+
+/// Compiled executable handle.  Never constructible in the stub.
+pub struct PjRtLoadedExecutable {
+    _private: (),
+}
+
+impl PjRtLoadedExecutable {
+    pub fn execute<L: std::borrow::Borrow<Literal>>(
+        &self,
+        _args: &[L],
+    ) -> Result<Vec<Vec<PjRtBuffer>>> {
+        Err(unavailable("PjRtLoadedExecutable::execute"))
+    }
+}
+
+/// Device buffer handle.  Never constructible in the stub.
+pub struct PjRtBuffer {
+    _private: (),
+}
+
+impl PjRtBuffer {
+    pub fn to_literal_sync(&self) -> Result<Literal> {
+        Err(unavailable("PjRtBuffer::to_literal_sync"))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn client_is_unavailable() {
+        let err = PjRtClient::cpu().err().unwrap();
+        assert!(err.to_string().contains("not available"));
+    }
+
+    #[test]
+    fn literal_roundtrip() {
+        let data: Vec<f32> = vec![1.0, -2.5, 3.25, 0.0, 5.0, -6.0];
+        let bytes: Vec<u8> =
+            data.iter().flat_map(|x| x.to_le_bytes()).collect();
+        let lit = Literal::create_from_shape_and_untyped_data(
+            ElementType::F32,
+            &[2, 3],
+            &bytes,
+        )
+        .unwrap();
+        assert_eq!(lit.to_vec::<f32>().unwrap(), data);
+        assert!(lit.to_vec::<i32>().is_err());
+    }
+
+    #[test]
+    fn literal_size_checked() {
+        assert!(Literal::create_from_shape_and_untyped_data(
+            ElementType::S32,
+            &[3],
+            &[0u8; 8],
+        )
+        .is_err());
+    }
+}
