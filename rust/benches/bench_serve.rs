@@ -110,9 +110,49 @@ fn main() {
     }
     print!("{}", t1.render());
 
-    // --- cache hit rate vs capacity (Zipf head served from RAM) ---
+    // --- per-query vs batched scan: the data-reuse comparator ---
+    // rows/query is measured from the engine's rows-scanned counter: a
+    // batch of B queries loads each row once, so traffic per query
+    // falls as ~rows/fill while a per-query scan (batch_max 1) pays the
+    // full row count every time.  `reuse` is that measured ratio — the
+    // serving analogue of the paper's context-window reuse factor.
     let dir4 = store_dir("cache4");
     export_store(&model, &vocab, &dir4, 4).unwrap();
+    let mut t4 = Table::new(
+        "scan reuse: per-query vs batched (4 shards, exact, no cache)",
+        &["batch_max", "fill", "rows_per_query", "reuse", "qps"],
+    );
+    for batch_max in [1usize, 8, 32] {
+        let store =
+            Arc::new(ShardedStore::open(&dir4, Precision::Exact).unwrap());
+        let engine = ServeEngine::start(
+            store,
+            ServeOptions {
+                batch_max,
+                cache_capacity: 0,
+                warm_cache: false,
+                ..ServeOptions::default()
+            },
+        );
+        let (qps, report) = drive(&engine, &ids, 10);
+        let rows_per_query = report.rows_loaded_per_query();
+        let reuse = if rows_per_query > 0.0 {
+            rows as f64 / rows_per_query
+        } else {
+            0.0
+        };
+        t4.row(vec![
+            batch_max.to_string(),
+            f(report.batch_fill(), 1),
+            f(rows_per_query, 0),
+            f(reuse, 2),
+            f(qps, 0),
+        ]);
+        engine.shutdown();
+    }
+    print!("{}", t4.render());
+
+    // --- cache hit rate vs capacity (Zipf head served from RAM) ---
     let mut t2 = Table::new(
         "hot-cache tier at 4 shards (Zipf queries)",
         &["capacity", "protected", "hit_rate", "p50_us", "qps"],

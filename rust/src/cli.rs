@@ -55,6 +55,8 @@ pub enum Command {
         queries: String,
         k: usize,
         quantized: bool,
+        /// Max queries folded into one micro-batch (scan-reuse factor).
+        batch: usize,
     },
     GenCorpus {
         spec: String,
@@ -78,7 +80,7 @@ COMMANDS:
   eval --model MODEL.txt --pairs PAIRS.tsv
   nn (--model MODEL.txt | --store DIR [--quantized]) --word WORD [--k K]
   export-store --model MODEL.txt --out DIR [--shards N]
-  serve --store DIR --queries FILE [--k K] [--quantized]
+  serve --store DIR --queries FILE [--k K] [--quantized] [--batch N]
   gen-corpus --spec tiny|text8|1bw --out DIR
   gpusim
   manifest
@@ -115,7 +117,7 @@ pub fn parse(args: &[String]) -> Result<Cli> {
             "-q" | "--quiet" => log::set_level(Level::Error),
             "--corpus" | "--synthetic" | "--out" | "--model" | "--pairs"
             | "--word" | "--k" | "--spec" | "--store" | "--queries"
-            | "--shards" => {
+            | "--shards" | "--batch" => {
                 let key = a.trim_start_matches('-').to_string();
                 opts.push((key, take_value(&mut i)?));
             }
@@ -196,6 +198,7 @@ pub fn parse(args: &[String]) -> Result<Cli> {
                 .ok_or_else(|| anyhow!("serve needs --queries"))?,
             k: int_flag("k", 10)?,
             quantized: get("quantized").is_some(),
+            batch: int_flag("batch", 32)?,
         },
         "gen-corpus" => Command::GenCorpus {
             spec: get("spec").unwrap_or_else(|| "tiny".into()),
@@ -314,13 +317,22 @@ mod tests {
         let cli =
             p(&["serve", "--store", "dir", "--queries", "q.txt"]).unwrap();
         match cli.command {
-            Command::Serve { k, quantized, .. } => {
+            Command::Serve { k, quantized, batch, .. } => {
                 assert_eq!(k, 10);
                 assert!(!quantized);
+                assert_eq!(batch, 32);
             }
             _ => panic!(),
         }
         assert!(p(&["serve", "--store", "dir"]).is_err());
+        let cli = p(&[
+            "serve", "--store", "dir", "--queries", "q.txt", "--batch", "8",
+        ])
+        .unwrap();
+        match cli.command {
+            Command::Serve { batch, .. } => assert_eq!(batch, 8),
+            _ => panic!(),
+        }
     }
 
     #[test]

@@ -72,24 +72,9 @@ pub fn softplus(x: f32) -> f64 {
     }
 }
 
-#[inline]
-pub fn dot(a: &[f32], b: &[f32]) -> f32 {
-    debug_assert_eq!(a.len(), b.len());
-    let mut acc = 0.0f32;
-    for i in 0..a.len() {
-        acc += a[i] * b[i];
-    }
-    acc
-}
-
-/// y += alpha * x
-#[inline]
-pub fn axpy(alpha: f32, x: &[f32], y: &mut [f32]) {
-    debug_assert_eq!(x.len(), y.len());
-    for i in 0..x.len() {
-        y[i] += alpha * x[i];
-    }
-}
+// The dot/axpy hot loops live in the crate-wide kernel layer now; the
+// re-export keeps `math::{dot, axpy}` as the baselines' import path.
+pub use crate::vecops::{axpy, dot};
 
 #[cfg(test)]
 mod tests {

@@ -6,7 +6,8 @@
 //! baseline in the throughput figures and the semantic reference the
 //! integration tests compare embedding quality against.
 
-use super::math::{axpy, dot, softplus, SigmoidTable};
+use super::math::{softplus, SigmoidTable};
+use crate::vecops::{axpy, dot};
 use super::{epoch_loop, BaseTrainer};
 use crate::config::TrainConfig;
 use crate::coordinator::SgnsTrainer;

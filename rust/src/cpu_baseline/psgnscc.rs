@@ -8,7 +8,8 @@
 //! ((CC + N) x d); the label matrix marks each context row's own center
 //! positive, everything else negative.  Updates apply once per block.
 
-use super::math::{dot, sigmoid, softplus};
+use super::math::{sigmoid, softplus};
+use crate::vecops::dot;
 use super::{epoch_loop, BaseTrainer};
 use crate::config::TrainConfig;
 use crate::coordinator::SgnsTrainer;

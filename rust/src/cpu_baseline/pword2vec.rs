@@ -86,7 +86,7 @@ impl PWord2VecTrainer {
             sc.g.resize(m * cols, 0.0);
             for i in 0..m {
                 for k in 0..cols {
-                    let z = super::math::dot(
+                    let z = crate::vecops::dot(
                         &sc.c[i * d..(i + 1) * d],
                         &sc.u[k * d..(k + 1) * d],
                     );

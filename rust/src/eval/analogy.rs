@@ -96,10 +96,7 @@ pub fn solve_analogies(
     AnalogyReport { correct, total, skipped }
 }
 
-#[inline]
-fn dot(a: &[f32], b: &[f32]) -> f64 {
-    a.iter().zip(b).map(|(x, y)| (*x as f64) * (*y as f64)).sum()
-}
+use crate::vecops::dot_f64 as dot;
 
 #[cfg(test)]
 mod tests {

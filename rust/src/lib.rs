@@ -22,6 +22,14 @@
 //! It applies the paper's locality-hierarchy insight to inference; see
 //! the [`serve`] module docs for the tier-by-tier mapping.
 //!
+//! All f32/int8 hot loops — the serving scan, the CPU baselines'
+//! dot/axpy, evaluation — share one kernel layer, [`vecops`]: unrolled
+//! scalar kernels plus Q×R *tile kernels* that score a block of queries
+//! against a block of store rows with each row loaded once (batch-way
+//! data reuse, the paper's context-window reuse applied to inference).
+//! The serving engine scans every shard **once per micro-batch** through
+//! these tiles rather than once per query.
+//!
 //! See DESIGN.md for the system inventory and per-experiment index.
 
 pub mod batcher;
@@ -39,6 +47,7 @@ pub mod runtime;
 pub mod sampler;
 pub mod serve;
 pub mod util;
+pub mod vecops;
 pub mod workbench;
 
 pub fn version() -> &'static str {

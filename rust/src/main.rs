@@ -114,8 +114,8 @@ fn run(cli: Cli) -> Result<()> {
         Command::ExportStore { model, out, shards } => {
             export_store_cmd(&model, &out, shards)
         }
-        Command::Serve { store, queries, k, quantized } => {
-            serve_cmd(&store, &queries, k, quantized)
+        Command::Serve { store, queries, k, quantized, batch } => {
+            serve_cmd(&store, &queries, k, quantized, batch)
         }
     }
 }
@@ -325,13 +325,17 @@ fn serve_cmd(
     queries_path: &str,
     k: usize,
     quantized: bool,
+    batch: usize,
 ) -> Result<()> {
     use fullw2v::serve::{ServeEngine, ServeOptions, ShardedStore};
     let dir = Path::new(store_dir);
     let store =
         Arc::new(ShardedStore::open(dir, store_precision(quantized))?);
     let vocab = load_store_vocab(dir, &store)?;
-    let engine = ServeEngine::start(store, ServeOptions::default());
+    let engine = ServeEngine::start(
+        store,
+        ServeOptions { batch_max: batch, ..ServeOptions::default() },
+    );
     let client = engine.client();
 
     let text = std::fs::read_to_string(queries_path)

@@ -6,10 +6,17 @@
 //! associatively — which is what lets the engine give each worker thread
 //! a disjoint shard range and combine partial results at the end.
 //!
+//! The engine's hot path is [`search_shard_batch`]: one pass over the
+//! shard for a whole micro-batch of queries, rows flowing through the
+//! [`crate::vecops`] tile kernels with batch-way reuse.
+//! [`search_shard`] is the per-query path, kept as the reference the
+//! batched scan is tested against (and for single-query callers).
+//!
 //! Ordering is fully deterministic: ties in score break toward the
 //! smaller word id, in both the heap and the final sort.
 
-use super::store::Shard;
+use super::store::{RowBlock, Shard};
+use crate::vecops::{self, ROW_TILE};
 use std::cmp::{Ordering, Reverse};
 use std::collections::BinaryHeap;
 
@@ -128,6 +135,103 @@ pub fn search_shard(
     }
 }
 
+/// One query of a batched shard scan.
+#[derive(Debug, Clone, Copy)]
+pub struct BatchQuery<'a> {
+    /// Normalized query vector, store-dim wide.
+    pub vector: &'a [f32],
+    /// Drop this id from the results (typically the query word itself).
+    pub exclude: Option<u32>,
+}
+
+/// Scan one shard **once** for a whole batch of queries, maintaining
+/// every query's top-k heap in the same pass.
+///
+/// Rows stream through the [`crate::vecops`] tile kernels in
+/// [`ROW_TILE`]-row blocks borrowed straight from shard memory
+/// ([`Shard::row_block`]) — each row is loaded once per batch and
+/// reused across all queries, instead of once per query as in
+/// [`search_shard`].  Scores are bit-identical to the per-query path
+/// (the kernels' contract), so the two paths return identical top-k
+/// lists, ties included.
+pub fn search_shard_batch(
+    shard: &Shard,
+    queries: &[BatchQuery<'_>],
+    topks: &mut [TopK],
+) {
+    search_shards_batch(std::iter::once(shard), queries, topks);
+}
+
+/// Batched scan over several shards — [`search_shard_batch`] with the
+/// query-vector table and score scratch hoisted out of the shard loop,
+/// so a whole worker range costs two allocations per batch regardless
+/// of shard count.  Returns the number of rows scanned (the engine's
+/// memory-traffic accounting).
+pub fn search_shards_batch<'s>(
+    shards: impl IntoIterator<Item = &'s Shard>,
+    queries: &[BatchQuery<'_>],
+    topks: &mut [TopK],
+) -> u64 {
+    assert_eq!(queries.len(), topks.len(), "one heap per query");
+    if queries.is_empty() {
+        return 0;
+    }
+    let vectors: Vec<&[f32]> = queries.iter().map(|q| q.vector).collect();
+    // one scratch tile for all shards — no per-row or per-shard allocation
+    let mut scores = vec![0.0f32; queries.len() * ROW_TILE];
+    let mut rows_scanned = 0u64;
+    for shard in shards {
+        scan_shard_tiles(shard, &vectors, queries, topks, &mut scores);
+        rows_scanned += shard.rows as u64;
+    }
+    rows_scanned
+}
+
+/// One shard's tile loop (shared by the single- and multi-shard entry
+/// points); `scores` is the caller's `queries.len() * ROW_TILE` scratch.
+fn scan_shard_tiles(
+    shard: &Shard,
+    vectors: &[&[f32]],
+    queries: &[BatchQuery<'_>],
+    topks: &mut [TopK],
+    scores: &mut [f32],
+) {
+    let mut start = 0usize;
+    while start < shard.rows {
+        let n = ROW_TILE.min(shard.rows - start);
+        let tile = &mut scores[..queries.len() * n];
+        match shard.row_block(start, n) {
+            RowBlock::F32(rows) => {
+                vecops::tile_scores_f32(rows, shard.dim, vectors, tile);
+            }
+            RowBlock::I8 { scales, codes } => {
+                vecops::tile_scores_i8(codes, scales, shard.dim, vectors, tile);
+            }
+        }
+        let base = (shard.start_row + start) as u32;
+        for ((q, topk), row_scores) in
+            queries.iter().zip(topks.iter_mut()).zip(tile.chunks_exact(n))
+        {
+            match q.exclude {
+                None => {
+                    for (r, &s) in row_scores.iter().enumerate() {
+                        topk.consider(base + r as u32, s);
+                    }
+                }
+                Some(x) => {
+                    for (r, &s) in row_scores.iter().enumerate() {
+                        let id = base + r as u32;
+                        if id != x {
+                            topk.consider(id, s);
+                        }
+                    }
+                }
+            }
+        }
+        start += n;
+    }
+}
+
 /// Brute-force reference over a flat row-major matrix (tests and the
 /// exact/quantized agreement check in `examples/serve_query.rs`).
 pub fn search_rows(
@@ -143,7 +247,7 @@ pub fn search_rows(
         if exclude == Some(id) {
             continue;
         }
-        topk.consider(id, super::store::dot(row, query));
+        topk.consider(id, vecops::dot(row, query));
     }
     topk.into_sorted()
 }

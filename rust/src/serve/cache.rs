@@ -12,10 +12,16 @@
 //!   descending frequency order, so `id < protected` **is** the Zipf
 //!   head — no separate frequency table is needed.
 //!
+//! Rows are held as `Arc<[f32]>`, so a hit hands back a reference-
+//! counted handle (one atomic increment) instead of copying the row —
+//! the row itself is loaded from the cold tier once and then shared
+//! with every batch that queries it.
+//!
 //! The cache is owned by the engine's dispatcher thread, so it needs no
 //! interior locking.
 
 use std::collections::HashMap;
+use std::sync::Arc;
 
 const NIL: usize = usize::MAX;
 
@@ -24,7 +30,7 @@ struct Node {
     prev: usize,
     next: usize,
     pinned: bool,
-    row: Vec<f32>,
+    row: Arc<[f32]>,
 }
 
 /// Hit/miss counters (monotonic over the cache's lifetime).
@@ -104,13 +110,14 @@ impl HotCache {
     }
 
     /// Look up a row, counting a hit or miss and refreshing recency.
-    pub fn get(&mut self, id: u32) -> Option<&[f32]> {
+    /// A hit returns an `Arc` clone of the resident row — no copy.
+    pub fn get(&mut self, id: u32) -> Option<Arc<[f32]>> {
         match self.map.get(&id).copied() {
             Some(i) => {
                 self.stats.hits += 1;
                 self.detach(i);
                 self.push_front(i);
-                Some(&self.nodes[i].row)
+                Some(self.nodes[i].row.clone())
             }
             None => {
                 self.stats.misses += 1;
@@ -121,14 +128,16 @@ impl HotCache {
 
     /// Insert a row fetched from the cold tier, evicting the LRU
     /// unpinned entry when full.  A full cache of pinned rows (or
-    /// capacity 0) silently skips the insert.
-    pub fn insert(&mut self, id: u32, row: &[f32]) {
+    /// capacity 0) silently skips the insert.  The caller keeps (a
+    /// clone of) the same `Arc`, so cache and in-flight batches share
+    /// one allocation.
+    pub fn insert(&mut self, id: u32, row: Arc<[f32]>) {
         assert_eq!(row.len(), self.dim, "row width mismatch");
         if self.capacity == 0 {
             return;
         }
         if let Some(&i) = self.map.get(&id) {
-            self.nodes[i].row.copy_from_slice(row);
+            self.nodes[i].row = row;
             self.detach(i);
             self.push_front(i);
             return;
@@ -140,13 +149,7 @@ impl HotCache {
         if pinned {
             self.stats.pinned += 1;
         }
-        let node = Node {
-            id,
-            prev: NIL,
-            next: NIL,
-            pinned,
-            row: row.to_vec(),
-        };
+        let node = Node { id, prev: NIL, next: NIL, pinned, row };
         let i = match self.free.pop() {
             Some(i) => {
                 self.nodes[i] = node;
@@ -164,13 +167,13 @@ impl HotCache {
     /// Pre-load the protected head from a row source (e.g. the store at
     /// startup), so the first wave of hot queries doesn't fault.
     pub fn warm<F: FnMut(u32, &mut [f32]) -> bool>(&mut self, mut fetch: F) {
-        let mut buf = vec![0.0f32; self.dim];
         for id in 0..self.protected {
             if self.contains(id) {
                 continue;
             }
+            let mut buf = vec![0.0f32; self.dim];
             if fetch(id, &mut buf) {
-                self.insert(id, &buf);
+                self.insert(id, buf.into());
             }
         }
     }
@@ -186,7 +189,9 @@ impl HotCache {
         }
         self.detach(i);
         self.map.remove(&self.nodes[i].id);
-        self.nodes[i].row = Vec::new(); // release the payload now
+        // drop our reference now; in-flight batches holding a clone
+        // keep the row alive until they finish
+        self.nodes[i].row = Vec::new().into();
         self.free.push(i);
         self.stats.evictions += 1;
         true
@@ -225,19 +230,19 @@ impl HotCache {
 mod tests {
     use super::*;
 
-    fn row(v: f32, d: usize) -> Vec<f32> {
-        vec![v; d]
+    fn row(v: f32, d: usize) -> Arc<[f32]> {
+        vec![v; d].into()
     }
 
     #[test]
     fn lru_eviction_order() {
         let mut c = HotCache::new(2, 3, 0);
-        c.insert(10, &row(1.0, 2));
-        c.insert(11, &row(2.0, 2));
-        c.insert(12, &row(3.0, 2));
+        c.insert(10, row(1.0, 2));
+        c.insert(11, row(2.0, 2));
+        c.insert(12, row(3.0, 2));
         // touch 10 so 11 becomes LRU
         assert!(c.get(10).is_some());
-        c.insert(13, &row(4.0, 2));
+        c.insert(13, row(4.0, 2));
         assert!(c.contains(10));
         assert!(!c.contains(11), "LRU entry should have been evicted");
         assert!(c.contains(12) && c.contains(13));
@@ -248,10 +253,10 @@ mod tests {
     fn pinned_head_survives_pressure() {
         // ids < 2 are protected
         let mut c = HotCache::new(2, 3, 2);
-        c.insert(0, &row(0.0, 2));
-        c.insert(1, &row(1.0, 2));
+        c.insert(0, row(0.0, 2));
+        c.insert(1, row(1.0, 2));
         for id in 100..120 {
-            c.insert(id, &row(id as f32, 2));
+            c.insert(id, row(id as f32, 2));
         }
         assert!(c.contains(0) && c.contains(1), "pinned rows evicted");
         assert_eq!(c.len(), 3);
@@ -260,9 +265,9 @@ mod tests {
     #[test]
     fn full_pinned_cache_skips_inserts() {
         let mut c = HotCache::new(2, 2, 2);
-        c.insert(0, &row(0.0, 2));
-        c.insert(1, &row(1.0, 2));
-        c.insert(50, &row(5.0, 2));
+        c.insert(0, row(0.0, 2));
+        c.insert(1, row(1.0, 2));
+        c.insert(50, row(5.0, 2));
         assert!(!c.contains(50));
         assert_eq!(c.len(), 2);
     }
@@ -271,8 +276,8 @@ mod tests {
     fn hit_miss_accounting() {
         let mut c = HotCache::new(2, 2, 0);
         assert!(c.get(7).is_none());
-        c.insert(7, &row(7.0, 2));
-        assert_eq!(c.get(7).unwrap(), &[7.0, 7.0]);
+        c.insert(7, row(7.0, 2));
+        assert_eq!(&c.get(7).unwrap()[..], &[7.0, 7.0]);
         assert!(c.get(8).is_none());
         let s = c.stats();
         assert_eq!((s.hits, s.misses), (1, 2));
@@ -282,7 +287,7 @@ mod tests {
     #[test]
     fn capacity_zero_disables() {
         let mut c = HotCache::new(4, 0, 10);
-        c.insert(1, &row(1.0, 4));
+        c.insert(1, row(1.0, 4));
         assert!(c.get(1).is_none());
         assert_eq!(c.len(), 0);
     }
@@ -290,10 +295,10 @@ mod tests {
     #[test]
     fn reinsert_updates_payload() {
         let mut c = HotCache::new(2, 2, 0);
-        c.insert(3, &row(1.0, 2));
-        c.insert(3, &row(9.0, 2));
+        c.insert(3, row(1.0, 2));
+        c.insert(3, row(9.0, 2));
         assert_eq!(c.len(), 1);
-        assert_eq!(c.get(3).unwrap(), &[9.0, 9.0]);
+        assert_eq!(&c.get(3).unwrap()[..], &[9.0, 9.0]);
     }
 
     #[test]
@@ -305,15 +310,27 @@ mod tests {
         });
         assert_eq!(c.len(), 3);
         for id in 0..3 {
-            assert_eq!(c.get(id).unwrap(), &[id as f32, id as f32]);
+            assert_eq!(&c.get(id).unwrap()[..], &[id as f32, id as f32]);
         }
+    }
+
+    #[test]
+    fn hit_shares_the_allocation() {
+        let mut c = HotCache::new(2, 2, 0);
+        let r = row(4.0, 2);
+        c.insert(4, r.clone());
+        let got = c.get(4).unwrap();
+        assert!(
+            Arc::ptr_eq(&r, &got),
+            "a hit must clone the handle, not copy the row"
+        );
     }
 
     #[test]
     fn eviction_reuses_slots() {
         let mut c = HotCache::new(2, 2, 0);
         for id in 0..50 {
-            c.insert(id, &row(id as f32, 2));
+            c.insert(id, row(id as f32, 2));
         }
         assert_eq!(c.len(), 2);
         assert!(c.nodes.len() <= 3, "slab should recycle freed slots");

@@ -5,14 +5,19 @@
 //! slow engine blocks producers instead of ballooning memory), a
 //! dispatcher thread drains up to `batch_max` pending requests into a
 //! micro-batch, resolves query vectors through the [`HotCache`] tier,
-//! and fans the batch out to worker threads that each own a disjoint
-//! shard range.  Per-worker partial top-k heaps merge associatively at
-//! the front.
+//! and fans the *whole batch* out to worker threads that each own a
+//! disjoint shard range.  Each worker scans its shards **once per
+//! batch** ([`search_shard_batch`]) — every loaded row is reused across
+//! all queries in the batch, so the dominant cost drops from
+//! `O(batch x rows)` row loads to `O(rows)` with batch-way reuse.
+//! Per-worker partial top-k heaps merge associatively at the front,
+//! and the rows-scanned count is reported so the reuse factor is
+//! measurable ([`ServeReport::rows_loaded_per_query`]).
 //!
 //! Per-request latency (enqueue to reply) and cache traffic are recorded
 //! and summarized as a [`ServeReport`] via [`crate::metrics::LatencyStats`].
 
-use super::ann::{search_shard, Neighbor, TopK};
+use super::ann::{search_shards_batch, BatchQuery, Neighbor, TopK};
 use super::cache::HotCache;
 use super::store::ShardedStore;
 use crate::metrics::LatencyStats;
@@ -80,7 +85,7 @@ enum Msg {
 }
 
 struct ResolvedQuery {
-    vector: Arc<Vec<f32>>,
+    vector: Arc<[f32]>,
     k: usize,
     exclude: Option<u32>,
 }
@@ -89,7 +94,9 @@ struct BatchJob {
     queries: Vec<ResolvedQuery>,
 }
 
-type WorkerResult = Result<Vec<TopK>, String>;
+/// Per-batch worker outcome: partial heaps plus rows scanned (the
+/// memory-traffic accounting behind the reuse-factor report).
+type WorkerResult = Result<(Vec<TopK>, u64), String>;
 
 struct EngineShared {
     latencies: Mutex<Vec<u64>>,
@@ -98,6 +105,9 @@ struct EngineShared {
     cache_hits: AtomicU64,
     cache_misses: AtomicU64,
     cache_evictions: AtomicU64,
+    /// Store rows scanned across all workers (a batch of B queries
+    /// scans each row once, not B times).
+    rows_scanned: AtomicU64,
     /// Serving window, as nanos since engine start: set at the first
     /// batch's start and advanced past each batch's end, so reported QPS
     /// covers time actually spent serving, not engine lifetime.
@@ -114,6 +124,7 @@ impl Default for EngineShared {
             cache_hits: AtomicU64::new(0),
             cache_misses: AtomicU64::new(0),
             cache_evictions: AtomicU64::new(0),
+            rows_scanned: AtomicU64::new(0),
             window_first_ns: AtomicU64::new(u64::MAX),
             window_last_ns: AtomicU64::new(0),
         }
@@ -142,6 +153,9 @@ pub struct ServeReport {
     pub cache_hits: u64,
     pub cache_misses: u64,
     pub cache_evictions: u64,
+    /// Rows loaded from shards across the run; divided by `queries`
+    /// this is the per-query memory traffic the batched scan amortizes.
+    pub rows_scanned: u64,
     pub workers: usize,
     pub shards: usize,
     pub loaded_shards: usize,
@@ -167,6 +181,18 @@ impl ServeReport {
         }
     }
 
+    /// Shard rows loaded per answered query.  A per-query scan pays
+    /// the full row count for every query; the batched scan pays it
+    /// once per batch, so this approaches `rows / batch_fill` — the
+    /// data-reuse factor, measured rather than asserted.
+    pub fn rows_loaded_per_query(&self) -> f64 {
+        if self.queries == 0 {
+            0.0
+        } else {
+            self.rows_scanned as f64 / self.queries as f64
+        }
+    }
+
     pub fn to_json(&self) -> Json {
         obj(vec![
             ("latency", self.latency.to_json()),
@@ -175,6 +201,11 @@ impl ServeReport {
             ("batch_fill", Json::Num(self.batch_fill())),
             ("cache_hit_rate", Json::Num(self.cache_hit_rate())),
             ("cache_evictions", Json::Num(self.cache_evictions as f64)),
+            ("rows_scanned", Json::Num(self.rows_scanned as f64)),
+            (
+                "rows_loaded_per_query",
+                Json::Num(self.rows_loaded_per_query()),
+            ),
             ("workers", Json::Num(self.workers as f64)),
             ("shards", Json::Num(self.shards as f64)),
             ("loaded_shards", Json::Num(self.loaded_shards as f64)),
@@ -186,7 +217,8 @@ impl ServeReport {
     pub fn summary(&self) -> String {
         format!(
             "{} queries in {} batches (fill {:.1}) | p50 {:.0}us p99 {:.0}us \
-             {:.0} qps | cache hit {:.0}% | {}/{} shards loaded ({})",
+             {:.0} qps | cache hit {:.0}% | {:.0} rows/query | {}/{} shards \
+             loaded ({})",
             self.queries,
             self.batches,
             self.batch_fill(),
@@ -194,6 +226,7 @@ impl ServeReport {
             self.latency.p99_us,
             self.latency.qps,
             100.0 * self.cache_hit_rate(),
+            self.rows_loaded_per_query(),
             self.loaded_shards,
             self.shards,
             self.precision,
@@ -322,6 +355,7 @@ impl ServeEngine {
                 .shared
                 .cache_evictions
                 .load(Ordering::Relaxed),
+            rows_scanned: self.shared.rows_scanned.load(Ordering::Relaxed),
             workers: self.workers,
             shards: self.store.num_shards(),
             loaded_shards: self.store.loaded_shards(),
@@ -478,6 +512,7 @@ fn dispatch_loop(
             // missing from every result: that is a hard error, not a
             // degraded answer
             let mut failure: Option<String> = None;
+            let mut batch_rows = 0u64;
             for (link, s) in links.iter().zip(&sent) {
                 if !*s {
                     failure =
@@ -485,7 +520,8 @@ fn dispatch_loop(
                     continue;
                 }
                 match link.result_rx.recv() {
-                    Ok(Ok(parts)) => {
+                    Ok(Ok((parts, rows))) => {
+                        batch_rows += rows;
                         for (m, p) in merged.iter_mut().zip(parts) {
                             m.merge(p);
                         }
@@ -510,6 +546,7 @@ fn dispatch_loop(
                     .map(|_| Some(Err(e.clone())))
                     .collect(),
             };
+            shared.rows_scanned.fetch_add(batch_rows, Ordering::Relaxed);
         }
 
         // account the whole batch *before* any reply goes out, so a
@@ -565,17 +602,19 @@ fn resolve(
     kind: QueryKind,
     store: &ShardedStore,
     cache: &mut HotCache,
-) -> Result<(Arc<Vec<f32>>, Option<u32>), String> {
+) -> Result<(Arc<[f32]>, Option<u32>), String> {
     match kind {
         QueryKind::ById(id) => {
+            // a hit is an Arc clone of the resident row — no copy
             if let Some(row) = cache.get(id) {
-                return Ok((Arc::new(row.to_vec()), Some(id)));
+                return Ok((row, Some(id)));
             }
             let mut buf = vec![0.0f32; store.dim()];
             match store.fetch_row(id, &mut buf) {
                 Ok(Some(())) => {
-                    cache.insert(id, &buf);
-                    Ok((Arc::new(buf), Some(id)))
+                    let row: Arc<[f32]> = buf.into();
+                    cache.insert(id, row.clone());
+                    Ok((row, Some(id)))
                 }
                 Ok(None) => Err(format!(
                     "row id {id} out of range (vocab {})",
@@ -605,12 +644,13 @@ fn resolve(
             for x in v.iter_mut() {
                 *x /= norm;
             }
-            Ok((Arc::new(v), None))
+            Ok((v.into(), None))
         }
     }
 }
 
-/// Worker body: scan shards [lo, hi) for every query in the batch.
+/// Worker body: scan shards [lo, hi) **once** for the whole batch —
+/// every query's heap advances in the same pass over each shard.
 fn scan_range(
     store: &ShardedStore,
     lo: usize,
@@ -619,13 +659,17 @@ fn scan_range(
 ) -> WorkerResult {
     let mut parts: Vec<TopK> =
         job.queries.iter().map(|q| TopK::new(q.k)).collect();
-    for si in lo..hi {
-        let shard = store.shard(si).map_err(|e| format!("{e:#}"))?;
-        for (q, t) in job.queries.iter().zip(parts.iter_mut()) {
-            search_shard(shard, &q.vector, q.exclude, t);
-        }
-    }
-    Ok(parts)
+    let queries: Vec<BatchQuery<'_>> = job
+        .queries
+        .iter()
+        .map(|q| BatchQuery { vector: &q.vector, exclude: q.exclude })
+        .collect();
+    let shards = (lo..hi)
+        .map(|si| store.shard(si).map_err(|e| format!("{e:#}")))
+        .collect::<Result<Vec<_>, _>>()?;
+    let rows_scanned =
+        search_shards_batch(shards.into_iter(), &queries, &mut parts);
+    Ok((parts, rows_scanned))
 }
 
 #[cfg(test)]

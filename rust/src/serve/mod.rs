@@ -9,10 +9,20 @@
 //!
 //! | training (paper)        | serving (this module)                    |
 //! |-------------------------|------------------------------------------|
-//! | registers: center word  | resolved query vector, reused per batch  |
+//! | registers: center word  | [`crate::vecops`] tile kernels — a row   |
+//! |                         | feeds Q query accumulators per load      |
 //! | shared memory: ctx/negs | [`cache::HotCache`] — pinned Zipf head   |
 //! | HBM: embedding tables   | [`store::ShardedStore`] — lazy shards    |
 //! | CUDA streams / batches  | [`engine::ServeEngine`] micro-batches    |
+//!
+//! The scan path is *batched end to end*: the engine hands whole
+//! micro-batches to shard workers, [`ann::search_shard_batch`] walks
+//! each shard once per batch through [`crate::vecops`] tile kernels
+//! over zero-copy [`store::RowBlock`] views, and every query's top-k
+//! heap advances in that single pass.  Row loads drop from
+//! `O(batch x rows)` to `O(rows)` — the serving analogue of the
+//! paper's context-window reuse — and the realized reuse is reported
+//! as [`engine::ServeReport::rows_loaded_per_query`].
 //!
 //! Typical flow:
 //!
@@ -36,13 +46,16 @@ pub mod cache;
 pub mod engine;
 pub mod store;
 
-pub use ann::{search_rows, Neighbor, TopK};
+pub use ann::{
+    search_rows, search_shard, search_shard_batch, search_shards_batch,
+    BatchQuery, Neighbor, TopK,
+};
 pub use cache::{CacheStats, HotCache};
 pub use engine::{
     QueryClient, QueryResponse, ServeEngine, ServeOptions, ServeReport,
 };
 pub use store::{
-    export_store, Precision, Shard, ShardedStore, StoreManifest,
+    export_store, Precision, RowBlock, Shard, ShardedStore, StoreManifest,
 };
 
 /// Head-skewed query-id stream for benches and examples.  Vocabulary ids

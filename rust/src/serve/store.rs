@@ -23,6 +23,7 @@ use crate::corpus::vocab::Vocab;
 use crate::model::embeddings::normalize_rows_in_place;
 use crate::model::EmbeddingModel;
 use crate::util::json::{obj, Json};
+use crate::vecops;
 use anyhow::{anyhow, bail, Context, Result};
 use std::io::{BufReader, BufWriter, Read, Write};
 use std::path::{Path, PathBuf};
@@ -166,6 +167,18 @@ enum ShardData {
     I8 { scales: Vec<f32>, codes: Vec<i8> },
 }
 
+/// Borrowed view of a contiguous block of shard rows in the shard's
+/// native precision — what the batched scan's tile kernels consume.
+/// No per-row allocation or dequantization happens to produce one;
+/// tiles read straight out of shard memory.
+#[derive(Debug, Clone, Copy)]
+pub enum RowBlock<'a> {
+    /// `rows * dim` f32, row-major.
+    F32(&'a [f32]),
+    /// One scale per row plus `rows * dim` int8 codes, row-major.
+    I8 { scales: &'a [f32], codes: &'a [i8] },
+}
+
 /// One loaded shard: a contiguous block of rows.
 pub struct Shard {
     pub start_row: usize,
@@ -194,25 +207,44 @@ impl Shard {
         }
     }
 
+    /// Borrow `n` rows starting at shard-local row `start`, in native
+    /// precision.  `row_block(0, self.rows)` views the whole shard.
+    pub fn row_block(&self, start: usize, n: usize) -> RowBlock<'_> {
+        assert!(
+            start + n <= self.rows,
+            "block [{start}, {}) exceeds {} rows",
+            start + n,
+            self.rows
+        );
+        let base = start * self.dim;
+        let len = n * self.dim;
+        match &self.data {
+            ShardData::F32(rows) => RowBlock::F32(&rows[base..base + len]),
+            ShardData::I8 { scales, codes } => RowBlock::I8 {
+                scales: &scales[start..start + n],
+                codes: &codes[base..base + len],
+            },
+        }
+    }
+
     /// Dot-product `query` against every row, calling `f(global_id,
     /// score)` per row.  The precision dispatch is hoisted out of the row
-    /// loop, and the int8 path fuses dequantization into the dot (one
-    /// multiply by the row scale after accumulation).
+    /// loop; both paths use the shared [`crate::vecops`] kernels, so
+    /// per-query scores match the batched tile scan bit for bit.
     pub fn for_each_score<F: FnMut(u32, f32)>(&self, query: &[f32], mut f: F) {
         assert_eq!(query.len(), self.dim);
         match &self.data {
             ShardData::F32(rows) => {
                 for (local, row) in rows.chunks_exact(self.dim).enumerate() {
-                    f((self.start_row + local) as u32, dot(row, query));
+                    f((self.start_row + local) as u32, vecops::dot(row, query));
                 }
             }
             ShardData::I8 { scales, codes } => {
                 for (local, row) in codes.chunks_exact(self.dim).enumerate() {
-                    let mut acc = 0.0f32;
-                    for (&q, &x) in row.iter().zip(query) {
-                        acc += q as f32 * x;
-                    }
-                    f((self.start_row + local) as u32, acc * scales[local]);
+                    f(
+                        (self.start_row + local) as u32,
+                        vecops::dot_i8(row, scales[local], query),
+                    );
                 }
             }
         }
@@ -225,25 +257,6 @@ impl Shard {
             ShardData::I8 { scales, codes } => scales.len() * 4 + codes.len(),
         }
     }
-}
-
-/// 4-way unrolled dot product (the serving hot loop).
-pub fn dot(a: &[f32], b: &[f32]) -> f32 {
-    debug_assert_eq!(a.len(), b.len());
-    let mut acc = [0.0f32; 4];
-    let chunks = a.len() / 4;
-    for i in 0..chunks {
-        let j = i * 4;
-        acc[0] += a[j] * b[j];
-        acc[1] += a[j + 1] * b[j + 1];
-        acc[2] += a[j + 2] * b[j + 2];
-        acc[3] += a[j + 3] * b[j + 3];
-    }
-    let mut s = acc[0] + acc[1] + acc[2] + acc[3];
-    for j in chunks * 4..a.len() {
-        s += a[j] * b[j];
-    }
-    s
 }
 
 /// Export a trained model as a sharded store directory.
@@ -702,10 +715,94 @@ mod tests {
     }
 
     #[test]
-    fn dot_matches_naive() {
-        let a: Vec<f32> = (0..19).map(|i| i as f32 * 0.1).collect();
-        let b: Vec<f32> = (0..19).map(|i| (19 - i) as f32 * 0.2).collect();
-        let naive: f32 = a.iter().zip(&b).map(|(x, y)| x * y).sum();
-        assert!((dot(&a, &b) - naive).abs() < 1e-4);
+    fn quantize_single_element_rows() {
+        let (scale, q) = quantize_row(&[3.5]);
+        assert_eq!(q.len(), 1);
+        let mut back = [0.0f32];
+        dequantize_into(scale, &q, &mut back);
+        assert!(back[0].is_finite());
+        assert!((back[0] - 3.5).abs() <= scale * 0.5 + 1e-6);
+
+        let (s0, q0) = quantize_row(&[0.0]);
+        assert_eq!(s0, 0.0);
+        assert_eq!(q0, vec![0]);
+        let mut z = [9.9f32];
+        dequantize_into(s0, &q0, &mut z);
+        assert_eq!(z, [0.0]);
+    }
+
+    #[test]
+    fn quantize_extreme_magnitudes_roundtrip_finite() {
+        // large (near-overflow) and subnormal-scale rows must both
+        // round-trip to finite values with the usual error bound
+        for mag in [1e37f32, 1e-38, 1e-42] {
+            let row = [mag, -mag, mag * 0.5, 0.0];
+            let (scale, q) = quantize_row(&row);
+            assert!(scale.is_finite() && scale >= 0.0, "mag={mag}");
+            let mut back = [0.0f32; 4];
+            dequantize_into(scale, &q, &mut back);
+            for (x, y) in row.iter().zip(&back) {
+                assert!(y.is_finite(), "mag={mag}: {y} not finite");
+                // a full quantum, not the usual half: at subnormal
+                // scales the rounding of `scale` itself can cost up to
+                // another half-quantum through the clamp
+                assert!(
+                    (x - y).abs() <= scale + mag.abs() * 1e-6,
+                    "mag={mag}: err {}",
+                    (x - y).abs()
+                );
+            }
+        }
+    }
+
+    /// The fused int8 dot must agree with dequantize-then-dot: the
+    /// quantized scan path never materializes f32 rows, so this is the
+    /// agreement the engine's quantized answers rest on.
+    #[test]
+    fn fused_i8_dot_agrees_with_dequantized_dot() {
+        let row: Vec<f32> =
+            (0..37).map(|i| ((i as f32) * 0.61).cos() * 1.3).collect();
+        let query: Vec<f32> =
+            (0..37).map(|i| ((i as f32) * 0.23).sin()).collect();
+        let (scale, q) = quantize_row(&row);
+        let mut deq = vec![0.0f32; row.len()];
+        dequantize_into(scale, &q, &mut deq);
+        let want = vecops::dot(&deq, &query);
+        let got = vecops::dot_i8(&q, scale, &query);
+        assert!(
+            (got - want).abs() <= want.abs() * 1e-5 + 1e-5,
+            "fused {got} vs dequantized {want}"
+        );
+    }
+
+    #[test]
+    fn row_block_views_match_row_into() {
+        let v = vocab(9);
+        let m = EmbeddingModel::init(9, 8, 4);
+        let dir = tmpdir("rowblock");
+        export_store(&m, &v, &dir, 2).unwrap();
+        for precision in [Precision::Exact, Precision::Quantized] {
+            let store = ShardedStore::open(&dir, precision).unwrap();
+            let shard = store.shard(0).unwrap();
+            let mut want = vec![0.0f32; shard.dim];
+            // a 2-row window into the middle of the shard
+            match shard.row_block(1, 2) {
+                RowBlock::F32(rows) => {
+                    assert_eq!(rows.len(), 2 * shard.dim);
+                    shard.row_into(1, &mut want);
+                    assert_eq!(&rows[..shard.dim], &want[..]);
+                    shard.row_into(2, &mut want);
+                    assert_eq!(&rows[shard.dim..], &want[..]);
+                }
+                RowBlock::I8 { scales, codes } => {
+                    assert_eq!(scales.len(), 2);
+                    assert_eq!(codes.len(), 2 * shard.dim);
+                    let mut got = vec![0.0f32; shard.dim];
+                    shard.row_into(1, &mut want);
+                    dequantize_into(scales[0], &codes[..shard.dim], &mut got);
+                    assert_eq!(got, want);
+                }
+            }
+        }
     }
 }

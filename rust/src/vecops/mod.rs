@@ -1,0 +1,398 @@
+//! Shared vector kernels: the single home of the f32/int8 hot loops.
+//!
+//! FULL-W2V's central claim is that W2V is memory-bound and the wins
+//! come from loading each vector **once** and reusing it across many
+//! interactions.  Every layer that scores or updates embedding rows —
+//! the serving scan (`serve::store` / `serve::ann`), the CPU training
+//! baselines (`cpu_baseline`), evaluation — funnels through this module,
+//! so there is exactly one implementation of each kernel to tune.
+//!
+//! Two kinds of kernel live here:
+//!
+//! * scalar-pair kernels: [`dot`] (8-way unrolled, auto-vectorizable),
+//!   [`dot_i8`] (fused int8 widening dot — the dequantize round-trip is
+//!   folded into the accumulation, one multiply by the row scale at the
+//!   end), [`dot_f64`] (f64 accumulation for evaluation), and [`axpy`].
+//! * tile kernels: [`tile_scores_f32`] / [`tile_scores_i8`] score a
+//!   block of Q query vectors against a block of R store rows.  Rows
+//!   stream through the kernel once; each loaded row element feeds
+//!   [`Q_TILE`] query accumulators held in registers, so memory traffic
+//!   is `O(R)` row loads with Q-way reuse instead of `O(Q x R)` — the
+//!   serving analogue of the paper's context-window reuse.
+//!
+//! **Bit-identity contract:** for the same row and query, the tile
+//! kernels produce *bit-identical* scores to [`dot`] / [`dot_i8`].  Each
+//! query lane inside the tile accumulates in exactly the order the
+//! scalar kernel uses, and IEEE-754 ops are deterministic, so batched
+//! and per-query scans rank identically — ties and all.  The
+//! `tile_matches_dot_bitwise` test pins this down; the batched-vs-
+//! per-query identity test in `rust/tests/serve_integration.rs` relies
+//! on it end to end.
+
+/// Queries scored per row pass inside the tile kernels (the register
+/// blocking factor).
+pub const Q_TILE: usize = 4;
+
+/// Rows per tile in batched shard scans: bounds the score scratch
+/// buffer (batch-size x `ROW_TILE` f32) while keeping the row block
+/// well past a cache line.
+pub const ROW_TILE: usize = 32;
+
+const LANES: usize = 8;
+
+/// Reduce one kernel's lane accumulators plus the unrolled tail.
+/// Shared by every f32/int8 kernel so their rounding is identical.
+#[inline(always)]
+fn reduce(acc: &[f32; LANES], tail: impl Iterator<Item = f32>) -> f32 {
+    let mut s = ((acc[0] + acc[4]) + (acc[1] + acc[5]))
+        + ((acc[2] + acc[6]) + (acc[3] + acc[7]));
+    for t in tail {
+        s += t;
+    }
+    s
+}
+
+/// 8-way unrolled f32 dot product.
+#[inline]
+pub fn dot(a: &[f32], b: &[f32]) -> f32 {
+    debug_assert_eq!(a.len(), b.len());
+    let mut acc = [0.0f32; LANES];
+    let chunks = a.len() / LANES;
+    for i in 0..chunks {
+        let j = i * LANES;
+        for l in 0..LANES {
+            acc[l] += a[j + l] * b[j + l];
+        }
+    }
+    let base = chunks * LANES;
+    reduce(&acc, (base..a.len()).map(|j| a[j] * b[j]))
+}
+
+/// Fused int8 widening dot: `scale * sum(codes[i] * x[i])`.  Skips the
+/// dequantize round-trip — codes widen to f32 inside the accumulation
+/// and the per-row scale is applied once at the end.
+#[inline]
+pub fn dot_i8(codes: &[i8], scale: f32, x: &[f32]) -> f32 {
+    debug_assert_eq!(codes.len(), x.len());
+    let mut acc = [0.0f32; LANES];
+    let chunks = codes.len() / LANES;
+    for i in 0..chunks {
+        let j = i * LANES;
+        for l in 0..LANES {
+            acc[l] += codes[j + l] as f32 * x[j + l];
+        }
+    }
+    let base = chunks * LANES;
+    reduce(&acc, (base..codes.len()).map(|j| codes[j] as f32 * x[j])) * scale
+}
+
+/// f64-accumulating dot over f32 slices, for evaluation paths where
+/// cancellation matters more than speed.
+#[inline]
+pub fn dot_f64(a: &[f32], b: &[f32]) -> f64 {
+    debug_assert_eq!(a.len(), b.len());
+    let mut acc = 0.0f64;
+    for (x, y) in a.iter().zip(b) {
+        acc += *x as f64 * *y as f64;
+    }
+    acc
+}
+
+/// `y += alpha * x`, 4-way unrolled.
+#[inline]
+pub fn axpy(alpha: f32, x: &[f32], y: &mut [f32]) {
+    debug_assert_eq!(x.len(), y.len());
+    let chunks = x.len() / 4;
+    for i in 0..chunks {
+        let j = i * 4;
+        y[j] += alpha * x[j];
+        y[j + 1] += alpha * x[j + 1];
+        y[j + 2] += alpha * x[j + 2];
+        y[j + 3] += alpha * x[j + 3];
+    }
+    for j in chunks * 4..x.len() {
+        y[j] += alpha * x[j];
+    }
+}
+
+/// Four dots sharing one pass over `a`: each element of `a` is loaded
+/// once and feeds all four query accumulators.  Every query lane
+/// accumulates in exactly [`dot`]'s order, so each result is
+/// bit-identical to `dot(a, b_t)`.
+#[inline]
+fn dot4(a: &[f32], b: [&[f32]; Q_TILE]) -> [f32; Q_TILE] {
+    let mut acc = [[0.0f32; LANES]; Q_TILE];
+    let chunks = a.len() / LANES;
+    for i in 0..chunks {
+        let j = i * LANES;
+        for l in 0..LANES {
+            let x = a[j + l];
+            for (t, bt) in b.iter().enumerate() {
+                acc[t][l] += x * bt[j + l];
+            }
+        }
+    }
+    let base = chunks * LANES;
+    let mut out = [0.0f32; Q_TILE];
+    for t in 0..Q_TILE {
+        out[t] =
+            reduce(&acc[t], (base..a.len()).map(|j| a[j] * b[t][j]));
+    }
+    out
+}
+
+/// Int8 sibling of [`dot4`]: each result is bit-identical to
+/// `dot_i8(codes, scale, b_t)`.
+#[inline]
+fn dot4_i8(codes: &[i8], scale: f32, b: [&[f32]; Q_TILE]) -> [f32; Q_TILE] {
+    let mut acc = [[0.0f32; LANES]; Q_TILE];
+    let chunks = codes.len() / LANES;
+    for i in 0..chunks {
+        let j = i * LANES;
+        for l in 0..LANES {
+            let x = codes[j + l] as f32;
+            for (t, bt) in b.iter().enumerate() {
+                acc[t][l] += x * bt[j + l];
+            }
+        }
+    }
+    let base = chunks * LANES;
+    let mut out = [0.0f32; Q_TILE];
+    for t in 0..Q_TILE {
+        out[t] = reduce(
+            &acc[t],
+            (base..codes.len()).map(|j| codes[j] as f32 * b[t][j]),
+        ) * scale;
+    }
+    out
+}
+
+fn check_tile_args(
+    n_rows: usize,
+    dim: usize,
+    queries: &[&[f32]],
+    out: &[f32],
+) {
+    assert!(dim > 0, "tile kernel needs a positive dim");
+    assert_eq!(out.len(), n_rows * queries.len(), "scores buffer size");
+    for q in queries {
+        assert_eq!(q.len(), dim, "query width mismatch");
+    }
+}
+
+/// Score a Q x R tile: every query in `queries` against every row of
+/// `rows` (R rows, row-major, `dim` wide).  `out[q * R + r]` receives
+/// `dot(row_r, query_q)`, bit-identical to the scalar kernel.
+///
+/// Rows are the streaming operand: each row is read once per
+/// [`Q_TILE`] queries with its elements held in registers across the
+/// query accumulators, so a batch of Q queries costs `O(R)` row loads
+/// instead of `O(Q x R)`.
+pub fn tile_scores_f32(
+    rows: &[f32],
+    dim: usize,
+    queries: &[&[f32]],
+    out: &mut [f32],
+) {
+    assert_eq!(rows.len() % dim.max(1), 0, "rows not a whole row count");
+    let n_rows = rows.len() / dim.max(1);
+    check_tile_args(n_rows, dim, queries, out);
+    for (r, row) in rows.chunks_exact(dim).enumerate() {
+        let mut qi = 0;
+        while qi + Q_TILE <= queries.len() {
+            let s = dot4(
+                row,
+                [
+                    queries[qi],
+                    queries[qi + 1],
+                    queries[qi + 2],
+                    queries[qi + 3],
+                ],
+            );
+            for (t, v) in s.into_iter().enumerate() {
+                out[(qi + t) * n_rows + r] = v;
+            }
+            qi += Q_TILE;
+        }
+        while qi < queries.len() {
+            out[qi * n_rows + r] = dot(row, queries[qi]);
+            qi += 1;
+        }
+    }
+}
+
+/// Int8 tile kernel: rows are `codes` (R x `dim` int8) with one f32
+/// scale per row; scores are bit-identical to [`dot_i8`].  Same reuse
+/// shape as [`tile_scores_f32`], at a quarter of the row traffic.
+pub fn tile_scores_i8(
+    codes: &[i8],
+    scales: &[f32],
+    dim: usize,
+    queries: &[&[f32]],
+    out: &mut [f32],
+) {
+    assert_eq!(codes.len() % dim.max(1), 0, "codes not a whole row count");
+    let n_rows = codes.len() / dim.max(1);
+    assert_eq!(scales.len(), n_rows, "one scale per row");
+    check_tile_args(n_rows, dim, queries, out);
+    for (r, row) in codes.chunks_exact(dim).enumerate() {
+        let scale = scales[r];
+        let mut qi = 0;
+        while qi + Q_TILE <= queries.len() {
+            let s = dot4_i8(
+                row,
+                scale,
+                [
+                    queries[qi],
+                    queries[qi + 1],
+                    queries[qi + 2],
+                    queries[qi + 3],
+                ],
+            );
+            for (t, v) in s.into_iter().enumerate() {
+                out[(qi + t) * n_rows + r] = v;
+            }
+            qi += Q_TILE;
+        }
+        while qi < queries.len() {
+            out[qi * n_rows + r] = dot_i8(row, scale, queries[qi]);
+            qi += 1;
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn seq(n: usize, f: impl Fn(usize) -> f32) -> Vec<f32> {
+        (0..n).map(f).collect()
+    }
+
+    #[test]
+    fn dot_matches_naive() {
+        for n in [0usize, 1, 3, 7, 8, 9, 19, 64, 65] {
+            let a = seq(n, |i| (i as f32 * 0.37).sin());
+            let b = seq(n, |i| ((n - i) as f32 * 0.21).cos());
+            let naive: f32 = a.iter().zip(&b).map(|(x, y)| x * y).sum();
+            assert!(
+                (dot(&a, &b) - naive).abs() < 1e-4,
+                "n={n}: {} vs {naive}",
+                dot(&a, &b)
+            );
+        }
+    }
+
+    #[test]
+    fn dot_i8_matches_dequantized_dot() {
+        for n in [1usize, 7, 8, 17, 64] {
+            let codes: Vec<i8> =
+                (0..n).map(|i| ((i * 37 + 11) % 255) as i8).collect();
+            let scale = 0.013f32;
+            let x = seq(n, |i| (i as f32 * 0.11).sin());
+            let deq: Vec<f32> =
+                codes.iter().map(|&c| c as f32 * scale).collect();
+            let want = dot(&deq, &x);
+            let got = dot_i8(&codes, scale, &x);
+            assert!(
+                (got - want).abs() <= want.abs() * 1e-5 + 1e-5,
+                "n={n}: fused {got} vs dequantized {want}"
+            );
+        }
+    }
+
+    #[test]
+    fn axpy_matches_naive() {
+        for n in [0usize, 1, 3, 4, 5, 13] {
+            let x = seq(n, |i| i as f32 + 1.0);
+            let mut y = seq(n, |i| -(i as f32));
+            let mut want = y.clone();
+            for (w, xv) in want.iter_mut().zip(&x) {
+                *w += 0.5 * xv;
+            }
+            axpy(0.5, &x, &mut y);
+            assert_eq!(y, want, "n={n}");
+        }
+    }
+
+    /// The contract the batched scan path stands on: tile scores are
+    /// bit-identical to the scalar kernels, for every query count mod
+    /// Q_TILE and for dims around the unroll width.
+    #[test]
+    fn tile_matches_dot_bitwise() {
+        for dim in [1usize, 5, 8, 16, 19] {
+            for nq in 1..=6usize {
+                let n_rows = 7;
+                let rows =
+                    seq(n_rows * dim, |i| ((i * 29 % 97) as f32) * 0.021 - 1.0);
+                let queries: Vec<Vec<f32>> = (0..nq)
+                    .map(|q| seq(dim, |i| ((q * 31 + i * 7) as f32).sin()))
+                    .collect();
+                let qrefs: Vec<&[f32]> =
+                    queries.iter().map(|q| q.as_slice()).collect();
+                let mut out = vec![0.0f32; nq * n_rows];
+                tile_scores_f32(&rows, dim, &qrefs, &mut out);
+                for (qi, q) in qrefs.iter().enumerate() {
+                    for (r, row) in rows.chunks_exact(dim).enumerate() {
+                        let want = dot(row, q);
+                        let got = out[qi * n_rows + r];
+                        assert_eq!(
+                            got.to_bits(),
+                            want.to_bits(),
+                            "dim={dim} nq={nq} q={qi} r={r}"
+                        );
+                    }
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn tile_i8_matches_dot_i8_bitwise() {
+        for dim in [1usize, 8, 11, 16] {
+            for nq in 1..=5usize {
+                let n_rows = 6;
+                let codes: Vec<i8> = (0..n_rows * dim)
+                    .map(|i| ((i * 53 + 7) % 255) as i8)
+                    .collect();
+                let scales = seq(n_rows, |r| 0.002 + r as f32 * 0.001);
+                let queries: Vec<Vec<f32>> = (0..nq)
+                    .map(|q| seq(dim, |i| ((q + 2 * i) as f32 * 0.3).cos()))
+                    .collect();
+                let qrefs: Vec<&[f32]> =
+                    queries.iter().map(|q| q.as_slice()).collect();
+                let mut out = vec![0.0f32; nq * n_rows];
+                tile_scores_i8(&codes, &scales, dim, &qrefs, &mut out);
+                for (qi, q) in qrefs.iter().enumerate() {
+                    for (r, row) in codes.chunks_exact(dim).enumerate() {
+                        let want = dot_i8(row, scales[r], q);
+                        let got = out[qi * n_rows + r];
+                        assert_eq!(
+                            got.to_bits(),
+                            want.to_bits(),
+                            "dim={dim} nq={nq} q={qi} r={r}"
+                        );
+                    }
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn tile_handles_empty_rows_and_queries() {
+        let mut out: Vec<f32> = Vec::new();
+        tile_scores_f32(&[], 4, &[], &mut out);
+        let q: &[f32] = &[1.0, 0.0, 0.0, 0.0];
+        tile_scores_f32(&[], 4, &[q], &mut out);
+        tile_scores_i8(&[], &[], 4, &[q], &mut out);
+    }
+
+    #[test]
+    fn dot_f64_matches_naive() {
+        let a = seq(9, |i| i as f32 * 0.5);
+        let b = seq(9, |i| (9 - i) as f32);
+        let naive: f64 =
+            a.iter().zip(&b).map(|(x, y)| *x as f64 * *y as f64).sum();
+        assert!((dot_f64(&a, &b) - naive).abs() < 1e-12);
+    }
+}

@@ -9,8 +9,8 @@
 use fullw2v::corpus::vocab::Vocab;
 use fullw2v::model::EmbeddingModel;
 use fullw2v::serve::{
-    export_store, search_rows, Precision, ServeEngine, ServeOptions,
-    ShardedStore,
+    export_store, search_rows, search_shard, search_shard_batch, BatchQuery,
+    Precision, ServeEngine, ServeOptions, ShardedStore, TopK,
 };
 use fullw2v::util::rng::Pcg32;
 use std::path::PathBuf;
@@ -207,6 +207,96 @@ fn neighbors_respect_planted_clusters() {
     );
     drop(client);
     engine.shutdown();
+}
+
+/// The tentpole's correctness anchor: scanning each shard once per
+/// batch (tile kernels, per-query heaps in one pass) returns *identical*
+/// top-k lists — ids, scores, tie order — to the per-query scan, at
+/// both store precisions.  Identity, not approximate agreement: the
+/// vecops tile kernels are bit-identical to the scalar kernels.
+#[test]
+fn batched_scan_matches_per_query_both_precisions() {
+    let model = clustered_model();
+    let dir = export("batchedscan", &model, 4);
+    for precision in [Precision::Exact, Precision::Quantized] {
+        let store = ShardedStore::open(&dir, precision).unwrap();
+        let dim = store.dim();
+        let k = 10;
+        let ids: Vec<u32> = (0..V as u32).step_by(3).collect();
+        // query with the store's own rows, read back at native precision
+        let mut qvecs: Vec<Vec<f32>> = Vec::new();
+        for &id in &ids {
+            let mut buf = vec![0.0f32; dim];
+            store.fetch_row(id, &mut buf).unwrap().unwrap();
+            qvecs.push(buf);
+        }
+        let queries: Vec<BatchQuery<'_>> = ids
+            .iter()
+            .zip(&qvecs)
+            .map(|(&id, v)| BatchQuery { vector: v, exclude: Some(id) })
+            .collect();
+
+        // batched path: every shard scanned once for the whole batch
+        let mut batched: Vec<TopK> =
+            ids.iter().map(|_| TopK::new(k)).collect();
+        for si in 0..store.num_shards() {
+            search_shard_batch(
+                store.shard(si).unwrap(),
+                &queries,
+                &mut batched,
+            );
+        }
+
+        // reference: one full scan per query
+        for ((id, v), topk) in ids.iter().zip(&qvecs).zip(batched) {
+            let mut per_query = TopK::new(k);
+            for si in 0..store.num_shards() {
+                search_shard(
+                    store.shard(si).unwrap(),
+                    v,
+                    Some(*id),
+                    &mut per_query,
+                );
+            }
+            assert_eq!(
+                topk.into_sorted(),
+                per_query.into_sorted(),
+                "{} query {id}: batched and per-query scans disagree",
+                precision.name()
+            );
+        }
+    }
+}
+
+/// Row traffic is accounted: a batch of B queries scans each row once,
+/// so rows-loaded-per-query can never exceed one full scan per query
+/// and shrinks as batches fill.
+#[test]
+fn engine_reports_row_traffic() {
+    let model = clustered_model();
+    let dir = export("rowtraffic", &model, 4);
+    let store =
+        Arc::new(ShardedStore::open(&dir, Precision::Exact).unwrap());
+    let engine = ServeEngine::start(store, ServeOptions::default());
+    let client = engine.client();
+    // pipelined burst so at least some queries share a batch
+    let pending: Vec<_> =
+        (0..32u32).map(|i| client.submit_id(i % V as u32, 5)).collect();
+    for rx in pending {
+        rx.recv().unwrap().unwrap();
+    }
+    drop(client);
+    let report = engine.shutdown();
+    assert_eq!(report.queries, 32);
+    assert!(
+        report.rows_scanned >= V as u64,
+        "at least one full scan must have happened"
+    );
+    assert!(
+        report.rows_scanned <= (32 * V) as u64,
+        "batched scanning can never exceed one full scan per query"
+    );
+    assert!(report.rows_loaded_per_query() <= V as f64 + 1e-9);
 }
 
 #[test]
