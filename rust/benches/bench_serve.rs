@@ -11,8 +11,8 @@
 use fullw2v::corpus::vocab::Vocab;
 use fullw2v::model::EmbeddingModel;
 use fullw2v::serve::{
-    export_store, zipf_ids, Precision, ServeEngine, ServeOptions,
-    ServeReport, ShardedStore,
+    export_store, export_store_clustered, zipf_ids, Precision, ServeEngine,
+    ServeOptions, ServeReport, ShardedStore,
 };
 use fullw2v::util::benchkit::{banner, bench};
 use fullw2v::util::tables::{f, Table};
@@ -179,6 +179,85 @@ fn main() {
         engine.shutdown();
     }
     print!("{}", t2.render());
+
+    // --- IVF coarse index: exhaustive vs probed ---
+    // rows/query comes from the engine's rows-scanned counter; recall@10
+    // compares each probed answer to the exhaustive (nprobe 0) answer on
+    // the same store.  nprobe 0 is the exact baseline by construction
+    // (recall 1), and rows/query should fall roughly with nprobe/clusters
+    // while recall decays gently — the sublinear-traffic trade the index
+    // buys.
+    let clusters = 64usize.min(rows);
+    let dir_ivf = store_dir("ivf");
+    export_store_clustered(&model, &vocab, &dir_ivf, 4, clusters).unwrap();
+    let no_cache = || ServeOptions {
+        cache_capacity: 0,
+        warm_cache: false,
+        ..ServeOptions::default()
+    };
+    let sample: Vec<u32> = ids.iter().copied().take(256).collect();
+    let truth: Vec<Vec<u32>> = {
+        let store =
+            Arc::new(ShardedStore::open(&dir_ivf, Precision::Exact).unwrap());
+        let engine = ServeEngine::start(store, no_cache());
+        let client = engine.client();
+        let t = sample
+            .iter()
+            .map(|&id| {
+                client
+                    .query_id(id, 10)
+                    .expect("valid query")
+                    .iter()
+                    .map(|n| n.id)
+                    .collect()
+            })
+            .collect();
+        drop(client);
+        engine.shutdown();
+        t
+    };
+    let mut t5 = Table::new(
+        &format!(
+            "IVF probe sweep ({clusters} clusters, 4 shards, exact, no cache)"
+        ),
+        &["nprobe", "rows_per_query", "scan_frac", "recall@10", "qps"],
+    );
+    for nprobe in [0usize, 4, 8, 16] {
+        let store =
+            Arc::new(ShardedStore::open(&dir_ivf, Precision::Exact).unwrap());
+        let engine = ServeEngine::start(
+            store,
+            ServeOptions { nprobe, ..no_cache() },
+        );
+        // rows/query comes from drive()'s report, taken *before* the
+        // recall probes below: those run as singleton batches and would
+        // contaminate the batched-workload traffic numbers
+        let (qps, report) = drive(&engine, &ids, 10);
+        let rpq = report.rows_loaded_per_query();
+        let client = engine.client();
+        let mut hit = 0usize;
+        let mut total = 0usize;
+        for (want, &id) in truth.iter().zip(&sample) {
+            let got: Vec<u32> = client
+                .query_id(id, 10)
+                .expect("valid query")
+                .iter()
+                .map(|n| n.id)
+                .collect();
+            total += want.len();
+            hit += want.iter().filter(|&&w| got.contains(&w)).count();
+        }
+        drop(client);
+        engine.shutdown();
+        t5.row(vec![
+            nprobe.to_string(),
+            f(rpq, 0),
+            f(rpq / rows as f64, 3),
+            f(hit as f64 / total.max(1) as f64, 3),
+            f(qps, 0),
+        ]);
+    }
+    print!("{}", t5.render());
 
     // --- precision: exact vs int8 ---
     let mut t3 = Table::new(

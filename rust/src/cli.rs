@@ -33,6 +33,8 @@ pub enum Command {
         /// Export a sharded serving store here after training.
         store: Option<String>,
         shards: usize,
+        /// IVF clusters for the exported store (0 = flat v1 store).
+        clusters: usize,
     },
     Eval {
         model: String,
@@ -49,6 +51,8 @@ pub enum Command {
         model: String,
         out: String,
         shards: usize,
+        /// IVF clusters to train at export (0 = flat v1 store).
+        clusters: usize,
     },
     Serve {
         store: String,
@@ -57,6 +61,8 @@ pub enum Command {
         quantized: bool,
         /// Max queries folded into one micro-batch (scan-reuse factor).
         batch: usize,
+        /// IVF probe width (0 = exact exhaustive scan).
+        nprobe: usize,
     },
     GenCorpus {
         spec: String,
@@ -76,11 +82,12 @@ USAGE:
 
 COMMANDS:
   train [--corpus FILE | --synthetic tiny|text8|1bw] [--out MODEL]
-        [--store DIR [--shards N]]
+        [--store DIR [--shards N] [--clusters C]]
   eval --model MODEL.txt --pairs PAIRS.tsv
   nn (--model MODEL.txt | --store DIR [--quantized]) --word WORD [--k K]
-  export-store --model MODEL.txt --out DIR [--shards N]
+  export-store --model MODEL.txt --out DIR [--shards N] [--clusters C]
   serve --store DIR --queries FILE [--k K] [--quantized] [--batch N]
+        [--nprobe P]
   gen-corpus --spec tiny|text8|1bw --out DIR
   gpusim
   manifest
@@ -117,7 +124,7 @@ pub fn parse(args: &[String]) -> Result<Cli> {
             "-q" | "--quiet" => log::set_level(Level::Error),
             "--corpus" | "--synthetic" | "--out" | "--model" | "--pairs"
             | "--word" | "--k" | "--spec" | "--store" | "--queries"
-            | "--shards" | "--batch" => {
+            | "--shards" | "--batch" | "--clusters" | "--nprobe" => {
                 let key = a.trim_start_matches('-').to_string();
                 opts.push((key, take_value(&mut i)?));
             }
@@ -158,6 +165,7 @@ pub fn parse(args: &[String]) -> Result<Cli> {
             out: get("out"),
             store: get("store"),
             shards: int_flag("shards", 4)?,
+            clusters: int_flag("clusters", 0)?,
         },
         "eval" => Command::Eval {
             model: get("model").ok_or_else(|| anyhow!("eval needs --model"))?,
@@ -190,6 +198,7 @@ pub fn parse(args: &[String]) -> Result<Cli> {
             out: get("out")
                 .ok_or_else(|| anyhow!("export-store needs --out"))?,
             shards: int_flag("shards", 4)?,
+            clusters: int_flag("clusters", 0)?,
         },
         "serve" => Command::Serve {
             store: get("store")
@@ -199,6 +208,7 @@ pub fn parse(args: &[String]) -> Result<Cli> {
             k: int_flag("k", 10)?,
             quantized: get("quantized").is_some(),
             batch: int_flag("batch", 32)?,
+            nprobe: int_flag("nprobe", 0)?,
         },
         "gen-corpus" => Command::GenCorpus {
             spec: get("spec").unwrap_or_else(|| "tiny".into()),
@@ -311,16 +321,18 @@ mod tests {
             Command::ExportStore {
                 model: "m.txt".into(),
                 out: "dir".into(),
-                shards: 8
+                shards: 8,
+                clusters: 0
             }
         );
         let cli =
             p(&["serve", "--store", "dir", "--queries", "q.txt"]).unwrap();
         match cli.command {
-            Command::Serve { k, quantized, batch, .. } => {
+            Command::Serve { k, quantized, batch, nprobe, .. } => {
                 assert_eq!(k, 10);
                 assert!(!quantized);
                 assert_eq!(batch, 32);
+                assert_eq!(nprobe, 0, "probing must be opt-in");
             }
             _ => panic!(),
         }
@@ -333,6 +345,52 @@ mod tests {
             Command::Serve { batch, .. } => assert_eq!(batch, 8),
             _ => panic!(),
         }
+    }
+
+    #[test]
+    fn ivf_flags_parse() {
+        let cli = p(&[
+            "export-store",
+            "--model",
+            "m.txt",
+            "--out",
+            "dir",
+            "--clusters",
+            "64",
+        ])
+        .unwrap();
+        match cli.command {
+            Command::ExportStore { clusters, shards, .. } => {
+                assert_eq!(clusters, 64);
+                assert_eq!(shards, 4);
+            }
+            _ => panic!(),
+        }
+        let cli = p(&[
+            "serve", "--store", "d", "--queries", "q", "--nprobe", "6",
+        ])
+        .unwrap();
+        match cli.command {
+            Command::Serve { nprobe, .. } => assert_eq!(nprobe, 6),
+            _ => panic!(),
+        }
+        let cli = p(&[
+            "train", "--synthetic", "tiny", "--store", "s", "--clusters", "8",
+        ])
+        .unwrap();
+        match cli.command {
+            Command::Train { clusters, .. } => assert_eq!(clusters, 8),
+            _ => panic!(),
+        }
+        // garbage numerics bail like every other int flag
+        assert!(p(&[
+            "serve", "--store", "d", "--queries", "q", "--nprobe", "x"
+        ])
+        .is_err());
+        assert!(p(&[
+            "export-store", "--model", "m", "--out", "d", "--clusters", "4.5"
+        ])
+        .is_err());
     }
 
     #[test]

@@ -103,23 +103,24 @@ fn run(cli: Cli) -> Result<()> {
             );
             Ok(())
         }
-        Command::Train { corpus, synthetic, out, store, shards } => {
-            train_cmd(cli.config, corpus, synthetic, out, store, shards)
+        Command::Train { corpus, synthetic, out, store, shards, clusters } => {
+            train_cmd(cli.config, corpus, synthetic, out, store, shards, clusters)
         }
         Command::Eval { model, pairs } => eval_cmd(&model, &pairs),
         Command::Nn { model, store, word, k, quantized } => match store {
             Some(dir) => nn_store_cmd(&dir, &word, k, quantized),
             None => nn_cmd(&model.expect("cli enforces one source"), &word, k),
         },
-        Command::ExportStore { model, out, shards } => {
-            export_store_cmd(&model, &out, shards)
+        Command::ExportStore { model, out, shards, clusters } => {
+            export_store_cmd(&model, &out, shards, clusters)
         }
-        Command::Serve { store, queries, k, quantized, batch } => {
-            serve_cmd(&store, &queries, k, quantized, batch)
+        Command::Serve { store, queries, k, quantized, batch, nprobe } => {
+            serve_cmd(&store, &queries, k, quantized, batch, nprobe)
         }
     }
 }
 
+#[allow(clippy::too_many_arguments)]
 fn train_cmd(
     cfg: Config,
     corpus: Option<String>,
@@ -127,6 +128,7 @@ fn train_cmd(
     out: Option<String>,
     store: Option<String>,
     shards: usize,
+    clusters: usize,
 ) -> Result<()> {
     let epochs = cfg.train.epochs;
     let (vocab, report, model) = match (corpus, synthetic) {
@@ -186,15 +188,20 @@ fn train_cmd(
         println!("model written to {path} (word2vec text format)");
     }
     if let Some(dir) = store {
-        let manifest = fullw2v::serve::export_store(
+        let manifest = fullw2v::serve::export_store_clustered(
             &model,
             &vocab,
             Path::new(&dir),
             shards,
+            clusters,
         )?;
         println!(
-            "serving store written to {dir} ({} shards, f32 + int8)",
-            manifest.shards.len()
+            "serving store written to {dir} ({} shards, f32 + int8{})",
+            manifest.shards.len(),
+            match &manifest.ivf {
+                Some(ivf) => format!(", {} IVF clusters", ivf.num_clusters()),
+                None => String::new(),
+            }
         );
     }
     Ok(())
@@ -300,7 +307,12 @@ fn nn_store_cmd(
     Ok(())
 }
 
-fn export_store_cmd(model_path: &str, out: &str, shards: usize) -> Result<()> {
+fn export_store_cmd(
+    model_path: &str,
+    out: &str,
+    shards: usize,
+    clusters: usize,
+) -> Result<()> {
     let (words, model) = EmbeddingModel::load_text(Path::new(model_path))?;
     // text models carry no counts; synthesize strictly-descending counts
     // so store ids keep the model's row order (= frequency rank)
@@ -309,13 +321,23 @@ fn export_store_cmd(model_path: &str, out: &str, shards: usize) -> Result<()> {
         words.into_iter().enumerate().map(|(i, w)| (w, n - i as u64)),
         1,
     );
-    let manifest =
-        fullw2v::serve::export_store(&model, &vocab, Path::new(out), shards)?;
+    let manifest = fullw2v::serve::export_store_clustered(
+        &model,
+        &vocab,
+        Path::new(out),
+        shards,
+        clusters,
+    )?;
     println!(
-        "store written to {out}: {} rows x {} dims in {} shards (f32 + int8)",
+        "store written to {out}: {} rows x {} dims in {} shards (f32 + int8{})",
         manifest.vocab_size,
         manifest.dim,
-        manifest.shards.len()
+        manifest.shards.len(),
+        match &manifest.ivf {
+            Some(ivf) =>
+                format!(", {} IVF clusters, format v2", ivf.num_clusters()),
+            None => String::new(),
+        }
     );
     Ok(())
 }
@@ -326,6 +348,7 @@ fn serve_cmd(
     k: usize,
     quantized: bool,
     batch: usize,
+    nprobe: usize,
 ) -> Result<()> {
     use fullw2v::serve::{ServeEngine, ServeOptions, ShardedStore};
     let dir = Path::new(store_dir);
@@ -334,7 +357,7 @@ fn serve_cmd(
     let vocab = load_store_vocab(dir, &store)?;
     let engine = ServeEngine::start(
         store,
-        ServeOptions { batch_max: batch, ..ServeOptions::default() },
+        ServeOptions { batch_max: batch, nprobe, ..ServeOptions::default() },
     );
     let client = engine.client();
 

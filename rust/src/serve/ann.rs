@@ -11,9 +11,15 @@
 //! [`crate::vecops`] tile kernels with batch-way reuse.
 //! [`search_shard`] is the per-query path, kept as the reference the
 //! batched scan is tested against (and for single-query callers).
+//! [`search_shards_batch_ranges`] is the IVF-probed mode: the same tile
+//! machinery restricted to a probe plan's row ranges, so row traffic
+//! goes sublinear in vocabulary size (see [`super::ivf`]).
 //!
 //! Ordering is fully deterministic: ties in score break toward the
-//! smaller word id, in both the heap and the final sort.
+//! smaller word id, in both the heap and the final sort.  For cluster-
+//! reordered (v2) stores the reported ids go through the shard's
+//! row→id permutation, so tie order is still by word id, not by row
+//! position.
 
 use super::store::{RowBlock, Shard};
 use crate::vecops::{self, ROW_TILE};
@@ -181,24 +187,71 @@ pub fn search_shards_batch<'s>(
     let mut scores = vec![0.0f32; queries.len() * ROW_TILE];
     let mut rows_scanned = 0u64;
     for shard in shards {
-        scan_shard_tiles(shard, &vectors, queries, topks, &mut scores);
+        scan_shard_tiles(shard, 0, shard.rows, &vectors, queries, topks, &mut scores);
         rows_scanned += shard.rows as u64;
     }
     rows_scanned
 }
 
-/// One shard's tile loop (shared by the single- and multi-shard entry
-/// points); `scores` is the caller's `queries.len() * ROW_TILE` scratch.
+/// IVF-probed batched scan: like [`search_shards_batch`], but only the
+/// global row `ranges` (sorted, disjoint — a probe plan's cluster
+/// lists, see [`super::ivf::plan_probes`]) are touched, clipped to each
+/// shard's span.  Cluster lists are contiguous row blocks in a v2
+/// store, so they stream through the same tile kernels with the same
+/// batch-way reuse; rows outside the plan are never loaded, which is
+/// what takes per-query row traffic below vocabulary size.  Returns the
+/// number of rows scanned.
+pub fn search_shards_batch_ranges<'s>(
+    shards: impl IntoIterator<Item = &'s Shard>,
+    ranges: &[(usize, usize)],
+    queries: &[BatchQuery<'_>],
+    topks: &mut [TopK],
+) -> u64 {
+    assert_eq!(queries.len(), topks.len(), "one heap per query");
+    if queries.is_empty() || ranges.is_empty() {
+        return 0;
+    }
+    let vectors: Vec<&[f32]> = queries.iter().map(|q| q.vector).collect();
+    let mut scores = vec![0.0f32; queries.len() * ROW_TILE];
+    let mut rows_scanned = 0u64;
+    for shard in shards {
+        let s0 = shard.start_row;
+        let s1 = s0 + shard.rows;
+        for &(r0, rlen) in ranges {
+            let r1 = r0.saturating_add(rlen);
+            if r1 <= s0 {
+                continue;
+            }
+            if r0 >= s1 {
+                break; // ranges are sorted: nothing further overlaps
+            }
+            let lo = r0.max(s0) - s0;
+            let hi = r1.min(s1) - s0;
+            scan_shard_tiles(
+                shard, lo, hi - lo, &vectors, queries, topks, &mut scores,
+            );
+            rows_scanned += (hi - lo) as u64;
+        }
+    }
+    rows_scanned
+}
+
+/// One shard's tile loop over local rows `[from, from + len)` (shared
+/// by the exhaustive and probed entry points); `scores` is the caller's
+/// `queries.len() * ROW_TILE` scratch.
 fn scan_shard_tiles(
     shard: &Shard,
+    from: usize,
+    len: usize,
     vectors: &[&[f32]],
     queries: &[BatchQuery<'_>],
     topks: &mut [TopK],
     scores: &mut [f32],
 ) {
-    let mut start = 0usize;
-    while start < shard.rows {
-        let n = ROW_TILE.min(shard.rows - start);
+    let end = from + len; // row_block re-checks bounds per tile
+    let mut start = from;
+    while start < end {
+        let n = ROW_TILE.min(end - start);
         let tile = &mut scores[..queries.len() * n];
         match shard.row_block(start, n) {
             RowBlock::F32(rows) => {
@@ -208,21 +261,37 @@ fn scan_shard_tiles(
                 vecops::tile_scores_i8(codes, scales, shard.dim, vectors, tile);
             }
         }
+        // flat stores derive ids from the row position; reordered (v2)
+        // stores read the permutation — dispatch hoisted out of the
+        // row loop like the precision match above
+        let ids = shard.ids_block(start, n);
         let base = (shard.start_row + start) as u32;
         for ((q, topk), row_scores) in
             queries.iter().zip(topks.iter_mut()).zip(tile.chunks_exact(n))
         {
-            match q.exclude {
-                None => {
+            match (q.exclude, ids) {
+                (None, None) => {
                     for (r, &s) in row_scores.iter().enumerate() {
                         topk.consider(base + r as u32, s);
                     }
                 }
-                Some(x) => {
+                (Some(x), None) => {
                     for (r, &s) in row_scores.iter().enumerate() {
                         let id = base + r as u32;
                         if id != x {
                             topk.consider(id, s);
+                        }
+                    }
+                }
+                (None, Some(ids)) => {
+                    for (r, &s) in row_scores.iter().enumerate() {
+                        topk.consider(ids[r], s);
+                    }
+                }
+                (Some(x), Some(ids)) => {
+                    for (r, &s) in row_scores.iter().enumerate() {
+                        if ids[r] != x {
+                            topk.consider(ids[r], s);
                         }
                     }
                 }

@@ -17,8 +17,12 @@
 //! Per-request latency (enqueue to reply) and cache traffic are recorded
 //! and summarized as a [`ServeReport`] via [`crate::metrics::LatencyStats`].
 
-use super::ann::{search_shards_batch, BatchQuery, Neighbor, TopK};
+use super::ann::{
+    search_shards_batch, search_shards_batch_ranges, BatchQuery, Neighbor,
+    TopK,
+};
 use super::cache::HotCache;
+use super::ivf;
 use super::store::ShardedStore;
 use crate::metrics::LatencyStats;
 use crate::util::json::{obj, Json};
@@ -44,6 +48,13 @@ pub struct ServeOptions {
     pub protected_rows: usize,
     /// Pre-load the protected head at startup.
     pub warm_cache: bool,
+    /// IVF probe width: each batch scans only the union of its queries'
+    /// top-`nprobe` cluster lists (sublinear row traffic, approximate
+    /// results; an aggressive setting can return fewer than `k`
+    /// neighbors when the probed union holds fewer than `k` rows).
+    /// `0` keeps the exact exhaustive scan; a store without an index
+    /// (flat v1 export) also falls back to exhaustive.
+    pub nprobe: usize,
 }
 
 impl Default for ServeOptions {
@@ -55,6 +66,7 @@ impl Default for ServeOptions {
             cache_capacity: 4096,
             protected_rows: 512,
             warm_cache: true,
+            nprobe: 0,
         }
     }
 }
@@ -92,6 +104,9 @@ struct ResolvedQuery {
 
 struct BatchJob {
     queries: Vec<ResolvedQuery>,
+    /// IVF probe plan for this batch (sorted global row ranges);
+    /// `None` scans exhaustively.
+    ranges: Option<Vec<(usize, usize)>>,
 }
 
 /// Per-batch worker outcome: partial heaps plus rows scanned (the
@@ -108,6 +123,10 @@ struct EngineShared {
     /// Store rows scanned across all workers (a batch of B queries
     /// scans each row once, not B times).
     rows_scanned: AtomicU64,
+    /// Batches that went through an IVF probe plan (vs exhaustive).
+    probed_batches: AtomicU64,
+    /// Total clusters in those batches' probe unions.
+    clusters_probed: AtomicU64,
     /// Serving window, as nanos since engine start: set at the first
     /// batch's start and advanced past each batch's end, so reported QPS
     /// covers time actually spent serving, not engine lifetime.
@@ -125,6 +144,8 @@ impl Default for EngineShared {
             cache_misses: AtomicU64::new(0),
             cache_evictions: AtomicU64::new(0),
             rows_scanned: AtomicU64::new(0),
+            probed_batches: AtomicU64::new(0),
+            clusters_probed: AtomicU64::new(0),
             window_first_ns: AtomicU64::new(u64::MAX),
             window_last_ns: AtomicU64::new(0),
         }
@@ -160,6 +181,17 @@ pub struct ServeReport {
     pub shards: usize,
     pub loaded_shards: usize,
     pub precision: String,
+    /// Configured probe width (0 = exhaustive scans).
+    pub nprobe: usize,
+    /// IVF clusters in the store's index (0 = no index / flat store).
+    pub clusters: usize,
+    /// Batches served through a probe plan, and the total clusters in
+    /// their probe unions — the recall-side accounting: together with
+    /// `rows_scanned` they say how much of the store each answer
+    /// actually consulted (recall@k itself is measured against the
+    /// exhaustive scan, e.g. in `bench_serve`).
+    pub probed_batches: u64,
+    pub clusters_probed: u64,
 }
 
 impl ServeReport {
@@ -184,12 +216,22 @@ impl ServeReport {
     /// Shard rows loaded per answered query.  A per-query scan pays
     /// the full row count for every query; the batched scan pays it
     /// once per batch, so this approaches `rows / batch_fill` — the
-    /// data-reuse factor, measured rather than asserted.
+    /// data-reuse factor, measured rather than asserted.  With probing
+    /// it drops further, below the vocabulary size itself.
     pub fn rows_loaded_per_query(&self) -> f64 {
         if self.queries == 0 {
             0.0
         } else {
             self.rows_scanned as f64 / self.queries as f64
+        }
+    }
+
+    /// Mean clusters in a probed batch's union (0 when exhaustive).
+    pub fn mean_clusters_probed(&self) -> f64 {
+        if self.probed_batches == 0 {
+            0.0
+        } else {
+            self.clusters_probed as f64 / self.probed_batches as f64
         }
     }
 
@@ -210,14 +252,30 @@ impl ServeReport {
             ("shards", Json::Num(self.shards as f64)),
             ("loaded_shards", Json::Num(self.loaded_shards as f64)),
             ("precision", Json::Str(self.precision.clone())),
+            ("nprobe", Json::Num(self.nprobe as f64)),
+            ("clusters", Json::Num(self.clusters as f64)),
+            ("probed_batches", Json::Num(self.probed_batches as f64)),
+            (
+                "mean_clusters_probed",
+                Json::Num(self.mean_clusters_probed()),
+            ),
         ])
     }
 
     /// One-line human summary for CLI/example output.
     pub fn summary(&self) -> String {
+        let probe = if self.nprobe > 0 && self.clusters > 0 {
+            format!(
+                " | probe {:.1}/{} clusters",
+                self.mean_clusters_probed(),
+                self.clusters
+            )
+        } else {
+            String::new()
+        };
         format!(
             "{} queries in {} batches (fill {:.1}) | p50 {:.0}us p99 {:.0}us \
-             {:.0} qps | cache hit {:.0}% | {:.0} rows/query | {}/{} shards \
+             {:.0} qps | cache hit {:.0}% | {:.0} rows/query{} | {}/{} shards \
              loaded ({})",
             self.queries,
             self.batches,
@@ -227,6 +285,7 @@ impl ServeReport {
             self.latency.qps,
             100.0 * self.cache_hit_rate(),
             self.rows_loaded_per_query(),
+            probe,
             self.loaded_shards,
             self.shards,
             self.precision,
@@ -291,6 +350,7 @@ pub struct ServeEngine {
     shared: Arc<EngineShared>,
     store: Arc<ShardedStore>,
     workers: usize,
+    nprobe: usize,
 }
 
 impl ServeEngine {
@@ -310,6 +370,7 @@ impl ServeEngine {
         let (tx, rx) = sync_channel::<Msg>(queue_depth);
         let shared = Arc::new(EngineShared::default());
         let epoch = Instant::now();
+        let nprobe = opts.nprobe;
         let dispatcher = {
             let store = store.clone();
             let shared = shared.clone();
@@ -326,6 +387,7 @@ impl ServeEngine {
             shared,
             store,
             workers,
+            nprobe,
         }
     }
 
@@ -336,7 +398,18 @@ impl ServeEngine {
     /// Snapshot of the metrics so far.  QPS is computed over the serving
     /// window (first batch start to last batch end), not engine lifetime.
     pub fn report(&self) -> ServeReport {
-        let samples = self.shared.latencies.lock().unwrap().clone();
+        // bounded snapshot: the reservoir holds up to 2^20 samples and
+        // the dispatcher takes this lock on every batch, so report()
+        // must not clone the whole buffer while holding it.  A strided
+        // subsample of a uniform reservoir is itself uniform (slice
+        // iterators skip in O(1)), so quantiles stay representative at
+        // O(SNAPSHOT_CAP) work and copy under the lock.
+        const SNAPSHOT_CAP: usize = 4096;
+        let samples: Vec<u64> = {
+            let lat = self.shared.latencies.lock().unwrap();
+            let step = lat.len().div_ceil(SNAPSHOT_CAP).max(1);
+            lat.iter().step_by(step).copied().collect()
+        };
         let wall = self.shared.window_seconds();
         let queries = self.shared.queries.load(Ordering::Relaxed);
         let mut latency = LatencyStats::from_nanos(&samples, wall);
@@ -360,6 +433,20 @@ impl ServeEngine {
             shards: self.store.num_shards(),
             loaded_shards: self.store.loaded_shards(),
             precision: self.store.precision().name().to_string(),
+            nprobe: self.nprobe,
+            clusters: self
+                .store
+                .ivf()
+                .map(|m| m.num_clusters())
+                .unwrap_or(0),
+            probed_batches: self
+                .shared
+                .probed_batches
+                .load(Ordering::Relaxed),
+            clusters_probed: self
+                .shared
+                .clusters_probed
+                .load(Ordering::Relaxed),
         }
     }
 
@@ -461,6 +548,7 @@ fn dispatch_loop(
     let mut sample_rng = crate::util::rng::SplitMix64::new(0x5EED_CAFE);
     let mut lat_seen: u64 = 0;
 
+    let mut warned_no_index = false;
     let mut stopping = false;
     while !stopping {
         let first = match rx.recv() {
@@ -501,7 +589,41 @@ fn dispatch_loop(
 
         let mut results: Vec<Option<QueryResponse>> = Vec::new();
         if !resolved.is_empty() {
-            let job = Arc::new(BatchJob { queries: resolved });
+            // IVF probe plan for the batch: score every query against
+            // the centroid table once, take the union of their
+            // top-nprobe cluster lists.  Stores without an index (flat
+            // v1 exports) serve exhaustively.
+            let mut ranges = None;
+            if opts.nprobe > 0 {
+                match store.ivf() {
+                    Some(meta) => {
+                        let qrefs: Vec<&[f32]> =
+                            resolved.iter().map(|q| &q.vector[..]).collect();
+                        let plan = ivf::plan_probes(
+                            meta,
+                            store.dim(),
+                            &qrefs,
+                            opts.nprobe,
+                        );
+                        shared.probed_batches.fetch_add(1, Ordering::Relaxed);
+                        shared
+                            .clusters_probed
+                            .fetch_add(plan.clusters_probed as u64, Ordering::Relaxed);
+                        ranges = Some(plan.ranges);
+                    }
+                    None => {
+                        if !warned_no_index {
+                            warned_no_index = true;
+                            crate::log_warn!(
+                                "serve: nprobe set but the store has no IVF \
+                                 index (flat v1 export?); scanning \
+                                 exhaustively"
+                            );
+                        }
+                    }
+                }
+            }
+            let job = Arc::new(BatchJob { queries: resolved, ranges });
             let mut sent = vec![false; links.len()];
             for (link, s) in links.iter().zip(sent.iter_mut()) {
                 *s = link.job_tx.send(job.clone()).is_ok();
@@ -605,6 +727,15 @@ fn resolve(
 ) -> Result<(Arc<[f32]>, Option<u32>), String> {
     match kind {
         QueryKind::ById(id) => {
+            // range-check before the cache: a malformed id counted as a
+            // cache miss would deflate the reported hit rate under bad
+            // traffic
+            if id as usize >= store.vocab_size() {
+                return Err(format!(
+                    "row id {id} out of range (vocab {})",
+                    store.vocab_size()
+                ));
+            }
             // a hit is an Arc clone of the resident row — no copy
             if let Some(row) = cache.get(id) {
                 return Ok((row, Some(id)));
@@ -616,6 +747,7 @@ fn resolve(
                     cache.insert(id, row.clone());
                     Ok((row, Some(id)))
                 }
+                // unreachable after the range check, kept as defense
                 Ok(None) => Err(format!(
                     "row id {id} out of range (vocab {})",
                     store.vocab_size()
@@ -650,7 +782,9 @@ fn resolve(
 }
 
 /// Worker body: scan shards [lo, hi) **once** for the whole batch —
-/// every query's heap advances in the same pass over each shard.
+/// every query's heap advances in the same pass over each shard.  With
+/// a probe plan, only the plan's row ranges (clipped to this worker's
+/// shards) are touched.
 fn scan_range(
     store: &ShardedStore,
     lo: usize,
@@ -667,8 +801,15 @@ fn scan_range(
     let shards = (lo..hi)
         .map(|si| store.shard(si).map_err(|e| format!("{e:#}")))
         .collect::<Result<Vec<_>, _>>()?;
-    let rows_scanned =
-        search_shards_batch(shards.into_iter(), &queries, &mut parts);
+    let rows_scanned = match &job.ranges {
+        Some(ranges) => search_shards_batch_ranges(
+            shards.into_iter(),
+            ranges,
+            &queries,
+            &mut parts,
+        ),
+        None => search_shards_batch(shards.into_iter(), &queries, &mut parts),
+    };
     Ok((parts, rows_scanned))
 }
 
@@ -702,6 +843,7 @@ mod tests {
             cache_capacity: 16,
             protected_rows: 4,
             warm_cache: true,
+            nprobe: 0,
         }
     }
 
@@ -766,6 +908,15 @@ mod tests {
         let engine = ServeEngine::start(store, opts());
         let client = engine.client();
         assert!(client.query_id(10, 3).is_err()); // out of range
+        assert!(client.query_id(u32::MAX, 3).is_err());
+        // malformed ids are range-checked *before* the cache tier, so
+        // they must not register as misses and skew the hit rate
+        let stats = engine.report();
+        assert_eq!(
+            (stats.cache_hits, stats.cache_misses),
+            (0, 0),
+            "out-of-range ids must leave cache stats untouched"
+        );
         assert!(client.query_vector(vec![0.0; 4], 3).is_err()); // zero
         assert!(client.query_vector(vec![1.0; 3], 3).is_err()); // bad dim
         // non-finite vectors are rejected, not served as NaN scores
@@ -810,6 +961,68 @@ mod tests {
         drop(engine);
         // ...and the orphaned client fails cleanly afterwards
         assert!(client.query_id(1, 2).is_err());
+    }
+
+    /// report() under live traffic: must never deadlock against the
+    /// dispatcher (the latency lock is taken every batch), must stay
+    /// monotonic, and must keep count consistent with queries even
+    /// though quantiles come from a bounded snapshot.
+    #[test]
+    fn report_under_concurrent_load_is_consistent() {
+        let (_, dir) = setup("reportload", 40, 8);
+        let store =
+            Arc::new(ShardedStore::open(&dir, Precision::Exact).unwrap());
+        let engine = ServeEngine::start(store, opts());
+        std::thread::scope(|s| {
+            for t in 0..3u32 {
+                let client = engine.client();
+                s.spawn(move || {
+                    for i in 0..60u32 {
+                        client.query_id((i * 3 + t) % 40, 3).unwrap();
+                    }
+                });
+            }
+            let mut last = 0u64;
+            for _ in 0..50 {
+                let r = engine.report();
+                assert!(r.queries >= last, "query count went backwards");
+                last = r.queries;
+                assert_eq!(r.latency.count, r.queries);
+                assert!(r.latency.p50_us <= r.latency.p99_us + 1e-9);
+            }
+        });
+        let report = engine.shutdown();
+        assert_eq!(report.queries, 180);
+        assert_eq!(report.latency.count, 180);
+    }
+
+    /// A flat (v1) store asked to probe serves exhaustively — correct
+    /// answers, zero probed batches — instead of erroring out.
+    #[test]
+    fn nprobe_on_flat_store_falls_back_to_exhaustive() {
+        let (model, dir) = setup("flatprobe", 20, 8);
+        let store =
+            Arc::new(ShardedStore::open(&dir, Precision::Exact).unwrap());
+        assert!(store.ivf().is_none());
+        let engine = ServeEngine::start(
+            store,
+            ServeOptions { nprobe: 4, ..opts() },
+        );
+        let client = engine.client();
+        let rows = model.normalized_rows();
+        let got = client.query_id(3, 5).unwrap();
+        let want = search_rows(&rows, 8, &rows[3 * 8..4 * 8], 5, Some(3));
+        assert_eq!(
+            got.iter().map(|n| n.id).collect::<Vec<_>>(),
+            want.iter().map(|n| n.id).collect::<Vec<_>>()
+        );
+        drop(client);
+        let report = engine.shutdown();
+        assert_eq!(report.nprobe, 4);
+        assert_eq!(report.clusters, 0);
+        assert_eq!(report.probed_batches, 0);
+        // full exhaustive scan: one query, all 20 rows
+        assert_eq!(report.rows_scanned, 20);
     }
 
     #[test]

@@ -1,0 +1,692 @@
+//! IVF coarse index: a k-means quantizer over the store's normalized
+//! rows, turning the exhaustive shard scan sublinear in vocabulary size.
+//!
+//! The batched tile scan (PR 2) made each row load pay for a whole
+//! micro-batch, but every query still touched every row — per-query row
+//! traffic floors at `rows / batch_fill`.  The matrix-blocking line of
+//! work (Ji et al.) shows the batching trick composes with restricting
+//! *which* rows are touched; this module is that restriction for the
+//! serving side:
+//!
+//! * at `export-store`, [`train_kmeans`] runs plain Lloyd iterations
+//!   (spherical: rows and centroids are L2-normalized, assignment is
+//!   argmax dot) through the existing [`crate::vecops`] tile kernels,
+//!   and [`build_layout`] reorders the store's rows by cluster so each
+//!   cluster's inverted list is a **contiguous row block**;
+//! * the manifest (format v2) persists the centroid table, per-cluster
+//!   row ranges, and the row→id permutation as an [`IvfMeta`];
+//! * at query time [`plan_probes`] scores the whole micro-batch against
+//!   the centroid table with one [`crate::vecops::tile_scores_f32`]
+//!   pass and returns the union of the batch's top-`nprobe` cluster
+//!   lists as sorted, coalesced row ranges — which the batched scan
+//!   walks through the same `RowBlock` tile path, unchanged.
+//!
+//! In the paper's tier vocabulary the centroid table is the shared-
+//! memory analogue: a small, hot working set consulted on every batch
+//! so that trips to the HBM tier (the shards) only touch the probed
+//! fraction of rows.
+//!
+//! Seeding is greedy farthest-point ("k-center") traversal, which is
+//! deterministic given the seed and guarantees well-separated planted
+//! clusters each receive a centroid — random seeding can collapse two
+//! blobs into one cell, which quietly doubles probe traffic.
+
+use super::ann::TopK;
+use crate::util::json::{obj, Json};
+use crate::util::rng::Pcg32;
+use crate::vecops;
+use anyhow::{anyhow, bail, Result};
+use std::sync::Arc;
+
+/// Lloyd iterations run at export; assignment converges much earlier on
+/// clusterable data (the loop exits on a fixed point).
+pub const DEFAULT_KMEANS_ITERS: usize = 12;
+
+/// Rows/queries scored per centroid-table pass (bounds the tile
+/// scratch, same role as `ROW_TILE` in the shard scan).
+const ASSIGN_CHUNK: usize = 32;
+
+/// One cluster's contiguous row range in the cluster-reordered store.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct ClusterRange {
+    pub start_row: usize,
+    pub rows: usize,
+}
+
+/// The persisted coarse index: centroid table, per-cluster row ranges,
+/// and the row→original-id permutation (`row_ids[new_row] = id`).
+#[derive(Debug, Clone, PartialEq)]
+pub struct IvfMeta {
+    pub clusters: Vec<ClusterRange>,
+    /// `clusters.len() * dim` f32, row-major, L2-normalized.
+    pub centroids: Vec<f32>,
+    /// Original word id of each reordered store row.  Shared (`Arc`)
+    /// because the store hands the same table to every loaded shard —
+    /// one vocab-sized allocation per store, not per shard.
+    pub row_ids: Arc<[u32]>,
+}
+
+impl IvfMeta {
+    pub fn num_clusters(&self) -> usize {
+        self.clusters.len()
+    }
+
+    /// Inverse permutation: `row_of[id] = reordered row`.
+    pub fn row_of_ids(&self) -> Vec<u32> {
+        let mut inv = vec![0u32; self.row_ids.len()];
+        for (row, &id) in self.row_ids.iter().enumerate() {
+            inv[id as usize] = row as u32;
+        }
+        inv
+    }
+
+    /// Structural validation against the owning manifest: cluster ranges
+    /// must tile `[0, vocab_size)` contiguously, the permutation must be
+    /// a bijection on ids, and the centroid table must be finite and
+    /// exactly `clusters x dim` — all with checked arithmetic, since a
+    /// manifest is attacker-controllable input.
+    pub fn validate(&self, vocab_size: usize, dim: usize) -> Result<()> {
+        if self.clusters.is_empty() {
+            bail!("ivf index has no clusters");
+        }
+        let k = self.clusters.len();
+        let want = k
+            .checked_mul(dim)
+            .ok_or_else(|| anyhow!("ivf centroid table size overflows"))?;
+        if self.centroids.len() != want {
+            bail!(
+                "ivf has {} centroid values, expected {k} x {dim}",
+                self.centroids.len()
+            );
+        }
+        if self.centroids.iter().any(|c| !c.is_finite()) {
+            bail!("ivf centroid table contains non-finite values");
+        }
+        let mut next = 0usize;
+        for (c, r) in self.clusters.iter().enumerate() {
+            if r.start_row != next {
+                bail!("cluster {c} starts at {} expected {next}", r.start_row);
+            }
+            next = next
+                .checked_add(r.rows)
+                .ok_or_else(|| anyhow!("cluster row counts overflow"))?;
+        }
+        if next != vocab_size {
+            bail!("clusters cover {next} rows, vocab is {vocab_size}");
+        }
+        if self.row_ids.len() != vocab_size {
+            bail!(
+                "row permutation has {} entries, vocab is {vocab_size}",
+                self.row_ids.len()
+            );
+        }
+        let mut seen = vec![false; vocab_size];
+        for &id in self.row_ids.iter() {
+            match seen.get_mut(id as usize) {
+                Some(s) if !*s => *s = true,
+                Some(_) => bail!("row permutation repeats id {id}"),
+                None => bail!("row permutation id {id} out of range"),
+            }
+        }
+        Ok(())
+    }
+
+    pub fn to_json(&self) -> Json {
+        obj(vec![
+            (
+                "clusters",
+                Json::Arr(
+                    self.clusters
+                        .iter()
+                        .map(|c| {
+                            obj(vec![
+                                ("start_row", Json::Num(c.start_row as f64)),
+                                ("rows", Json::Num(c.rows as f64)),
+                            ])
+                        })
+                        .collect(),
+                ),
+            ),
+            (
+                "centroids",
+                Json::Arr(
+                    // f32 -> f64 -> text -> f64 -> f32 round-trips exactly
+                    self.centroids
+                        .iter()
+                        .map(|&x| Json::Num(x as f64))
+                        .collect(),
+                ),
+            ),
+            (
+                "row_ids",
+                Json::Arr(
+                    self.row_ids
+                        .iter()
+                        .map(|&x| Json::Num(x as f64))
+                        .collect(),
+                ),
+            ),
+        ])
+    }
+
+    pub fn from_json(j: &Json) -> Result<IvfMeta> {
+        let arr = |key: &str| {
+            j.get(key)
+                .and_then(Json::as_arr)
+                .ok_or_else(|| anyhow!("ivf missing '{key}'"))
+        };
+        let clusters = arr("clusters")?
+            .iter()
+            .map(|c| -> Result<ClusterRange> {
+                let f = |key: &str| {
+                    c.get(key)
+                        .and_then(Json::as_usize)
+                        .ok_or_else(|| anyhow!("ivf cluster missing '{key}'"))
+                };
+                Ok(ClusterRange { start_row: f("start_row")?, rows: f("rows")? })
+            })
+            .collect::<Result<Vec<_>>>()?;
+        let centroids = arr("centroids")?
+            .iter()
+            .map(|x| {
+                x.as_f64()
+                    .map(|n| n as f32)
+                    .ok_or_else(|| anyhow!("ivf centroid is not a number"))
+            })
+            .collect::<Result<Vec<_>>>()?;
+        let row_ids = arr("row_ids")?
+            .iter()
+            .map(|x| {
+                x.as_usize()
+                    .and_then(|n| u32::try_from(n).ok())
+                    .ok_or_else(|| anyhow!("ivf row id is not a valid id"))
+            })
+            .collect::<Result<Vec<_>>>()?;
+        Ok(IvfMeta { clusters, centroids, row_ids: row_ids.into() })
+    }
+}
+
+/// A trained (not yet persisted) quantizer: L2-normalized centroids and
+/// one cluster assignment per input row.
+#[derive(Debug, Clone)]
+pub struct IvfModel {
+    /// `k * dim`, row-major.
+    pub centroids: Vec<f32>,
+    pub assignments: Vec<u32>,
+}
+
+/// Spherical k-means over L2-normalized rows: greedy farthest-point
+/// seeding, then up to `iters` Lloyd rounds (assignment via the
+/// [`vecops`] tile kernels, update = normalized cluster mean).  Empty
+/// clusters are reseeded to the worst-served row.  Fully deterministic
+/// for a given `(rows, k, iters, seed)`.
+pub fn train_kmeans(
+    rows: &[f32],
+    dim: usize,
+    k: usize,
+    iters: usize,
+    seed: u64,
+) -> IvfModel {
+    assert!(dim > 0, "kmeans needs a positive dim");
+    assert_eq!(rows.len() % dim, 0, "rows length not a multiple of dim");
+    let v = rows.len() / dim;
+    assert!(v > 0, "kmeans needs at least one row");
+    let k = k.clamp(1, v);
+
+    // farthest-point seeding: each next centroid is the row with the
+    // lowest best-dot against the seeds chosen so far
+    let mut rng = Pcg32::new(seed);
+    let first = (rng.next_u64() % v as u64) as usize;
+    let mut centroids = Vec::with_capacity(k * dim);
+    centroids.extend_from_slice(&rows[first * dim..(first + 1) * dim]);
+    let mut best = vec![f32::NEG_INFINITY; v];
+    for _ in 1..k {
+        let last = centroids[centroids.len() - dim..].to_vec();
+        let mut next = 0usize;
+        let mut next_score = f32::INFINITY;
+        for (i, row) in rows.chunks_exact(dim).enumerate() {
+            let d = vecops::dot(row, &last);
+            if d > best[i] {
+                best[i] = d;
+            }
+            if best[i] < next_score {
+                next_score = best[i];
+                next = i;
+            }
+        }
+        centroids.extend_from_slice(&rows[next * dim..(next + 1) * dim]);
+    }
+
+    let mut assign = vec![u32::MAX; v];
+    let mut scores = vec![0.0f32; ASSIGN_CHUNK * k];
+    for _ in 0..iters.max(1) {
+        let changed =
+            assign_rows(rows, dim, &centroids, &mut assign, &mut scores, &mut best);
+
+        // update: spherical mean (sum, then L2-normalize) per cluster
+        let mut sums = vec![0.0f32; k * dim];
+        let mut counts = vec![0u32; k];
+        for (i, row) in rows.chunks_exact(dim).enumerate() {
+            let c = assign[i] as usize;
+            vecops::axpy(1.0, row, &mut sums[c * dim..(c + 1) * dim]);
+            counts[c] += 1;
+        }
+        let mut reseeded = false;
+        for c in 0..k {
+            let sum = &sums[c * dim..(c + 1) * dim];
+            let norm = sum
+                .iter()
+                .map(|x| (*x as f64) * (*x as f64))
+                .sum::<f64>()
+                .sqrt();
+            if counts[c] == 0 || norm == 0.0 {
+                // dead cluster: reseed to the row the current centroids
+                // serve worst, and exclude it from further reseeds this
+                // round
+                let mut worst = 0usize;
+                let mut worst_score = f32::INFINITY;
+                for (i, &s) in best.iter().enumerate() {
+                    if s < worst_score {
+                        worst_score = s;
+                        worst = i;
+                    }
+                }
+                centroids[c * dim..(c + 1) * dim]
+                    .copy_from_slice(&rows[worst * dim..(worst + 1) * dim]);
+                best[worst] = f32::INFINITY;
+                reseeded = true;
+            } else {
+                for (dst, &s) in
+                    centroids[c * dim..(c + 1) * dim].iter_mut().zip(sum)
+                {
+                    *dst = (s as f64 / norm) as f32;
+                }
+            }
+        }
+        if changed == 0 && !reseeded {
+            break;
+        }
+    }
+    // one final pass so assignments match the final centroid table
+    assign_rows(rows, dim, &centroids, &mut assign, &mut scores, &mut best);
+    IvfModel { centroids, assignments: assign }
+}
+
+/// One Lloyd assignment pass: every row scored against the whole
+/// centroid table in [`ASSIGN_CHUNK`]-row tile passes (each centroid is
+/// loaded once per chunk and reused across the chunk's rows — the same
+/// reuse shape as the serving scan).  Returns how many rows changed
+/// cluster; `best` receives each row's winning dot.
+fn assign_rows(
+    rows: &[f32],
+    dim: usize,
+    centroids: &[f32],
+    assign: &mut [u32],
+    scores: &mut [f32],
+    best: &mut [f32],
+) -> usize {
+    let k = centroids.len() / dim;
+    let v = rows.len() / dim;
+    let mut changed = 0usize;
+    let mut start = 0usize;
+    while start < v {
+        let n = ASSIGN_CHUNK.min(v - start);
+        let queries: Vec<&[f32]> = (start..start + n)
+            .map(|i| &rows[i * dim..(i + 1) * dim])
+            .collect();
+        let tile = &mut scores[..n * k];
+        vecops::tile_scores_f32(centroids, dim, &queries, tile);
+        for (q, row_scores) in tile.chunks_exact(k).enumerate() {
+            let mut c_best = 0usize;
+            let mut s_best = f32::NEG_INFINITY;
+            // strict > keeps the first maximum: ties break toward the
+            // smaller cluster id, deterministically
+            for (c, &s) in row_scores.iter().enumerate() {
+                if s > s_best {
+                    s_best = s;
+                    c_best = c;
+                }
+            }
+            let i = start + q;
+            if assign[i] != c_best as u32 {
+                changed += 1;
+                assign[i] = c_best as u32;
+            }
+            best[i] = s_best;
+        }
+        start += n;
+    }
+    changed
+}
+
+/// Turn a trained quantizer into the store layout: rows ordered by
+/// `(cluster, id)` — so each cluster is one contiguous row block and
+/// in-cluster tie order stays by id — plus the per-cluster ranges.
+/// Returns `(row_ids, cluster_ranges)` with `row_ids[new_row] = id`.
+pub fn build_layout(
+    model: &IvfModel,
+    dim: usize,
+) -> (Vec<u32>, Vec<ClusterRange>) {
+    let k = model.centroids.len() / dim.max(1);
+    let v = model.assignments.len();
+    let mut counts = vec![0usize; k];
+    for &c in &model.assignments {
+        counts[c as usize] += 1;
+    }
+    let mut ranges = Vec::with_capacity(k);
+    let mut start = 0usize;
+    for &n in &counts {
+        ranges.push(ClusterRange { start_row: start, rows: n });
+        start += n;
+    }
+    let mut offsets: Vec<usize> =
+        ranges.iter().map(|r| r.start_row).collect();
+    let mut row_ids = vec![0u32; v];
+    for (id, &c) in model.assignments.iter().enumerate() {
+        row_ids[offsets[c as usize]] = id as u32;
+        offsets[c as usize] += 1;
+    }
+    (row_ids, ranges)
+}
+
+/// A batch's probe set: which rows the probed scan will touch.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct ProbePlan {
+    /// Sorted, coalesced global row ranges `(start_row, rows)`.
+    pub ranges: Vec<(usize, usize)>,
+    /// Distinct clusters in the union of the batch's probe lists.
+    pub clusters_probed: usize,
+    /// Total rows the ranges cover.
+    pub rows: usize,
+}
+
+/// Score the whole micro-batch against the centroid table (one tile
+/// pass per [`ASSIGN_CHUNK`] queries) and take the **union** of each
+/// query's top-`nprobe` clusters, returned as sorted coalesced row
+/// ranges.  The union — rather than per-query lists — is what keeps the
+/// downstream scan batched: every loaded row still feeds every query's
+/// heap in one pass, exactly like the exhaustive tile scan.
+///
+/// Empty clusters (k-means cells that ended with no rows) are skipped
+/// during selection so a probe is never wasted on a list with nothing
+/// in it, and if the union somehow covers zero rows the plan degrades
+/// to the full row range — a probed query must never silently return
+/// an empty answer on a non-empty store.  (An aggressive `nprobe` can
+/// still yield *fewer than k* neighbors when the union holds fewer
+/// than k rows; that is the documented ANN trade.)
+pub fn plan_probes(
+    meta: &IvfMeta,
+    dim: usize,
+    queries: &[&[f32]],
+    nprobe: usize,
+) -> ProbePlan {
+    let k = meta.clusters.len();
+    let nprobe = nprobe.clamp(1, k);
+    let mut picked = vec![false; k];
+    let mut scores = vec![0.0f32; ASSIGN_CHUNK * k];
+    let mut start = 0usize;
+    while start < queries.len() {
+        let n = ASSIGN_CHUNK.min(queries.len() - start);
+        let tile = &mut scores[..n * k];
+        vecops::tile_scores_f32(
+            &meta.centroids,
+            dim,
+            &queries[start..start + n],
+            tile,
+        );
+        for row_scores in tile.chunks_exact(k) {
+            let mut top = TopK::new(nprobe);
+            for (c, &s) in row_scores.iter().enumerate() {
+                if meta.clusters[c].rows > 0 {
+                    top.consider(c as u32, s);
+                }
+            }
+            for nb in top.into_sorted() {
+                picked[nb.id as usize] = true;
+            }
+        }
+        start += n;
+    }
+
+    let mut ranges: Vec<(usize, usize)> = Vec::new();
+    let mut clusters_probed = 0usize;
+    let mut rows = 0usize;
+    for (c, &p) in picked.iter().enumerate() {
+        if !p {
+            continue;
+        }
+        clusters_probed += 1;
+        let r = &meta.clusters[c];
+        rows += r.rows;
+        match ranges.last_mut() {
+            // adjacent probed clusters fuse into one scan range, so the
+            // tile loop sees the longest possible contiguous blocks
+            Some((s, l)) if *s + *l == r.start_row => *l += r.rows,
+            _ => ranges.push((r.start_row, r.rows)),
+        }
+    }
+    if rows == 0 && !queries.is_empty() {
+        // nothing selected (e.g. a degenerate index): fall back to the
+        // exhaustive row range rather than answering with nothing
+        let total = meta
+            .clusters
+            .last()
+            .map(|r| r.start_row + r.rows)
+            .unwrap_or(0);
+        if total > 0 {
+            return ProbePlan {
+                ranges: vec![(0, total)],
+                clusters_probed: k,
+                rows: total,
+            };
+        }
+    }
+    ProbePlan { ranges, clusters_probed, rows }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::model::embeddings::normalize_rows_in_place;
+
+    /// `v` rows in `blobs` tight, well-separated clusters (row i belongs
+    /// to blob `i % blobs`), L2-normalized.
+    fn planted(v: usize, dim: usize, blobs: usize, seed: u64) -> Vec<f32> {
+        let mut rng = Pcg32::new(seed);
+        let mut centers = vec![0.0f32; blobs * dim];
+        for c in centers.iter_mut() {
+            *c = rng.next_f32() * 2.0 - 1.0;
+        }
+        let mut rows = vec![0.0f32; v * dim];
+        for i in 0..v {
+            let b = i % blobs;
+            for j in 0..dim {
+                rows[i * dim + j] =
+                    centers[b * dim + j] + (rng.next_f32() - 0.5) * 0.1;
+            }
+        }
+        normalize_rows_in_place(&mut rows, dim);
+        rows
+    }
+
+    #[test]
+    fn kmeans_recovers_planted_blobs() {
+        let (v, dim, blobs) = (96, 12, 4);
+        let rows = planted(v, dim, blobs, 3);
+        let m = train_kmeans(&rows, dim, blobs, 10, 7);
+        assert_eq!(m.assignments.len(), v);
+        assert_eq!(m.centroids.len(), blobs * dim);
+        // every row in a planted blob must share a cluster, and
+        // different blobs must get different clusters
+        for b in 0..blobs {
+            let cluster = m.assignments[b];
+            for i in (b..v).step_by(blobs) {
+                assert_eq!(
+                    m.assignments[i], cluster,
+                    "row {i} split off from blob {b}"
+                );
+            }
+        }
+        let mut distinct: Vec<u32> = m.assignments.clone();
+        distinct.sort_unstable();
+        distinct.dedup();
+        assert_eq!(distinct.len(), blobs, "blobs merged into one cluster");
+        // centroids are unit-normalized
+        for c in m.centroids.chunks_exact(dim) {
+            let n: f32 = c.iter().map(|x| x * x).sum::<f32>().sqrt();
+            assert!((n - 1.0).abs() < 1e-4, "centroid norm {n}");
+        }
+    }
+
+    #[test]
+    fn kmeans_is_deterministic_and_handles_edge_ks() {
+        let rows = planted(40, 8, 4, 11);
+        let a = train_kmeans(&rows, 8, 4, 8, 5);
+        let b = train_kmeans(&rows, 8, 4, 8, 5);
+        assert_eq!(a.assignments, b.assignments);
+        assert_eq!(a.centroids, b.centroids);
+        // k = 1: everything in one cluster
+        let one = train_kmeans(&rows, 8, 1, 4, 5);
+        assert!(one.assignments.iter().all(|&c| c == 0));
+        // k > v clamps to v; every cluster must stay non-empty
+        let tiny = planted(3, 8, 3, 2);
+        let over = train_kmeans(&tiny, 8, 10, 4, 5);
+        assert_eq!(over.centroids.len(), 3 * 8);
+        let mut cs: Vec<u32> = over.assignments.clone();
+        cs.sort_unstable();
+        cs.dedup();
+        assert_eq!(cs.len(), 3, "a cluster starved despite k == v");
+    }
+
+    #[test]
+    fn layout_orders_rows_by_cluster_then_id() {
+        let model = IvfModel {
+            centroids: vec![0.0; 3 * 4],
+            assignments: vec![2, 0, 1, 0, 2, 1, 0],
+        };
+        let (row_ids, ranges) = build_layout(&model, 4);
+        // cluster 0: ids 1,3,6; cluster 1: ids 2,5; cluster 2: ids 0,4
+        assert_eq!(row_ids, vec![1, 3, 6, 2, 5, 0, 4]);
+        assert_eq!(
+            ranges,
+            vec![
+                ClusterRange { start_row: 0, rows: 3 },
+                ClusterRange { start_row: 3, rows: 2 },
+                ClusterRange { start_row: 5, rows: 2 },
+            ]
+        );
+    }
+
+    fn meta_for_tests() -> IvfMeta {
+        // 3 clusters over 7 rows in 2-d
+        IvfMeta {
+            clusters: vec![
+                ClusterRange { start_row: 0, rows: 3 },
+                ClusterRange { start_row: 3, rows: 2 },
+                ClusterRange { start_row: 5, rows: 2 },
+            ],
+            centroids: vec![1.0, 0.0, 0.0, 1.0, -1.0, 0.0],
+            row_ids: vec![1, 3, 6, 2, 5, 0, 4].into(),
+        }
+    }
+
+    #[test]
+    fn meta_validates_and_roundtrips_json() {
+        let m = meta_for_tests();
+        m.validate(7, 2).unwrap();
+        let j = m.to_json().to_string();
+        let back = IvfMeta::from_json(&Json::parse(&j).unwrap()).unwrap();
+        assert_eq!(m, back);
+        // inverse permutation really inverts
+        let inv = m.row_of_ids();
+        for (row, &id) in m.row_ids.iter().enumerate() {
+            assert_eq!(inv[id as usize] as usize, row);
+        }
+    }
+
+    /// Rebuild a meta's (shared, hence immutable) permutation with one
+    /// entry patched.
+    fn with_row_id(meta: &IvfMeta, idx: usize, id: u32) -> IvfMeta {
+        let mut v = meta.row_ids.to_vec();
+        v[idx] = id;
+        IvfMeta { row_ids: v.into(), ..meta.clone() }
+    }
+
+    #[test]
+    fn meta_validation_rejects_corruption() {
+        let good = meta_for_tests();
+        let dup = with_row_id(&good, 0, good.row_ids[1]); // repeated id
+        assert!(dup.validate(7, 2).is_err());
+        let oob = with_row_id(&good, 0, 99);
+        assert!(oob.validate(7, 2).is_err());
+        let mut gap = good.clone();
+        gap.clusters[1].start_row = 4; // hole between clusters
+        assert!(gap.validate(7, 2).is_err());
+        let mut nan = good.clone();
+        nan.centroids[2] = f32::NAN;
+        assert!(nan.validate(7, 2).is_err());
+        let mut short = good.clone();
+        short.centroids.pop();
+        assert!(short.validate(7, 2).is_err());
+        assert!(good.validate(8, 2).is_err()); // wrong vocab
+    }
+
+    #[test]
+    fn probe_plan_unions_and_coalesces() {
+        let m = meta_for_tests();
+        // query equal to centroid 0, nprobe 1: exactly cluster 0
+        let q0: &[f32] = &[1.0, 0.0];
+        let p = plan_probes(&m, 2, &[q0], 1);
+        assert_eq!(p.ranges, vec![(0, 3)]);
+        assert_eq!((p.clusters_probed, p.rows), (1, 3));
+        // two queries picking clusters 0 and 1: adjacent ranges coalesce
+        let q1: &[f32] = &[0.0, 1.0];
+        let p = plan_probes(&m, 2, &[q0, q1], 1);
+        assert_eq!(p.ranges, vec![(0, 5)]);
+        assert_eq!((p.clusters_probed, p.rows), (2, 5));
+        // nprobe >= k degenerates to the full row range
+        let p = plan_probes(&m, 2, &[q0], 10);
+        assert_eq!(p.ranges, vec![(0, 7)]);
+        assert_eq!(p.clusters_probed, 3);
+        // clusters 0 and 2 (non-adjacent): two ranges
+        let q2: &[f32] = &[-1.0, 0.0];
+        let p = plan_probes(&m, 2, &[q0, q2], 1);
+        assert_eq!(p.ranges, vec![(0, 3), (5, 2)]);
+    }
+
+    #[test]
+    fn probe_plan_handles_empty_clusters_and_batches() {
+        let mut m = meta_for_tests();
+        // make the middle cluster empty: [0,3) [3,0) [3,4)
+        m.clusters = vec![
+            ClusterRange { start_row: 0, rows: 3 },
+            ClusterRange { start_row: 3, rows: 0 },
+            ClusterRange { start_row: 3, rows: 4 },
+        ];
+        let q0: &[f32] = &[1.0, 0.0];
+        // the empty cluster is skipped at selection, so nprobe 2 spends
+        // both probes on clusters that actually hold rows (c0 and c2,
+        // despite c1 scoring higher than c2) — and their ranges fuse
+        let p = plan_probes(&m, 2, &[q0], 2);
+        assert_eq!(p.ranges, vec![(0, 7)]);
+        assert_eq!((p.clusters_probed, p.rows), (2, 7));
+        assert!(p.ranges.iter().all(|&(_, l)| l > 0));
+        let none = plan_probes(&m, 2, &[], 2);
+        assert!(none.ranges.is_empty());
+        assert_eq!(none.rows, 0);
+        // a fully-empty index degrades to the exhaustive range instead
+        // of an empty plan (a probed query must never answer with
+        // nothing on a non-empty store)
+        let mut all_empty = meta_for_tests();
+        all_empty.clusters = vec![
+            ClusterRange { start_row: 0, rows: 0 },
+            ClusterRange { start_row: 0, rows: 0 },
+            ClusterRange { start_row: 0, rows: 7 },
+        ];
+        // make the only non-empty cluster invisible to selection by
+        // checking the zero-rows fallback directly: selection skips
+        // empties, so this still probes c2
+        let p = plan_probes(&all_empty, 2, &[q0], 1);
+        assert_eq!(p.ranges, vec![(0, 7)]);
+    }
+}

@@ -11,8 +11,11 @@
 //! |-------------------------|------------------------------------------|
 //! | registers: center word  | [`crate::vecops`] tile kernels — a row   |
 //! |                         | feeds Q query accumulators per load      |
-//! | shared memory: ctx/negs | [`cache::HotCache`] — pinned Zipf head   |
-//! | HBM: embedding tables   | [`store::ShardedStore`] — lazy shards    |
+//! | shared memory: ctx/negs | [`cache::HotCache`] — pinned Zipf head — |
+//! |                         | and the [`ivf`] centroid table: a small  |
+//! |                         | hot working set consulted every batch    |
+//! | HBM: embedding tables   | [`store::ShardedStore`] — lazy shards;   |
+//! |                         | probing touches only `nprobe` clusters   |
 //! | CUDA streams / batches  | [`engine::ServeEngine`] micro-batches    |
 //!
 //! The scan path is *batched end to end*: the engine hands whole
@@ -23,6 +26,17 @@
 //! `O(batch x rows)` to `O(rows)` — the serving analogue of the
 //! paper's context-window reuse — and the realized reuse is reported
 //! as [`engine::ServeReport::rows_loaded_per_query`].
+//!
+//! On top of that, a format-2 store carries an [`ivf`] coarse index:
+//! rows are reordered by k-means cluster at export, each batch scores
+//! once against the centroid table, and only the union of its
+//! top-`nprobe` cluster lists is scanned (cluster lists *are*
+//! contiguous row blocks, so the batched tile machinery is unchanged).
+//! That takes row traffic **sublinear in vocabulary size** — the first
+//! time `rows_loaded_per_query` drops below the row count — at a
+//! recall cost measured against the exhaustive scan in `bench_serve`.
+//! `nprobe = 0` (the default) and flat v1 stores keep the exact
+//! exhaustive scan.
 //!
 //! Typical flow:
 //!
@@ -44,18 +58,21 @@
 pub mod ann;
 pub mod cache;
 pub mod engine;
+pub mod ivf;
 pub mod store;
 
 pub use ann::{
     search_rows, search_shard, search_shard_batch, search_shards_batch,
-    BatchQuery, Neighbor, TopK,
+    search_shards_batch_ranges, BatchQuery, Neighbor, TopK,
 };
 pub use cache::{CacheStats, HotCache};
 pub use engine::{
     QueryClient, QueryResponse, ServeEngine, ServeOptions, ServeReport,
 };
+pub use ivf::{ClusterRange, IvfMeta, ProbePlan};
 pub use store::{
-    export_store, Precision, RowBlock, Shard, ShardedStore, StoreManifest,
+    export_store, export_store_clustered, Precision, RowBlock, Shard,
+    ShardedStore, StoreManifest,
 };
 
 /// Head-skewed query-id stream for benches and examples.  Vocabulary ids

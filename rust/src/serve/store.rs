@@ -14,11 +14,25 @@
 //! per row (`scale = max_abs / 127`), cutting the footprint ~4x with a
 //! per-component error of at most `scale / 2`.
 //!
-//! Shards are *paged in lazily*: [`ShardedStore::open`] reads only the
-//! manifest, and each shard's bytes are loaded on first touch.  The hot
-//! tier above this ([`super::cache::HotCache`]) keeps the Zipf head in
-//! RAM, mirroring the paper's registers/shared-memory/HBM hierarchy.
+//! Shards are *paged in lazily*: [`ShardedStore::open`] reads the
+//! manifest and validates every shard's **header** (magic, version, row
+//! range, dim, on-disk length) up front — so a truncated or mismatched
+//! shard fails at open instead of surfacing mid-query as a worker error
+//! — while row payloads still load on first touch.  The hot tier above
+//! this ([`super::cache::HotCache`]) keeps the Zipf head in RAM,
+//! mirroring the paper's registers/shared-memory/HBM hierarchy.
+//!
+//! **Format v2 (IVF):** [`export_store_clustered`] trains a k-means
+//! coarse quantizer ([`super::ivf`]), reorders rows by cluster so every
+//! cluster's inverted list is a contiguous row block, and persists the
+//! centroid table + cluster ranges + row→id permutation in
+//! `store.json` (`format: 2`).  v1 stores (no index) keep opening and
+//! serving exhaustively.  Boundary hygiene both ways: non-finite model
+//! rows are zeroed (with a warning) at export — a single NaN score
+//! would outrank every real neighbor under `total_cmp` — and a shard
+//! whose payload contains non-finite values is rejected at load.
 
+use super::ivf::{self, IvfMeta};
 use crate::corpus::vocab::Vocab;
 use crate::model::embeddings::normalize_rows_in_place;
 use crate::model::EmbeddingModel;
@@ -27,11 +41,15 @@ use crate::vecops;
 use anyhow::{anyhow, bail, Context, Result};
 use std::io::{BufReader, BufWriter, Read, Write};
 use std::path::{Path, PathBuf};
-use std::sync::OnceLock;
+use std::sync::{Arc, OnceLock};
 
 const MAGIC_F32: &[u8; 4] = b"FW2S";
 const MAGIC_I8: &[u8; 4] = b"FW2Q";
 const VERSION: u32 = 1;
+/// magic(4) + version(4) + start_row(8) + rows(8) + dim(8).
+const HEADER_BYTES: u64 = 32;
+/// Seed for the export-time k-means (deterministic stores).
+const KMEANS_SEED: u64 = 0x1Fa5_C0DE;
 
 /// Which shard files a store reads at query time.
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
@@ -58,18 +76,23 @@ pub struct ShardMeta {
     pub rows: usize,
 }
 
-/// Parsed `store.json`.
+/// Parsed `store.json`.  `ivf` is present for format-2 (cluster-
+/// reordered) stores and absent for flat v1 stores.
 #[derive(Debug, Clone, PartialEq)]
 pub struct StoreManifest {
     pub vocab_size: usize,
     pub dim: usize,
     pub shards: Vec<ShardMeta>,
+    pub ivf: Option<IvfMeta>,
 }
 
 impl StoreManifest {
     pub fn to_json(&self) -> Json {
-        obj(vec![
-            ("format", Json::Num(1.0)),
+        let mut fields = vec![
+            (
+                "format",
+                Json::Num(if self.ivf.is_some() { 2.0 } else { 1.0 }),
+            ),
             ("vocab_size", Json::Num(self.vocab_size as f64)),
             ("dim", Json::Num(self.dim as f64)),
             (
@@ -86,7 +109,11 @@ impl StoreManifest {
                         .collect(),
                 ),
             ),
-        ])
+        ];
+        if let Some(ivf) = &self.ivf {
+            fields.push(("ivf", ivf.to_json()));
+        }
+        obj(fields)
     }
 
     pub fn from_json(j: &Json) -> Result<StoreManifest> {
@@ -96,7 +123,7 @@ impl StoreManifest {
                 .ok_or_else(|| anyhow!("manifest missing '{key}'"))
         };
         let format = get_usize("format")?;
-        if format != 1 {
+        if format != 1 && format != 2 {
             bail!("unsupported store format {format}");
         }
         let vocab_size = get_usize("vocab_size")?;
@@ -115,12 +142,20 @@ impl StoreManifest {
                 Ok(ShardMeta { start_row: f("start_row")?, rows: f("rows")? })
             })
             .collect::<Result<Vec<_>>>()?;
-        let m = StoreManifest { vocab_size, dim, shards };
+        let ivf = match (format, j.get("ivf")) {
+            (2, Some(x)) => Some(IvfMeta::from_json(x)?),
+            (2, None) => bail!("format 2 store is missing its ivf index"),
+            (_, Some(_)) => bail!("format 1 store must not carry an ivf index"),
+            (_, None) => None,
+        };
+        let m = StoreManifest { vocab_size, dim, shards, ivf };
         m.validate()?;
         Ok(m)
     }
 
-    /// Shards must tile [0, vocab_size) contiguously without gaps.
+    /// Shards must tile [0, vocab_size) contiguously without gaps, with
+    /// checked sums (a manifest is attacker-controllable input); any
+    /// embedded IVF index is validated against the same bounds.
     pub fn validate(&self) -> Result<()> {
         if self.dim == 0 {
             bail!("store dim must be positive");
@@ -130,12 +165,49 @@ impl StoreManifest {
             if s.start_row != next {
                 bail!("shard {i} starts at {} expected {next}", s.start_row);
             }
-            next += s.rows;
+            next = next
+                .checked_add(s.rows)
+                .ok_or_else(|| anyhow!("shard row counts overflow"))?;
         }
         if next != self.vocab_size {
             bail!("shards cover {next} rows, vocab is {}", self.vocab_size);
         }
+        if let Some(ivf) = &self.ivf {
+            ivf.validate(self.vocab_size, self.dim)?;
+        }
         Ok(())
+    }
+
+    /// (shard index, local row) for a *store row* (the post-reordering
+    /// position, not the word id).  `rows_per_shard_hint` is the uniform
+    /// layout the exporter writes, making the division exact; the
+    /// adjustment loops make irregular (but validated-contiguous)
+    /// manifests correct too, including empty shards, and are bounds-
+    /// checked so an adversarial hint or manifest yields `None` rather
+    /// than an underflow/overflow panic.
+    pub fn locate_row(
+        &self,
+        row: usize,
+        rows_per_shard_hint: usize,
+    ) -> Option<(usize, usize)> {
+        if row >= self.vocab_size || self.shards.is_empty() {
+            return None;
+        }
+        let mut idx =
+            (row / rows_per_shard_hint.max(1)).min(self.shards.len() - 1);
+        while idx > 0 && self.shards[idx].start_row > row {
+            idx -= 1;
+        }
+        loop {
+            let s = &self.shards[idx];
+            if row >= s.start_row && row < s.start_row.checked_add(s.rows)? {
+                return Some((idx, row - s.start_row));
+            }
+            idx += 1;
+            if idx >= self.shards.len() {
+                return None;
+            }
+        }
     }
 }
 
@@ -184,10 +256,40 @@ pub struct Shard {
     pub start_row: usize,
     pub rows: usize,
     pub dim: usize,
+    /// The store's full row→id permutation for cluster-reordered (v2)
+    /// stores, shared across every shard (one `Arc` clone per load, no
+    /// per-shard copy); `None` when row position == id (flat v1
+    /// layout).  This shard's rows are the
+    /// `[start_row, start_row + rows)` window of it.
+    ids: Option<Arc<[u32]>>,
     data: ShardData,
 }
 
 impl Shard {
+    /// Original word id of shard-local row `local`.
+    #[inline]
+    pub fn id_of(&self, local: usize) -> u32 {
+        match &self.ids {
+            Some(v) => v[self.start_row + local],
+            None => (self.start_row + local) as u32,
+        }
+    }
+
+    /// Word ids of `n` rows from `start`, when the store is cluster-
+    /// reordered; `None` for the flat layout (id == global row).
+    pub fn ids_block(&self, start: usize, n: usize) -> Option<&[u32]> {
+        // same checked arithmetic as row_block: a wrapped end would
+        // panic later with a misleading slice error in release builds
+        let lo = self
+            .start_row
+            .checked_add(start)
+            .unwrap_or_else(|| panic!("ids block start {start} overflows"));
+        let hi = lo
+            .checked_add(n)
+            .unwrap_or_else(|| panic!("ids block [{start}, {start}+{n}) overflows"));
+        self.ids.as_ref().map(|v| &v[lo..hi])
+    }
+
     /// Materialize row `local` (shard-relative index) into `out`.
     pub fn row_into(&self, local: usize, out: &mut [f32]) {
         assert!(local < self.rows, "local row {local} >= {}", self.rows);
@@ -210,10 +312,15 @@ impl Shard {
     /// Borrow `n` rows starting at shard-local row `start`, in native
     /// precision.  `row_block(0, self.rows)` views the whole shard.
     pub fn row_block(&self, start: usize, n: usize) -> RowBlock<'_> {
+        // checked: for adversarial inputs `start + n` wraps in release
+        // builds, slipping past the bound check only to panic later
+        // with a misleading slice error
+        let end = start
+            .checked_add(n)
+            .unwrap_or_else(|| panic!("block [{start}, {start}+{n}) overflows"));
         assert!(
-            start + n <= self.rows,
-            "block [{start}, {}) exceeds {} rows",
-            start + n,
+            end <= self.rows,
+            "block [{start}, {end}) exceeds {} rows",
             self.rows
         );
         let base = start * self.dim;
@@ -227,22 +334,24 @@ impl Shard {
         }
     }
 
-    /// Dot-product `query` against every row, calling `f(global_id,
-    /// score)` per row.  The precision dispatch is hoisted out of the row
-    /// loop; both paths use the shared [`crate::vecops`] kernels, so
-    /// per-query scores match the batched tile scan bit for bit.
+    /// Dot-product `query` against every row, calling `f(word_id,
+    /// score)` per row (the id goes through the v2 permutation when the
+    /// store is cluster-reordered).  The precision dispatch is hoisted
+    /// out of the row loop; both paths use the shared [`crate::vecops`]
+    /// kernels, so per-query scores match the batched tile scan bit for
+    /// bit.
     pub fn for_each_score<F: FnMut(u32, f32)>(&self, query: &[f32], mut f: F) {
         assert_eq!(query.len(), self.dim);
         match &self.data {
             ShardData::F32(rows) => {
                 for (local, row) in rows.chunks_exact(self.dim).enumerate() {
-                    f((self.start_row + local) as u32, vecops::dot(row, query));
+                    f(self.id_of(local), vecops::dot(row, query));
                 }
             }
             ShardData::I8 { scales, codes } => {
                 for (local, row) in codes.chunks_exact(self.dim).enumerate() {
                     f(
-                        (self.start_row + local) as u32,
+                        self.id_of(local),
                         vecops::dot_i8(row, scales[local], query),
                     );
                 }
@@ -259,15 +368,46 @@ impl Shard {
     }
 }
 
-/// Export a trained model as a sharded store directory.
+/// Zero any row containing a non-finite value.  A divergent model must
+/// not poison the store: `Entry`'s `total_cmp` ordering would rank a
+/// NaN score above every real neighbor in every query's top-k.  Returns
+/// how many rows were zeroed.
+fn sanitize_rows(rows: &mut [f32], dim: usize) -> usize {
+    let mut zeroed = 0usize;
+    for row in rows.chunks_exact_mut(dim) {
+        if row.iter().any(|x| !x.is_finite()) {
+            row.fill(0.0);
+            zeroed += 1;
+        }
+    }
+    zeroed
+}
+
+/// Export a trained model as a flat (format v1) sharded store directory.
 ///
 /// Rows are L2-normalized `syn0` rows; both the f32 and the int8 file are
 /// written for every shard so a store can be opened at either precision.
+/// Non-finite rows are zeroed with a warning (see [`sanitize_rows`]).
 pub fn export_store(
     model: &EmbeddingModel,
     vocab: &Vocab,
     dir: &Path,
     shards: usize,
+) -> Result<StoreManifest> {
+    export_store_clustered(model, vocab, dir, shards, 0)
+}
+
+/// [`export_store`] plus an IVF coarse index: `clusters > 1` trains a
+/// k-means quantizer over the normalized rows, reorders them by cluster
+/// (each cluster one contiguous row block), and persists the centroid
+/// table, cluster ranges, and row→id permutation in a format-2
+/// manifest.  `clusters <= 1` writes a flat v1 store.
+pub fn export_store_clustered(
+    model: &EmbeddingModel,
+    vocab: &Vocab,
+    dir: &Path,
+    shards: usize,
+    clusters: usize,
 ) -> Result<StoreManifest> {
     if model.dim == 0 {
         bail!("model dim must be positive (got a 0-dim model)");
@@ -287,7 +427,42 @@ pub fn export_store(
         .with_context(|| format!("creating {}", dir.display()))?;
 
     let mut normalized = model.syn0.clone();
+    let zeroed = sanitize_rows(&mut normalized, d);
+    if zeroed > 0 {
+        crate::log_warn!(
+            "export: zeroed {zeroed} non-finite embedding row(s) — the \
+             model diverged for those words; they will score 0 against \
+             every query"
+        );
+    }
     normalize_rows_in_place(&mut normalized, d);
+
+    let ivf_meta = if clusters > 1 && v > 1 {
+        let km = ivf::train_kmeans(
+            &normalized,
+            d,
+            clusters.min(v),
+            ivf::DEFAULT_KMEANS_ITERS,
+            KMEANS_SEED,
+        );
+        let (row_ids, ranges) = ivf::build_layout(&km, d);
+        // reorder rows by cluster so every probe list is one contiguous
+        // row block the tile scan can walk unchanged
+        let mut reordered = vec![0.0f32; normalized.len()];
+        for (new_row, &id) in row_ids.iter().enumerate() {
+            let src = id as usize * d;
+            reordered[new_row * d..(new_row + 1) * d]
+                .copy_from_slice(&normalized[src..src + d]);
+        }
+        normalized = reordered;
+        Some(IvfMeta {
+            clusters: ranges,
+            centroids: km.centroids,
+            row_ids: row_ids.into(),
+        })
+    } else {
+        None
+    };
 
     let mut metas = Vec::new();
     let mut start = 0usize;
@@ -300,7 +475,8 @@ pub fn export_store(
         metas.push(ShardMeta { start_row: start, rows });
         start = end;
     }
-    let manifest = StoreManifest { vocab_size: v, dim: d, shards: metas };
+    let manifest =
+        StoreManifest { vocab_size: v, dim: d, shards: metas, ivf: ivf_meta };
     manifest.validate()?;
     vocab
         .save(&dir.join("vocab.tsv"))
@@ -406,16 +582,79 @@ fn read_header(
     Ok((start_row, rows, dim))
 }
 
-fn load_shard(path: &Path, precision: Precision, meta: &ShardMeta, dim: usize) -> Result<Shard> {
+fn shard_magic(precision: Precision) -> &'static [u8; 4] {
+    match precision {
+        Precision::Exact => MAGIC_F32,
+        Precision::Quantized => MAGIC_I8,
+    }
+}
+
+/// Header-only shard validation, run for every shard at
+/// [`ShardedStore::open`]: magic/version/row-range/dim must agree with
+/// the manifest and the on-disk length must match the payload the
+/// header promises — so truncation or a stale file fails the open
+/// instead of surfacing mid-query as a whole-batch worker error.  Row
+/// payloads are not read (paging stays lazy); sizes use checked u64
+/// math since the header is attacker-controllable input.
+fn validate_shard_file(
+    path: &Path,
+    precision: Precision,
+    meta: &ShardMeta,
+    dim: usize,
+) -> Result<()> {
+    let file = std::fs::File::open(path)
+        .with_context(|| format!("opening {}", path.display()))?;
+    let actual_len = file
+        .metadata()
+        .with_context(|| format!("stat {}", path.display()))?
+        .len();
+    let mut f = BufReader::new(file);
+    let (start_row, rows, d) =
+        read_header(&mut f, shard_magic(precision), path)?;
+    if start_row != meta.start_row || rows != meta.rows || d != dim {
+        bail!(
+            "{}: header ({start_row},{rows},{d}) disagrees with manifest \
+             ({},{},{dim})",
+            path.display(),
+            meta.start_row,
+            meta.rows,
+        );
+    }
+    let cells = (rows as u64).checked_mul(d as u64);
+    let payload = match precision {
+        Precision::Exact => cells.and_then(|c| c.checked_mul(4)),
+        Precision::Quantized => cells
+            .and_then(|c| c.checked_add((rows as u64).checked_mul(4)?)),
+    }
+    .ok_or_else(|| {
+        anyhow!("{}: header row/dim sizes overflow", path.display())
+    })?;
+    let expected = HEADER_BYTES
+        .checked_add(payload)
+        .ok_or_else(|| anyhow!("{}: shard size overflows", path.display()))?;
+    if actual_len != expected {
+        bail!(
+            "{}: {actual_len} bytes on disk, header implies {expected} \
+             (truncated or corrupt shard)",
+            path.display()
+        );
+    }
+    Ok(())
+}
+
+fn load_shard(
+    path: &Path,
+    precision: Precision,
+    meta: &ShardMeta,
+    dim: usize,
+    ids: Option<Arc<[u32]>>,
+) -> Result<Shard> {
     let mut f = BufReader::new(
         std::fs::File::open(path)
             .with_context(|| format!("opening {}", path.display()))?,
     );
-    let magic = match precision {
-        Precision::Exact => MAGIC_F32,
-        Precision::Quantized => MAGIC_I8,
-    };
-    let (start_row, rows, d) = read_header(&mut f, magic, path)?;
+    let (start_row, rows, d) =
+        read_header(&mut f, shard_magic(precision), path)?;
     if start_row != meta.start_row || rows != meta.rows || d != dim {
         bail!(
             "{}: header ({start_row},{rows},{d}) disagrees with manifest \
@@ -435,17 +674,36 @@ fn load_shard(path: &Path, precision: Precision, meta: &ShardMeta, dim: usize) -
             .map(|b| f32::from_le_bytes([b[0], b[1], b[2], b[3]]))
             .collect())
     };
+    // non-finite payloads are rejected, never served: one NaN row would
+    // outrank every real neighbor in every query (total_cmp ordering)
     let data = match precision {
-        Precision::Exact => ShardData::F32(read_f32s(&mut f, rows * d)?),
+        Precision::Exact => {
+            let values = read_f32s(&mut f, rows * d)?;
+            if values.iter().any(|x| !x.is_finite()) {
+                bail!(
+                    "{}: shard payload contains non-finite values \
+                     (corrupt file or unsanitized export)",
+                    path.display()
+                );
+            }
+            ShardData::F32(values)
+        }
         Precision::Quantized => {
             let scales = read_f32s(&mut f, rows)?;
+            if scales.iter().any(|x| !x.is_finite()) {
+                bail!(
+                    "{}: non-finite quantization scales (corrupt file or \
+                     unsanitized export)",
+                    path.display()
+                );
+            }
             let mut bytes = vec![0u8; rows * d];
             f.read_exact(&mut bytes)?;
             let codes = bytes.iter().map(|&b| b as i8).collect();
             ShardData::I8 { scales, codes }
         }
     };
-    Ok(Shard { start_row, rows, dim: d, data })
+    Ok(Shard { start_row, rows, dim: d, ids, data })
 }
 
 /// A store opened at a chosen precision, with lazily-loaded shards.
@@ -455,25 +713,31 @@ pub struct ShardedStore {
     manifest: StoreManifest,
     /// Rows per full shard (every shard except possibly the last).
     rows_per_shard: usize,
+    /// Inverse of the v2 permutation (`row_of[id] = store row`); `None`
+    /// for flat v1 stores where id == row.
+    row_of: Option<Vec<u32>>,
     cells: Vec<OnceLock<Shard>>,
 }
 
 impl ShardedStore {
-    /// Read the manifest and verify shard files exist; rows load on
-    /// first touch.
+    /// Read the manifest and validate every shard's header and on-disk
+    /// size ([`validate_shard_file`]); row payloads load on first touch.
     pub fn open(dir: &Path, precision: Precision) -> Result<ShardedStore> {
         let text = std::fs::read_to_string(dir.join("store.json"))
             .with_context(|| format!("reading {}/store.json", dir.display()))?;
         let doc = Json::parse(&text).context("parsing store.json")?;
         let manifest = StoreManifest::from_json(&doc)?;
-        for i in 0..manifest.shards.len() {
-            let p = shard_path(dir, i, precision);
-            if !p.exists() {
-                bail!("missing shard file {}", p.display());
-            }
+        for (i, meta) in manifest.shards.iter().enumerate() {
+            validate_shard_file(
+                &shard_path(dir, i, precision),
+                precision,
+                meta,
+                manifest.dim,
+            )?;
         }
         let rows_per_shard =
             manifest.shards.first().map(|s| s.rows).unwrap_or(1).max(1);
+        let row_of = manifest.ivf.as_ref().map(IvfMeta::row_of_ids);
         let cells =
             (0..manifest.shards.len()).map(|_| OnceLock::new()).collect();
         Ok(ShardedStore {
@@ -481,6 +745,7 @@ impl ShardedStore {
             precision,
             manifest,
             rows_per_shard,
+            row_of,
             cells,
         })
     }
@@ -505,31 +770,29 @@ impl ShardedStore {
         &self.manifest
     }
 
+    /// The IVF coarse index, when this is a cluster-reordered v2 store.
+    pub fn ivf(&self) -> Option<&IvfMeta> {
+        self.manifest.ivf.as_ref()
+    }
+
     /// How many shards have been paged in so far.
     pub fn loaded_shards(&self) -> usize {
         self.cells.iter().filter(|c| c.get().is_some()).count()
     }
 
-    /// (shard index, local row) for a global row id.
-    pub fn locate(&self, row: u32) -> Option<(usize, usize)> {
-        let row = row as usize;
-        if row >= self.manifest.vocab_size {
+    /// (shard index, local row) for an original word id.  For cluster-
+    /// reordered (v2) stores the id is first mapped through the stored
+    /// permutation; flat stores use the id as the row directly.
+    pub fn locate(&self, id: u32) -> Option<(usize, usize)> {
+        let id = id as usize;
+        if id >= self.manifest.vocab_size {
             return None;
         }
-        // division is exact for the uniform layout export writes; the
-        // adjustment loops make irregular (but validated-contiguous)
-        // manifests correct too, including empty trailing shards
-        let mut idx = (row / self.rows_per_shard).min(self.num_shards() - 1);
-        while self.manifest.shards[idx].start_row > row {
-            idx -= 1;
-        }
-        while row
-            >= self.manifest.shards[idx].start_row
-                + self.manifest.shards[idx].rows
-        {
-            idx += 1;
-        }
-        Some((idx, row - self.manifest.shards[idx].start_row))
+        let row = match &self.row_of {
+            Some(inv) => inv[id] as usize,
+            None => id,
+        };
+        self.manifest.locate_row(row, self.rows_per_shard)
     }
 
     /// Shard accessor; pages the shard in on first touch.
@@ -537,11 +800,15 @@ impl ShardedStore {
         if let Some(s) = self.cells[i].get() {
             return Ok(s);
         }
+        let meta = &self.manifest.shards[i];
+        // Arc clone of the manifest's shared permutation — no copy
+        let ids = self.manifest.ivf.as_ref().map(|ivf| ivf.row_ids.clone());
         let loaded = load_shard(
             &shard_path(&self.dir, i, self.precision),
             self.precision,
-            &self.manifest.shards[i],
+            meta,
             self.manifest.dim,
+            ids,
         )?;
         // a concurrent loader may have won the race; either value is
         // identical so the loser's copy is just dropped
@@ -662,12 +929,14 @@ mod tests {
                 ShardMeta { start_row: 0, rows: 4 },
                 ShardMeta { start_row: 5, rows: 5 },
             ],
+            ivf: None,
         };
         assert!(bad.validate().is_err());
         let short = StoreManifest {
             vocab_size: 10,
             dim: 4,
             shards: vec![ShardMeta { start_row: 0, rows: 9 }],
+            ivf: None,
         };
         assert!(short.validate().is_err());
     }
@@ -681,10 +950,201 @@ mod tests {
                 ShardMeta { start_row: 0, rows: 6 },
                 ShardMeta { start_row: 6, rows: 6 },
             ],
+            ivf: None,
         };
         let j = m.to_json().to_string();
+        assert!(j.contains("\"format\":1"), "flat store must stay format 1");
         let back = StoreManifest::from_json(&Json::parse(&j).unwrap()).unwrap();
         assert_eq!(m, back);
+    }
+
+    #[test]
+    fn v2_manifest_roundtrips_and_format_fields_agree() {
+        let m = StoreManifest {
+            vocab_size: 4,
+            dim: 2,
+            shards: vec![ShardMeta { start_row: 0, rows: 4 }],
+            ivf: Some(IvfMeta {
+                clusters: vec![
+                    ivf::ClusterRange { start_row: 0, rows: 3 },
+                    ivf::ClusterRange { start_row: 3, rows: 1 },
+                ],
+                centroids: vec![1.0, 0.0, 0.0, 1.0],
+                row_ids: vec![2, 0, 3, 1].into(),
+            }),
+        };
+        let j = m.to_json().to_string();
+        assert!(j.contains("\"format\":2"));
+        let back = StoreManifest::from_json(&Json::parse(&j).unwrap()).unwrap();
+        assert_eq!(m, back);
+        // a format-2 manifest with its index stripped must not parse
+        let stripped = j.replacen("\"format\":2", "\"format\":1", 1);
+        assert!(StoreManifest::from_json(&Json::parse(&stripped).unwrap())
+            .is_err());
+        let mut flat = m.clone();
+        flat.ivf = None;
+        let noivf = flat.to_json().to_string().replacen(
+            "\"format\":1",
+            "\"format\":2",
+            1,
+        );
+        assert!(
+            StoreManifest::from_json(&Json::parse(&noivf).unwrap()).is_err()
+        );
+    }
+
+    #[test]
+    fn locate_row_handles_irregular_and_empty_shards() {
+        // irregular but contiguous: 1 + 8 + 0 + 1 rows
+        let m = StoreManifest {
+            vocab_size: 10,
+            dim: 4,
+            shards: vec![
+                ShardMeta { start_row: 0, rows: 1 },
+                ShardMeta { start_row: 1, rows: 8 },
+                ShardMeta { start_row: 9, rows: 0 },
+                ShardMeta { start_row: 9, rows: 1 },
+            ],
+            ivf: None,
+        };
+        m.validate().unwrap();
+        // the uniform-layout hint is wrong for every shard here; the
+        // adjustment loops must still land on the right one
+        for hint in [1usize, 2, 3, 10, usize::MAX] {
+            assert_eq!(m.locate_row(0, hint), Some((0, 0)));
+            assert_eq!(m.locate_row(1, hint), Some((1, 0)));
+            assert_eq!(m.locate_row(8, hint), Some((1, 7)));
+            // row 9 skips the empty shard 2
+            assert_eq!(m.locate_row(9, hint), Some((3, 0)));
+            assert_eq!(m.locate_row(10, hint), None);
+        }
+        // hint 0 must not divide by zero
+        assert_eq!(m.locate_row(5, 0), Some((1, 4)));
+    }
+
+    #[test]
+    fn row_block_rejects_wrapping_ranges() {
+        let v = vocab(6);
+        let m = EmbeddingModel::init(6, 4, 8);
+        let dir = tmpdir("wrap");
+        export_store(&m, &v, &dir, 2).unwrap();
+        let store = ShardedStore::open(&dir, Precision::Exact).unwrap();
+        let shard = store.shard(0).unwrap();
+        // `start + n` wraps usize: must panic on the bound check (both
+        // debug and release), not slip through to a slice error
+        let r = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
+            shard.row_block(1, usize::MAX)
+        }));
+        assert!(r.is_err(), "wrapping block range must not be handed out");
+        let r = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
+            shard.row_block(2, shard.rows)
+        }));
+        assert!(r.is_err(), "out-of-range block must panic");
+    }
+
+    #[test]
+    fn nonfinite_rows_zeroed_at_export() {
+        let v = vocab(6);
+        let mut m = EmbeddingModel::init(6, 4, 3);
+        m.syn0_row_mut(2)[1] = f32::NAN;
+        m.syn0_row_mut(4)[0] = f32::INFINITY;
+        let dir = tmpdir("nanexport");
+        export_store(&m, &v, &dir, 2).unwrap();
+        for precision in [Precision::Exact, Precision::Quantized] {
+            let store = ShardedStore::open(&dir, precision).unwrap();
+            let mut out = vec![9.0f32; 4];
+            store.fetch_row(2, &mut out).unwrap().unwrap();
+            assert_eq!(out, vec![0.0; 4], "{} row 2", precision.name());
+            store.fetch_row(4, &mut out).unwrap().unwrap();
+            assert_eq!(out, vec![0.0; 4], "{} row 4", precision.name());
+            // untouched rows survive
+            store.fetch_row(0, &mut out).unwrap().unwrap();
+            assert!(out.iter().all(|x| x.is_finite()));
+            assert!(out.iter().any(|&x| x != 0.0));
+        }
+    }
+
+    #[test]
+    fn nonfinite_shard_payload_rejected_at_load() {
+        let v = vocab(6);
+        let m = EmbeddingModel::init(6, 4, 5);
+        let dir = tmpdir("nanload");
+        export_store(&m, &v, &dir, 1).unwrap();
+        // poison one f32 just past the 32-byte header: headers and file
+        // size stay valid, so open succeeds and the load must catch it
+        let p = dir.join("shard_000.f32");
+        let mut bytes = std::fs::read(&p).unwrap();
+        bytes[32..36].copy_from_slice(&f32::NAN.to_le_bytes());
+        std::fs::write(&p, &bytes).unwrap();
+        let store = ShardedStore::open(&dir, Precision::Exact).unwrap();
+        let err = match store.shard(0) {
+            Ok(_) => panic!("NaN payload must not load"),
+            Err(e) => format!("{e:#}"),
+        };
+        assert!(err.contains("non-finite"), "unexpected error: {err}");
+    }
+
+    #[test]
+    fn truncated_or_mismatched_shard_rejected_at_open() {
+        let v = vocab(8);
+        let m = EmbeddingModel::init(8, 4, 6);
+        let dir = tmpdir("truncated");
+        export_store(&m, &v, &dir, 2).unwrap();
+        let p = dir.join("shard_001.f32");
+        let bytes = std::fs::read(&p).unwrap();
+        // truncated payload fails at open, not mid-query
+        std::fs::write(&p, &bytes[..bytes.len() - 5]).unwrap();
+        let err = match ShardedStore::open(&dir, Precision::Exact) {
+            Ok(_) => panic!("truncated shard must fail open"),
+            Err(e) => format!("{e:#}"),
+        };
+        assert!(err.contains("truncated"), "unexpected error: {err}");
+        // the untouched precision still opens
+        ShardedStore::open(&dir, Precision::Quantized).unwrap();
+        // header dim tampered (bytes 24..32): manifest disagreement
+        let mut tampered = bytes.clone();
+        tampered[24..32].copy_from_slice(&5u64.to_le_bytes());
+        std::fs::write(&p, &tampered).unwrap();
+        assert!(ShardedStore::open(&dir, Precision::Exact).is_err());
+        // restored bytes open again
+        std::fs::write(&p, &bytes).unwrap();
+        ShardedStore::open(&dir, Precision::Exact).unwrap();
+    }
+
+    #[test]
+    fn clustered_export_roundtrips_through_permutation() {
+        let v = vocab(12);
+        let m = EmbeddingModel::init(12, 8, 21);
+        let dir = tmpdir("clustered");
+        let manifest = export_store_clustered(&m, &v, &dir, 3, 4).unwrap();
+        let ivf = manifest.ivf.as_ref().expect("clustered export has index");
+        assert_eq!(ivf.row_ids.len(), 12);
+        assert_eq!(ivf.centroids.len(), ivf.num_clusters() * 8);
+        let store = ShardedStore::open(&dir, Precision::Exact).unwrap();
+        assert!(store.ivf().is_some());
+        // fetch_row(id) must return id's row despite the reordering
+        let normalized = m.normalized_rows();
+        let mut out = vec![0.0f32; 8];
+        for id in 0..12u32 {
+            store.fetch_row(id, &mut out).unwrap().unwrap();
+            assert_eq!(
+                &out,
+                &normalized[id as usize * 8..(id as usize + 1) * 8],
+                "row {id} lost through the cluster permutation"
+            );
+        }
+        // shards report original ids through the permutation
+        for si in 0..store.num_shards() {
+            let shard = store.shard(si).unwrap();
+            for local in 0..shard.rows {
+                let id = shard.id_of(local);
+                assert_eq!(
+                    ivf.row_ids[shard.start_row + local],
+                    id,
+                    "shard {si} local {local}"
+                );
+            }
+        }
     }
 
     #[test]

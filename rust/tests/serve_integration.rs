@@ -9,8 +9,9 @@
 use fullw2v::corpus::vocab::Vocab;
 use fullw2v::model::EmbeddingModel;
 use fullw2v::serve::{
-    export_store, search_rows, search_shard, search_shard_batch, BatchQuery,
-    Precision, ServeEngine, ServeOptions, ShardedStore, TopK,
+    export_store, export_store_clustered, search_rows, search_shard,
+    search_shard_batch, search_shards_batch, search_shards_batch_ranges,
+    BatchQuery, Precision, ServeEngine, ServeOptions, ShardedStore, TopK,
 };
 use fullw2v::util::rng::Pcg32;
 use std::path::PathBuf;
@@ -27,18 +28,18 @@ fn vocab() -> Vocab {
     )
 }
 
-/// A model with planted cluster structure: row i sits near the center of
-/// cluster `i % CLUSTERS`, so nearest neighbors are unambiguous and the
+/// A model with planted cluster structure: row i sits near the center
+/// of blob `i % blobs`, so nearest neighbors are unambiguous and the
 /// exact/quantized comparison isn't dominated by ties.
-fn clustered_model() -> EmbeddingModel {
+fn planted_model(blobs: usize) -> EmbeddingModel {
     let mut m = EmbeddingModel::init(V, D, 5);
     let mut rng = Pcg32::new(9);
-    let mut centers = vec![0.0f32; CLUSTERS * D];
+    let mut centers = vec![0.0f32; blobs * D];
     for c in centers.iter_mut() {
         *c = rng.next_f32() * 2.0 - 1.0;
     }
     for i in 0..V {
-        let c = i % CLUSTERS;
+        let c = i % blobs;
         let row = m.syn0_row_mut(i as u32);
         for (j, x) in row.iter_mut().enumerate() {
             *x = centers[c * D + j] + (rng.next_f32() - 0.5) * 0.2;
@@ -47,12 +48,32 @@ fn clustered_model() -> EmbeddingModel {
     m
 }
 
-fn export(name: &str, model: &EmbeddingModel, shards: usize) -> PathBuf {
+fn clustered_model() -> EmbeddingModel {
+    planted_model(CLUSTERS)
+}
+
+fn test_dir(name: &str) -> PathBuf {
     let dir = std::env::temp_dir()
         .join("fullw2v_serve_integration")
         .join(name);
     std::fs::create_dir_all(&dir).unwrap();
+    dir
+}
+
+fn export(name: &str, model: &EmbeddingModel, shards: usize) -> PathBuf {
+    let dir = test_dir(name);
     export_store(model, &vocab(), &dir, shards).unwrap();
+    dir
+}
+
+fn export_clustered(
+    name: &str,
+    model: &EmbeddingModel,
+    shards: usize,
+    clusters: usize,
+) -> PathBuf {
+    let dir = test_dir(name);
+    export_store_clustered(model, &vocab(), &dir, shards, clusters).unwrap();
     dir
 }
 
@@ -310,6 +331,205 @@ fn export_is_idempotent() {
     store.fetch_row((V - 1) as u32, &mut out).unwrap().unwrap();
     let normalized = model.normalized_rows();
     assert_eq!(&out, &normalized[(V - 1) * D..]);
+}
+
+/// The tentpole's acceptance anchor: with `nprobe` covering ~1/4 of the
+/// clusters, the probed engine answers with recall@10 >= 0.95 against
+/// the exhaustive path while loading < 0.35x the vocabulary per query —
+/// the first time `rows_loaded_per_query` drops below the row count.
+#[test]
+fn probed_scan_meets_recall_and_traffic_targets() {
+    // 8 planted blobs, 8 IVF clusters: the k-means cells recover the
+    // blobs (farthest-point seeding), nprobe 2 covers 1/4 of them
+    let model = planted_model(8);
+    let dir = export_clustered("ivfrecall", &model, 4, 8);
+    let store =
+        Arc::new(ShardedStore::open(&dir, Precision::Exact).unwrap());
+    assert!(store.ivf().is_some(), "clustered export must carry an index");
+    assert_eq!(store.ivf().unwrap().num_clusters(), 8);
+    let exhaustive = ServeEngine::start(store, ServeOptions::default());
+    let probed = ServeEngine::start(
+        Arc::new(ShardedStore::open(&dir, Precision::Exact).unwrap()),
+        ServeOptions {
+            nprobe: 2,
+            cache_capacity: 0,
+            warm_cache: false,
+            ..ServeOptions::default()
+        },
+    );
+    let (ce, cp) = (exhaustive.client(), probed.client());
+    let mut hits = 0usize;
+    let mut total = 0usize;
+    for id in 0..V as u32 {
+        let want: Vec<u32> =
+            ce.query_id(id, 10).unwrap().iter().map(|n| n.id).collect();
+        let got: Vec<u32> =
+            cp.query_id(id, 10).unwrap().iter().map(|n| n.id).collect();
+        assert_eq!(got.len(), want.len(), "query {id}");
+        total += want.len();
+        hits += want.iter().filter(|&&w| got.contains(&w)).count();
+    }
+    drop((ce, cp));
+    exhaustive.shutdown();
+    let report = probed.shutdown();
+    assert_eq!(report.queries, V as u64);
+    assert!(
+        hits as f64 / total as f64 >= 0.95,
+        "recall@10 {hits}/{total} below 0.95"
+    );
+    // serial queries mean singleton batches: the traffic bound is the
+    // probe fraction itself, no batching help
+    let rows_per_query = report.rows_loaded_per_query();
+    assert!(
+        rows_per_query < 0.35 * V as f64,
+        "probed scan touched {rows_per_query:.1} rows/query \
+         (vocab {V}) — not sublinear"
+    );
+    assert!(rows_per_query > 0.0);
+    assert_eq!(report.nprobe, 2);
+    assert_eq!(report.clusters, 8);
+    assert_eq!(report.probed_batches, report.batches);
+    assert!(report.mean_clusters_probed() <= 2.0 + 1e-9);
+}
+
+/// `nprobe = 0` on a clustered (v2) store is bit-identical to the flat
+/// (v1) exhaustive scan of the same model: same neighbor ids, same
+/// scores, same tie order — the permutation must be invisible when not
+/// probing.
+#[test]
+fn clustered_store_exhaustive_scan_matches_flat_store() {
+    let model = clustered_model();
+    let dir_v1 = export("flatref", &model, 4);
+    let dir_v2 = export_clustered("clusteredref", &model, 4, 8);
+    for precision in [Precision::Exact, Precision::Quantized] {
+        let flat = ServeEngine::start(
+            Arc::new(ShardedStore::open(&dir_v1, precision).unwrap()),
+            ServeOptions::default(),
+        );
+        let clustered = ServeEngine::start(
+            Arc::new(ShardedStore::open(&dir_v2, precision).unwrap()),
+            ServeOptions::default(), // nprobe 0: exact exhaustive
+        );
+        let (cf, cc) = (flat.client(), clustered.client());
+        for id in (0..V as u32).step_by(5) {
+            let a = cf.query_id(id, 10).unwrap();
+            let b = cc.query_id(id, 10).unwrap();
+            assert_eq!(a, b, "{} query {id}", precision.name());
+        }
+        drop((cf, cc));
+        flat.shutdown();
+        clustered.shutdown();
+    }
+}
+
+/// The probed scan entry point with a full-coverage range is identical
+/// to the exhaustive batched scan — the range plumbing adds no rounding
+/// or ordering of its own.
+#[test]
+fn full_coverage_probe_ranges_match_exhaustive_scan() {
+    let model = clustered_model();
+    let dir = export_clustered("fullranges", &model, 4, 8);
+    let store = ShardedStore::open(&dir, Precision::Exact).unwrap();
+    let mut qvecs: Vec<Vec<f32>> = Vec::new();
+    let ids: Vec<u32> = (0..V as u32).step_by(7).collect();
+    for &id in &ids {
+        let mut buf = vec![0.0f32; D];
+        store.fetch_row(id, &mut buf).unwrap().unwrap();
+        qvecs.push(buf);
+    }
+    let queries: Vec<BatchQuery<'_>> = ids
+        .iter()
+        .zip(&qvecs)
+        .map(|(&id, v)| BatchQuery { vector: v, exclude: Some(id) })
+        .collect();
+    let shards: Vec<_> =
+        (0..store.num_shards()).map(|i| store.shard(i).unwrap()).collect();
+    let mut exhaustive: Vec<TopK> = ids.iter().map(|_| TopK::new(8)).collect();
+    let rows_a = search_shards_batch(
+        shards.iter().copied(),
+        &queries,
+        &mut exhaustive,
+    );
+    let mut probed: Vec<TopK> = ids.iter().map(|_| TopK::new(8)).collect();
+    let rows_b = search_shards_batch_ranges(
+        shards.iter().copied(),
+        &[(0, V)],
+        &queries,
+        &mut probed,
+    );
+    assert_eq!(rows_a, rows_b);
+    for (a, b) in exhaustive.into_iter().zip(probed) {
+        assert_eq!(a.into_sorted(), b.into_sorted());
+    }
+}
+
+/// Regression for the NaN-poisoning bug: rows that diverged to NaN/inf
+/// are zeroed at export and must never rank above real neighbors (a raw
+/// NaN score would, under `total_cmp`).
+#[test]
+fn nan_rows_never_appear_in_results() {
+    let mut model = clustered_model();
+    model.syn0_row_mut(3)[0] = f32::NAN;
+    model.syn0_row_mut(7).fill(f32::INFINITY);
+    for (name, clusters) in [("nanflat", 0usize), ("nanclustered", 8)] {
+        let dir = export_clustered(name, &model, 4, clusters);
+        for precision in [Precision::Exact, Precision::Quantized] {
+            let store =
+                Arc::new(ShardedStore::open(&dir, precision).unwrap());
+            let engine = ServeEngine::start(store, ServeOptions::default());
+            let client = engine.client();
+            for id in (0..V as u32).step_by(9) {
+                if id == 3 || id == 7 {
+                    continue;
+                }
+                for n in client.query_id(id, 5).unwrap() {
+                    assert!(
+                        n.score.is_finite(),
+                        "{} query {id}: non-finite score served",
+                        precision.name()
+                    );
+                    assert!(
+                        n.id != 3 && n.id != 7,
+                        "{} query {id}: sanitized row {} ranked in top-k",
+                        precision.name(),
+                        n.id
+                    );
+                }
+            }
+            drop(client);
+            engine.shutdown();
+        }
+    }
+}
+
+/// A shard whose payload was corrupted to NaN after export is rejected
+/// at load: queries fail with an error instead of serving poisoned
+/// scores.
+#[test]
+fn corrupted_shard_fails_queries_instead_of_poisoning_them() {
+    let model = clustered_model();
+    let dir = export("corruptshard", &model, 2);
+    let p = dir.join("shard_001.f32");
+    let mut bytes = std::fs::read(&p).unwrap();
+    let mid = 32 + (bytes.len() - 32) / 8 * 4;
+    bytes[mid..mid + 4].copy_from_slice(&f32::NAN.to_le_bytes());
+    std::fs::write(&p, &bytes).unwrap();
+    // headers and sizes are intact, so open succeeds (payloads are lazy)
+    let store =
+        Arc::new(ShardedStore::open(&dir, Precision::Exact).unwrap());
+    let engine = ServeEngine::start(
+        store,
+        ServeOptions {
+            cache_capacity: 0,
+            warm_cache: false,
+            ..ServeOptions::default()
+        },
+    );
+    let client = engine.client();
+    let err = client.query_id(0, 3).unwrap_err();
+    assert!(err.contains("non-finite"), "unexpected error: {err}");
+    drop(client);
+    engine.shutdown();
 }
 
 #[test]
