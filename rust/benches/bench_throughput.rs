@@ -1,11 +1,19 @@
 //! Figures 6/7, measured half: end-to-end training throughput of every
 //! implementation on this substrate (CPU PJRT for the kernel variants,
-//! native Rust for the CPU baselines), on text8-mini and 1bw-mini.
+//! native Rust for the CPU trainers), on text8-mini and 1bw-mini.
 //!
-//! Absolute words/sec are substrate numbers; the GPU-relative factors are
-//! projected by bench_gpusim.  The shape that must hold here: FULL-W2V is
-//! the fastest PJRT variant and the per-pair accSGNS kernel is the
-//! slowest.
+//! Two sections:
+//!
+//! 1. **Hogwild thread scaling** (always runs, no artifacts needed):
+//!    words/sec at 1/2/4/8 worker threads for every CPU trainer, plus
+//!    the measured negative-row-reuse factor (interactions served per
+//!    syn1 negative row fetched from the shared model — the training
+//!    mirror of `rows_loaded_per_query` in bench_serve).  The shape
+//!    that must hold: fullw2v at 4 threads beats serial mikolov by
+//!    >1.5x, and the reuse ladder is mikolov (1x) < pword2vec (~m) <
+//!    psgnscc (~CC*m) < fullw2v (~windows/chunk * m).
+//! 2. **PJRT variants** (needs artifacts): the original Figure 6/7
+//!    table; FULL-W2V must be the fastest PJRT variant.
 //!
 //! Args: `cargo bench --bench bench_throughput [-- --words N --corpus both]`
 
@@ -15,12 +23,11 @@ use fullw2v::util::benchkit::banner;
 use fullw2v::util::tables::{f, Table};
 use fullw2v::workbench::{have_artifacts, Workbench};
 
+const SCALE_THREADS: [usize; 4] = [1, 2, 4, 8];
+const CPU_IMPLS: [&str; 4] = ["mikolov", "pword2vec", "psgnscc", "fullw2v"];
+
 fn main() {
     banner("bench_throughput", "Figures 6/7 (measured on this substrate)");
-    if !have_artifacts() {
-        println!("SKIP: no artifacts (run `make artifacts`)");
-        return;
-    }
     let args: Vec<String> = std::env::args().collect();
     let arg = |name: &str| {
         args.iter()
@@ -31,6 +38,89 @@ fn main() {
         arg("--words").and_then(|v| v.parse().ok()).unwrap_or(50_000);
     let corpus = arg("--corpus").unwrap_or_else(|| "text8".into());
 
+    cpu_thread_scaling(words);
+    pjrt_variants(words, &corpus);
+}
+
+/// Section 1: the Hogwild training layer, words/sec x threads x impl.
+fn cpu_thread_scaling(words: u64) {
+    let spec = {
+        let mut s = SyntheticSpec::text8_mini();
+        s.total_words = words;
+        s
+    };
+    let wb = Workbench::prepare(spec, 5);
+    println!(
+        "\nHogwild thread scaling: {} words, vocab {}",
+        wb.total_words,
+        wb.vocab.len()
+    );
+    let mut t = Table::new(
+        "Hogwild thread scaling: one-epoch words/sec",
+        &["impl", "t=1", "t=2", "t=4", "t=8", "x4 speedup", "neg reuse", "loss/word (t=1)"],
+    );
+    let mut mikolov_serial = 0.0f64;
+    let mut fullw2v_t4 = 0.0f64;
+    for name in CPU_IMPLS {
+        let mut wps = [0.0f64; SCALE_THREADS.len()];
+        let mut reuse = 0.0f64;
+        let mut loss_serial = 0.0f64;
+        for (i, &threads) in SCALE_THREADS.iter().enumerate() {
+            let cfg = TrainConfig { threads, ..TrainConfig::default() };
+            let mut tr = wb.trainer(name, &cfg).unwrap();
+            // epoch 0 warms caches; report epoch 1
+            tr.train_epoch(&wb.sentences, 0).unwrap();
+            let rep = tr.train_epoch(&wb.sentences, 1).unwrap();
+            wps[i] = rep.words_per_sec;
+            if threads == 1 {
+                reuse = rep.neg_row_reuse();
+                loss_serial = rep.loss_per_word;
+            }
+            println!(
+                "  {:28} t={threads}: {:>10.0} w/s  loss/word {:.4}  \
+                 neg reuse {:.1}",
+                tr.name(),
+                rep.words_per_sec,
+                rep.loss_per_word,
+                rep.neg_row_reuse()
+            );
+        }
+        if name == "mikolov" {
+            mikolov_serial = wps[0];
+        }
+        if name == "fullw2v" {
+            fullw2v_t4 = wps[2];
+        }
+        t.row(vec![
+            name.to_string(),
+            f(wps[0], 0),
+            f(wps[1], 0),
+            f(wps[2], 0),
+            f(wps[3], 0),
+            format!("{:.2}x", wps[2] / wps[0].max(1e-9)),
+            f(reuse, 1),
+            f(loss_serial, 4),
+        ]);
+    }
+    println!("\n{}", t.render());
+    println!(
+        "fullw2v @4 threads vs serial mikolov: {:.2}x",
+        fullw2v_t4 / mikolov_serial.max(1e-9)
+    );
+    // the acceptance bar for the Hogwild layer
+    assert!(
+        fullw2v_t4 > 1.5 * mikolov_serial,
+        "fullw2v@4t ({fullw2v_t4:.0} w/s) must exceed 1.5x serial mikolov \
+         ({mikolov_serial:.0} w/s)"
+    );
+}
+
+/// Section 2: the PJRT kernel variants (original Figure 6/7 table).
+fn pjrt_variants(words: u64, corpus: &str) {
+    if !have_artifacts() {
+        println!("\nSKIP pjrt section: no artifacts (run `make artifacts`)");
+        return;
+    }
     let mut corpora = vec![("text8-mini", {
         let mut s = SyntheticSpec::text8_mini();
         s.total_words = words;

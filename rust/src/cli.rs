@@ -29,6 +29,12 @@ pub enum Command {
     Train {
         corpus: Option<String>,
         synthetic: Option<String>,
+        /// Trainer implementation: a CPU trainer (mikolov | pword2vec |
+        /// psgnscc | fullw2v) or a PJRT kernel variant.  None = the
+        /// config's PJRT variant, as before.
+        implementation: Option<String>,
+        /// Hogwild worker threads (overrides `train.threads`; 0 = auto).
+        threads: Option<usize>,
         out: Option<String>,
         /// Export a sharded serving store here after training.
         store: Option<String>,
@@ -81,7 +87,9 @@ USAGE:
   fullw2v [FLAGS] <COMMAND> [ARGS]
 
 COMMANDS:
-  train [--corpus FILE | --synthetic tiny|text8|1bw] [--out MODEL]
+  train [--corpus FILE | --synthetic tiny|text8|1bw]
+        [--impl mikolov|pword2vec|psgnscc|fullw2v|<pjrt-variant>]
+        [--threads T] [--out MODEL]
         [--store DIR [--shards N] [--clusters C]]
   eval --model MODEL.txt --pairs PAIRS.tsv
   nn (--model MODEL.txt | --store DIR [--quantized]) --word WORD [--k K]
@@ -124,7 +132,8 @@ pub fn parse(args: &[String]) -> Result<Cli> {
             "-q" | "--quiet" => log::set_level(Level::Error),
             "--corpus" | "--synthetic" | "--out" | "--model" | "--pairs"
             | "--word" | "--k" | "--spec" | "--store" | "--queries"
-            | "--shards" | "--batch" | "--clusters" | "--nprobe" => {
+            | "--shards" | "--batch" | "--clusters" | "--nprobe"
+            | "--impl" | "--threads" => {
                 let key = a.trim_start_matches('-').to_string();
                 opts.push((key, take_value(&mut i)?));
             }
@@ -158,10 +167,22 @@ pub fn parse(args: &[String]) -> Result<Cli> {
                 .map_err(|_| anyhow!("--{key} needs an integer, got '{v}'")),
         }
     };
+    // optional numeric flags: absent = None, garbage still bails
+    let opt_int_flag = |key: &str| -> Result<Option<usize>> {
+        match get(key) {
+            None => Ok(None),
+            Some(v) => v
+                .parse()
+                .map(Some)
+                .map_err(|_| anyhow!("--{key} needs an integer, got '{v}'")),
+        }
+    };
     let command = match cmd {
         "train" => Command::Train {
             corpus: get("corpus"),
             synthetic: get("synthetic"),
+            implementation: get("impl"),
+            threads: opt_int_flag("threads")?,
             out: get("out"),
             store: get("store"),
             shards: int_flag("shards", 4)?,
@@ -402,6 +423,36 @@ mod tests {
         .is_err());
         assert!(p(&[
             "serve", "--store", "d", "--queries", "q", "--k", "abc"
+        ])
+        .is_err());
+    }
+
+    #[test]
+    fn train_impl_and_threads_flags() {
+        let cli = p(&[
+            "train", "--synthetic", "tiny", "--impl", "fullw2v",
+            "--threads", "4",
+        ])
+        .unwrap();
+        match cli.command {
+            Command::Train { implementation, threads, .. } => {
+                assert_eq!(implementation.as_deref(), Some("fullw2v"));
+                assert_eq!(threads, Some(4));
+            }
+            _ => panic!(),
+        }
+        // both default to "unset" so the config decides
+        let cli = p(&["train", "--synthetic", "tiny"]).unwrap();
+        match cli.command {
+            Command::Train { implementation, threads, .. } => {
+                assert!(implementation.is_none());
+                assert!(threads.is_none());
+            }
+            _ => panic!(),
+        }
+        // garbage thread counts bail like every other int flag
+        assert!(p(&[
+            "train", "--synthetic", "tiny", "--threads", "four"
         ])
         .is_err());
     }

@@ -56,6 +56,9 @@ pub struct TrainConfig {
     /// Ignore sentence delimiters, packing words into fixed-length
     /// pseudo-sentences (paper Section 4.1 does this for GPU utilization).
     pub ignore_delimiters: bool,
+    /// Hogwild worker threads for the CPU trainers (1 = the serial
+    /// reference path; 0 = one per available core).
+    pub threads: usize,
     /// RNG seed.
     pub seed: u64,
 }
@@ -76,6 +79,7 @@ impl Default for TrainConfig {
             sentence_chunk: 32,
             max_sentence_len: 1000,
             ignore_delimiters: false,
+            threads: 1,
             seed: 1,
         }
     }
@@ -85,6 +89,18 @@ impl TrainConfig {
     /// Fixed context width W_f = ceil(W/2) (paper Section 3.2).
     pub fn fixed_width(&self) -> usize {
         self.window.div_ceil(2)
+    }
+
+    /// Hogwild worker-thread count with `0 = one per available core`
+    /// resolved (the same convention as `PipelineConfig::streams`).
+    pub fn resolved_threads(&self) -> usize {
+        if self.threads > 0 {
+            self.threads
+        } else {
+            std::thread::available_parallelism()
+                .map(|n| n.get())
+                .unwrap_or(1)
+        }
     }
 
     /// Validate invariants; returns a descriptive error string.
@@ -146,6 +162,7 @@ impl TrainConfig {
             "ignore_delimiters" => {
                 self.ignore_delimiters = v.as_bool_or(key)?
             }
+            "threads" => self.threads = v.as_usize_or(key)?,
             "seed" => self.seed = v.as_usize_or(key)? as u64,
             _ => return Err(format!("unknown [train] key '{key}'")),
         }
@@ -359,6 +376,20 @@ mod tests {
         let mut cfg = Config::new();
         cfg.apply_override("train.variant=wombat").unwrap();
         assert_eq!(cfg.train.variant, "wombat");
+    }
+
+    #[test]
+    fn threads_key_parses_and_resolves() {
+        let c = TrainConfig::default();
+        assert_eq!(c.threads, 1, "serial by default");
+        assert_eq!(c.resolved_threads(), 1);
+        let cfg =
+            Config::from_toml_str("[train]\nthreads = 4").unwrap();
+        assert_eq!(cfg.train.threads, 4);
+        assert_eq!(cfg.train.resolved_threads(), 4);
+        let mut cfg = Config::new();
+        cfg.apply_override("train.threads=0").unwrap();
+        assert!(cfg.train.resolved_threads() >= 1, "0 = auto");
     }
 
     #[test]

@@ -21,10 +21,18 @@ impl LrSchedule {
     }
 
     pub fn current(&self) -> f32 {
+        self.lr_at(self.processed)
+    }
+
+    /// The lr after `processed` planned words — a pure function of the
+    /// schedule's constants, so Hogwild workers can share one schedule
+    /// immutably behind an atomic word counter and each compute the lr
+    /// for the count they observed.
+    pub fn lr_at(&self, processed: u64) -> f32 {
         let frac = if self.total == 0 {
             0.0
         } else {
-            self.processed as f64 / (self.total + 1) as f64
+            processed as f64 / (self.total + 1) as f64
         };
         let scale = (1.0 - frac).max(self.floor_ratio as f64);
         (self.lr0 as f64 * scale) as f32
@@ -68,6 +76,21 @@ mod tests {
         assert_eq!(s.current(), 0.05);
         s.advance(100);
         assert_eq!(s.current(), 0.05);
+    }
+
+    #[test]
+    fn lr_at_matches_mutating_walk() {
+        // the pure lookup and the advancing walk must agree bit-for-bit,
+        // whatever order the Hogwild workers observe the counter in
+        let mut s = LrSchedule::new(0.025, 1e-4, 5000);
+        let probe = s.clone();
+        let mut processed = 0u64;
+        for step in [0u64, 17, 500, 1, 4000, 600] {
+            assert_eq!(s.current().to_bits(), probe.lr_at(processed).to_bits());
+            s.advance(step);
+            processed += step;
+        }
+        assert_eq!(s.current().to_bits(), probe.lr_at(processed).to_bits());
     }
 
     #[test]

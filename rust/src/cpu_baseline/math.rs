@@ -1,125 +1,31 @@
-//! Shared SGNS math kernels for the CPU baselines.
+//! Shared SGNS math for the CPU baselines — re-exported from the
+//! crate-wide kernel layer.
+//!
+//! The dot/axpy hot loops moved to `vecops` in PR 2; the sigmoid family
+//! ([`SigmoidTable`], exact [`sigmoid`], [`softplus`]) followed when the
+//! Hogwild training layer landed, so the serial baselines, the FULL-W2V
+//! reference trainer, and any future kernel all share one
+//! implementation.  This module remains as the baselines' historical
+//! import path.
 
-/// word2vec.c's EXP_TABLE: sigmoid precomputed over [-MAX_EXP, MAX_EXP]
-/// in EXP_TABLE_SIZE buckets, saturating outside.
-pub struct SigmoidTable {
-    table: Vec<f32>,
-    max_exp: f32,
-}
-
-impl SigmoidTable {
-    pub const EXP_TABLE_SIZE: usize = 1000;
-    pub const MAX_EXP: f32 = 6.0;
-
-    pub fn new() -> Self {
-        let n = Self::EXP_TABLE_SIZE;
-        let table = (0..n)
-            .map(|i| {
-                let x = (i as f32 / n as f32 * 2.0 - 1.0) * Self::MAX_EXP;
-                let e = x.exp();
-                e / (e + 1.0)
-            })
-            .collect();
-        SigmoidTable { table, max_exp: Self::MAX_EXP }
-    }
-
-    /// Table lookup, saturating to {0, 1} outside ±MAX_EXP exactly like
-    /// word2vec.c (which skips the update when |x| > MAX_EXP for the
-    /// positive label path; we return the saturated value instead, which
-    /// zeroes the gradient for label-matched pairs).
-    #[inline]
-    pub fn sigmoid(&self, x: f32) -> f32 {
-        if x >= self.max_exp {
-            1.0
-        } else if x <= -self.max_exp {
-            0.0
-        } else {
-            let idx = ((x + self.max_exp)
-                * (Self::EXP_TABLE_SIZE as f32 / (2.0 * self.max_exp)))
-                as usize;
-            self.table[idx.min(Self::EXP_TABLE_SIZE - 1)]
-        }
-    }
-}
-
-impl Default for SigmoidTable {
-    fn default() -> Self {
-        Self::new()
-    }
-}
-
-/// Exact sigmoid (used by the matrix baselines; numerically stable).
-#[inline]
-pub fn sigmoid(x: f32) -> f32 {
-    if x >= 0.0 {
-        1.0 / (1.0 + (-x).exp())
-    } else {
-        let e = x.exp();
-        e / (1.0 + e)
-    }
-}
-
-/// Numerically-stable softplus log(1+e^x), for loss reporting.
-#[inline]
-pub fn softplus(x: f32) -> f64 {
-    let x = x as f64;
-    if x > 30.0 {
-        x
-    } else if x < -30.0 {
-        0.0
-    } else {
-        x.exp().ln_1p()
-    }
-}
-
-// The dot/axpy hot loops live in the crate-wide kernel layer now; the
-// re-export keeps `math::{dot, axpy}` as the baselines' import path.
-pub use crate::vecops::{axpy, dot};
+pub use crate::vecops::{axpy, dot, sigmoid, softplus, SigmoidTable};
 
 #[cfg(test)]
 mod tests {
     use super::*;
 
+    /// The re-export surface the baselines compile against.
     #[test]
-    fn table_tracks_exact_sigmoid() {
-        let t = SigmoidTable::new();
-        for i in -50..=50 {
-            let x = i as f32 * 0.1;
-            let err = (t.sigmoid(x) - sigmoid(x)).abs();
-            assert!(err < 0.01, "x={x} err={err}");
-        }
-    }
-
-    #[test]
-    fn table_saturates() {
-        let t = SigmoidTable::new();
-        assert_eq!(t.sigmoid(100.0), 1.0);
-        assert_eq!(t.sigmoid(-100.0), 0.0);
-        assert_eq!(t.sigmoid(6.0), 1.0);
-        assert_eq!(t.sigmoid(-6.0), 0.0);
-    }
-
-    #[test]
-    fn exact_sigmoid_properties() {
-        assert!((sigmoid(0.0) - 0.5).abs() < 1e-7);
-        assert!((sigmoid(5.0) + sigmoid(-5.0) - 1.0).abs() < 1e-6);
-        assert!(sigmoid(-80.0) >= 0.0 && sigmoid(80.0) <= 1.0);
-    }
-
-    #[test]
-    fn softplus_stable() {
-        assert!((softplus(0.0) - 2f64.ln()).abs() < 1e-12);
-        assert_eq!(softplus(100.0), 100.0);
-        assert_eq!(softplus(-100.0), 0.0);
-    }
-
-    #[test]
-    fn dot_axpy() {
+    fn reexports_are_the_vecops_kernels() {
         let a = [1.0, 2.0, 3.0];
         let b = [4.0, 5.0, 6.0];
-        assert_eq!(dot(&a, &b), 32.0);
+        assert_eq!(dot(&a, &b), crate::vecops::dot(&a, &b));
         let mut y = [1.0, 1.0, 1.0];
         axpy(2.0, &a, &mut y);
         assert_eq!(y, [3.0, 5.0, 7.0]);
+        assert!((sigmoid(0.0) - 0.5).abs() < 1e-7);
+        assert!((softplus(0.0) - 2f64.ln()).abs() < 1e-12);
+        let t = SigmoidTable::new();
+        assert_eq!(t.sigmoid(100.0), 1.0);
     }
 }

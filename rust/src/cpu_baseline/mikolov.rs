@@ -5,82 +5,119 @@
 //! compared implementations, Section 5.3.3).  This is both the slowest
 //! baseline in the throughput figures and the semantic reference the
 //! integration tests compare embedding quality against.
+//!
+//! The update rule lives in [`MikolovKernel`], a per-thread
+//! [`ShardTrainer`] chunk kernel driven by the Hogwild epoch driver;
+//! at one thread the walk is exactly the historical serial loop.
 
-use super::math::{softplus, SigmoidTable};
-use crate::vecops::{axpy, dot};
-use super::{epoch_loop, BaseTrainer};
+use super::BaseTrainer;
 use crate::config::TrainConfig;
 use crate::coordinator::SgnsTrainer;
 use crate::corpus::vocab::Vocab;
 use crate::metrics::EpochReport;
 use crate::model::EmbeddingModel;
 use crate::sampler::window::context_positions;
+use crate::trainer::{hogwild, ReuseCounters, ShardCtx, ShardTrainer};
 use crate::util::rng::Pcg32;
+use crate::vecops::{axpy, dot, softplus, SigmoidTable};
 use anyhow::Result;
 use std::sync::Arc;
 
 pub struct MikolovTrainer {
     base: BaseTrainer,
-    sig: SigmoidTable,
+    sig: Arc<SigmoidTable>,
 }
 
 impl MikolovTrainer {
     pub fn new(cfg: &TrainConfig, vocab: &Vocab, total_words_hint: u64) -> Self {
         MikolovTrainer {
             base: BaseTrainer::new(cfg, vocab, total_words_hint),
-            sig: SigmoidTable::new(),
+            sig: Arc::new(SigmoidTable::new()),
         }
     }
+}
 
-    /// One sentence of scalar training; returns NS loss (pre-update).
-    fn train_sentence(
-        base: &mut BaseTrainer,
-        sig: &SigmoidTable,
+/// Per-thread scalar kernel: word2vec.c's per-pair immediate updates.
+struct MikolovKernel {
+    sig: Arc<SigmoidTable>,
+    negs: Vec<u32>,
+    neu1e: Vec<f32>,
+    h: Vec<f32>,
+    u: Vec<f32>,
+    reuse: ReuseCounters,
+}
+
+impl MikolovKernel {
+    fn new(sig: Arc<SigmoidTable>) -> Self {
+        MikolovKernel {
+            sig,
+            negs: Vec::new(),
+            neu1e: Vec::new(),
+            h: Vec::new(),
+            u: Vec::new(),
+            reuse: ReuseCounters::default(),
+        }
+    }
+}
+
+impl ShardTrainer for MikolovKernel {
+    fn train_chunk(
+        &mut self,
+        ctx: &ShardCtx<'_>,
         sent: &[u32],
         lr: f32,
         rng: &mut Pcg32,
     ) -> f64 {
-        let wf = base.cfg.fixed_width();
-        let n_neg = base.cfg.negatives;
-        let d = base.model.dim;
-        let mut negs = vec![0u32; n_neg];
-        let mut neu1e = vec![0.0f32; d];
+        let wf = ctx.cfg.fixed_width();
+        let n_neg = ctx.cfg.negatives;
+        let d = ctx.model.dim();
+        self.negs.resize(n_neg, 0);
+        self.neu1e.resize(d, 0.0);
+        self.h.resize(d, 0.0);
+        self.u.resize(d, 0.0);
         let mut loss = 0.0f64;
         for t in 0..sent.len() {
             let center = sent[t];
             // per-window shared negatives
-            base.negatives.fill(rng, center, &mut negs);
+            ctx.negatives.fill(rng, center, &mut self.negs);
             for j in context_positions(t, wf, sent.len()) {
-                let ctx = sent[j];
-                neu1e.iter_mut().for_each(|x| *x = 0.0);
+                let ctx_word = sent[j];
+                self.neu1e.iter_mut().for_each(|x| *x = 0.0);
+                // the context row is stable across the pair loop (only
+                // syn1 updates inside it), so one copy serves all pairs
+                ctx.model.copy_syn0_row(ctx_word, &mut self.h);
                 // positive pair + N negatives, immediate syn1 updates
                 for k in 0..=n_neg {
                     let (target, label) = if k == 0 {
                         (center, 1.0f32)
                     } else {
-                        (negs[k - 1], 0.0f32)
+                        (self.negs[k - 1], 0.0f32)
                     };
-                    let h = base.model.syn0_row(ctx);
-                    let u = base.model.syn1_row(target);
-                    let z = dot(h, u);
-                    let f = sig.sigmoid(z);
+                    // pre-update output row
+                    ctx.model.copy_syn1_row(target, &mut self.u);
+                    let z = dot(&self.h, &self.u);
+                    let f = self.sig.sigmoid(z);
                     let g = (label - f) * lr;
-                    loss += if k == 0 {
-                        softplus(-z)
-                    } else {
-                        softplus(z)
-                    };
+                    loss += if k == 0 { softplus(-z) } else { softplus(z) };
                     // neu1e += g * u  (pre-update u)
-                    axpy(g, u, &mut neu1e);
-                    // syn1[target] += g * h — aliasing-free: copy h first
-                    let h_copy: Vec<f32> = h.to_vec();
-                    axpy(g, &h_copy, base.model.syn1_row_mut(target));
+                    axpy(g, &self.u, &mut self.neu1e);
+                    // syn1[target] += g * h, immediately
+                    ctx.model.axpy_syn1_row(target, g, &self.h);
+                    if k > 0 {
+                        // every negative interaction re-fetches the row:
+                        // the no-reuse baseline the counters compare to
+                        self.reuse.neg_rows_loaded += 1;
+                        self.reuse.neg_row_uses += 1;
+                    }
                 }
-                let neu = neu1e.clone();
-                axpy(1.0, &neu, base.model.syn0_row_mut(ctx));
+                ctx.model.add_syn0_row(ctx_word, &self.neu1e);
             }
         }
         loss
+    }
+
+    fn reuse(&self) -> ReuseCounters {
+        self.reuse
     }
 }
 
@@ -94,12 +131,10 @@ impl SgnsTrainer for MikolovTrainer {
         sentences: &Arc<Vec<Vec<u32>>>,
         epoch: usize,
     ) -> Result<EpochReport> {
-        // disjoint field borrows: base mutably, sigmoid table immutably
         let sig = &self.sig;
-        let rep = epoch_loop(&mut self.base, sentences, epoch, |b, s, lr, rng| {
-            Self::train_sentence(b, sig, s, lr, rng)
-        });
-        Ok(rep)
+        Ok(hogwild::run_epoch(&mut self.base, sentences, epoch, |_tid| {
+            MikolovKernel::new(sig.clone())
+        }))
     }
 
     fn model(&self) -> &EmbeddingModel {
@@ -114,8 +149,8 @@ impl SgnsTrainer for MikolovTrainer {
 #[cfg(test)]
 mod tests {
     use super::*;
-    use crate::corpus::synthetic::{SyntheticCorpus, SyntheticSpec};
     use crate::coordinator::train_all;
+    use crate::corpus::synthetic::{SyntheticCorpus, SyntheticSpec};
 
     fn tiny_setup() -> (TrainConfig, Vocab, Arc<Vec<Vec<u32>>>) {
         let corpus = SyntheticCorpus::generate(SyntheticSpec::tiny());
@@ -170,5 +205,16 @@ mod tests {
             .filter(|(a, b)| (*a - *b).abs() > 1e-7)
             .count();
         assert!(moved > before.len() / 2);
+    }
+
+    #[test]
+    fn negative_traffic_has_no_reuse() {
+        // the scalar baseline fetches a negative row per interaction:
+        // loads == uses, reuse factor exactly 1
+        let (cfg, vocab, sents) = tiny_setup();
+        let mut tr = MikolovTrainer::new(&cfg, &vocab, 1000);
+        let rep = tr.train_epoch(&sents, 0).unwrap();
+        assert!(rep.neg_rows_loaded > 0);
+        assert_eq!(rep.neg_rows_loaded, rep.neg_row_uses);
     }
 }

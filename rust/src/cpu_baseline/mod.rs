@@ -11,6 +11,14 @@
 //! All three implement [`crate::coordinator::SgnsTrainer`], so the
 //! throughput benches (Figs 6/7) and the quality bench (Table 7) run them
 //! interchangeably with the PJRT coordinator.
+//!
+//! Since the Hogwild training layer landed, each baseline is a
+//! [`crate::trainer::ShardTrainer`] chunk kernel driven by
+//! `trainer::hogwild::run_epoch` — the serial `epoch_loop` these modules
+//! used through PR 3 is gone, and `train.threads > 1` shards every
+//! baseline across Hogwild workers.  The shared `BaseTrainer`
+//! scaffolding lives in [`crate::trainer`] now; the FULL-W2V reference
+//! CPU trainer (both reuse axes) is `trainer::FullW2vTrainer`.
 
 pub mod math;
 pub mod mikolov;
@@ -21,86 +29,4 @@ pub use mikolov::MikolovTrainer;
 pub use psgnscc::PsgnsccTrainer;
 pub use pword2vec::PWord2VecTrainer;
 
-use crate::config::TrainConfig;
-use crate::coordinator::lr::LrSchedule;
-use crate::corpus::subsample::Subsampler;
-use crate::corpus::vocab::Vocab;
-use crate::model::EmbeddingModel;
-use crate::sampler::unigram::UnigramTable;
-use crate::util::rng::Pcg32;
-
-/// Shared scaffolding for the CPU trainers.
-pub(crate) struct BaseTrainer {
-    pub model: EmbeddingModel,
-    pub subsampler: Subsampler,
-    pub negatives: UnigramTable,
-    pub schedule: LrSchedule,
-    pub cfg: TrainConfig,
-}
-
-impl BaseTrainer {
-    pub fn new(cfg: &TrainConfig, vocab: &Vocab, total_words_hint: u64) -> Self {
-        BaseTrainer {
-            model: EmbeddingModel::init(vocab.len(), cfg.dim, cfg.seed),
-            subsampler: Subsampler::new(vocab, cfg.subsample),
-            negatives: UnigramTable::new(vocab, UnigramTable::DEFAULT_ALPHA),
-            schedule: LrSchedule::new(
-                cfg.lr,
-                cfg.min_lr_ratio,
-                total_words_hint * cfg.epochs as u64,
-            ),
-            cfg: cfg.clone(),
-        }
-    }
-
-    pub fn epoch_rng(&self, epoch: usize) -> Pcg32 {
-        Pcg32::with_stream(self.cfg.seed ^ (epoch as u64 + 1), 0xc9)
-    }
-}
-
-/// Run a closure over every (subsampled) sentence of an epoch, collecting
-/// the standard report.  `f(sentence, lr) -> loss`.
-pub(crate) fn epoch_loop<F>(
-    base: &mut BaseTrainer,
-    sentences: &[Vec<u32>],
-    epoch: usize,
-    mut f: F,
-) -> crate::metrics::EpochReport
-where
-    F: FnMut(&mut BaseTrainer, &[u32], f32, &mut Pcg32) -> f64,
-{
-    let t0 = std::time::Instant::now();
-    let mut rng = base.epoch_rng(epoch);
-    let mut rep = crate::metrics::EpochReport { epoch, ..Default::default() };
-    let mut lr = base.schedule.current();
-    let mut kept = Vec::new();
-    for sent in sentences {
-        kept.clear();
-        kept.extend_from_slice(sent);
-        base.subsampler.filter(&mut kept, &mut rng);
-        if kept.len() < 2 {
-            continue;
-        }
-        // cap to the same chunk length the GPU path uses, for fairness
-        let chunk = base.cfg.sentence_chunk;
-        let mut loss = 0.0;
-        let mut words = 0u64;
-        let kept_taken = std::mem::take(&mut kept);
-        for c in kept_taken.chunks(chunk) {
-            if c.len() < 2 {
-                continue;
-            }
-            loss += f(base, c, lr, &mut rng);
-            words += c.len() as u64;
-        }
-        kept = kept_taken;
-        rep.loss_sum += loss;
-        rep.words += words;
-        rep.batches += 1;
-        lr = base.schedule.advance(words);
-    }
-    rep.lr_end = lr;
-    rep.seconds = t0.elapsed().as_secs_f64();
-    rep.finalize();
-    rep
-}
+pub(crate) use crate::trainer::BaseTrainer;

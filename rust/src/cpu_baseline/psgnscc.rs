@@ -7,17 +7,20 @@
 //! and the output block stacks the CC centers + the shared negatives
 //! ((CC + N) x d); the label matrix marks each context row's own center
 //! positive, everything else negative.  Updates apply once per block.
+//!
+//! The update rule lives in [`PsgnsccKernel`], a per-thread
+//! [`ShardTrainer`] chunk kernel driven by the Hogwild epoch driver.
 
-use super::math::{sigmoid, softplus};
-use crate::vecops::dot;
-use super::{epoch_loop, BaseTrainer};
+use super::BaseTrainer;
 use crate::config::TrainConfig;
 use crate::coordinator::SgnsTrainer;
 use crate::corpus::vocab::Vocab;
 use crate::metrics::EpochReport;
 use crate::model::EmbeddingModel;
 use crate::sampler::window::context_positions;
+use crate::trainer::{hogwild, ReuseCounters, ShardCtx, ShardTrainer};
 use crate::util::rng::Pcg32;
+use crate::vecops::{axpy, dot, sigmoid, softplus};
 use anyhow::Result;
 use std::sync::Arc;
 
@@ -26,11 +29,19 @@ pub const COMBINE: usize = 4;
 
 pub struct PsgnsccTrainer {
     base: BaseTrainer,
-    scratch: Scratch,
 }
 
+impl PsgnsccTrainer {
+    pub fn new(cfg: &TrainConfig, vocab: &Vocab, total_words_hint: u64) -> Self {
+        PsgnsccTrainer {
+            base: BaseTrainer::new(cfg, vocab, total_words_hint),
+        }
+    }
+}
+
+/// Per-thread combined-window kernel.
 #[derive(Default)]
-struct Scratch {
+struct PsgnsccKernel {
     c: Vec<f32>,
     u: Vec<f32>,
     g: Vec<f32>,
@@ -41,26 +52,21 @@ struct Scratch {
     /// Which combined-window each context row belongs to.
     row_window: Vec<usize>,
     centers: Vec<u32>,
+    reuse: ReuseCounters,
 }
 
-impl PsgnsccTrainer {
-    pub fn new(cfg: &TrainConfig, vocab: &Vocab, total_words_hint: u64) -> Self {
-        PsgnsccTrainer {
-            base: BaseTrainer::new(cfg, vocab, total_words_hint),
-            scratch: Scratch::default(),
-        }
-    }
-
-    fn train_sentence(
-        base: &mut BaseTrainer,
-        sc: &mut Scratch,
+impl ShardTrainer for PsgnsccKernel {
+    fn train_chunk(
+        &mut self,
+        ctx: &ShardCtx<'_>,
         sent: &[u32],
         lr: f32,
         rng: &mut Pcg32,
     ) -> f64 {
-        let wf = base.cfg.fixed_width();
-        let n_neg = base.cfg.negatives;
-        let d = base.model.dim;
+        let sc = self;
+        let wf = ctx.cfg.fixed_width();
+        let n_neg = ctx.cfg.negatives;
+        let d = ctx.model.dim();
         sc.negs.resize(n_neg, 0);
         let mut loss = 0.0f64;
         let mut t = 0;
@@ -86,7 +92,7 @@ impl PsgnsccTrainer {
             // one shared negative set per block, avoiding all centers
             for slot in sc.negs.iter_mut() {
                 loop {
-                    let g = base.negatives.sample(rng);
+                    let g = ctx.negatives.sample(rng);
                     if !sc.centers.contains(&g) {
                         *slot = g;
                         break;
@@ -98,19 +104,21 @@ impl PsgnsccTrainer {
             // gather
             sc.c.resize(m * d, 0.0);
             for (i, &w) in sc.ctx_ids.iter().enumerate() {
-                sc.c[i * d..(i + 1) * d]
-                    .copy_from_slice(base.model.syn0_row(w));
+                ctx.model.copy_syn0_row(w, &mut sc.c[i * d..(i + 1) * d]);
             }
             sc.u.resize(cols * d, 0.0);
             for (k, &w) in sc.centers.iter().enumerate() {
-                sc.u[k * d..(k + 1) * d]
-                    .copy_from_slice(base.model.syn1_row(w));
+                ctx.model.copy_syn1_row(w, &mut sc.u[k * d..(k + 1) * d]);
             }
             for (k, &g) in sc.negs.iter().enumerate() {
                 let kk = ncenters + k;
-                sc.u[kk * d..(kk + 1) * d]
-                    .copy_from_slice(base.model.syn1_row(g));
+                ctx.model
+                    .copy_syn1_row(g, &mut sc.u[kk * d..(kk + 1) * d]);
             }
+            // negatives gathered once per combined block, reused by
+            // every context row of all CC windows
+            sc.reuse.neg_rows_loaded += n_neg as u64;
+            sc.reuse.neg_row_uses += (m * n_neg) as u64;
 
             // gradients: row i's positive column is its own window's center
             sc.g.resize(m * cols, 0.0);
@@ -152,37 +160,38 @@ impl PsgnsccTrainer {
                 for k in 0..cols {
                     let g = sc.g[i * cols + k];
                     if g != 0.0 {
-                        for x in 0..d {
-                            sc.dc[i * d + x] += g * sc.u[k * d + x];
-                            sc.du[k * d + x] += g * sc.c[i * d + x];
-                        }
+                        axpy(
+                            g,
+                            &sc.u[k * d..(k + 1) * d],
+                            &mut sc.dc[i * d..(i + 1) * d],
+                        );
+                        axpy(
+                            g,
+                            &sc.c[i * d..(i + 1) * d],
+                            &mut sc.du[k * d..(k + 1) * d],
+                        );
                     }
                 }
             }
 
             // scatter
             for (i, &w) in sc.ctx_ids.iter().enumerate() {
-                let row = base.model.syn0_row_mut(w);
-                for x in 0..d {
-                    row[x] += sc.dc[i * d + x];
-                }
+                ctx.model.add_syn0_row(w, &sc.dc[i * d..(i + 1) * d]);
             }
             for (k, &w) in sc.centers.iter().enumerate() {
-                let row = base.model.syn1_row_mut(w);
-                for x in 0..d {
-                    row[x] += sc.du[k * d + x];
-                }
+                ctx.model.add_syn1_row(w, &sc.du[k * d..(k + 1) * d]);
             }
             for (k, &g) in sc.negs.iter().enumerate() {
                 let kk = ncenters + k;
-                let row = base.model.syn1_row_mut(g);
-                for x in 0..d {
-                    row[x] += sc.du[kk * d + x];
-                }
+                ctx.model.add_syn1_row(g, &sc.du[kk * d..(kk + 1) * d]);
             }
             t = block_end;
         }
         loss
+    }
+
+    fn reuse(&self) -> ReuseCounters {
+        self.reuse
     }
 }
 
@@ -196,11 +205,9 @@ impl SgnsTrainer for PsgnsccTrainer {
         sentences: &Arc<Vec<Vec<u32>>>,
         epoch: usize,
     ) -> Result<EpochReport> {
-        let sc = &mut self.scratch;
-        let rep = epoch_loop(&mut self.base, sentences, epoch, |b, s, lr, rng| {
-            Self::train_sentence(b, sc, s, lr, rng)
-        });
-        Ok(rep)
+        Ok(hogwild::run_epoch(&mut self.base, sentences, epoch, |_tid| {
+            PsgnsccKernel::default()
+        }))
     }
 
     fn model(&self) -> &EmbeddingModel {
@@ -246,13 +253,13 @@ mod tests {
             ..TrainConfig::default()
         };
         let total: u64 = sentences.iter().map(|s| s.len() as u64).sum();
-        let mut tr = PsgnsccTrainer::new(&cfg, &vocab, total * 2);
+        let mut tr = PsgnsccTrainer::new(&cfg, &vocab, total);
         let rep = train_all(&mut tr, &sentences, 2).unwrap();
         let (first, last) = rep.loss_trajectory();
         assert!(last < first, "{first} -> {last}");
 
         let mut pw =
-            crate::cpu_baseline::PWord2VecTrainer::new(&cfg, &vocab, total * 2);
+            crate::cpu_baseline::PWord2VecTrainer::new(&cfg, &vocab, total);
         let rep_pw = train_all(&mut pw, &sentences, 2).unwrap();
         // combined batching changes arithmetic order but must converge to a
         // similar loss region

@@ -6,54 +6,61 @@
 //! These are exactly the FULL-W2V kernel semantics (`ref.sgns_window_ref`),
 //! so this trainer doubles as the quality counterpart in Table 7 and as a
 //! cross-check of the PJRT path in integration tests.
+//!
+//! The update rule lives in [`PWord2VecKernel`], a per-thread
+//! [`ShardTrainer`] chunk kernel driven by the Hogwild epoch driver.
 
-use super::math::{sigmoid, softplus};
-use super::{epoch_loop, BaseTrainer};
+use super::BaseTrainer;
 use crate::config::TrainConfig;
 use crate::coordinator::SgnsTrainer;
 use crate::corpus::vocab::Vocab;
 use crate::metrics::EpochReport;
 use crate::model::EmbeddingModel;
 use crate::sampler::window::context_positions;
+use crate::trainer::{hogwild, ReuseCounters, ShardCtx, ShardTrainer};
 use crate::util::rng::Pcg32;
+use crate::vecops::{axpy, dot, sigmoid, softplus};
 use anyhow::Result;
 use std::sync::Arc;
 
 pub struct PWord2VecTrainer {
     base: BaseTrainer,
-    /// Scratch reused across windows (no hot-loop allocation).
-    scratch: Scratch,
-}
-
-#[derive(Default)]
-struct Scratch {
-    c: Vec<f32>,      // m x d context rows
-    u: Vec<f32>,      // (N+1) x d output rows
-    g: Vec<f32>,      // m x (N+1) gradients
-    dc: Vec<f32>,     // m x d
-    du: Vec<f32>,     // (N+1) x d
-    negs: Vec<u32>,
-    ctx_ids: Vec<u32>,
 }
 
 impl PWord2VecTrainer {
     pub fn new(cfg: &TrainConfig, vocab: &Vocab, total_words_hint: u64) -> Self {
         PWord2VecTrainer {
             base: BaseTrainer::new(cfg, vocab, total_words_hint),
-            scratch: Scratch::default(),
         }
     }
+}
 
-    fn train_sentence(
-        base: &mut BaseTrainer,
-        sc: &mut Scratch,
+/// Per-thread window-matrix kernel; scratch reused across windows (no
+/// hot-loop allocation).
+#[derive(Default)]
+struct PWord2VecKernel {
+    c: Vec<f32>,  // m x d context rows
+    u: Vec<f32>,  // (N+1) x d output rows
+    g: Vec<f32>,  // m x (N+1) gradients
+    dc: Vec<f32>, // m x d
+    du: Vec<f32>, // (N+1) x d
+    negs: Vec<u32>,
+    ctx_ids: Vec<u32>,
+    reuse: ReuseCounters,
+}
+
+impl ShardTrainer for PWord2VecKernel {
+    fn train_chunk(
+        &mut self,
+        ctx: &ShardCtx<'_>,
         sent: &[u32],
         lr: f32,
         rng: &mut Pcg32,
     ) -> f64 {
-        let wf = base.cfg.fixed_width();
-        let n_neg = base.cfg.negatives;
-        let d = base.model.dim;
+        let sc = self;
+        let wf = ctx.cfg.fixed_width();
+        let n_neg = ctx.cfg.negatives;
+        let d = ctx.model.dim();
         let cols = n_neg + 1;
         sc.negs.resize(n_neg, 0);
         let mut loss = 0.0f64;
@@ -67,26 +74,29 @@ impl PWord2VecTrainer {
             if m == 0 {
                 continue;
             }
-            base.negatives.fill(rng, center, &mut sc.negs);
+            ctx.negatives.fill(rng, center, &mut sc.negs);
 
             // gather C and U
             sc.c.resize(m * d, 0.0);
             sc.u.resize(cols * d, 0.0);
             for (i, &w) in sc.ctx_ids.iter().enumerate() {
-                sc.c[i * d..(i + 1) * d]
-                    .copy_from_slice(base.model.syn0_row(w));
+                ctx.model.copy_syn0_row(w, &mut sc.c[i * d..(i + 1) * d]);
             }
-            sc.u[0..d].copy_from_slice(base.model.syn1_row(center));
+            ctx.model.copy_syn1_row(center, &mut sc.u[0..d]);
             for (k, &g) in sc.negs.iter().enumerate() {
-                sc.u[(k + 1) * d..(k + 2) * d]
-                    .copy_from_slice(base.model.syn1_row(g));
+                ctx.model
+                    .copy_syn1_row(g, &mut sc.u[(k + 1) * d..(k + 2) * d]);
             }
+            // negatives gathered once per window, reused by every
+            // context row of the window
+            sc.reuse.neg_rows_loaded += n_neg as u64;
+            sc.reuse.neg_row_uses += (m * n_neg) as u64;
 
             // G = (label - sigmoid(C U^T)) * lr, loss from pre-update Z
             sc.g.resize(m * cols, 0.0);
             for i in 0..m {
                 for k in 0..cols {
-                    let z = crate::vecops::dot(
+                    let z = dot(
                         &sc.c[i * d..(i + 1) * d],
                         &sc.u[k * d..(k + 1) * d],
                     );
@@ -105,35 +115,35 @@ impl PWord2VecTrainer {
                 for k in 0..cols {
                     let g = sc.g[i * cols + k];
                     if g != 0.0 {
-                        for x in 0..d {
-                            sc.dc[i * d + x] += g * sc.u[k * d + x];
-                            sc.du[k * d + x] += g * sc.c[i * d + x];
-                        }
+                        axpy(
+                            g,
+                            &sc.u[k * d..(k + 1) * d],
+                            &mut sc.dc[i * d..(i + 1) * d],
+                        );
+                        axpy(
+                            g,
+                            &sc.c[i * d..(i + 1) * d],
+                            &mut sc.du[k * d..(k + 1) * d],
+                        );
                     }
                 }
             }
 
             // scatter both sides (duplicates in ctx_ids sum, like Hogwild)
             for (i, &w) in sc.ctx_ids.iter().enumerate() {
-                let row = base.model.syn0_row_mut(w);
-                for x in 0..d {
-                    row[x] += sc.dc[i * d + x];
-                }
+                ctx.model.add_syn0_row(w, &sc.dc[i * d..(i + 1) * d]);
             }
-            {
-                let row = base.model.syn1_row_mut(center);
-                for x in 0..d {
-                    row[x] += sc.du[x];
-                }
-            }
+            ctx.model.add_syn1_row(center, &sc.du[0..d]);
             for (k, &gid) in sc.negs.iter().enumerate() {
-                let row = base.model.syn1_row_mut(gid);
-                for x in 0..d {
-                    row[x] += sc.du[(k + 1) * d + x];
-                }
+                ctx.model
+                    .add_syn1_row(gid, &sc.du[(k + 1) * d..(k + 2) * d]);
             }
         }
         loss
+    }
+
+    fn reuse(&self) -> ReuseCounters {
+        self.reuse
     }
 }
 
@@ -147,11 +157,9 @@ impl SgnsTrainer for PWord2VecTrainer {
         sentences: &Arc<Vec<Vec<u32>>>,
         epoch: usize,
     ) -> Result<EpochReport> {
-        let sc = &mut self.scratch;
-        let rep = epoch_loop(&mut self.base, sentences, epoch, |b, s, lr, rng| {
-            Self::train_sentence(b, sc, s, lr, rng)
-        });
-        Ok(rep)
+        Ok(hogwild::run_epoch(&mut self.base, sentences, epoch, |_tid| {
+            PWord2VecKernel::default()
+        }))
     }
 
     fn model(&self) -> &EmbeddingModel {
@@ -245,7 +253,7 @@ mod tests {
             ..TrainConfig::default()
         };
         let total: u64 = sentences.iter().map(|s| s.len() as u64).sum();
-        let mut tr = PWord2VecTrainer::new(&cfg, &vocab, total * 2);
+        let mut tr = PWord2VecTrainer::new(&cfg, &vocab, total);
         let rep = train_all(&mut tr, &sentences, 2).unwrap();
         let (first, last) = rep.loss_trajectory();
         assert!(last < first, "{first} -> {last}");

@@ -30,6 +30,14 @@
 //! The serving engine scans every shard **once per micro-batch** through
 //! these tiles rather than once per query.
 //!
+//! The CPU training side mirrors that discipline: [`trainer`] holds the
+//! FULL-W2V reference trainer (chunk-lifetime negative block + sliding
+//! context-window ring, the paper's two reuse axes) and the Hogwild
+//! epoch driver that shards any chunk kernel — the three comparator
+//! baselines included — across worker threads over one shared model
+//! (`train --impl fullw2v --threads T`).  See the [`trainer`] module
+//! docs for the memory-tier mapping.
+//!
 //! See DESIGN.md for the system inventory and per-experiment index.
 
 pub mod batcher;
@@ -46,6 +54,7 @@ pub mod model;
 pub mod runtime;
 pub mod sampler;
 pub mod serve;
+pub mod trainer;
 pub mod util;
 pub mod vecops;
 pub mod workbench;

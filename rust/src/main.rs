@@ -103,9 +103,26 @@ fn run(cli: Cli) -> Result<()> {
             );
             Ok(())
         }
-        Command::Train { corpus, synthetic, out, store, shards, clusters } => {
-            train_cmd(cli.config, corpus, synthetic, out, store, shards, clusters)
-        }
+        Command::Train {
+            corpus,
+            synthetic,
+            implementation,
+            threads,
+            out,
+            store,
+            shards,
+            clusters,
+        } => train_cmd(
+            cli.config,
+            corpus,
+            synthetic,
+            implementation,
+            threads,
+            out,
+            store,
+            shards,
+            clusters,
+        ),
         Command::Eval { model, pairs } => eval_cmd(&model, &pairs),
         Command::Nn { model, store, word, k, quantized } => match store {
             Some(dir) => nn_store_cmd(&dir, &word, k, quantized),
@@ -122,16 +139,22 @@ fn run(cli: Cli) -> Result<()> {
 
 #[allow(clippy::too_many_arguments)]
 fn train_cmd(
-    cfg: Config,
+    mut cfg: Config,
     corpus: Option<String>,
     synthetic: Option<String>,
+    implementation: Option<String>,
+    threads: Option<usize>,
     out: Option<String>,
     store: Option<String>,
     shards: usize,
     clusters: usize,
 ) -> Result<()> {
+    if let Some(t) = threads {
+        cfg.train.threads = t;
+    }
     let epochs = cfg.train.epochs;
-    let (vocab, report, model) = match (corpus, synthetic) {
+    // corpus preparation is implementation-independent
+    let (vocab, sentences) = match (corpus, synthetic) {
         (Some(path), None) => {
             let text = std::fs::read_to_string(&path)
                 .with_context(|| format!("reading corpus {path}"))?;
@@ -151,31 +174,51 @@ fn train_cmd(
                     sents.len()
                 ),
             );
-            let sentences = Arc::new(sents);
-            let total: u64 = sentences.iter().map(|s| s.len() as u64).sum();
-            let mut cfg = cfg;
-            if cfg.artifacts_dir == "artifacts" {
-                cfg.artifacts_dir =
-                    fullw2v::workbench::default_artifacts_dir();
-            }
-            let mut coord =
-                fullw2v::coordinator::Coordinator::new(cfg, &vocab, total)?;
-            let report = train_all(&mut coord, &sentences, epochs)?;
-            let model = coord.model().clone();
-            (vocab, report, model)
+            (vocab, Arc::new(sents))
         }
         (None, syn) => {
             let spec = spec_by_name(&syn.unwrap_or_else(|| "tiny".into()))?;
             let wb = Workbench::prepare(spec, cfg.train.min_count);
-            let mut coord = wb.coordinator(cfg)?;
-            let report = train_all(&mut coord, &wb.sentences, epochs)?;
-            let model = coord.model().clone();
-            (wb.vocab, report, model)
+            (wb.vocab, wb.sentences)
         }
         (Some(_), Some(_)) => {
             return Err(anyhow!("--corpus and --synthetic are exclusive"))
         }
     };
+    let total: u64 = sentences.iter().map(|s| s.len() as u64).sum();
+    let mut trainer: Box<dyn SgnsTrainer> = match implementation.as_deref() {
+        Some(name) if fullw2v::trainer::is_cpu_impl(name) => {
+            // hint = one epoch's words; the constructor spans epochs
+            fullw2v::trainer::build_cpu_trainer(
+                name, &cfg.train, &vocab, total,
+            )?
+        }
+        other => {
+            // a PJRT kernel variant (possibly overridden via --impl)
+            if let Some(variant) = other {
+                cfg.train.variant = variant.to_string();
+            }
+            if cfg.artifacts_dir == "artifacts" {
+                cfg.artifacts_dir =
+                    fullw2v::workbench::default_artifacts_dir();
+            }
+            Box::new(fullw2v::coordinator::Coordinator::new(
+                cfg.clone(),
+                &vocab,
+                total,
+            )?)
+        }
+    };
+    log::log(
+        log::Level::Info,
+        format_args!(
+            "training {} for {epochs} epochs ({} threads)",
+            trainer.name(),
+            cfg.train.resolved_threads()
+        ),
+    );
+    let report = train_all(trainer.as_mut(), &sentences, epochs)?;
+    let model = trainer.model().clone();
     for e in &report.epochs {
         println!(
             "epoch {}: {:>9.0} words/s  loss/word {:.4}  batching {:>9.0} w/s",

@@ -2,6 +2,34 @@
 
 use crate::util::json::{obj, Json};
 
+/// Negative-row traffic accounting — the training-side mirror of the
+/// serving engine's `rows_loaded_per_query`.  A *load* is one syn1
+/// negative row fetched from the shared model; a *use* is one
+/// (context row × negative row) interaction served from whatever copy
+/// the kernel holds.  `uses / loads` is the realized reuse factor the
+/// paper's Section 3 analysis predicts.
+#[derive(Debug, Clone, Copy, Default, PartialEq, Eq)]
+pub struct ReuseCounters {
+    pub neg_rows_loaded: u64,
+    pub neg_row_uses: u64,
+}
+
+impl ReuseCounters {
+    pub fn merge(&mut self, other: ReuseCounters) {
+        self.neg_rows_loaded += other.neg_rows_loaded;
+        self.neg_row_uses += other.neg_row_uses;
+    }
+
+    /// Interactions served per row loaded (0 when nothing was loaded).
+    pub fn reuse_factor(&self) -> f64 {
+        if self.neg_rows_loaded == 0 {
+            0.0
+        } else {
+            self.neg_row_uses as f64 / self.neg_rows_loaded as f64
+        }
+    }
+}
+
 /// Per-epoch training metrics.
 #[derive(Debug, Clone, Default)]
 pub struct EpochReport {
@@ -21,6 +49,15 @@ pub struct EpochReport {
     pub batching_rate: f64,
     /// Final learning rate of the epoch.
     pub lr_end: f32,
+    /// Hogwild worker threads used (0 = not a Hogwild-driven epoch,
+    /// 1 = the serial reference path).
+    pub threads: usize,
+    /// Negative syn1 rows fetched from the shared model (training-side
+    /// mirror of the serving engine's rows-loaded accounting; 0 when
+    /// the implementation doesn't measure it).
+    pub neg_rows_loaded: u64,
+    /// Context-row x negative-row interactions served from those loads.
+    pub neg_row_uses: u64,
 }
 
 impl EpochReport {
@@ -33,6 +70,16 @@ impl EpochReport {
         }
     }
 
+    /// Negative-row interactions served per row loaded from the shared
+    /// model (0 when unmeasured) — the realized reuse factor.
+    pub fn neg_row_reuse(&self) -> f64 {
+        ReuseCounters {
+            neg_rows_loaded: self.neg_rows_loaded,
+            neg_row_uses: self.neg_row_uses,
+        }
+        .reuse_factor()
+    }
+
     pub fn to_json(&self) -> Json {
         obj(vec![
             ("epoch", Json::Num(self.epoch as f64)),
@@ -43,6 +90,10 @@ impl EpochReport {
             ("words_per_sec", Json::Num(self.words_per_sec)),
             ("batching_rate", Json::Num(self.batching_rate)),
             ("lr_end", Json::Num(self.lr_end as f64)),
+            ("threads", Json::Num(self.threads as f64)),
+            ("neg_rows_loaded", Json::Num(self.neg_rows_loaded as f64)),
+            ("neg_row_uses", Json::Num(self.neg_row_uses as f64)),
+            ("neg_row_reuse", Json::Num(self.neg_row_reuse())),
         ])
     }
 }
@@ -180,6 +231,17 @@ mod tests {
         assert!((r.words_per_sec() - 100.0).abs() < 1e-9);
         let (first, last) = r.loss_trajectory();
         assert!(first > last); // decreasing loss
+    }
+
+    #[test]
+    fn neg_row_reuse_factor() {
+        let e = EpochReport {
+            neg_rows_loaded: 10,
+            neg_row_uses: 250,
+            ..Default::default()
+        };
+        assert!((e.neg_row_reuse() - 25.0).abs() < 1e-12);
+        assert_eq!(EpochReport::default().neg_row_reuse(), 0.0);
     }
 
     #[test]

@@ -1,7 +1,10 @@
 //! The embedding model state: syn0 (input vectors) / syn1neg (output
-//! vectors), word2vec-compatible initialization, persistence, and
-//! similarity queries.
+//! vectors), word2vec-compatible initialization, persistence, similarity
+//! queries, and the Hogwild-shared view the parallel training layer
+//! hands its worker threads.
 
 pub mod embeddings;
+pub mod shared;
 
 pub use embeddings::EmbeddingModel;
+pub use shared::SharedModel;

@@ -1,0 +1,210 @@
+//! Hogwild-shared view of an [`EmbeddingModel`].
+//!
+//! The Hogwild! training scheme (Niu et al., also the update discipline
+//! of pWord2Vec and FULL-W2V itself) lets worker threads read and write
+//! the shared embedding matrices **without synchronization**: SGNS
+//! updates are sparse, collisions are rare, and the lost-update noise is
+//! far below the SGD noise floor.  Rust has no safe vocabulary for that
+//! discipline, so this module confines it: [`SharedModel`] is a
+//! `SyncUnsafeCell`-style wrapper built from a unique `&mut` borrow of
+//! the model (nothing else can touch the matrices while it exists), and
+//! callers only ever see row-granular *operations* — rows are copied
+//! out, dotted against, or updated in place inside a single call; no
+//! reference to shared memory escapes.
+//!
+//! Mutation never materializes a `&mut [f32]`: two workers updating the
+//! same row through aliasing `&mut` (which rustc marks noalias) would be
+//! language-level UB beyond the intended lost-update model, so the
+//! update methods do their read-modify-write element-wise through raw
+//! pointers.  Read methods form transient `&[f32]` views to reuse the
+//! `vecops` kernels; a concurrent racy write under such a view is the
+//! residual Hogwild trade (torn f32 values cannot occur on the targeted
+//! platforms — aligned 32-bit loads/stores), and with one worker the
+//! view is exactly as sequential as a plain `&mut EmbeddingModel`.
+
+use super::EmbeddingModel;
+use crate::vecops::dot;
+use std::marker::PhantomData;
+
+/// Unsynchronized multi-thread view over one model's matrices.
+pub struct SharedModel<'a> {
+    syn0: *mut f32,
+    syn1: *mut f32,
+    vocab_size: usize,
+    dim: usize,
+    _model: PhantomData<&'a mut EmbeddingModel>,
+}
+
+// SAFETY: the wrapper owns the only live borrow of the model; all access
+// is row-granular through the methods below, and data races between
+// workers are the documented Hogwild contract (see module docs).
+unsafe impl Send for SharedModel<'_> {}
+unsafe impl Sync for SharedModel<'_> {}
+
+impl<'a> SharedModel<'a> {
+    /// Build a shared view from a unique borrow.  The borrow lasts for
+    /// the view's lifetime, so no other code can alias the matrices.
+    pub fn new(model: &'a mut EmbeddingModel) -> Self {
+        SharedModel {
+            syn0: model.syn0.as_mut_ptr(),
+            syn1: model.syn1.as_mut_ptr(),
+            vocab_size: model.vocab_size,
+            dim: model.dim,
+            _model: PhantomData,
+        }
+    }
+
+    #[inline]
+    pub fn dim(&self) -> usize {
+        self.dim
+    }
+
+    #[inline]
+    pub fn vocab_size(&self) -> usize {
+        self.vocab_size
+    }
+
+    #[inline]
+    fn row(&self, base: *mut f32, id: u32) -> &[f32] {
+        assert!((id as usize) < self.vocab_size, "row id {id} >= V");
+        // SAFETY: in-bounds by the assert; see module docs for the race
+        // contract.
+        unsafe {
+            std::slice::from_raw_parts(
+                base.add(id as usize * self.dim),
+                self.dim,
+            )
+        }
+    }
+
+    /// `row += alpha * x`, element-wise through the raw pointer — the
+    /// same per-element expression as [`crate::vecops::axpy`] (so
+    /// single-threaded results are bit-identical to it), but with no
+    /// `&mut` formed over memory other workers may touch.  Racing
+    /// workers can lose whole element updates; that is the Hogwild
+    /// contract.
+    #[inline]
+    fn axpy_raw(&self, base: *mut f32, id: u32, alpha: f32, x: &[f32]) {
+        assert!((id as usize) < self.vocab_size, "row id {id} >= V");
+        assert_eq!(x.len(), self.dim, "update width mismatch");
+        // SAFETY: in-bounds by the asserts; racy read-modify-write is
+        // the documented contract (see module docs).
+        unsafe {
+            let p = base.add(id as usize * self.dim);
+            for (j, &xj) in x.iter().enumerate() {
+                let pj = p.add(j);
+                pj.write(pj.read() + alpha * xj);
+            }
+        }
+    }
+
+    /// Copy `syn0[id]` into `dst`.
+    #[inline]
+    pub fn copy_syn0_row(&self, id: u32, dst: &mut [f32]) {
+        dst.copy_from_slice(self.row(self.syn0, id));
+    }
+
+    /// Copy `syn1[id]` into `dst`.
+    #[inline]
+    pub fn copy_syn1_row(&self, id: u32, dst: &mut [f32]) {
+        dst.copy_from_slice(self.row(self.syn1, id));
+    }
+
+    /// `dot(syn0[id], x)` against the live row.
+    #[inline]
+    pub fn dot_syn0(&self, id: u32, x: &[f32]) -> f32 {
+        dot(self.row(self.syn0, id), x)
+    }
+
+    /// `dot(syn1[id], x)` against the live row.
+    #[inline]
+    pub fn dot_syn1(&self, id: u32, x: &[f32]) -> f32 {
+        dot(self.row(self.syn1, id), x)
+    }
+
+    /// `syn0[id] += delta` (element-wise; `1.0 * v == v` exactly, so
+    /// this matches an alpha-1 [`crate::vecops::axpy`] bit-for-bit).
+    #[inline]
+    pub fn add_syn0_row(&self, id: u32, delta: &[f32]) {
+        self.axpy_raw(self.syn0, id, 1.0, delta);
+    }
+
+    /// `syn1[id] += delta`.
+    #[inline]
+    pub fn add_syn1_row(&self, id: u32, delta: &[f32]) {
+        self.axpy_raw(self.syn1, id, 1.0, delta);
+    }
+
+    /// `syn0[id] += alpha * x`.
+    #[inline]
+    pub fn axpy_syn0_row(&self, id: u32, alpha: f32, x: &[f32]) {
+        self.axpy_raw(self.syn0, id, alpha, x);
+    }
+
+    /// `syn1[id] += alpha * x`.
+    #[inline]
+    pub fn axpy_syn1_row(&self, id: u32, alpha: f32, x: &[f32]) {
+        self.axpy_raw(self.syn1, id, alpha, x);
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn single_thread_ops_match_direct_access() {
+        let mut m = EmbeddingModel::init(4, 3, 7);
+        let before0 = m.syn0.clone();
+        let before1 = m.syn1.clone();
+        {
+            let view = SharedModel::new(&mut m);
+            assert_eq!(view.dim(), 3);
+            assert_eq!(view.vocab_size(), 4);
+            let mut buf = [0.0f32; 3];
+            view.copy_syn0_row(2, &mut buf);
+            assert_eq!(&buf, &before0[6..9]);
+            let z = view.dot_syn0(2, &[1.0, 2.0, 3.0]);
+            let want = before0[6] + 2.0 * before0[7] + 3.0 * before0[8];
+            assert!((z - want).abs() < 1e-6);
+            view.add_syn0_row(1, &[1.0, 1.0, 1.0]);
+            view.axpy_syn1_row(0, 2.0, &[1.0, 0.0, -1.0]);
+        }
+        for j in 0..3 {
+            assert!((m.syn0[3 + j] - (before0[3 + j] + 1.0)).abs() < 1e-7);
+        }
+        assert!((m.syn1[0] - (before1[0] + 2.0)).abs() < 1e-7);
+        assert!((m.syn1[2] - (before1[2] - 2.0)).abs() < 1e-7);
+    }
+
+    #[test]
+    #[should_panic(expected = ">= V")]
+    fn out_of_range_row_panics() {
+        let mut m = EmbeddingModel::init(2, 2, 1);
+        let view = SharedModel::new(&mut m);
+        view.dot_syn0(2, &[0.0, 0.0]);
+    }
+
+    #[test]
+    fn disjoint_rows_update_concurrently() {
+        let mut m = EmbeddingModel::init(8, 4, 3);
+        m.syn0.iter_mut().for_each(|x| *x = 0.0);
+        {
+            let view = SharedModel::new(&mut m);
+            std::thread::scope(|s| {
+                for t in 0..4u32 {
+                    let view = &view;
+                    s.spawn(move || {
+                        for _ in 0..100 {
+                            view.add_syn0_row(t * 2, &[1.0, 1.0, 1.0, 1.0]);
+                        }
+                    });
+                }
+            });
+        }
+        for t in 0..4 {
+            let row = m.syn0_row(t * 2);
+            assert!(row.iter().all(|&x| (x - 100.0).abs() < 1e-4));
+        }
+    }
+}

@@ -1,0 +1,278 @@
+//! The Hogwild epoch driver: shards an epoch's sentences over worker
+//! threads that update one [`SharedModel`] without synchronization.
+//!
+//! Design invariants:
+//!
+//! * **Determinism at `threads = 1`.**  Worker 0's RNG stream is the
+//!   stream the serial trainers historically used
+//!   (`Pcg32::with_stream(seed ^ (epoch+1), 0xc9)`), and a single worker
+//!   owns every sentence in order, so the one-thread path draws the
+//!   exact sample sequence the pre-Hogwild `epoch_loop` drew and is
+//!   bit-reproducible across runs.
+//! * **Per-chunk accounting.**  The serial loop advanced the lr and
+//!   counted `batches` once per *sentence* even when a sentence spanned
+//!   several chunks — every chunk of a long sentence trained at a stale
+//!   lr and the batch count undercounted the real unit of work.  The
+//!   driver advances the shared atomic word counter and recomputes the
+//!   lr per *chunk* (`LrSchedule::lr_at` over the observed count), and
+//!   `EpochReport::batches` counts chunks.
+//! * **One schedule, one counter.**  Workers never mutate the schedule;
+//!   they `fetch_add` their chunk's word count and read the lr for the
+//!   count they observed, which makes the decay identical to the serial
+//!   walk at one thread and fair-interleaved at N.
+
+use super::{BaseTrainer, ReuseCounters, ShardCtx, ShardTrainer};
+use crate::metrics::EpochReport;
+use crate::model::SharedModel;
+use crate::util::rng::Pcg32;
+use std::sync::atomic::{AtomicU64, Ordering};
+
+/// The deterministic RNG for worker `tid` of `epoch`.  Worker 0
+/// reproduces the serial trainers' historical epoch stream, which is
+/// what makes `threads = 1` bit-identical to the old serial path.
+pub fn worker_rng(seed: u64, epoch: usize, tid: usize) -> Pcg32 {
+    Pcg32::with_stream(seed ^ (epoch as u64 + 1), 0xc9 ^ ((tid as u64) << 8))
+}
+
+#[derive(Default)]
+struct Partial {
+    loss: f64,
+    words: u64,
+    chunks: u64,
+    reuse: ReuseCounters,
+}
+
+/// Run one epoch of any [`ShardTrainer`] kernel over the sentences,
+/// Hogwild-parallel across `base.cfg.resolved_threads()` workers.
+/// `make_kernel(tid)` builds each worker's kernel (scratch) in-thread.
+pub(crate) fn run_epoch<K, F>(
+    base: &mut BaseTrainer,
+    sentences: &[Vec<u32>],
+    epoch: usize,
+    make_kernel: F,
+) -> EpochReport
+where
+    K: ShardTrainer,
+    F: Fn(usize) -> K + Sync,
+{
+    let t0 = std::time::Instant::now();
+    let threads = base.cfg.resolved_threads().max(1);
+    let chunk_len = base.cfg.sentence_chunk;
+    let seed = base.cfg.seed;
+    let start_words = base.schedule.processed();
+    let counter = AtomicU64::new(start_words);
+
+    let shard_size = sentences.len().div_ceil(threads).max(1);
+    let mut partials: Vec<Partial> = Vec::with_capacity(threads);
+    let mut workers_used = 0usize;
+    {
+        // Disjoint field borrows: the model uniquely (for the Hogwild
+        // view), everything else shared across the worker threads.
+        let shared = SharedModel::new(&mut base.model);
+        let subsampler = &base.subsampler;
+        let negatives = &base.negatives;
+        let cfg = &base.cfg;
+        let schedule = &base.schedule;
+        std::thread::scope(|s| {
+            let handles: Vec<_> = sentences
+                .chunks(shard_size)
+                .enumerate()
+                .map(|(tid, shard)| {
+                    let shared = &shared;
+                    let counter = &counter;
+                    let make_kernel = &make_kernel;
+                    s.spawn(move || {
+                        let mut kernel = make_kernel(tid);
+                        let ctx = ShardCtx {
+                            model: shared,
+                            negatives,
+                            cfg,
+                        };
+                        let mut rng = worker_rng(seed, epoch, tid);
+                        let mut p = Partial::default();
+                        let mut kept: Vec<u32> = Vec::new();
+                        for sent in shard {
+                            kept.clear();
+                            kept.extend_from_slice(sent);
+                            subsampler.filter(&mut kept, &mut rng);
+                            if kept.len() < 2 {
+                                continue;
+                            }
+                            for c in kept.chunks(chunk_len) {
+                                if c.len() < 2 {
+                                    continue;
+                                }
+                                let seen = counter.fetch_add(
+                                    c.len() as u64,
+                                    Ordering::Relaxed,
+                                );
+                                let lr = schedule.lr_at(seen);
+                                p.loss +=
+                                    kernel.train_chunk(&ctx, c, lr, &mut rng);
+                                p.words += c.len() as u64;
+                                p.chunks += 1;
+                            }
+                        }
+                        p.reuse = kernel.reuse();
+                        p
+                    })
+                })
+                .collect();
+            workers_used = handles.len();
+            for h in handles {
+                partials.push(h.join().expect("hogwild worker panicked"));
+            }
+        });
+    }
+
+    let mut rep = EpochReport { epoch, ..Default::default() };
+    let mut reuse = ReuseCounters::default();
+    for p in &partials {
+        rep.loss_sum += p.loss;
+        rep.words += p.words;
+        rep.batches += p.chunks;
+        reuse.merge(p.reuse);
+    }
+    debug_assert_eq!(
+        counter.load(Ordering::Relaxed) - start_words,
+        rep.words,
+        "counter and partial word counts must agree"
+    );
+    base.schedule.advance(rep.words);
+    rep.lr_end = base.schedule.current();
+    rep.threads = workers_used;
+    rep.neg_rows_loaded = reuse.neg_rows_loaded;
+    rep.neg_row_uses = reuse.neg_row_uses;
+    rep.seconds = t0.elapsed().as_secs_f64();
+    rep.finalize();
+    rep
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::TrainConfig;
+    use crate::coordinator::lr::LrSchedule;
+    use crate::corpus::vocab::Vocab;
+    use std::sync::Mutex;
+
+    /// A probe kernel that records the (chunk length, lr) pairs the
+    /// driver feeds it, so the per-chunk schedule is directly observable.
+    struct ProbeKernel<'a> {
+        seen: &'a Mutex<Vec<(usize, f32)>>,
+    }
+
+    impl ShardTrainer for ProbeKernel<'_> {
+        fn train_chunk(
+            &mut self,
+            _ctx: &ShardCtx<'_>,
+            chunk: &[u32],
+            lr: f32,
+            _rng: &mut Pcg32,
+        ) -> f64 {
+            self.seen.lock().unwrap().push((chunk.len(), lr));
+            chunk.len() as f64
+        }
+    }
+
+    fn probe_base(chunk: usize, total_hint: u64) -> (BaseTrainer, Vocab) {
+        let vocab =
+            Vocab::from_counts((0..16).map(|i| (format!("w{i}"), 50u64)), 1);
+        let cfg = TrainConfig {
+            dim: 4,
+            window: 2,
+            negatives: 2,
+            subsample: 0.0,
+            sentence_chunk: chunk,
+            epochs: 1,
+            ..TrainConfig::default()
+        };
+        (BaseTrainer::new(&cfg, &vocab, total_hint), vocab)
+    }
+
+    /// The satellite bugfix pinned down: a sentence spanning several
+    /// chunks advances the lr once per chunk (not once per sentence),
+    /// and `batches` counts chunks.
+    #[test]
+    fn hogwild_lr_and_batches_advance_per_chunk() {
+        let (mut base, _vocab) = probe_base(8, 32);
+        // one 32-word sentence -> 4 chunks of 8
+        let sentences = vec![(0..32u32).map(|i| i % 16).collect::<Vec<_>>()];
+        let seen = Mutex::new(Vec::new());
+        let rep = run_epoch(&mut base, &sentences, 0, |_tid| ProbeKernel {
+            seen: &seen,
+        });
+        let seen = seen.into_inner().unwrap();
+        assert_eq!(seen.len(), 4, "4 chunks trained");
+        assert_eq!(rep.batches, 4, "batches must count chunks");
+        assert_eq!(rep.words, 32);
+        // per-chunk lr: chunk k trains at lr_at(8k), strictly decaying
+        let probe = LrSchedule::new(
+            base.cfg.lr,
+            base.cfg.min_lr_ratio,
+            32 * base.cfg.epochs as u64,
+        );
+        for (k, &(len, lr)) in seen.iter().enumerate() {
+            assert_eq!(len, 8);
+            assert_eq!(
+                lr.to_bits(),
+                probe.lr_at(8 * k as u64).to_bits(),
+                "chunk {k} lr"
+            );
+        }
+        assert!(seen[3].1 < seen[0].1, "lr decays within the sentence");
+        assert_eq!(rep.lr_end.to_bits(), probe.lr_at(32).to_bits());
+        assert_eq!(rep.threads, 1);
+    }
+
+    #[test]
+    fn hogwild_word_counter_persists_across_epochs() {
+        let (mut base, _vocab) = probe_base(8, 64);
+        let sentences = vec![(0..16u32).collect::<Vec<_>>()];
+        let seen = Mutex::new(Vec::new());
+        run_epoch(&mut base, &sentences, 0, |_tid| ProbeKernel { seen: &seen });
+        assert_eq!(base.schedule.processed(), 16);
+        run_epoch(&mut base, &sentences, 1, |_tid| ProbeKernel { seen: &seen });
+        assert_eq!(base.schedule.processed(), 32);
+        let seen = seen.into_inner().unwrap();
+        // epoch 1's first chunk already sees epoch 0's words
+        let probe = LrSchedule::new(base.cfg.lr, base.cfg.min_lr_ratio, 64);
+        assert_eq!(seen[2].1.to_bits(), probe.lr_at(16).to_bits());
+    }
+
+    #[test]
+    fn hogwild_splits_work_across_threads() {
+        let (mut base, _vocab) = probe_base(8, 1000);
+        base.cfg.threads = 3;
+        let sentences: Vec<Vec<u32>> =
+            (0..9).map(|_| (0..8u32).collect()).collect();
+        let seen = Mutex::new(Vec::new());
+        let rep = run_epoch(&mut base, &sentences, 0, |_tid| ProbeKernel {
+            seen: &seen,
+        });
+        assert_eq!(rep.threads, 3);
+        assert_eq!(rep.words, 72);
+        assert_eq!(rep.batches, 9);
+        // more workers than shards degrades gracefully
+        base.cfg.threads = 64;
+        let rep = run_epoch(&mut base, &sentences, 1, |_tid| ProbeKernel {
+            seen: &seen,
+        });
+        assert!(rep.threads <= 9, "at most one worker per sentence shard");
+        assert_eq!(rep.words, 72);
+    }
+
+    #[test]
+    fn worker_streams_are_distinct_and_worker0_is_the_serial_stream() {
+        let mut a = worker_rng(7, 0, 0);
+        let mut b = Pcg32::with_stream(7 ^ 1, 0xc9);
+        for _ in 0..16 {
+            assert_eq!(a.next_u32(), b.next_u32());
+        }
+        let mut r0 = worker_rng(7, 0, 0);
+        let mut r1 = worker_rng(7, 0, 1);
+        let s0: Vec<u32> = (0..8).map(|_| r0.next_u32()).collect();
+        let s1: Vec<u32> = (0..8).map(|_| r1.next_u32()).collect();
+        assert_ne!(s0, s1);
+    }
+}

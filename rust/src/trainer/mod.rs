@@ -1,0 +1,190 @@
+//! The CPU training layer: shard kernels + the Hogwild epoch driver.
+//!
+//! FULL-W2V's contribution (paper Sections 3–4) is a memory-tier
+//! discipline: every embedding row should be fetched from the slow tier
+//! once and then reused from a fast tier for as many interactions as its
+//! lifetime allows.  This module realizes that discipline on CPU and
+//! maps the paper's GPU hierarchy onto the host memory system:
+//!
+//! | paper tier (GPU)        | CPU realization (this module)              |
+//! |-------------------------|--------------------------------------------|
+//! | registers               | the **sliding context-window block** — the |
+//! |                         | ring of `2*W_f+1` cached syn0 rows in      |
+//! |                         | [`fullw2v`]; one row enters and one        |
+//! |                         | retires per center-word advance, and all   |
+//! |                         | window interactions hit the cached copies  |
+//! | shared memory (SM)      | the **sentence-chunk negative block** —    |
+//! |                         | `N` syn1 rows drawn and loaded once per    |
+//! |                         | chunk, scored and updated in place for the |
+//! |                         | chunk's whole lifetime, written back as    |
+//! |                         | one delta per row at chunk end             |
+//! | HBM / global memory     | the **shared model matrices** behind       |
+//! |                         | [`SharedModel`] — the only tier worker     |
+//! |                         | threads contend on, touched once per       |
+//! |                         | row-lifetime instead of once per use       |
+//!
+//! Parallelism is Hogwild (the update discipline the paper inherits from
+//! pWord2Vec): [`hogwild::run_epoch`] splits an epoch's sentences into
+//! contiguous shards, one worker thread per shard, all workers updating
+//! one [`SharedModel`] without locks.  Each worker owns a deterministic
+//! [`Pcg32`] stream (worker 0's stream is the historical serial stream,
+//! so `threads = 1` walks exactly the old serial path), and the linear
+//! lr decay is driven by one atomic word counter shared by all workers.
+//!
+//! Every CPU implementation — the three comparator baselines in
+//! [`crate::cpu_baseline`] and the [`fullw2v`] reference trainer — is a
+//! [`ShardTrainer`] *chunk kernel*: per-thread scratch plus a
+//! `train_chunk` method.  The driver owns everything else (subsampling,
+//! chunking, lr, accounting), so the serial `epoch_loop` the baselines
+//! used through PR 3 no longer exists.
+
+pub mod fullw2v;
+pub mod hogwild;
+
+pub use fullw2v::FullW2vTrainer;
+
+use crate::config::TrainConfig;
+use crate::coordinator::lr::LrSchedule;
+use crate::coordinator::SgnsTrainer;
+use crate::corpus::subsample::Subsampler;
+use crate::corpus::vocab::Vocab;
+use crate::model::{EmbeddingModel, SharedModel};
+use crate::sampler::unigram::UnigramTable;
+use crate::util::rng::Pcg32;
+use anyhow::{anyhow, Result};
+
+/// Shared scaffolding for the CPU trainers: the model plus the
+/// corpus-side tables and the lr schedule.  (Moved here from
+/// `cpu_baseline` when the Hogwild driver replaced `epoch_loop`.)
+pub(crate) struct BaseTrainer {
+    pub model: EmbeddingModel,
+    pub subsampler: Subsampler,
+    pub negatives: UnigramTable,
+    pub schedule: LrSchedule,
+    pub cfg: TrainConfig,
+}
+
+impl BaseTrainer {
+    pub fn new(cfg: &TrainConfig, vocab: &Vocab, total_words_hint: u64) -> Self {
+        BaseTrainer {
+            model: EmbeddingModel::init(vocab.len(), cfg.dim, cfg.seed),
+            subsampler: Subsampler::new(vocab, cfg.subsample),
+            negatives: UnigramTable::new(vocab, UnigramTable::DEFAULT_ALPHA),
+            schedule: LrSchedule::new(
+                cfg.lr,
+                cfg.min_lr_ratio,
+                total_words_hint * cfg.epochs as u64,
+            ),
+            cfg: cfg.clone(),
+        }
+    }
+}
+
+/// Read-only epoch context the driver hands every shard kernel: the
+/// Hogwild model view plus the sampling tables and hyperparameters.
+pub struct ShardCtx<'a> {
+    pub model: &'a SharedModel<'a>,
+    pub negatives: &'a UnigramTable,
+    pub cfg: &'a TrainConfig,
+}
+
+pub use crate::metrics::ReuseCounters;
+
+/// One CPU SGNS update kernel: per-thread scratch plus the chunk update
+/// rule.  The Hogwild driver constructs one kernel per worker thread and
+/// feeds it subsampled sentence chunks; the kernel reads and writes the
+/// shared model through `ctx.model` only.
+pub trait ShardTrainer {
+    /// Train one sentence chunk at learning rate `lr`; returns the
+    /// summed NS loss computed from pre-update values (the same loss
+    /// definition every serial baseline used).
+    fn train_chunk(
+        &mut self,
+        ctx: &ShardCtx<'_>,
+        chunk: &[u32],
+        lr: f32,
+        rng: &mut Pcg32,
+    ) -> f64;
+
+    /// Cumulative negative-row traffic since construction.
+    fn reuse(&self) -> ReuseCounters {
+        ReuseCounters::default()
+    }
+}
+
+/// The CPU implementations `train --impl NAME` accepts.
+pub const CPU_IMPLS: [&str; 4] = ["mikolov", "pword2vec", "psgnscc", "fullw2v"];
+
+/// True if `name` names a CPU trainer (vs a PJRT kernel variant).
+pub fn is_cpu_impl(name: &str) -> bool {
+    CPU_IMPLS.contains(&name)
+}
+
+/// Build a CPU trainer by implementation name.  `total_words_hint` is
+/// the corpus word count of **one epoch** — the constructor multiplies
+/// by `cfg.epochs` (exactly like `Coordinator::new`), so the lr decays
+/// over the full planned job.  Passing pre-multiplied words would
+/// square the epoch factor and leave the lr nearly undecayed.
+pub fn build_cpu_trainer(
+    name: &str,
+    cfg: &TrainConfig,
+    vocab: &Vocab,
+    total_words_hint: u64,
+) -> Result<Box<dyn SgnsTrainer>> {
+    Ok(match name {
+        "mikolov" => Box::new(crate::cpu_baseline::MikolovTrainer::new(
+            cfg,
+            vocab,
+            total_words_hint,
+        )),
+        "pword2vec" => Box::new(crate::cpu_baseline::PWord2VecTrainer::new(
+            cfg,
+            vocab,
+            total_words_hint,
+        )),
+        "psgnscc" => Box::new(crate::cpu_baseline::PsgnsccTrainer::new(
+            cfg,
+            vocab,
+            total_words_hint,
+        )),
+        "fullw2v" => {
+            Box::new(FullW2vTrainer::new(cfg, vocab, total_words_hint))
+        }
+        other => {
+            return Err(anyhow!(
+                "unknown CPU implementation '{other}' (expected one of {})",
+                CPU_IMPLS.join(", ")
+            ))
+        }
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn cpu_impl_registry() {
+        for name in CPU_IMPLS {
+            assert!(is_cpu_impl(name));
+        }
+        assert!(!is_cpu_impl("full_w2v"), "pjrt variants are not cpu impls");
+        assert!(build_cpu_trainer(
+            "nope",
+            &TrainConfig::default(),
+            &Vocab::from_counts([("a".to_string(), 5u64)], 1),
+            10,
+        )
+        .is_err());
+    }
+
+    #[test]
+    fn reuse_counters_merge_and_factor() {
+        let mut a = ReuseCounters { neg_rows_loaded: 5, neg_row_uses: 50 };
+        a.merge(ReuseCounters { neg_rows_loaded: 5, neg_row_uses: 30 });
+        assert_eq!(a.neg_rows_loaded, 10);
+        assert_eq!(a.neg_row_uses, 80);
+        assert!((a.reuse_factor() - 8.0).abs() < 1e-12);
+        assert_eq!(ReuseCounters::default().reuse_factor(), 0.0);
+    }
+}

@@ -7,18 +7,27 @@
 //! baselines (`cpu_baseline`), evaluation — funnels through this module,
 //! so there is exactly one implementation of each kernel to tune.
 //!
-//! Two kinds of kernel live here:
+//! Three kinds of kernel live here:
 //!
 //! * scalar-pair kernels: [`dot`] (8-way unrolled, auto-vectorizable),
 //!   [`dot_i8`] (fused int8 widening dot — the dequantize round-trip is
 //!   folded into the accumulation, one multiply by the row scale at the
 //!   end), [`dot_f64`] (f64 accumulation for evaluation), and [`axpy`].
+//! * block kernels: [`dot_block`] / [`axpy_block`] run one vector
+//!   against every row of a row block (scores, then gradient scatter)
+//!   with the shared vector held hot — the training-side reuse shape
+//!   the FULL-W2V CPU trainer uses against its chunk-lifetime negative
+//!   block and sliding window block.
 //! * tile kernels: [`tile_scores_f32`] / [`tile_scores_i8`] score a
 //!   block of Q query vectors against a block of R store rows.  Rows
 //!   stream through the kernel once; each loaded row element feeds
 //!   [`Q_TILE`] query accumulators held in registers, so memory traffic
 //!   is `O(R)` row loads with Q-way reuse instead of `O(Q x R)` — the
 //!   serving analogue of the paper's context-window reuse.
+//!
+//! The SGNS activation math ([`SigmoidTable`], exact [`sigmoid`],
+//! [`softplus`]) lives here too (`sigmoid` submodule), shared by every
+//! trainer.
 //!
 //! **Bit-identity contract:** for the same row and query, the tile
 //! kernels produce *bit-identical* scores to [`dot`] / [`dot_i8`].  Each
@@ -28,6 +37,10 @@
 //! `tile_matches_dot_bitwise` test pins this down; the batched-vs-
 //! per-query identity test in `rust/tests/serve_integration.rs` relies
 //! on it end to end.
+
+mod sigmoid;
+
+pub use sigmoid::{sigmoid, softplus, SigmoidTable};
 
 /// Queries scored per row pass inside the tile kernels (the register
 /// blocking factor).
@@ -112,6 +125,56 @@ pub fn axpy(alpha: f32, x: &[f32], y: &mut [f32]) {
     }
     for j in chunks * 4..x.len() {
         y[j] += alpha * x[j];
+    }
+}
+
+/// One vector dotted against every `dim`-wide row of a row block:
+/// `out[r] = dot(row_r, x)`, each result **bit-identical** to [`dot`].
+///
+/// `x` is the reused operand: inside [`dot4`] its elements are loaded
+/// once per [`Q_TILE`] rows and feed all four row accumulators (f32
+/// multiplication is commutative, so swapping the streamed/held roles
+/// preserves every intermediate bit).  This is the training-side shape
+/// of the reuse axis: the FULL-W2V trainer scores one cached context
+/// row against the whole chunk-lifetime negative block in one call.
+pub fn dot_block(rows: &[f32], dim: usize, x: &[f32], out: &mut [f32]) {
+    assert!(dim > 0, "dot_block needs a positive dim");
+    assert_eq!(rows.len() % dim, 0, "rows not a whole row count");
+    let n_rows = rows.len() / dim;
+    assert_eq!(out.len(), n_rows, "output size");
+    assert_eq!(x.len(), dim, "x width mismatch");
+    let mut r = 0;
+    while r + Q_TILE <= n_rows {
+        let s = dot4(
+            x,
+            [
+                &rows[r * dim..(r + 1) * dim],
+                &rows[(r + 1) * dim..(r + 2) * dim],
+                &rows[(r + 2) * dim..(r + 3) * dim],
+                &rows[(r + 3) * dim..(r + 4) * dim],
+            ],
+        );
+        out[r..r + Q_TILE].copy_from_slice(&s);
+        r += Q_TILE;
+    }
+    while r < n_rows {
+        out[r] = dot(&rows[r * dim..(r + 1) * dim], x);
+        r += 1;
+    }
+}
+
+/// Per-row axpy over a row block: `row_r += alphas[r] * x`, each row
+/// **bit-identical** to [`axpy`] with the same alpha.  `x` stays hot
+/// across the whole block — the update-side sibling of [`dot_block`]
+/// (the FULL-W2V trainer scatters one gradient column into every cached
+/// window row in one call).
+pub fn axpy_block(alphas: &[f32], x: &[f32], rows: &mut [f32], dim: usize) {
+    assert!(dim > 0, "axpy_block needs a positive dim");
+    assert_eq!(rows.len() % dim, 0, "rows not a whole row count");
+    assert_eq!(rows.len() / dim, alphas.len(), "one alpha per row");
+    assert_eq!(x.len(), dim, "x width mismatch");
+    for (row, &a) in rows.chunks_exact_mut(dim).zip(alphas) {
+        axpy(a, x, row);
     }
 }
 
@@ -385,6 +448,52 @@ mod tests {
         let q: &[f32] = &[1.0, 0.0, 0.0, 0.0];
         tile_scores_f32(&[], 4, &[q], &mut out);
         tile_scores_i8(&[], &[], 4, &[q], &mut out);
+    }
+
+    /// The contract the FULL-W2V trainer's negative-block scoring stands
+    /// on: block results are bit-identical to the scalar kernel, for row
+    /// counts around the Q_TILE boundary and dims around the unroll
+    /// width.
+    #[test]
+    fn dot_block_matches_dot_bitwise() {
+        for dim in [1usize, 5, 8, 16, 19] {
+            for n_rows in [0usize, 1, 3, 4, 5, 8, 9] {
+                let rows =
+                    seq(n_rows * dim, |i| ((i * 31 % 89) as f32) * 0.017 - 0.7);
+                let x = seq(dim, |i| ((i * 13 + 3) as f32 * 0.23).sin());
+                let mut out = vec![0.0f32; n_rows];
+                dot_block(&rows, dim, &x, &mut out);
+                for (r, row) in rows.chunks_exact(dim).enumerate() {
+                    let want = dot(row, x.as_slice());
+                    assert_eq!(
+                        out[r].to_bits(),
+                        want.to_bits(),
+                        "dim={dim} n_rows={n_rows} r={r}"
+                    );
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn axpy_block_matches_axpy_bitwise() {
+        for dim in [1usize, 4, 8, 11] {
+            for n_rows in [0usize, 1, 2, 5] {
+                let alphas = seq(n_rows, |r| (r as f32 - 1.3) * 0.4);
+                let x = seq(dim, |i| (i as f32 * 0.7).cos());
+                let init =
+                    seq(n_rows * dim, |i| ((i * 7 % 23) as f32) * 0.05 - 0.4);
+                let mut rows = init.clone();
+                axpy_block(&alphas, &x, &mut rows, dim);
+                let mut want = init;
+                for (row, &a) in want.chunks_exact_mut(dim).zip(&alphas) {
+                    axpy(a, &x, row);
+                }
+                for (got, want) in rows.iter().zip(&want) {
+                    assert_eq!(got.to_bits(), want.to_bits());
+                }
+            }
+        }
     }
 
     #[test]

@@ -1,0 +1,153 @@
+//! Shared SGNS activation math: the word2vec.c EXP_TABLE sigmoid, the
+//! exact sigmoid, and the numerically-stable softplus used for loss
+//! reporting.  Moved here from `cpu_baseline::math` so every trainer —
+//! serial baselines, the Hogwild shard kernels, and the FULL-W2V
+//! reference trainer — shares a single implementation, exactly like the
+//! dot/axpy hot loops before it.
+
+/// word2vec.c's EXP_TABLE: sigmoid precomputed over [-MAX_EXP, MAX_EXP]
+/// in EXP_TABLE_SIZE buckets, saturating outside.
+pub struct SigmoidTable {
+    table: Vec<f32>,
+    max_exp: f32,
+}
+
+impl SigmoidTable {
+    pub const EXP_TABLE_SIZE: usize = 1000;
+    pub const MAX_EXP: f32 = 6.0;
+
+    pub fn new() -> Self {
+        let n = Self::EXP_TABLE_SIZE;
+        let table = (0..n)
+            .map(|i| {
+                let x = (i as f32 / n as f32 * 2.0 - 1.0) * Self::MAX_EXP;
+                let e = x.exp();
+                e / (e + 1.0)
+            })
+            .collect();
+        SigmoidTable { table, max_exp: Self::MAX_EXP }
+    }
+
+    /// Table lookup, saturating to {0, 1} outside ±MAX_EXP exactly like
+    /// word2vec.c (which skips the update when |x| > MAX_EXP for the
+    /// positive label path; we return the saturated value instead, which
+    /// zeroes the gradient for label-matched pairs).
+    ///
+    /// The index *rounds* to the nearest grid point rather than
+    /// truncating: table entry `i` is the sigmoid sampled at
+    /// `x_i = (i/N * 2 - 1) * MAX_EXP`, so rounding makes an input that
+    /// lands exactly on a grid point read its own entry (a truncating
+    /// cast could fall one bucket short of the edge when
+    /// `(x + MAX_EXP) * N / (2 * MAX_EXP)` rounds down in f32), and
+    /// halves the worst-case quantization error while restoring the
+    /// `sigmoid(x) + sigmoid(-x) = 1` symmetry across bucket edges.
+    #[inline]
+    pub fn sigmoid(&self, x: f32) -> f32 {
+        if x >= self.max_exp {
+            1.0
+        } else if x <= -self.max_exp {
+            0.0
+        } else {
+            let idx = ((x + self.max_exp)
+                * (Self::EXP_TABLE_SIZE as f32 / (2.0 * self.max_exp)))
+                .round() as usize;
+            self.table[idx.min(Self::EXP_TABLE_SIZE - 1)]
+        }
+    }
+}
+
+impl Default for SigmoidTable {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+/// Exact sigmoid (used by the matrix baselines; numerically stable).
+#[inline]
+pub fn sigmoid(x: f32) -> f32 {
+    if x >= 0.0 {
+        1.0 / (1.0 + (-x).exp())
+    } else {
+        let e = x.exp();
+        e / (1.0 + e)
+    }
+}
+
+/// Numerically-stable softplus log(1+e^x), for loss reporting.
+#[inline]
+pub fn softplus(x: f32) -> f64 {
+    let x = x as f64;
+    if x > 30.0 {
+        x
+    } else if x < -30.0 {
+        0.0
+    } else {
+        x.exp().ln_1p()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn table_tracks_exact_sigmoid() {
+        let t = SigmoidTable::new();
+        for i in -50..=50 {
+            let x = i as f32 * 0.1;
+            let err = (t.sigmoid(x) - sigmoid(x)).abs();
+            assert!(err < 0.01, "x={x} err={err}");
+        }
+    }
+
+    #[test]
+    fn table_saturates() {
+        let t = SigmoidTable::new();
+        assert_eq!(t.sigmoid(100.0), 1.0);
+        assert_eq!(t.sigmoid(-100.0), 0.0);
+        assert_eq!(t.sigmoid(6.0), 1.0);
+        assert_eq!(t.sigmoid(-6.0), 0.0);
+    }
+
+    /// Regression for the truncating index cast: an input sitting exactly
+    /// on a table grid point must read its own entry, not the neighbor a
+    /// rounded-down f32 product would select.
+    #[test]
+    fn grid_points_read_their_own_bucket() {
+        let t = SigmoidTable::new();
+        let n = SigmoidTable::EXP_TABLE_SIZE;
+        for i in (1..n).step_by(7) {
+            let x = (i as f32 / n as f32 * 2.0 - 1.0) * SigmoidTable::MAX_EXP;
+            if x.abs() >= SigmoidTable::MAX_EXP {
+                continue;
+            }
+            let err = (t.sigmoid(x) - sigmoid(x)).abs();
+            assert!(err < 1e-4, "grid i={i} x={x} err={err}");
+        }
+    }
+
+    /// Rounding restores the sigmoid symmetry across bucket edges.
+    #[test]
+    fn table_is_symmetric() {
+        let t = SigmoidTable::new();
+        for i in 0..400 {
+            let x = i as f32 * 0.0137;
+            let s = t.sigmoid(x) + t.sigmoid(-x);
+            assert!((s - 1.0).abs() < 2e-3, "x={x} sum={s}");
+        }
+    }
+
+    #[test]
+    fn exact_sigmoid_properties() {
+        assert!((sigmoid(0.0) - 0.5).abs() < 1e-7);
+        assert!((sigmoid(5.0) + sigmoid(-5.0) - 1.0).abs() < 1e-6);
+        assert!(sigmoid(-80.0) >= 0.0 && sigmoid(80.0) <= 1.0);
+    }
+
+    #[test]
+    fn softplus_stable() {
+        assert!((softplus(0.0) - 2f64.ln()).abs() < 1e-12);
+        assert_eq!(softplus(100.0), 100.0);
+        assert_eq!(softplus(-100.0), 0.0);
+    }
+}

@@ -52,40 +52,30 @@ impl Workbench {
     }
 
     /// Build any trainer by implementation name:
-    /// pjrt variants (`full_w2v`, ...) or CPU baselines
-    /// (`mikolov`, `pword2vec`, `psgnscc`).
+    /// pjrt variants (`full_w2v`, ...) or CPU trainers
+    /// (`mikolov`, `pword2vec`, `psgnscc`, `fullw2v`).
     pub fn trainer(
         &self,
         implementation: &str,
         train: &TrainConfig,
     ) -> Result<Box<dyn SgnsTrainer>> {
-        let hint = self.total_words * train.epochs.max(1) as u64;
-        Ok(match implementation {
-            "mikolov" => Box::new(crate::cpu_baseline::MikolovTrainer::new(
+        if crate::trainer::is_cpu_impl(implementation) {
+            // one epoch's words: both the CPU constructors and the
+            // coordinator multiply by cfg.epochs themselves (passing
+            // words x epochs here used to square the epoch factor and
+            // leave the lr nearly undecayed)
+            return crate::trainer::build_cpu_trainer(
+                implementation,
                 train,
                 &self.vocab,
-                hint,
-            )),
-            "pword2vec" => {
-                Box::new(crate::cpu_baseline::PWord2VecTrainer::new(
-                    train,
-                    &self.vocab,
-                    hint,
-                ))
-            }
-            "psgnscc" => Box::new(crate::cpu_baseline::PsgnsccTrainer::new(
-                train,
-                &self.vocab,
-                hint,
-            )),
-            variant => {
-                let mut cfg = Config::new();
-                cfg.artifacts_dir = default_artifacts_dir();
-                cfg.train = train.clone();
-                cfg.train.variant = variant.to_string();
-                Box::new(Coordinator::new(cfg, &self.vocab, self.total_words)?)
-            }
-        })
+                self.total_words,
+            );
+        }
+        let mut cfg = Config::new();
+        cfg.artifacts_dir = default_artifacts_dir();
+        cfg.train = train.clone();
+        cfg.train.variant = implementation.to_string();
+        Ok(Box::new(Coordinator::new(cfg, &self.vocab, self.total_words)?))
     }
 }
 
@@ -138,7 +128,7 @@ mod tests {
             subsample: 0.0,
             ..TrainConfig::default()
         };
-        for name in ["mikolov", "pword2vec", "psgnscc"] {
+        for name in ["mikolov", "pword2vec", "psgnscc", "fullw2v"] {
             let t = wb.trainer(name, &cfg).unwrap();
             assert!(t.name().len() > 3);
         }

@@ -1,0 +1,263 @@
+//! Hogwild training-layer integration: single-thread determinism, the
+//! documented update rule, parallel convergence parity, and the
+//! per-chunk accounting fix.  Every test name carries `hogwild` so
+//! `cargo test -- hogwild` exercises exactly this suite (the CI release
+//! job does).
+
+use fullw2v::config::TrainConfig;
+use fullw2v::coordinator::{train_all, SgnsTrainer};
+use fullw2v::corpus::synthetic::{SyntheticCorpus, SyntheticSpec};
+use fullw2v::corpus::vocab::Vocab;
+use fullw2v::sampler::unigram::UnigramTable;
+use fullw2v::trainer::{build_cpu_trainer, hogwild, FullW2vTrainer, CPU_IMPLS};
+use fullw2v::vecops::{dot, sigmoid};
+use std::sync::Arc;
+
+fn tiny_corpus(total_words: u64) -> (Vocab, Arc<Vec<Vec<u32>>>) {
+    let mut spec = SyntheticSpec::tiny();
+    spec.total_words = total_words;
+    let corpus = SyntheticCorpus::generate(spec);
+    let text = corpus.to_text();
+    let vocab = Vocab::build(text.split_whitespace(), 1);
+    let sentences: Vec<Vec<u32>> = corpus
+        .sentences
+        .iter()
+        .map(|s| {
+            s.iter()
+                .map(|&id| vocab.id(&corpus.words[id as usize]).unwrap())
+                .collect()
+        })
+        .collect();
+    (vocab, Arc::new(sentences))
+}
+
+fn cfg(threads: usize) -> TrainConfig {
+    TrainConfig {
+        dim: 16,
+        window: 4,
+        negatives: 3,
+        epochs: 2,
+        subsample: 0.0,
+        sentence_chunk: 32,
+        threads,
+        seed: 5,
+        ..TrainConfig::default()
+    }
+}
+
+/// threads = 1 must be bit-reproducible: same seed, same corpus, same
+/// bits out, run after run.
+#[test]
+fn hogwild_threads1_bit_identical_across_runs() {
+    let (vocab, sents) = tiny_corpus(20_000);
+    let total: u64 = sents.iter().map(|s| s.len() as u64).sum();
+    let run = || {
+        let mut tr = FullW2vTrainer::new(&cfg(1), &vocab, total);
+        train_all(&mut tr, &sents, 2).unwrap();
+        (tr.model().syn0.clone(), tr.model().syn1.clone())
+    };
+    let (a0, a1) = run();
+    let (b0, b1) = run();
+    assert_eq!(a0, b0, "syn0 must be bit-identical across runs");
+    assert_eq!(a1, b1, "syn1 must be bit-identical across runs");
+}
+
+/// The driver feeds every kernel the same deterministic stream, so the
+/// serial baselines are bit-reproducible through it too.
+#[test]
+fn hogwild_baselines_bit_identical_across_runs() {
+    let (vocab, sents) = tiny_corpus(8_000);
+    let total: u64 = sents.iter().map(|s| s.len() as u64).sum();
+    for name in ["mikolov", "pword2vec"] {
+        let run = || {
+            let mut tr =
+                build_cpu_trainer(name, &cfg(1), &vocab, total).unwrap();
+            tr.train_epoch(&sents, 0).unwrap();
+            tr.model().syn0.clone()
+        };
+        assert_eq!(run(), run(), "{name} must be deterministic at 1 thread");
+    }
+}
+
+/// The documented update rule on a tiny corpus: one chunk of two words,
+/// replayed against a hand-computed pWord2Vec window update with the
+/// chunk-shared negatives the kernel draws.  The negative ids are
+/// recovered by replaying the worker RNG stream, and the sentence words
+/// are chosen to avoid them, so deferred negative write-back and
+/// immediate scatter coincide and the oracle is exact.
+#[test]
+fn hogwild_fullw2v_matches_pword2vec_window_oracle() {
+    let vocab =
+        Vocab::from_counts((0..40).map(|i| (format!("w{i}"), 10u64)), 1);
+    let cfg = TrainConfig {
+        dim: 4,
+        window: 2, // wf = 1
+        negatives: 2,
+        epochs: 1,
+        subsample: 0.0,
+        sentence_chunk: 8,
+        threads: 1,
+        seed: 9,
+        lr: 0.025,
+        ..TrainConfig::default()
+    };
+    let d = cfg.dim;
+
+    // replay the worker stream to learn the chunk's negative draws
+    let mut rng = hogwild::worker_rng(cfg.seed, 0, 0);
+    let table = UnigramTable::new(&vocab, UnigramTable::DEFAULT_ALPHA);
+    let negs = [table.sample(&mut rng), table.sample(&mut rng)];
+    assert_ne!(negs[0], negs[1], "pick another seed: duplicate negatives");
+    // sentence words disjoint from the negatives
+    let words: Vec<u32> =
+        (0u32..40).filter(|w| !negs.contains(w)).take(2).collect();
+    let (wa, wb) = (words[0], words[1]);
+
+    // planted model state
+    let mut tr = FullW2vTrainer::new(&cfg, &vocab, 2);
+    for id in 0..40u32 {
+        let v: Vec<f32> = (0..d)
+            .map(|j| 0.01 * (id as f32 + 1.0) * (j as f32 + 1.0) - 0.05)
+            .collect();
+        tr.model_mut().syn0_row_mut(id).copy_from_slice(&v);
+        let u: Vec<f32> = (0..d)
+            .map(|j| 0.02 * (j as f32 + 1.0) - 0.015 * (id as f32 % 5.0))
+            .collect();
+        tr.model_mut().syn1_row_mut(id).copy_from_slice(&u);
+    }
+
+    // oracle: pWord2Vec window updates with the shared negatives, f32,
+    // same kernel order (positive column first, then negatives in draw
+    // order), lr exactly lr0 for the first chunk
+    let mut syn0: Vec<Vec<f32>> =
+        (0..40u32).map(|id| tr.model().syn0_row(id).to_vec()).collect();
+    let mut syn1: Vec<Vec<f32>> =
+        (0..40u32).map(|id| tr.model().syn1_row(id).to_vec()).collect();
+    let lr = cfg.lr;
+    let sent = [wa, wb];
+    for t in 0..2usize {
+        let center = sent[t] as usize;
+        let ctx = sent[1 - t] as usize;
+        let c = syn0[ctx].clone();
+        let u0 = syn1[center].clone();
+        let uk: Vec<Vec<f32>> =
+            negs.iter().map(|&g| syn1[g as usize].clone()).collect();
+        let z0 = dot(&c, &u0);
+        let g0 = (1.0 - sigmoid(z0)) * lr;
+        let gk: Vec<f32> = uk
+            .iter()
+            .map(|u| {
+                let z = dot(&c, u);
+                (0.0 - sigmoid(z)) * lr
+            })
+            .collect();
+        // dC from pre-update U, same column order as the kernel
+        for j in 0..d {
+            let mut dc = g0 * u0[j];
+            for (k, u) in uk.iter().enumerate() {
+                dc += gk[k] * u[j];
+            }
+            syn0[ctx][j] += dc;
+        }
+        // dU from pre-update C
+        for j in 0..d {
+            syn1[center][j] += g0 * c[j];
+        }
+        for (k, &g) in negs.iter().enumerate() {
+            for j in 0..d {
+                syn1[g as usize][j] += gk[k] * c[j];
+            }
+        }
+    }
+
+    let sents = Arc::new(vec![vec![wa, wb]]);
+    tr.train_epoch(&sents, 0).unwrap();
+
+    for id in 0..40u32 {
+        let got0 = tr.model().syn0_row(id);
+        let got1 = tr.model().syn1_row(id);
+        for j in 0..d {
+            assert!(
+                (got0[j] - syn0[id as usize][j]).abs() < 1e-6,
+                "syn0[{id}][{j}]: got {} want {}",
+                got0[j],
+                syn0[id as usize][j]
+            );
+            assert!(
+                (got1[j] - syn1[id as usize][j]).abs() < 1e-6,
+                "syn1[{id}][{j}]: got {} want {}",
+                got1[j],
+                syn1[id as usize][j]
+            );
+        }
+    }
+}
+
+/// Hogwild at N threads must land in the same loss region as serial.
+#[test]
+fn hogwild_threads4_loss_within_tolerance_of_serial() {
+    let (vocab, sents) = tiny_corpus(30_000);
+    let total: u64 = sents.iter().map(|s| s.len() as u64).sum();
+
+    let mut serial = FullW2vTrainer::new(&cfg(1), &vocab, total);
+    let rep1 = train_all(&mut serial, &sents, 2).unwrap();
+    let (_, loss1) = rep1.loss_trajectory();
+
+    let mut par = FullW2vTrainer::new(&cfg(4), &vocab, total);
+    let rep4 = train_all(&mut par, &sents, 2).unwrap();
+    let (_, loss4) = rep4.loss_trajectory();
+    assert_eq!(rep4.epochs[0].threads, 4, "4 workers must actually run");
+
+    assert!(
+        (loss4 - loss1).abs() < 0.2 * loss1,
+        "parallel loss {loss4} strays from serial {loss1}"
+    );
+    // both trained the same number of words (subsampling off)
+    assert_eq!(rep1.total_words(), rep4.total_words());
+}
+
+/// All four CPU implementations run through the shared driver, in
+/// parallel, and converge.
+#[test]
+fn hogwild_all_cpu_impls_train_through_driver() {
+    let (vocab, sents) = tiny_corpus(8_000);
+    let total: u64 = sents.iter().map(|s| s.len() as u64).sum();
+    for name in CPU_IMPLS {
+        let mut tr =
+            build_cpu_trainer(name, &cfg(2), &vocab, total).unwrap();
+        let rep = train_all(&mut tr, &sents, 2).unwrap();
+        let (first, last) = rep.loss_trajectory();
+        assert!(last < first, "{name}: loss did not decrease {first}->{last}");
+        assert_eq!(rep.epochs[0].threads, 2, "{name}: 2 workers");
+        assert!(rep.total_words() > 0);
+    }
+}
+
+/// The accounting fix: a sentence spanning several chunks reports one
+/// batch per chunk and decays the lr over the chunks, not once per
+/// sentence.
+#[test]
+fn hogwild_accounting_is_per_chunk() {
+    let vocab =
+        Vocab::from_counts((0..20).map(|i| (format!("w{i}"), 10u64)), 1);
+    let mut cfg = cfg(1);
+    cfg.sentence_chunk = 16;
+    cfg.window = 2;
+    cfg.epochs = 1;
+    // one 48-word sentence -> 3 chunks of 16
+    let sent: Vec<u32> = (0..48u32).map(|i| i % 20).collect();
+    let sents = Arc::new(vec![sent]);
+    let mut tr = FullW2vTrainer::new(&cfg, &vocab, 48);
+    let rep = tr.train_epoch(&sents, 0).unwrap();
+    assert_eq!(rep.batches, 3, "batches must count chunks, not sentences");
+    assert_eq!(rep.words, 48);
+    // lr after the epoch reflects all 48 words through the schedule
+    let probe = fullw2v::coordinator::lr::LrSchedule::new(
+        cfg.lr,
+        cfg.min_lr_ratio,
+        48,
+    );
+    assert_eq!(rep.lr_end.to_bits(), probe.lr_at(48).to_bits());
+    // and the negative block was loaded once per chunk
+    assert_eq!(rep.neg_rows_loaded, 3 * cfg.negatives as u64);
+}

@@ -97,6 +97,68 @@ fn trained_embeddings_recover_latent_similarity() {
     assert!(rho_after > 0.25, "absolute recovery too weak: {rho_after}");
 }
 
+/// Table 7's protocol applied to the Hogwild layer (CPU-only, so no
+/// artifacts gate): parallel fullw2v must recover the latent similarity
+/// structure as well as the serial reference path — eval scores may not
+/// cross below serial minus tolerance.
+#[test]
+fn hogwild_parallel_quality_non_crossing() {
+    let s = setup();
+    let total: u64 = s.sentences.iter().map(|x| x.len() as u64).sum();
+
+    let mut serial_cfg = s.cfg.clone();
+    serial_cfg.threads = 1;
+    let mut serial = fullw2v::trainer::FullW2vTrainer::new(
+        &serial_cfg, &s.vocab, total,
+    );
+    train_all(&mut serial, &s.sentences, 3).unwrap();
+    let rho_serial = spearman_vs_gold(&s, serial.model());
+
+    let mut par_cfg = s.cfg.clone();
+    par_cfg.threads = 4;
+    let mut par = fullw2v::trainer::FullW2vTrainer::new(
+        &par_cfg, &s.vocab, total,
+    );
+    train_all(&mut par, &s.sentences, 3).unwrap();
+    let rho_par = spearman_vs_gold(&s, par.model());
+
+    assert!(
+        rho_serial > 0.25,
+        "serial fullw2v must recover structure: {rho_serial}"
+    );
+    assert!(
+        rho_par > rho_serial - 0.15,
+        "parallel quality crossed below serial: \
+         serial {rho_serial} vs 4-thread {rho_par}"
+    );
+}
+
+/// The FULL-W2V reference trainer and its CPU update-rule relative
+/// (pWord2Vec) must produce equivalent-quality embeddings — the reuse
+/// axes change memory traffic, not semantics.
+#[test]
+fn hogwild_fullw2v_and_pword2vec_statistically_equivalent() {
+    let s = setup();
+    let total: u64 = s.sentences.iter().map(|x| x.len() as u64).sum();
+
+    let mut full = fullw2v::trainer::FullW2vTrainer::new(
+        &s.cfg, &s.vocab, total,
+    );
+    train_all(&mut full, &s.sentences, 3).unwrap();
+    let rho_full = spearman_vs_gold(&s, full.model());
+
+    let mut pw = fullw2v::cpu_baseline::PWord2VecTrainer::new(
+        &s.cfg, &s.vocab, total,
+    );
+    train_all(&mut pw, &s.sentences, 3).unwrap();
+    let rho_pw = spearman_vs_gold(&s, pw.model());
+
+    assert!(
+        (rho_full - rho_pw).abs() < 0.15,
+        "quality divergence: fullw2v {rho_full} vs pword2vec {rho_pw}"
+    );
+}
+
 #[test]
 fn pjrt_and_cpu_trainers_statistically_equivalent() {
     // Table 7's claim at test scale: FULL-W2V (PJRT) and pWord2Vec (CPU)
@@ -116,7 +178,7 @@ fn pjrt_and_cpu_trainers_statistically_equivalent() {
     let rho_gpu = spearman_vs_gold(&s, coord.model());
 
     let mut cpu = fullw2v::cpu_baseline::PWord2VecTrainer::new(
-        &s.cfg, &s.vocab, total * 3,
+        &s.cfg, &s.vocab, total,
     );
     train_all(&mut cpu, &s.sentences, 3).unwrap();
     let rho_cpu = spearman_vs_gold(&s, cpu.model());

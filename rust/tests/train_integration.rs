@@ -92,8 +92,10 @@ fn coordinator_matches_cpu_pword2vec_semantics() {
     let total: u64 = sents.iter().map(|s| s.len() as u64).sum();
     let mut coord = Coordinator::new(cfg.clone(), &vocab, total).unwrap();
     let rep_gpu = train_all(&mut coord, &sents, 2).unwrap();
+    // hint = one epoch's words: the constructor multiplies by epochs,
+    // matching Coordinator::new above
     let mut cpu = fullw2v::cpu_baseline::PWord2VecTrainer::new(
-        &cfg.train, &vocab, total * 2,
+        &cfg.train, &vocab, total,
     );
     let rep_cpu = train_all(&mut cpu, &sents, 2).unwrap();
     let (_, gpu_last) = rep_gpu.loss_trajectory();
