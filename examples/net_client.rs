@@ -1,0 +1,164 @@
+//! Network serving quickstart: export a store, stand the HTTP front-end
+//! up on an ephemeral loopback port, and drive it over **real sockets**
+//! — health check, nn by word / id / vector, embed, stats — then drain
+//! it through `POST /admin/shutdown` and print the engine's final
+//! report.
+//!
+//! Acceptance checks: every wire-path top-k must be identical to the
+//! same query asked directly through the engine's `QueryClient`, and
+//! the post-drain report must cover all the traffic.
+//!
+//! Run: `cargo run --release --example net_client`
+
+use anyhow::{ensure, Result};
+use fullw2v::corpus::vocab::Vocab;
+use fullw2v::model::EmbeddingModel;
+use fullw2v::net::{simple_request, NetOptions, NetServer};
+use fullw2v::serve::{
+    export_store, Precision, ServeEngine, ServeOptions, ShardedStore,
+};
+use fullw2v::util::json::{obj, Json};
+use std::sync::Arc;
+
+const VOCAB: usize = 200;
+const DIM: usize = 32;
+const K: usize = 5;
+
+fn neighbor_ids(body: &Json) -> Vec<u32> {
+    body.get("neighbors")
+        .and_then(|n| n.as_arr())
+        .map(|arr| {
+            arr.iter()
+                .filter_map(|n| n.get("id").and_then(|i| i.as_f64()))
+                .map(|i| i as u32)
+                .collect()
+        })
+        .unwrap_or_default()
+}
+
+fn main() -> Result<()> {
+    println!("== FULL-W2V network serving quickstart ==");
+
+    // 1. a small random model, exported as a 4-shard store
+    let vocab = Vocab::from_counts(
+        (0..VOCAB).map(|i| (format!("w{i:03}"), (VOCAB - i) as u64 * 3)),
+        1,
+    );
+    let model = EmbeddingModel::init(VOCAB, DIM, 7);
+    let dir = std::env::temp_dir().join("fullw2v_net_client_store");
+    std::fs::create_dir_all(&dir)?;
+    export_store(&model, &vocab, &dir, 4)?;
+    println!("store: {VOCAB} rows x {DIM} dims in 4 shards at {dir:?}");
+
+    // 2. engine + HTTP front-end on an ephemeral port
+    let store = Arc::new(ShardedStore::open(&dir, Precision::Exact)?);
+    let served_vocab = Vocab::load(&dir.join("vocab.tsv"))?;
+    let engine = ServeEngine::start(store, ServeOptions::default());
+    let server = NetServer::start(
+        engine,
+        Some(served_vocab),
+        "127.0.0.1:0",
+        NetOptions::default(),
+    )?;
+    let addr = server.local_addr().to_string();
+    println!("serving on http://{addr}");
+
+    // 3. health over the wire
+    let (status, body) = simple_request(&addr, "GET", "/healthz", None)?;
+    ensure!(status == 200, "healthz -> {status}");
+    println!("healthz: {}", String::from_utf8_lossy(&body));
+
+    // 4. nn by word, id, and vector — each checked against the direct
+    //    QueryClient answer
+    let client = server.client();
+    let mut checked = 0u64;
+    for id in [0u32, 17, 63, 140] {
+        let direct: Vec<u32> = client
+            .query_id(id, K)
+            .map_err(anyhow::Error::msg)?
+            .iter()
+            .map(|n| n.id)
+            .collect();
+        for req in [
+            obj(vec![
+                ("id", Json::Num(id as f64)),
+                ("k", Json::Num(K as f64)),
+            ]),
+            obj(vec![
+                ("word", Json::Str(format!("w{id:03}"))),
+                ("k", Json::Num(K as f64)),
+            ]),
+        ] {
+            let (status, bytes) =
+                simple_request(&addr, "POST", "/v1/nn", Some(&req))?;
+            ensure!(status == 200, "nn -> {status}");
+            let parsed = Json::parse(std::str::from_utf8(&bytes)?)?;
+            ensure!(
+                neighbor_ids(&parsed) == direct,
+                "wire top-{K} for id {id} diverged from the direct query"
+            );
+            checked += 1;
+        }
+    }
+    println!("nn: {checked} wire queries identical to direct QueryClient answers");
+
+    // 5. embed a row, then nn by that vector: the row ranks itself first
+    let (status, bytes) = simple_request(
+        &addr,
+        "POST",
+        "/v1/embed",
+        Some(&obj(vec![("word", Json::Str("w042".into()))])),
+    )?;
+    ensure!(status == 200, "embed -> {status}");
+    let embed = Json::parse(std::str::from_utf8(&bytes)?)?;
+    let vector = embed.get("vector").and_then(|v| v.as_arr()).unwrap();
+    ensure!(vector.len() == DIM, "embed returned {} dims", vector.len());
+    let (status, bytes) = simple_request(
+        &addr,
+        "POST",
+        "/v1/nn",
+        Some(&obj(vec![
+            ("vector", Json::Arr(vector.to_vec())),
+            ("k", Json::Num(1.0)),
+        ])),
+    )?;
+    ensure!(status == 200, "nn by vector -> {status}");
+    let parsed = Json::parse(std::str::from_utf8(&bytes)?)?;
+    ensure!(
+        neighbor_ids(&parsed) == vec![42],
+        "a row's own vector must rank the row first"
+    );
+    println!("embed: w042 round-trips through /v1/embed -> /v1/nn");
+
+    // 6. stats mid-flight
+    let (status, bytes) = simple_request(&addr, "GET", "/stats", None)?;
+    ensure!(status == 200, "stats -> {status}");
+    let stats = Json::parse(std::str::from_utf8(&bytes)?)?;
+    let fill = stats
+        .get("serve")
+        .and_then(|s| s.get("batch_fill"))
+        .and_then(|f| f.as_f64())
+        .unwrap_or(0.0);
+    println!("stats: batch fill {fill:.2}, routes {}", {
+        stats
+            .get("net")
+            .and_then(|n| n.get("routes"))
+            .map(|r| r.to_string())
+            .unwrap_or_default()
+    });
+
+    // 7. graceful drain over the wire
+    let (status, _) = simple_request(&addr, "POST", "/admin/shutdown", None)?;
+    ensure!(status == 200, "shutdown -> {status}");
+    let report = server.join();
+    // 8 wire nn + 4 direct comparisons + 1 nn-by-vector = 13 engine hits
+    ensure!(
+        report.queries >= checked + 5,
+        "final report must cover all traffic, got {} queries",
+        report.queries
+    );
+    ensure!(report.shed == 0, "nothing should shed at this load");
+    println!("drained; final report:\n{}", report.summary());
+    println!("\nOK: wire answers identical to direct engine answers");
+    Ok(())
+}

@@ -52,6 +52,9 @@ pub enum Command {
         word: String,
         k: usize,
         quantized: bool,
+        /// IVF probe width for --store lookups (0 = exhaustive), the
+        /// same plan `serve` uses — ad-hoc answers match served ones.
+        nprobe: usize,
     },
     ExportStore {
         model: String,
@@ -62,7 +65,11 @@ pub enum Command {
     },
     Serve {
         store: String,
-        queries: String,
+        /// File mode: answer a queries file and exit.
+        queries: Option<String>,
+        /// Network mode: run the HTTP front-end on this address
+        /// (`--listen`, falling back to `serve.listen` in the config).
+        listen: Option<String>,
         k: usize,
         quantized: bool,
         /// Max queries folded into one micro-batch (scan-reuse factor).
@@ -92,10 +99,15 @@ COMMANDS:
         [--threads T] [--out MODEL]
         [--store DIR [--shards N] [--clusters C]]
   eval --model MODEL.txt --pairs PAIRS.tsv
-  nn (--model MODEL.txt | --store DIR [--quantized]) --word WORD [--k K]
+  nn (--model MODEL.txt | --store DIR [--quantized] [--nprobe P])
+     --word WORD [--k K]
   export-store --model MODEL.txt --out DIR [--shards N] [--clusters C]
-  serve --store DIR --queries FILE [--k K] [--quantized] [--batch N]
-        [--nprobe P]
+  serve --store DIR (--queries FILE | --listen ADDR)
+        [--k K] [--quantized] [--batch N] [--nprobe P]
+        file mode answers a queries file and exits; --listen (or
+        serve.listen in the config) runs the HTTP front-end:
+        POST /v1/nn /v1/embed, GET /healthz /stats,
+        POST /admin/shutdown drains (503s shed; serve.max_inflight)
   gen-corpus --spec tiny|text8|1bw --out DIR
   gpusim
   manifest
@@ -133,7 +145,7 @@ pub fn parse(args: &[String]) -> Result<Cli> {
             "--corpus" | "--synthetic" | "--out" | "--model" | "--pairs"
             | "--word" | "--k" | "--spec" | "--store" | "--queries"
             | "--shards" | "--batch" | "--clusters" | "--nprobe"
-            | "--impl" | "--threads" => {
+            | "--impl" | "--threads" | "--listen" => {
                 let key = a.trim_start_matches('-').to_string();
                 opts.push((key, take_value(&mut i)?));
             }
@@ -204,13 +216,17 @@ pub fn parse(args: &[String]) -> Result<Cli> {
             if model.is_some() && get("quantized").is_some() {
                 bail!("--quantized only applies to --store");
             }
+            if model.is_some() && get("nprobe").is_some() {
+                bail!("--nprobe only applies to --store");
+            }
             Command::Nn {
                 model,
                 store,
                 word: get("word")
                     .ok_or_else(|| anyhow!("nn needs --word"))?,
-                k: int_flag("k", 10)?,
+                k: int_flag("k", crate::serve::DEFAULT_TOP_K)?,
                 quantized: get("quantized").is_some(),
+                nprobe: int_flag("nprobe", 0)?,
             }
         }
         "export-store" => Command::ExportStore {
@@ -221,16 +237,40 @@ pub fn parse(args: &[String]) -> Result<Cli> {
             shards: int_flag("shards", 4)?,
             clusters: int_flag("clusters", 0)?,
         },
-        "serve" => Command::Serve {
-            store: get("store")
-                .ok_or_else(|| anyhow!("serve needs --store"))?,
-            queries: get("queries")
-                .ok_or_else(|| anyhow!("serve needs --queries"))?,
-            k: int_flag("k", 10)?,
-            quantized: get("quantized").is_some(),
-            batch: int_flag("batch", 32)?,
-            nprobe: int_flag("nprobe", 0)?,
-        },
+        "serve" => {
+            let queries = get("queries");
+            // --listen wins; with neither flag the config's serve.listen
+            // (if set) selects network mode
+            let listen = get("listen").or_else(|| {
+                if queries.is_none() && !config.serve.listen.is_empty() {
+                    Some(config.serve.listen.clone())
+                } else {
+                    None
+                }
+            });
+            if queries.is_some() && listen.is_some() {
+                bail!(
+                    "serve takes --queries (file mode) or --listen \
+                     (network mode), not both"
+                );
+            }
+            if queries.is_none() && listen.is_none() {
+                bail!(
+                    "serve needs --queries or --listen (or serve.listen \
+                     in the config)"
+                );
+            }
+            Command::Serve {
+                store: get("store")
+                    .ok_or_else(|| anyhow!("serve needs --store"))?,
+                queries,
+                listen,
+                k: int_flag("k", crate::serve::DEFAULT_TOP_K)?,
+                quantized: get("quantized").is_some(),
+                batch: int_flag("batch", 32)?,
+                nprobe: int_flag("nprobe", 0)?,
+            }
+        }
         "gen-corpus" => Command::GenCorpus {
             spec: get("spec").unwrap_or_else(|| "tiny".into()),
             out: get("out")
@@ -410,6 +450,76 @@ mod tests {
         .is_err());
         assert!(p(&[
             "export-store", "--model", "m", "--out", "d", "--clusters", "4.5"
+        ])
+        .is_err());
+    }
+
+    #[test]
+    fn serve_listen_modes() {
+        // network mode via flag
+        let cli =
+            p(&["serve", "--store", "d", "--listen", "127.0.0.1:0"]).unwrap();
+        match cli.command {
+            Command::Serve { queries, listen, .. } => {
+                assert!(queries.is_none());
+                assert_eq!(listen.as_deref(), Some("127.0.0.1:0"));
+            }
+            _ => panic!(),
+        }
+        // file and network modes are exclusive
+        assert!(p(&[
+            "serve", "--store", "d", "--queries", "q", "--listen", "a:1"
+        ])
+        .is_err());
+        // the config's serve.listen selects network mode when no flag
+        let cli = p(&[
+            "serve", "--store", "d", "-s", "serve.listen=127.0.0.1:9",
+        ])
+        .unwrap();
+        match cli.command {
+            Command::Serve { listen, .. } => {
+                assert_eq!(listen.as_deref(), Some("127.0.0.1:9"));
+            }
+            _ => panic!(),
+        }
+        // ...but an explicit --queries keeps file mode despite the config
+        let cli = p(&[
+            "serve", "--store", "d", "--queries", "q", "-s",
+            "serve.listen=127.0.0.1:9",
+        ])
+        .unwrap();
+        match cli.command {
+            Command::Serve { queries, listen, .. } => {
+                assert_eq!(queries.as_deref(), Some("q"));
+                assert!(listen.is_none());
+            }
+            _ => panic!(),
+        }
+    }
+
+    #[test]
+    fn nn_nprobe_is_store_only() {
+        let cli = p(&[
+            "nn", "--store", "d", "--word", "w", "--nprobe", "4",
+        ])
+        .unwrap();
+        match cli.command {
+            Command::Nn { nprobe, .. } => assert_eq!(nprobe, 4),
+            _ => panic!(),
+        }
+        // defaults to exhaustive
+        let cli = p(&["nn", "--store", "d", "--word", "w"]).unwrap();
+        match cli.command {
+            Command::Nn { nprobe, .. } => assert_eq!(nprobe, 0),
+            _ => panic!(),
+        }
+        // probing is a store-path option, like --quantized
+        assert!(p(&[
+            "nn", "--model", "m", "--word", "w", "--nprobe", "4"
+        ])
+        .is_err());
+        assert!(p(&[
+            "nn", "--store", "d", "--word", "w", "--nprobe", "x"
         ])
         .is_err());
     }

@@ -207,11 +207,52 @@ impl PipelineConfig {
     }
 }
 
-/// Full application config: train + pipeline + paths.
+/// Default bound on concurrently admitted engine-bound HTTP requests;
+/// the single source shared by [`ServeConfig`] and the net layer's
+/// `NetOptions` so the two construction paths cannot drift.
+pub const DEFAULT_MAX_INFLIGHT: usize = 256;
+
+/// Network serving front-end configuration (`serve --listen` mode).
+#[derive(Debug, Clone, PartialEq)]
+pub struct ServeConfig {
+    /// Listen address for the HTTP front-end (e.g. "127.0.0.1:7878").
+    /// Empty = no default; `serve` stays in file mode unless `--listen`
+    /// is passed.  Port 0 binds an ephemeral port (printed at startup).
+    pub listen: String,
+    /// Engine-bound requests admitted concurrently before the front-end
+    /// starts shedding with 503 + Retry-After (0 = unlimited).  Sized
+    /// relative to the engine's queue depth: admitted requests block on
+    /// the bounded queue, so this gauge is what keeps overload from
+    /// piling latency onto every request.
+    pub max_inflight: usize,
+}
+
+impl Default for ServeConfig {
+    fn default() -> Self {
+        ServeConfig {
+            listen: String::new(),
+            max_inflight: DEFAULT_MAX_INFLIGHT,
+        }
+    }
+}
+
+impl ServeConfig {
+    fn apply_kv(&mut self, key: &str, v: &TomlValue) -> Result<(), String> {
+        match key {
+            "listen" => self.listen = v.as_str_or(key)?,
+            "max_inflight" => self.max_inflight = v.as_usize_or(key)?,
+            _ => return Err(format!("unknown [serve] key '{key}'")),
+        }
+        Ok(())
+    }
+}
+
+/// Full application config: train + pipeline + serve + paths.
 #[derive(Debug, Clone, Default, PartialEq)]
 pub struct Config {
     pub train: TrainConfig,
     pub pipeline: PipelineConfig,
+    pub serve: ServeConfig,
     /// Directory holding AOT artifacts + manifest.json.
     pub artifacts_dir: String,
 }
@@ -221,6 +262,7 @@ impl Config {
         Config {
             train: TrainConfig::default(),
             pipeline: PipelineConfig::default(),
+            serve: ServeConfig::default(),
             artifacts_dir: "artifacts".into(),
         }
     }
@@ -249,6 +291,7 @@ impl Config {
                 match section.as_str() {
                     "train" => self.train.apply_kv(k, v)?,
                     "pipeline" => self.pipeline.apply_kv(k, v)?,
+                    "serve" => self.serve.apply_kv(k, v)?,
                     "paths" => match k.as_str() {
                         "artifacts_dir" => {
                             self.artifacts_dir = v.as_str_or(k)?
@@ -278,6 +321,7 @@ impl Config {
         match section {
             "train" => self.train.apply_kv(key.trim(), &v),
             "pipeline" => self.pipeline.apply_kv(key.trim(), &v),
+            "serve" => self.serve.apply_kv(key.trim(), &v),
             "paths" if key.trim() == "artifacts_dir" => {
                 self.artifacts_dir = v.as_str_or(key)?;
                 Ok(())
@@ -390,6 +434,25 @@ mod tests {
         let mut cfg = Config::new();
         cfg.apply_override("train.threads=0").unwrap();
         assert!(cfg.train.resolved_threads() >= 1, "0 = auto");
+    }
+
+    #[test]
+    fn serve_section_parses_and_overrides() {
+        let c = ServeConfig::default();
+        assert!(c.listen.is_empty(), "no listen default: file mode");
+        assert_eq!(c.max_inflight, 256);
+        let cfg = Config::from_toml_str(
+            "[serve]\nlisten = \"127.0.0.1:7878\"\nmax_inflight = 32",
+        )
+        .unwrap();
+        assert_eq!(cfg.serve.listen, "127.0.0.1:7878");
+        assert_eq!(cfg.serve.max_inflight, 32);
+        let mut cfg = Config::new();
+        cfg.apply_override("serve.listen=0.0.0.0:80").unwrap();
+        cfg.apply_override("serve.max_inflight=8").unwrap();
+        assert_eq!(cfg.serve.listen, "0.0.0.0:80");
+        assert_eq!(cfg.serve.max_inflight, 8);
+        assert!(Config::from_toml_str("[serve]\nbogus = 1").is_err());
     }
 
     #[test]

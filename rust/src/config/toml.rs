@@ -90,8 +90,9 @@ pub fn parse_value(raw: &str) -> Result<TomlValue, String> {
     if let Ok(f) = raw.parse::<f64>() {
         return Ok(TomlValue::Float(f));
     }
-    // bare string (ergonomic for CLI overrides like train.variant=wombat)
-    if raw.chars().all(|c| c.is_alphanumeric() || "_-./".contains(c)) {
+    // bare string (ergonomic for CLI overrides like train.variant=wombat
+    // or serve.listen=127.0.0.1:0)
+    if raw.chars().all(|c| c.is_alphanumeric() || "_-./:".contains(c)) {
         return Ok(TomlValue::Str(raw.to_string()));
     }
     Err(format!("cannot parse value: {raw}"))
@@ -172,6 +173,11 @@ mod tests {
         assert_eq!(
             parse_value("bare_word").unwrap(),
             TomlValue::Str("bare_word".into())
+        );
+        // socket addresses stay one bare token for -s serve.listen=...
+        assert_eq!(
+            parse_value("127.0.0.1:8080").unwrap(),
+            TomlValue::Str("127.0.0.1:8080".into())
         );
         assert!(parse_value("\"unterminated").is_err());
         assert!(parse_value("").is_err());

@@ -20,7 +20,11 @@
 //! shards), a frequency-aware hot-word cache for the Zipf head, and a
 //! micro-batching top-k front-end that reports p50/p99 latency and QPS.
 //! It applies the paper's locality-hierarchy insight to inference; see
-//! the [`serve`] module docs for the tier-by-tier mapping.
+//! the [`serve`] module docs for the tier-by-tier mapping.  [`net`] puts
+//! that engine on the wire: a dependency-free HTTP/1.1 front-end
+//! (`serve --listen`) whose connection layer submits whole request
+//! windows into the micro-batcher and sheds load with 503s once the
+//! engine queue saturates.
 //!
 //! All f32/int8 hot loops — the serving scan, the CPU baselines'
 //! dot/axpy, evaluation — share one kernel layer, [`vecops`]: unrolled
@@ -51,6 +55,7 @@ pub mod gpusim;
 pub mod memmodel;
 pub mod metrics;
 pub mod model;
+pub mod net;
 pub mod runtime;
 pub mod sampler;
 pub mod serve;

@@ -124,15 +124,33 @@ fn run(cli: Cli) -> Result<()> {
             clusters,
         ),
         Command::Eval { model, pairs } => eval_cmd(&model, &pairs),
-        Command::Nn { model, store, word, k, quantized } => match store {
-            Some(dir) => nn_store_cmd(&dir, &word, k, quantized),
-            None => nn_cmd(&model.expect("cli enforces one source"), &word, k),
-        },
+        Command::Nn { model, store, word, k, quantized, nprobe } => {
+            match store {
+                Some(dir) => nn_store_cmd(&dir, &word, k, quantized, nprobe),
+                None => {
+                    nn_cmd(&model.expect("cli enforces one source"), &word, k)
+                }
+            }
+        }
         Command::ExportStore { model, out, shards, clusters } => {
             export_store_cmd(&model, &out, shards, clusters)
         }
-        Command::Serve { store, queries, k, quantized, batch, nprobe } => {
-            serve_cmd(&store, &queries, k, quantized, batch, nprobe)
+        Command::Serve { store, queries, listen, k, quantized, batch, nprobe } => {
+            match (queries, listen) {
+                (Some(queries), _) => {
+                    serve_cmd(&store, &queries, k, quantized, batch, nprobe)
+                }
+                (None, Some(listen)) => serve_net_cmd(
+                    &cli.config,
+                    &store,
+                    &listen,
+                    k,
+                    quantized,
+                    batch,
+                    nprobe,
+                ),
+                (None, None) => unreachable!("cli enforces one serve mode"),
+            }
         }
     }
 }
@@ -330,6 +348,7 @@ fn nn_store_cmd(
     word: &str,
     k: usize,
     quantized: bool,
+    nprobe: usize,
 ) -> Result<()> {
     use fullw2v::serve::{ServeEngine, ServeOptions, ShardedStore};
     let dir = Path::new(store_dir);
@@ -339,7 +358,12 @@ fn nn_store_cmd(
     let id = vocab
         .id(word)
         .ok_or_else(|| anyhow!("word '{word}' not in store vocab"))?;
-    let engine = ServeEngine::start(store, ServeOptions::default());
+    // the same IVF plan `serve --nprobe` uses, so an ad-hoc lookup
+    // returns exactly what the served path would
+    let engine = ServeEngine::start(
+        store,
+        ServeOptions { nprobe, ..ServeOptions::default() },
+    );
     let client = engine.client();
     let neighbors = client.query_id(id, k).map_err(anyhow::Error::msg)?;
     for n in &neighbors {
@@ -437,5 +461,51 @@ fn serve_cmd(
     drop(client);
     let report = engine.shutdown();
     println!("\n{}", report.summary());
+    Ok(())
+}
+
+/// Network serving mode: run the HTTP front-end until a graceful drain
+/// is requested (`POST /admin/shutdown`), then print the final report.
+#[allow(clippy::too_many_arguments)]
+fn serve_net_cmd(
+    cfg: &Config,
+    store_dir: &str,
+    listen: &str,
+    k: usize,
+    quantized: bool,
+    batch: usize,
+    nprobe: usize,
+) -> Result<()> {
+    use fullw2v::net::{NetOptions, NetServer};
+    use fullw2v::serve::{ServeEngine, ServeOptions, ShardedStore};
+    use std::io::Write;
+    let dir = Path::new(store_dir);
+    let store =
+        Arc::new(ShardedStore::open(dir, store_precision(quantized))?);
+    let vocab = load_store_vocab(dir, &store)?;
+    let engine = ServeEngine::start(
+        store,
+        ServeOptions { batch_max: batch, nprobe, ..ServeOptions::default() },
+    );
+    let server = NetServer::start(
+        engine,
+        Some(vocab),
+        listen,
+        NetOptions {
+            max_inflight: cfg.serve.max_inflight,
+            default_k: k,
+            ..NetOptions::default()
+        },
+    )?;
+    println!("fullw2v serving on http://{}", server.local_addr());
+    println!(
+        "routes: POST /v1/nn /v1/embed | GET /healthz /stats | \
+         POST /admin/shutdown (drain)"
+    );
+    // smoke scripts grep the port from redirected stdout: flush past
+    // the pipe's block buffering before parking in join()
+    std::io::stdout().flush()?;
+    let report = server.join();
+    println!("{}", report.summary());
     Ok(())
 }

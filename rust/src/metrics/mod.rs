@@ -193,6 +193,76 @@ impl LatencyStats {
     }
 }
 
+/// Per-route request-latency recorder for the HTTP front-end.
+///
+/// Each route keeps a total count, a bounded ring of recent latency
+/// samples (old samples are overwritten once the ring fills, so the
+/// quantiles track recent traffic), and an all-time max.  `record` is
+/// one short mutex hold per request; `to_json` is what `GET /stats`
+/// embeds next to [`crate::serve::ServeReport::to_json`].
+#[derive(Debug, Default)]
+pub struct RouteMetrics {
+    inner: std::sync::Mutex<
+        std::collections::BTreeMap<&'static str, RouteSamples>,
+    >,
+}
+
+#[derive(Debug, Default)]
+struct RouteSamples {
+    count: u64,
+    nanos: Vec<u64>,
+    max_ns: u64,
+}
+
+/// Samples kept per route; past this the ring overwrites oldest-first.
+const ROUTE_SAMPLE_CAP: usize = 4096;
+
+impl RouteMetrics {
+    pub fn new() -> Self {
+        RouteMetrics::default()
+    }
+
+    /// Record one served request on `route`.  Route names are `'static`
+    /// on purpose: the router's label set is fixed, so arbitrary request
+    /// paths can never grow the map without bound.
+    pub fn record(&self, route: &'static str, elapsed: std::time::Duration) {
+        let ns = elapsed.as_nanos().min(u64::MAX as u128) as u64;
+        let mut map = self.inner.lock().unwrap();
+        let s = map.entry(route).or_default();
+        if s.nanos.len() < ROUTE_SAMPLE_CAP {
+            s.nanos.push(ns);
+        } else {
+            s.nanos[(s.count % ROUTE_SAMPLE_CAP as u64) as usize] = ns;
+        }
+        s.count += 1;
+        s.max_ns = s.max_ns.max(ns);
+    }
+
+    /// (route, stats) snapshot, route-name ordered.  `qps` is 0 — the
+    /// recorder has no serving-window notion; the engine report carries
+    /// the authoritative throughput number.
+    pub fn snapshot(&self) -> Vec<(&'static str, LatencyStats)> {
+        let map = self.inner.lock().unwrap();
+        map.iter()
+            .map(|(route, s)| {
+                let mut stats = LatencyStats::from_nanos(&s.nanos, 0.0);
+                stats.count = s.count;
+                stats.max_us = s.max_ns as f64 / 1e3;
+                (*route, stats)
+            })
+            .collect()
+    }
+
+    pub fn to_json(&self) -> Json {
+        Json::Obj(
+            self.snapshot()
+                .into_iter()
+                .map(|(route, stats)| (route.to_string(), stats.to_json()))
+                .collect(),
+        )
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -255,6 +325,38 @@ mod tests {
         assert_eq!(s.max_us, 100.0);
         assert!((s.qps - 50.0).abs() < 1e-9);
         assert_eq!(LatencyStats::from_nanos(&[], 1.0), LatencyStats::default());
+    }
+
+    #[test]
+    fn route_metrics_record_and_bound() {
+        use std::time::Duration;
+        let m = RouteMetrics::new();
+        assert!(m.snapshot().is_empty());
+        for i in 1..=100u64 {
+            m.record("nn", Duration::from_micros(i));
+        }
+        m.record("healthz", Duration::from_micros(5));
+        let snap = m.snapshot();
+        assert_eq!(snap.len(), 2);
+        let nn = &snap
+            .iter()
+            .find(|(r, _)| *r == "nn")
+            .expect("nn route recorded")
+            .1;
+        assert_eq!(nn.count, 100);
+        assert!((nn.p50_us - 50.0).abs() <= 2.0);
+        assert_eq!(nn.max_us, 100.0);
+        // the ring is bounded: count keeps the true total
+        for _ in 0..2 * ROUTE_SAMPLE_CAP {
+            m.record("nn", Duration::from_micros(1));
+        }
+        let snap = m.snapshot();
+        let nn = &snap.iter().find(|(r, _)| *r == "nn").unwrap().1;
+        assert_eq!(nn.count, 100 + 2 * ROUTE_SAMPLE_CAP as u64);
+        assert_eq!(nn.max_us, 100.0, "all-time max survives the ring");
+        let j = m.to_json().to_string();
+        assert!(j.contains("\"nn\""));
+        assert!(j.contains("\"healthz\""));
     }
 
     #[test]

@@ -1,0 +1,333 @@
+//! Connection handling: accept loop, fixed worker pool, keep-alive, and
+//! graceful drain.
+//!
+//! Shape: one nonblocking acceptor thread feeds accepted sockets into a
+//! bounded channel drained by a **fixed pool** of connection workers
+//! (thread-per-connection cannot bound memory under heavy traffic; a
+//! full channel backpressures into the kernel accept backlog instead).
+//! Each worker runs the keep-alive loop: read with a timeout, parse as
+//! many complete requests as are buffered, `begin` them all (engine
+//! submissions enter the micro-batcher together — the wire-level batch
+//! window), then `finish` and write responses in order.
+//!
+//! Shutdown is a drain, not an abort: `POST /admin/shutdown` (or
+//! [`NetServer::trigger_shutdown`]) flips the stop flag; the acceptor
+//! stops accepting and closes the listener, workers answer what they
+//! already own with `Connection: close`, and only after every worker
+//! has exited does [`NetServer::join`] stop the engine — so every
+//! admitted request completes before the final report is taken.
+
+use super::http::{Limits, RequestParser, Response};
+use super::router::{self, AppState};
+use super::shed::InflightGauge;
+use crate::corpus::vocab::Vocab;
+use crate::metrics::RouteMetrics;
+use crate::serve::{QueryClient, ServeEngine, ServeReport};
+use anyhow::{Context, Result};
+use std::io::{Read, Write};
+use std::net::{SocketAddr, TcpListener, TcpStream};
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::mpsc::{sync_channel, Receiver, TrySendError};
+use std::sync::{Arc, Mutex};
+use std::thread::JoinHandle;
+use std::time::{Duration, Instant};
+
+/// Front-end tuning knobs.
+#[derive(Debug, Clone)]
+pub struct NetOptions {
+    /// Connection worker threads (also the max concurrently *served*
+    /// connections; more connections queue in the accept channel).
+    pub workers: usize,
+    /// Engine-bound requests admitted at once before shedding with 503
+    /// (0 = unlimited).  See [`super::shed`].
+    pub max_inflight: usize,
+    /// Per-read socket timeout — also the keep-alive idle limit.
+    pub read_timeout: Duration,
+    /// Per-write socket timeout.
+    pub write_timeout: Duration,
+    /// Parser caps (line / header / body sizes).
+    pub limits: Limits,
+    /// Max pipelined requests begun as one submit window.
+    pub max_pipeline: usize,
+    /// Neighbors returned when an nn request body omits `"k"` (the
+    /// CLI's `--k` flag in `serve --listen` mode).
+    pub default_k: usize,
+}
+
+impl Default for NetOptions {
+    fn default() -> Self {
+        NetOptions {
+            workers: 8,
+            max_inflight: crate::config::DEFAULT_MAX_INFLIGHT,
+            read_timeout: Duration::from_secs(10),
+            write_timeout: Duration::from_secs(10),
+            limits: Limits::default(),
+            max_pipeline: 32,
+            default_k: crate::serve::DEFAULT_TOP_K,
+        }
+    }
+}
+
+/// A running HTTP front-end over a [`ServeEngine`].
+///
+/// The server owns the engine: connection workers hold only cloneable
+/// handles ([`QueryClient`], [`crate::serve::EngineStats`]), and
+/// [`NetServer::join`] / [`NetServer::stop`] drain the front-end before
+/// shutting the engine down and returning its final report.
+pub struct NetServer {
+    addr: SocketAddr,
+    state: Arc<AppState>,
+    engine: ServeEngine,
+    acceptor: Option<JoinHandle<()>>,
+}
+
+impl NetServer {
+    /// Bind `listen` (e.g. `"127.0.0.1:0"` for an ephemeral port) and
+    /// start accepting.  `vocab` enables by-word queries and
+    /// word-annotated results.
+    pub fn start(
+        engine: ServeEngine,
+        vocab: Option<Vocab>,
+        listen: &str,
+        opts: NetOptions,
+    ) -> Result<NetServer> {
+        let listener = TcpListener::bind(listen)
+            .with_context(|| format!("binding {listen}"))?;
+        listener
+            .set_nonblocking(true)
+            .context("setting listener nonblocking")?;
+        let addr = listener.local_addr().context("reading bound address")?;
+        let state = Arc::new(AppState {
+            client: engine.client(),
+            stats: engine.stats(),
+            store: engine.store(),
+            vocab,
+            gauge: InflightGauge::new(opts.max_inflight),
+            routes: RouteMetrics::new(),
+            stop: AtomicBool::new(false),
+            default_k: opts.default_k.max(1),
+        });
+        let acceptor = {
+            let state = state.clone();
+            std::thread::spawn(move || accept_loop(listener, state, opts))
+        };
+        Ok(NetServer { addr, state, engine, acceptor: Some(acceptor) })
+    }
+
+    /// The bound address (resolves port 0).
+    pub fn local_addr(&self) -> SocketAddr {
+        self.addr
+    }
+
+    /// A query handle onto the underlying engine — what loopback tests
+    /// compare wire answers against.
+    pub fn client(&self) -> QueryClient {
+        self.engine.client()
+    }
+
+    /// The admission gauge (shared) — exposed so operators and tests can
+    /// observe or pre-empt capacity.
+    pub fn gauge(&self) -> Arc<InflightGauge> {
+        self.state.gauge.clone()
+    }
+
+    /// Begin a graceful drain without blocking (idempotent; same effect
+    /// as `POST /admin/shutdown`).
+    pub fn trigger_shutdown(&self) {
+        self.state.stop.store(true, Ordering::Release);
+    }
+
+    /// Block until a drain is triggered, finish every admitted request,
+    /// stop the engine, and return the final report.
+    pub fn join(mut self) -> ServeReport {
+        if let Some(h) = self.acceptor.take() {
+            let _ = h.join(); // exits only after all workers exit
+        }
+        self.engine.shutdown()
+    }
+
+    /// Trigger a drain and [`NetServer::join`] it.
+    pub fn stop(self) -> ServeReport {
+        self.trigger_shutdown();
+        self.join()
+    }
+}
+
+/// How often the acceptor re-checks the stop flag while idle.
+const ACCEPT_POLL: Duration = Duration::from_millis(5);
+
+fn accept_loop(listener: TcpListener, state: Arc<AppState>, opts: NetOptions) {
+    let workers = opts.workers.max(1);
+    let (tx, rx) = sync_channel::<TcpStream>(workers * 2);
+    // mpsc receivers are single-consumer; the pool shares one behind a
+    // mutex (each recv is one queue pop — contention is negligible next
+    // to request service time)
+    let rx = Arc::new(Mutex::new(rx));
+    let mut handles = Vec::with_capacity(workers);
+    for _ in 0..workers {
+        let rx = rx.clone();
+        let state = state.clone();
+        let opts = opts.clone();
+        handles.push(std::thread::spawn(move || worker_loop(rx, state, opts)));
+    }
+
+    while !state.stop.load(Ordering::Acquire) {
+        match listener.accept() {
+            Ok((stream, _peer)) => {
+                // some platforms hand accepted sockets the listener's
+                // nonblocking flag; the workers expect blocking reads
+                let _ = stream.set_nonblocking(false);
+                let _ = stream.set_nodelay(true);
+                let _ = stream.set_read_timeout(Some(opts.read_timeout));
+                let _ = stream.set_write_timeout(Some(opts.write_timeout));
+                let mut pending = stream;
+                // bounded handoff: when every worker is busy and the
+                // channel is full, poll rather than block so the stop
+                // flag stays responsive
+                loop {
+                    match tx.try_send(pending) {
+                        Ok(()) => break,
+                        Err(TrySendError::Full(s)) => {
+                            if state.stop.load(Ordering::Acquire) {
+                                drop(s); // drain started: refuse
+                                break;
+                            }
+                            pending = s;
+                            std::thread::sleep(ACCEPT_POLL);
+                        }
+                        Err(TrySendError::Disconnected(_)) => return,
+                    }
+                }
+            }
+            Err(e) if e.kind() == std::io::ErrorKind::WouldBlock => {
+                std::thread::sleep(ACCEPT_POLL);
+            }
+            Err(_) => std::thread::sleep(ACCEPT_POLL),
+        }
+    }
+    drop(listener); // close the socket: connects now fail fast
+    drop(tx); // workers see channel EOF after draining queued conns
+    for h in handles {
+        let _ = h.join();
+    }
+}
+
+fn worker_loop(
+    rx: Arc<Mutex<Receiver<TcpStream>>>,
+    state: Arc<AppState>,
+    opts: NetOptions,
+) {
+    loop {
+        // hold the lock only for the pop, never while serving
+        let stream = {
+            let guard = rx.lock().unwrap();
+            guard.recv()
+        };
+        match stream {
+            Ok(s) => handle_conn(s, &state, &opts),
+            Err(_) => return, // acceptor dropped the sender: drain done
+        }
+    }
+}
+
+/// One connection's keep-alive loop.  Exits on peer close, idle/read
+/// timeout, write failure, protocol error, or drain.
+fn handle_conn(mut stream: TcpStream, state: &Arc<AppState>, opts: &NetOptions) {
+    let mut parser = RequestParser::new(opts.limits.clone());
+    let mut rbuf = [0u8; 8192];
+    'conn: loop {
+        // gather a window: every request already buffered (up to the
+        // pipeline cap), reading from the socket only while nothing is
+        // parseable
+        let mut window = Vec::new();
+        let mut proto_err = None;
+        loop {
+            match parser.next_request() {
+                Ok(Some(req)) => {
+                    window.push(req);
+                    if window.len() >= opts.max_pipeline.max(1) {
+                        break;
+                    }
+                }
+                Ok(None) if window.is_empty() => {
+                    // drain check between reads: without it, a peer
+                    // trickling an incomplete request (or just idling)
+                    // would pin this worker past shutdown for as long
+                    // as it keeps the read timeout fed.  With it, drain
+                    // latency is bounded by one read_timeout.
+                    if state.stop.load(Ordering::Acquire) {
+                        break 'conn;
+                    }
+                    // a head waiting on its body behind Expect: the
+                    // interim response is what unblocks the client
+                    if parser.take_want_continue()
+                        && stream
+                            .write_all(b"HTTP/1.1 100 Continue\r\n\r\n")
+                            .is_err()
+                    {
+                        break 'conn;
+                    }
+                    match stream.read(&mut rbuf) {
+                        Ok(0) => break 'conn, // peer closed
+                        Ok(n) => parser.push(&rbuf[..n]),
+                        // timeout, reset, ... — nothing mid-flight, close
+                        Err(_) => break 'conn,
+                    }
+                }
+                Ok(None) => break, // serve what we have
+                Err(e) => {
+                    proto_err = Some(e);
+                    break;
+                }
+            }
+        }
+
+        // phase 1 for the whole window: nn submissions enter the
+        // engine queue together and micro-batch.  Each request gets its
+        // own start stamp at submit; the recorded latency still includes
+        // any wait on earlier responses, deliberately — HTTP/1.1
+        // responses are ordered, so head-of-line time is time the
+        // client really waited for this request.
+        let keep_pref: Vec<bool> =
+            window.iter().map(|r| r.keep_alive()).collect();
+        let mut starts = Vec::with_capacity(window.len());
+        let mut pendings = Vec::with_capacity(window.len());
+        for req in &window {
+            starts.push(Instant::now());
+            pendings.push(router::begin(state, req));
+        }
+        drop(window);
+        // read the stop flag *after* begin: a window containing
+        // /admin/shutdown must answer `Connection: close`, not promise
+        // keep-alive on a socket about to be dropped.  A pending
+        // protocol error closes the connection the same way — every
+        // response in this window must say so, or a pooling client
+        // trusts a keep-alive header on a socket about to die.
+        let closing =
+            state.stop.load(Ordering::Acquire) || proto_err.is_some();
+
+        // phase 2: answer in order
+        let mut close_after = closing;
+        for ((pending, keep_pref), started) in
+            pendings.into_iter().zip(keep_pref).zip(starts)
+        {
+            let (route, resp) = router::finish(state, pending);
+            state.routes.record(route, started.elapsed());
+            let keep_alive = keep_pref && !closing && !resp.close;
+            if !keep_alive {
+                close_after = true;
+            }
+            if stream.write_all(&resp.to_bytes(keep_alive)).is_err() {
+                break 'conn;
+            }
+        }
+        if let Some(e) = proto_err {
+            // the head could not be framed: answer the error and close
+            let _ = stream.write_all(&Response::from_error(&e).to_bytes(false));
+            break 'conn;
+        }
+        if close_after || state.stop.load(Ordering::Acquire) {
+            break 'conn;
+        }
+    }
+}

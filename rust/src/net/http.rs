@@ -1,0 +1,833 @@
+//! Incremental HTTP/1.1 request parsing and response framing.
+//!
+//! Hand-rolled against `std` only, the way [`crate::util::json`]
+//! hand-rolls JSON: no hyper/tiny_http exists in this offline build, and
+//! the subset of HTTP/1.1 the serving front-end needs — request line,
+//! headers, `Content-Length` bodies, keep-alive — is small enough to
+//! implement exactly and test hard.
+//!
+//! The parser is *incremental*: bytes are [`RequestParser::push`]ed as
+//! they arrive off the socket and [`RequestParser::next_request`] yields
+//! a complete [`Request`] only once its head and body are fully
+//! buffered, so requests split across arbitrary read boundaries (or
+//! several requests pipelined into one read) parse identically to a
+//! single clean read.  Every dimension is hard-capped ([`Limits`]):
+//! request line and header section (431), header count (431), declared
+//! body size (413), with anything structurally malformed rejected as
+//! 400.  A protocol error poisons the parser — framing is unrecoverable
+//! after a bad head, so the connection must answer and close.
+//!
+//! Responses are `Content-Length`-framed (never chunked), which keeps
+//! the writer a single [`Response::to_bytes`] call.
+
+use crate::util::json::{obj, Json};
+use std::io::{Read, Write};
+
+/// Default request-line cap (method + target + version).
+pub const MAX_REQUEST_LINE: usize = 8 * 1024;
+/// Default cap on the whole head section (request line + headers).
+pub const MAX_HEAD_BYTES: usize = 16 * 1024;
+/// Default cap on the number of header fields.
+pub const MAX_HEADERS: usize = 64;
+/// Default cap on a declared request body.
+pub const MAX_BODY_BYTES: usize = 1 << 20;
+
+/// Hard caps enforced while parsing; crossing one is a protocol error
+/// (431 for line/header caps, 413 for the body cap), not a truncation.
+#[derive(Debug, Clone)]
+pub struct Limits {
+    pub max_request_line: usize,
+    pub max_head_bytes: usize,
+    pub max_headers: usize,
+    pub max_body_bytes: usize,
+}
+
+impl Default for Limits {
+    fn default() -> Self {
+        Limits {
+            max_request_line: MAX_REQUEST_LINE,
+            max_head_bytes: MAX_HEAD_BYTES,
+            max_headers: MAX_HEADERS,
+            max_body_bytes: MAX_BODY_BYTES,
+        }
+    }
+}
+
+/// A protocol-level rejection: the status to answer with and a message
+/// for the JSON error body.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct HttpError {
+    pub status: u16,
+    pub msg: String,
+}
+
+impl HttpError {
+    fn new(status: u16, msg: &str) -> HttpError {
+        HttpError { status, msg: msg.to_string() }
+    }
+}
+
+/// One parsed request.  Header names are lowercased at parse time so
+/// lookups are case-insensitive the way RFC 9110 requires.
+#[derive(Debug, Clone)]
+pub struct Request {
+    pub method: String,
+    /// Request target as sent (path plus optional `?query`).
+    pub target: String,
+    /// True for HTTP/1.1 (keep-alive by default), false for HTTP/1.0.
+    pub http11: bool,
+    pub headers: Vec<(String, String)>,
+    pub body: Vec<u8>,
+}
+
+impl Request {
+    /// Target with any query string stripped.
+    pub fn path(&self) -> &str {
+        self.target.split('?').next().unwrap_or(&self.target)
+    }
+
+    /// Case-insensitive header lookup (first match).
+    pub fn header(&self, name: &str) -> Option<&str> {
+        let name = name.to_ascii_lowercase();
+        self.headers
+            .iter()
+            .find(|(n, _)| *n == name)
+            .map(|(_, v)| v.as_str())
+    }
+
+    /// Connection persistence: explicit `Connection` header wins,
+    /// otherwise the version default (1.1 persists, 1.0 closes).
+    pub fn keep_alive(&self) -> bool {
+        match self.header("connection") {
+            Some(v) if v.eq_ignore_ascii_case("close") => false,
+            Some(v) if v.eq_ignore_ascii_case("keep-alive") => true,
+            _ => self.http11,
+        }
+    }
+}
+
+/// Incremental request parser over a growing byte buffer.
+pub struct RequestParser {
+    limits: Limits,
+    buf: Vec<u8>,
+    poisoned: bool,
+    /// Bytes already scanned for the head terminator; the next scan
+    /// resumes just before here so trickled reads stay O(bytes) overall
+    /// instead of rescanning the whole head per read.
+    scanned: usize,
+    /// Head declared `Expect: 100-continue` and the body hasn't arrived:
+    /// the connection layer must take this (once) and emit the interim
+    /// response, or clients like curl withhold the body for ~a second.
+    want_continue: bool,
+    /// The current request's continue hint was already raised.
+    continue_raised: bool,
+}
+
+impl RequestParser {
+    pub fn new(limits: Limits) -> RequestParser {
+        RequestParser {
+            limits,
+            buf: Vec::new(),
+            poisoned: false,
+            scanned: 0,
+            want_continue: false,
+            continue_raised: false,
+        }
+    }
+
+    /// True exactly once per request that is waiting on its body behind
+    /// an `Expect: 100-continue`; the caller must then write the
+    /// `HTTP/1.1 100 Continue` interim response.
+    pub fn take_want_continue(&mut self) -> bool {
+        std::mem::take(&mut self.want_continue)
+    }
+
+    /// Append bytes read off the socket.
+    pub fn push(&mut self, bytes: &[u8]) {
+        self.buf.extend_from_slice(bytes);
+    }
+
+    /// Bytes buffered but not yet consumed by a returned request.
+    pub fn buffered(&self) -> usize {
+        self.buf.len()
+    }
+
+    /// Try to parse one complete request off the front of the buffer.
+    /// `Ok(None)` means more bytes are needed.  An error poisons the
+    /// parser: the connection must send the error response and close,
+    /// because request framing cannot be trusted past a malformed head.
+    pub fn next_request(&mut self) -> Result<Option<Request>, HttpError> {
+        if self.poisoned {
+            return Err(HttpError::new(400, "connection already failed"));
+        }
+        match self.try_parse() {
+            Ok(r) => Ok(r),
+            Err(e) => {
+                self.poisoned = true;
+                Err(e)
+            }
+        }
+    }
+
+    fn try_parse(&mut self) -> Result<Option<Request>, HttpError> {
+        // resume the terminator scan where the last one stopped (backed
+        // off 2 bytes so a terminator split across pushes is still seen)
+        let start = self.scanned.saturating_sub(2);
+        let found = find_blank_line(&self.buf[start..])
+            .map(|(h, c)| (start + h, start + c));
+        let (head_len, head_consumed) = match found {
+            Some(x) => x,
+            None => {
+                self.scanned = self.buf.len();
+                // caps apply to the *incomplete* head too, or a peer
+                // could stream an unbounded header section
+                if self.buf.len() > self.limits.max_head_bytes {
+                    return Err(HttpError::new(
+                        431,
+                        "header section too large",
+                    ));
+                }
+                if !self.buf.contains(&b'\n')
+                    && self.buf.len() > self.limits.max_request_line
+                {
+                    return Err(HttpError::new(431, "request line too long"));
+                }
+                return Ok(None);
+            }
+        };
+        if head_consumed > self.limits.max_head_bytes {
+            return Err(HttpError::new(431, "header section too large"));
+        }
+        let head = std::str::from_utf8(&self.buf[..head_len])
+            .map_err(|_| HttpError::new(400, "non-UTF-8 request head"))?;
+        let mut lines = head.split('\n').map(|l| l.strip_suffix('\r').unwrap_or(l));
+
+        let request_line = lines.next().unwrap_or("");
+        if request_line.len() > self.limits.max_request_line {
+            return Err(HttpError::new(431, "request line too long"));
+        }
+        let mut parts = request_line.split(' ').filter(|p| !p.is_empty());
+        let (method, target, version) =
+            match (parts.next(), parts.next(), parts.next(), parts.next()) {
+                (Some(m), Some(t), Some(v), None) => (m, t, v),
+                _ => return Err(HttpError::new(400, "malformed request line")),
+            };
+        if !method.bytes().all(|b| b.is_ascii_uppercase() || b == b'-') {
+            return Err(HttpError::new(400, "malformed method"));
+        }
+        if !(target.starts_with('/') || target == "*") {
+            return Err(HttpError::new(400, "malformed request target"));
+        }
+        let http11 = match version {
+            "HTTP/1.1" => true,
+            "HTTP/1.0" => false,
+            _ => return Err(HttpError::new(400, "unsupported HTTP version")),
+        };
+
+        let mut headers: Vec<(String, String)> = Vec::new();
+        for line in lines {
+            if headers.len() >= self.limits.max_headers {
+                return Err(HttpError::new(431, "too many header fields"));
+            }
+            let (name, value) = line
+                .split_once(':')
+                .ok_or_else(|| HttpError::new(400, "malformed header field"))?;
+            if name.is_empty()
+                || name.contains(' ')
+                || name.contains('\t')
+            {
+                return Err(HttpError::new(400, "malformed header name"));
+            }
+            headers.push((name.to_ascii_lowercase(), value.trim().to_string()));
+        }
+
+        if headers.iter().any(|(n, _)| n == "transfer-encoding") {
+            // Content-Length framing only; a body we cannot frame is a
+            // request we must not guess at
+            return Err(HttpError::new(
+                400,
+                "transfer-encoding is not supported",
+            ));
+        }
+        // conflicting Content-Length copies are a request-smuggling
+        // vector behind any intermediary that picks the other one
+        // (RFC 9112 §6.3: must reject); identical repeats collapse
+        let mut content_len = 0usize;
+        let mut seen_cl: Option<&str> = None;
+        for (n, v) in &headers {
+            if n == "content-length" {
+                if let Some(prev) = seen_cl {
+                    if prev != v.as_str() {
+                        return Err(HttpError::new(
+                            400,
+                            "conflicting content-length headers",
+                        ));
+                    }
+                } else {
+                    seen_cl = Some(v.as_str());
+                    // RFC 9110 grammar is 1*DIGIT: no sign, no empty —
+                    // from_str alone would accept "+16", which a
+                    // stricter intermediary frames differently
+                    if v.is_empty() || !v.bytes().all(|b| b.is_ascii_digit())
+                    {
+                        return Err(HttpError::new(
+                            400,
+                            "invalid content-length",
+                        ));
+                    }
+                    content_len = v.parse::<usize>().map_err(|_| {
+                        HttpError::new(400, "invalid content-length")
+                    })?;
+                }
+            }
+        }
+        if content_len > self.limits.max_body_bytes {
+            return Err(HttpError::new(413, "request body too large"));
+        }
+
+        let total = head_consumed + content_len;
+        if self.buf.len() < total {
+            // body still in flight; raise the continue hint once so the
+            // connection layer can unblock an Expect-ing client
+            if !self.continue_raised
+                && headers.iter().any(|(n, v)| {
+                    n == "expect" && v.eq_ignore_ascii_case("100-continue")
+                })
+            {
+                self.continue_raised = true;
+                self.want_continue = true;
+            }
+            return Ok(None);
+        }
+        let body = self.buf[head_consumed..total].to_vec();
+        self.buf.drain(..total);
+        self.scanned = 0; // next request scans the shifted buffer afresh
+        self.continue_raised = false;
+        self.want_continue = false;
+        Ok(Some(Request {
+            method: method.to_string(),
+            target: target.to_string(),
+            http11,
+            headers,
+            body,
+        }))
+    }
+}
+
+/// Find the blank line ending the head section.  Returns
+/// `(head_len, consumed)`: `buf[..head_len]` is the head content and
+/// `consumed` includes the terminator.  Accepts CRLF and bare-LF line
+/// endings (robustness principle; every real client sends CRLF).
+fn find_blank_line(buf: &[u8]) -> Option<(usize, usize)> {
+    let mut i = 0;
+    while i + 1 < buf.len() {
+        if buf[i] == b'\n' {
+            if buf[i + 1] == b'\n' {
+                return Some((i, i + 2));
+            }
+            if i + 2 < buf.len() && buf[i + 1] == b'\r' && buf[i + 2] == b'\n'
+            {
+                return Some((i, i + 3));
+            }
+        }
+        i += 1;
+    }
+    None
+}
+
+/// An outgoing response: status + body, framed by [`Response::to_bytes`].
+#[derive(Debug, Clone)]
+pub struct Response {
+    pub status: u16,
+    pub content_type: &'static str,
+    pub body: Vec<u8>,
+    pub extra_headers: Vec<(String, String)>,
+    /// Force `Connection: close` regardless of the request's preference
+    /// (protocol errors, drain).
+    pub close: bool,
+}
+
+impl Response {
+    pub fn json(status: u16, v: &Json) -> Response {
+        Response {
+            status,
+            content_type: "application/json",
+            body: v.to_string().into_bytes(),
+            extra_headers: Vec::new(),
+            close: false,
+        }
+    }
+
+    pub fn text(status: u16, body: &str) -> Response {
+        Response {
+            status,
+            content_type: "text/plain",
+            body: body.as_bytes().to_vec(),
+            extra_headers: Vec::new(),
+            close: false,
+        }
+    }
+
+    /// JSON error body for a parse-level rejection; always closes.
+    pub fn from_error(e: &HttpError) -> Response {
+        let mut r = Response::json(
+            e.status,
+            &obj(vec![("error", Json::Str(e.msg.clone()))]),
+        );
+        r.close = true;
+        r
+    }
+
+    pub fn with_header(mut self, name: &str, value: &str) -> Response {
+        self.extra_headers.push((name.to_string(), value.to_string()));
+        self
+    }
+
+    pub fn reason(status: u16) -> &'static str {
+        match status {
+            200 => "OK",
+            400 => "Bad Request",
+            404 => "Not Found",
+            405 => "Method Not Allowed",
+            413 => "Payload Too Large",
+            431 => "Request Header Fields Too Large",
+            500 => "Internal Server Error",
+            503 => "Service Unavailable",
+            _ => "Response",
+        }
+    }
+
+    /// Serialize with framing headers.  `keep_alive` is the request's
+    /// preference; a `close`-flagged response overrides it.
+    pub fn to_bytes(&self, keep_alive: bool) -> Vec<u8> {
+        let persist = keep_alive && !self.close;
+        let mut out = format!(
+            "HTTP/1.1 {} {}\r\nContent-Type: {}\r\nContent-Length: {}\r\n\
+             Connection: {}\r\n",
+            self.status,
+            Self::reason(self.status),
+            self.content_type,
+            self.body.len(),
+            if persist { "keep-alive" } else { "close" },
+        )
+        .into_bytes();
+        for (n, v) in &self.extra_headers {
+            out.extend_from_slice(format!("{n}: {v}\r\n").as_bytes());
+        }
+        out.extend_from_slice(b"\r\n");
+        out.extend_from_slice(&self.body);
+        out
+    }
+}
+
+/// Minimal blocking one-shot client: connect, send one request with
+/// `Connection: close`, return `(status, body)`.  This is the test /
+/// example / smoke-script counterpart of the server — not a production
+/// client (no keep-alive, no redirects).
+pub fn simple_request(
+    addr: &str,
+    method: &str,
+    path: &str,
+    body: Option<&Json>,
+) -> std::io::Result<(u16, Vec<u8>)> {
+    let mut stream = std::net::TcpStream::connect(addr)?;
+    stream.set_read_timeout(Some(std::time::Duration::from_secs(10)))?;
+    stream.set_write_timeout(Some(std::time::Duration::from_secs(10)))?;
+    let body_bytes =
+        body.map(|j| j.to_string().into_bytes()).unwrap_or_default();
+    let head = format!(
+        "{method} {path} HTTP/1.1\r\nHost: {addr}\r\n\
+         Content-Type: application/json\r\nContent-Length: {}\r\n\
+         Connection: close\r\n\r\n",
+        body_bytes.len()
+    );
+    stream.write_all(head.as_bytes())?;
+    stream.write_all(&body_bytes)?;
+    read_response(&mut stream, &mut Vec::new())
+}
+
+/// Read one close-framed or `Content-Length`-framed response off `r`.
+///
+/// `carry` is the caller's read-ahead buffer: reads are chunked, so a
+/// read can pull in bytes of the *next* pipelined response — those stay
+/// in `carry` for the next call instead of being dropped.  Pass the
+/// same (initially empty) buffer across calls on one connection; a
+/// one-shot read can pass `&mut Vec::new()`.
+pub fn read_response(
+    r: &mut impl Read,
+    carry: &mut Vec<u8>,
+) -> std::io::Result<(u16, Vec<u8>)> {
+    let bad = |msg: &str| {
+        std::io::Error::new(std::io::ErrorKind::InvalidData, msg.to_string())
+    };
+    let mut buf = std::mem::take(carry);
+    let mut tmp = [0u8; 4096];
+    let (status, consumed, content_len) = loop {
+        let (head_len, consumed) = loop {
+            if let Some(x) = find_blank_line(&buf) {
+                break x;
+            }
+            let n = r.read(&mut tmp)?;
+            if n == 0 {
+                return Err(std::io::Error::new(
+                    std::io::ErrorKind::UnexpectedEof,
+                    "eof before response head",
+                ));
+            }
+            buf.extend_from_slice(&tmp[..n]);
+        };
+        let head = std::str::from_utf8(&buf[..head_len])
+            .map_err(|_| bad("non-UTF-8 response head"))?;
+        let mut lines =
+            head.split('\n').map(|l| l.strip_suffix('\r').unwrap_or(l));
+        let status: u16 = lines
+            .next()
+            .and_then(|l| l.split(' ').nth(1))
+            .and_then(|s| s.parse().ok())
+            .ok_or_else(|| bad("malformed status line"))?;
+        // interim responses (100 Continue) have no body: skip to the
+        // final response of this exchange
+        if (100..200).contains(&status) {
+            buf.drain(..consumed);
+            continue;
+        }
+        let mut content_len: Option<usize> = None;
+        for line in lines {
+            if let Some((n, v)) = line.split_once(':') {
+                if n.eq_ignore_ascii_case("content-length") {
+                    content_len =
+                        Some(v.trim().parse().map_err(|_| {
+                            bad("malformed response content-length")
+                        })?);
+                }
+            }
+        }
+        break (status, consumed, content_len);
+    };
+    match content_len {
+        Some(cl) => {
+            while buf.len() < consumed + cl {
+                let n = r.read(&mut tmp)?;
+                if n == 0 {
+                    return Err(std::io::Error::new(
+                        std::io::ErrorKind::UnexpectedEof,
+                        "eof inside response body",
+                    ));
+                }
+                buf.extend_from_slice(&tmp[..n]);
+            }
+            // everything past this response belongs to the next one
+            *carry = buf.split_off(consumed + cl);
+            buf.drain(..consumed);
+            Ok((status, buf))
+        }
+        None => {
+            // close-framed: read to EOF
+            loop {
+                let n = r.read(&mut tmp)?;
+                if n == 0 {
+                    break;
+                }
+                buf.extend_from_slice(&tmp[..n]);
+            }
+            buf.drain(..consumed);
+            Ok((status, buf))
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn parse_all(bytes: &[u8]) -> Result<Vec<Request>, HttpError> {
+        let mut p = RequestParser::new(Limits::default());
+        p.push(bytes);
+        let mut out = Vec::new();
+        while let Some(r) = p.next_request()? {
+            out.push(r);
+        }
+        Ok(out)
+    }
+
+    #[test]
+    fn parses_simple_get() {
+        let reqs =
+            parse_all(b"GET /healthz HTTP/1.1\r\nHost: x\r\n\r\n").unwrap();
+        assert_eq!(reqs.len(), 1);
+        let r = &reqs[0];
+        assert_eq!(r.method, "GET");
+        assert_eq!(r.path(), "/healthz");
+        assert!(r.http11);
+        assert_eq!(r.header("host"), Some("x"));
+        assert_eq!(r.header("HOST"), Some("x"));
+        assert!(r.body.is_empty());
+        assert!(r.keep_alive(), "1.1 defaults to keep-alive");
+    }
+
+    #[test]
+    fn parses_post_with_body_and_query() {
+        let reqs = parse_all(
+            b"POST /v1/nn?trace=1 HTTP/1.1\r\nContent-Length: 9\r\n\r\n{\"id\":3}\n",
+        )
+        .unwrap();
+        assert_eq!(reqs.len(), 1);
+        assert_eq!(reqs[0].path(), "/v1/nn");
+        assert_eq!(reqs[0].target, "/v1/nn?trace=1");
+        assert_eq!(reqs[0].body, b"{\"id\":3}\n");
+    }
+
+    /// The incremental contract: any split of the byte stream parses
+    /// identically — feed a request one byte at a time.
+    #[test]
+    fn byte_at_a_time_feed_parses_identically() {
+        let wire =
+            b"POST /v1/nn HTTP/1.1\r\nContent-Length: 8\r\nX-A: b\r\n\r\n{\"id\":7}";
+        let mut p = RequestParser::new(Limits::default());
+        let mut got = None;
+        for (i, byte) in wire.iter().enumerate() {
+            p.push(std::slice::from_ref(byte));
+            match p.next_request().unwrap() {
+                Some(r) => {
+                    assert_eq!(i, wire.len() - 1, "complete only at the end");
+                    got = Some(r);
+                }
+                None => assert!(i < wire.len() - 1),
+            }
+        }
+        let r = got.expect("request parsed");
+        assert_eq!(r.body, b"{\"id\":7}");
+        assert_eq!(r.header("x-a"), Some("b"));
+        assert_eq!(p.buffered(), 0, "everything consumed");
+    }
+
+    #[test]
+    fn pipelined_requests_parse_in_order() {
+        let reqs = parse_all(
+            b"GET /healthz HTTP/1.1\r\n\r\nPOST /v1/nn HTTP/1.1\r\nContent-Length: 2\r\n\r\nhiGET /stats HTTP/1.1\r\n\r\n",
+        )
+        .unwrap();
+        assert_eq!(reqs.len(), 3);
+        assert_eq!(reqs[0].path(), "/healthz");
+        assert_eq!(reqs[1].body, b"hi");
+        assert_eq!(reqs[2].path(), "/stats");
+    }
+
+    #[test]
+    fn bare_lf_line_endings_accepted() {
+        let reqs = parse_all(b"GET / HTTP/1.0\nHost: y\n\n").unwrap();
+        assert_eq!(reqs.len(), 1);
+        assert!(!reqs[0].http11);
+        assert!(!reqs[0].keep_alive(), "1.0 defaults to close");
+        assert_eq!(reqs[0].header("host"), Some("y"));
+    }
+
+    #[test]
+    fn connection_header_overrides_version_default() {
+        let r = &parse_all(b"GET / HTTP/1.1\r\nConnection: close\r\n\r\n")
+            .unwrap()[0];
+        assert!(!r.keep_alive());
+        let r = &parse_all(
+            b"GET / HTTP/1.0\r\nConnection: Keep-Alive\r\n\r\n",
+        )
+        .unwrap()[0];
+        assert!(r.keep_alive());
+    }
+
+    #[test]
+    fn malformed_request_lines_are_400() {
+        for wire in [
+            &b"GARBAGE\r\n\r\n"[..],
+            b"GET /\r\n\r\n",
+            b"GET / HTTP/2.0\r\n\r\n",
+            b"GET / HTTP/1.1 extra\r\n\r\n",
+            b"get / HTTP/1.1\r\n\r\n",
+            b"GET nopath HTTP/1.1\r\n\r\n",
+            b"\r\n\r\n",
+        ] {
+            let err = parse_all(wire).unwrap_err();
+            assert_eq!(err.status, 400, "{:?}", String::from_utf8_lossy(wire));
+        }
+    }
+
+    #[test]
+    fn malformed_headers_are_400() {
+        assert_eq!(
+            parse_all(b"GET / HTTP/1.1\r\nno-colon-here\r\n\r\n")
+                .unwrap_err()
+                .status,
+            400
+        );
+        assert_eq!(
+            parse_all(b"GET / HTTP/1.1\r\nbad name: x\r\n\r\n")
+                .unwrap_err()
+                .status,
+            400
+        );
+        assert_eq!(
+            parse_all(b"GET / HTTP/1.1\r\nContent-Length: ten\r\n\r\n")
+                .unwrap_err()
+                .status,
+            400
+        );
+        // 1*DIGIT only: a signed length is a framing-desync vector
+        assert_eq!(
+            parse_all(b"POST / HTTP/1.1\r\nContent-Length: +5\r\n\r\nhello")
+                .unwrap_err()
+                .status,
+            400
+        );
+        assert_eq!(
+            parse_all(
+                b"GET / HTTP/1.1\r\nTransfer-Encoding: chunked\r\n\r\n"
+            )
+            .unwrap_err()
+            .status,
+            400
+        );
+    }
+
+    /// `Expect: 100-continue` raises the hint exactly once per request
+    /// (curl withholds >1 KB bodies until the interim response), and a
+    /// fresh request on the same connection can raise it again.
+    #[test]
+    fn expect_100_continue_signals_once_per_request() {
+        let mut p = RequestParser::new(Limits::default());
+        let head =
+            b"POST / HTTP/1.1\r\nExpect: 100-continue\r\nContent-Length: 2\r\n\r\n";
+        p.push(head);
+        assert!(p.next_request().unwrap().is_none());
+        assert!(p.take_want_continue());
+        assert!(!p.take_want_continue(), "hint is taken once");
+        assert!(p.next_request().unwrap().is_none());
+        assert!(!p.take_want_continue(), "not re-raised per poll");
+        p.push(b"hi");
+        let r = p.next_request().unwrap().expect("body arrived");
+        assert_eq!(r.body, b"hi");
+        // next request on the same connection raises its own hint
+        p.push(head);
+        assert!(p.next_request().unwrap().is_none());
+        assert!(p.take_want_continue());
+        // a request whose body arrives with the head never raises it
+        let mut p = RequestParser::new(Limits::default());
+        p.push(b"POST / HTTP/1.1\r\nExpect: 100-continue\r\nContent-Length: 2\r\n\r\nok");
+        assert!(p.next_request().unwrap().is_some());
+        assert!(!p.take_want_continue());
+    }
+
+    /// RFC 9112 §6.3: conflicting Content-Length copies must be
+    /// rejected — an intermediary picking the other value desyncs
+    /// request framing (smuggling).  Identical repeats collapse.
+    #[test]
+    fn conflicting_content_lengths_are_400() {
+        assert_eq!(
+            parse_all(
+                b"POST / HTTP/1.1\r\nContent-Length: 0\r\nContent-Length: 2\r\n\r\nhi"
+            )
+            .unwrap_err()
+            .status,
+            400
+        );
+        let reqs = parse_all(
+            b"POST / HTTP/1.1\r\nContent-Length: 2\r\nContent-Length: 2\r\n\r\nhi",
+        )
+        .unwrap();
+        assert_eq!(reqs[0].body, b"hi");
+    }
+
+    #[test]
+    fn oversized_body_is_413() {
+        let mut p = RequestParser::new(Limits {
+            max_body_bytes: 16,
+            ..Limits::default()
+        });
+        p.push(b"POST / HTTP/1.1\r\nContent-Length: 17\r\n\r\n");
+        assert_eq!(p.next_request().unwrap_err().status, 413);
+        // boundary: exactly the cap is accepted
+        let mut p = RequestParser::new(Limits {
+            max_body_bytes: 16,
+            ..Limits::default()
+        });
+        p.push(b"POST / HTTP/1.1\r\nContent-Length: 16\r\n\r\n0123456789abcdef");
+        assert!(p.next_request().unwrap().is_some());
+    }
+
+    #[test]
+    fn oversized_head_is_431_even_before_terminator() {
+        let limits = Limits { max_head_bytes: 64, ..Limits::default() };
+        let mut p = RequestParser::new(limits);
+        // stream > 64 header bytes without ever finishing the head
+        p.push(b"GET / HTTP/1.1\r\n");
+        p.push(&b"X-Filler: aaaaaaaaaaaaaaaaaaaaaaaaaaaaaaaaaaaa\r\n"[..]);
+        p.push(&b"X-More: bbbbbbbbbbbbbbbbbbbbbbbbbbbbbbbbbbbbbbbb\r\n"[..]);
+        assert_eq!(p.next_request().unwrap_err().status, 431);
+        // a poisoned parser stays failed
+        assert!(p.next_request().is_err());
+    }
+
+    #[test]
+    fn oversized_request_line_is_431() {
+        let limits = Limits { max_request_line: 32, ..Limits::default() };
+        let mut p = RequestParser::new(limits.clone());
+        let long = format!("GET /{} HTTP/1.1\r\n\r\n", "a".repeat(64));
+        p.push(long.as_bytes());
+        assert_eq!(p.next_request().unwrap_err().status, 431);
+        // and with no newline at all yet (cap on the unterminated line)
+        let mut p = RequestParser::new(limits);
+        p.push("GET /".as_bytes());
+        p.push("a".repeat(64).as_bytes());
+        assert_eq!(p.next_request().unwrap_err().status, 431);
+    }
+
+    #[test]
+    fn too_many_headers_is_431() {
+        let mut p = RequestParser::new(Limits {
+            max_headers: 4,
+            ..Limits::default()
+        });
+        let mut wire = String::from("GET / HTTP/1.1\r\n");
+        for i in 0..5 {
+            wire.push_str(&format!("X-{i}: v\r\n"));
+        }
+        wire.push_str("\r\n");
+        p.push(wire.as_bytes());
+        assert_eq!(p.next_request().unwrap_err().status, 431);
+    }
+
+    #[test]
+    fn response_framing_roundtrips() {
+        let resp = Response::json(
+            200,
+            &obj(vec![("ok", Json::Bool(true))]),
+        )
+        .with_header("Retry-After", "1");
+        let bytes = resp.to_bytes(true);
+        let text = String::from_utf8(bytes.clone()).unwrap();
+        assert!(text.starts_with("HTTP/1.1 200 OK\r\n"));
+        assert!(text.contains("Connection: keep-alive\r\n"));
+        assert!(text.contains("Retry-After: 1\r\n"));
+        assert!(text.contains("Content-Length: 11\r\n"));
+        assert!(text.ends_with("{\"ok\":true}"));
+        // the client-side reader accepts the server's own framing, and
+        // bytes past one response stay in the carry for the next call
+        let mut wire = bytes.clone();
+        wire.extend_from_slice(&resp.to_bytes(false));
+        let mut carry = Vec::new();
+        let mut r = &wire[..];
+        let (status, body) = read_response(&mut r, &mut carry).unwrap();
+        assert_eq!(status, 200);
+        assert_eq!(body, b"{\"ok\":true}");
+        let (status2, body2) = read_response(&mut r, &mut carry).unwrap();
+        assert_eq!(status2, 200);
+        assert_eq!(body2, b"{\"ok\":true}");
+        assert!(carry.is_empty());
+        // close override: an error response never persists
+        let err = Response::from_error(&HttpError::new(431, "too big"));
+        let text =
+            String::from_utf8(err.to_bytes(true)).unwrap();
+        assert!(text.starts_with(
+            "HTTP/1.1 431 Request Header Fields Too Large\r\n"
+        ));
+        assert!(text.contains("Connection: close\r\n"));
+    }
+}

@@ -1,0 +1,53 @@
+//! HTTP serving front-end over the micro-batching engine.
+//!
+//! PR 1–3 built the serving stack — sharded store, hot-word cache,
+//! IVF-probed batched tile scans — but drove it offline from a queries
+//! file.  This module is the network front of that stack: a
+//! **dependency-free HTTP/1.1 server** on `std::net`, hand-rolled the
+//! way [`crate::util::json`] hand-rolls JSON, because this build has no
+//! registry access and the needed protocol subset (request line,
+//! headers, `Content-Length` bodies, keep-alive) is small enough to
+//! implement exactly and fuzz with byte-split tests.  No TLS, no HTTP/2,
+//! no chunked encoding — a reverse proxy terminates those in any real
+//! deployment; what must live *here* is the part a proxy cannot do:
+//! feeding the engine whole micro-batches and shedding load before the
+//! engine queue convoys.
+//!
+//! Layout:
+//!
+//! * [`http`] — incremental request parser (hard caps → 400/413/431)
+//!   and `Content-Length`-framed responses.
+//! * [`conn`] — nonblocking acceptor + fixed worker pool, keep-alive
+//!   with read/write timeouts, graceful drain ([`NetServer`]).
+//! * [`router`] — `POST /v1/nn`, `POST /v1/embed`, `GET /healthz`,
+//!   `GET /stats`, `POST /admin/shutdown`.
+//! * [`shed`] — bounded in-flight gauge; saturation answers 503 +
+//!   `Retry-After` and lands in [`crate::serve::ServeReport::shed`].
+//!
+//! The transport-level reuse lesson (Ji et al., arXiv:1604.04661, and
+//! the FULL-W2V batching thesis) is wired in at two points: requests
+//! pipelined on one connection are *all submitted* to the engine before
+//! any response is awaited, and concurrent connections submit through
+//! the same bounded queue — so the dispatcher's micro-batches stay full
+//! under network traffic and every shard row loaded is reused across
+//! the whole wire-side batch.
+//!
+//! ```ignore
+//! let engine = ServeEngine::start(store, ServeOptions::default());
+//! let server = NetServer::start(engine, Some(vocab), "127.0.0.1:0",
+//!                               NetOptions::default())?;
+//! println!("listening on http://{}", server.local_addr());
+//! let report = server.join(); // returns after POST /admin/shutdown
+//! ```
+
+pub mod conn;
+pub mod http;
+pub mod router;
+pub mod shed;
+
+pub use conn::{NetOptions, NetServer};
+pub use http::{
+    read_response, simple_request, HttpError, Limits, Request, RequestParser,
+    Response,
+};
+pub use shed::{InflightGauge, Permit};

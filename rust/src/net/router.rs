@@ -1,0 +1,349 @@
+//! Route table over the serving engine.
+//!
+//! | route                  | does                                        |
+//! |------------------------|---------------------------------------------|
+//! | `POST /v1/nn`          | top-k neighbors by `id`, `word`, or `vector`|
+//! | `POST /v1/embed`       | raw stored row by `id` or `word`            |
+//! | `GET  /healthz`        | liveness (503 once draining)                |
+//! | `GET  /stats`          | engine report + net-layer gauges            |
+//! | `POST /admin/shutdown` | trigger graceful drain                      |
+//!
+//! Dispatch is **two-phase** so the wire layer can feed the engine's
+//! micro-batcher: [`begin`] parses, admits, and *submits* an nn query
+//! (returning the reply receiver), and [`finish`] awaits it and builds
+//! the response.  A connection that pipelines several requests begins
+//! them all before finishing any — the whole window lands in the
+//! engine's queue together and is drained as one micro-batch, which is
+//! the transport-level analogue of the paper's batching lesson (per-item
+//! dispatch wastes batched kernels).
+//!
+//! Only `/v1/nn` passes admission control ([`super::shed`]): it is the
+//! route that blocks on the engine's bounded queue.  Health and stats
+//! stay answerable during overload on purpose.
+
+use super::http::{Request, Response};
+use super::shed::{InflightGauge, Permit};
+use crate::corpus::vocab::Vocab;
+use crate::metrics::RouteMetrics;
+use crate::serve::{
+    EngineStats, QueryClient, QueryResponse, Neighbor, ShardedStore,
+};
+use crate::util::json::{obj, Json};
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::mpsc::Receiver;
+use std::sync::Arc;
+
+/// Everything a connection worker needs, shared across the pool.
+pub(crate) struct AppState {
+    pub client: QueryClient,
+    pub stats: EngineStats,
+    pub store: Arc<ShardedStore>,
+    /// Store vocabulary for by-word queries and word-annotated results;
+    /// `None` serves ids only.
+    pub vocab: Option<Vocab>,
+    pub gauge: Arc<InflightGauge>,
+    pub routes: RouteMetrics,
+    /// Set by `/admin/shutdown` (or [`super::NetServer::trigger_shutdown`]);
+    /// the acceptor and the keep-alive loops watch it.
+    pub stop: AtomicBool,
+    /// `k` used when an nn body omits it (`serve --listen --k K`).
+    pub default_k: usize,
+}
+
+/// A begun request: already answerable, deferred local work, or an nn
+/// query in flight inside the engine (permit held until the response is
+/// built).
+pub(crate) enum Pending {
+    Ready(&'static str, Response),
+    /// Local work postponed to [`finish`] so it cannot delay later nn
+    /// submissions in the same pipelined window (embed can page a cold
+    /// shard in from disk — that I/O must not starve the micro-batcher).
+    Deferred(
+        &'static str,
+        Box<dyn FnOnce(&AppState) -> Response + Send>,
+    ),
+    Nn { rx: Receiver<QueryResponse>, _permit: Permit },
+}
+
+/// Phase 1: parse, admit, and submit.  Engine-bound work is *in the
+/// micro-batcher's queue* when this returns.
+pub(crate) fn begin(state: &AppState, req: &Request) -> Pending {
+    match (req.method.as_str(), req.path()) {
+        ("GET", "/healthz") => Pending::Ready("healthz", healthz(state)),
+        ("GET", "/stats") => Pending::Ready("stats", stats(state)),
+        ("POST", "/v1/nn") => nn_begin(state, req),
+        ("POST", "/v1/embed") => match parse_body(req) {
+            Err(resp) => Pending::Ready("embed", resp),
+            Ok(body) => Pending::Deferred(
+                "embed",
+                Box::new(move |state| embed(state, &body)),
+            ),
+        },
+        ("POST", "/admin/shutdown") => {
+            state.stop.store(true, Ordering::Release);
+            Pending::Ready(
+                "shutdown",
+                Response::json(
+                    200,
+                    &obj(vec![("status", Json::Str("draining".into()))]),
+                ),
+            )
+        }
+        (
+            _,
+            "/healthz" | "/stats" | "/v1/nn" | "/v1/embed"
+            | "/admin/shutdown",
+        ) => Pending::Ready(
+            "other",
+            error(405, &format!("method {} not allowed here", req.method)),
+        ),
+        (_, path) => {
+            Pending::Ready("other", error(404, &format!("no route {path}")))
+        }
+    }
+}
+
+/// Phase 2: await the engine (for nn) and build the response.
+pub(crate) fn finish(state: &AppState, pending: Pending) -> (&'static str, Response) {
+    match pending {
+        Pending::Ready(route, resp) => (route, resp),
+        Pending::Deferred(route, work) => (route, work(state)),
+        Pending::Nn { rx, _permit } => {
+            let resp = match rx.recv() {
+                Ok(Ok(neighbors)) => neighbors_response(state, &neighbors),
+                // the engine rejected the query (bad id/vector) — the
+                // client's fault, not the server's
+                Ok(Err(msg)) => error(400, &msg),
+                Err(_) => error(500, "serving engine stopped"),
+            };
+            ("nn", resp)
+        }
+    }
+}
+
+fn error(status: u16, msg: &str) -> Response {
+    Response::json(
+        status,
+        &obj(vec![("error", Json::Str(msg.to_string()))]),
+    )
+}
+
+fn parse_body(req: &Request) -> Result<Json, Response> {
+    if req.body.is_empty() {
+        return Err(error(400, "missing JSON request body"));
+    }
+    let text = std::str::from_utf8(&req.body)
+        .map_err(|_| error(400, "request body is not UTF-8"))?;
+    Json::parse(text).map_err(|e| error(400, &format!("bad JSON body: {e}")))
+}
+
+/// Resolve a `{"id": N}` / `{"word": "w"}` body to a row id.
+fn resolve_id(state: &AppState, body: &Json) -> Result<u32, Response> {
+    match (body.get("id"), body.get("word")) {
+        (Some(_), Some(_)) => {
+            Err(error(400, "give exactly one of \"id\" and \"word\""))
+        }
+        (Some(id), None) => {
+            let n = id
+                .as_f64()
+                .filter(|n| n.fract() == 0.0 && *n >= 0.0)
+                .ok_or_else(|| {
+                    error(400, "\"id\" must be a non-negative integer")
+                })?;
+            if n >= u32::MAX as f64 {
+                return Err(error(400, "\"id\" out of range"));
+            }
+            Ok(n as u32)
+        }
+        (None, Some(word)) => {
+            let word = word
+                .as_str()
+                .ok_or_else(|| error(400, "\"word\" must be a string"))?;
+            let vocab = state.vocab.as_ref().ok_or_else(|| {
+                error(400, "store has no vocabulary; query by \"id\"")
+            })?;
+            vocab.id(word).ok_or_else(|| {
+                error(404, &format!("word '{word}' not in store vocabulary"))
+            })
+        }
+        (None, None) => Err(error(400, "body needs \"id\" or \"word\"")),
+    }
+}
+
+fn nn_begin(state: &AppState, req: &Request) -> Pending {
+    let fail = |resp: Response| Pending::Ready("nn", resp);
+    let body = match parse_body(req) {
+        Ok(b) => b,
+        Err(resp) => return fail(resp),
+    };
+    let k = match body.get("k") {
+        None => state.default_k,
+        Some(v) => match v.as_f64().filter(|n| n.fract() == 0.0 && *n >= 1.0)
+        {
+            Some(n) => n as usize,
+            None => {
+                return fail(error(400, "\"k\" must be a positive integer"))
+            }
+        },
+    };
+    // resolve the query source *before* admission so malformed requests
+    // never consume a slot
+    enum Source {
+        Id(u32),
+        Vector(Vec<f32>),
+    }
+    let source = if let Some(vec) = body.get("vector") {
+        if body.get("id").is_some() || body.get("word").is_some() {
+            return fail(error(
+                400,
+                "give exactly one of \"id\", \"word\", and \"vector\"",
+            ));
+        }
+        let arr = match vec.as_arr() {
+            Some(a) => a,
+            None => {
+                return fail(error(400, "\"vector\" must be a number array"))
+            }
+        };
+        let mut v = Vec::with_capacity(arr.len());
+        for x in arr {
+            match x.as_f64() {
+                Some(n) => v.push(n as f32),
+                None => {
+                    return fail(error(
+                        400,
+                        "\"vector\" must be a number array",
+                    ))
+                }
+            }
+        }
+        Source::Vector(v)
+    } else {
+        match resolve_id(state, &body) {
+            Ok(id) => Source::Id(id),
+            Err(resp) => return fail(resp),
+        }
+    };
+
+    // admission control: refuse instead of convoying on the bounded
+    // engine queue.  The permit rides inside Pending::Nn so the slot
+    // frees exactly when the response has been built.
+    let permit = match state.gauge.try_acquire() {
+        Some(p) => p,
+        None => {
+            // invariant: this is the ONE place a gauge refusal happens,
+            // and it pairs the gauge's own shed count with the engine
+            // report's (`/stats` exposes both, `net_integration`
+            // asserts they agree) — keep them paired if admission ever
+            // grows a second call site
+            state.stats.note_shed();
+            return fail(
+                error(503, "engine saturated, retry later")
+                    .with_header("Retry-After", "1"),
+            );
+        }
+    };
+    let rx = match source {
+        Source::Id(id) => state.client.submit_id(id, k),
+        Source::Vector(v) => state.client.submit_vector(v, k),
+    };
+    Pending::Nn { rx, _permit: permit }
+}
+
+fn neighbors_response(state: &AppState, neighbors: &[Neighbor]) -> Response {
+    let arr = neighbors
+        .iter()
+        .map(|n| {
+            let mut fields = vec![("id", Json::Num(n.id as f64))];
+            if let Some(vocab) = &state.vocab {
+                fields.push(("word", Json::Str(vocab.word(n.id).to_string())));
+            }
+            fields.push(("score", Json::Num(n.score as f64)));
+            obj(fields)
+        })
+        .collect();
+    Response::json(200, &obj(vec![("neighbors", Json::Arr(arr))]))
+}
+
+fn embed(state: &AppState, body: &Json) -> Response {
+    let id = match resolve_id(state, body) {
+        Ok(id) => id,
+        Err(resp) => return resp,
+    };
+    if id as usize >= state.store.vocab_size() {
+        return error(
+            404,
+            &format!(
+                "row id {id} out of range (vocab {})",
+                state.store.vocab_size()
+            ),
+        );
+    }
+    let mut row = vec![0.0f32; state.store.dim()];
+    match state.store.fetch_row(id, &mut row) {
+        Ok(Some(())) => {}
+        Ok(None) => return error(404, &format!("row id {id} out of range")),
+        Err(e) => return error(500, &format!("{e:#}")),
+    }
+    let mut fields = vec![("id", Json::Num(id as f64))];
+    if let Some(vocab) = &state.vocab {
+        fields.push(("word", Json::Str(vocab.word(id).to_string())));
+    }
+    fields.push(("dim", Json::Num(row.len() as f64)));
+    fields.push((
+        "vector",
+        Json::Arr(row.iter().map(|x| Json::Num(*x as f64)).collect()),
+    ));
+    Response::json(200, &obj(fields))
+}
+
+fn healthz(state: &AppState) -> Response {
+    if state.stop.load(Ordering::Acquire) {
+        return Response::json(
+            503,
+            &obj(vec![("status", Json::Str("draining".into()))]),
+        );
+    }
+    Response::json(
+        200,
+        &obj(vec![
+            ("status", Json::Str("ok".into())),
+            ("vocab", Json::Num(state.store.vocab_size() as f64)),
+            ("dim", Json::Num(state.store.dim() as f64)),
+            ("shards", Json::Num(state.store.num_shards() as f64)),
+            (
+                "precision",
+                Json::Str(state.store.precision().name().to_string()),
+            ),
+        ]),
+    )
+}
+
+fn stats(state: &AppState) -> Response {
+    let report = state.stats.report();
+    Response::json(
+        200,
+        &obj(vec![
+            ("serve", report.to_json()),
+            (
+                "net",
+                obj(vec![
+                    (
+                        "inflight",
+                        Json::Num(state.gauge.inflight() as f64),
+                    ),
+                    (
+                        "max_inflight",
+                        Json::Num(state.gauge.capacity() as f64),
+                    ),
+                    ("shed", Json::Num(state.gauge.shed_total() as f64)),
+                    (
+                        "admitted",
+                        Json::Num(state.gauge.admitted_total() as f64),
+                    ),
+                    ("routes", state.routes.to_json()),
+                ]),
+            ),
+        ]),
+    )
+}

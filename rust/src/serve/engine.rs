@@ -127,6 +127,9 @@ struct EngineShared {
     probed_batches: AtomicU64,
     /// Total clusters in those batches' probe unions.
     clusters_probed: AtomicU64,
+    /// Requests refused by admission control before reaching the queue
+    /// (the network front-end's 503 path; see [`crate::net::shed`]).
+    shed: AtomicU64,
     /// Serving window, as nanos since engine start: set at the first
     /// batch's start and advanced past each batch's end, so reported QPS
     /// covers time actually spent serving, not engine lifetime.
@@ -146,6 +149,7 @@ impl Default for EngineShared {
             rows_scanned: AtomicU64::new(0),
             probed_batches: AtomicU64::new(0),
             clusters_probed: AtomicU64::new(0),
+            shed: AtomicU64::new(0),
             window_first_ns: AtomicU64::new(u64::MAX),
             window_last_ns: AtomicU64::new(0),
         }
@@ -192,6 +196,12 @@ pub struct ServeReport {
     /// exhaustive scan, e.g. in `bench_serve`).
     pub probed_batches: u64,
     pub clusters_probed: u64,
+    /// Requests shed by admission control (answered 503 at the network
+    /// front-end instead of joining a saturated queue).  Shed requests
+    /// never reach the dispatcher, so they are *not* part of `queries`:
+    /// overload shows up here instead of as queue-depth latency on
+    /// every admitted request.
+    pub shed: u64,
 }
 
 impl ServeReport {
@@ -259,6 +269,7 @@ impl ServeReport {
                 "mean_clusters_probed",
                 Json::Num(self.mean_clusters_probed()),
             ),
+            ("shed", Json::Num(self.shed as f64)),
         ])
     }
 
@@ -273,10 +284,15 @@ impl ServeReport {
         } else {
             String::new()
         };
+        let shed = if self.shed > 0 {
+            format!(" | shed {}", self.shed)
+        } else {
+            String::new()
+        };
         format!(
             "{} queries in {} batches (fill {:.1}) | p50 {:.0}us p99 {:.0}us \
-             {:.0} qps | cache hit {:.0}% | {:.0} rows/query{} | {}/{} shards \
-             loaded ({})",
+             {:.0} qps | cache hit {:.0}% | {:.0} rows/query{}{} | {}/{} \
+             shards loaded ({})",
             self.queries,
             self.batches,
             self.batch_fill(),
@@ -286,6 +302,7 @@ impl ServeReport {
             100.0 * self.cache_hit_rate(),
             self.rows_loaded_per_query(),
             probe,
+            shed,
             self.loaded_shards,
             self.shards,
             self.precision,
@@ -395,8 +412,84 @@ impl ServeEngine {
         QueryClient { tx: self.tx.clone().expect("engine running") }
     }
 
+    /// Cheap cloneable metrics/accounting handle: lets front-end threads
+    /// snapshot reports and record sheds without sharing `&ServeEngine`
+    /// itself across threads (the engine stays owned by whoever will
+    /// eventually [`ServeEngine::shutdown`] it).
+    pub fn stats(&self) -> EngineStats {
+        EngineStats {
+            shared: self.shared.clone(),
+            store: self.store.clone(),
+            workers: self.workers,
+            nprobe: self.nprobe,
+        }
+    }
+
+    /// The store this engine serves (shared handle).
+    pub fn store(&self) -> Arc<ShardedStore> {
+        self.store.clone()
+    }
+
     /// Snapshot of the metrics so far.  QPS is computed over the serving
     /// window (first batch start to last batch end), not engine lifetime.
+    pub fn report(&self) -> ServeReport {
+        self.stats().report()
+    }
+
+    /// Stop the engine and return the final report.  In-flight batches
+    /// finish; [`QueryClient`]s still alive afterwards get
+    /// "serving engine stopped" errors on later queries.
+    pub fn shutdown(mut self) -> ServeReport {
+        self.stop();
+        self.report()
+    }
+
+    fn stop(&mut self) {
+        if let Some(tx) = self.tx.take() {
+            // sentinel wakes the dispatcher even while cloned clients
+            // still hold senders; send only fails if it already exited
+            let _ = tx.send(Msg::Shutdown);
+        }
+        if let Some(h) = self.dispatcher.take() {
+            let _ = h.join();
+        }
+    }
+}
+
+impl Drop for ServeEngine {
+    fn drop(&mut self) {
+        self.stop();
+    }
+}
+
+/// Metrics/accounting handle onto a running (or stopped) engine.
+///
+/// Clones share the same counters, so a handle held by an HTTP worker
+/// thread sees exactly what [`ServeEngine::report`] sees.  Outliving the
+/// engine is safe: the handle only reads counters and the store, both of
+/// which are reference-counted.
+#[derive(Clone)]
+pub struct EngineStats {
+    shared: Arc<EngineShared>,
+    store: Arc<ShardedStore>,
+    workers: usize,
+    nprobe: usize,
+}
+
+impl EngineStats {
+    /// Count one request refused by admission control (reported as
+    /// [`ServeReport::shed`]).  The request never reached the queue, so
+    /// nothing else in the report moves.
+    pub fn note_shed(&self) {
+        self.shared.shed.fetch_add(1, Ordering::Relaxed);
+    }
+
+    /// The store behind the engine (shared handle).
+    pub fn store(&self) -> Arc<ShardedStore> {
+        self.store.clone()
+    }
+
+    /// Snapshot of the metrics so far — see [`ServeEngine::report`].
     pub fn report(&self) -> ServeReport {
         // bounded snapshot: the reservoir holds up to 2^20 samples and
         // the dispatcher takes this lock on every batch, so report()
@@ -447,32 +540,8 @@ impl ServeEngine {
                 .shared
                 .clusters_probed
                 .load(Ordering::Relaxed),
+            shed: self.shared.shed.load(Ordering::Relaxed),
         }
-    }
-
-    /// Stop the engine and return the final report.  In-flight batches
-    /// finish; [`QueryClient`]s still alive afterwards get
-    /// "serving engine stopped" errors on later queries.
-    pub fn shutdown(mut self) -> ServeReport {
-        self.stop();
-        self.report()
-    }
-
-    fn stop(&mut self) {
-        if let Some(tx) = self.tx.take() {
-            // sentinel wakes the dispatcher even while cloned clients
-            // still hold senders; send only fails if it already exited
-            let _ = tx.send(Msg::Shutdown);
-        }
-        if let Some(h) = self.dispatcher.take() {
-            let _ = h.join();
-        }
-    }
-}
-
-impl Drop for ServeEngine {
-    fn drop(&mut self) {
-        self.stop();
     }
 }
 
@@ -1023,6 +1092,37 @@ mod tests {
         assert_eq!(report.probed_batches, 0);
         // full exhaustive scan: one query, all 20 rows
         assert_eq!(report.rows_scanned, 20);
+    }
+
+    /// Shed accounting: `note_shed` on a stats handle shows up in every
+    /// report (engine- and handle-side) without touching `queries`, and
+    /// the handle keeps working after the engine stops.
+    #[test]
+    fn shed_counts_flow_into_reports() {
+        let (_, dir) = setup("shed", 10, 4);
+        let store =
+            Arc::new(ShardedStore::open(&dir, Precision::Exact).unwrap());
+        let engine = ServeEngine::start(store, opts());
+        let stats = engine.stats();
+        assert_eq!(engine.report().shed, 0);
+        let client = engine.client();
+        client.query_id(1, 2).unwrap();
+        stats.note_shed();
+        stats.note_shed();
+        let rep = engine.report();
+        assert_eq!(rep.shed, 2);
+        assert_eq!(rep.queries, 1, "sheds are not queries");
+        assert!(rep.summary().contains("shed 2"));
+        assert_eq!(
+            rep.to_json().get("shed").and_then(|j| j.as_f64()),
+            Some(2.0)
+        );
+        drop(client);
+        let final_rep = engine.shutdown();
+        assert_eq!(final_rep.shed, 2);
+        // the handle outlives the engine and still reads the counters
+        stats.note_shed();
+        assert_eq!(stats.report().shed, 3);
     }
 
     #[test]

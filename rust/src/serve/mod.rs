@@ -67,13 +67,18 @@ pub use ann::{
 };
 pub use cache::{CacheStats, HotCache};
 pub use engine::{
-    QueryClient, QueryResponse, ServeEngine, ServeOptions, ServeReport,
+    EngineStats, QueryClient, QueryResponse, ServeEngine, ServeOptions,
+    ServeReport,
 };
 pub use ivf::{ClusterRange, IvfMeta, ProbePlan};
 pub use store::{
     export_store, export_store_clustered, Precision, RowBlock, Shard,
     ShardedStore, StoreManifest,
 };
+
+/// Default top-k for neighbor queries — the single source behind the
+/// CLI's `--k` default and the HTTP layer's `"k"`-less request bodies.
+pub const DEFAULT_TOP_K: usize = 10;
 
 /// Head-skewed query-id stream for benches and examples.  Vocabulary ids
 /// are frequency ranks in this codebase, so cubing a uniform draw

@@ -9,6 +9,14 @@
 //!   owns every sentence in order, so the one-thread path draws the
 //!   exact sample sequence the pre-Hogwild `epoch_loop` drew and is
 //!   bit-reproducible across runs.
+//! * **Token-balanced shards.**  An epoch ends when its slowest worker
+//!   does, and sentence *counts* are a bad proxy for work — a contiguous
+//!   run of long sentences used to pile onto one shard and stretch the
+//!   epoch's tail.  [`balanced_shards`] assigns sentences to workers by
+//!   greedy token-count balancing (LPT: longest sentence first, each to
+//!   the currently lightest shard — heaviest shard ≤ 4/3 · optimal),
+//!   then restores corpus order within each shard, which keeps the
+//!   single-shard (`threads = 1`) walk identical to the serial order.
 //! * **Per-chunk accounting.**  The serial loop advanced the lr and
 //!   counted `batches` once per *sentence* even when a sentence spanned
 //!   several chunks — every chunk of a long sentence trained at a stale
@@ -42,6 +50,41 @@ struct Partial {
     reuse: ReuseCounters,
 }
 
+/// Assign sentence indices to `shards` worker shards, balancing total
+/// *token* count rather than sentence count.
+///
+/// Greedy LPT: visit sentences longest-first, place each on the shard
+/// with the smallest running token load (ties to the lowest shard id,
+/// and equal lengths keep ascending index order — the assignment is a
+/// pure function of the length vector).  Each shard's index list is then
+/// sorted back to corpus order, so with one shard the result is exactly
+/// `0..n` and the `threads = 1` path stays bit-reproducible.  Shards may
+/// come back empty when there are fewer sentences than shards; callers
+/// skip those.
+pub(crate) fn balanced_shards(
+    lengths: &[usize],
+    shards: usize,
+) -> Vec<Vec<usize>> {
+    let shards = shards.max(1);
+    let mut order: Vec<usize> = (0..lengths.len()).collect();
+    order.sort_by(|&a, &b| {
+        lengths[b].cmp(&lengths[a]).then_with(|| a.cmp(&b))
+    });
+    let mut load = vec![0u64; shards];
+    let mut out = vec![Vec::new(); shards];
+    for idx in order {
+        let lightest = (0..shards)
+            .min_by_key(|&s| (load[s], s))
+            .expect("at least one shard");
+        load[lightest] += lengths[idx] as u64;
+        out[lightest].push(idx);
+    }
+    for shard in &mut out {
+        shard.sort_unstable();
+    }
+    out
+}
+
 /// Run one epoch of any [`ShardTrainer`] kernel over the sentences,
 /// Hogwild-parallel across `base.cfg.resolved_threads()` workers.
 /// `make_kernel(tid)` builds each worker's kernel (scratch) in-thread.
@@ -62,7 +105,10 @@ where
     let start_words = base.schedule.processed();
     let counter = AtomicU64::new(start_words);
 
-    let shard_size = sentences.len().div_ceil(threads).max(1);
+    // token-balanced shard assignment (not contiguous equal sentence
+    // counts): the epoch's wall clock is its heaviest shard's
+    let lengths: Vec<usize> = sentences.iter().map(|s| s.len()).collect();
+    let shard_indices = balanced_shards(&lengths, threads);
     let mut partials: Vec<Partial> = Vec::with_capacity(threads);
     let mut workers_used = 0usize;
     {
@@ -74,9 +120,10 @@ where
         let cfg = &base.cfg;
         let schedule = &base.schedule;
         std::thread::scope(|s| {
-            let handles: Vec<_> = sentences
-                .chunks(shard_size)
+            let handles: Vec<_> = shard_indices
+                .iter()
                 .enumerate()
+                .filter(|(_, shard)| !shard.is_empty())
                 .map(|(tid, shard)| {
                     let shared = &shared;
                     let counter = &counter;
@@ -91,9 +138,9 @@ where
                         let mut rng = worker_rng(seed, epoch, tid);
                         let mut p = Partial::default();
                         let mut kept: Vec<u32> = Vec::new();
-                        for sent in shard {
+                        for &si in shard {
                             kept.clear();
-                            kept.extend_from_slice(sent);
+                            kept.extend_from_slice(&sentences[si]);
                             subsampler.filter(&mut kept, &mut rng);
                             if kept.len() < 2 {
                                 continue;
@@ -260,6 +307,99 @@ mod tests {
         });
         assert!(rep.threads <= 9, "at most one worker per sentence shard");
         assert_eq!(rep.words, 72);
+    }
+
+    /// The ROADMAP skew satellite pinned down: one pathologically long
+    /// sentence plus many short ones must not land half the tokens on
+    /// one worker the way contiguous equal-sentence-count splits did.
+    #[test]
+    fn balanced_shards_balance_token_counts() {
+        let mut lengths = vec![100usize];
+        lengths.extend(std::iter::repeat(1).take(100));
+        let shards = balanced_shards(&lengths, 2);
+        let load = |s: &Vec<usize>| -> u64 {
+            s.iter().map(|&i| lengths[i] as u64).sum()
+        };
+        let (l0, l1) = (load(&shards[0]), load(&shards[1]));
+        assert_eq!(l0 + l1, 200, "every token assigned exactly once");
+        // LPT on this shape is a perfect 100/100 split; the old
+        // contiguous split put 100 + 50 = 150 tokens on shard 0
+        assert_eq!(l0.max(l1), 100, "got {l0}/{l1}");
+        // each sentence appears exactly once, in corpus order per shard
+        let mut all: Vec<usize> = shards.iter().flatten().copied().collect();
+        all.sort_unstable();
+        assert_eq!(all, (0..101).collect::<Vec<_>>());
+        for s in &shards {
+            assert!(s.windows(2).all(|w| w[0] < w[1]), "corpus order");
+        }
+        // pure function of the lengths: identical across calls
+        assert_eq!(shards, balanced_shards(&lengths, 2));
+    }
+
+    #[test]
+    fn balanced_shards_single_shard_is_identity() {
+        // threads = 1 must walk the corpus in original order — this is
+        // what keeps the single-thread path bit-reproducible
+        assert_eq!(
+            balanced_shards(&[3, 1, 4, 1, 5], 1),
+            vec![vec![0, 1, 2, 3, 4]]
+        );
+        // more shards than sentences: singleton shards, the rest empty
+        let shards = balanced_shards(&[2, 2], 4);
+        assert_eq!(shards.iter().filter(|s| !s.is_empty()).count(), 2);
+        assert!(balanced_shards(&[], 3).iter().all(|s| s.is_empty()));
+    }
+
+    /// A probe kernel that attributes chunks to the worker that trained
+    /// them, so the driver-level token balance is directly observable.
+    struct TidProbeKernel<'a> {
+        tid: usize,
+        seen: &'a Mutex<Vec<(usize, usize)>>,
+    }
+
+    impl ShardTrainer for TidProbeKernel<'_> {
+        fn train_chunk(
+            &mut self,
+            _ctx: &ShardCtx<'_>,
+            chunk: &[u32],
+            _lr: f32,
+            _rng: &mut Pcg32,
+        ) -> f64 {
+            self.seen.lock().unwrap().push((self.tid, chunk.len()));
+            0.0
+        }
+    }
+
+    /// End-to-end skew regression: 4 long sentences at the front of the
+    /// corpus followed by 32 short ones.  The old contiguous split gave
+    /// worker 0 all four long sentences (156 of 192 tokens); balanced
+    /// shards must keep both workers within a few tokens of half.
+    #[test]
+    fn hogwild_shards_are_token_balanced_not_sentence_balanced() {
+        let (mut base, _vocab) = probe_base(64, 1000);
+        base.cfg.threads = 2;
+        let mut sentences: Vec<Vec<u32>> =
+            (0..4).map(|_| (0..32u32).map(|i| i % 16).collect()).collect();
+        sentences
+            .extend((0..32).map(|_| vec![0u32, 1]));
+        let seen = Mutex::new(Vec::new());
+        let rep = run_epoch(&mut base, &sentences, 0, |tid| TidProbeKernel {
+            tid,
+            seen: &seen,
+        });
+        assert_eq!(rep.threads, 2);
+        assert_eq!(rep.words, 4 * 32 + 32 * 2);
+        let mut per_tid = [0u64; 2];
+        for &(tid, words) in seen.lock().unwrap().iter() {
+            per_tid[tid] += words as u64;
+        }
+        let (a, b) = (per_tid[0], per_tid[1]);
+        assert_eq!(a + b, 192);
+        assert!(
+            a.abs_diff(b) <= 8,
+            "token skew {a}/{b}: shards must balance tokens \
+             (contiguous splits gave 156/36)"
+        );
     }
 
     #[test]

@@ -1,0 +1,541 @@
+//! End-to-end tests for the HTTP serving front-end: real sockets against
+//! a loopback [`NetServer`], comparing wire answers to direct
+//! [`QueryClient`] answers, and driving the overload / drain paths.
+
+use fullw2v::corpus::vocab::Vocab;
+use fullw2v::model::EmbeddingModel;
+use fullw2v::net::{read_response, simple_request, NetOptions, NetServer};
+use fullw2v::serve::{
+    export_store, Precision, ServeEngine, ServeOptions, ShardedStore,
+};
+use fullw2v::util::json::{obj, Json};
+use std::io::Write;
+use std::net::TcpStream;
+use std::sync::Arc;
+use std::time::Duration;
+
+const DIM: usize = 8;
+const VOCAB: usize = 30;
+
+fn export(name: &str) -> std::path::PathBuf {
+    let vocab = Vocab::from_counts(
+        (0..VOCAB).map(|i| (format!("w{i:03}"), (VOCAB - i) as u64 * 10)),
+        1,
+    );
+    let model = EmbeddingModel::init(VOCAB, DIM, 42);
+    let dir = std::env::temp_dir().join("fullw2v_net_test").join(name);
+    std::fs::create_dir_all(&dir).unwrap();
+    export_store(&model, &vocab, &dir, 4).unwrap();
+    dir
+}
+
+fn start_server(
+    name: &str,
+    precision: Precision,
+    engine_opts: ServeOptions,
+    net_opts: NetOptions,
+) -> NetServer {
+    let dir = export(name);
+    let store = Arc::new(ShardedStore::open(&dir, precision).unwrap());
+    let vocab = Vocab::load(&dir.join("vocab.tsv")).unwrap();
+    let engine = ServeEngine::start(store, engine_opts);
+    NetServer::start(engine, Some(vocab), "127.0.0.1:0", net_opts).unwrap()
+}
+
+fn engine_opts() -> ServeOptions {
+    ServeOptions {
+        workers: 2,
+        batch_max: 8,
+        queue_depth: 16,
+        cache_capacity: 16,
+        protected_rows: 4,
+        warm_cache: true,
+        nprobe: 0,
+    }
+}
+
+fn post_nn(addr: &str, body: Json) -> (u16, Json) {
+    let (status, bytes) =
+        simple_request(addr, "POST", "/v1/nn", Some(&body)).unwrap();
+    let text = String::from_utf8(bytes).unwrap();
+    (status, Json::parse(&text).unwrap())
+}
+
+fn neighbor_ids(body: &Json) -> Vec<u32> {
+    body.get("neighbors")
+        .and_then(|n| n.as_arr())
+        .expect("neighbors array")
+        .iter()
+        .map(|n| n.get("id").and_then(|i| i.as_f64()).unwrap() as u32)
+        .collect()
+}
+
+/// The acceptance-criteria test: wire-path top-k must be identical to a
+/// direct engine query, at both store precisions.
+#[test]
+fn nn_over_wire_matches_direct_query_at_both_precisions() {
+    for (name, precision) in
+        [("wire_exact", Precision::Exact), ("wire_int8", Precision::Quantized)]
+    {
+        let server =
+            start_server(name, precision, engine_opts(), NetOptions::default());
+        let addr = server.local_addr().to_string();
+        let client = server.client();
+        for id in [0u32, 7, 15, 29] {
+            let direct = client.query_id(id, 5).unwrap();
+            let (status, body) = post_nn(
+                &addr,
+                obj(vec![
+                    ("id", Json::Num(id as f64)),
+                    ("k", Json::Num(5.0)),
+                ]),
+            );
+            assert_eq!(status, 200, "{name} id {id}: {body}");
+            assert_eq!(
+                neighbor_ids(&body),
+                direct.iter().map(|n| n.id).collect::<Vec<_>>(),
+                "{name}: wire and direct top-k must be identical for {id}"
+            );
+        }
+        let report = server.stop();
+        assert!(report.queries >= 8, "wire + direct queries all counted");
+        assert_eq!(report.shed, 0);
+        assert_eq!(report.precision, precision.name());
+    }
+}
+
+#[test]
+fn nn_by_word_and_by_vector_and_embed() {
+    let server = start_server(
+        "routes",
+        Precision::Exact,
+        engine_opts(),
+        // serve --listen --k 7: bodies without "k" get 7 neighbors
+        NetOptions { default_k: 7, ..NetOptions::default() },
+    );
+    let addr = server.local_addr().to_string();
+    let client = server.client();
+
+    // by word == by id (store vocab is the exporter's vocab), at the
+    // server's default k
+    let (status, by_word) =
+        post_nn(&addr, obj(vec![("word", Json::Str("w003".into()))]));
+    assert_eq!(status, 200);
+    let direct = client.query_id(3, 7).unwrap();
+    assert_eq!(direct.len(), 7, "--k default must reach the engine");
+    assert_eq!(
+        neighbor_ids(&by_word),
+        direct.iter().map(|n| n.id).collect::<Vec<_>>()
+    );
+    // results carry the words themselves
+    let first = &by_word.get("neighbors").unwrap().as_arr().unwrap()[0];
+    assert_eq!(
+        first.get("word").and_then(|w| w.as_str()),
+        Some(format!("w{:03}", direct[0].id).as_str())
+    );
+
+    // embed returns the stored (normalized) row...
+    let (status, bytes) = simple_request(
+        &addr,
+        "POST",
+        "/v1/embed",
+        Some(&obj(vec![("id", Json::Num(3.0))])),
+    )
+    .unwrap();
+    assert_eq!(status, 200);
+    let embed = Json::parse(std::str::from_utf8(&bytes).unwrap()).unwrap();
+    let vector: Vec<f64> = embed
+        .get("vector")
+        .and_then(|v| v.as_arr())
+        .unwrap()
+        .iter()
+        .map(|x| x.as_f64().unwrap())
+        .collect();
+    assert_eq!(vector.len(), DIM);
+    assert_eq!(embed.get("word").and_then(|w| w.as_str()), Some("w003"));
+
+    // ...and querying by that vector ranks row 3 itself first
+    let (status, by_vec) = post_nn(
+        &addr,
+        obj(vec![
+            (
+                "vector",
+                Json::Arr(vector.into_iter().map(Json::Num).collect()),
+            ),
+            ("k", Json::Num(1.0)),
+        ]),
+    );
+    assert_eq!(status, 200);
+    assert_eq!(neighbor_ids(&by_vec), vec![3]);
+
+    server.stop();
+}
+
+#[test]
+fn healthz_stats_and_error_routes() {
+    let server = start_server(
+        "errors",
+        Precision::Exact,
+        engine_opts(),
+        NetOptions::default(),
+    );
+    let addr = server.local_addr().to_string();
+
+    let (status, body) =
+        simple_request(&addr, "GET", "/healthz", None).unwrap();
+    assert_eq!(status, 200);
+    let health = Json::parse(std::str::from_utf8(&body).unwrap()).unwrap();
+    assert_eq!(health.get("status").and_then(|s| s.as_str()), Some("ok"));
+    assert_eq!(
+        health.get("vocab").and_then(|v| v.as_usize()),
+        Some(VOCAB)
+    );
+
+    // warm one query so stats are non-trivial
+    post_nn(&addr, obj(vec![("id", Json::Num(1.0))]));
+    let (status, body) = simple_request(&addr, "GET", "/stats", None).unwrap();
+    assert_eq!(status, 200);
+    let stats = Json::parse(std::str::from_utf8(&body).unwrap()).unwrap();
+    assert!(
+        stats.get("serve").and_then(|s| s.get("queries")).is_some(),
+        "stats embeds ServeReport::to_json"
+    );
+    assert!(
+        stats
+            .get("net")
+            .and_then(|n| n.get("routes"))
+            .and_then(|r| r.get("nn"))
+            .is_some(),
+        "per-route latency present: {stats}"
+    );
+
+    // route/method errors
+    let (status, _) = simple_request(&addr, "GET", "/nope", None).unwrap();
+    assert_eq!(status, 404);
+    let (status, _) = simple_request(&addr, "GET", "/v1/nn", None).unwrap();
+    assert_eq!(status, 405);
+
+    // body errors: bad JSON, missing selector, unknown word, bad id
+    for (body, want) in [
+        (Json::Str("not an object".into()), 400),
+        (obj(vec![("k", Json::Num(3.0))]), 400),
+        (obj(vec![("word", Json::Str("zzz".into()))]), 404),
+        (obj(vec![("id", Json::Num(1e9))]), 400),
+        (
+            obj(vec![
+                ("id", Json::Num(1.0)),
+                ("word", Json::Str("w001".into())),
+            ]),
+            400,
+        ),
+        (obj(vec![("id", Json::Num(1.0)), ("k", Json::Num(0.0))]), 400),
+    ] {
+        let (status, resp) = post_nn(&addr, body.clone());
+        assert_eq!(status, want, "body {body} -> {resp}");
+    }
+    // out-of-range id is the engine's error, surfaced as client fault
+    let (status, resp) =
+        post_nn(&addr, obj(vec![("id", Json::Num(VOCAB as f64))]));
+    assert_eq!(status, 400, "{resp}");
+
+    let report = server.stop();
+    assert!(report.queries >= 1);
+}
+
+/// Raw-socket protocol abuse: the parser's 400/413/431 paths over a real
+/// connection, including a request head split byte-by-byte across reads.
+#[test]
+fn wire_protocol_errors_and_split_reads() {
+    let server = start_server(
+        "abuse",
+        Precision::Exact,
+        engine_opts(),
+        NetOptions::default(),
+    );
+    let addr = server.local_addr().to_string();
+
+    let roundtrip_raw = |bytes: &[u8]| -> (u16, Vec<u8>) {
+        let mut s = TcpStream::connect(&addr).unwrap();
+        s.set_read_timeout(Some(Duration::from_secs(10))).unwrap();
+        s.write_all(bytes).unwrap();
+        read_response(&mut s, &mut Vec::new()).unwrap()
+    };
+
+    // malformed request line
+    let (status, _) = roundtrip_raw(b"GARBAGE\r\n\r\n");
+    assert_eq!(status, 400);
+    // oversized declared body (default cap 1 MiB)
+    let (status, _) = roundtrip_raw(
+        b"POST /v1/nn HTTP/1.1\r\nContent-Length: 2000000\r\n\r\n",
+    );
+    assert_eq!(status, 413);
+    // oversized header section (default cap 16 KiB)
+    let mut huge = Vec::from(&b"GET /healthz HTTP/1.1\r\n"[..]);
+    for i in 0..40 {
+        huge.extend_from_slice(
+            format!("X-Pad-{i}: {}\r\n", "x".repeat(512)).as_bytes(),
+        );
+    }
+    huge.extend_from_slice(b"\r\n");
+    let (status, _) = roundtrip_raw(&huge);
+    assert_eq!(status, 431);
+
+    // a valid request trickled one byte per write still parses
+    let wire = format!(
+        "POST /v1/nn HTTP/1.1\r\nHost: {addr}\r\nContent-Length: 8\r\n\
+         Connection: close\r\n\r\n{{\"id\":3}}"
+    );
+    let mut s = TcpStream::connect(&addr).unwrap();
+    s.set_read_timeout(Some(Duration::from_secs(10))).unwrap();
+    s.set_nodelay(true).unwrap();
+    for byte in wire.as_bytes() {
+        s.write_all(std::slice::from_ref(byte)).unwrap();
+    }
+    let (status, body) = read_response(&mut s, &mut Vec::new()).unwrap();
+    assert_eq!(status, 200);
+    let parsed = Json::parse(std::str::from_utf8(&body).unwrap()).unwrap();
+    let direct = server.client().query_id(3, 10).unwrap();
+    assert_eq!(
+        neighbor_ids(&parsed),
+        direct.iter().map(|n| n.id).collect::<Vec<_>>(),
+        "byte-trickled request must parse and answer identically"
+    );
+
+    server.stop();
+}
+
+/// `Expect: 100-continue` gets its interim response before the body is
+/// sent (curl withholds large POST bodies until it arrives), and the
+/// exchange then completes normally.
+#[test]
+fn expect_100_continue_roundtrip() {
+    let server = start_server(
+        "continue",
+        Precision::Exact,
+        engine_opts(),
+        NetOptions::default(),
+    );
+    let addr = server.local_addr().to_string();
+    let mut s = TcpStream::connect(&addr).unwrap();
+    s.set_read_timeout(Some(Duration::from_secs(10))).unwrap();
+    s.write_all(
+        b"POST /v1/nn HTTP/1.1\r\nExpect: 100-continue\r\n\
+          Content-Length: 8\r\nConnection: close\r\n\r\n",
+    )
+    .unwrap();
+    // the interim response arrives while the body is still withheld
+    let mut interim = [0u8; 25]; // "HTTP/1.1 100 Continue\r\n\r\n"
+    std::io::Read::read_exact(&mut s, &mut interim).unwrap();
+    assert!(
+        interim.starts_with(b"HTTP/1.1 100"),
+        "{}",
+        String::from_utf8_lossy(&interim)
+    );
+    s.write_all(b"{\"id\":3}").unwrap();
+    // read_response skips any interim bytes already consumed above
+    let (status, body) = read_response(&mut s, &mut Vec::new()).unwrap();
+    assert_eq!(status, 200);
+    let parsed = Json::parse(std::str::from_utf8(&body).unwrap()).unwrap();
+    let direct = server.client().query_id(3, 10).unwrap();
+    assert_eq!(
+        neighbor_ids(&parsed),
+        direct.iter().map(|n| n.id).collect::<Vec<_>>()
+    );
+    server.stop();
+}
+
+/// Pipelined keep-alive: two nn requests written back-to-back on one
+/// connection come back as two correct, in-order responses.
+#[test]
+fn pipelined_keep_alive_requests() {
+    let server = start_server(
+        "pipeline",
+        Precision::Exact,
+        engine_opts(),
+        NetOptions::default(),
+    );
+    let addr = server.local_addr().to_string();
+    let client = server.client();
+
+    let body_a = "{\"id\":3,\"k\":4}";
+    let body_b = "{\"id\":9,\"k\":4}";
+    let wire = format!(
+        "POST /v1/nn HTTP/1.1\r\nContent-Length: {}\r\n\r\n{}\
+         POST /v1/nn HTTP/1.1\r\nContent-Length: {}\r\nConnection: close\r\n\r\n{}",
+        body_a.len(),
+        body_a,
+        body_b.len(),
+        body_b
+    );
+    let mut s = TcpStream::connect(&addr).unwrap();
+    s.set_read_timeout(Some(Duration::from_secs(10))).unwrap();
+    s.write_all(wire.as_bytes()).unwrap();
+    // one carry across the connection: a read that pulls in both
+    // coalesced responses must hand the second one to the second call
+    let mut carry = Vec::new();
+    let (status_a, resp_a) = read_response(&mut s, &mut carry).unwrap();
+    let (status_b, resp_b) = read_response(&mut s, &mut carry).unwrap();
+    assert_eq!((status_a, status_b), (200, 200));
+    let parsed_a =
+        Json::parse(std::str::from_utf8(&resp_a).unwrap()).unwrap();
+    let parsed_b =
+        Json::parse(std::str::from_utf8(&resp_b).unwrap()).unwrap();
+    let direct_a = client.query_id(3, 4).unwrap();
+    let direct_b = client.query_id(9, 4).unwrap();
+    assert_eq!(
+        neighbor_ids(&parsed_a),
+        direct_a.iter().map(|n| n.id).collect::<Vec<_>>()
+    );
+    assert_eq!(
+        neighbor_ids(&parsed_b),
+        direct_b.iter().map(|n| n.id).collect::<Vec<_>>(),
+        "responses must come back in request order"
+    );
+
+    let report = server.stop();
+    assert!(report.queries >= 4, "both wire and both direct queries count");
+}
+
+/// The acceptance-criteria overload test: saturation sheds with 503 +
+/// Retry-After (counted in ServeReport::shed) while admitted requests
+/// still complete with correct answers.
+#[test]
+fn overload_sheds_503_while_admitted_requests_complete() {
+    let server = start_server(
+        "overload",
+        Precision::Exact,
+        ServeOptions { queue_depth: 2, batch_max: 4, ..engine_opts() },
+        NetOptions { max_inflight: 2, workers: 8, ..NetOptions::default() },
+    );
+    let addr = server.local_addr().to_string();
+    let gauge = server.gauge();
+
+    // deterministic saturation: occupy every admission slot, then every
+    // nn request must shed...
+    let held: Vec<_> =
+        (0..2).map(|_| gauge.try_acquire().expect("slot")).collect();
+    for _ in 0..3 {
+        let (status, body) = post_nn(&addr, obj(vec![("id", Json::Num(1.0))]));
+        assert_eq!(status, 503, "{body}");
+        assert_eq!(
+            body.get("error").and_then(|e| e.as_str()),
+            Some("engine saturated, retry later")
+        );
+    }
+    // ...while health stays answerable during overload
+    let (status, _) = simple_request(&addr, "GET", "/healthz", None).unwrap();
+    assert_eq!(status, 200, "health must not shed");
+    // Retry-After is on the wire
+    let mut s = TcpStream::connect(&addr).unwrap();
+    s.write_all(
+        b"POST /v1/nn HTTP/1.1\r\nContent-Length: 8\r\nConnection: close\r\n\r\n{\"id\":1}",
+    )
+    .unwrap();
+    let mut raw = Vec::new();
+    std::io::Read::read_to_end(&mut s, &mut raw).unwrap();
+    let text = String::from_utf8_lossy(&raw);
+    assert!(text.starts_with("HTTP/1.1 503"), "{text}");
+    assert!(text.contains("Retry-After: 1"), "{text}");
+
+    // release capacity: the same request now completes, correctly
+    drop(held);
+    let (status, body) = post_nn(&addr, obj(vec![("id", Json::Num(1.0))]));
+    assert_eq!(status, 200, "{body}");
+    let direct = server.client().query_id(1, 10).unwrap();
+    assert_eq!(
+        neighbor_ids(&body),
+        direct.iter().map(|n| n.id).collect::<Vec<_>>()
+    );
+
+    // concurrent hammer: every request either completes correctly or
+    // sheds — nothing hangs, nothing is half-answered
+    let want = server.client().query_id(2, 3).unwrap();
+    let want_ids: Vec<u32> = want.iter().map(|n| n.id).collect();
+    let mut ok = 0u64;
+    let mut shed = 0u64;
+    std::thread::scope(|s| {
+        let mut joins = Vec::new();
+        for _ in 0..8 {
+            let addr = addr.clone();
+            let want_ids = want_ids.clone();
+            joins.push(s.spawn(move || {
+                let (mut ok, mut shed) = (0u64, 0u64);
+                for _ in 0..20 {
+                    let (status, body) = post_nn(
+                        &addr,
+                        obj(vec![
+                            ("id", Json::Num(2.0)),
+                            ("k", Json::Num(3.0)),
+                        ]),
+                    );
+                    match status {
+                        200 => {
+                            assert_eq!(neighbor_ids(&body), want_ids);
+                            ok += 1;
+                        }
+                        503 => shed += 1,
+                        other => panic!("unexpected status {other}: {body}"),
+                    }
+                }
+                (ok, shed)
+            }));
+        }
+        for j in joins {
+            let (o, f) = j.join().unwrap();
+            ok += o;
+            shed += f;
+        }
+    });
+    assert_eq!(ok + shed, 160, "every request answered");
+    assert!(ok > 0, "some requests must complete under load");
+
+    let report = server.stop();
+    assert!(report.shed >= 4, "sheds counted in ServeReport: {}", report.shed);
+    assert_eq!(
+        report.shed,
+        gauge.shed_total(),
+        "engine-side and gauge-side shed accounting agree"
+    );
+    assert!(report.queries >= ok + 3, "admitted requests all served");
+}
+
+/// Graceful drain: /admin/shutdown answers 200, the server finishes and
+/// join() returns a non-empty report, and new connections are refused.
+#[test]
+fn admin_shutdown_drains_and_reports() {
+    let server = start_server(
+        "shutdown",
+        Precision::Exact,
+        engine_opts(),
+        NetOptions::default(),
+    );
+    let addr = server.local_addr().to_string();
+    post_nn(&addr, obj(vec![("id", Json::Num(1.0))]));
+
+    // shutdown over a keep-alive connection: the response must carry
+    // Connection: close (the socket is about to be dropped), not a
+    // keep-alive promise a pooling client would trust
+    let mut s = TcpStream::connect(&addr).unwrap();
+    s.set_read_timeout(Some(Duration::from_secs(10))).unwrap();
+    s.write_all(b"POST /admin/shutdown HTTP/1.1\r\nHost: x\r\n\r\n")
+        .unwrap();
+    let mut raw = Vec::new();
+    std::io::Read::read_to_end(&mut s, &mut raw).unwrap();
+    let text = String::from_utf8_lossy(&raw);
+    assert!(text.starts_with("HTTP/1.1 200"), "{text}");
+    assert!(text.contains("Connection: close"), "{text}");
+    assert!(text.contains("\"status\":\"draining\""), "{text}");
+
+    let report = server.join();
+    assert!(report.queries >= 1, "report covers pre-drain traffic");
+    assert!(report.latency.count >= 1);
+    // the listener is gone: fresh connections fail
+    assert!(
+        TcpStream::connect_timeout(
+            &addr.parse().unwrap(),
+            Duration::from_millis(500),
+        )
+        .is_err(),
+        "post-drain connections must be refused"
+    );
+}
