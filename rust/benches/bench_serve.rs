@@ -6,15 +6,23 @@
 //! a Zipf query stream; the int8 store trades a little score fidelity
 //! for footprint at comparable throughput.
 //!
-//! Args: `cargo bench --bench bench_serve [-- --rows N --dim D --queries Q]`
+//! Args: `cargo bench --bench bench_serve
+//!     [-- --rows N --dim D --queries Q --artifact PATH]`
+//!
+//! With `--artifact PATH` the run also persists a `BENCH_serve.json`
+//! snapshot (schema in `fullw2v::obs::artifact`): every sweep table as
+//! rows of numbers, plus the engine's stage breakdown and latency
+//! quantiles, so CI can upload the perf trajectory across commits.
 
 use fullw2v::corpus::vocab::Vocab;
 use fullw2v::model::EmbeddingModel;
+use fullw2v::obs::artifact;
 use fullw2v::serve::{
     export_store, export_store_clustered, zipf_ids, Precision, ServeEngine,
     ServeOptions, ServeReport, ShardedStore,
 };
 use fullw2v::util::benchkit::{banner, bench};
+use fullw2v::util::json::{obj, Json};
 use fullw2v::util::tables::{f, Table};
 use std::path::PathBuf;
 use std::sync::Arc;
@@ -72,6 +80,7 @@ fn main() {
     let dim: usize = arg("--dim").and_then(|v| v.parse().ok()).unwrap_or(64);
     let queries: usize =
         arg("--queries").and_then(|v| v.parse().ok()).unwrap_or(2000);
+    let artifact_path = arg("--artifact").map(PathBuf::from);
 
     let vocab = Vocab::from_counts(
         (0..rows).map(|i| (format!("w{i:05}"), (rows - i) as u64 + 1)),
@@ -85,6 +94,7 @@ fn main() {
         &format!("serving vs shards ({rows} rows x {dim}d, exact, no cache)"),
         &["shards", "workers", "p50_us", "p99_us", "qps"],
     );
+    let mut shards_rows: Vec<Json> = Vec::new();
     for shards in [1usize, 2, 4, 8] {
         let dir = store_dir(&format!("shards{shards}"));
         export_store(&model, &vocab, &dir, shards).unwrap();
@@ -106,6 +116,12 @@ fn main() {
             f(report.latency.p99_us, 0),
             f(qps, 0),
         ]);
+        shards_rows.push(obj(vec![
+            ("shards", Json::Num(shards as f64)),
+            ("p50_us", Json::Num(report.latency.p50_us)),
+            ("p99_us", Json::Num(report.latency.p99_us)),
+            ("qps", Json::Num(qps)),
+        ]));
         engine.shutdown();
     }
     print!("{}", t1.render());
@@ -122,6 +138,7 @@ fn main() {
         "scan reuse: per-query vs batched (4 shards, exact, no cache)",
         &["batch_max", "fill", "rows_per_query", "reuse", "qps"],
     );
+    let mut reuse_rows: Vec<Json> = Vec::new();
     for batch_max in [1usize, 8, 32] {
         let store =
             Arc::new(ShardedStore::open(&dir4, Precision::Exact).unwrap());
@@ -148,6 +165,13 @@ fn main() {
             f(reuse, 2),
             f(qps, 0),
         ]);
+        reuse_rows.push(obj(vec![
+            ("batch_max", Json::Num(batch_max as f64)),
+            ("batch_fill", Json::Num(report.batch_fill())),
+            ("rows_per_query", Json::Num(rows_per_query)),
+            ("reuse", Json::Num(reuse)),
+            ("qps", Json::Num(qps)),
+        ]));
         engine.shutdown();
     }
     print!("{}", t4.render());
@@ -157,6 +181,7 @@ fn main() {
         "hot-cache tier at 4 shards (Zipf queries)",
         &["capacity", "protected", "hit_rate", "p50_us", "qps"],
     );
+    let mut cache_rows: Vec<Json> = Vec::new();
     for (capacity, protected) in [(0usize, 0usize), (512, 128), (4096, 512)] {
         let store =
             Arc::new(ShardedStore::open(&dir4, Precision::Exact).unwrap());
@@ -176,6 +201,13 @@ fn main() {
             f(report.latency.p50_us, 0),
             f(qps, 0),
         ]);
+        cache_rows.push(obj(vec![
+            ("capacity", Json::Num(capacity as f64)),
+            ("protected", Json::Num(protected as f64)),
+            ("hit_rate", Json::Num(report.cache_hit_rate())),
+            ("p50_us", Json::Num(report.latency.p50_us)),
+            ("qps", Json::Num(qps)),
+        ]));
         engine.shutdown();
     }
     print!("{}", t2.render());
@@ -222,6 +254,7 @@ fn main() {
         ),
         &["nprobe", "rows_per_query", "scan_frac", "recall@10", "qps"],
     );
+    let mut ivf_rows: Vec<Json> = Vec::new();
     for nprobe in [0usize, 4, 8, 16] {
         let store =
             Arc::new(ShardedStore::open(&dir_ivf, Precision::Exact).unwrap());
@@ -249,13 +282,21 @@ fn main() {
         }
         drop(client);
         engine.shutdown();
+        let recall = hit as f64 / total.max(1) as f64;
         t5.row(vec![
             nprobe.to_string(),
             f(rpq, 0),
             f(rpq / rows as f64, 3),
-            f(hit as f64 / total.max(1) as f64, 3),
+            f(recall, 3),
             f(qps, 0),
         ]);
+        ivf_rows.push(obj(vec![
+            ("nprobe", Json::Num(nprobe as f64)),
+            ("rows_per_query", Json::Num(rpq)),
+            ("scan_frac", Json::Num(rpq / rows as f64)),
+            ("recall_at_10", Json::Num(recall)),
+            ("qps", Json::Num(qps)),
+        ]));
     }
     print!("{}", t5.render());
 
@@ -264,6 +305,7 @@ fn main() {
         "precision at 4 shards",
         &["precision", "payload_mb", "p50_us", "qps"],
     );
+    let mut precision_rows: Vec<Json> = Vec::new();
     for precision in [Precision::Exact, Precision::Quantized] {
         let store =
             Arc::new(ShardedStore::open(&dir4, precision).unwrap());
@@ -279,6 +321,15 @@ fn main() {
             f(report.latency.p50_us, 0),
             f(qps, 0),
         ]);
+        precision_rows.push(obj(vec![
+            ("precision", Json::Str(precision.name().to_string())),
+            (
+                "payload_mb",
+                Json::Num(payload as f64 / (1024.0 * 1024.0)),
+            ),
+            ("p50_us", Json::Num(report.latency.p50_us)),
+            ("qps", Json::Num(qps)),
+        ]));
         engine.shutdown();
     }
     print!("{}", t3.render());
@@ -301,5 +352,30 @@ fn main() {
         stats.rate(1.0)
     );
     drop(client);
-    engine.shutdown();
+    let final_report = engine.shutdown();
+
+    if let Some(path) = artifact_path {
+        artifact::emit(
+            &path,
+            "bench_serve",
+            obj(vec![
+                ("rows", Json::Num(rows as f64)),
+                ("dim", Json::Num(dim as f64)),
+                ("queries", Json::Num(queries as f64)),
+            ]),
+            vec![
+                ("shards_sweep", Json::Arr(shards_rows)),
+                ("scan_reuse", Json::Arr(reuse_rows)),
+                ("cache_sweep", Json::Arr(cache_rows)),
+                ("ivf_sweep", Json::Arr(ivf_rows)),
+                ("precision", Json::Arr(precision_rows)),
+                // stage decomposition + quantiles from the final
+                // (default-options, exact, 4-shard) engine's run
+                ("stages", final_report.stages.to_json()),
+                ("latency", final_report.latency.to_json()),
+            ],
+        )
+        .expect("writing bench artifact");
+        println!("wrote artifact {}", path.display());
+    }
 }

@@ -15,13 +15,23 @@
 //! 2. **PJRT variants** (needs artifacts): the original Figure 6/7
 //!    table; FULL-W2V must be the fastest PJRT variant.
 //!
-//! Args: `cargo bench --bench bench_throughput [-- --words N --corpus both]`
+//! Args: `cargo bench --bench bench_throughput
+//!     [-- --words N --corpus both --artifact PATH]`
+//!
+//! With `--artifact PATH` section 1 also persists a
+//! `BENCH_throughput.json` snapshot (schema in `fullw2v::obs::artifact`):
+//! per-impl words/sec at each thread count, the measured negative-row
+//! reuse factor, and the epoch stage breakdown, so CI can upload the
+//! perf trajectory across commits.
 
 use fullw2v::config::TrainConfig;
 use fullw2v::corpus::synthetic::SyntheticSpec;
+use fullw2v::obs::artifact;
 use fullw2v::util::benchkit::banner;
+use fullw2v::util::json::{obj, Json};
 use fullw2v::util::tables::{f, Table};
 use fullw2v::workbench::{have_artifacts, Workbench};
+use std::path::PathBuf;
 
 const SCALE_THREADS: [usize; 4] = [1, 2, 4, 8];
 const CPU_IMPLS: [&str; 4] = ["mikolov", "pword2vec", "psgnscc", "fullw2v"];
@@ -37,13 +47,14 @@ fn main() {
     let words: u64 =
         arg("--words").and_then(|v| v.parse().ok()).unwrap_or(50_000);
     let corpus = arg("--corpus").unwrap_or_else(|| "text8".into());
+    let artifact_path = arg("--artifact").map(PathBuf::from);
 
-    cpu_thread_scaling(words);
+    cpu_thread_scaling(words, artifact_path);
     pjrt_variants(words, &corpus);
 }
 
 /// Section 1: the Hogwild training layer, words/sec x threads x impl.
-fn cpu_thread_scaling(words: u64) {
+fn cpu_thread_scaling(words: u64, artifact_path: Option<PathBuf>) {
     let spec = {
         let mut s = SyntheticSpec::text8_mini();
         s.total_words = words;
@@ -61,6 +72,7 @@ fn cpu_thread_scaling(words: u64) {
     );
     let mut mikolov_serial = 0.0f64;
     let mut fullw2v_t4 = 0.0f64;
+    let mut scaling_rows: Vec<Json> = Vec::new();
     for name in CPU_IMPLS {
         let mut wps = [0.0f64; SCALE_THREADS.len()];
         let mut reuse = 0.0f64;
@@ -76,6 +88,15 @@ fn cpu_thread_scaling(words: u64) {
                 reuse = rep.neg_row_reuse();
                 loss_serial = rep.loss_per_word;
             }
+            scaling_rows.push(obj(vec![
+                ("impl", Json::Str(name.to_string())),
+                ("threads", Json::Num(threads as f64)),
+                ("words_per_sec", Json::Num(rep.words_per_sec)),
+                ("loss_per_word", Json::Num(rep.loss_per_word)),
+                ("neg_reuse", Json::Num(rep.neg_row_reuse())),
+                ("busy_seconds", Json::Num(rep.busy_seconds)),
+                ("stages", rep.stages.to_json()),
+            ]));
             println!(
                 "  {:28} t={threads}: {:>10.0} w/s  loss/word {:.4}  \
                  neg reuse {:.1}",
@@ -113,6 +134,35 @@ fn cpu_thread_scaling(words: u64) {
         "fullw2v@4t ({fullw2v_t4:.0} w/s) must exceed 1.5x serial mikolov \
          ({mikolov_serial:.0} w/s)"
     );
+
+    if let Some(path) = artifact_path {
+        artifact::emit(
+            &path,
+            "bench_throughput",
+            obj(vec![
+                ("words", Json::Num(words as f64)),
+                ("vocab", Json::Num(wb.vocab.len() as f64)),
+                (
+                    "thread_counts",
+                    Json::Arr(
+                        SCALE_THREADS
+                            .iter()
+                            .map(|&t| Json::Num(t as f64))
+                            .collect(),
+                    ),
+                ),
+            ]),
+            vec![
+                ("thread_scaling", Json::Arr(scaling_rows)),
+                (
+                    "speedup_fullw2v_t4_vs_mikolov_t1",
+                    Json::Num(fullw2v_t4 / mikolov_serial.max(1e-9)),
+                ),
+            ],
+        )
+        .expect("writing bench artifact");
+        println!("wrote artifact {}", path.display());
+    }
 }
 
 /// Section 2: the PJRT kernel variants (original Figure 6/7 table).

@@ -106,8 +106,12 @@ COMMANDS:
         [--k K] [--quantized] [--batch N] [--nprobe P]
         file mode answers a queries file and exits; --listen (or
         serve.listen in the config) runs the HTTP front-end:
-        POST /v1/nn /v1/embed, GET /healthz /stats,
+        POST /v1/nn /v1/embed, GET /healthz /stats /metrics,
         POST /admin/shutdown drains (503s shed; serve.max_inflight)
+        GET /metrics is Prometheus text: fullw2v_http_* request
+        counters + admission gauges, fullw2v_serve_* engine counters,
+        a stage_seconds_total latency decomposition, and
+        _bucket/_sum/_count histogram series
   gen-corpus --spec tiny|text8|1bw --out DIR
   gpusim
   manifest
@@ -116,8 +120,18 @@ COMMANDS:
 FLAGS:
   -c, --config FILE          TOML config file
   -s, --set section.key=val  config override (repeatable)
-  -v, --verbose              debug logging
+  -v, --verbose              debug logging (adds per-stage time tables
+                             to train / serve --queries reports)
   -q, --quiet                errors only
+
+ENVIRONMENT:
+  FULLW2V_LOG         error|warn|info|debug|trace (same as -v/-q)
+  FULLW2V_LOG_FORMAT  text|json — json emits one JSON object per log
+                      line (request logs carry req_id)
+
+Benches accept --artifact PATH to persist a BENCH_*.json snapshot
+(schema 1: git_rev, config, table rows, stage breakdowns, latency
+quantiles — see rust/src/obs/artifact.rs).
 ";
 
 /// Parse argv (excluding argv[0]).

@@ -42,6 +42,13 @@
 //! (`train --impl fullw2v --threads T`).  See the [`trainer`] module
 //! docs for the memory-tier mapping.
 //!
+//! Both hot paths are instrumented through [`obs`]: constant-memory
+//! log2-bucketed latency histograms, a process-global counter/gauge
+//! registry, and stage timers that decompose per-batch serving latency
+//! and per-epoch training time the way the paper's Tables 4-6 decompose
+//! memory traffic. The HTTP front-end exposes it all at `GET /metrics`
+//! (Prometheus text), and the benches persist `BENCH_*.json` artifacts.
+//!
 //! See DESIGN.md for the system inventory and per-experiment index.
 
 pub mod batcher;
@@ -56,6 +63,7 @@ pub mod memmodel;
 pub mod metrics;
 pub mod model;
 pub mod net;
+pub mod obs;
 pub mod runtime;
 pub mod sampler;
 pub mod serve;

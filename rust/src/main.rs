@@ -244,6 +244,17 @@ fn train_cmd(
         );
     }
     println!("aggregate: {:.0} words/s", report.words_per_sec());
+    if log::enabled(log::Level::Debug) {
+        if let Some(e) = report.epochs.last() {
+            if !e.stages.is_empty() {
+                print!(
+                    "{}",
+                    e.stages
+                        .render_table("stage breakdown (last epoch, all workers)")
+                );
+            }
+        }
+    }
     if let Some(path) = out {
         model.save_text(&vocab, Path::new(&path))?;
         println!("model written to {path} (word2vec text format)");
@@ -461,6 +472,12 @@ fn serve_cmd(
     drop(client);
     let report = engine.shutdown();
     println!("\n{}", report.summary());
+    if log::enabled(log::Level::Debug) && !report.stages.is_empty() {
+        print!(
+            "{}",
+            report.stages.render_table("serve stage breakdown (all batches)")
+        );
+    }
     Ok(())
 }
 
@@ -499,7 +516,7 @@ fn serve_net_cmd(
     )?;
     println!("fullw2v serving on http://{}", server.local_addr());
     println!(
-        "routes: POST /v1/nn /v1/embed | GET /healthz /stats | \
+        "routes: POST /v1/nn /v1/embed | GET /healthz /stats /metrics | \
          POST /admin/shutdown (drain)"
     );
     // smoke scripts grep the port from redirected stdout: flush past

@@ -1,5 +1,6 @@
 //! Training/benchmark metrics and experiment-row emission.
 
+use crate::obs::{Histogram, StageTimes};
 use crate::util::json::{obj, Json};
 
 /// Negative-row traffic accounting — the training-side mirror of the
@@ -58,6 +59,13 @@ pub struct EpochReport {
     pub neg_rows_loaded: u64,
     /// Context-row x negative-row interactions served from those loads.
     pub neg_row_uses: u64,
+    /// Per-stage decomposition of worker busy time (corpus-iteration /
+    /// context-ring / negative-block / update), summed across workers.
+    /// Empty when the driver doesn't measure stages.
+    pub stages: StageTimes,
+    /// Total worker busy seconds across all threads (the quantity the
+    /// stage sums reconcile against; `seconds` is the epoch wall time).
+    pub busy_seconds: f64,
 }
 
 impl EpochReport {
@@ -94,6 +102,8 @@ impl EpochReport {
             ("neg_rows_loaded", Json::Num(self.neg_rows_loaded as f64)),
             ("neg_row_uses", Json::Num(self.neg_row_uses as f64)),
             ("neg_row_reuse", Json::Num(self.neg_row_reuse())),
+            ("stages", self.stages.to_json()),
+            ("busy_seconds", Json::Num(self.busy_seconds)),
         ])
     }
 }
@@ -182,6 +192,26 @@ impl LatencyStats {
         }
     }
 
+    /// Summarize a recorded [`Histogram`] over `wall_seconds` of serving.
+    /// Quantiles interpolate inside log2 buckets (error bounded by one
+    /// bucket's ~3% relative width); the max is exact.
+    pub fn from_hist(hist: &Histogram, wall_seconds: f64) -> Self {
+        if hist.is_empty() {
+            return LatencyStats::default();
+        }
+        LatencyStats {
+            count: hist.count(),
+            p50_us: hist.quantile(0.50) / 1e3,
+            p99_us: hist.quantile(0.99) / 1e3,
+            max_us: hist.max_ns() as f64 / 1e3,
+            qps: if wall_seconds > 0.0 {
+                hist.count() as f64 / wall_seconds
+            } else {
+                0.0
+            },
+        }
+    }
+
     pub fn to_json(&self) -> Json {
         obj(vec![
             ("count", Json::Num(self.count as f64)),
@@ -195,31 +225,33 @@ impl LatencyStats {
 
 /// Per-route request-latency recorder for the HTTP front-end.
 ///
-/// Each route keeps a total count, a bounded ring of recent latency
-/// samples (old samples are overwritten once the ring fills, so the
-/// quantiles track recent traffic), and an all-time max.  `record` is
-/// one short mutex hold per request; `to_json` is what `GET /stats`
-/// embeds next to [`crate::serve::ServeReport::to_json`].
-#[derive(Debug, Default)]
+/// Each route keeps a constant-memory [`Histogram`] (count, exact
+/// all-time max, and log2-bucketed quantiles come from it), so memory
+/// never grows with traffic.  `record` is one short mutex hold per
+/// request; `to_json` is what `GET /stats` embeds next to
+/// [`crate::serve::ServeReport::to_json`], and [`Self::histograms`]
+/// feeds the `GET /metrics` Prometheus exposition.
+#[derive(Debug)]
 pub struct RouteMetrics {
     inner: std::sync::Mutex<
-        std::collections::BTreeMap<&'static str, RouteSamples>,
+        std::collections::BTreeMap<&'static str, Histogram>,
     >,
+    /// Observation-window start: per-route qps is count over this span.
+    created: std::time::Instant,
 }
 
-#[derive(Debug, Default)]
-struct RouteSamples {
-    count: u64,
-    nanos: Vec<u64>,
-    max_ns: u64,
+impl Default for RouteMetrics {
+    fn default() -> Self {
+        RouteMetrics::new()
+    }
 }
-
-/// Samples kept per route; past this the ring overwrites oldest-first.
-const ROUTE_SAMPLE_CAP: usize = 4096;
 
 impl RouteMetrics {
     pub fn new() -> Self {
-        RouteMetrics::default()
+        RouteMetrics {
+            inner: std::sync::Mutex::new(std::collections::BTreeMap::new()),
+            created: std::time::Instant::now(),
+        }
     }
 
     /// Record one served request on `route`.  Route names are `'static`
@@ -228,29 +260,25 @@ impl RouteMetrics {
     pub fn record(&self, route: &'static str, elapsed: std::time::Duration) {
         let ns = elapsed.as_nanos().min(u64::MAX as u128) as u64;
         let mut map = self.inner.lock().unwrap();
-        let s = map.entry(route).or_default();
-        if s.nanos.len() < ROUTE_SAMPLE_CAP {
-            s.nanos.push(ns);
-        } else {
-            s.nanos[(s.count % ROUTE_SAMPLE_CAP as u64) as usize] = ns;
-        }
-        s.count += 1;
-        s.max_ns = s.max_ns.max(ns);
+        map.entry(route).or_default().record(ns);
     }
 
-    /// (route, stats) snapshot, route-name ordered.  `qps` is 0 — the
-    /// recorder has no serving-window notion; the engine report carries
-    /// the authoritative throughput number.
+    /// (route, stats) snapshot, route-name ordered.  `qps` is the
+    /// route's count over the recorder's lifetime (the observation
+    /// window starts when the server does); the engine report still
+    /// carries the authoritative engine-side throughput number.
     pub fn snapshot(&self) -> Vec<(&'static str, LatencyStats)> {
+        let window = self.created.elapsed().as_secs_f64();
         let map = self.inner.lock().unwrap();
         map.iter()
-            .map(|(route, s)| {
-                let mut stats = LatencyStats::from_nanos(&s.nanos, 0.0);
-                stats.count = s.count;
-                stats.max_us = s.max_ns as f64 / 1e3;
-                (*route, stats)
-            })
+            .map(|(route, h)| (*route, LatencyStats::from_hist(h, window)))
             .collect()
+    }
+
+    /// Per-route histogram clones for the Prometheus exposition.
+    pub fn histograms(&self) -> Vec<(&'static str, Histogram)> {
+        let map = self.inner.lock().unwrap();
+        map.iter().map(|(route, h)| (*route, h.clone())).collect()
     }
 
     pub fn to_json(&self) -> Json {
@@ -328,6 +356,24 @@ mod tests {
     }
 
     #[test]
+    fn latency_stats_from_histogram() {
+        let mut h = Histogram::new();
+        for i in 1..=100u64 {
+            h.record(i * 1_000);
+        }
+        let s = LatencyStats::from_hist(&h, 2.0);
+        assert_eq!(s.count, 100);
+        assert!((s.p50_us - 50.0).abs() <= 2.0, "p50 {}", s.p50_us);
+        assert!((s.p99_us - 99.0).abs() <= 4.0, "p99 {}", s.p99_us);
+        assert_eq!(s.max_us, 100.0, "max stays exact");
+        assert!((s.qps - 50.0).abs() < 1e-9);
+        assert_eq!(
+            LatencyStats::from_hist(&Histogram::new(), 1.0),
+            LatencyStats::default()
+        );
+    }
+
+    #[test]
     fn route_metrics_record_and_bound() {
         use std::time::Duration;
         let m = RouteMetrics::new();
@@ -346,17 +392,20 @@ mod tests {
         assert_eq!(nn.count, 100);
         assert!((nn.p50_us - 50.0).abs() <= 2.0);
         assert_eq!(nn.max_us, 100.0);
-        // the ring is bounded: count keeps the true total
-        for _ in 0..2 * ROUTE_SAMPLE_CAP {
+        assert!(nn.qps > 0.0, "snapshot qps comes from the window now");
+        // constant memory: heavy traffic only bumps counts, and the
+        // all-time max survives
+        for _ in 0..10_000 {
             m.record("nn", Duration::from_micros(1));
         }
         let snap = m.snapshot();
         let nn = &snap.iter().find(|(r, _)| *r == "nn").unwrap().1;
-        assert_eq!(nn.count, 100 + 2 * ROUTE_SAMPLE_CAP as u64);
-        assert_eq!(nn.max_us, 100.0, "all-time max survives the ring");
+        assert_eq!(nn.count, 100 + 10_000);
+        assert_eq!(nn.max_us, 100.0, "all-time max survives");
         let j = m.to_json().to_string();
         assert!(j.contains("\"nn\""));
         assert!(j.contains("\"healthz\""));
+        assert_eq!(m.histograms().len(), 2);
     }
 
     #[test]

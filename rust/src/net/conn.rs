@@ -22,11 +22,13 @@ use super::router::{self, AppState};
 use super::shed::InflightGauge;
 use crate::corpus::vocab::Vocab;
 use crate::metrics::RouteMetrics;
+use crate::obs;
 use crate::serve::{QueryClient, ServeEngine, ServeReport};
+use crate::util::log::{self, Level};
 use anyhow::{Context, Result};
 use std::io::{Read, Write};
 use std::net::{SocketAddr, TcpListener, TcpStream};
-use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
 use std::sync::mpsc::{sync_channel, Receiver, TrySendError};
 use std::sync::{Arc, Mutex};
 use std::thread::JoinHandle;
@@ -230,6 +232,27 @@ fn worker_loop(
     }
 }
 
+/// Process-wide request id mint (starts at 1; 0 would read as "no id").
+/// The id follows the request everywhere it is observable: the engine's
+/// slow-query log (via [`router::begin`]'s trace argument), the served-
+/// request debug log, and — in JSON log mode — a top-level `req_id` key.
+static NEXT_REQ_ID: AtomicU64 = AtomicU64::new(1);
+
+/// Fixed label set for a route name — label sets in the
+/// [`obs::registry`] must be `'static`, so each known route maps to a
+/// promoted constant (anything else folds into `other`).
+fn route_labels(route: &'static str) -> obs::registry::LabelSet {
+    match route {
+        "nn" => &[("route", "nn")],
+        "embed" => &[("route", "embed")],
+        "healthz" => &[("route", "healthz")],
+        "stats" => &[("route", "stats")],
+        "metrics" => &[("route", "metrics")],
+        "shutdown" => &[("route", "shutdown")],
+        _ => &[("route", "other")],
+    }
+}
+
 /// One connection's keep-alive loop.  Exits on peer close, idle/read
 /// timeout, write failure, protocol error, or drain.
 fn handle_conn(mut stream: TcpStream, state: &Arc<AppState>, opts: &NetOptions) {
@@ -293,8 +316,9 @@ fn handle_conn(mut stream: TcpStream, state: &Arc<AppState>, opts: &NetOptions) 
         let mut starts = Vec::with_capacity(window.len());
         let mut pendings = Vec::with_capacity(window.len());
         for req in &window {
-            starts.push(Instant::now());
-            pendings.push(router::begin(state, req));
+            let rid = NEXT_REQ_ID.fetch_add(1, Ordering::Relaxed);
+            starts.push((rid, Instant::now()));
+            pendings.push(router::begin(state, req, rid));
         }
         drop(window);
         // read the stop flag *after* begin: a window containing
@@ -308,11 +332,32 @@ fn handle_conn(mut stream: TcpStream, state: &Arc<AppState>, opts: &NetOptions) 
 
         // phase 2: answer in order
         let mut close_after = closing;
-        for ((pending, keep_pref), started) in
+        for ((pending, keep_pref), (rid, started)) in
             pendings.into_iter().zip(keep_pref).zip(starts)
         {
             let (route, resp) = router::finish(state, pending);
-            state.routes.record(route, started.elapsed());
+            let took = started.elapsed();
+            state.routes.record(route, took);
+            obs::registry::counter_with(
+                "fullw2v_http_requests_total",
+                "HTTP requests served by route",
+                route_labels(route),
+            )
+            .inc();
+            if log::enabled(Level::Debug) {
+                log::log_with(
+                    Level::Debug,
+                    &[
+                        ("req_id", &rid.to_string()),
+                        ("route", route),
+                        ("status", &resp.status.to_string()),
+                    ],
+                    format_args!(
+                        "served in {:.1}us",
+                        took.as_secs_f64() * 1e6
+                    ),
+                );
+            }
             let keep_alive = keep_pref && !closing && !resp.close;
             if !keep_alive {
                 close_after = true;

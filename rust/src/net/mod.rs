@@ -20,9 +20,22 @@
 //! * [`conn`] — nonblocking acceptor + fixed worker pool, keep-alive
 //!   with read/write timeouts, graceful drain ([`NetServer`]).
 //! * [`router`] — `POST /v1/nn`, `POST /v1/embed`, `GET /healthz`,
-//!   `GET /stats`, `POST /admin/shutdown`.
+//!   `GET /stats`, `GET /metrics`, `POST /admin/shutdown`.
 //! * [`shed`] — bounded in-flight gauge; saturation answers 503 +
 //!   `Retry-After` and lands in [`crate::serve::ServeReport::shed`].
+//!
+//! Observability rides on [`crate::obs`]: every request gets a
+//! process-unique id (threaded into the engine's slow-query log and the
+//! served-request debug logs; JSON log mode via `FULLW2V_LOG_FORMAT=json`
+//! carries it as a `req_id` key), and `GET /metrics` exposes the whole
+//! surface as Prometheus text — `fullw2v_http_*` request counters and
+//! admission gauges, `fullw2v_serve_*` engine counters, a
+//! `fullw2v_serve_stage_seconds_total{stage=...}` latency decomposition
+//! (queue-wait / batch-fill / ivf-probe / shard-scan / top-k-merge), and
+//! `_bucket`/`_sum`/`_count` histogram series for engine and per-route
+//! wire latency.  The benches persist the same numbers as
+//! `BENCH_*.json` artifacts (`--artifact`; schema in
+//! [`crate::obs::artifact`]) so CI can upload the perf trajectory.
 //!
 //! The transport-level reuse lesson (Ji et al., arXiv:1604.04661, and
 //! the FULL-W2V batching thesis) is wired in at two points: requests

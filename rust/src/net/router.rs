@@ -6,6 +6,7 @@
 //! | `POST /v1/embed`       | raw stored row by `id` or `word`            |
 //! | `GET  /healthz`        | liveness (503 once draining)                |
 //! | `GET  /stats`          | engine report + net-layer gauges            |
+//! | `GET  /metrics`        | Prometheus text exposition ([`crate::obs`]) |
 //! | `POST /admin/shutdown` | trigger graceful drain                      |
 //!
 //! Dispatch is **two-phase** so the wire layer can feed the engine's
@@ -18,13 +19,19 @@
 //! dispatch wastes batched kernels).
 //!
 //! Only `/v1/nn` passes admission control ([`super::shed`]): it is the
-//! route that blocks on the engine's bounded queue.  Health and stats
-//! stay answerable during overload on purpose.
+//! route that blocks on the engine's bounded queue.  Health, stats, and
+//! metrics stay answerable during overload on purpose.
+//!
+//! Every request carries a process-unique id (minted in
+//! [`super::conn`]); nn submissions hand it to the engine so the
+//! slow-query log can name the offending HTTP request, and served-
+//! request logs carry it as a structured field.
 
 use super::http::{Request, Response};
 use super::shed::{InflightGauge, Permit};
 use crate::corpus::vocab::Vocab;
 use crate::metrics::RouteMetrics;
+use crate::obs::{self, PromWriter};
 use crate::serve::{
     EngineStats, QueryClient, QueryResponse, Neighbor, ShardedStore,
 };
@@ -66,12 +73,14 @@ pub(crate) enum Pending {
 }
 
 /// Phase 1: parse, admit, and submit.  Engine-bound work is *in the
-/// micro-batcher's queue* when this returns.
-pub(crate) fn begin(state: &AppState, req: &Request) -> Pending {
+/// micro-batcher's queue* when this returns.  `trace` is the request id
+/// minted by the connection layer; nn queries carry it into the engine.
+pub(crate) fn begin(state: &AppState, req: &Request, trace: u64) -> Pending {
     match (req.method.as_str(), req.path()) {
         ("GET", "/healthz") => Pending::Ready("healthz", healthz(state)),
         ("GET", "/stats") => Pending::Ready("stats", stats(state)),
-        ("POST", "/v1/nn") => nn_begin(state, req),
+        ("GET", "/metrics") => Pending::Ready("metrics", metrics(state)),
+        ("POST", "/v1/nn") => nn_begin(state, req, trace),
         ("POST", "/v1/embed") => match parse_body(req) {
             Err(resp) => Pending::Ready("embed", resp),
             Ok(body) => Pending::Deferred(
@@ -91,7 +100,7 @@ pub(crate) fn begin(state: &AppState, req: &Request) -> Pending {
         }
         (
             _,
-            "/healthz" | "/stats" | "/v1/nn" | "/v1/embed"
+            "/healthz" | "/stats" | "/metrics" | "/v1/nn" | "/v1/embed"
             | "/admin/shutdown",
         ) => Pending::Ready(
             "other",
@@ -170,7 +179,7 @@ fn resolve_id(state: &AppState, body: &Json) -> Result<u32, Response> {
     }
 }
 
-fn nn_begin(state: &AppState, req: &Request) -> Pending {
+fn nn_begin(state: &AppState, req: &Request, trace: u64) -> Pending {
     let fail = |resp: Response| Pending::Ready("nn", resp);
     let body = match parse_body(req) {
         Ok(b) => b,
@@ -244,8 +253,10 @@ fn nn_begin(state: &AppState, req: &Request) -> Pending {
         }
     };
     let rx = match source {
-        Source::Id(id) => state.client.submit_id(id, k),
-        Source::Vector(v) => state.client.submit_vector(v, k),
+        Source::Id(id) => state.client.submit_id_traced(id, k, trace),
+        Source::Vector(v) => {
+            state.client.submit_vector_traced(v, k, trace)
+        }
     };
     Pending::Nn { rx, _permit: permit }
 }
@@ -317,6 +328,102 @@ fn healthz(state: &AppState) -> Response {
             ),
         ]),
     )
+}
+
+/// `GET /metrics`: the whole observability surface in Prometheus text —
+/// the process-global [`obs::registry`], the net layer's admission
+/// gauges, the engine's counters and stage decomposition, and the
+/// latency histograms (engine-side and per-route wire-side). Families
+/// named here are what the CI smoke test and `net_integration` grep for.
+fn metrics(state: &AppState) -> Response {
+    let mut w = PromWriter::new();
+    obs::registry::render(&mut w);
+    w.gauge(
+        "fullw2v_http_inflight",
+        "engine-bound requests currently admitted",
+        &[],
+        state.gauge.inflight() as f64,
+    );
+    w.gauge(
+        "fullw2v_http_inflight_max",
+        "admission capacity (0 = unlimited)",
+        &[],
+        state.gauge.capacity() as f64,
+    );
+    w.counter(
+        "fullw2v_http_shed_total",
+        "requests refused with 503 by admission control",
+        &[],
+        state.gauge.shed_total() as f64,
+    );
+    w.counter(
+        "fullw2v_http_admitted_total",
+        "requests admitted past the inflight gauge",
+        &[],
+        state.gauge.admitted_total() as f64,
+    );
+    let report = state.stats.report();
+    w.counter(
+        "fullw2v_serve_queries_total",
+        "queries answered by the engine",
+        &[],
+        report.queries as f64,
+    );
+    w.counter(
+        "fullw2v_serve_batches_total",
+        "micro-batches dispatched",
+        &[],
+        report.batches as f64,
+    );
+    w.counter(
+        "fullw2v_serve_rows_scanned_total",
+        "store rows scored across all batches",
+        &[],
+        report.rows_scanned as f64,
+    );
+    w.counter(
+        "fullw2v_serve_cache_hits_total",
+        "hot-cache row hits",
+        &[],
+        report.cache_hits as f64,
+    );
+    w.counter(
+        "fullw2v_serve_cache_misses_total",
+        "hot-cache row misses",
+        &[],
+        report.cache_misses as f64,
+    );
+    w.counter(
+        "fullw2v_serve_shed_total",
+        "queries shed before reaching the engine queue",
+        &[],
+        report.shed as f64,
+    );
+    for (stage, ns) in report.stages.iter() {
+        w.counter(
+            "fullw2v_serve_stage_seconds_total",
+            "batch dispatch time decomposed by pipeline stage",
+            &[("stage", stage)],
+            ns as f64 * 1e-9,
+        );
+    }
+    w.histogram(
+        "fullw2v_serve_request_duration_seconds",
+        "engine submit-to-reply latency",
+        &[],
+        &state.stats.latency_histogram(),
+        1e-9,
+    );
+    for (route, hist) in state.routes.histograms() {
+        w.histogram(
+            "fullw2v_http_request_duration_seconds",
+            "wire request service time by route",
+            &[("route", route)],
+            &hist,
+            1e-9,
+        );
+    }
+    Response::text(200, &w.finish())
 }
 
 fn stats(state: &AppState) -> Response {

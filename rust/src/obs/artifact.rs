@@ -1,0 +1,104 @@
+//! Bench artifact emitter: persisted `BENCH_*.json` perf snapshots.
+//!
+//! Benches run with `--artifact PATH` write one JSON document so CI can
+//! upload them and the perf trajectory is comparable across PRs (ROADMAP
+//! Open item 2). Schema (v1):
+//!
+//! ```json
+//! {
+//!   "schema": 1,
+//!   "bench": "bench_serve",
+//!   "git_rev": "abc1234",
+//!   "created_unix": 1754000000,
+//!   "config": { ... },            // knob values the run used
+//!   ...                           // bench-specific sections: table rows,
+//! }                               // stage breakdowns, reuse factors,
+//! ```                             // latency quantiles
+//!
+//! Every section a bench emits should be a plain array/object of numbers
+//! so downstream diffing needs no schema knowledge beyond v1.
+
+use std::io;
+use std::path::Path;
+
+use crate::util::json::{obj, Json};
+
+/// Best-effort git revision: `$GITHUB_SHA` (CI), then `git rev-parse`,
+/// then `"unknown"` — artifacts must still emit outside a checkout.
+pub fn git_rev() -> String {
+    if let Ok(sha) = std::env::var("GITHUB_SHA") {
+        if !sha.is_empty() {
+            return sha;
+        }
+    }
+    if let Ok(out) = std::process::Command::new("git")
+        .args(["rev-parse", "--short", "HEAD"])
+        .output()
+    {
+        if out.status.success() {
+            let rev = String::from_utf8_lossy(&out.stdout).trim().to_string();
+            if !rev.is_empty() {
+                return rev;
+            }
+        }
+    }
+    "unknown".to_string()
+}
+
+/// Write a schema-v1 artifact document to `path`.
+pub fn emit(
+    path: &Path,
+    bench: &str,
+    config: Json,
+    sections: Vec<(&str, Json)>,
+) -> io::Result<()> {
+    let unix = std::time::SystemTime::now()
+        .duration_since(std::time::UNIX_EPOCH)
+        .map(|d| d.as_secs())
+        .unwrap_or(0);
+    let mut fields = vec![
+        ("schema", Json::Num(1.0)),
+        ("bench", Json::Str(bench.to_string())),
+        ("git_rev", Json::Str(git_rev())),
+        ("created_unix", Json::Num(unix as f64)),
+        ("config", config),
+    ];
+    fields.extend(sections);
+    std::fs::write(path, format!("{}\n", obj(fields)))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn emits_parseable_schema_v1() {
+        let dir = std::env::temp_dir().join("fullw2v_obs_artifact_test");
+        std::fs::create_dir_all(&dir).unwrap();
+        let path = dir.join("BENCH_test.json");
+        emit(
+            &path,
+            "bench_test",
+            obj(vec![("rows", Json::Num(8.0))]),
+            vec![(
+                "latency",
+                obj(vec![("p50_us", Json::Num(1.25))]),
+            )],
+        )
+        .unwrap();
+        let doc = Json::parse(std::fs::read_to_string(&path).unwrap().trim())
+            .unwrap();
+        assert_eq!(doc.get("schema").unwrap().as_f64(), Some(1.0));
+        assert_eq!(doc.get("bench").unwrap().as_str(), Some("bench_test"));
+        assert!(doc.get("git_rev").unwrap().as_str().is_some());
+        assert_eq!(
+            doc.get("config").unwrap().get("rows").unwrap().as_usize(),
+            Some(8)
+        );
+        assert_eq!(
+            doc.get("latency").unwrap().get("p50_us").unwrap().as_f64(),
+            Some(1.25)
+        );
+        std::fs::remove_file(&path).ok();
+    }
+}

@@ -1,0 +1,286 @@
+//! Constant-memory latency histogram with log2-spaced buckets.
+//!
+//! Replaces the unbounded sample vectors the metrics layer used to keep:
+//! a `Histogram` is a fixed array of bucket counts (~15 KB), so recording
+//! is O(1), memory never grows with traffic, and two histograms merge by
+//! adding counts — which is what lets per-worker recorders fold into one
+//! report without sharing a lock on the hot path.
+//!
+//! Bucketing is log-linear (the HdrHistogram scheme): each power-of-two
+//! octave is split into [`SUB`] linear sub-buckets, so the relative width
+//! of any bucket is at most `1/SUB` (~3%). Quantiles come from a
+//! cumulative walk plus linear interpolation inside the final bucket;
+//! the estimate always lands in the same bucket as the exact nearest-rank
+//! value, so its error is bounded by one bucket's width. The all-time
+//! `max` (and `sum`/`count`) are tracked exactly on the side, because
+//! reports promise an exact maximum.
+
+/// Sub-buckets per power-of-two octave (as a power of two).
+const SUB_BITS: u32 = 5;
+/// Sub-buckets per octave; bounds per-bucket relative width to `1/SUB`.
+pub const SUB: usize = 1 << SUB_BITS;
+/// Total bucket count covering the full `u64` nanosecond range.
+pub const BUCKETS: usize = SUB * (64 - SUB_BITS as usize + 1);
+
+/// Bucket index for a nanosecond value. Values below `2*SUB` map to
+/// themselves (exact); above that, the top `SUB_BITS+1` significant bits
+/// select the bucket.
+#[inline]
+fn bucket_index(v: u64) -> usize {
+    if v < SUB as u64 {
+        return v as usize;
+    }
+    let m = 63 - v.leading_zeros(); // m >= SUB_BITS
+    let sub = ((v >> (m - SUB_BITS)) & (SUB as u64 - 1)) as usize;
+    (m - SUB_BITS + 1) as usize * SUB + sub
+}
+
+/// Inclusive lower bound of a bucket.
+#[inline]
+fn bucket_lower(idx: usize) -> u64 {
+    if idx < 2 * SUB {
+        return idx as u64;
+    }
+    let major = idx / SUB; // >= 2
+    let sub = idx % SUB;
+    ((SUB + sub) as u64) << (major - 1)
+}
+
+/// Inclusive upper bound of a bucket.
+#[inline]
+fn bucket_upper(idx: usize) -> u64 {
+    if idx + 1 >= BUCKETS {
+        u64::MAX
+    } else {
+        bucket_lower(idx + 1) - 1
+    }
+}
+
+/// Mergeable log2-bucketed histogram of nanosecond durations.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct Histogram {
+    counts: Vec<u64>, // len BUCKETS, fixed at construction
+    count: u64,
+    sum_ns: u64, // saturating; exact for < ~584 years of total latency
+    max_ns: u64,
+}
+
+impl Default for Histogram {
+    fn default() -> Self {
+        Histogram::new()
+    }
+}
+
+impl Histogram {
+    pub fn new() -> Self {
+        Histogram {
+            counts: vec![0; BUCKETS],
+            count: 0,
+            sum_ns: 0,
+            max_ns: 0,
+        }
+    }
+
+    /// Record one duration in nanoseconds.
+    pub fn record(&mut self, ns: u64) {
+        self.counts[bucket_index(ns)] += 1;
+        self.count += 1;
+        self.sum_ns = self.sum_ns.saturating_add(ns);
+        self.max_ns = self.max_ns.max(ns);
+    }
+
+    /// Fold another histogram into this one (bucket-wise add).
+    pub fn merge(&mut self, other: &Histogram) {
+        for (a, b) in self.counts.iter_mut().zip(&other.counts) {
+            *a += b;
+        }
+        self.count += other.count;
+        self.sum_ns = self.sum_ns.saturating_add(other.sum_ns);
+        self.max_ns = self.max_ns.max(other.max_ns);
+    }
+
+    pub fn count(&self) -> u64 {
+        self.count
+    }
+
+    pub fn sum_ns(&self) -> u64 {
+        self.sum_ns
+    }
+
+    /// Exact all-time maximum recorded value.
+    pub fn max_ns(&self) -> u64 {
+        self.max_ns
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.count == 0
+    }
+
+    /// Nearest-rank quantile estimate in nanoseconds, `q` in [0, 1].
+    ///
+    /// Walks the cumulative counts to the bucket holding rank
+    /// `ceil(q * count)` and interpolates linearly inside it; the result
+    /// is clamped to the exact maximum so `quantile(1.0) == max_ns`.
+    pub fn quantile(&self, q: f64) -> f64 {
+        if self.count == 0 {
+            return 0.0;
+        }
+        let rank = ((q * self.count as f64).ceil() as u64).clamp(1, self.count);
+        let mut cum = 0u64;
+        for (idx, &n) in self.counts.iter().enumerate() {
+            if n == 0 {
+                continue;
+            }
+            if cum + n >= rank {
+                let lo = bucket_lower(idx) as f64;
+                let hi = bucket_upper(idx) as f64 + 1.0; // exclusive end
+                let pos = (rank - cum) as f64 / n as f64;
+                return (lo + (hi - lo) * pos).min(self.max_ns as f64);
+            }
+            cum += n;
+        }
+        self.max_ns as f64
+    }
+
+    /// Non-empty buckets as `(inclusive_upper_ns, cumulative_count)`,
+    /// ascending — the shape Prometheus `_bucket{le=...}` series need.
+    pub fn cumulative_buckets(&self) -> Vec<(u64, u64)> {
+        let mut out = Vec::new();
+        let mut cum = 0u64;
+        for (idx, &n) in self.counts.iter().enumerate() {
+            if n == 0 {
+                continue;
+            }
+            cum += n;
+            out.push((bucket_upper(idx), cum));
+        }
+        out
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::rng::Pcg32;
+
+    #[test]
+    fn bucket_index_boundaries() {
+        // 0 and 1ns land in their own exact buckets; u64::MAX in the last.
+        assert_eq!(bucket_index(0), 0);
+        assert_eq!(bucket_index(1), 1);
+        assert_eq!(bucket_index(u64::MAX), BUCKETS - 1);
+        // every bucket's bounds roundtrip through the index
+        for idx in 0..BUCKETS {
+            assert_eq!(bucket_index(bucket_lower(idx)), idx, "lower of {idx}");
+            assert_eq!(bucket_index(bucket_upper(idx)), idx, "upper of {idx}");
+        }
+        // buckets tile the range with no gaps
+        for idx in 0..BUCKETS - 1 {
+            assert_eq!(bucket_upper(idx) + 1, bucket_lower(idx + 1));
+        }
+        assert_eq!(bucket_upper(BUCKETS - 1), u64::MAX);
+    }
+
+    #[test]
+    fn records_extremes_exactly() {
+        let mut h = Histogram::new();
+        h.record(0);
+        h.record(1);
+        h.record(u64::MAX);
+        assert_eq!(h.count(), 3);
+        assert_eq!(h.max_ns(), u64::MAX);
+        assert_eq!(h.sum_ns(), u64::MAX); // saturated
+        assert!(h.quantile(0.0) <= 1.0); // rank 1 interpolates inside [0,0]
+        assert!(h.quantile(0.34) <= 2.0);
+        assert_eq!(h.quantile(1.0), u64::MAX as f64);
+    }
+
+    #[test]
+    fn merge_is_commutative_and_associative() {
+        let mk = |seed: u64, n: usize| {
+            let mut rng = Pcg32::new(seed);
+            let mut h = Histogram::new();
+            for _ in 0..n {
+                h.record(rng.next_u64() >> (rng.next_u32() % 40));
+            }
+            h
+        };
+        let (a, b, c) = (mk(1, 500), mk(2, 300), mk(3, 700));
+
+        let mut ab = a.clone();
+        ab.merge(&b);
+        let mut ba = b.clone();
+        ba.merge(&a);
+        assert_eq!(ab, ba, "merge must commute");
+
+        let mut ab_c = ab.clone();
+        ab_c.merge(&c);
+        let mut bc = b.clone();
+        bc.merge(&c);
+        let mut a_bc = a.clone();
+        a_bc.merge(&bc);
+        assert_eq!(ab_c, a_bc, "merge must associate");
+        assert_eq!(ab_c.count(), 1500);
+    }
+
+    #[test]
+    fn quantiles_are_monotone_in_q() {
+        let mut rng = Pcg32::new(7);
+        let mut h = Histogram::new();
+        for _ in 0..2000 {
+            h.record(1 + rng.next_u64() % 5_000_000);
+        }
+        let mut prev = -1.0;
+        for i in 0..=100 {
+            let q = i as f64 / 100.0;
+            let v = h.quantile(q);
+            assert!(v >= prev, "quantile({q}) = {v} < {prev}");
+            prev = v;
+        }
+    }
+
+    #[test]
+    fn quantiles_agree_with_nearest_rank_within_one_bucket() {
+        for seed in [11u64, 12, 13] {
+            let mut rng = Pcg32::new(seed);
+            let mut h = Histogram::new();
+            let mut samples = Vec::new();
+            for _ in 0..1000 {
+                // spread over several octaves: 1ns .. ~16ms
+                let v = 1 + (rng.next_u64() % (1u64 << (4 + rng.next_u32() % 20)));
+                samples.push(v);
+                h.record(v);
+            }
+            samples.sort_unstable();
+            for q in [0.01, 0.1, 0.25, 0.5, 0.75, 0.9, 0.99, 0.999] {
+                let rank = ((q * samples.len() as f64).ceil() as usize)
+                    .clamp(1, samples.len());
+                let exact = samples[rank - 1] as f64;
+                let est = h.quantile(q);
+                // one bucket's width: relative 1/SUB above the linear
+                // range, absolute 1 below it (+1 for the exclusive end)
+                let tol = (exact / SUB as f64).max(1.0) + 1.0;
+                assert!(
+                    (est - exact).abs() <= tol,
+                    "seed {seed} q {q}: est {est} exact {exact} tol {tol}"
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn cumulative_buckets_end_at_count() {
+        let mut h = Histogram::new();
+        for v in [5u64, 5, 70, 4096, 1_000_000] {
+            h.record(v);
+        }
+        let b = h.cumulative_buckets();
+        assert!(!b.is_empty());
+        assert_eq!(b.last().unwrap().1, h.count());
+        // cumulative counts and upper bounds both strictly ascend
+        for w in b.windows(2) {
+            assert!(w[0].0 < w[1].0);
+            assert!(w[0].1 <= w[1].1);
+        }
+    }
+}

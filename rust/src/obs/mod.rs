@@ -1,0 +1,33 @@
+//! Observability: histograms, counters, stage timers, Prometheus text.
+//!
+//! Single home for everything the repo uses to see *where time goes*,
+//! mirroring the paper's methodology: FULL-W2V's speedup claims rest on
+//! per-stage accounting (Tables 4-6 attribute the win to quantified
+//! reductions in memory traffic per pipeline stage), so the serving and
+//! training hot paths here carry the same decomposition.
+//!
+//! Layout:
+//!
+//! | module       | provides                                              |
+//! |--------------|-------------------------------------------------------|
+//! | [`hist`]     | constant-memory log2-bucketed latency [`Histogram`]   |
+//! | [`registry`] | process-global named atomic [`Counter`]s/[`Gauge`]s   |
+//! | [`stage`]    | [`StageTimes`] accumulator + [`Span`] lap clock       |
+//! | [`prom`]     | hand-rolled Prometheus text exposition ([`PromWriter`])|
+//! | [`artifact`] | `BENCH_*.json` bench-artifact emitter                 |
+//!
+//! Everything is dependency-free (like `util::json`) and cheap enough to
+//! stay on in production paths: the histogram is a fixed ~15 KB of
+//! buckets, counters are single relaxed atomics, and stage timers are two
+//! monotonic-clock reads per section.
+
+pub mod artifact;
+pub mod hist;
+pub mod prom;
+pub mod registry;
+pub mod stage;
+
+pub use hist::Histogram;
+pub use prom::PromWriter;
+pub use registry::{Counter, Gauge};
+pub use stage::{Span, StageTimes};

@@ -1,0 +1,183 @@
+//! Hand-rolled Prometheus text exposition (no deps, like `util::json`).
+//!
+//! Emits the subset of the text format scrapers actually require:
+//! `# HELP` / `# TYPE` headers once per family, `name{labels} value`
+//! samples, and histograms as cumulative `_bucket{le="..."}` series
+//! terminated by `le="+Inf"` plus `_sum` and `_count`. Durations are
+//! exported in seconds per Prometheus convention; callers pass a scale
+//! factor to convert from their native nanoseconds.
+
+use std::collections::BTreeSet;
+use std::fmt::Write as _;
+
+use super::hist::Histogram;
+
+/// Accumulates one exposition document.
+#[derive(Debug, Default)]
+pub struct PromWriter {
+    out: String,
+    seen: BTreeSet<String>,
+}
+
+/// Prometheus sample values: integers render without a fraction.
+fn num(v: f64) -> String {
+    if v.fract() == 0.0 && v.abs() < 1e15 {
+        format!("{}", v as i64)
+    } else {
+        format!("{v}")
+    }
+}
+
+fn escape(s: &str) -> String {
+    let mut out = String::with_capacity(s.len());
+    for c in s.chars() {
+        match c {
+            '\\' => out.push_str("\\\\"),
+            '"' => out.push_str("\\\""),
+            '\n' => out.push_str("\\n"),
+            c => out.push(c),
+        }
+    }
+    out
+}
+
+impl PromWriter {
+    pub fn new() -> Self {
+        PromWriter::default()
+    }
+
+    fn head(&mut self, name: &str, help: &str, typ: &str) {
+        if self.seen.insert(name.to_string()) {
+            let _ = writeln!(self.out, "# HELP {name} {help}");
+            let _ = writeln!(self.out, "# TYPE {name} {typ}");
+        }
+    }
+
+    fn sample(&mut self, name: &str, labels: &[(&str, &str)], value: &str) {
+        self.out.push_str(name);
+        if !labels.is_empty() {
+            self.out.push('{');
+            for (i, (k, v)) in labels.iter().enumerate() {
+                if i > 0 {
+                    self.out.push(',');
+                }
+                let _ = write!(self.out, "{k}=\"{}\"", escape(v));
+            }
+            self.out.push('}');
+        }
+        let _ = writeln!(self.out, " {value}");
+    }
+
+    pub fn counter(
+        &mut self,
+        name: &str,
+        help: &str,
+        labels: &[(&str, &str)],
+        v: f64,
+    ) {
+        self.head(name, help, "counter");
+        self.sample(name, labels, &num(v));
+    }
+
+    pub fn gauge(
+        &mut self,
+        name: &str,
+        help: &str,
+        labels: &[(&str, &str)],
+        v: f64,
+    ) {
+        self.head(name, help, "gauge");
+        self.sample(name, labels, &num(v));
+    }
+
+    /// Emit a histogram family from a nanosecond [`Histogram`].
+    ///
+    /// `scale` converts recorded nanoseconds into the exported unit
+    /// (`1e-9` for seconds). Empty buckets are skipped — cumulative
+    /// `le` series stay valid as long as bounds ascend and `+Inf` ends
+    /// the list, which they do.
+    pub fn histogram(
+        &mut self,
+        name: &str,
+        help: &str,
+        labels: &[(&str, &str)],
+        hist: &Histogram,
+        scale: f64,
+    ) {
+        self.head(name, help, "histogram");
+        let bucket = format!("{name}_bucket");
+        let mut with_le = |le: &str, cum: u64| {
+            let mut ls: Vec<(&str, &str)> = labels.to_vec();
+            ls.push(("le", le));
+            self.sample(&bucket, &ls, &num(cum as f64));
+        };
+        for (upper_ns, cum) in hist.cumulative_buckets() {
+            with_le(&format!("{}", upper_ns as f64 * scale), cum);
+        }
+        with_le("+Inf", hist.count());
+        self.sample(
+            &format!("{name}_sum"),
+            labels,
+            &num(hist.sum_ns() as f64 * scale),
+        );
+        self.sample(
+            &format!("{name}_count"),
+            labels,
+            &num(hist.count() as f64),
+        );
+    }
+
+    pub fn finish(self) -> String {
+        self.out
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn counters_and_gauges_render() {
+        let mut w = PromWriter::new();
+        w.counter("x_total", "an x", &[], 3.0);
+        w.counter("x_total", "an x", &[("a", "b")], 4.0);
+        w.gauge("g", "a g", &[], 1.5);
+        let t = w.finish();
+        // header appears once even with two series in the family
+        assert_eq!(t.matches("# TYPE x_total counter").count(), 1);
+        assert!(t.contains("x_total 3\n"));
+        assert!(t.contains("x_total{a=\"b\"} 4\n"));
+        assert!(t.contains("# TYPE g gauge"));
+        assert!(t.contains("g 1.5\n"));
+    }
+
+    #[test]
+    fn label_values_escaped() {
+        let mut w = PromWriter::new();
+        w.counter("e_total", "h", &[("p", "a\"b\\c\nd")], 1.0);
+        let t = w.finish();
+        assert!(t.contains("e_total{p=\"a\\\"b\\\\c\\nd\"} 1"));
+    }
+
+    #[test]
+    fn histogram_series_shape() {
+        let mut h = Histogram::new();
+        for ns in [500u64, 1_500, 1_500, 2_000_000] {
+            h.record(ns);
+        }
+        let mut w = PromWriter::new();
+        w.histogram("lat_seconds", "latency", &[("route", "nn")], &h, 1e-9);
+        let t = w.finish();
+        assert!(t.contains("# TYPE lat_seconds histogram"));
+        assert!(t.contains("lat_seconds_bucket{route=\"nn\",le=\"+Inf\"} 4"));
+        assert!(t.contains("lat_seconds_count{route=\"nn\"} 4"));
+        assert!(t.contains("lat_seconds_sum{route=\"nn\"}"));
+        // cumulative counts never decrease across the le series
+        let mut last = 0u64;
+        for line in t.lines().filter(|l| l.starts_with("lat_seconds_bucket")) {
+            let v: u64 = line.rsplit(' ').next().unwrap().parse().unwrap();
+            assert!(v >= last, "non-monotone bucket series: {t}");
+            last = v;
+        }
+    }
+}

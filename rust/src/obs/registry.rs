@@ -1,0 +1,205 @@
+//! Process-global registry of named atomic counters and gauges.
+//!
+//! Names and label sets are `&'static str`, so the registry is bounded by
+//! the set of metric sites compiled into the binary — no per-request
+//! allocation, no cardinality explosions. Handles are `Arc<AtomicU64>`
+//! wrappers: registering the same `(name, labels)` twice returns the same
+//! underlying cell, so call sites can re-register cheaply instead of
+//! caching handles through plumbing.
+//!
+//! The registry renders itself into the Prometheus exposition via
+//! [`render`]; histograms live outside it (they are owned by their
+//! subsystems and snapshotted at scrape time).
+
+use std::collections::BTreeMap;
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::{Arc, Mutex, OnceLock};
+
+use super::prom::PromWriter;
+
+/// Fixed label set attached at registration; `&[]` for none.
+pub type LabelSet = &'static [(&'static str, &'static str)];
+
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+enum Kind {
+    Counter,
+    Gauge,
+}
+
+struct Entry {
+    kind: Kind,
+    help: &'static str,
+    value: Arc<AtomicU64>,
+}
+
+type Map = BTreeMap<(&'static str, LabelSet), Entry>;
+
+fn registry() -> &'static Mutex<Map> {
+    static REGISTRY: OnceLock<Mutex<Map>> = OnceLock::new();
+    REGISTRY.get_or_init(|| Mutex::new(BTreeMap::new()))
+}
+
+fn register(
+    name: &'static str,
+    help: &'static str,
+    labels: LabelSet,
+    kind: Kind,
+) -> Arc<AtomicU64> {
+    let mut map = registry().lock().unwrap();
+    let entry = map.entry((name, labels)).or_insert_with(|| Entry {
+        kind,
+        help,
+        value: Arc::new(AtomicU64::new(0)),
+    });
+    assert_eq!(
+        entry.kind, kind,
+        "metric {name} re-registered with a different kind"
+    );
+    Arc::clone(&entry.value)
+}
+
+/// Monotonically increasing counter.
+#[derive(Clone)]
+pub struct Counter(Arc<AtomicU64>);
+
+impl Counter {
+    pub fn inc(&self) {
+        self.add(1);
+    }
+
+    pub fn add(&self, n: u64) {
+        self.0.fetch_add(n, Ordering::Relaxed);
+    }
+
+    pub fn get(&self) -> u64 {
+        self.0.load(Ordering::Relaxed)
+    }
+}
+
+/// Instantaneous non-negative value.
+#[derive(Clone)]
+pub struct Gauge(Arc<AtomicU64>);
+
+impl Gauge {
+    pub fn set(&self, v: u64) {
+        self.0.store(v, Ordering::Relaxed);
+    }
+
+    pub fn add(&self, n: u64) {
+        self.0.fetch_add(n, Ordering::Relaxed);
+    }
+
+    pub fn sub(&self, n: u64) {
+        // saturating decrement: gauges never wrap below zero
+        let _ = self.0.fetch_update(
+            Ordering::Relaxed,
+            Ordering::Relaxed,
+            |v| Some(v.saturating_sub(n)),
+        );
+    }
+
+    pub fn get(&self) -> u64 {
+        self.0.load(Ordering::Relaxed)
+    }
+}
+
+/// Get-or-register an unlabelled counter.
+pub fn counter(name: &'static str, help: &'static str) -> Counter {
+    counter_with(name, help, &[])
+}
+
+/// Get-or-register a counter with a fixed label set.
+pub fn counter_with(
+    name: &'static str,
+    help: &'static str,
+    labels: LabelSet,
+) -> Counter {
+    Counter(register(name, help, labels, Kind::Counter))
+}
+
+/// Get-or-register an unlabelled gauge.
+pub fn gauge(name: &'static str, help: &'static str) -> Gauge {
+    gauge_with(name, help, &[])
+}
+
+/// Get-or-register a gauge with a fixed label set.
+pub fn gauge_with(
+    name: &'static str,
+    help: &'static str,
+    labels: LabelSet,
+) -> Gauge {
+    Gauge(register(name, help, labels, Kind::Gauge))
+}
+
+/// Render every registered metric into a Prometheus exposition writer.
+pub fn render(w: &mut PromWriter) {
+    let map = registry().lock().unwrap();
+    for ((name, labels), entry) in map.iter() {
+        let v = entry.value.load(Ordering::Relaxed) as f64;
+        match entry.kind {
+            Kind::Counter => w.counter(name, entry.help, labels, v),
+            Kind::Gauge => w.gauge(name, entry.help, labels, v),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn same_name_returns_same_cell() {
+        let a = counter("obs_test_requests_total", "test counter");
+        let b = counter("obs_test_requests_total", "test counter");
+        let before = a.get();
+        b.add(3);
+        a.inc();
+        assert_eq!(a.get(), before + 4);
+        assert_eq!(b.get(), a.get());
+    }
+
+    #[test]
+    fn labels_distinguish_series() {
+        let x = counter_with(
+            "obs_test_labeled_total",
+            "test",
+            &[("route", "x")],
+        );
+        let y = counter_with(
+            "obs_test_labeled_total",
+            "test",
+            &[("route", "y")],
+        );
+        let (bx, by) = (x.get(), y.get());
+        x.inc();
+        assert_eq!(x.get(), bx + 1);
+        assert_eq!(y.get(), by);
+    }
+
+    #[test]
+    fn gauge_saturates_at_zero() {
+        let g = gauge("obs_test_gauge", "test gauge");
+        g.set(2);
+        g.sub(5);
+        assert_eq!(g.get(), 0);
+        g.add(7);
+        assert_eq!(g.get(), 7);
+        g.set(0);
+    }
+
+    #[test]
+    fn renders_registered_series() {
+        let c = counter_with(
+            "obs_test_render_total",
+            "render help",
+            &[("kind", "unit")],
+        );
+        c.inc();
+        let mut w = PromWriter::new();
+        render(&mut w);
+        let text = w.finish();
+        assert!(text.contains("# HELP obs_test_render_total render help"));
+        assert!(text.contains("# TYPE obs_test_render_total counter"));
+        assert!(text.contains("obs_test_render_total{kind=\"unit\"}"));
+    }
+}

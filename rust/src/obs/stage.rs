@@ -1,0 +1,198 @@
+//! Stage timers: decompose a pipeline's wall time into named stages.
+//!
+//! [`StageTimes`] is an index-addressed accumulator over a fixed
+//! `'static` stage-name list (one per pipeline: the serve engine's
+//! queue-wait/batch-fill/... stages, the trainer's
+//! corpus-iteration/context-ring/... stages). Per-worker instances merge
+//! into one report, and because stages are measured as contiguous laps of
+//! a single [`Span`] clock, their sums reconcile with the measured total
+//! by construction — the invariant the reports assert in tests.
+
+use std::time::Instant;
+
+use crate::util::json::{obj, Json};
+use crate::util::tables::{f, Table};
+
+/// Lap clock: `lap_ns()` returns nanoseconds since the previous lap (or
+/// construction) and restarts, so consecutive laps tile the elapsed time
+/// with no gaps.
+#[derive(Debug)]
+pub struct Span {
+    last: Instant,
+}
+
+impl Span {
+    pub fn start() -> Self {
+        Span { last: Instant::now() }
+    }
+
+    pub fn lap_ns(&mut self) -> u64 {
+        let now = Instant::now();
+        let ns = now.duration_since(self.last).as_nanos() as u64;
+        self.last = now;
+        ns
+    }
+}
+
+/// Accumulated nanoseconds per named stage.
+///
+/// `Default` is the empty breakdown (no stages); `merge` lets an empty
+/// instance adopt its peer's stage list, so reports can derive `Default`
+/// and still fold worker-local breakdowns in.
+#[derive(Debug, Clone, Default, PartialEq)]
+pub struct StageTimes {
+    names: &'static [&'static str],
+    nanos: Vec<u64>,
+}
+
+impl StageTimes {
+    pub fn new(names: &'static [&'static str]) -> Self {
+        StageTimes { names, nanos: vec![0; names.len()] }
+    }
+
+    /// Adopt a stage list if still empty (used by lazily-initialised
+    /// owners that derive `Default`).
+    pub fn ensure(&mut self, names: &'static [&'static str]) {
+        if self.names.is_empty() {
+            *self = StageTimes::new(names);
+        }
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.names.is_empty()
+    }
+
+    pub fn add(&mut self, stage: usize, ns: u64) {
+        self.nanos[stage] += ns;
+    }
+
+    pub fn get_ns(&self, stage: usize) -> u64 {
+        self.nanos.get(stage).copied().unwrap_or(0)
+    }
+
+    /// Total across all stages, in nanoseconds.
+    pub fn total_ns(&self) -> u64 {
+        self.nanos.iter().sum()
+    }
+
+    pub fn names(&self) -> &'static [&'static str] {
+        self.names
+    }
+
+    /// Iterate `(name, nanos)` pairs.
+    pub fn iter(&self) -> impl Iterator<Item = (&'static str, u64)> + '_ {
+        self.names.iter().copied().zip(self.nanos.iter().copied())
+    }
+
+    /// Fold another breakdown in. Panics if both are non-empty with
+    /// different stage lists — stage sets are fixed per pipeline.
+    pub fn merge(&mut self, other: &StageTimes) {
+        if other.is_empty() {
+            return;
+        }
+        if self.is_empty() {
+            *self = other.clone();
+            return;
+        }
+        assert_eq!(
+            self.names, other.names,
+            "cannot merge breakdowns with different stage sets"
+        );
+        for (a, b) in self.nanos.iter_mut().zip(&other.nanos) {
+            *a += b;
+        }
+    }
+
+    /// JSON object `{stage_name: seconds}` (additive report field).
+    pub fn to_json(&self) -> Json {
+        obj(self
+            .iter()
+            .map(|(name, ns)| (name, Json::Num(ns as f64 / 1e9)))
+            .collect())
+    }
+
+    /// Human table of the breakdown: seconds and share of the total.
+    pub fn render_table(&self, title: &str) -> String {
+        let total = self.total_ns().max(1) as f64;
+        let mut t = Table::new(title, &["stage", "seconds", "share"]);
+        for (name, ns) in self.iter() {
+            t.row(vec![
+                name.to_string(),
+                f(ns as f64 / 1e9, 4),
+                format!("{:.1}%", 100.0 * ns as f64 / total),
+            ]);
+        }
+        t.render()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    const STAGES: &[&str] = &["a", "b", "c"];
+
+    #[test]
+    fn laps_tile_elapsed_time() {
+        let mut span = Span::start();
+        let mut times = StageTimes::new(STAGES);
+        let begin = Instant::now();
+        for stage in 0..3 {
+            std::thread::sleep(std::time::Duration::from_millis(2));
+            times.add(stage, span.lap_ns());
+        }
+        let wall = begin.elapsed().as_nanos() as u64;
+        let total = times.total_ns();
+        assert!(total >= 3 * 1_000_000, "laps too small: {total}");
+        // contiguous laps cover the wall time up to clock-read jitter
+        assert!(
+            wall.saturating_sub(total) < 2_000_000,
+            "laps {total} vs wall {wall}"
+        );
+    }
+
+    #[test]
+    fn merge_adds_and_empty_adopts() {
+        let mut a = StageTimes::new(STAGES);
+        a.add(0, 10);
+        a.add(2, 5);
+        let mut b = StageTimes::new(STAGES);
+        b.add(0, 1);
+        b.add(1, 2);
+        a.merge(&b);
+        assert_eq!(a.get_ns(0), 11);
+        assert_eq!(a.get_ns(1), 2);
+        assert_eq!(a.get_ns(2), 5);
+        assert_eq!(a.total_ns(), 18);
+
+        let mut empty = StageTimes::default();
+        assert!(empty.is_empty());
+        empty.merge(&a);
+        assert_eq!(empty, a);
+        a.merge(&StageTimes::default()); // no-op
+        assert_eq!(empty, a);
+    }
+
+    #[test]
+    fn json_and_table_shapes() {
+        let mut t = StageTimes::new(STAGES);
+        t.add(0, 1_500_000_000);
+        t.add(1, 500_000_000);
+        let j = t.to_json();
+        assert_eq!(j.get("a").unwrap().as_f64(), Some(1.5));
+        assert_eq!(j.get("b").unwrap().as_f64(), Some(0.5));
+        assert_eq!(j.get("c").unwrap().as_f64(), Some(0.0));
+        let table = t.render_table("stages");
+        assert!(table.contains("== stages =="));
+        assert!(table.contains("75.0%"));
+    }
+
+    #[test]
+    fn ensure_initialises_once() {
+        let mut t = StageTimes::default();
+        t.ensure(STAGES);
+        t.add(1, 7);
+        t.ensure(STAGES); // second call must not reset
+        assert_eq!(t.get_ns(1), 7);
+    }
+}

@@ -14,8 +14,14 @@
 //! and the rows-scanned count is reported so the reuse factor is
 //! measurable ([`ServeReport::rows_loaded_per_query`]).
 //!
-//! Per-request latency (enqueue to reply) and cache traffic are recorded
-//! and summarized as a [`ServeReport`] via [`crate::metrics::LatencyStats`].
+//! Per-request latency (enqueue to reply) is recorded into a
+//! constant-memory [`Histogram`], and the dispatcher decomposes every
+//! batch's wall time into [`SERVE_STAGES`] (queue-wait / batch-fill /
+//! IVF-probe / shard-scan / top-k-merge) measured as contiguous laps of
+//! one clock — so the batch-side stage sums reconcile with the busy time
+//! by construction.  Both are summarized as a [`ServeReport`] via
+//! [`crate::metrics::LatencyStats`], alongside a bounded slow-query log
+//! whose entries carry the request ids the HTTP router propagates.
 
 use super::ann::{
     search_shards_batch, search_shards_batch_ranges, BatchQuery, Neighbor,
@@ -25,12 +31,41 @@ use super::cache::HotCache;
 use super::ivf;
 use super::store::ShardedStore;
 use crate::metrics::LatencyStats;
+use crate::obs::{Histogram, Span, StageTimes};
 use crate::util::json::{obj, Json};
+use std::collections::VecDeque;
 use std::sync::atomic::{AtomicU64, Ordering};
 use std::sync::mpsc::{channel, sync_channel, Receiver, SyncSender};
 use std::sync::{Arc, Mutex};
 use std::thread::JoinHandle;
 use std::time::Instant;
+
+/// Stage names of the per-batch latency decomposition, in pipeline
+/// order.  `queue_wait` is summed per request (time between enqueue and
+/// its batch starting); the other four are dispatcher laps that tile
+/// each batch's processing time, so their sums reconcile with
+/// [`ServeReport::busy_seconds`].
+pub const SERVE_STAGES: &[&str] =
+    &["queue_wait", "batch_fill", "ivf_probe", "shard_scan", "topk_merge"];
+
+const ST_QUEUE_WAIT: usize = 0;
+const ST_BATCH_FILL: usize = 1;
+const ST_IVF_PROBE: usize = 2;
+const ST_SHARD_SCAN: usize = 3;
+const ST_TOPK_MERGE: usize = 4;
+
+/// Entries kept in the slow-query ring (oldest evicted first).
+const SLOW_LOG_CAP: usize = 32;
+
+/// One slow request: everything needed to correlate it with the HTTP
+/// access log (`trace` is the request id `net/router` propagates; `None`
+/// for direct in-process clients).
+#[derive(Debug, Clone)]
+pub struct SlowQuery {
+    pub trace: Option<u64>,
+    pub micros: f64,
+    pub k: usize,
+}
 
 /// Engine tuning knobs.
 #[derive(Debug, Clone)]
@@ -55,6 +90,9 @@ pub struct ServeOptions {
     /// `0` keeps the exact exhaustive scan; a store without an index
     /// (flat v1 export) also falls back to exhaustive.
     pub nprobe: usize,
+    /// Requests slower than this (microseconds, enqueue to reply) land
+    /// in the bounded slow-query log. 0 logs everything (test/debug).
+    pub slow_query_us: u64,
 }
 
 impl Default for ServeOptions {
@@ -67,6 +105,7 @@ impl Default for ServeOptions {
             protected_rows: 512,
             warm_cache: true,
             nprobe: 0,
+            slow_query_us: 10_000,
         }
     }
 }
@@ -85,6 +124,9 @@ struct Request {
     k: usize,
     reply: SyncSender<QueryResponse>,
     enqueued: Instant,
+    /// Request id propagated from the HTTP front-end for slow-query
+    /// correlation; `None` for direct in-process clients.
+    trace: Option<u64>,
 }
 
 /// Channel message: a query, or the engine telling the dispatcher to
@@ -114,7 +156,17 @@ struct BatchJob {
 type WorkerResult = Result<(Vec<TopK>, u64), String>;
 
 struct EngineShared {
-    latencies: Mutex<Vec<u64>>,
+    /// Constant-memory latency distribution (replaces the old unbounded
+    /// sample reservoir): O(1) record under a short lock, exact count /
+    /// sum / max, log2-bucketed quantiles.
+    latency: Mutex<Histogram>,
+    /// Per-stage nanoseconds, indexed by [`SERVE_STAGES`] position.
+    stage_ns: [AtomicU64; 5],
+    /// Dispatcher busy time (sum over batches of first-recv to last
+    /// reply) — what the batch-side stage laps tile.
+    busy_ns: AtomicU64,
+    /// Bounded ring of recent slow queries.
+    slow: Mutex<VecDeque<SlowQuery>>,
     queries: AtomicU64,
     batches: AtomicU64,
     cache_hits: AtomicU64,
@@ -140,7 +192,10 @@ struct EngineShared {
 impl Default for EngineShared {
     fn default() -> Self {
         EngineShared {
-            latencies: Mutex::new(Vec::new()),
+            latency: Mutex::new(Histogram::new()),
+            stage_ns: Default::default(),
+            busy_ns: AtomicU64::new(0),
+            slow: Mutex::new(VecDeque::new()),
             queries: AtomicU64::new(0),
             batches: AtomicU64::new(0),
             cache_hits: AtomicU64::new(0),
@@ -202,6 +257,14 @@ pub struct ServeReport {
     /// overload shows up here instead of as queue-depth latency on
     /// every admitted request.
     pub shed: u64,
+    /// Per-stage latency decomposition ([`SERVE_STAGES`]): `queue_wait`
+    /// sums per-request waits; the other four tile `busy_seconds`.
+    pub stages: StageTimes,
+    /// Dispatcher busy seconds (time actually spent processing batches).
+    pub busy_seconds: f64,
+    /// Most recent slow queries (bounded ring; see
+    /// [`ServeOptions::slow_query_us`]).
+    pub slow: Vec<SlowQuery>,
 }
 
 impl ServeReport {
@@ -270,6 +333,28 @@ impl ServeReport {
                 Json::Num(self.mean_clusters_probed()),
             ),
             ("shed", Json::Num(self.shed as f64)),
+            ("stages", self.stages.to_json()),
+            ("busy_seconds", Json::Num(self.busy_seconds)),
+            (
+                "slow_queries",
+                Json::Arr(
+                    self.slow
+                        .iter()
+                        .map(|s| {
+                            obj(vec![
+                                (
+                                    "trace",
+                                    s.trace
+                                        .map(|t| Json::Num(t as f64))
+                                        .unwrap_or(Json::Null),
+                                ),
+                                ("micros", Json::Num(s.micros)),
+                                ("k", Json::Num(s.k as f64)),
+                            ])
+                        })
+                        .collect(),
+                ),
+            ),
         ])
     }
 
@@ -319,10 +404,20 @@ pub struct QueryClient {
 }
 
 impl QueryClient {
-    fn submit(&self, kind: QueryKind, k: usize) -> Receiver<QueryResponse> {
+    fn submit(
+        &self,
+        kind: QueryKind,
+        k: usize,
+        trace: Option<u64>,
+    ) -> Receiver<QueryResponse> {
         let (rtx, rrx) = sync_channel(1);
-        let req =
-            Request { kind, k, reply: rtx, enqueued: Instant::now() };
+        let req = Request {
+            kind,
+            k,
+            reply: rtx,
+            enqueued: Instant::now(),
+            trace,
+        };
         // a failed send drops `req` (and its reply sender), so the
         // receiver observes a hangup and query_* maps it to an error
         let _ = self.tx.send(Msg::Req(req));
@@ -332,7 +427,18 @@ impl QueryClient {
     /// Asynchronous submit by word id; received results are ranked
     /// neighbors excluding the query word itself.
     pub fn submit_id(&self, id: u32, k: usize) -> Receiver<QueryResponse> {
-        self.submit(QueryKind::ById(id), k)
+        self.submit(QueryKind::ById(id), k, None)
+    }
+
+    /// [`Self::submit_id`] tagged with a request id for slow-query
+    /// correlation (the HTTP router's per-request id).
+    pub fn submit_id_traced(
+        &self,
+        id: u32,
+        k: usize,
+        trace: u64,
+    ) -> Receiver<QueryResponse> {
+        self.submit(QueryKind::ById(id), k, Some(trace))
     }
 
     /// Asynchronous submit of a raw (not necessarily normalized) vector.
@@ -341,7 +447,17 @@ impl QueryClient {
         vector: Vec<f32>,
         k: usize,
     ) -> Receiver<QueryResponse> {
-        self.submit(QueryKind::ByVector(vector), k)
+        self.submit(QueryKind::ByVector(vector), k, None)
+    }
+
+    /// [`Self::submit_vector`] tagged with a request id.
+    pub fn submit_vector_traced(
+        &self,
+        vector: Vec<f32>,
+        k: usize,
+        trace: u64,
+    ) -> Receiver<QueryResponse> {
+        self.submit(QueryKind::ByVector(vector), k, Some(trace))
     }
 
     /// Blocking query by word id.
@@ -489,28 +605,32 @@ impl EngineStats {
         self.store.clone()
     }
 
+    /// Clone of the engine's latency histogram (for the Prometheus
+    /// exposition) — a fixed-size copy under a short lock.
+    pub fn latency_histogram(&self) -> Histogram {
+        self.shared.latency.lock().unwrap().clone()
+    }
+
     /// Snapshot of the metrics so far — see [`ServeEngine::report`].
     pub fn report(&self) -> ServeReport {
-        // bounded snapshot: the reservoir holds up to 2^20 samples and
-        // the dispatcher takes this lock on every batch, so report()
-        // must not clone the whole buffer while holding it.  A strided
-        // subsample of a uniform reservoir is itself uniform (slice
-        // iterators skip in O(1)), so quantiles stay representative at
-        // O(SNAPSHOT_CAP) work and copy under the lock.
-        const SNAPSHOT_CAP: usize = 4096;
-        let samples: Vec<u64> = {
-            let lat = self.shared.latencies.lock().unwrap();
-            let step = lat.len().div_ceil(SNAPSHOT_CAP).max(1);
-            lat.iter().step_by(step).copied().collect()
-        };
+        // the histogram is constant-size, so a report clones it whole
+        // under a short lock (the dispatcher takes the same lock once
+        // per batch) — no subsampling needed, quantiles cover every
+        // request ever recorded
+        let hist = self.latency_histogram();
         let wall = self.shared.window_seconds();
         let queries = self.shared.queries.load(Ordering::Relaxed);
-        let mut latency = LatencyStats::from_nanos(&samples, wall);
-        // the sample buffer is capped (quantiles stay representative);
-        // count and QPS must come from the true totals
+        let mut latency = LatencyStats::from_hist(&hist, wall);
+        // a report taken between a batch's histogram update and its
+        // query-counter update could disagree by one batch; the atomic
+        // counter is the authoritative total
         latency.count = queries;
         latency.qps =
             if wall > 0.0 { queries as f64 / wall } else { 0.0 };
+        let mut stages = StageTimes::new(SERVE_STAGES);
+        for (i, cell) in self.shared.stage_ns.iter().enumerate() {
+            stages.add(i, cell.load(Ordering::Relaxed));
+        }
         ServeReport {
             latency,
             queries,
@@ -541,6 +661,18 @@ impl EngineStats {
                 .clusters_probed
                 .load(Ordering::Relaxed),
             shed: self.shared.shed.load(Ordering::Relaxed),
+            stages,
+            busy_seconds: self.shared.busy_ns.load(Ordering::Relaxed)
+                as f64
+                / 1e9,
+            slow: self
+                .shared
+                .slow
+                .lock()
+                .unwrap()
+                .iter()
+                .cloned()
+                .collect(),
         }
     }
 }
@@ -609,14 +741,11 @@ fn dispatch_loop(
         reply: SyncSender<QueryResponse>,
         enqueued: Instant,
         slot: Result<usize, String>,
+        trace: Option<u64>,
+        k: usize,
     }
 
-    // reservoir sample of request latencies: bounded memory, stays
-    // representative of the whole run (not frozen on the first window)
-    const SAMPLE_CAP: usize = 1 << 20;
-    let mut sample_rng = crate::util::rng::SplitMix64::new(0x5EED_CAFE);
-    let mut lat_seen: u64 = 0;
-
+    let slow_ns = opts.slow_query_us.saturating_mul(1_000);
     let mut warned_no_index = false;
     let mut stopping = false;
     while !stopping {
@@ -626,6 +755,12 @@ fn dispatch_loop(
             Ok(Msg::Shutdown) | Err(_) => break,
         };
         let batch_start_ns = epoch.elapsed().as_nanos() as u64;
+        // stage decomposition: contiguous laps of one clock tile the
+        // batch's processing time, so stage sums reconcile with busy
+        // time by construction
+        let batch_start = Instant::now();
+        let mut span = Span::start();
+        let mut stage = [0u64; 5];
         let mut reqs = vec![first];
         while reqs.len() < batch_max {
             match rx.try_recv() {
@@ -641,7 +776,7 @@ fn dispatch_loop(
         let mut resolved: Vec<ResolvedQuery> = Vec::new();
         let mut pendings: Vec<Pending> = Vec::with_capacity(reqs.len());
         for req in reqs {
-            let Request { kind, k, reply, enqueued } = req;
+            let Request { kind, k, reply, enqueued, trace } = req;
             // a store can never return more than V neighbors; clamping
             // here also bounds every downstream heap allocation against
             // absurd client-supplied k
@@ -653,8 +788,9 @@ fn dispatch_loop(
                 }
                 Err(e) => Err(e),
             };
-            pendings.push(Pending { reply, enqueued, slot });
+            pendings.push(Pending { reply, enqueued, slot, trace, k });
         }
+        stage[ST_BATCH_FILL] += span.lap_ns();
 
         let mut results: Vec<Option<QueryResponse>> = Vec::new();
         if !resolved.is_empty() {
@@ -692,6 +828,7 @@ fn dispatch_loop(
                     }
                 }
             }
+            stage[ST_IVF_PROBE] += span.lap_ns();
             let job = Arc::new(BatchJob { queries: resolved, ranges });
             let mut sent = vec![false; links.len()];
             for (link, s) in links.iter().zip(sent.iter_mut()) {
@@ -704,13 +841,18 @@ fn dispatch_loop(
             // degraded answer
             let mut failure: Option<String> = None;
             let mut batch_rows = 0u64;
+            stage[ST_SHARD_SCAN] += span.lap_ns();
             for (link, s) in links.iter().zip(&sent) {
                 if !*s {
                     failure =
                         Some("worker thread died (job rejected)".into());
                     continue;
                 }
-                match link.result_rx.recv() {
+                // the scan stage is the wait for this worker's result;
+                // folding its partial heaps in is the merge stage
+                let received = link.result_rx.recv();
+                stage[ST_SHARD_SCAN] += span.lap_ns();
+                match received {
                     Ok(Ok((parts, rows))) => {
                         batch_rows += rows;
                         for (m, p) in merged.iter_mut().zip(parts) {
@@ -725,6 +867,7 @@ fn dispatch_loop(
                             Some("worker thread died mid-batch".into());
                     }
                 }
+                stage[ST_TOPK_MERGE] += span.lap_ns();
             }
             results = match failure {
                 None => merged
@@ -744,24 +887,47 @@ fn dispatch_loop(
         // report() taken right after the last reply arrives always
         // includes this batch
         let mut outbox = Vec::with_capacity(pendings.len());
+        let mut slow_entries: Vec<SlowQuery> = Vec::new();
         {
-            let mut lat = shared.latencies.lock().unwrap();
+            let mut lat = shared.latency.lock().unwrap();
             for p in pendings {
                 let response = match p.slot {
                     Ok(i) => results[i].take().expect("one reply per slot"),
                     Err(e) => Err(e),
                 };
+                // queue wait: enqueue to this batch starting (zero for
+                // requests drained mid-fill)
+                stage[ST_QUEUE_WAIT] += batch_start
+                    .saturating_duration_since(p.enqueued)
+                    .as_nanos() as u64;
                 let nanos = p.enqueued.elapsed().as_nanos() as u64;
-                lat_seen += 1;
-                if lat.len() < SAMPLE_CAP {
-                    lat.push(nanos);
-                } else {
-                    let j = (sample_rng.next_u64() % lat_seen) as usize;
-                    if j < SAMPLE_CAP {
-                        lat[j] = nanos;
-                    }
+                lat.record(nanos);
+                if nanos >= slow_ns {
+                    slow_entries.push(SlowQuery {
+                        trace: p.trace,
+                        micros: nanos as f64 / 1e3,
+                        k: p.k,
+                    });
                 }
                 outbox.push((p.reply, response));
+            }
+        }
+        if !slow_entries.is_empty() {
+            let mut slow = shared.slow.lock().unwrap();
+            for entry in slow_entries {
+                crate::log_debug!(
+                    "serve: slow query {:.0}us k={} trace={}",
+                    entry.micros,
+                    entry.k,
+                    entry
+                        .trace
+                        .map(|t| t.to_string())
+                        .unwrap_or_else(|| "-".into()),
+                );
+                if slow.len() == SLOW_LOG_CAP {
+                    slow.pop_front();
+                }
+                slow.push_back(entry);
             }
         }
         shared.queries.fetch_add(outbox.len() as u64, Ordering::Relaxed);
@@ -779,6 +945,18 @@ fn dispatch_loop(
         for (reply, response) in outbox {
             let _ = reply.send(response);
         }
+        // accounting + replies close out the merge stage; publish the
+        // batch's stage laps and independently-measured busy time
+        stage[ST_TOPK_MERGE] += span.lap_ns();
+        for (i, ns) in stage.into_iter().enumerate() {
+            if ns > 0 {
+                shared.stage_ns[i].fetch_add(ns, Ordering::Relaxed);
+            }
+        }
+        shared.busy_ns.fetch_add(
+            batch_start.elapsed().as_nanos() as u64,
+            Ordering::Relaxed,
+        );
     }
 
     drop(links); // workers see job-channel EOF
@@ -913,6 +1091,7 @@ mod tests {
             protected_rows: 4,
             warm_cache: true,
             nprobe: 0,
+            ..ServeOptions::default()
         }
     }
 
@@ -1123,6 +1302,91 @@ mod tests {
         // the handle outlives the engine and still reads the counters
         stats.note_shed();
         assert_eq!(stats.report().shed, 3);
+    }
+
+    /// The stage breakdown's batch-side sums must reconcile with the
+    /// dispatcher's independently-measured busy time: the stages are
+    /// contiguous laps of one clock, so any drift is clock-read jitter.
+    #[test]
+    fn stage_sums_reconcile_with_busy_time() {
+        let (_, dir) = setup("stages", 40, 8);
+        let store =
+            Arc::new(ShardedStore::open(&dir, Precision::Exact).unwrap());
+        let engine = ServeEngine::start(store, opts());
+        let client = engine.client();
+        for i in 0..50u32 {
+            client.query_id(i % 40, 5).unwrap();
+        }
+        drop(client);
+        let report = engine.shutdown();
+        assert_eq!(report.stages.names(), SERVE_STAGES);
+        // batch-side stages (everything but queue_wait) tile busy time
+        let batch_side_ns: u64 = report
+            .stages
+            .iter()
+            .filter(|(name, _)| *name != "queue_wait")
+            .map(|(_, ns)| ns)
+            .sum();
+        let busy_ns = (report.busy_seconds * 1e9) as u64;
+        assert!(busy_ns > 0, "busy time must be recorded");
+        let drift = busy_ns.abs_diff(batch_side_ns);
+        assert!(
+            drift < 2_000_000 || drift * 50 < busy_ns,
+            "stage sums {batch_side_ns}ns vs busy {busy_ns}ns"
+        );
+        // the scan stage does the real work on this path
+        assert!(report.stages.get_ns(ST_SHARD_SCAN) > 0);
+        // stages round-trip through the report JSON
+        let j = report.to_json();
+        let stages = j.get("stages").expect("stages key");
+        for name in SERVE_STAGES {
+            assert!(stages.get(name).is_some(), "missing stage {name}");
+        }
+        assert!(j.get("busy_seconds").is_some());
+    }
+
+    /// With the threshold at zero every query lands in the slow log,
+    /// the ring stays bounded, and trace ids propagate end to end.
+    #[test]
+    fn slow_query_log_is_bounded_and_traced() {
+        let (_, dir) = setup("slowlog", 20, 8);
+        let store =
+            Arc::new(ShardedStore::open(&dir, Precision::Exact).unwrap());
+        let engine = ServeEngine::start(
+            store,
+            ServeOptions { slow_query_us: 0, ..opts() },
+        );
+        let client = engine.client();
+        for i in 0..(SLOW_LOG_CAP as u32 + 10) {
+            let rx = client.submit_id_traced(i % 20, 3, 1000 + i as u64);
+            rx.recv().unwrap().unwrap();
+        }
+        client.query_id(0, 3).unwrap(); // untraced
+        drop(client);
+        let report = engine.shutdown();
+        assert_eq!(report.slow.len(), SLOW_LOG_CAP, "ring stays bounded");
+        // the newest entry is the untraced direct query...
+        assert!(report.slow.last().unwrap().trace.is_none());
+        // ...and the rest carry the propagated ids, newest last
+        let traced = &report.slow[report.slow.len() - 2];
+        assert_eq!(traced.trace, Some(1000 + SLOW_LOG_CAP as u64 + 9));
+        assert!(report.slow.iter().all(|s| s.micros > 0.0 && s.k == 3));
+        let j = report.to_json().to_string();
+        assert!(j.contains("\"slow_queries\""));
+
+        // default threshold: microsecond-scale queries never log
+        let (_, dir2) = setup("slowlog_default", 10, 8);
+        let store2 =
+            Arc::new(ShardedStore::open(&dir2, Precision::Exact).unwrap());
+        let engine2 = ServeEngine::start(store2, opts());
+        let c2 = engine2.client();
+        c2.query_id(1, 2).unwrap();
+        drop(c2);
+        let r2 = engine2.shutdown();
+        assert!(
+            r2.slow.is_empty() || r2.slow[0].micros >= 10_000.0,
+            "fast queries must not spam the slow log"
+        );
     }
 
     #[test]

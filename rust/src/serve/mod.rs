@@ -68,7 +68,7 @@ pub use ann::{
 pub use cache::{CacheStats, HotCache};
 pub use engine::{
     EngineStats, QueryClient, QueryResponse, ServeEngine, ServeOptions,
-    ServeReport,
+    ServeReport, SlowQuery, SERVE_STAGES,
 };
 pub use ivf::{ClusterRange, IvfMeta, ProbePlan};
 pub use store::{

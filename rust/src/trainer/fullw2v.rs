@@ -35,16 +35,21 @@
 //! updates "do not measurably affect convergence"); the quality
 //! integration tests bound the effect.
 
-use super::{hogwild, BaseTrainer, ReuseCounters, ShardCtx, ShardTrainer};
+use super::{
+    hogwild, BaseTrainer, ReuseCounters, ShardCtx, ShardTrainer,
+    ST_CONTEXT_RING, ST_NEGATIVE_BLOCK, TRAIN_STAGES,
+};
 use crate::config::TrainConfig;
 use crate::coordinator::SgnsTrainer;
 use crate::corpus::vocab::Vocab;
 use crate::metrics::EpochReport;
 use crate::model::EmbeddingModel;
+use crate::obs::StageTimes;
 use crate::util::rng::Pcg32;
 use crate::vecops::{axpy, axpy_block, dot, dot_block, sigmoid, softplus};
 use anyhow::Result;
 use std::sync::Arc;
+use std::time::Instant;
 
 pub struct FullW2vTrainer {
     base: BaseTrainer,
@@ -103,6 +108,11 @@ pub struct FullW2vKernel {
     du_center: Vec<f32>, // d
     delta: Vec<f32>,     // d write-back buffer
     reuse: ReuseCounters,
+    /// Time spent in the two cached tiers ([`TRAIN_STAGES`]): ring
+    /// loads/retires under `context_ring`, negative draws/loads and the
+    /// chunk-end delta write-back under `negative_block`.  The Hogwild
+    /// driver books the rest of the kernel's time as `update`.
+    stages: StageTimes,
 }
 
 impl FullW2vKernel {
@@ -163,11 +173,13 @@ impl ShardTrainer for FullW2vKernel {
         let len = sent.len();
         debug_assert!(len >= 2, "driver filters degenerate chunks");
         self.ensure_capacity(d, wf, n_neg);
+        self.stages.ensure(TRAIN_STAGES);
 
         // Chunk-lifetime negatives: drawn once, rows loaded once.  A
         // negative that collides with a center is skipped at use time
         // (word2vec.c's `target == word` rule), not redrawn, so the
         // block stays valid for every window in the chunk.
+        let tick = Instant::now();
         for k in 0..n_neg {
             let g = ctx.negatives.sample(rng);
             self.negs[k] = g;
@@ -175,11 +187,16 @@ impl ShardTrainer for FullW2vKernel {
         }
         self.neg_orig[..n_neg * d].copy_from_slice(&self.neg_cur[..n_neg * d]);
         self.reuse.neg_rows_loaded += n_neg as u64;
+        self.stages
+            .add(ST_NEGATIVE_BLOCK, tick.elapsed().as_nanos() as u64);
 
         // Prime the ring with the first window's rows.
+        let tick = Instant::now();
         for p in 0..=wf.min(len - 1) {
             self.load_slot(ctx, sent, p, cap, d);
         }
+        self.stages
+            .add(ST_CONTEXT_RING, tick.elapsed().as_nanos() as u64);
 
         let mut loss = 0.0f64;
         for t in 0..len {
@@ -187,6 +204,7 @@ impl ShardTrainer for FullW2vKernel {
                 // Slide: the retiring position and the entering one map
                 // to the same ring slot (they differ by exactly cap), so
                 // retire first, then admit.
+                let tick = Instant::now();
                 if t > wf {
                     self.flush_slot(ctx, t - wf - 1, cap, d);
                 }
@@ -194,6 +212,8 @@ impl ShardTrainer for FullW2vKernel {
                 if enter < len {
                     self.load_slot(ctx, sent, enter, cap, d);
                 }
+                self.stages
+                    .add(ST_CONTEXT_RING, tick.elapsed().as_nanos() as u64);
             }
             let center = sent[t];
             let lo = t.saturating_sub(wf);
@@ -312,21 +332,35 @@ impl ShardTrainer for FullW2vKernel {
         }
 
         // Retire the rows still cached in the ring...
+        let tick = Instant::now();
         for p in len.saturating_sub(wf + 1)..len {
             self.flush_slot(ctx, p, cap, d);
         }
+        self.stages
+            .add(ST_CONTEXT_RING, tick.elapsed().as_nanos() as u64);
         // ...and write each chunk-lifetime negative back as one delta.
+        let tick = Instant::now();
         for k in 0..n_neg {
             for j in 0..d {
                 self.delta[j] = self.neg_cur[k * d + j] - self.neg_orig[k * d + j];
             }
             ctx.model.add_syn1_row(self.negs[k], &self.delta[..d]);
         }
+        self.stages
+            .add(ST_NEGATIVE_BLOCK, tick.elapsed().as_nanos() as u64);
         loss
     }
 
     fn reuse(&self) -> ReuseCounters {
         self.reuse
+    }
+
+    fn stage_times(&self) -> Option<StageTimes> {
+        if self.stages.is_empty() {
+            None
+        } else {
+            Some(self.stages.clone())
+        }
     }
 }
 
@@ -383,6 +417,32 @@ mod tests {
         // ... amortized over every window of the chunk: with >= 2-word
         // chunks, at least one use per load, and far more on real chunks
         assert!(rep.neg_row_uses > rep.neg_rows_loaded * 4);
+    }
+
+    /// The kernel's internal tier attribution flows through the driver:
+    /// ring and negative-block stages come back nonzero, the remainder
+    /// lands in `update`, and the four-stage sum still reconciles with
+    /// the workers' summed busy time.
+    #[test]
+    fn stage_times_attribute_cached_tiers() {
+        let (cfg, vocab, sents) = tiny_setup();
+        let total: u64 = sents.iter().map(|s| s.len() as u64).sum();
+        let mut tr = FullW2vTrainer::new(&cfg, &vocab, total);
+        let rep = tr.train_epoch(&sents, 0).unwrap();
+        assert_eq!(rep.stages.names(), TRAIN_STAGES);
+        assert!(rep.stages.get_ns(ST_CONTEXT_RING) > 0, "ring untimed");
+        assert!(rep.stages.get_ns(ST_NEGATIVE_BLOCK) > 0, "negs untimed");
+        assert!(
+            rep.stages.get_ns(crate::trainer::ST_UPDATE) > 0,
+            "update remainder untimed"
+        );
+        let stage_sum = rep.stages.total_ns() as f64 * 1e-9;
+        let drift = (stage_sum - rep.busy_seconds).abs();
+        assert!(
+            drift <= rep.busy_seconds * 0.02 + 1e-3,
+            "stage sum {stage_sum}s vs busy {}s",
+            rep.busy_seconds
+        );
     }
 
     #[test]

@@ -29,9 +29,13 @@
 //!   count they observed, which makes the decay identical to the serial
 //!   walk at one thread and fair-interleaved at N.
 
-use super::{BaseTrainer, ReuseCounters, ShardCtx, ShardTrainer};
+use super::{
+    BaseTrainer, ReuseCounters, ShardCtx, ShardTrainer, ST_CONTEXT_RING,
+    ST_CORPUS_ITERATION, ST_NEGATIVE_BLOCK, ST_UPDATE, TRAIN_STAGES,
+};
 use crate::metrics::EpochReport;
 use crate::model::SharedModel;
+use crate::obs::{Span, StageTimes};
 use crate::util::rng::Pcg32;
 use std::sync::atomic::{AtomicU64, Ordering};
 
@@ -48,6 +52,12 @@ struct Partial {
     words: u64,
     chunks: u64,
     reuse: ReuseCounters,
+    /// This worker's [`TRAIN_STAGES`] decomposition of `busy_ns`.
+    stages: StageTimes,
+    /// Wall time this worker spent inside its shard loop — summed over
+    /// workers it exceeds `EpochReport::seconds` whenever threads > 1,
+    /// which is exactly the parallel-efficiency signal.
+    busy_ns: u64,
 }
 
 /// Assign sentence indices to `shards` worker shards, balancing total
@@ -138,6 +148,14 @@ where
                         let mut rng = worker_rng(seed, epoch, tid);
                         let mut p = Partial::default();
                         let mut kept: Vec<u32> = Vec::new();
+                        // lap clock: everything between kernel calls is
+                        // corpus iteration (sentence walk, subsampling,
+                        // chunking, lr), everything inside is kernel —
+                        // contiguous laps tile the worker's busy time,
+                        // so the stage sums reconcile by construction
+                        let mut span = Span::start();
+                        let mut corpus_ns = 0u64;
+                        let mut kernel_ns = 0u64;
                         for &si in shard {
                             kept.clear();
                             kept.extend_from_slice(&sentences[si]);
@@ -154,13 +172,30 @@ where
                                     Ordering::Relaxed,
                                 );
                                 let lr = schedule.lr_at(seen);
+                                corpus_ns += span.lap_ns();
                                 p.loss +=
                                     kernel.train_chunk(&ctx, c, lr, &mut rng);
+                                kernel_ns += span.lap_ns();
                                 p.words += c.len() as u64;
                                 p.chunks += 1;
                             }
                         }
                         p.reuse = kernel.reuse();
+                        let mut st = StageTimes::new(TRAIN_STAGES);
+                        st.add(ST_CORPUS_ITERATION, corpus_ns);
+                        if let Some(ks) = kernel.stage_times() {
+                            st.merge(&ks);
+                        }
+                        // whatever kernel time the kernel did not claim
+                        // for its cached tiers is the update phase
+                        let claimed = st.get_ns(ST_CONTEXT_RING)
+                            + st.get_ns(ST_NEGATIVE_BLOCK);
+                        st.add(
+                            ST_UPDATE,
+                            kernel_ns.saturating_sub(claimed),
+                        );
+                        p.stages = st;
+                        p.busy_ns = corpus_ns + kernel_ns;
                         p
                     })
                 })
@@ -178,6 +213,8 @@ where
         rep.loss_sum += p.loss;
         rep.words += p.words;
         rep.batches += p.chunks;
+        rep.stages.merge(&p.stages);
+        rep.busy_seconds += p.busy_ns as f64 * 1e-9;
         reuse.merge(p.reuse);
     }
     debug_assert_eq!(
@@ -400,6 +437,41 @@ mod tests {
             "token skew {a}/{b}: shards must balance tokens \
              (contiguous splits gave 156/36)"
         );
+    }
+
+    /// Stage decomposition: an uninstrumented kernel books all kernel
+    /// time as `update`, the lap clock tiles each worker's busy time so
+    /// the stage sum reconciles, and the merged report carries every
+    /// stage key in its JSON.
+    #[test]
+    fn epoch_report_stages_reconcile_with_busy_time() {
+        let (mut base, _vocab) = probe_base(8, 256);
+        base.cfg.threads = 2;
+        let sentences: Vec<Vec<u32>> =
+            (0..8).map(|_| (0..16u32).map(|i| i % 16).collect()).collect();
+        let seen = Mutex::new(Vec::new());
+        let rep = run_epoch(&mut base, &sentences, 0, |_tid| ProbeKernel {
+            seen: &seen,
+        });
+        assert_eq!(rep.stages.names(), TRAIN_STAGES);
+        assert!(rep.busy_seconds > 0.0);
+        let stage_sum = rep.stages.total_ns() as f64 * 1e-9;
+        let drift = (stage_sum - rep.busy_seconds).abs();
+        assert!(
+            drift <= rep.busy_seconds * 0.01 + 1e-3,
+            "stage sum {stage_sum}s vs busy {}s",
+            rep.busy_seconds
+        );
+        // ProbeKernel does not self-instrument: the cached-tier stages
+        // stay zero and its kernel time lands in `update`
+        assert_eq!(rep.stages.get_ns(ST_CONTEXT_RING), 0);
+        assert_eq!(rep.stages.get_ns(ST_NEGATIVE_BLOCK), 0);
+        let j = rep.to_json();
+        let stages = j.get("stages").expect("report JSON carries stages");
+        for s in TRAIN_STAGES {
+            assert!(stages.get(s).is_some(), "missing stage key {s}");
+        }
+        assert!(j.get("busy_seconds").is_some());
     }
 
     #[test]

@@ -49,9 +49,25 @@ use crate::coordinator::SgnsTrainer;
 use crate::corpus::subsample::Subsampler;
 use crate::corpus::vocab::Vocab;
 use crate::model::{EmbeddingModel, SharedModel};
+use crate::obs::StageTimes;
 use crate::sampler::unigram::UnigramTable;
 use crate::util::rng::Pcg32;
 use anyhow::{anyhow, Result};
+
+/// The stages every CPU epoch decomposes into — the observability
+/// counterpart of the paper's Tables 4–6 memory-traffic breakdown.
+/// `corpus_iteration` is driver-side work (subsampling, chunking, lr);
+/// `context_ring` and `negative_block` are the two cached reuse tiers
+/// a self-instrumenting kernel attributes internally; `update` is the
+/// rest of the kernel (logits, gradients, scatters).  Indexed by the
+/// `ST_*` constants below; [`hogwild::run_epoch`] merges per-worker
+/// [`StageTimes`] into [`crate::metrics::EpochReport::stages`].
+pub const TRAIN_STAGES: &[&str] =
+    &["corpus_iteration", "context_ring", "negative_block", "update"];
+pub const ST_CORPUS_ITERATION: usize = 0;
+pub const ST_CONTEXT_RING: usize = 1;
+pub const ST_NEGATIVE_BLOCK: usize = 2;
+pub const ST_UPDATE: usize = 3;
 
 /// Shared scaffolding for the CPU trainers: the model plus the
 /// corpus-side tables and the lr schedule.  (Moved here from
@@ -109,6 +125,14 @@ pub trait ShardTrainer {
     /// Cumulative negative-row traffic since construction.
     fn reuse(&self) -> ReuseCounters {
         ReuseCounters::default()
+    }
+
+    /// Per-stage time the kernel attributes internally (the
+    /// [`TRAIN_STAGES`] ring and negative-block tiers).  `None` for
+    /// kernels that do not self-instrument — the driver then books all
+    /// kernel time as `update`.
+    fn stage_times(&self) -> Option<StageTimes> {
+        None
     }
 }
 

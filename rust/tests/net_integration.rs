@@ -51,6 +51,7 @@ fn engine_opts() -> ServeOptions {
         protected_rows: 4,
         warm_cache: true,
         nprobe: 0,
+        ..ServeOptions::default()
     }
 }
 
@@ -240,6 +241,120 @@ fn healthz_stats_and_error_routes() {
 
     let report = server.stop();
     assert!(report.queries >= 1);
+}
+
+/// `GET /metrics` emits valid Prometheus text: every sample line parses
+/// as `name{labels} value`, the serve/http counter families are present
+/// with plausible values, and histogram `_bucket` series are cumulative,
+/// monotone, and terminated by `le="+Inf"` agreeing with `_count`.
+#[test]
+fn metrics_endpoint_emits_valid_prometheus_text() {
+    let server = start_server(
+        "metrics",
+        Precision::Exact,
+        engine_opts(),
+        NetOptions::default(),
+    );
+    let addr = server.local_addr().to_string();
+    for id in [1.0, 2.0, 3.0] {
+        let (status, _) = post_nn(&addr, obj(vec![("id", Json::Num(id))]));
+        assert_eq!(status, 200);
+    }
+
+    let (status, body) = simple_request(&addr, "GET", "/metrics", None).unwrap();
+    assert_eq!(status, 200);
+    let text = String::from_utf8(body).unwrap();
+
+    // every non-comment line is `name{labels} value` with a numeric value
+    let sample = |line: &str| -> (String, f64) {
+        let (name, value) = line.rsplit_once(' ')
+            .unwrap_or_else(|| panic!("malformed sample line: {line}"));
+        let v: f64 = value
+            .parse()
+            .unwrap_or_else(|_| panic!("non-numeric value: {line}"));
+        (name.to_string(), v)
+    };
+    let samples: Vec<(String, f64)> = text
+        .lines()
+        .filter(|l| !l.is_empty() && !l.starts_with('#'))
+        .map(sample)
+        .collect();
+    assert!(!samples.is_empty(), "metrics body has samples: {text}");
+    let value_of = |name: &str| -> Option<f64> {
+        samples.iter().find(|(n, _)| n == name).map(|&(_, v)| v)
+    };
+
+    // counter families from both layers, with plausible values
+    let served = value_of("fullw2v_serve_queries_total")
+        .unwrap_or_else(|| panic!("missing serve queries counter: {text}"));
+    assert!(served >= 3.0, "three nn queries counted: {served}");
+    let http_nn = value_of("fullw2v_http_requests_total{route=\"nn\"}")
+        .unwrap_or_else(|| panic!("missing per-route http counter: {text}"));
+    assert!(http_nn >= 3.0, "three /v1/nn requests counted: {http_nn}");
+    for stage in
+        ["queue_wait", "batch_fill", "ivf_probe", "shard_scan", "topk_merge"]
+    {
+        let name =
+            format!("fullw2v_serve_stage_seconds_total{{stage=\"{stage}\"}}");
+        assert!(
+            value_of(&name).is_some(),
+            "stage decomposition missing {name}: {text}"
+        );
+    }
+    // every sample family carries HELP/TYPE headers
+    for family in [
+        "fullw2v_serve_queries_total",
+        "fullw2v_http_requests_total",
+        "fullw2v_serve_request_duration_seconds",
+        "fullw2v_http_request_duration_seconds",
+    ] {
+        assert!(text.contains(&format!("# TYPE {family} ")), "{family}");
+        assert!(text.contains(&format!("# HELP {family} ")), "{family}");
+    }
+
+    // histogram shape: cumulative monotone buckets, +Inf terminator
+    // agreeing with _count, for both the engine-side and http-side
+    // latency families (http filtered to the nn route's series)
+    for (family, label) in [
+        ("fullw2v_serve_request_duration_seconds", ""),
+        ("fullw2v_http_request_duration_seconds", "route=\"nn\""),
+    ] {
+        let buckets: Vec<&(String, f64)> = samples
+            .iter()
+            .filter(|(n, _)| {
+                n.starts_with(&format!("{family}_bucket{{"))
+                    && n.contains(label)
+            })
+            .collect();
+        assert!(!buckets.is_empty(), "{family} has bucket series: {text}");
+        let mut last = -1.0f64;
+        for (name, v) in &buckets {
+            assert!(*v >= last, "non-monotone {name}: {text}");
+            last = *v;
+        }
+        let (inf_name, inf_v) = buckets.last().unwrap();
+        assert!(
+            inf_name.contains("le=\"+Inf\""),
+            "+Inf must terminate the series: {inf_name}"
+        );
+        let count_name = if label.is_empty() {
+            format!("{family}_count")
+        } else {
+            format!("{family}_count{{{label}}}")
+        };
+        assert_eq!(
+            value_of(&count_name),
+            Some(*inf_v),
+            "{family}: _count agrees with the +Inf bucket"
+        );
+        assert!(value_of(&format!(
+            "{family}_sum{}",
+            if label.is_empty() { String::new() } else { format!("{{{label}}}") }
+        ))
+        .is_some());
+    }
+
+    server.stop();
 }
 
 /// Raw-socket protocol abuse: the parser's 400/413/431 paths over a real
