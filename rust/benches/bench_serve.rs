@@ -15,6 +15,7 @@
 //! quantiles, so CI can upload the perf trajectory across commits.
 
 use fullw2v::corpus::vocab::Vocab;
+use fullw2v::memmodel::cpu;
 use fullw2v::model::EmbeddingModel;
 use fullw2v::obs::artifact;
 use fullw2v::serve::{
@@ -24,6 +25,7 @@ use fullw2v::serve::{
 use fullw2v::util::benchkit::{banner, bench};
 use fullw2v::util::json::{obj, Json};
 use fullw2v::util::tables::{f, Table};
+use fullw2v::vecops;
 use std::path::PathBuf;
 use std::sync::Arc;
 use std::time::Instant;
@@ -81,6 +83,9 @@ fn main() {
     let queries: usize =
         arg("--queries").and_then(|v| v.parse().ok()).unwrap_or(2000);
     let artifact_path = arg("--artifact").map(PathBuf::from);
+    let simd = vecops::select_simd(arg("--simd").as_deref())
+        .expect("valid --simd / FULLW2V_SIMD level");
+    println!("simd: {} (source: {})", simd.level, simd.source);
 
     let vocab = Vocab::from_counts(
         (0..rows).map(|i| (format!("w{i:05}"), (rows - i) as u64 + 1)),
@@ -354,6 +359,36 @@ fn main() {
     drop(client);
     let final_report = engine.shutdown();
 
+    // --- CPU roofline at the active SIMD level (the curve the serving
+    // scan kernels are judged against; bench_throughput sweeps every
+    // level, here one level keeps the serve run cheap) ---
+    let spec = cpu::CpuSpec::detect();
+    let measures = cpu::measure_kernels(
+        &spec,
+        simd.level,
+        cpu::DEFAULT_ROWS,
+        cpu::DEFAULT_DIM,
+    )
+    .expect("active level measures");
+    println!(
+        "\ncpu roofline ({} @ {:.1} GHz {}, {:.1} GB/s {}):",
+        simd.level,
+        spec.clock_ghz,
+        spec.clock_source,
+        spec.mem_bw_gbs,
+        spec.bw_source
+    );
+    for m in &measures {
+        println!(
+            "  {:8} AI {:>5.2}  {:>7.2} GF/s  ceiling {:>7.2}  achieved {:>4.0}%",
+            m.kernel,
+            m.ai,
+            m.gflops,
+            m.ceiling_gflops,
+            100.0 * m.achieved_frac
+        );
+    }
+
     if let Some(path) = artifact_path {
         artifact::emit(
             &path,
@@ -362,6 +397,8 @@ fn main() {
                 ("rows", Json::Num(rows as f64)),
                 ("dim", Json::Num(dim as f64)),
                 ("queries", Json::Num(queries as f64)),
+                ("simd", Json::Str(simd.level.name().to_string())),
+                ("simd_source", Json::Str(simd.source.to_string())),
             ]),
             vec![
                 ("shards_sweep", Json::Arr(shards_rows)),
@@ -373,6 +410,7 @@ fn main() {
                 // (default-options, exact, 4-shard) engine's run
                 ("stages", final_report.stages.to_json()),
                 ("latency", final_report.latency.to_json()),
+                ("roofline", cpu::roofline_json(&spec, &measures)),
             ],
         )
         .expect("writing bench artifact");

@@ -26,10 +26,12 @@
 
 use fullw2v::config::TrainConfig;
 use fullw2v::corpus::synthetic::SyntheticSpec;
+use fullw2v::memmodel::cpu;
 use fullw2v::obs::artifact;
 use fullw2v::util::benchkit::banner;
 use fullw2v::util::json::{obj, Json};
 use fullw2v::util::tables::{f, Table};
+use fullw2v::vecops::{self, SimdLevel};
 use fullw2v::workbench::{have_artifacts, Workbench};
 use std::path::PathBuf;
 
@@ -48,13 +50,84 @@ fn main() {
         arg("--words").and_then(|v| v.parse().ok()).unwrap_or(50_000);
     let corpus = arg("--corpus").unwrap_or_else(|| "text8".into());
     let artifact_path = arg("--artifact").map(PathBuf::from);
+    let simd = vecops::select_simd(arg("--simd").as_deref())
+        .expect("valid --simd / FULLW2V_SIMD level");
+    println!("simd: {} (source: {})", simd.level, simd.source);
 
-    cpu_thread_scaling(words, artifact_path);
+    let roofline = cpu_roofline();
+    cpu_thread_scaling(words, artifact_path, roofline);
     pjrt_variants(words, &corpus);
 }
 
+/// CPU roofline: run every vecops kernel at scalar and at each
+/// available SIMD level over a DRAM-resident working set, and judge
+/// achieved GFLOP/s against the per-level roofline ceiling — the CPU
+/// edition of the paper's Figure 1.  Returns the `"roofline"` artifact
+/// section.
+fn cpu_roofline() -> Json {
+    let spec = cpu::CpuSpec::detect();
+    println!(
+        "\ncpu roofline: {} cores, {:.1} GHz ({}), {:.1} GB/s ({})",
+        spec.cores,
+        spec.clock_ghz,
+        spec.clock_source,
+        spec.mem_bw_gbs,
+        spec.bw_source
+    );
+    let mut t = Table::new(
+        "vecops vs roofline (64Ki x 128 rows, single core)",
+        &["kernel", "simd", "AI", "GF/s", "ceiling", "achieved"],
+    );
+    let mut all = Vec::new();
+    for level in vecops::available_levels() {
+        let ms = cpu::measure_kernels(
+            &spec,
+            level,
+            cpu::DEFAULT_ROWS,
+            cpu::DEFAULT_DIM,
+        )
+        .expect("available level measures");
+        for m in &ms {
+            t.row(vec![
+                m.kernel.to_string(),
+                level.name().to_string(),
+                f(m.ai, 2),
+                f(m.gflops, 2),
+                f(m.ceiling_gflops, 2),
+                format!("{:.0}%", 100.0 * m.achieved_frac),
+            ]);
+        }
+        all.extend(ms);
+    }
+    println!("{}", t.render());
+
+    // The point of the explicit paths: where AVX2 exists, the widening
+    // int8 dot and the f32 query tile must beat the scalar-forced build.
+    if SimdLevel::Avx2.available() {
+        let gf = |kernel: &str, level: SimdLevel| {
+            all.iter()
+                .find(|m| m.kernel == kernel && m.level == level)
+                .map(|m| m.gflops)
+                .expect("measured kernel")
+        };
+        for kernel in ["dot_i8", "tile_f32"] {
+            let s = gf(kernel, SimdLevel::Scalar);
+            let v = gf(kernel, SimdLevel::Avx2);
+            assert!(
+                v > s,
+                "{kernel}: avx2 ({v:.2} GF/s) must beat scalar ({s:.2} GF/s)"
+            );
+        }
+    }
+    cpu::roofline_json(&spec, &all)
+}
+
 /// Section 1: the Hogwild training layer, words/sec x threads x impl.
-fn cpu_thread_scaling(words: u64, artifact_path: Option<PathBuf>) {
+fn cpu_thread_scaling(
+    words: u64,
+    artifact_path: Option<PathBuf>,
+    roofline: Json,
+) {
     let spec = {
         let mut s = SyntheticSpec::text8_mini();
         s.total_words = words;
@@ -136,12 +209,15 @@ fn cpu_thread_scaling(words: u64, artifact_path: Option<PathBuf>) {
     );
 
     if let Some(path) = artifact_path {
+        let simd = vecops::simd_selection();
         artifact::emit(
             &path,
             "bench_throughput",
             obj(vec![
                 ("words", Json::Num(words as f64)),
                 ("vocab", Json::Num(wb.vocab.len() as f64)),
+                ("simd", Json::Str(simd.level.name().to_string())),
+                ("simd_source", Json::Str(simd.source.to_string())),
                 (
                     "thread_counts",
                     Json::Arr(
@@ -158,6 +234,7 @@ fn cpu_thread_scaling(words: u64, artifact_path: Option<PathBuf>) {
                     "speedup_fullw2v_t4_vs_mikolov_t1",
                     Json::Num(fullw2v_t4 / mikolov_serial.max(1e-9)),
                 ),
+                ("roofline", roofline),
             ],
         )
         .expect("writing bench artifact");

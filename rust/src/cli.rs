@@ -11,10 +11,11 @@
 //!   manifest     list AOT executables
 //!
 //! Global flags: -c/--config FILE, -s/--set section.key=value (repeat),
-//! -v/--verbose, -q/--quiet.
+//! -v/--verbose, -q/--quiet, --simd auto|scalar|avx2|avx512|neon.
 
 use crate::config::Config;
 use crate::util::log::{self, Level};
+use crate::vecops::SimdSelection;
 use anyhow::{anyhow, bail, Result};
 
 /// Parsed invocation.
@@ -22,6 +23,10 @@ use anyhow::{anyhow, bail, Result};
 pub struct Cli {
     pub command: Command,
     pub config: Config,
+    /// The SIMD level the process runs at, resolved at parse time
+    /// (`--simd` > `FULLW2V_SIMD` > auto-detect) so every command gets
+    /// the fast vecops paths with no further wiring.
+    pub simd: SimdSelection,
 }
 
 #[derive(Debug, Clone, PartialEq)]
@@ -121,13 +126,19 @@ FLAGS:
   -c, --config FILE          TOML config file
   -s, --set section.key=val  config override (repeatable)
   -v, --verbose              debug logging (adds per-stage time tables
-                             to train / serve --queries reports)
+                             to train / serve --queries reports, and
+                             logs the selected SIMD level)
   -q, --quiet                errors only
+  --simd LEVEL               auto|scalar|avx2|avx512|neon — force the
+                             vecops kernel level (default: auto-detect;
+                             unavailable levels are a hard error; every
+                             level is bit-identical to scalar)
 
 ENVIRONMENT:
   FULLW2V_LOG         error|warn|info|debug|trace (same as -v/-q)
   FULLW2V_LOG_FORMAT  text|json — json emits one JSON object per log
                       line (request logs carry req_id)
+  FULLW2V_SIMD        same values as --simd (the flag wins)
 
 Benches accept --artifact PATH to persist a BENCH_*.json snapshot
 (schema 1: git_rev, config, table rows, stage breakdowns, latency
@@ -159,7 +170,7 @@ pub fn parse(args: &[String]) -> Result<Cli> {
             "--corpus" | "--synthetic" | "--out" | "--model" | "--pairs"
             | "--word" | "--k" | "--spec" | "--store" | "--queries"
             | "--shards" | "--batch" | "--clusters" | "--nprobe"
-            | "--impl" | "--threads" | "--listen" => {
+            | "--impl" | "--threads" | "--listen" | "--simd" => {
                 let key = a.trim_start_matches('-').to_string();
                 opts.push((key, take_value(&mut i)?));
             }
@@ -296,7 +307,12 @@ pub fn parse(args: &[String]) -> Result<Cli> {
         "help" | "--help" => Command::Help,
         other => bail!("unknown command '{other}'\n{USAGE}"),
     };
-    Ok(Cli { command, config })
+    // Resolve (and force) the process-wide SIMD level now, so a bad
+    // `--simd`/`FULLW2V_SIMD` value is a clean CLI error instead of a
+    // mid-run panic at first kernel use.
+    let simd = crate::vecops::select_simd(get("simd").as_deref())
+        .map_err(|e| anyhow!("--simd: {e}"))?;
+    Ok(Cli { command, config, simd })
 }
 
 #[cfg(test)]
@@ -579,6 +595,39 @@ mod tests {
             "train", "--synthetic", "tiny", "--threads", "four"
         ])
         .is_err());
+    }
+
+    #[test]
+    fn simd_flag_parses_and_validates() {
+        use crate::vecops::{self, SimdLevel};
+        // Lib tests share the process-wide dispatch table, so only
+        // force `scalar` here (bit-identical to every other level) and
+        // restore the prior selection afterwards.
+        let before = vecops::active().level();
+        let cli = p(&["train", "--synthetic", "tiny", "--simd", "scalar"])
+            .unwrap();
+        assert_eq!(cli.simd.level, SimdLevel::Scalar);
+        assert_eq!(cli.simd.source, "--simd");
+        vecops::force_level(before).unwrap();
+
+        // bad values error before anything is forced
+        let err = p(&["train", "--synthetic", "tiny", "--simd", "sse9"])
+            .unwrap_err()
+            .to_string();
+        assert!(err.contains("unknown simd level"), "{err}");
+        // forcing a level this host lacks is a hard error
+        for l in SimdLevel::ALL {
+            if !l.available() {
+                let err =
+                    p(&["train", "--synthetic", "tiny", "--simd", l.name()])
+                        .unwrap_err()
+                        .to_string();
+                assert!(err.contains("not available"), "{err}");
+            }
+        }
+        // every command resolves a selection even without the flag
+        let cli = p(&["gpusim"]).unwrap();
+        assert!(cli.simd.level.available());
     }
 
     #[test]

@@ -1,4 +1,31 @@
-//! Architecture descriptors: the paper's Table 2 platforms.
+//! Architecture descriptors: the paper's Table 2 platforms, plus the
+//! device-agnostic [`Roofline`] model they (and the CPU model in
+//! `memmodel::cpu`) share.
+
+/// A roofline (Figure 1): peak compute rate plus memory bandwidth,
+/// which together bound attainable FLOP/s at any arithmetic intensity.
+/// Shared by the GPU [`ArchSpec`]s and the CPU spec in
+/// `crate::memmodel::cpu`, so kernels on either side are judged by the
+/// same curve.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct Roofline {
+    pub peak_gflops: f64,
+    pub mem_bw_gbs: f64,
+}
+
+impl Roofline {
+    /// Knee: FLOP/byte where compute- and memory-bound meet (Figure
+    /// 1's dotted line).
+    pub fn knee(&self) -> f64 {
+        self.peak_gflops / self.mem_bw_gbs
+    }
+
+    /// Attainable GFLOP/s at a given arithmetic intensity (Figure 1's
+    /// solid roofline boundary).
+    pub fn attainable_gflops(&self, ai: f64) -> f64 {
+        self.peak_gflops.min(ai * self.mem_bw_gbs)
+    }
+}
 
 /// One GPU architecture's modeling parameters.  Specs not in Table 2
 /// (latencies, L2 size, register file) use the vendor's published values.
@@ -95,16 +122,24 @@ impl ArchSpec {
         vec![Self::v100(), Self::titan_xp(), Self::p100()]
     }
 
+    /// This device's roofline curve.
+    pub fn roofline(&self) -> Roofline {
+        Roofline {
+            peak_gflops: self.peak_tflops * 1e3,
+            mem_bw_gbs: self.mem_bw_gbs,
+        }
+    }
+
     /// Roofline knee: FLOP/byte where compute- and memory-bound meet
     /// (Figure 1's dotted line).
     pub fn roofline_knee(&self) -> f64 {
-        self.peak_tflops * 1e12 / (self.mem_bw_gbs * 1e9)
+        self.roofline().knee()
     }
 
     /// Attainable GFLOP/s at a given arithmetic intensity (Figure 1's
     /// solid roofline boundary).
     pub fn roofline_gflops(&self, ai: f64) -> f64 {
-        (self.peak_tflops * 1e3).min(ai * self.mem_bw_gbs)
+        self.roofline().attainable_gflops(ai)
     }
 }
 
@@ -135,6 +170,22 @@ mod tests {
         assert!((v.roofline_gflops(1.0) - 900.0).abs() < 1.0);
         // compute-bound region flat at peak
         assert!((v.roofline_gflops(100.0) - 14_000.0).abs() < 1.0);
+    }
+
+    #[test]
+    fn shared_roofline_struct_matches_legacy_methods() {
+        for a in ArchSpec::all() {
+            let r = a.roofline();
+            assert_eq!(r.knee(), a.roofline_knee(), "{}", a.name);
+            for ai in [0.05, 0.25, 2.0, 8.0, 100.0] {
+                assert_eq!(
+                    r.attainable_gflops(ai),
+                    a.roofline_gflops(ai),
+                    "{} ai={ai}",
+                    a.name
+                );
+            }
+        }
     }
 
     #[test]

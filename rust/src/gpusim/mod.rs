@@ -22,7 +22,7 @@ pub mod arch;
 pub mod occupancy;
 pub mod pipeline;
 
-pub use arch::ArchSpec;
+pub use arch::{ArchSpec, Roofline};
 pub use occupancy::{occupancy, KernelProfile, OccupancyReport};
 pub use pipeline::{simulate, SimReport};
 

@@ -40,6 +40,14 @@ fn spec_by_name(name: &str) -> Result<SyntheticSpec> {
 }
 
 fn run(cli: Cli) -> Result<()> {
+    // visible under -v: which vecops kernel table this process runs
+    log::log(
+        log::Level::Debug,
+        format_args!(
+            "simd: {} (source: {})",
+            cli.simd.level, cli.simd.source
+        ),
+    );
     match cli.command {
         Command::Help => {
             println!("{}", cli::USAGE);
@@ -76,6 +84,41 @@ fn run(cli: Cli) -> Result<()> {
             println!(
                 "(full tables: cargo run --release --example gpusim_report)"
             );
+            // The CPU side of the same Figure 1 argument: measure the
+            // vecops kernels on this host and judge them against the
+            // roofline at the active SIMD level.
+            use fullw2v::memmodel::cpu;
+            let spec = cpu::CpuSpec::detect();
+            let level = cli.simd.level;
+            println!(
+                "\ncpu roofline ({}, simd {} via {}, {:.1} GHz {}, \
+                 {:.1} GB/s {}):",
+                std::env::consts::ARCH,
+                level,
+                cli.simd.source,
+                spec.clock_ghz,
+                spec.clock_source,
+                spec.mem_bw_gbs,
+                spec.bw_source,
+            );
+            let measures = cpu::measure_kernels(
+                &spec,
+                level,
+                cpu::DEFAULT_ROWS,
+                cpu::DEFAULT_DIM,
+            )
+            .map_err(anyhow::Error::msg)?;
+            for m in &measures {
+                println!(
+                    "  {:8} AI {:>5.2}  {:>7.2} GF/s  ceiling {:>7.2}  \
+                     achieved {:>5.1}%",
+                    m.kernel,
+                    m.ai,
+                    m.gflops,
+                    m.ceiling_gflops,
+                    100.0 * m.achieved_frac
+                );
+            }
             Ok(())
         }
         Command::GenCorpus { spec, out } => {

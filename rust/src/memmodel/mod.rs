@@ -14,6 +14,13 @@
 //! Absolute bytes depend on the corpus; the reproduction target is the
 //! *shape*: per-level ordering of implementations and reduction factors
 //! (FULL-W2V cutting ~90% of total demand, Section 5.3.1).
+//!
+//! The [`cpu`] submodule applies the same Figure 1 roofline discipline
+//! to this host: per-`vecops`-kernel arithmetic intensity, measured or
+//! configured memory bandwidth, and achieved-vs-ceiling fractions that
+//! the benches embed in their `BENCH_*.json` artifacts.
+
+pub mod cpu;
 
 use crate::corpus::vocab::Vocab;
 

@@ -215,16 +215,13 @@ pub fn normalize_rows_in_place(rows: &mut [f32], dim: usize) {
     }
 }
 
-/// Cosine similarity of two equal-length vectors.
+/// Cosine similarity of two equal-length vectors.  The three inner
+/// products route through [`crate::vecops::dot_f64`], so evaluation's
+/// hot vocab scans pick up the unrolled/SIMD dispatch paths.
 pub fn cosine(a: &[f32], b: &[f32]) -> f64 {
-    let mut dot = 0.0f64;
-    let mut na = 0.0f64;
-    let mut nb = 0.0f64;
-    for (x, y) in a.iter().zip(b) {
-        dot += (*x as f64) * (*y as f64);
-        na += (*x as f64) * (*x as f64);
-        nb += (*y as f64) * (*y as f64);
-    }
+    let dot = crate::vecops::dot_f64(a, b);
+    let na = crate::vecops::dot_f64(a, a);
+    let nb = crate::vecops::dot_f64(b, b);
     if na == 0.0 || nb == 0.0 {
         0.0
     } else {

@@ -1,0 +1,626 @@
+//! Runtime SIMD dispatch: one table of kernel pointers, selected once
+//! at startup by feature detection (or forced via `--simd` /
+//! `FULLW2V_SIMD`).
+//!
+//! The contract: [`super::scalar`] is the semantic definition of every
+//! kernel, and each SIMD backend must be **bit-identical** to it — not
+//! merely close — so that dispatch level is unobservable to callers
+//! (rankings, ties, stored scores, reproducible training runs).  That
+//! holds because all backends share the scalar accumulation *shape*:
+//! 8-lane f32 chunk accumulators reduced by the one shared
+//! `scalar::reduce`, no FMA anywhere (a fused multiply-add rounds once
+//! instead of twice and would diverge), and widening conversions
+//! (i8 -> f32, f32 -> f64) that are exact by IEEE-754.
+//!
+//! Selection order: `--simd` flag > `FULLW2V_SIMD` env > runtime
+//! detection (best of AVX-512 > AVX2 > NEON > scalar).  Forcing a level
+//! the host lacks is a hard error; because every level is bit-identical,
+//! re-forcing mid-process (benches and tests do this) is safe.
+
+use std::sync::atomic::{AtomicU8, Ordering};
+
+use super::{scalar, Q_TILE};
+
+/// A dispatchable kernel level.  All variants exist on every
+/// architecture (so CLI/env parsing is portable); availability is a
+/// runtime property of the host.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum SimdLevel {
+    /// The unrolled scalar reference kernels (always available).
+    Scalar,
+    /// x86-64 AVX2: 8-lane f32, widening int8 dot.
+    Avx2,
+    /// x86-64 AVX-512F: AVX2 dot bodies (the single-accumulator chain
+    /// pins the width), 16-lane `axpy`, query-paired 512-bit tiles.
+    Avx512,
+    /// aarch64 NEON: 2x4-lane f32 (lane halves mirror the scalar
+    /// accumulator array), widening int8 dot.
+    Neon,
+}
+
+impl SimdLevel {
+    pub const ALL: [SimdLevel; 4] = [
+        SimdLevel::Scalar,
+        SimdLevel::Avx2,
+        SimdLevel::Avx512,
+        SimdLevel::Neon,
+    ];
+
+    pub fn name(self) -> &'static str {
+        match self {
+            SimdLevel::Scalar => "scalar",
+            SimdLevel::Avx2 => "avx2",
+            SimdLevel::Avx512 => "avx512",
+            SimdLevel::Neon => "neon",
+        }
+    }
+
+    /// Parse a `--simd` / `FULLW2V_SIMD` value.  `auto` means "detect"
+    /// and parses to `None`.
+    pub fn parse(s: &str) -> Result<Option<SimdLevel>, String> {
+        match s.trim().to_ascii_lowercase().as_str() {
+            "auto" => Ok(None),
+            "scalar" => Ok(Some(SimdLevel::Scalar)),
+            "avx2" => Ok(Some(SimdLevel::Avx2)),
+            "avx512" => Ok(Some(SimdLevel::Avx512)),
+            "neon" => Ok(Some(SimdLevel::Neon)),
+            other => Err(format!(
+                "unknown simd level '{other}' (expected auto|scalar|avx2|avx512|neon)"
+            )),
+        }
+    }
+
+    /// Whether this host can run the level (compile target + runtime
+    /// CPUID/auxv feature detection).
+    pub fn available(self) -> bool {
+        match self {
+            SimdLevel::Scalar => true,
+            #[cfg(target_arch = "x86_64")]
+            SimdLevel::Avx2 => std::arch::is_x86_feature_detected!("avx2"),
+            #[cfg(target_arch = "x86_64")]
+            SimdLevel::Avx512 => std::arch::is_x86_feature_detected!("avx512f"),
+            #[cfg(target_arch = "aarch64")]
+            SimdLevel::Neon => std::arch::is_aarch64_feature_detected!("neon"),
+            #[cfg(any(target_arch = "x86_64", target_arch = "aarch64"))]
+            _ => false,
+            #[cfg(not(any(target_arch = "x86_64", target_arch = "aarch64")))]
+            _ => false,
+        }
+    }
+
+    /// f32 lanes per vector register at this level — the ISA width the
+    /// CPU roofline model derives peak FLOP/s from.  Scalar is 1 by
+    /// definition (the model scores *explicit* vector paths; the
+    /// compiler may still autovectorize the scalar bodies, so a
+    /// scalar-forced run can exceed its nominal ceiling).
+    pub fn f32_lanes(self) -> usize {
+        match self {
+            SimdLevel::Scalar => 1,
+            SimdLevel::Avx2 => 8,
+            SimdLevel::Avx512 => 16,
+            SimdLevel::Neon => 4,
+        }
+    }
+}
+
+impl std::fmt::Display for SimdLevel {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.write_str(self.name())
+    }
+}
+
+/// Best level this host supports.
+pub fn detect_level() -> SimdLevel {
+    for l in [SimdLevel::Avx512, SimdLevel::Avx2, SimdLevel::Neon] {
+        if l.available() {
+            return l;
+        }
+    }
+    SimdLevel::Scalar
+}
+
+/// Every level this host supports, scalar first.
+pub fn available_levels() -> Vec<SimdLevel> {
+    SimdLevel::ALL.iter().copied().filter(|l| l.available()).collect()
+}
+
+type DotFn = unsafe fn(&[f32], &[f32]) -> f32;
+type DotI8Fn = unsafe fn(&[i8], f32, &[f32]) -> f32;
+type DotF64Fn = unsafe fn(&[f32], &[f32]) -> f64;
+type AxpyFn = unsafe fn(f32, &[f32], &mut [f32]);
+type Dot4Fn = unsafe fn(&[f32], [&[f32]; Q_TILE]) -> [f32; Q_TILE];
+type Dot4I8Fn = unsafe fn(&[i8], f32, [&[f32]; Q_TILE]) -> [f32; Q_TILE];
+
+// Scalar entries in the table: trivial unsafe shims so every slot has
+// the same `unsafe fn` pointer type as the `#[target_feature]` paths.
+unsafe fn scalar_dot(a: &[f32], b: &[f32]) -> f32 {
+    scalar::dot(a, b)
+}
+unsafe fn scalar_dot_i8(codes: &[i8], scale: f32, x: &[f32]) -> f32 {
+    scalar::dot_i8(codes, scale, x)
+}
+unsafe fn scalar_dot_f64(a: &[f32], b: &[f32]) -> f64 {
+    scalar::dot_f64(a, b)
+}
+unsafe fn scalar_axpy(alpha: f32, x: &[f32], y: &mut [f32]) {
+    scalar::axpy(alpha, x, y)
+}
+unsafe fn scalar_dot4(a: &[f32], b: [&[f32]; Q_TILE]) -> [f32; Q_TILE] {
+    scalar::dot4(a, b)
+}
+unsafe fn scalar_dot4_i8(
+    codes: &[i8],
+    scale: f32,
+    b: [&[f32]; Q_TILE],
+) -> [f32; Q_TILE] {
+    scalar::dot4_i8(codes, scale, b)
+}
+
+/// A resolved kernel table.  Obtainable only through [`active`] /
+/// [`Dispatch::for_level`], both of which verify the level is available
+/// on this host — that check is the safety argument for every call
+/// through the `unsafe fn` pointers below.
+#[derive(Clone, Copy)]
+pub struct Dispatch {
+    level: SimdLevel,
+    dot: DotFn,
+    dot_i8: DotI8Fn,
+    dot_f64: DotF64Fn,
+    axpy: AxpyFn,
+    dot4: Dot4Fn,
+    dot4_i8: Dot4I8Fn,
+}
+
+fn table(level: SimdLevel) -> Dispatch {
+    let scalar_table = Dispatch {
+        level: SimdLevel::Scalar,
+        dot: scalar_dot,
+        dot_i8: scalar_dot_i8,
+        dot_f64: scalar_dot_f64,
+        axpy: scalar_axpy,
+        dot4: scalar_dot4,
+        dot4_i8: scalar_dot4_i8,
+    };
+    match level {
+        SimdLevel::Scalar => scalar_table,
+        #[cfg(target_arch = "x86_64")]
+        SimdLevel::Avx2 => Dispatch {
+            level: SimdLevel::Avx2,
+            dot: super::simd_x86::dot_avx2,
+            dot_i8: super::simd_x86::dot_i8_avx2,
+            dot_f64: super::simd_x86::dot_f64_avx2,
+            axpy: super::simd_x86::axpy_avx2,
+            dot4: super::simd_x86::dot4_avx2,
+            dot4_i8: super::simd_x86::dot4_i8_avx2,
+        },
+        #[cfg(target_arch = "x86_64")]
+        SimdLevel::Avx512 => Dispatch {
+            level: SimdLevel::Avx512,
+            // The dot kernels keep their AVX2 bodies: the scalar
+            // contract's single 8-lane accumulator chain pins the
+            // vector width (a 16-lane or dual-accumulator dot would
+            // change the summation order).  Only the width-agnostic
+            // kernels go wider: 16-lane axpy, query-paired dot4.
+            dot: super::simd_x86::dot_avx2,
+            dot_i8: super::simd_x86::dot_i8_avx2,
+            dot_f64: super::simd_x86::dot_f64_avx2,
+            axpy: super::simd_x86::axpy_avx512,
+            dot4: super::simd_x86::dot4_avx512,
+            dot4_i8: super::simd_x86::dot4_i8_avx512,
+        },
+        #[cfg(target_arch = "aarch64")]
+        SimdLevel::Neon => Dispatch {
+            level: SimdLevel::Neon,
+            dot: super::simd_neon::dot_neon,
+            dot_i8: super::simd_neon::dot_i8_neon,
+            dot_f64: super::simd_neon::dot_f64_neon,
+            axpy: super::simd_neon::axpy_neon,
+            dot4: super::simd_neon::dot4_neon,
+            dot4_i8: super::simd_neon::dot4_i8_neon,
+        },
+        // Level unavailable at this compile target; unreachable because
+        // availability is checked before any table lookup.
+        #[allow(unreachable_patterns)]
+        _ => scalar_table,
+    }
+}
+
+fn unavailable(level: SimdLevel) -> String {
+    format!(
+        "simd level '{}' is not available on this host (arch {}, available: {})",
+        level.name(),
+        std::env::consts::ARCH,
+        available_levels()
+            .iter()
+            .map(|l| l.name())
+            .collect::<Vec<_>>()
+            .join("|"),
+    )
+}
+
+impl Dispatch {
+    /// The table for an explicit level, for benches and tests that
+    /// compare levels directly.  Errors if the host lacks the level.
+    pub fn for_level(level: SimdLevel) -> Result<Dispatch, String> {
+        if !level.available() {
+            return Err(unavailable(level));
+        }
+        Ok(table(level))
+    }
+
+    pub fn level(&self) -> SimdLevel {
+        self.level
+    }
+
+    #[inline]
+    pub fn dot(&self, a: &[f32], b: &[f32]) -> f32 {
+        assert_eq!(a.len(), b.len(), "dot length mismatch");
+        // SAFETY: equal lengths checked; the table only holds pointers
+        // whose ISA level was verified available at construction.
+        unsafe { (self.dot)(a, b) }
+    }
+
+    #[inline]
+    pub fn dot_i8(&self, codes: &[i8], scale: f32, x: &[f32]) -> f32 {
+        assert_eq!(codes.len(), x.len(), "dot_i8 length mismatch");
+        // SAFETY: as in `dot`.
+        unsafe { (self.dot_i8)(codes, scale, x) }
+    }
+
+    #[inline]
+    pub fn dot_f64(&self, a: &[f32], b: &[f32]) -> f64 {
+        assert_eq!(a.len(), b.len(), "dot_f64 length mismatch");
+        // SAFETY: as in `dot`.
+        unsafe { (self.dot_f64)(a, b) }
+    }
+
+    #[inline]
+    pub fn axpy(&self, alpha: f32, x: &[f32], y: &mut [f32]) {
+        assert_eq!(x.len(), y.len(), "axpy length mismatch");
+        // SAFETY: as in `dot`.
+        unsafe { (self.axpy)(alpha, x, y) }
+    }
+
+    #[inline]
+    pub fn dot4(&self, a: &[f32], b: [&[f32]; Q_TILE]) -> [f32; Q_TILE] {
+        for bt in &b {
+            assert_eq!(a.len(), bt.len(), "dot4 length mismatch");
+        }
+        // SAFETY: as in `dot`.
+        unsafe { (self.dot4)(a, b) }
+    }
+
+    #[inline]
+    pub fn dot4_i8(
+        &self,
+        codes: &[i8],
+        scale: f32,
+        b: [&[f32]; Q_TILE],
+    ) -> [f32; Q_TILE] {
+        for bt in &b {
+            assert_eq!(codes.len(), bt.len(), "dot4_i8 length mismatch");
+        }
+        // SAFETY: as in `dot`.
+        unsafe { (self.dot4_i8)(codes, scale, b) }
+    }
+
+    /// See [`super::dot_block`].
+    pub fn dot_block(&self, rows: &[f32], dim: usize, x: &[f32], out: &mut [f32]) {
+        assert!(dim > 0, "dot_block needs a positive dim");
+        assert_eq!(rows.len() % dim, 0, "rows not a whole row count");
+        let n_rows = rows.len() / dim;
+        assert_eq!(out.len(), n_rows, "output size");
+        assert_eq!(x.len(), dim, "x width mismatch");
+        let mut r = 0;
+        while r + Q_TILE <= n_rows {
+            let s = self.dot4(
+                x,
+                [
+                    &rows[r * dim..(r + 1) * dim],
+                    &rows[(r + 1) * dim..(r + 2) * dim],
+                    &rows[(r + 2) * dim..(r + 3) * dim],
+                    &rows[(r + 3) * dim..(r + 4) * dim],
+                ],
+            );
+            out[r..r + Q_TILE].copy_from_slice(&s);
+            r += Q_TILE;
+        }
+        while r < n_rows {
+            out[r] = self.dot(&rows[r * dim..(r + 1) * dim], x);
+            r += 1;
+        }
+    }
+
+    /// See [`super::axpy_block`].
+    pub fn axpy_block(
+        &self,
+        alphas: &[f32],
+        x: &[f32],
+        rows: &mut [f32],
+        dim: usize,
+    ) {
+        assert!(dim > 0, "axpy_block needs a positive dim");
+        assert_eq!(rows.len() % dim, 0, "rows not a whole row count");
+        assert_eq!(rows.len() / dim, alphas.len(), "one alpha per row");
+        assert_eq!(x.len(), dim, "x width mismatch");
+        for (row, &a) in rows.chunks_exact_mut(dim).zip(alphas) {
+            self.axpy(a, x, row);
+        }
+    }
+
+    /// See [`super::tile_scores_f32`].
+    pub fn tile_scores_f32(
+        &self,
+        rows: &[f32],
+        dim: usize,
+        queries: &[&[f32]],
+        out: &mut [f32],
+    ) {
+        assert_eq!(rows.len() % dim.max(1), 0, "rows not a whole row count");
+        let n_rows = rows.len() / dim.max(1);
+        check_tile_args(n_rows, dim, queries, out);
+        for (r, row) in rows.chunks_exact(dim).enumerate() {
+            let mut qi = 0;
+            while qi + Q_TILE <= queries.len() {
+                let s = self.dot4(
+                    row,
+                    [
+                        queries[qi],
+                        queries[qi + 1],
+                        queries[qi + 2],
+                        queries[qi + 3],
+                    ],
+                );
+                for (t, v) in s.into_iter().enumerate() {
+                    out[(qi + t) * n_rows + r] = v;
+                }
+                qi += Q_TILE;
+            }
+            while qi < queries.len() {
+                out[qi * n_rows + r] = self.dot(row, queries[qi]);
+                qi += 1;
+            }
+        }
+    }
+
+    /// See [`super::tile_scores_i8`].
+    pub fn tile_scores_i8(
+        &self,
+        codes: &[i8],
+        scales: &[f32],
+        dim: usize,
+        queries: &[&[f32]],
+        out: &mut [f32],
+    ) {
+        assert_eq!(codes.len() % dim.max(1), 0, "codes not a whole row count");
+        let n_rows = codes.len() / dim.max(1);
+        assert_eq!(scales.len(), n_rows, "one scale per row");
+        check_tile_args(n_rows, dim, queries, out);
+        for (r, row) in codes.chunks_exact(dim).enumerate() {
+            let scale = scales[r];
+            let mut qi = 0;
+            while qi + Q_TILE <= queries.len() {
+                let s = self.dot4_i8(
+                    row,
+                    scale,
+                    [
+                        queries[qi],
+                        queries[qi + 1],
+                        queries[qi + 2],
+                        queries[qi + 3],
+                    ],
+                );
+                for (t, v) in s.into_iter().enumerate() {
+                    out[(qi + t) * n_rows + r] = v;
+                }
+                qi += Q_TILE;
+            }
+            while qi < queries.len() {
+                out[qi * n_rows + r] = self.dot_i8(row, scale, queries[qi]);
+                qi += 1;
+            }
+        }
+    }
+}
+
+fn check_tile_args(n_rows: usize, dim: usize, queries: &[&[f32]], out: &[f32]) {
+    assert!(dim > 0, "tile kernel needs a positive dim");
+    assert_eq!(out.len(), n_rows * queries.len(), "scores buffer size");
+    for q in queries {
+        assert_eq!(q.len(), dim, "query width mismatch");
+    }
+}
+
+// The process-wide selection.  0 = not yet selected; otherwise
+// `SimdLevel as u8 + 1`.  Levels are bit-identical by contract, so a
+// benign race (two threads initializing, a bench re-forcing) cannot
+// change any result — only which equally-correct code path runs.
+static ACTIVE: AtomicU8 = AtomicU8::new(0);
+static SOURCE: AtomicU8 = AtomicU8::new(SOURCE_AUTO);
+
+const SOURCE_AUTO: u8 = 0;
+const SOURCE_ENV: u8 = 1;
+const SOURCE_CLI: u8 = 2;
+
+fn encode(l: SimdLevel) -> u8 {
+    match l {
+        SimdLevel::Scalar => 1,
+        SimdLevel::Avx2 => 2,
+        SimdLevel::Avx512 => 3,
+        SimdLevel::Neon => 4,
+    }
+}
+
+fn decode(v: u8) -> SimdLevel {
+    match v {
+        1 => SimdLevel::Scalar,
+        2 => SimdLevel::Avx2,
+        3 => SimdLevel::Avx512,
+        4 => SimdLevel::Neon,
+        _ => unreachable!("corrupt simd level encoding"),
+    }
+}
+
+/// The active kernel table.  First use selects a level:
+/// `FULLW2V_SIMD` if set (panics on an invalid or unavailable value —
+/// the CLI pre-validates via [`select_simd`] to turn that into a clean
+/// error), otherwise the best detected level.
+#[inline]
+pub fn active() -> Dispatch {
+    let v = ACTIVE.load(Ordering::Relaxed);
+    let level = if v == 0 { init_from_env() } else { decode(v) };
+    table(level)
+}
+
+#[cold]
+fn init_from_env() -> SimdLevel {
+    let (level, source) = match env_level() {
+        Ok(Some(l)) => (l, SOURCE_ENV),
+        Ok(None) => (detect_level(), SOURCE_AUTO),
+        Err(e) => panic!("FULLW2V_SIMD: {e}"),
+    };
+    SOURCE.store(source, Ordering::Relaxed);
+    ACTIVE.store(encode(level), Ordering::Relaxed);
+    level
+}
+
+fn env_level() -> Result<Option<SimdLevel>, String> {
+    let raw = match std::env::var("FULLW2V_SIMD") {
+        Ok(v) if !v.trim().is_empty() => v,
+        _ => return Ok(None),
+    };
+    let level = match SimdLevel::parse(&raw)? {
+        Some(l) => l,
+        None => detect_level(), // "auto"
+    };
+    if !level.available() {
+        return Err(unavailable(level));
+    }
+    Ok(Some(level))
+}
+
+/// Force the dispatch level (all levels are bit-identical, so this is
+/// safe at any point in the process lifetime).  Errors if the host
+/// lacks the level.
+pub fn force_level(level: SimdLevel) -> Result<(), String> {
+    if !level.available() {
+        return Err(unavailable(level));
+    }
+    ACTIVE.store(encode(level), Ordering::Relaxed);
+    Ok(())
+}
+
+/// How the active level was chosen, for logs and bench artifacts.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct SimdSelection {
+    pub level: SimdLevel,
+    /// `"--simd"`, `"FULLW2V_SIMD"`, or `"detected"`.
+    pub source: &'static str,
+}
+
+/// The current selection (initializing it if nothing ran yet).
+pub fn simd_selection() -> SimdSelection {
+    let level = active().level;
+    let source = match SOURCE.load(Ordering::Relaxed) {
+        SOURCE_CLI => "--simd",
+        SOURCE_ENV => "FULLW2V_SIMD",
+        _ => "detected",
+    };
+    SimdSelection { level, source }
+}
+
+/// Resolve the startup selection with CLI-grade errors.
+/// Precedence: `--simd` flag value > `FULLW2V_SIMD` > auto-detect.
+pub fn select_simd(cli_flag: Option<&str>) -> Result<SimdSelection, String> {
+    if let Some(s) = cli_flag {
+        let level = match SimdLevel::parse(s)? {
+            Some(l) => l,
+            None => detect_level(), // `--simd auto`
+        };
+        force_level(level)?;
+        SOURCE.store(SOURCE_CLI, Ordering::Relaxed);
+        return Ok(SimdSelection { level, source: "--simd" });
+    }
+    if let Some(level) = env_level()? {
+        force_level(level)?;
+        SOURCE.store(SOURCE_ENV, Ordering::Relaxed);
+        return Ok(SimdSelection { level, source: "FULLW2V_SIMD" });
+    }
+    Ok(SimdSelection { level: active().level, source: "detected" })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn parse_accepts_all_names_and_auto() {
+        assert_eq!(SimdLevel::parse("auto").unwrap(), None);
+        assert_eq!(SimdLevel::parse("AUTO").unwrap(), None);
+        for l in SimdLevel::ALL {
+            assert_eq!(SimdLevel::parse(l.name()).unwrap(), Some(l));
+        }
+        assert!(SimdLevel::parse("sse9").is_err());
+        assert!(SimdLevel::parse("").is_err());
+    }
+
+    #[test]
+    fn scalar_is_always_available() {
+        assert!(SimdLevel::Scalar.available());
+        assert_eq!(available_levels()[0], SimdLevel::Scalar);
+        assert!(available_levels().contains(&detect_level()));
+    }
+
+    #[test]
+    fn unavailable_levels_are_rejected() {
+        for l in SimdLevel::ALL {
+            if !l.available() {
+                let err = Dispatch::for_level(l).err().unwrap();
+                assert!(err.contains(l.name()), "{err}");
+                assert!(force_level(l).is_err());
+            }
+        }
+    }
+
+    /// Quick in-lib smoke of the cross-level contract (the exhaustive
+    /// property tests live in `rust/tests/simd_dispatch.rs`).
+    #[test]
+    fn every_available_level_matches_scalar_on_a_smoke_case() {
+        let a: Vec<f32> = (0..37).map(|i| (i as f32 * 0.31).sin()).collect();
+        let b: Vec<f32> = (0..37).map(|i| (i as f32 * 0.17).cos()).collect();
+        let codes: Vec<i8> = (0..37).map(|i| (i * 13 % 251 - 125) as i8).collect();
+        let want = Dispatch::for_level(SimdLevel::Scalar).unwrap();
+        for l in available_levels() {
+            let d = Dispatch::for_level(l).unwrap();
+            assert_eq!(
+                d.dot(&a, &b).to_bits(),
+                want.dot(&a, &b).to_bits(),
+                "dot {l}"
+            );
+            assert_eq!(
+                d.dot_i8(&codes, 0.02, &b).to_bits(),
+                want.dot_i8(&codes, 0.02, &b).to_bits(),
+                "dot_i8 {l}"
+            );
+            assert_eq!(
+                d.dot_f64(&a, &b).to_bits(),
+                want.dot_f64(&a, &b).to_bits(),
+                "dot_f64 {l}"
+            );
+        }
+    }
+
+    /// Forcing any available level succeeds.  No assertions on
+    /// `active()` here: lib tests share the process-wide selection and
+    /// run concurrently (the serialized force/active semantics are
+    /// pinned in `rust/tests/simd_dispatch.rs`).  Restores the prior
+    /// level so a `FULLW2V_SIMD`-forced run stays forced.
+    #[test]
+    fn force_level_accepts_available_levels() {
+        let before = active().level;
+        for l in available_levels() {
+            assert!(force_level(l).is_ok(), "{l}");
+        }
+        force_level(before).unwrap();
+    }
+}

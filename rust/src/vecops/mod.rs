@@ -9,10 +9,11 @@
 //!
 //! Three kinds of kernel live here:
 //!
-//! * scalar-pair kernels: [`dot`] (8-way unrolled, auto-vectorizable),
-//!   [`dot_i8`] (fused int8 widening dot — the dequantize round-trip is
-//!   folded into the accumulation, one multiply by the row scale at the
-//!   end), [`dot_f64`] (f64 accumulation for evaluation), and [`axpy`].
+//! * scalar-pair kernels: [`dot`] (8-lane accumulation), [`dot_i8`]
+//!   (fused int8 widening dot — the dequantize round-trip is folded
+//!   into the accumulation, one multiply by the row scale at the end),
+//!   [`dot_f64`] (4-lane f64 accumulation for evaluation), and
+//!   [`axpy`].
 //! * block kernels: [`dot_block`] / [`axpy_block`] run one vector
 //!   against every row of a row block (scores, then gradient scatter)
 //!   with the shared vector held hot — the training-side reuse shape
@@ -29,17 +30,51 @@
 //! [`softplus`]) lives here too (`sigmoid` submodule), shared by every
 //! trainer.
 //!
-//! **Bit-identity contract:** for the same row and query, the tile
-//! kernels produce *bit-identical* scores to [`dot`] / [`dot_i8`].  Each
-//! query lane inside the tile accumulates in exactly the order the
-//! scalar kernel uses, and IEEE-754 ops are deterministic, so batched
-//! and per-query scans rank identically — ties and all.  The
-//! `tile_matches_dot_bitwise` test pins this down; the batched-vs-
-//! per-query identity test in `rust/tests/serve_integration.rs` relies
-//! on it end to end.
+//! # Dispatch contract
+//!
+//! Every kernel has one **scalar reference body** (`scalar`
+//! submodule) and optional explicit SIMD backends (`simd_x86`: AVX2 +
+//! AVX-512F; `simd_neon`: aarch64 NEON).  The public functions here
+//! route through a process-wide [`Dispatch`] table selected once by
+//! runtime feature detection — overridable with `--simd` or
+//! `FULLW2V_SIMD` (see [`select_simd`]) — so serve, trainer,
+//! cpu_baseline, and eval pick up the fast paths with zero call-site
+//! changes.
+//!
+//! **The scalar body is the semantic definition.**  A SIMD path must
+//! produce *bit-identical* results — not merely close — for every
+//! input: same 8-lane accumulation order, shared `reduce` epilogue,
+//! separate multiply and add (never FMA, which rounds once instead of
+//! twice), exact widening conversions.  This makes the dispatch level
+//! unobservable: rankings, ties, stored scores, and single-threaded
+//! training runs are reproducible across hosts and `--simd` settings.
+//! `rust/tests/simd_dispatch.rs` property-tests every available level
+//! against scalar (odd lengths, unaligned sub-slices, subnormal and
+//! extreme magnitudes); the tile/block bitwise tests below pin the
+//! tile-vs-scalar contract on whatever level is active.
+//!
+//! # Bit-identity across kernel shapes
+//!
+//! For the same row and query, the tile kernels produce bit-identical
+//! scores to [`dot`] / [`dot_i8`]: each query lane inside the tile
+//! accumulates in exactly the order the scalar kernel uses, and
+//! IEEE-754 ops are deterministic, so batched and per-query scans rank
+//! identically — ties and all.  The `tile_matches_dot_bitwise` test
+//! pins this down; the batched-vs-per-query identity test in
+//! `rust/tests/serve_integration.rs` relies on it end to end.
 
+mod dispatch;
+mod scalar;
 mod sigmoid;
+#[cfg(target_arch = "aarch64")]
+mod simd_neon;
+#[cfg(target_arch = "x86_64")]
+mod simd_x86;
 
+pub use dispatch::{
+    active, available_levels, detect_level, force_level, select_simd,
+    simd_selection, Dispatch, SimdLevel, SimdSelection,
+};
 pub use sigmoid::{sigmoid, softplus, SigmoidTable};
 
 /// Queries scored per row pass inside the tile kernels (the register
@@ -51,34 +86,10 @@ pub const Q_TILE: usize = 4;
 /// well past a cache line.
 pub const ROW_TILE: usize = 32;
 
-const LANES: usize = 8;
-
-/// Reduce one kernel's lane accumulators plus the unrolled tail.
-/// Shared by every f32/int8 kernel so their rounding is identical.
-#[inline(always)]
-fn reduce(acc: &[f32; LANES], tail: impl Iterator<Item = f32>) -> f32 {
-    let mut s = ((acc[0] + acc[4]) + (acc[1] + acc[5]))
-        + ((acc[2] + acc[6]) + (acc[3] + acc[7]));
-    for t in tail {
-        s += t;
-    }
-    s
-}
-
-/// 8-way unrolled f32 dot product.
+/// f32 dot product (8-lane accumulation; see the dispatch contract).
 #[inline]
 pub fn dot(a: &[f32], b: &[f32]) -> f32 {
-    debug_assert_eq!(a.len(), b.len());
-    let mut acc = [0.0f32; LANES];
-    let chunks = a.len() / LANES;
-    for i in 0..chunks {
-        let j = i * LANES;
-        for l in 0..LANES {
-            acc[l] += a[j + l] * b[j + l];
-        }
-    }
-    let base = chunks * LANES;
-    reduce(&acc, (base..a.len()).map(|j| a[j] * b[j]))
+    active().dot(a, b)
 }
 
 /// Fused int8 widening dot: `scale * sum(codes[i] * x[i])`.  Skips the
@@ -86,81 +97,35 @@ pub fn dot(a: &[f32], b: &[f32]) -> f32 {
 /// and the per-row scale is applied once at the end.
 #[inline]
 pub fn dot_i8(codes: &[i8], scale: f32, x: &[f32]) -> f32 {
-    debug_assert_eq!(codes.len(), x.len());
-    let mut acc = [0.0f32; LANES];
-    let chunks = codes.len() / LANES;
-    for i in 0..chunks {
-        let j = i * LANES;
-        for l in 0..LANES {
-            acc[l] += codes[j + l] as f32 * x[j + l];
-        }
-    }
-    let base = chunks * LANES;
-    reduce(&acc, (base..codes.len()).map(|j| codes[j] as f32 * x[j])) * scale
+    active().dot_i8(codes, scale, x)
 }
 
-/// f64-accumulating dot over f32 slices, for evaluation paths where
-/// cancellation matters more than speed.
+/// f64-accumulating dot over f32 slices (4-lane accumulation), for
+/// evaluation paths where cancellation matters more than speed.
 #[inline]
 pub fn dot_f64(a: &[f32], b: &[f32]) -> f64 {
-    debug_assert_eq!(a.len(), b.len());
-    let mut acc = 0.0f64;
-    for (x, y) in a.iter().zip(b) {
-        acc += *x as f64 * *y as f64;
-    }
-    acc
+    active().dot_f64(a, b)
 }
 
-/// `y += alpha * x`, 4-way unrolled.
+/// `y += alpha * x` (elementwise, so every dispatch width is trivially
+/// bit-identical).
 #[inline]
 pub fn axpy(alpha: f32, x: &[f32], y: &mut [f32]) {
-    debug_assert_eq!(x.len(), y.len());
-    let chunks = x.len() / 4;
-    for i in 0..chunks {
-        let j = i * 4;
-        y[j] += alpha * x[j];
-        y[j + 1] += alpha * x[j + 1];
-        y[j + 2] += alpha * x[j + 2];
-        y[j + 3] += alpha * x[j + 3];
-    }
-    for j in chunks * 4..x.len() {
-        y[j] += alpha * x[j];
-    }
+    active().axpy(alpha, x, y)
 }
 
 /// One vector dotted against every `dim`-wide row of a row block:
 /// `out[r] = dot(row_r, x)`, each result **bit-identical** to [`dot`].
 ///
-/// `x` is the reused operand: inside [`dot4`] its elements are loaded
-/// once per [`Q_TILE`] rows and feed all four row accumulators (f32
-/// multiplication is commutative, so swapping the streamed/held roles
-/// preserves every intermediate bit).  This is the training-side shape
-/// of the reuse axis: the FULL-W2V trainer scores one cached context
-/// row against the whole chunk-lifetime negative block in one call.
+/// `x` is the reused operand: inside the 4-row tile dot its elements
+/// are loaded once per [`Q_TILE`] rows and feed all four row
+/// accumulators (f32 multiplication is commutative, so swapping the
+/// streamed/held roles preserves every intermediate bit).  This is the
+/// training-side shape of the reuse axis: the FULL-W2V trainer scores
+/// one cached context row against the whole chunk-lifetime negative
+/// block in one call.
 pub fn dot_block(rows: &[f32], dim: usize, x: &[f32], out: &mut [f32]) {
-    assert!(dim > 0, "dot_block needs a positive dim");
-    assert_eq!(rows.len() % dim, 0, "rows not a whole row count");
-    let n_rows = rows.len() / dim;
-    assert_eq!(out.len(), n_rows, "output size");
-    assert_eq!(x.len(), dim, "x width mismatch");
-    let mut r = 0;
-    while r + Q_TILE <= n_rows {
-        let s = dot4(
-            x,
-            [
-                &rows[r * dim..(r + 1) * dim],
-                &rows[(r + 1) * dim..(r + 2) * dim],
-                &rows[(r + 2) * dim..(r + 3) * dim],
-                &rows[(r + 3) * dim..(r + 4) * dim],
-            ],
-        );
-        out[r..r + Q_TILE].copy_from_slice(&s);
-        r += Q_TILE;
-    }
-    while r < n_rows {
-        out[r] = dot(&rows[r * dim..(r + 1) * dim], x);
-        r += 1;
-    }
+    active().dot_block(rows, dim, x, out)
 }
 
 /// Per-row axpy over a row block: `row_r += alphas[r] * x`, each row
@@ -169,78 +134,7 @@ pub fn dot_block(rows: &[f32], dim: usize, x: &[f32], out: &mut [f32]) {
 /// (the FULL-W2V trainer scatters one gradient column into every cached
 /// window row in one call).
 pub fn axpy_block(alphas: &[f32], x: &[f32], rows: &mut [f32], dim: usize) {
-    assert!(dim > 0, "axpy_block needs a positive dim");
-    assert_eq!(rows.len() % dim, 0, "rows not a whole row count");
-    assert_eq!(rows.len() / dim, alphas.len(), "one alpha per row");
-    assert_eq!(x.len(), dim, "x width mismatch");
-    for (row, &a) in rows.chunks_exact_mut(dim).zip(alphas) {
-        axpy(a, x, row);
-    }
-}
-
-/// Four dots sharing one pass over `a`: each element of `a` is loaded
-/// once and feeds all four query accumulators.  Every query lane
-/// accumulates in exactly [`dot`]'s order, so each result is
-/// bit-identical to `dot(a, b_t)`.
-#[inline]
-fn dot4(a: &[f32], b: [&[f32]; Q_TILE]) -> [f32; Q_TILE] {
-    let mut acc = [[0.0f32; LANES]; Q_TILE];
-    let chunks = a.len() / LANES;
-    for i in 0..chunks {
-        let j = i * LANES;
-        for l in 0..LANES {
-            let x = a[j + l];
-            for (t, bt) in b.iter().enumerate() {
-                acc[t][l] += x * bt[j + l];
-            }
-        }
-    }
-    let base = chunks * LANES;
-    let mut out = [0.0f32; Q_TILE];
-    for t in 0..Q_TILE {
-        out[t] =
-            reduce(&acc[t], (base..a.len()).map(|j| a[j] * b[t][j]));
-    }
-    out
-}
-
-/// Int8 sibling of [`dot4`]: each result is bit-identical to
-/// `dot_i8(codes, scale, b_t)`.
-#[inline]
-fn dot4_i8(codes: &[i8], scale: f32, b: [&[f32]; Q_TILE]) -> [f32; Q_TILE] {
-    let mut acc = [[0.0f32; LANES]; Q_TILE];
-    let chunks = codes.len() / LANES;
-    for i in 0..chunks {
-        let j = i * LANES;
-        for l in 0..LANES {
-            let x = codes[j + l] as f32;
-            for (t, bt) in b.iter().enumerate() {
-                acc[t][l] += x * bt[j + l];
-            }
-        }
-    }
-    let base = chunks * LANES;
-    let mut out = [0.0f32; Q_TILE];
-    for t in 0..Q_TILE {
-        out[t] = reduce(
-            &acc[t],
-            (base..codes.len()).map(|j| codes[j] as f32 * b[t][j]),
-        ) * scale;
-    }
-    out
-}
-
-fn check_tile_args(
-    n_rows: usize,
-    dim: usize,
-    queries: &[&[f32]],
-    out: &[f32],
-) {
-    assert!(dim > 0, "tile kernel needs a positive dim");
-    assert_eq!(out.len(), n_rows * queries.len(), "scores buffer size");
-    for q in queries {
-        assert_eq!(q.len(), dim, "query width mismatch");
-    }
+    active().axpy_block(alphas, x, rows, dim)
 }
 
 /// Score a Q x R tile: every query in `queries` against every row of
@@ -257,31 +151,7 @@ pub fn tile_scores_f32(
     queries: &[&[f32]],
     out: &mut [f32],
 ) {
-    assert_eq!(rows.len() % dim.max(1), 0, "rows not a whole row count");
-    let n_rows = rows.len() / dim.max(1);
-    check_tile_args(n_rows, dim, queries, out);
-    for (r, row) in rows.chunks_exact(dim).enumerate() {
-        let mut qi = 0;
-        while qi + Q_TILE <= queries.len() {
-            let s = dot4(
-                row,
-                [
-                    queries[qi],
-                    queries[qi + 1],
-                    queries[qi + 2],
-                    queries[qi + 3],
-                ],
-            );
-            for (t, v) in s.into_iter().enumerate() {
-                out[(qi + t) * n_rows + r] = v;
-            }
-            qi += Q_TILE;
-        }
-        while qi < queries.len() {
-            out[qi * n_rows + r] = dot(row, queries[qi]);
-            qi += 1;
-        }
-    }
+    active().tile_scores_f32(rows, dim, queries, out)
 }
 
 /// Int8 tile kernel: rows are `codes` (R x `dim` int8) with one f32
@@ -294,34 +164,7 @@ pub fn tile_scores_i8(
     queries: &[&[f32]],
     out: &mut [f32],
 ) {
-    assert_eq!(codes.len() % dim.max(1), 0, "codes not a whole row count");
-    let n_rows = codes.len() / dim.max(1);
-    assert_eq!(scales.len(), n_rows, "one scale per row");
-    check_tile_args(n_rows, dim, queries, out);
-    for (r, row) in codes.chunks_exact(dim).enumerate() {
-        let scale = scales[r];
-        let mut qi = 0;
-        while qi + Q_TILE <= queries.len() {
-            let s = dot4_i8(
-                row,
-                scale,
-                [
-                    queries[qi],
-                    queries[qi + 1],
-                    queries[qi + 2],
-                    queries[qi + 3],
-                ],
-            );
-            for (t, v) in s.into_iter().enumerate() {
-                out[(qi + t) * n_rows + r] = v;
-            }
-            qi += Q_TILE;
-        }
-        while qi < queries.len() {
-            out[qi * n_rows + r] = dot_i8(row, scale, queries[qi]);
-            qi += 1;
-        }
-    }
+    active().tile_scores_i8(codes, scales, dim, queries, out)
 }
 
 #[cfg(test)]
@@ -380,7 +223,9 @@ mod tests {
 
     /// The contract the batched scan path stands on: tile scores are
     /// bit-identical to the scalar kernels, for every query count mod
-    /// Q_TILE and for dims around the unroll width.
+    /// Q_TILE and for dims around the unroll width.  Runs on whatever
+    /// dispatch level is active (CI also runs the whole suite with
+    /// `FULLW2V_SIMD=scalar`).
     #[test]
     fn tile_matches_dot_bitwise() {
         for dim in [1usize, 5, 8, 16, 19] {
@@ -503,5 +348,25 @@ mod tests {
         let naive: f64 =
             a.iter().zip(&b).map(|(x, y)| *x as f64 * *y as f64).sum();
         assert!((dot_f64(&a, &b) - naive).abs() < 1e-12);
+    }
+
+    /// The unrolled f64 dot stays a faithful dot product on inputs
+    /// where the 4-lane regrouping actually changes the add order.
+    #[test]
+    fn dot_f64_unrolled_close_to_sequential() {
+        for n in [0usize, 1, 3, 4, 5, 11, 64, 67] {
+            let a = seq(n, |i| (i as f32 * 0.61).sin() * 3.0);
+            let b = seq(n, |i| ((n - i) as f32 * 0.29).cos() * 2.0);
+            let seqsum: f64 = a
+                .iter()
+                .zip(&b)
+                .map(|(x, y)| *x as f64 * *y as f64)
+                .sum();
+            let got = dot_f64(&a, &b);
+            assert!(
+                (got - seqsum).abs() <= seqsum.abs() * 1e-14 + 1e-14,
+                "n={n}: {got} vs {seqsum}"
+            );
+        }
     }
 }

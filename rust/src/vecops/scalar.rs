@@ -1,0 +1,173 @@
+//! Scalar reference kernels: the semantic definition of every vecops
+//! kernel.
+//!
+//! The bodies here are the bit-exact contract the SIMD paths in
+//! `simd_x86` / `simd_neon` must reproduce: one 8-lane f32 accumulator
+//! array per dot (4 lanes for the f64 variant), chunk-sequential
+//! accumulation, and a single shared [`reduce`] / [`reduce_f64`] at the
+//! end.  Any change to an accumulation order here is a change to the
+//! crate-wide bit-identity contract and must be mirrored in every SIMD
+//! backend (the `simd_dispatch` integration tests will catch a mismatch
+//! on the first run).
+
+use super::Q_TILE;
+
+/// f32 accumulator lanes per chunk.  This is the unroll width of the
+/// scalar kernels *and* the vector width of the AVX2/AVX-512 dot paths
+/// (one 8-lane register accumulator), which is what makes them
+/// bit-identical: both walk the input in 8-wide chunks with one
+/// sequential add per lane per chunk.
+pub(crate) const LANES: usize = 8;
+
+/// f64 accumulator lanes for [`dot_f64`] (4 doubles = one 256-bit
+/// register on AVX2, two 128-bit registers on NEON).
+pub(crate) const F64_LANES: usize = 4;
+
+/// Reduce one kernel's lane accumulators plus the unrolled tail.
+/// Shared by every f32/int8 kernel — scalar and SIMD — so their
+/// rounding is identical: SIMD paths store their register lanes to a
+/// `[f32; LANES]` and call this exact function.
+#[inline(always)]
+pub(crate) fn reduce(acc: &[f32; LANES], tail: impl Iterator<Item = f32>) -> f32 {
+    let mut s = ((acc[0] + acc[4]) + (acc[1] + acc[5]))
+        + ((acc[2] + acc[6]) + (acc[3] + acc[7]));
+    for t in tail {
+        s += t;
+    }
+    s
+}
+
+/// f64 sibling of [`reduce`] for [`dot_f64`]'s 4-lane accumulator.
+#[inline(always)]
+pub(crate) fn reduce_f64(
+    acc: &[f64; F64_LANES],
+    tail: impl Iterator<Item = f64>,
+) -> f64 {
+    let mut s = (acc[0] + acc[2]) + (acc[1] + acc[3]);
+    for t in tail {
+        s += t;
+    }
+    s
+}
+
+/// 8-way unrolled f32 dot product.
+#[inline]
+pub(crate) fn dot(a: &[f32], b: &[f32]) -> f32 {
+    let mut acc = [0.0f32; LANES];
+    let chunks = a.len() / LANES;
+    for i in 0..chunks {
+        let j = i * LANES;
+        for l in 0..LANES {
+            acc[l] += a[j + l] * b[j + l];
+        }
+    }
+    let base = chunks * LANES;
+    reduce(&acc, (base..a.len()).map(|j| a[j] * b[j]))
+}
+
+/// Fused int8 widening dot: `scale * sum(codes[i] * x[i])`.  Codes
+/// widen to f32 inside the accumulation (i8 -> f32 is exact) and the
+/// per-row scale is applied once at the end.
+#[inline]
+pub(crate) fn dot_i8(codes: &[i8], scale: f32, x: &[f32]) -> f32 {
+    let mut acc = [0.0f32; LANES];
+    let chunks = codes.len() / LANES;
+    for i in 0..chunks {
+        let j = i * LANES;
+        for l in 0..LANES {
+            acc[l] += codes[j + l] as f32 * x[j + l];
+        }
+    }
+    let base = chunks * LANES;
+    reduce(&acc, (base..codes.len()).map(|j| codes[j] as f32 * x[j])) * scale
+}
+
+/// f64-accumulating dot over f32 slices, 4-way unrolled (the same
+/// treatment as [`dot`], at the f64 register width).  Evaluation paths
+/// route through this where cancellation matters more than speed.
+#[inline]
+pub(crate) fn dot_f64(a: &[f32], b: &[f32]) -> f64 {
+    let mut acc = [0.0f64; F64_LANES];
+    let chunks = a.len() / F64_LANES;
+    for i in 0..chunks {
+        let j = i * F64_LANES;
+        for l in 0..F64_LANES {
+            acc[l] += a[j + l] as f64 * b[j + l] as f64;
+        }
+    }
+    let base = chunks * F64_LANES;
+    reduce_f64(&acc, (base..a.len()).map(|j| a[j] as f64 * b[j] as f64))
+}
+
+/// `y += alpha * x`, 4-way unrolled.  Purely elementwise, so any
+/// vector width reproduces it bit-for-bit — this is the one kernel the
+/// AVX-512 backend runs 16 lanes wide.
+#[inline]
+pub(crate) fn axpy(alpha: f32, x: &[f32], y: &mut [f32]) {
+    let chunks = x.len() / 4;
+    for i in 0..chunks {
+        let j = i * 4;
+        y[j] += alpha * x[j];
+        y[j + 1] += alpha * x[j + 1];
+        y[j + 2] += alpha * x[j + 2];
+        y[j + 3] += alpha * x[j + 3];
+    }
+    for j in chunks * 4..x.len() {
+        y[j] += alpha * x[j];
+    }
+}
+
+/// Four dots sharing one pass over `a`: each element of `a` is loaded
+/// once and feeds all four query accumulators.  Every query lane
+/// accumulates in exactly [`dot`]'s order, so each result is
+/// bit-identical to `dot(a, b_t)`.
+#[inline]
+pub(crate) fn dot4(a: &[f32], b: [&[f32]; Q_TILE]) -> [f32; Q_TILE] {
+    let mut acc = [[0.0f32; LANES]; Q_TILE];
+    let chunks = a.len() / LANES;
+    for i in 0..chunks {
+        let j = i * LANES;
+        for l in 0..LANES {
+            let x = a[j + l];
+            for (t, bt) in b.iter().enumerate() {
+                acc[t][l] += x * bt[j + l];
+            }
+        }
+    }
+    let base = chunks * LANES;
+    let mut out = [0.0f32; Q_TILE];
+    for t in 0..Q_TILE {
+        out[t] = reduce(&acc[t], (base..a.len()).map(|j| a[j] * b[t][j]));
+    }
+    out
+}
+
+/// Int8 sibling of [`dot4`]: each result is bit-identical to
+/// `dot_i8(codes, scale, b_t)`.
+#[inline]
+pub(crate) fn dot4_i8(
+    codes: &[i8],
+    scale: f32,
+    b: [&[f32]; Q_TILE],
+) -> [f32; Q_TILE] {
+    let mut acc = [[0.0f32; LANES]; Q_TILE];
+    let chunks = codes.len() / LANES;
+    for i in 0..chunks {
+        let j = i * LANES;
+        for l in 0..LANES {
+            let x = codes[j + l] as f32;
+            for (t, bt) in b.iter().enumerate() {
+                acc[t][l] += x * bt[j + l];
+            }
+        }
+    }
+    let base = chunks * LANES;
+    let mut out = [0.0f32; Q_TILE];
+    for t in 0..Q_TILE {
+        out[t] = reduce(
+            &acc[t],
+            (base..codes.len()).map(|j| codes[j] as f32 * b[t][j]),
+        ) * scale;
+    }
+    out
+}

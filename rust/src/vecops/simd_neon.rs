@@ -1,0 +1,184 @@
+//! Explicit aarch64 NEON kernels, bit-identical to [`super::scalar`].
+//!
+//! The scalar contract's 8-lane f32 accumulator array maps onto two
+//! `float32x4_t` registers (lanes 0-3 and 4-7); each gets one
+//! `vaddq_f32(acc, vmulq_f32(a, b))` per chunk — the same per-lane
+//! IEEE-754 op sequence as the scalar kernel.  `vmlaq_f32`/`vfmaq_f32`
+//! are deliberately *not* used: on aarch64 they lower to FMLA, which
+//! fuses the multiply-add into a single rounding and would break
+//! bit-identity.  Lanes are stored back to a `[f32; LANES]` and reduced
+//! by the shared `scalar::reduce`, exactly like the x86 backend.
+//!
+//! Widening is exact: int8 codes go `vmovl_s8` -> `vmovl_s16` ->
+//! `vcvtq_f32_s32` (i8 -> f32, exact), the f64 dot goes
+//! `vcvt_f64_f32` / `vcvt_high_f64_f32` (f32 -> f64, exact).
+//!
+//! Callers reach these only through the dispatch table, which verified
+//! NEON support at construction.
+
+use core::arch::aarch64::*;
+
+use super::scalar::{reduce, reduce_f64, F64_LANES, LANES};
+use super::Q_TILE;
+
+#[target_feature(enable = "neon")]
+pub(crate) unsafe fn dot_neon(a: &[f32], b: &[f32]) -> f32 {
+    let n = a.len();
+    let chunks = n / LANES;
+    let ap = a.as_ptr();
+    let bp = b.as_ptr();
+    let mut acc_lo = vdupq_n_f32(0.0);
+    let mut acc_hi = vdupq_n_f32(0.0);
+    for i in 0..chunks {
+        let j = i * LANES;
+        acc_lo = vaddq_f32(
+            acc_lo,
+            vmulq_f32(vld1q_f32(ap.add(j)), vld1q_f32(bp.add(j))),
+        );
+        acc_hi = vaddq_f32(
+            acc_hi,
+            vmulq_f32(vld1q_f32(ap.add(j + 4)), vld1q_f32(bp.add(j + 4))),
+        );
+    }
+    let mut acc = [0.0f32; LANES];
+    vst1q_f32(acc.as_mut_ptr(), acc_lo);
+    vst1q_f32(acc.as_mut_ptr().add(4), acc_hi);
+    let base = chunks * LANES;
+    reduce(&acc, (base..n).map(|j| a[j] * b[j]))
+}
+
+/// Widen 8 int8 codes to two f32x4 registers (exact conversion).
+#[inline]
+#[target_feature(enable = "neon")]
+unsafe fn widen8(p: *const i8) -> (float32x4_t, float32x4_t) {
+    let c16 = vmovl_s8(vld1_s8(p));
+    let lo = vcvtq_f32_s32(vmovl_s16(vget_low_s16(c16)));
+    let hi = vcvtq_f32_s32(vmovl_high_s16(c16));
+    (lo, hi)
+}
+
+#[target_feature(enable = "neon")]
+pub(crate) unsafe fn dot_i8_neon(codes: &[i8], scale: f32, x: &[f32]) -> f32 {
+    let n = codes.len();
+    let chunks = n / LANES;
+    let cp = codes.as_ptr();
+    let xp = x.as_ptr();
+    let mut acc_lo = vdupq_n_f32(0.0);
+    let mut acc_hi = vdupq_n_f32(0.0);
+    for i in 0..chunks {
+        let j = i * LANES;
+        let (c_lo, c_hi) = widen8(cp.add(j));
+        acc_lo = vaddq_f32(acc_lo, vmulq_f32(c_lo, vld1q_f32(xp.add(j))));
+        acc_hi = vaddq_f32(acc_hi, vmulq_f32(c_hi, vld1q_f32(xp.add(j + 4))));
+    }
+    let mut acc = [0.0f32; LANES];
+    vst1q_f32(acc.as_mut_ptr(), acc_lo);
+    vst1q_f32(acc.as_mut_ptr().add(4), acc_hi);
+    let base = chunks * LANES;
+    reduce(&acc, (base..n).map(|j| codes[j] as f32 * x[j])) * scale
+}
+
+#[target_feature(enable = "neon")]
+pub(crate) unsafe fn dot_f64_neon(a: &[f32], b: &[f32]) -> f64 {
+    let n = a.len();
+    let chunks = n / F64_LANES;
+    let ap = a.as_ptr();
+    let bp = b.as_ptr();
+    let mut acc01 = vdupq_n_f64(0.0);
+    let mut acc23 = vdupq_n_f64(0.0);
+    for i in 0..chunks {
+        let j = i * F64_LANES;
+        let a4 = vld1q_f32(ap.add(j));
+        let b4 = vld1q_f32(bp.add(j));
+        acc01 = vaddq_f64(
+            acc01,
+            vmulq_f64(vcvt_f64_f32(vget_low_f32(a4)), vcvt_f64_f32(vget_low_f32(b4))),
+        );
+        acc23 = vaddq_f64(
+            acc23,
+            vmulq_f64(vcvt_high_f64_f32(a4), vcvt_high_f64_f32(b4)),
+        );
+    }
+    let mut acc = [0.0f64; F64_LANES];
+    vst1q_f64(acc.as_mut_ptr(), acc01);
+    vst1q_f64(acc.as_mut_ptr().add(2), acc23);
+    let base = chunks * F64_LANES;
+    reduce_f64(&acc, (base..n).map(|j| a[j] as f64 * b[j] as f64))
+}
+
+#[target_feature(enable = "neon")]
+pub(crate) unsafe fn axpy_neon(alpha: f32, x: &[f32], y: &mut [f32]) {
+    const W: usize = 4;
+    let n = x.len();
+    let chunks = n / W;
+    let av = vdupq_n_f32(alpha);
+    let xp = x.as_ptr();
+    let yp = y.as_mut_ptr();
+    for i in 0..chunks {
+        let j = i * W;
+        let yv = vld1q_f32(yp.add(j));
+        vst1q_f32(yp.add(j), vaddq_f32(yv, vmulq_f32(av, vld1q_f32(xp.add(j)))));
+    }
+    for j in chunks * W..n {
+        y[j] += alpha * x[j];
+    }
+}
+
+#[target_feature(enable = "neon")]
+pub(crate) unsafe fn dot4_neon(a: &[f32], b: [&[f32]; Q_TILE]) -> [f32; Q_TILE] {
+    let n = a.len();
+    let chunks = n / LANES;
+    let ap = a.as_ptr();
+    let bp = [b[0].as_ptr(), b[1].as_ptr(), b[2].as_ptr(), b[3].as_ptr()];
+    let mut lo = [vdupq_n_f32(0.0); Q_TILE];
+    let mut hi = [vdupq_n_f32(0.0); Q_TILE];
+    for i in 0..chunks {
+        let j = i * LANES;
+        let x_lo = vld1q_f32(ap.add(j));
+        let x_hi = vld1q_f32(ap.add(j + 4));
+        for t in 0..Q_TILE {
+            lo[t] = vaddq_f32(lo[t], vmulq_f32(x_lo, vld1q_f32(bp[t].add(j))));
+            hi[t] = vaddq_f32(hi[t], vmulq_f32(x_hi, vld1q_f32(bp[t].add(j + 4))));
+        }
+    }
+    let base = chunks * LANES;
+    let mut out = [0.0f32; Q_TILE];
+    for t in 0..Q_TILE {
+        let mut acc = [0.0f32; LANES];
+        vst1q_f32(acc.as_mut_ptr(), lo[t]);
+        vst1q_f32(acc.as_mut_ptr().add(4), hi[t]);
+        out[t] = reduce(&acc, (base..n).map(|j| a[j] * b[t][j]));
+    }
+    out
+}
+
+#[target_feature(enable = "neon")]
+pub(crate) unsafe fn dot4_i8_neon(
+    codes: &[i8],
+    scale: f32,
+    b: [&[f32]; Q_TILE],
+) -> [f32; Q_TILE] {
+    let n = codes.len();
+    let chunks = n / LANES;
+    let cp = codes.as_ptr();
+    let bp = [b[0].as_ptr(), b[1].as_ptr(), b[2].as_ptr(), b[3].as_ptr()];
+    let mut lo = [vdupq_n_f32(0.0); Q_TILE];
+    let mut hi = [vdupq_n_f32(0.0); Q_TILE];
+    for i in 0..chunks {
+        let j = i * LANES;
+        let (x_lo, x_hi) = widen8(cp.add(j));
+        for t in 0..Q_TILE {
+            lo[t] = vaddq_f32(lo[t], vmulq_f32(x_lo, vld1q_f32(bp[t].add(j))));
+            hi[t] = vaddq_f32(hi[t], vmulq_f32(x_hi, vld1q_f32(bp[t].add(j + 4))));
+        }
+    }
+    let base = chunks * LANES;
+    let mut out = [0.0f32; Q_TILE];
+    for t in 0..Q_TILE {
+        let mut acc = [0.0f32; LANES];
+        vst1q_f32(acc.as_mut_ptr(), lo[t]);
+        vst1q_f32(acc.as_mut_ptr().add(4), hi[t]);
+        out[t] = reduce(&acc, (base..n).map(|j| codes[j] as f32 * b[t][j])) * scale;
+    }
+    out
+}

@@ -1,0 +1,300 @@
+//! Explicit x86-64 SIMD kernels (AVX2 + AVX-512F), bit-identical to
+//! [`super::scalar`].
+//!
+//! How bit-identity is engineered rather than hoped for:
+//!
+//! * **Same accumulator shape.**  The scalar dot kernels keep one
+//!   8-lane accumulator array with one sequential add per lane per
+//!   chunk; here that array *is* one `__m256` register updated with
+//!   `add(acc, mul(a, b))` per chunk — the identical per-lane sequence
+//!   of IEEE-754 ops.
+//! * **No FMA.**  `vfmadd` rounds once where `mul` + `add` round twice;
+//!   a fused path would differ in the last bit.  Every kernel here uses
+//!   separate multiply and add.
+//! * **One reduction.**  Register lanes are stored to a `[f32; LANES]`
+//!   and handed to the shared `scalar::reduce` together with the scalar
+//!   tail products, so the horizontal sum and remainder handling are
+//!   literally the same code the scalar kernel runs.
+//! * **Exact conversions.**  The int8 path widens codes with
+//!   `vpmovsxbd` + `vcvtdq2ps` (i8 -> i32 -> f32, exact for |v| <= 127,
+//!   mirroring `code as f32`); the f64 dot widens with `vcvtps2pd`
+//!   (every f32 is exactly representable as f64).
+//!
+//! AVX-512 note: the dot kernels deliberately stay 8 lanes wide — the
+//! scalar contract's single loop-carried accumulator pins the width, so
+//! a 16-lane dot would change the summation order.  AVX-512 instead
+//! widens the kernels whose semantics are width-agnostic: `axpy`
+//! (elementwise) runs 16 lanes, and the 4-query tile dot packs two
+//! 8-lane query accumulators per `zmm` register.
+//!
+//! Callers reach these only through the dispatch table, which verified
+//! the features at construction — that is the safety contract for every
+//! `#[target_feature]` fn here.
+
+use core::arch::x86_64::*;
+
+use super::scalar::{reduce, reduce_f64, F64_LANES, LANES};
+use super::Q_TILE;
+
+#[target_feature(enable = "avx2")]
+pub(crate) unsafe fn dot_avx2(a: &[f32], b: &[f32]) -> f32 {
+    let n = a.len();
+    let chunks = n / LANES;
+    let ap = a.as_ptr();
+    let bp = b.as_ptr();
+    let mut accv = _mm256_setzero_ps();
+    for i in 0..chunks {
+        let j = i * LANES;
+        accv = _mm256_add_ps(
+            accv,
+            _mm256_mul_ps(_mm256_loadu_ps(ap.add(j)), _mm256_loadu_ps(bp.add(j))),
+        );
+    }
+    let mut acc = [0.0f32; LANES];
+    _mm256_storeu_ps(acc.as_mut_ptr(), accv);
+    let base = chunks * LANES;
+    reduce(&acc, (base..n).map(|j| a[j] * b[j]))
+}
+
+#[target_feature(enable = "avx2")]
+pub(crate) unsafe fn dot_i8_avx2(codes: &[i8], scale: f32, x: &[f32]) -> f32 {
+    let n = codes.len();
+    let chunks = n / LANES;
+    let cp = codes.as_ptr();
+    let xp = x.as_ptr();
+    let mut accv = _mm256_setzero_ps();
+    for i in 0..chunks {
+        let j = i * LANES;
+        // 8 codes -> sign-extend to i32 -> exact convert to f32.
+        let c8 = _mm_loadl_epi64(cp.add(j) as *const __m128i);
+        let cf = _mm256_cvtepi32_ps(_mm256_cvtepi8_epi32(c8));
+        accv = _mm256_add_ps(accv, _mm256_mul_ps(cf, _mm256_loadu_ps(xp.add(j))));
+    }
+    let mut acc = [0.0f32; LANES];
+    _mm256_storeu_ps(acc.as_mut_ptr(), accv);
+    let base = chunks * LANES;
+    reduce(&acc, (base..n).map(|j| codes[j] as f32 * x[j])) * scale
+}
+
+#[target_feature(enable = "avx2")]
+pub(crate) unsafe fn dot_f64_avx2(a: &[f32], b: &[f32]) -> f64 {
+    let n = a.len();
+    let chunks = n / F64_LANES;
+    let ap = a.as_ptr();
+    let bp = b.as_ptr();
+    let mut accv = _mm256_setzero_pd();
+    for i in 0..chunks {
+        let j = i * F64_LANES;
+        let av = _mm256_cvtps_pd(_mm_loadu_ps(ap.add(j)));
+        let bv = _mm256_cvtps_pd(_mm_loadu_ps(bp.add(j)));
+        accv = _mm256_add_pd(accv, _mm256_mul_pd(av, bv));
+    }
+    let mut acc = [0.0f64; F64_LANES];
+    _mm256_storeu_pd(acc.as_mut_ptr(), accv);
+    let base = chunks * F64_LANES;
+    reduce_f64(&acc, (base..n).map(|j| a[j] as f64 * b[j] as f64))
+}
+
+#[target_feature(enable = "avx2")]
+pub(crate) unsafe fn axpy_avx2(alpha: f32, x: &[f32], y: &mut [f32]) {
+    let n = x.len();
+    let chunks = n / LANES;
+    let av = _mm256_set1_ps(alpha);
+    let xp = x.as_ptr();
+    let yp = y.as_mut_ptr();
+    for i in 0..chunks {
+        let j = i * LANES;
+        let yv = _mm256_loadu_ps(yp.add(j));
+        _mm256_storeu_ps(
+            yp.add(j),
+            _mm256_add_ps(yv, _mm256_mul_ps(av, _mm256_loadu_ps(xp.add(j)))),
+        );
+    }
+    for j in chunks * LANES..n {
+        y[j] += alpha * x[j];
+    }
+}
+
+#[target_feature(enable = "avx2")]
+pub(crate) unsafe fn dot4_avx2(a: &[f32], b: [&[f32]; Q_TILE]) -> [f32; Q_TILE] {
+    let n = a.len();
+    let chunks = n / LANES;
+    let ap = a.as_ptr();
+    let bp = [b[0].as_ptr(), b[1].as_ptr(), b[2].as_ptr(), b[3].as_ptr()];
+    let mut acc0 = _mm256_setzero_ps();
+    let mut acc1 = _mm256_setzero_ps();
+    let mut acc2 = _mm256_setzero_ps();
+    let mut acc3 = _mm256_setzero_ps();
+    for i in 0..chunks {
+        let j = i * LANES;
+        // The streamed operand is loaded once and feeds all four
+        // accumulators — four guaranteed-resident ymm registers.
+        let xv = _mm256_loadu_ps(ap.add(j));
+        acc0 = _mm256_add_ps(acc0, _mm256_mul_ps(xv, _mm256_loadu_ps(bp[0].add(j))));
+        acc1 = _mm256_add_ps(acc1, _mm256_mul_ps(xv, _mm256_loadu_ps(bp[1].add(j))));
+        acc2 = _mm256_add_ps(acc2, _mm256_mul_ps(xv, _mm256_loadu_ps(bp[2].add(j))));
+        acc3 = _mm256_add_ps(acc3, _mm256_mul_ps(xv, _mm256_loadu_ps(bp[3].add(j))));
+    }
+    let mut lanes = [[0.0f32; LANES]; Q_TILE];
+    _mm256_storeu_ps(lanes[0].as_mut_ptr(), acc0);
+    _mm256_storeu_ps(lanes[1].as_mut_ptr(), acc1);
+    _mm256_storeu_ps(lanes[2].as_mut_ptr(), acc2);
+    _mm256_storeu_ps(lanes[3].as_mut_ptr(), acc3);
+    finish4(a.len(), chunks * LANES, &lanes, |j, t| a[j] * b[t][j])
+}
+
+#[target_feature(enable = "avx2")]
+pub(crate) unsafe fn dot4_i8_avx2(
+    codes: &[i8],
+    scale: f32,
+    b: [&[f32]; Q_TILE],
+) -> [f32; Q_TILE] {
+    let n = codes.len();
+    let chunks = n / LANES;
+    let cp = codes.as_ptr();
+    let bp = [b[0].as_ptr(), b[1].as_ptr(), b[2].as_ptr(), b[3].as_ptr()];
+    let mut acc0 = _mm256_setzero_ps();
+    let mut acc1 = _mm256_setzero_ps();
+    let mut acc2 = _mm256_setzero_ps();
+    let mut acc3 = _mm256_setzero_ps();
+    for i in 0..chunks {
+        let j = i * LANES;
+        let c8 = _mm_loadl_epi64(cp.add(j) as *const __m128i);
+        let xv = _mm256_cvtepi32_ps(_mm256_cvtepi8_epi32(c8));
+        acc0 = _mm256_add_ps(acc0, _mm256_mul_ps(xv, _mm256_loadu_ps(bp[0].add(j))));
+        acc1 = _mm256_add_ps(acc1, _mm256_mul_ps(xv, _mm256_loadu_ps(bp[1].add(j))));
+        acc2 = _mm256_add_ps(acc2, _mm256_mul_ps(xv, _mm256_loadu_ps(bp[2].add(j))));
+        acc3 = _mm256_add_ps(acc3, _mm256_mul_ps(xv, _mm256_loadu_ps(bp[3].add(j))));
+    }
+    let mut lanes = [[0.0f32; LANES]; Q_TILE];
+    _mm256_storeu_ps(lanes[0].as_mut_ptr(), acc0);
+    _mm256_storeu_ps(lanes[1].as_mut_ptr(), acc1);
+    _mm256_storeu_ps(lanes[2].as_mut_ptr(), acc2);
+    _mm256_storeu_ps(lanes[3].as_mut_ptr(), acc3);
+    let out = finish4(n, chunks * LANES, &lanes, |j, t| {
+        codes[j] as f32 * b[t][j]
+    });
+    [out[0] * scale, out[1] * scale, out[2] * scale, out[3] * scale]
+}
+
+/// Shared tail + reduction for the 4-query kernels: exactly the scalar
+/// `dot4` epilogue (per-query `reduce` over lane accumulators plus
+/// per-element tail products).
+#[inline(always)]
+fn finish4(
+    n: usize,
+    base: usize,
+    lanes: &[[f32; LANES]; Q_TILE],
+    tail: impl Fn(usize, usize) -> f32,
+) -> [f32; Q_TILE] {
+    let mut out = [0.0f32; Q_TILE];
+    for (t, out_t) in out.iter_mut().enumerate() {
+        *out_t = reduce(&lanes[t], (base..n).map(|j| tail(j, t)));
+    }
+    out
+}
+
+#[target_feature(enable = "avx512f")]
+pub(crate) unsafe fn axpy_avx512(alpha: f32, x: &[f32], y: &mut [f32]) {
+    const W: usize = 16;
+    let n = x.len();
+    let chunks = n / W;
+    let av = _mm512_set1_ps(alpha);
+    let xp = x.as_ptr();
+    let yp = y.as_mut_ptr();
+    for i in 0..chunks {
+        let j = i * W;
+        let yv = _mm512_loadu_ps(yp.add(j));
+        _mm512_storeu_ps(
+            yp.add(j),
+            _mm512_add_ps(yv, _mm512_mul_ps(av, _mm512_loadu_ps(xp.add(j)))),
+        );
+    }
+    for j in chunks * W..n {
+        y[j] += alpha * x[j];
+    }
+}
+
+/// Broadcast a ymm into both 256-bit halves of a zmm using only
+/// AVX512F ops (`vshuff32x4` with an identity-pair mask).
+#[inline]
+#[target_feature(enable = "avx512f")]
+unsafe fn pair512(lo: __m256, hi: __m256) -> __m512 {
+    let a = _mm512_castps256_ps512(lo);
+    let b = _mm512_castps256_ps512(hi);
+    // imm 0b01_00_01_00: lanes [a.0, a.1, b.0, b.1] = [lo(256), hi(256)]
+    _mm512_shuffle_f32x4::<0x44>(a, b)
+}
+
+#[target_feature(enable = "avx512f")]
+pub(crate) unsafe fn dot4_avx512(a: &[f32], b: [&[f32]; Q_TILE]) -> [f32; Q_TILE] {
+    let n = a.len();
+    let chunks = n / LANES;
+    let ap = a.as_ptr();
+    let bp = [b[0].as_ptr(), b[1].as_ptr(), b[2].as_ptr(), b[3].as_ptr()];
+    // Two zmm accumulators, each holding two independent 8-lane query
+    // accumulators: lanes 0-7 = query t, lanes 8-15 = query t+1.  Each
+    // 8-lane half follows exactly the scalar accumulation order.
+    let mut acc01 = _mm512_setzero_ps();
+    let mut acc23 = _mm512_setzero_ps();
+    for i in 0..chunks {
+        let j = i * LANES;
+        let x8 = _mm256_loadu_ps(ap.add(j));
+        let xv = pair512(x8, x8);
+        let b01 = pair512(
+            _mm256_loadu_ps(bp[0].add(j)),
+            _mm256_loadu_ps(bp[1].add(j)),
+        );
+        let b23 = pair512(
+            _mm256_loadu_ps(bp[2].add(j)),
+            _mm256_loadu_ps(bp[3].add(j)),
+        );
+        acc01 = _mm512_add_ps(acc01, _mm512_mul_ps(xv, b01));
+        acc23 = _mm512_add_ps(acc23, _mm512_mul_ps(xv, b23));
+    }
+    let mut lanes = [[0.0f32; LANES]; Q_TILE];
+    // One zmm store covers two query accumulators; the pointer is
+    // derived from the whole 4x8 array so both halves are in bounds.
+    let lp = lanes.as_mut_ptr() as *mut f32;
+    _mm512_storeu_ps(lp, acc01);
+    _mm512_storeu_ps(lp.add(2 * LANES), acc23);
+    finish4(n, chunks * LANES, &lanes, |j, t| a[j] * b[t][j])
+}
+
+#[target_feature(enable = "avx512f")]
+pub(crate) unsafe fn dot4_i8_avx512(
+    codes: &[i8],
+    scale: f32,
+    b: [&[f32]; Q_TILE],
+) -> [f32; Q_TILE] {
+    let n = codes.len();
+    let chunks = n / LANES;
+    let cp = codes.as_ptr();
+    let bp = [b[0].as_ptr(), b[1].as_ptr(), b[2].as_ptr(), b[3].as_ptr()];
+    let mut acc01 = _mm512_setzero_ps();
+    let mut acc23 = _mm512_setzero_ps();
+    for i in 0..chunks {
+        let j = i * LANES;
+        let c8 = _mm_loadl_epi64(cp.add(j) as *const __m128i);
+        let x8 = _mm256_cvtepi32_ps(_mm256_cvtepi8_epi32(c8));
+        let xv = pair512(x8, x8);
+        let b01 = pair512(
+            _mm256_loadu_ps(bp[0].add(j)),
+            _mm256_loadu_ps(bp[1].add(j)),
+        );
+        let b23 = pair512(
+            _mm256_loadu_ps(bp[2].add(j)),
+            _mm256_loadu_ps(bp[3].add(j)),
+        );
+        acc01 = _mm512_add_ps(acc01, _mm512_mul_ps(xv, b01));
+        acc23 = _mm512_add_ps(acc23, _mm512_mul_ps(xv, b23));
+    }
+    let mut lanes = [[0.0f32; LANES]; Q_TILE];
+    let lp = lanes.as_mut_ptr() as *mut f32;
+    _mm512_storeu_ps(lp, acc01);
+    _mm512_storeu_ps(lp.add(2 * LANES), acc23);
+    let out = finish4(n, chunks * LANES, &lanes, |j, t| {
+        codes[j] as f32 * b[t][j]
+    });
+    [out[0] * scale, out[1] * scale, out[2] * scale, out[3] * scale]
+}

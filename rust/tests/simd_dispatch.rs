@@ -1,0 +1,342 @@
+//! Cross-level SIMD dispatch property tests: every available dispatch
+//! level must be **bit-identical** to the scalar reference on
+//! randomized lengths (0..=67 plus larger, so every remainder path
+//! runs), unaligned sub-slices, and subnormal/extreme magnitudes.
+//!
+//! This binary is also the one place the process-global selection
+//! (`force_level` / `active` / `select_simd`) has its semantics pinned:
+//! it runs in its own process, and all assertions on the global live in
+//! a single `#[test]` fn (tests in one binary share threads — every
+//! other test here goes through `Dispatch::for_level` only).
+
+use fullw2v::vecops::{
+    available_levels, Dispatch, SimdLevel, Q_TILE,
+};
+
+/// Deterministic splitmix-style generator (no rand crate offline).
+struct Lcg(u64);
+
+impl Lcg {
+    fn new(seed: u64) -> Lcg {
+        Lcg(seed.wrapping_mul(0x9E37_79B9_7F4A_7C15) | 1)
+    }
+
+    fn next_u32(&mut self) -> u32 {
+        self.0 = self
+            .0
+            .wrapping_mul(6364136223846793005)
+            .wrapping_add(1442695040888963407);
+        (self.0 >> 33) as u32
+    }
+
+    fn unit(&mut self) -> f32 {
+        self.next_u32() as f32 / u32::MAX as f32 * 2.0 - 1.0
+    }
+
+    fn i8v(&mut self) -> i8 {
+        (self.next_u32() & 0xFF) as u8 as i8
+    }
+}
+
+/// Value regimes the identity must survive: ordinary magnitudes,
+/// subnormals (gradual underflow — DAZ/FTZ are off in Rust, scalar and
+/// vector units must agree), and near-overflow extremes (products hit
+/// ~1e38; partial sums may round to infinity, identically on each
+/// path).
+const REGIMES: [&str; 3] = ["unit", "subnormal", "extreme"];
+
+fn sample(rng: &mut Lcg, regime: &str) -> f32 {
+    let u = rng.unit();
+    match regime {
+        "unit" => u,
+        // mix subnormals with ordinary values so additions cross the
+        // normal/subnormal boundary
+        "subnormal" => {
+            if rng.next_u32() % 2 == 0 {
+                u * 1e-42
+            } else {
+                u * 1e-3
+            }
+        }
+        "extreme" => u * 1e19,
+        other => unreachable!("unknown regime {other}"),
+    }
+}
+
+fn lengths() -> Vec<usize> {
+    (0..=67).chain([96, 128, 131, 257, 1000]).collect()
+}
+
+fn non_scalar_levels() -> Vec<SimdLevel> {
+    available_levels()
+        .into_iter()
+        .filter(|&l| l != SimdLevel::Scalar)
+        .collect()
+}
+
+#[test]
+fn pair_kernels_bit_identical_across_levels() {
+    let scalar = Dispatch::for_level(SimdLevel::Scalar).unwrap();
+    let levels = non_scalar_levels();
+    for (ri, &regime) in REGIMES.iter().enumerate() {
+        let mut rng = Lcg::new(0xF00D + ri as u64);
+        for n in lengths() {
+            // offsets into a padded buffer exercise unaligned loads —
+            // the SIMD paths must not assume 32/64-byte alignment
+            for off in 0..3usize {
+                let pad = n + off;
+                let a_buf: Vec<f32> =
+                    (0..pad).map(|_| sample(&mut rng, regime)).collect();
+                let b_buf: Vec<f32> =
+                    (0..pad).map(|_| sample(&mut rng, regime)).collect();
+                let c_buf: Vec<i8> = (0..pad).map(|_| rng.i8v()).collect();
+                let (a, b, codes) =
+                    (&a_buf[off..], &b_buf[off..], &c_buf[off..]);
+                let scale = sample(&mut rng, "unit");
+                let alpha = sample(&mut rng, regime);
+
+                let want_dot = scalar.dot(a, b);
+                let want_i8 = scalar.dot_i8(codes, scale, b);
+                let want_f64 = scalar.dot_f64(a, b);
+                let mut want_y = b.to_vec();
+                scalar.axpy(alpha, a, &mut want_y);
+
+                for &l in &levels {
+                    let d = Dispatch::for_level(l).unwrap();
+                    let ctx = format!("{regime} n={n} off={off} {l}");
+                    assert_eq!(
+                        d.dot(a, b).to_bits(),
+                        want_dot.to_bits(),
+                        "dot {ctx}"
+                    );
+                    assert_eq!(
+                        d.dot_i8(codes, scale, b).to_bits(),
+                        want_i8.to_bits(),
+                        "dot_i8 {ctx}"
+                    );
+                    assert_eq!(
+                        d.dot_f64(a, b).to_bits(),
+                        want_f64.to_bits(),
+                        "dot_f64 {ctx}"
+                    );
+                    let mut y = b.to_vec();
+                    d.axpy(alpha, a, &mut y);
+                    for (i, (got, want)) in
+                        y.iter().zip(&want_y).enumerate()
+                    {
+                        assert_eq!(
+                            got.to_bits(),
+                            want.to_bits(),
+                            "axpy[{i}] {ctx}"
+                        );
+                    }
+                }
+            }
+        }
+    }
+}
+
+#[test]
+fn tile_kernels_bit_identical_across_levels() {
+    let scalar = Dispatch::for_level(SimdLevel::Scalar).unwrap();
+    let levels = non_scalar_levels();
+    for (ri, &regime) in REGIMES.iter().enumerate() {
+        let mut rng = Lcg::new(0xBEEF + ri as u64);
+        for n in lengths() {
+            let a_buf: Vec<f32> =
+                (0..n).map(|_| sample(&mut rng, regime)).collect();
+            let c_buf: Vec<i8> = (0..n).map(|_| rng.i8v()).collect();
+            let qs: Vec<Vec<f32>> = (0..Q_TILE)
+                .map(|_| (0..n).map(|_| sample(&mut rng, regime)).collect())
+                .collect();
+            let qr: [&[f32]; Q_TILE] =
+                [&qs[0], &qs[1], &qs[2], &qs[3]];
+            let scale = sample(&mut rng, "unit");
+
+            let want4 = scalar.dot4(&a_buf, qr);
+            let want4_i8 = scalar.dot4_i8(&c_buf, scale, qr);
+            // the dot4 contract: lane t is bit-identical to dot(a, q_t)
+            for t in 0..Q_TILE {
+                assert_eq!(
+                    want4[t].to_bits(),
+                    scalar.dot(&a_buf, qr[t]).to_bits(),
+                    "scalar dot4 lane {t} n={n}"
+                );
+            }
+            for &l in &levels {
+                let d = Dispatch::for_level(l).unwrap();
+                let got4 = d.dot4(&a_buf, qr);
+                let got4_i8 = d.dot4_i8(&c_buf, scale, qr);
+                for t in 0..Q_TILE {
+                    assert_eq!(
+                        got4[t].to_bits(),
+                        want4[t].to_bits(),
+                        "dot4[{t}] {regime} n={n} {l}"
+                    );
+                    assert_eq!(
+                        got4_i8[t].to_bits(),
+                        want4_i8[t].to_bits(),
+                        "dot4_i8[{t}] {regime} n={n} {l}"
+                    );
+                }
+            }
+        }
+    }
+}
+
+#[test]
+fn block_and_tile_loops_bit_identical_across_levels() {
+    let scalar = Dispatch::for_level(SimdLevel::Scalar).unwrap();
+    let levels = non_scalar_levels();
+    let mut rng = Lcg::new(0xCAFE);
+    // row counts and query counts straddle the Q_TILE remainder paths
+    for &(n_rows, dim) in &[(1usize, 1usize), (3, 5), (7, 8), (9, 16), (33, 17)] {
+        let rows: Vec<f32> =
+            (0..n_rows * dim).map(|_| sample(&mut rng, "unit")).collect();
+        let codes: Vec<i8> = (0..n_rows * dim).map(|_| rng.i8v()).collect();
+        let scales: Vec<f32> =
+            (0..n_rows).map(|_| sample(&mut rng, "unit")).collect();
+        let x: Vec<f32> = (0..dim).map(|_| sample(&mut rng, "unit")).collect();
+        let alphas: Vec<f32> =
+            (0..n_rows).map(|_| sample(&mut rng, "unit")).collect();
+        for n_q in [1usize, 3, 4, 5, 9] {
+            let qs: Vec<Vec<f32>> = (0..n_q)
+                .map(|_| (0..dim).map(|_| sample(&mut rng, "unit")).collect())
+                .collect();
+            let qr: Vec<&[f32]> = qs.iter().map(|q| q.as_slice()).collect();
+            let mut want = vec![0.0f32; n_rows * n_q];
+            scalar.tile_scores_f32(&rows, dim, &qr, &mut want);
+            let mut want_i8 = vec![0.0f32; n_rows * n_q];
+            scalar.tile_scores_i8(&codes, &scales, dim, &qr, &mut want_i8);
+            for &l in &levels {
+                let d = Dispatch::for_level(l).unwrap();
+                let mut got = vec![0.0f32; n_rows * n_q];
+                d.tile_scores_f32(&rows, dim, &qr, &mut got);
+                let mut got_i8 = vec![0.0f32; n_rows * n_q];
+                d.tile_scores_i8(&codes, &scales, dim, &qr, &mut got_i8);
+                for i in 0..want.len() {
+                    assert_eq!(
+                        got[i].to_bits(),
+                        want[i].to_bits(),
+                        "tile_f32[{i}] {n_rows}x{dim} q={n_q} {l}"
+                    );
+                    assert_eq!(
+                        got_i8[i].to_bits(),
+                        want_i8[i].to_bits(),
+                        "tile_i8[{i}] {n_rows}x{dim} q={n_q} {l}"
+                    );
+                }
+            }
+        }
+        // dot_block / axpy_block
+        let mut want_s = vec![0.0f32; n_rows];
+        scalar.dot_block(&rows, dim, &x, &mut want_s);
+        let mut want_rows = rows.clone();
+        scalar.axpy_block(&alphas, &x, &mut want_rows, dim);
+        for &l in &levels {
+            let d = Dispatch::for_level(l).unwrap();
+            let mut got_s = vec![0.0f32; n_rows];
+            d.dot_block(&rows, dim, &x, &mut got_s);
+            let mut got_rows = rows.clone();
+            d.axpy_block(&alphas, &x, &mut got_rows, dim);
+            for r in 0..n_rows {
+                assert_eq!(
+                    got_s[r].to_bits(),
+                    want_s[r].to_bits(),
+                    "dot_block[{r}] {n_rows}x{dim} {l}"
+                );
+            }
+            for i in 0..rows.len() {
+                assert_eq!(
+                    got_rows[i].to_bits(),
+                    want_rows[i].to_bits(),
+                    "axpy_block[{i}] {n_rows}x{dim} {l}"
+                );
+            }
+        }
+    }
+}
+
+/// With codes and integer-valued f32 queries in [-8, 8) and scale 1.0,
+/// every product and every partial sum is a small integer — exactly
+/// representable in f32 — so each level must return the *exact* i64
+/// accumulation, not just scalar's rounding of it.
+#[test]
+fn dot_i8_accumulates_small_integers_exactly() {
+    let mut rng = Lcg::new(0xD1CE);
+    for n in lengths() {
+        let codes: Vec<i8> =
+            (0..n).map(|_| (rng.next_u32() % 16) as i8 - 8).collect();
+        let xi: Vec<i64> =
+            (0..n).map(|_| (rng.next_u32() % 16) as i64 - 8).collect();
+        let x: Vec<f32> = xi.iter().map(|&v| v as f32).collect();
+        let exact: i64 =
+            codes.iter().zip(&xi).map(|(&c, &v)| c as i64 * v).sum();
+        for l in available_levels() {
+            let d = Dispatch::for_level(l).unwrap();
+            let got = d.dot_i8(&codes, 1.0, &x);
+            assert_eq!(
+                got, exact as f32,
+                "dot_i8 integer accumulation n={n} {l}"
+            );
+            // and the tile lanes inherit the same exactness
+            let qr: [&[f32]; Q_TILE] = [&x, &x, &x, &x];
+            for (t, v) in d.dot4_i8(&codes, 1.0, qr).into_iter().enumerate() {
+                assert_eq!(v, exact as f32, "dot4_i8[{t}] n={n} {l}");
+            }
+        }
+    }
+}
+
+/// The process-global selection, serialized in one test fn (see module
+/// docs).  This binary's own process: safe to assert `active()` here.
+#[test]
+fn selection_precedence_and_forcing() {
+    use fullw2v::vecops::{
+        active, detect_level, force_level, select_simd, simd_selection,
+    };
+
+    // a CLI flag wins and is recorded as the source
+    let sel = select_simd(Some("scalar")).unwrap();
+    assert_eq!(sel.level, SimdLevel::Scalar);
+    assert_eq!(sel.source, "--simd");
+    assert_eq!(active().level(), SimdLevel::Scalar);
+    assert_eq!(simd_selection().level, SimdLevel::Scalar);
+    assert_eq!(simd_selection().source, "--simd");
+
+    // forcing any available level redirects active() immediately
+    for l in available_levels() {
+        force_level(l).unwrap();
+        assert_eq!(active().level(), l, "force {l}");
+    }
+
+    // `--simd auto` resolves to the detected level
+    let sel = select_simd(Some("auto")).unwrap();
+    assert_eq!(sel.level, detect_level());
+
+    // bad values and unavailable levels error without disturbing the
+    // active selection
+    let before = active().level();
+    assert!(select_simd(Some("sse9")).is_err());
+    for l in SimdLevel::ALL {
+        if !l.available() {
+            assert!(select_simd(Some(l.name())).is_err(), "{l}");
+            assert!(force_level(l).is_err(), "{l}");
+        }
+    }
+    assert_eq!(active().level(), before);
+
+    // no flag: FULLW2V_SIMD decides if set (the forced-scalar CI job
+    // relies on this), otherwise detection
+    let sel = select_simd(None).unwrap();
+    assert!(sel.level.available());
+    match std::env::var("FULLW2V_SIMD") {
+        Ok(v) if !v.trim().is_empty() => {
+            assert_eq!(sel.source, "FULLW2V_SIMD");
+            if let Ok(Some(l)) = SimdLevel::parse(&v) {
+                assert_eq!(sel.level, l);
+            }
+        }
+        _ => assert_eq!(sel.source, "detected"),
+    }
+}
