@@ -1,0 +1,516 @@
+//! A comment/string/raw-string-aware Rust tokenizer for the repo lints.
+//!
+//! This is *not* a Rust parser — the lints only need a token stream that
+//! never desyncs: an `unsafe` inside a string literal, a `*` inside a
+//! nested block comment, or a `"` inside a raw string must not leak into
+//! the code tokens the lints match on.  The hard cases are exactly the
+//! ones the property tests in this module hammer:
+//!
+//! * nested block comments (`/* /* */ */` — Rust nests them, C does not)
+//! * raw strings with arbitrary `#` counts (`r##"..."##`, `br#"..."#`)
+//! * byte strings / byte chars (`b"..."`, `b'x'`) with escapes
+//! * lifetime ticks vs char literals (`'a` vs `'a'` vs `'\n'`)
+//! * raw identifiers (`r#match` is an ident, `r#"` opens a raw string)
+//! * float literals vs range expressions (`1.5e-3` vs `0..10`)
+//!
+//! Everything the lints match structurally (idents, punctuation) comes
+//! out as one token per ident / one token per punct char; multi-char
+//! operators like `+=` and `::` are recognized by the lints as adjacent
+//! `Punct` tokens.  Comments are kept (with their text) because the
+//! lints look for `// SAFETY:` / `// ORDERING:` / `// LINT: allow(..)`
+//! markers; strings are kept as opaque tokens so their *content* can
+//! never match a code pattern.
+
+/// Token class.  `Str` covers plain and byte strings, `RawStr` covers
+/// raw and raw-byte strings; the lints only care that their content is
+/// sealed off from the code stream.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum TokKind {
+    Ident,
+    Lifetime,
+    Char,
+    Str,
+    RawStr,
+    Num,
+    Punct,
+    Comment,
+}
+
+/// One token with its 1-based source line (multi-line tokens carry the
+/// line they start on).
+#[derive(Debug, Clone)]
+pub struct Token {
+    pub kind: TokKind,
+    pub text: String,
+    pub line: u32,
+}
+
+fn is_ident_start(c: char) -> bool {
+    c.is_alphabetic() || c == '_'
+}
+
+fn is_ident_continue(c: char) -> bool {
+    c.is_alphanumeric() || c == '_'
+}
+
+/// Tokenize `src`.  Never fails: unterminated literals consume to end of
+/// input (the lints run on code that already compiles, so this only
+/// matters for not panicking on fixtures).
+pub fn lex(src: &str) -> Vec<Token> {
+    let cs: Vec<char> = src.chars().collect();
+    let n = cs.len();
+    let mut toks: Vec<Token> = Vec::new();
+    let mut i = 0usize;
+    let mut line: u32 = 1;
+
+    let text = |a: usize, b: usize, cs: &[char]| -> String {
+        cs[a..b].iter().collect()
+    };
+
+    while i < n {
+        let c = cs[i];
+        if c == '\n' {
+            line += 1;
+            i += 1;
+            continue;
+        }
+        if c.is_whitespace() {
+            i += 1;
+            continue;
+        }
+        // line comments (incl. `///` and `//!` doc comments)
+        if c == '/' && i + 1 < n && cs[i + 1] == '/' {
+            let start = i;
+            while i < n && cs[i] != '\n' {
+                i += 1;
+            }
+            toks.push(Token {
+                kind: TokKind::Comment,
+                text: text(start, i, &cs),
+                line,
+            });
+            continue;
+        }
+        // block comments, nested per Rust's grammar
+        if c == '/' && i + 1 < n && cs[i + 1] == '*' {
+            let start = i;
+            let start_line = line;
+            let mut depth = 1usize;
+            i += 2;
+            while i < n && depth > 0 {
+                if cs[i] == '\n' {
+                    line += 1;
+                    i += 1;
+                } else if cs[i] == '/' && i + 1 < n && cs[i + 1] == '*' {
+                    depth += 1;
+                    i += 2;
+                } else if cs[i] == '*' && i + 1 < n && cs[i + 1] == '/' {
+                    depth -= 1;
+                    i += 2;
+                } else {
+                    i += 1;
+                }
+            }
+            toks.push(Token {
+                kind: TokKind::Comment,
+                text: text(start, i, &cs),
+                line: start_line,
+            });
+            continue;
+        }
+        // r / b prefixes: raw strings, byte strings, byte chars, raw
+        // idents — all before the generic ident path so `r#"` cannot be
+        // read as ident `r` + punct `#` + string.
+        if c == 'r' || c == 'b' {
+            let mut j = i;
+            let mut byte = false;
+            if cs[j] == 'b' {
+                byte = true;
+                j += 1;
+            }
+            let raw = j < n && cs[j] == 'r';
+            if raw {
+                j += 1;
+            }
+            let mut hashes = 0usize;
+            while raw && j < n && cs[j] == '#' {
+                hashes += 1;
+                j += 1;
+            }
+            if raw && j < n && cs[j] == '"' {
+                // raw (byte) string: scan to `"` + `hashes` hashes
+                let start = i;
+                let start_line = line;
+                j += 1;
+                'scan: while j < n {
+                    if cs[j] == '\n' {
+                        line += 1;
+                        j += 1;
+                        continue;
+                    }
+                    if cs[j] == '"' {
+                        let mut k = 0usize;
+                        while k < hashes && j + 1 + k < n && cs[j + 1 + k] == '#' {
+                            k += 1;
+                        }
+                        if k == hashes {
+                            j += 1 + hashes;
+                            break 'scan;
+                        }
+                    }
+                    j += 1;
+                }
+                i = j;
+                toks.push(Token {
+                    kind: TokKind::RawStr,
+                    text: text(start, i, &cs),
+                    line: start_line,
+                });
+                continue;
+            }
+            if raw && hashes == 1 && j < n && is_ident_start(cs[j]) {
+                // raw identifier r#match — lexes as one Ident token
+                let start = i;
+                while j < n && is_ident_continue(cs[j]) {
+                    j += 1;
+                }
+                i = j;
+                toks.push(Token {
+                    kind: TokKind::Ident,
+                    text: text(start, i, &cs),
+                    line,
+                });
+                continue;
+            }
+            if byte && !raw && j < n && (cs[j] == '"' || cs[j] == '\'') {
+                // b"..." / b'x' with escapes
+                let quote = cs[j];
+                let start = i;
+                let start_line = line;
+                j += 1;
+                while j < n {
+                    if cs[j] == '\\' {
+                        j += 2;
+                    } else if cs[j] == quote {
+                        j += 1;
+                        break;
+                    } else {
+                        if cs[j] == '\n' {
+                            line += 1;
+                        }
+                        j += 1;
+                    }
+                }
+                i = j;
+                toks.push(Token {
+                    kind: if quote == '"' { TokKind::Str } else { TokKind::Char },
+                    text: text(start, i, &cs),
+                    line: start_line,
+                });
+                continue;
+            }
+            // plain ident starting with r/b — fall through
+        }
+        if is_ident_start(c) {
+            let start = i;
+            while i < n && is_ident_continue(cs[i]) {
+                i += 1;
+            }
+            toks.push(Token {
+                kind: TokKind::Ident,
+                text: text(start, i, &cs),
+                line,
+            });
+            continue;
+        }
+        // strings with escapes
+        if c == '"' {
+            let start = i;
+            let start_line = line;
+            i += 1;
+            while i < n {
+                if cs[i] == '\\' {
+                    i += 2;
+                } else if cs[i] == '"' {
+                    i += 1;
+                    break;
+                } else {
+                    if cs[i] == '\n' {
+                        line += 1;
+                    }
+                    i += 1;
+                }
+            }
+            toks.push(Token {
+                kind: TokKind::Str,
+                text: text(start, i, &cs),
+                line: start_line,
+            });
+            continue;
+        }
+        // `'` opens either a lifetime or a char literal.  `'a'` is a
+        // char (tick, one ident-start char, tick); `'abc` / `'static`
+        // are lifetimes; `'\n'`, `'('`, `'\u{1F600}'` are chars.
+        if c == '\'' {
+            if i + 1 < n
+                && is_ident_start(cs[i + 1])
+                && !(i + 2 < n && cs[i + 2] == '\'')
+            {
+                let start = i;
+                i += 2;
+                while i < n && is_ident_continue(cs[i]) {
+                    i += 1;
+                }
+                toks.push(Token {
+                    kind: TokKind::Lifetime,
+                    text: text(start, i, &cs),
+                    line,
+                });
+                continue;
+            }
+            let start = i;
+            i += 1;
+            while i < n {
+                if cs[i] == '\\' {
+                    i += 2;
+                } else if cs[i] == '\'' {
+                    i += 1;
+                    break;
+                } else if cs[i] == '\n' {
+                    // not a valid char literal; bail so a stray tick
+                    // cannot swallow the rest of the file
+                    break;
+                } else {
+                    i += 1;
+                }
+            }
+            toks.push(Token {
+                kind: TokKind::Char,
+                text: text(start, i, &cs),
+                line,
+            });
+            continue;
+        }
+        if c.is_ascii_digit() {
+            let start = i;
+            let hex = c == '0' && i + 1 < n && (cs[i + 1] == 'x' || cs[i + 1] == 'X');
+            let mut seen_dot = false;
+            i += 1;
+            while i < n {
+                let ch = cs[i];
+                if is_ident_continue(ch) {
+                    i += 1;
+                } else if (ch == '+' || ch == '-')
+                    && !hex
+                    && matches!(cs[i - 1], 'e' | 'E')
+                {
+                    // exponent sign inside `1.5e-3` — but never inside
+                    // hex (`0x1E` must not eat a following `+ 2`)
+                    i += 1;
+                } else if ch == '.'
+                    && !seen_dot
+                    && i + 1 < n
+                    && cs[i + 1].is_ascii_digit()
+                {
+                    // `1.5` continues the number; `0..10` does not
+                    // (the next char is `.`), `1.max(2)` does not
+                    // (the next char is alphabetic)
+                    seen_dot = true;
+                    i += 1;
+                } else {
+                    break;
+                }
+            }
+            toks.push(Token {
+                kind: TokKind::Num,
+                text: text(start, i, &cs),
+                line,
+            });
+            continue;
+        }
+        toks.push(Token {
+            kind: TokKind::Punct,
+            text: c.to_string(),
+            line,
+        });
+        i += 1;
+    }
+    toks
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::rng::Pcg32;
+
+    fn idents(src: &str) -> Vec<(String, u32)> {
+        lex(src)
+            .into_iter()
+            .filter(|t| t.kind == TokKind::Ident)
+            .map(|t| (t.text, t.line))
+            .collect()
+    }
+
+    #[test]
+    fn nested_block_comments_do_not_desync() {
+        let src = "a /* x /* unsafe */ y */ b";
+        let ids = idents(src);
+        assert_eq!(ids, vec![("a".into(), 1), ("b".into(), 1)]);
+    }
+
+    #[test]
+    fn raw_strings_with_hashes_seal_their_content() {
+        let src = r####"let s = r##"quote " and "# inside unsafe"##; done"####;
+        let ids: Vec<String> = idents(src).into_iter().map(|p| p.0).collect();
+        assert_eq!(ids, vec!["let", "s", "done"]);
+        let raw: Vec<Token> = lex(src)
+            .into_iter()
+            .filter(|t| t.kind == TokKind::RawStr)
+            .collect();
+        assert_eq!(raw.len(), 1);
+        assert!(raw[0].text.contains("unsafe"));
+    }
+
+    #[test]
+    fn raw_byte_strings_and_byte_chars() {
+        let src = r#"p.push(&br"GET /"[..]); let q = b'\''; let s = b"a\"b"; t"#;
+        let ids: Vec<String> = idents(src).into_iter().map(|p| p.0).collect();
+        assert_eq!(ids, vec!["p", "push", "let", "q", "let", "s", "t"]);
+    }
+
+    #[test]
+    fn lifetimes_vs_char_literals() {
+        let src = "fn f<'a>(x: &'a str) { let c = 'a'; let nl = '\\n'; let p = '('; }";
+        let toks = lex(src);
+        let lifetimes: Vec<&str> = toks
+            .iter()
+            .filter(|t| t.kind == TokKind::Lifetime)
+            .map(|t| t.text.as_str())
+            .collect();
+        assert_eq!(lifetimes, vec!["'a", "'a"]);
+        let chars: Vec<&str> = toks
+            .iter()
+            .filter(|t| t.kind == TokKind::Char)
+            .map(|t| t.text.as_str())
+            .collect();
+        assert_eq!(chars, vec!["'a'", "'\\n'", "'('"]);
+    }
+
+    #[test]
+    fn static_lifetime_and_labels() {
+        let src = "x: &'static str; 'outer: loop { break 'outer; }";
+        let toks = lex(src);
+        let lifetimes: Vec<&str> = toks
+            .iter()
+            .filter(|t| t.kind == TokKind::Lifetime)
+            .map(|t| t.text.as_str())
+            .collect();
+        assert_eq!(lifetimes, vec!["'static", "'outer", "'outer"]);
+    }
+
+    #[test]
+    fn numbers_vs_ranges_and_methods() {
+        let src = "let a = 1.5e-3; for i in 0..10 {} let b = 2.0f64; let h = 0x1F; let c = 1.max(2);";
+        let toks = lex(src);
+        let nums: Vec<&str> = toks
+            .iter()
+            .filter(|t| t.kind == TokKind::Num)
+            .map(|t| t.text.as_str())
+            .collect();
+        assert_eq!(nums, vec!["1.5e-3", "0", "10", "2.0f64", "0x1F", "1", "2"]);
+    }
+
+    #[test]
+    fn hex_number_does_not_eat_a_plus() {
+        let src = "let x = 0x1E + 2;";
+        let nums: Vec<String> = lex(src)
+            .into_iter()
+            .filter(|t| t.kind == TokKind::Num)
+            .map(|t| t.text)
+            .collect();
+        assert_eq!(nums, vec!["0x1E", "2"]);
+    }
+
+    #[test]
+    fn raw_identifiers_are_idents() {
+        let src = "let r#match = r#move; s";
+        let ids: Vec<String> = idents(src).into_iter().map(|p| p.0).collect();
+        assert_eq!(ids, vec!["let", "r#match", "r#move", "s"]);
+    }
+
+    #[test]
+    fn line_numbers_survive_multiline_tokens() {
+        let src = "a\n/* one\ntwo */\nb \"x\ny\" c";
+        let ids = idents(src);
+        assert_eq!(ids, vec![("a".into(), 1), ("b".into(), 4), ("c".into(), 5)]);
+    }
+
+    /// Property test: interleave "sealed" snippets (comments, strings,
+    /// raw strings, chars — all containing the decoy word) with real
+    /// planted idents, in a random order, and check that exactly the
+    /// planted idents come back out, each on its computed line.  This is
+    /// the desync property the lints rely on: a lexer bug that lets any
+    /// sealed context bleed changes the ident count or the line map.
+    #[test]
+    fn property_sealed_contexts_never_leak_idents() {
+        // snippets whose DECOY occurrences must never surface as idents
+        const SEALED: &[&str] = &[
+            "// line DECOY comment\n",
+            "/* block DECOY */",
+            "/* outer /* DECOY nested */ still */",
+            "/* multi\nline DECOY\ncomment */",
+            "\"str DECOY lit\"",
+            "\"esc \\\" DECOY\"",
+            "\"multi\nline DECOY\"",
+            "r\"raw DECOY\"",
+            "r#\"raw # DECOY \" quote\"#",
+            "r##\"deeper \"# DECOY\"##",
+            "b\"byte DECOY\"",
+            "br#\"rawbyte DECOY\"#",
+            "'D'",
+            "'\\''",
+            "b'\\\\'",
+        ];
+        const FILLER: &[&str] = &["+", "{", "}", "(", ")", ";", ",", "= 42", "0..7", "1.5e-3", "&'a str"];
+        let mut rng = Pcg32::new(0x5EED_1E3A);
+        for _ in 0..200 {
+            let mut src = String::new();
+            let mut planted: Vec<(u32, u32)> = Vec::new(); // (ordinal, line)
+            let mut next_ord = 0u32;
+            let pieces = 3 + rng.next_bounded(30);
+            for _ in 0..pieces {
+                let line = 1 + src.matches('\n').count() as u32;
+                match rng.next_bounded(4) {
+                    0 => {
+                        // plant a real ident the lexer must surface
+                        src.push_str(&format!("DECOY{next_ord} "));
+                        planted.push((next_ord, line));
+                        next_ord += 1;
+                    }
+                    1 => {
+                        let s = SEALED[rng.next_bounded(SEALED.len() as u32) as usize];
+                        src.push_str(s);
+                        src.push(' ');
+                    }
+                    _ => {
+                        let s = FILLER[rng.next_bounded(FILLER.len() as u32) as usize];
+                        src.push_str(s);
+                        src.push(' ');
+                    }
+                }
+                if rng.next_bounded(3) == 0 {
+                    src.push('\n');
+                }
+            }
+            let got: Vec<(u32, u32)> = lex(&src)
+                .into_iter()
+                .filter(|t| t.kind == TokKind::Ident && t.text.starts_with("DECOY"))
+                .map(|t| {
+                    let ord: u32 = t.text["DECOY".len()..].parse().unwrap_or(u32::MAX);
+                    (ord, t.line)
+                })
+                .collect();
+            assert_eq!(got, planted, "desync on source:\n{src}");
+        }
+    }
+}

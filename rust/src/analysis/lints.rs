@@ -1,0 +1,1089 @@
+//! Repo-invariant lints over the [`super::lexer`] token stream.
+//!
+//! Every lint implements [`Lint`] and reports [`Finding`]s anchored to
+//! `file:line`.  The five shipped lints pin the load-bearing conventions
+//! PRs 2–7 created (see the module docs on [`super`] for the catalogue
+//! and the waiver workflow).  Matching is structural over tokens — the
+//! lexer has already sealed strings and comments, so a `panic!` inside a
+//! string literal or an `unsafe` in a doc comment can never fire a lint.
+//!
+//! ## Waivers
+//!
+//! A finding is suppressed by a `// LINT: allow(<lint-name>): <reason>`
+//! comment either trailing the offending line or attached above the
+//! statement (contiguous comment block, no code lines in between).  The
+//! comment *is* the reviewable artifact: adding one shows up in the
+//! diff next to the code it excuses.  Two things are deliberately not
+//! waivable: the FMA-intrinsic ban (the bit-identity contract has no
+//! exceptions) and the unsafe budget (new unsafe must edit
+//! `unsafe_budget.txt` instead).
+
+use super::lexer::{lex, TokKind, Token};
+use std::collections::{BTreeMap, BTreeSet};
+
+/// Repo-relative path of the checked-in unsafe allowlist.
+pub const BUDGET_PATH: &str = "rust/src/analysis/unsafe_budget.txt";
+
+/// One diagnostic: where, which lint, what, and how to fix it.
+#[derive(Debug, Clone)]
+pub struct Finding {
+    pub file: String,
+    pub line: u32,
+    pub lint: &'static str,
+    pub msg: String,
+    pub hint: &'static str,
+}
+
+/// An extensible repo lint.  `check` runs once per source file;
+/// `finish` runs once after all files (for cross-file accounting like
+/// the unsafe budget).
+pub trait Lint {
+    fn name(&self) -> &'static str;
+    fn check(&mut self, ctx: &FileCtx<'_>, out: &mut Vec<Finding>);
+    fn finish(&mut self, _out: &mut Vec<Finding>) {}
+}
+
+/// Identifiers that read like operands but are keywords — a `*` after
+/// one of these is a dereference or pointer type, never multiplication.
+const NON_OPERAND_KEYWORDS: &[&str] = &[
+    "as", "if", "in", "return", "match", "while", "let", "else", "move",
+    "mut", "ref", "loop", "break", "continue", "unsafe", "where", "const",
+];
+
+const INT_SUFFIXES: &[&str] = &[
+    "u8", "u16", "u32", "u64", "u128", "usize", "i8", "i16", "i32", "i64",
+    "i128", "isize",
+];
+
+/// Per-file token stream plus the derived maps every lint shares.
+pub struct FileCtx<'a> {
+    pub path: &'a str,
+    toks: Vec<Token>,
+    /// Indices into `toks` of the non-comment tokens, in order.
+    code: Vec<usize>,
+    comments_by_line: BTreeMap<u32, Vec<usize>>,
+    code_lines: BTreeSet<u32>,
+    /// `#[cfg(test)]` item spans, as ranges over code positions.
+    test_spans: Vec<(usize, usize)>,
+}
+
+impl<'a> FileCtx<'a> {
+    pub fn new(path: &'a str, text: &str) -> Self {
+        let toks = lex(text);
+        let mut code = Vec::new();
+        let mut comments_by_line: BTreeMap<u32, Vec<usize>> = BTreeMap::new();
+        let mut code_lines = BTreeSet::new();
+        for (i, t) in toks.iter().enumerate() {
+            if t.kind == TokKind::Comment {
+                comments_by_line.entry(t.line).or_default().push(i);
+            } else {
+                code.push(i);
+                code_lines.insert(t.line);
+            }
+        }
+        let mut ctx = FileCtx {
+            path,
+            toks,
+            code,
+            comments_by_line,
+            code_lines,
+            test_spans: Vec::new(),
+        };
+        ctx.test_spans = ctx.find_test_spans();
+        ctx
+    }
+
+    pub fn code_len(&self) -> usize {
+        self.code.len()
+    }
+
+    fn tok(&self, p: usize) -> &Token {
+        &self.toks[self.code[p]]
+    }
+
+    pub fn line(&self, p: usize) -> u32 {
+        self.tok(p).line
+    }
+
+    /// Ident text at code position `p`, if it is an ident.
+    pub fn ident(&self, p: usize) -> Option<&str> {
+        if p < self.code.len() && self.tok(p).kind == TokKind::Ident {
+            Some(self.tok(p).text.as_str())
+        } else {
+            None
+        }
+    }
+
+    /// Punct text at code position `p`, if it is punctuation.
+    pub fn punct(&self, p: usize) -> Option<&str> {
+        if p < self.code.len() && self.tok(p).kind == TokKind::Punct {
+            Some(self.tok(p).text.as_str())
+        } else {
+            None
+        }
+    }
+
+    fn is_punct(&self, p: usize, s: &str) -> bool {
+        self.punct(p) == Some(s)
+    }
+
+    fn is_ident(&self, p: usize, s: &str) -> bool {
+        self.ident(p) == Some(s)
+    }
+
+    /// Position just past the delimiter that matches the opener at `p`.
+    fn match_delim(&self, p: usize, open: &str, close: &str) -> usize {
+        let mut depth = 0usize;
+        let mut q = p;
+        while q < self.code.len() {
+            if self.is_punct(q, open) {
+                depth += 1;
+            } else if self.is_punct(q, close) {
+                depth -= 1;
+                if depth == 0 {
+                    return q + 1;
+                }
+            }
+            q += 1;
+        }
+        self.code.len()
+    }
+
+    /// Spans (code positions) of items under a `#[cfg(test)]` attribute:
+    /// the attribute through either the item's matched `{ .. }` body or
+    /// its terminating `;`.
+    fn find_test_spans(&self) -> Vec<(usize, usize)> {
+        let mut spans = Vec::new();
+        let mut p = 0usize;
+        while p + 6 < self.code.len() {
+            let is_attr = self.is_punct(p, "#")
+                && self.is_punct(p + 1, "[")
+                && self.is_ident(p + 2, "cfg")
+                && self.is_punct(p + 3, "(")
+                && self.is_ident(p + 4, "test")
+                && self.is_punct(p + 5, ")")
+                && self.is_punct(p + 6, "]");
+            if !is_attr {
+                p += 1;
+                continue;
+            }
+            let mut q = p + 7;
+            let mut end = self.code.len();
+            while q < self.code.len() {
+                if self.is_punct(q, ";") {
+                    end = q + 1;
+                    break;
+                }
+                if self.is_punct(q, "{") {
+                    end = self.match_delim(q, "{", "}");
+                    break;
+                }
+                q += 1;
+            }
+            spans.push((p, end));
+            p = end;
+        }
+        spans
+    }
+
+    pub fn in_test(&self, p: usize) -> bool {
+        self.test_spans.iter().any(|&(a, b)| a <= p && p < b)
+    }
+
+    /// First code position of the statement containing `p` (statements
+    /// bound by `;`, `{`, `}` — match arms and struct fields fold into
+    /// their enclosing statement, which is what the comment-attachment
+    /// rules want).
+    fn stmt_start(&self, p: usize) -> usize {
+        let mut q = p;
+        while q > 0 {
+            if matches!(self.punct(q - 1), Some(";") | Some("{") | Some("}")) {
+                break;
+            }
+            q -= 1;
+        }
+        q
+    }
+
+    fn comment_on_line_contains(&self, line: u32, marker: &str) -> bool {
+        self.comments_by_line
+            .get(&line)
+            .is_some_and(|idxs| {
+                idxs.iter().any(|&i| self.toks[i].text.contains(marker))
+            })
+    }
+
+    /// Comment-only lines directly above `line` (stopping at the first
+    /// code or blank line) containing `marker`?
+    fn comment_block_above_contains(&self, line: u32, marker: &str) -> bool {
+        let mut l = line.saturating_sub(1);
+        while l >= 1 {
+            if self.code_lines.contains(&l)
+                || !self.comments_by_line.contains_key(&l)
+            {
+                return false;
+            }
+            if self.comment_on_line_contains(l, marker) {
+                return true;
+            }
+            l -= 1;
+        }
+        false
+    }
+
+    /// Is `marker` present in a comment trailing the token's line, in
+    /// the contiguous comment block directly above it (match arms), on
+    /// the statement's first line, or in the block above the statement?
+    pub fn has_marker(&self, p: usize, marker: &str) -> bool {
+        let line = self.line(p);
+        if self.comment_on_line_contains(line, marker)
+            || self.comment_block_above_contains(line, marker)
+        {
+            return true;
+        }
+        let stmt_line = self.line(self.stmt_start(p));
+        stmt_line != line
+            && (self.comment_on_line_contains(stmt_line, marker)
+                || self.comment_block_above_contains(stmt_line, marker))
+    }
+
+    /// Inline waiver: `// LINT: allow(<lint>): reason`.
+    pub fn waived(&self, p: usize, lint: &str) -> bool {
+        self.has_marker(p, &format!("LINT: allow({lint})"))
+    }
+
+    /// `*` at `p` used as binary multiplication (the previous token is
+    /// an operand: a number, a closing delimiter, or a non-keyword
+    /// ident) rather than a deref / raw-pointer sigil.
+    fn is_binary_star(&self, p: usize) -> bool {
+        if !self.is_punct(p, "*") || p == 0 {
+            return false;
+        }
+        let prev = self.tok(p - 1);
+        match prev.kind {
+            TokKind::Num => true,
+            TokKind::Ident => {
+                !NON_OPERAND_KEYWORDS.contains(&prev.text.as_str())
+            }
+            TokKind::Punct => prev.text == ")" || prev.text == "]",
+            _ => false,
+        }
+    }
+
+    /// Statement boundaries as ranges over code positions.
+    fn statements(&self) -> Vec<(usize, usize)> {
+        let mut out = Vec::new();
+        let mut start = 0usize;
+        for p in 0..self.code.len() {
+            if matches!(self.punct(p), Some(";") | Some("{") | Some("}")) {
+                if p > start {
+                    out.push((start, p));
+                }
+                start = p + 1;
+            }
+        }
+        if self.code.len() > start {
+            out.push((start, self.code.len()));
+        }
+        out
+    }
+
+    /// Body spans of `for` / `while` / `loop` loops.
+    fn loop_spans(&self) -> Vec<(usize, usize)> {
+        let mut out = Vec::new();
+        for p in 0..self.code.len() {
+            if matches!(self.ident(p), Some("for") | Some("while") | Some("loop"))
+            {
+                let mut q = p + 1;
+                while q < self.code.len() && !self.is_punct(q, "{") {
+                    q += 1;
+                }
+                if q < self.code.len() {
+                    out.push((q, self.match_delim(q, "{", "}")));
+                }
+            }
+        }
+        out
+    }
+}
+
+fn finding(
+    ctx: &FileCtx<'_>,
+    p: usize,
+    lint: &'static str,
+    msg: String,
+    hint: &'static str,
+) -> Finding {
+    Finding { file: ctx.path.to_string(), line: ctx.line(p), lint, msg, hint }
+}
+
+// ---------------------------------------------------------------------
+// L1: unsafe-audit
+// ---------------------------------------------------------------------
+
+/// Every `unsafe` site carries a `// SAFETY:` comment and its file
+/// appears in `unsafe_budget.txt` with the exact site count — so any
+/// new unsafe is a two-line reviewable diff (the comment and the budget
+/// bump).  `unsafe fn(..)` *types* (fn-pointer aliases) are not sites.
+pub struct UnsafeAudit {
+    budget: BTreeMap<String, usize>,
+    counted: BTreeMap<String, (usize, u32)>,
+}
+
+impl UnsafeAudit {
+    pub fn new(budget_text: &str) -> Result<Self, String> {
+        let mut budget = BTreeMap::new();
+        for (i, raw) in budget_text.lines().enumerate() {
+            let line = raw.split('#').next().unwrap_or("").trim();
+            if line.is_empty() {
+                continue;
+            }
+            let mut parts = line.split_whitespace();
+            let (path, count) = (parts.next(), parts.next());
+            match (path, count, parts.next()) {
+                (Some(p), Some(c), None) => {
+                    let c: usize = c.parse().map_err(|_| {
+                        format!("{BUDGET_PATH}:{}: bad count {c:?}", i + 1)
+                    })?;
+                    budget.insert(p.to_string(), c);
+                }
+                _ => {
+                    return Err(format!(
+                        "{BUDGET_PATH}:{}: expected `<path> <count>`",
+                        i + 1
+                    ))
+                }
+            }
+        }
+        Ok(UnsafeAudit { budget, counted: BTreeMap::new() })
+    }
+}
+
+impl Lint for UnsafeAudit {
+    fn name(&self) -> &'static str {
+        "unsafe-audit"
+    }
+
+    fn check(&mut self, ctx: &FileCtx<'_>, out: &mut Vec<Finding>) {
+        for p in 0..ctx.code_len() {
+            if !ctx.is_ident(p, "unsafe") {
+                continue;
+            }
+            // `unsafe fn(` is a fn-pointer *type*, not an unsafe site
+            if ctx.is_ident(p + 1, "fn") && ctx.is_punct(p + 2, "(") {
+                continue;
+            }
+            let entry = self
+                .counted
+                .entry(ctx.path.to_string())
+                .or_insert((0, ctx.line(p)));
+            entry.0 += 1;
+            if !ctx.has_marker(p, "SAFETY:") {
+                out.push(finding(
+                    ctx,
+                    p,
+                    self.name(),
+                    "unsafe site without a `// SAFETY:` comment".to_string(),
+                    "state the invariant that makes this sound, on or \
+                     directly above the statement",
+                ));
+            }
+        }
+    }
+
+    fn finish(&mut self, out: &mut Vec<Finding>) {
+        for (path, (count, first_line)) in &self.counted {
+            match self.budget.get(path) {
+                None => out.push(Finding {
+                    file: path.clone(),
+                    line: *first_line,
+                    lint: self.name(),
+                    msg: format!(
+                        "{count} unsafe site(s) but the file is not in the \
+                         unsafe budget"
+                    ),
+                    hint: "add `<path> <count>` to \
+                           rust/src/analysis/unsafe_budget.txt — the budget \
+                           edit is the reviewable artifact",
+                }),
+                Some(b) if *b != *count => out.push(Finding {
+                    file: path.clone(),
+                    line: *first_line,
+                    lint: self.name(),
+                    msg: format!(
+                        "{count} unsafe site(s) but the budget says {b}"
+                    ),
+                    hint: "update the count in \
+                           rust/src/analysis/unsafe_budget.txt to match the \
+                           audited inventory",
+                }),
+                Some(_) => {}
+            }
+        }
+        for (path, b) in &self.budget {
+            if !self.counted.contains_key(path) {
+                out.push(Finding {
+                    file: BUDGET_PATH.to_string(),
+                    line: 1,
+                    lint: self.name(),
+                    msg: format!(
+                        "stale budget entry: {path} ({b}) has no unsafe sites"
+                    ),
+                    hint: "remove the entry so the budget stays an exact \
+                           inventory",
+                });
+            }
+        }
+    }
+}
+
+// ---------------------------------------------------------------------
+// L2: kernel-purity
+// ---------------------------------------------------------------------
+
+/// No hand-rolled f32/f64 reduction loops outside `vecops/` — the PR 2
+/// "single kernel home" invariant.  Two shapes are flagged: a float
+/// compound-accumulate with a multiply inside a loop body (`acc += a *
+/// b` — a manual dot/axpy), and an iterator reduction whose `map`
+/// closure multiplies (`.map(|x| x * y).sum()`).  Integer accounting
+/// (`n += (a * b) as u64`) is not a kernel and is skipped.
+pub struct KernelPurity;
+
+impl KernelPurity {
+    fn in_scope(path: &str) -> bool {
+        path.starts_with("rust/src/")
+            && !path.starts_with("rust/src/vecops/")
+    }
+
+    fn stmt_has_cast_to(
+        ctx: &FileCtx<'_>,
+        stmt: (usize, usize),
+        types: &[&str],
+    ) -> bool {
+        (stmt.0..stmt.1).any(|p| {
+            ctx.is_ident(p, "as")
+                && ctx.ident(p + 1).is_some_and(|t| types.contains(&t))
+        })
+    }
+
+    fn stmt_has_float_evidence(ctx: &FileCtx<'_>, stmt: (usize, usize)) -> bool {
+        if Self::stmt_has_cast_to(ctx, stmt, &["f32", "f64"]) {
+            return true;
+        }
+        (stmt.0..stmt.1).any(|p| {
+            let t = ctx.tok(p);
+            t.kind == TokKind::Num && {
+                let s = t.text.as_str();
+                let hex = s.starts_with("0x") || s.starts_with("0X");
+                s.contains('.') || (!hex && (s.contains('e') || s.contains('E')))
+            }
+        })
+    }
+}
+
+impl Lint for KernelPurity {
+    fn name(&self) -> &'static str {
+        "kernel-purity"
+    }
+
+    fn check(&mut self, ctx: &FileCtx<'_>, out: &mut Vec<Finding>) {
+        if !Self::in_scope(ctx.path) {
+            return;
+        }
+        let loops = ctx.loop_spans();
+        for stmt in ctx.statements() {
+            if ctx.in_test(stmt.0) {
+                continue;
+            }
+            let int_only = Self::stmt_has_cast_to(ctx, stmt, INT_SUFFIXES)
+                && !Self::stmt_has_float_evidence(ctx, stmt);
+
+            // shape 1: `acc += a * b` (or -=) inside a loop body
+            let compound = (stmt.0..stmt.1.saturating_sub(1)).find(|&p| {
+                matches!(ctx.punct(p), Some("+") | Some("-"))
+                    && ctx.is_punct(p + 1, "=")
+            });
+            if let Some(p) = compound {
+                let in_loop = loops.iter().any(|&(a, b)| a <= p && p < b);
+                let has_mul = (stmt.0..stmt.1).any(|q| ctx.is_binary_star(q));
+                if in_loop && has_mul && !int_only && !ctx.waived(p, self.name())
+                {
+                    out.push(finding(
+                        ctx,
+                        p,
+                        self.name(),
+                        "manual multiply-accumulate loop outside vecops/"
+                            .to_string(),
+                        "route the reduction through crate::vecops (dot / \
+                         dot_f64 / axpy / the tile kernels) or waive with \
+                         `// LINT: allow(kernel-purity): <why>`",
+                    ));
+                }
+            }
+
+            // shape 2: `.map(|..| .. * ..)` feeding `.sum()` / `.fold()`
+            let has_reduce = (stmt.0..stmt.1).any(|p| {
+                p > stmt.0
+                    && ctx.is_punct(p - 1, ".")
+                    && matches!(ctx.ident(p), Some("sum") | Some("fold"))
+            });
+            if !has_reduce || int_only {
+                continue;
+            }
+            for p in stmt.0..stmt.1 {
+                let is_map = p > stmt.0
+                    && ctx.is_punct(p - 1, ".")
+                    && ctx.is_ident(p, "map")
+                    && ctx.is_punct(p + 1, "(");
+                if !is_map {
+                    continue;
+                }
+                let close = ctx.match_delim(p + 1, "(", ")");
+                let mul_inside =
+                    (p + 2..close).any(|q| ctx.is_binary_star(q));
+                if mul_inside && !ctx.waived(p, self.name()) {
+                    out.push(finding(
+                        ctx,
+                        p,
+                        self.name(),
+                        "map-multiply reduction outside vecops/".to_string(),
+                        "route the inner product through crate::vecops::\
+                         dot_f64 (or waive with `// LINT: \
+                         allow(kernel-purity): <why>` if the element op \
+                         differs from the shared kernels)",
+                    ));
+                    break;
+                }
+            }
+        }
+    }
+}
+
+// ---------------------------------------------------------------------
+// L3: simd-contract
+// ---------------------------------------------------------------------
+
+/// The audited intrinsics each backend may use.  Deliberately exact:
+/// the no-FMA bit-identity contract (PR 7) means a *new* intrinsic is a
+/// reviewed allowlist edit, and the fmadd/fmsub families can never be
+/// added because the family check below runs first and is not waivable.
+const X86_ALLOW: &[&str] = &[
+    // AVX2 f32 kernels
+    "_mm256_setzero_ps",
+    "_mm256_add_ps",
+    "_mm256_mul_ps",
+    "_mm256_loadu_ps",
+    "_mm256_storeu_ps",
+    "_mm256_set1_ps",
+    // int8 widening (exact i8 -> i32 -> f32)
+    "_mm_loadl_epi64",
+    "_mm256_cvtepi8_epi32",
+    "_mm256_cvtepi32_ps",
+    // f64 dot (exact f32 -> f64 widening)
+    "_mm256_setzero_pd",
+    "_mm256_cvtps_pd",
+    "_mm_loadu_ps",
+    "_mm256_add_pd",
+    "_mm256_mul_pd",
+    "_mm256_storeu_pd",
+    // AVX-512F
+    "_mm512_set1_ps",
+    "_mm512_setzero_ps",
+    "_mm512_loadu_ps",
+    "_mm512_storeu_ps",
+    "_mm512_add_ps",
+    "_mm512_mul_ps",
+    "_mm512_castps256_ps512",
+    "_mm512_shuffle_f32x4",
+    // vector types
+    "__m128i",
+    "__m256",
+    "__m512",
+];
+
+const NEON_ALLOW: &[&str] = &[
+    "vdupq_n_f32",
+    "vaddq_f32",
+    "vmulq_f32",
+    "vld1q_f32",
+    "vst1q_f32",
+    // int8 widening chain (exact)
+    "vld1_s8",
+    "vmovl_s8",
+    "vmovl_s16",
+    "vmovl_high_s16",
+    "vget_low_s16",
+    "vcvtq_f32_s32",
+    // f64 dot (exact f32 -> f64 widening)
+    "vdupq_n_f64",
+    "vaddq_f64",
+    "vmulq_f64",
+    "vcvt_f64_f32",
+    "vcvt_high_f64_f32",
+    "vget_low_f32",
+    "vst1q_f64",
+    // vector types
+    "float32x4_t",
+];
+
+/// Ident prefixes that mark an x86 intrinsic or vector type.
+fn x86_intrinsic_like(s: &str) -> bool {
+    s.starts_with("_mm") || s.starts_with("__m")
+}
+
+/// Ident prefixes that mark a NEON intrinsic or vector type.  Only
+/// applied *inside* the NEON backend (outside it, short `v`-prefixed
+/// names are ordinary variables); the exact-allowlist and FMA-family
+/// checks cover leakage elsewhere.
+fn neon_intrinsic_like(s: &str) -> bool {
+    const PREFIXES: &[&str] =
+        &["vld", "vst", "vdup", "vadd", "vmul", "vmov", "vcvt", "vget"];
+    PREFIXES.iter().any(|p| s.starts_with(p))
+        || s.ends_with("x2_t")
+        || s.ends_with("x4_t")
+        || s.ends_with("x8_t")
+        || s.ends_with("x16_t")
+}
+
+/// The fused multiply-add families, on both ISAs.  A single fused
+/// rounding breaks bit-identity with the scalar reference, so these are
+/// banned everywhere — including the backends — with no waiver.
+fn fma_family(s: &str) -> bool {
+    let l = s.to_ascii_lowercase();
+    ["fmadd", "fmsub", "fnmadd", "fnmsub"].iter().any(|f| l.contains(f))
+        || ["vfma", "vfms", "vmla", "vmls"].iter().any(|f| l.starts_with(f))
+}
+
+#[derive(Clone, Copy, PartialEq)]
+enum Backend {
+    X86,
+    Neon,
+}
+
+pub struct SimdContract;
+
+impl SimdContract {
+    fn backend(path: &str) -> Option<Backend> {
+        match path {
+            "rust/src/vecops/simd_x86.rs" => Some(Backend::X86),
+            "rust/src/vecops/simd_neon.rs" => Some(Backend::Neon),
+            _ => None,
+        }
+    }
+}
+
+impl Lint for SimdContract {
+    fn name(&self) -> &'static str {
+        "simd-contract"
+    }
+
+    fn check(&mut self, ctx: &FileCtx<'_>, out: &mut Vec<Finding>) {
+        let backend = Self::backend(ctx.path);
+        for p in 0..ctx.code_len() {
+            let Some(id) = ctx.ident(p) else { continue };
+
+            // FMA families: banned everywhere, never waivable.
+            if fma_family(id) {
+                out.push(finding(
+                    ctx,
+                    p,
+                    self.name(),
+                    format!("fused multiply-add `{id}` breaks the scalar \
+                             bit-identity contract"),
+                    "use separate mul + add (see the backend module docs); \
+                     this check has no waiver",
+                ));
+                continue;
+            }
+            if id == "mul_add" && ctx.path.starts_with("rust/src/vecops/") {
+                out.push(finding(
+                    ctx,
+                    p,
+                    self.name(),
+                    "`mul_add` fuses the rounding inside the kernel home"
+                        .to_string(),
+                    "use separate mul + add; this check has no waiver",
+                ));
+                continue;
+            }
+
+            // `std::arch` / `core::arch` paths outside the backends
+            // (runtime feature *detection* is allowed anywhere).
+            if (id == "std" || id == "core")
+                && ctx.is_punct(p + 1, ":")
+                && ctx.is_punct(p + 2, ":")
+                && ctx.is_ident(p + 3, "arch")
+                && backend.is_none()
+            {
+                let detection = ctx.is_punct(p + 4, ":")
+                    && ctx.is_punct(p + 5, ":")
+                    && matches!(
+                        ctx.ident(p + 6),
+                        Some("is_x86_feature_detected")
+                            | Some("is_aarch64_feature_detected")
+                    );
+                if !detection && !ctx.waived(p, self.name()) {
+                    out.push(finding(
+                        ctx,
+                        p,
+                        self.name(),
+                        "std::arch use outside the SIMD backends".to_string(),
+                        "intrinsics live only in vecops/simd_x86.rs and \
+                         vecops/simd_neon.rs behind the dispatch table",
+                    ));
+                }
+                continue;
+            }
+
+            match backend {
+                Some(Backend::X86) => {
+                    if x86_intrinsic_like(id) && !X86_ALLOW.contains(&id) {
+                        out.push(finding(
+                            ctx,
+                            p,
+                            self.name(),
+                            format!("intrinsic `{id}` is not in the audited \
+                                     x86 allowlist"),
+                            "extend X86_ALLOW in analysis/lints.rs in the \
+                             same change — the allowlist edit is the \
+                             reviewable artifact",
+                        ));
+                    }
+                }
+                Some(Backend::Neon) => {
+                    if neon_intrinsic_like(id) && !NEON_ALLOW.contains(&id) {
+                        out.push(finding(
+                            ctx,
+                            p,
+                            self.name(),
+                            format!("intrinsic `{id}` is not in the audited \
+                                     NEON allowlist"),
+                            "extend NEON_ALLOW in analysis/lints.rs in the \
+                             same change — the allowlist edit is the \
+                             reviewable artifact",
+                        ));
+                    }
+                }
+                None => {
+                    if (x86_intrinsic_like(id)
+                        || X86_ALLOW.contains(&id)
+                        || NEON_ALLOW.contains(&id))
+                        && !ctx.waived(p, self.name())
+                    {
+                        out.push(finding(
+                            ctx,
+                            p,
+                            self.name(),
+                            format!("SIMD intrinsic `{id}` outside the \
+                                     backends"),
+                            "go through the vecops dispatch API; raw \
+                             intrinsics live only in the two backend files",
+                        ));
+                    }
+                }
+            }
+        }
+    }
+}
+
+// ---------------------------------------------------------------------
+// L4: panic-path
+// ---------------------------------------------------------------------
+
+/// The `net/` and `serve/` request paths must never panic on
+/// adversarial input: no `unwrap` / `expect` / `panic!`-family macros,
+/// and (in `net/`, which handles raw wire bytes) no range indexing —
+/// use `get(..)` or checked arithmetic and answer 400/500 instead.
+/// Init-time and invariant-panic sites carry explicit waivers.
+pub struct PanicPath;
+
+impl PanicPath {
+    fn in_scope(path: &str) -> bool {
+        path.starts_with("rust/src/net/") || path.starts_with("rust/src/serve/")
+    }
+}
+
+impl Lint for PanicPath {
+    fn name(&self) -> &'static str {
+        "panic-path"
+    }
+
+    fn check(&mut self, ctx: &FileCtx<'_>, out: &mut Vec<Finding>) {
+        if !Self::in_scope(ctx.path) {
+            return;
+        }
+        let index_scope = ctx.path.starts_with("rust/src/net/");
+        for p in 0..ctx.code_len() {
+            if ctx.in_test(p) {
+                continue;
+            }
+            if let Some(id) = ctx.ident(p) {
+                let method_panic = (id == "unwrap" || id == "expect")
+                    && p > 0
+                    && ctx.is_punct(p - 1, ".");
+                let macro_panic = matches!(
+                    id,
+                    "panic" | "unreachable" | "todo" | "unimplemented"
+                ) && ctx.is_punct(p + 1, "!");
+                if (method_panic || macro_panic) && !ctx.waived(p, self.name())
+                {
+                    out.push(finding(
+                        ctx,
+                        p,
+                        self.name(),
+                        format!("`{id}` on a request path"),
+                        "return a 4xx/5xx response (or recover) instead; \
+                         init-time code may waive with `// LINT: \
+                         allow(panic-path): <why>`",
+                    ));
+                }
+                continue;
+            }
+            if index_scope && ctx.is_punct(p, "[") && p > 0 {
+                let prev = ctx.tok(p - 1);
+                let indexes = match prev.kind {
+                    TokKind::Ident => {
+                        !NON_OPERAND_KEYWORDS.contains(&prev.text.as_str())
+                    }
+                    TokKind::Punct => prev.text == ")" || prev.text == "]",
+                    _ => false,
+                };
+                if !indexes {
+                    continue;
+                }
+                let close = ctx.match_delim(p, "[", "]");
+                let has_range = (p + 1..close.saturating_sub(1))
+                    .any(|q| ctx.is_punct(q, ".") && ctx.is_punct(q + 1, "."));
+                if has_range && !ctx.waived(p, self.name()) {
+                    out.push(finding(
+                        ctx,
+                        p,
+                        self.name(),
+                        "range index on wire-facing data can panic".to_string(),
+                        "use .get(range) with an error response, or waive \
+                         with the bound-check justification",
+                    ));
+                }
+            }
+        }
+    }
+}
+
+// ---------------------------------------------------------------------
+// L5: ordering-annotation
+// ---------------------------------------------------------------------
+
+/// Every atomic `Ordering::*` use in the files where ordering is
+/// load-bearing (the Hogwild model wrapper, the metrics registry, and
+/// the admission gauge) carries a `// ORDERING:` justification.
+pub struct OrderingAnnotation;
+
+const L5_FILES: &[&str] = &[
+    "rust/src/model/shared.rs",
+    "rust/src/obs/registry.rs",
+    "rust/src/net/shed.rs",
+];
+
+const ORDERING_LEVELS: &[&str] =
+    &["Relaxed", "Acquire", "Release", "AcqRel", "SeqCst"];
+
+impl Lint for OrderingAnnotation {
+    fn name(&self) -> &'static str {
+        "ordering-annotation"
+    }
+
+    fn check(&mut self, ctx: &FileCtx<'_>, out: &mut Vec<Finding>) {
+        if !L5_FILES.contains(&ctx.path) {
+            return;
+        }
+        for p in 0..ctx.code_len() {
+            if ctx.in_test(p) {
+                continue;
+            }
+            let is_use = ctx.is_ident(p, "Ordering")
+                && ctx.is_punct(p + 1, ":")
+                && ctx.is_punct(p + 2, ":")
+                && ctx.ident(p + 3).is_some_and(|l| ORDERING_LEVELS.contains(&l));
+            if is_use
+                && !ctx.has_marker(p, "ORDERING:")
+                && !ctx.waived(p, self.name())
+            {
+                out.push(finding(
+                    ctx,
+                    p,
+                    self.name(),
+                    format!(
+                        "Ordering::{} without an `// ORDERING:` justification",
+                        ctx.ident(p + 3).unwrap_or("?")
+                    ),
+                    "say why this ordering is sufficient, on the line or \
+                     above the statement",
+                ));
+            }
+        }
+    }
+}
+
+/// The shipped lint set, in L1..L5 order, sharing one budget text.
+pub fn default_lints(
+    budget_text: &str,
+) -> Result<Vec<Box<dyn Lint>>, String> {
+    Ok(vec![
+        Box::new(UnsafeAudit::new(budget_text)?),
+        Box::new(KernelPurity),
+        Box::new(SimdContract),
+        Box::new(PanicPath),
+        Box::new(OrderingAnnotation),
+    ])
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn run_one(
+        lint: &mut dyn Lint,
+        path: &str,
+        src: &str,
+    ) -> Vec<Finding> {
+        let ctx = FileCtx::new(path, src);
+        let mut out = Vec::new();
+        lint.check(&ctx, &mut out);
+        lint.finish(&mut out);
+        out
+    }
+
+    #[test]
+    fn unsafe_fn_pointer_types_are_not_sites() {
+        let src = "type F = unsafe fn(&[f32]) -> f32;\n";
+        let mut l = UnsafeAudit::new("").unwrap();
+        assert!(run_one(&mut l, "rust/src/x.rs", src).is_empty());
+    }
+
+    #[test]
+    fn unsafe_needs_safety_and_budget() {
+        let src = "fn f() { unsafe { g() } }\n";
+        let mut l = UnsafeAudit::new("").unwrap();
+        let out = run_one(&mut l, "rust/src/x.rs", src);
+        // one finding for the missing SAFETY, one for the missing budget
+        assert_eq!(out.len(), 2, "{out:?}");
+        let src_ok = "fn f() {\n    // SAFETY: g is sound here.\n    unsafe { g() }\n}\n";
+        let mut l = UnsafeAudit::new("rust/src/x.rs 1\n").unwrap();
+        assert!(run_one(&mut l, "rust/src/x.rs", src_ok).is_empty());
+    }
+
+    #[test]
+    fn budget_mismatch_and_stale_entries_fire() {
+        let src = "// SAFETY: fine.\nunsafe impl Send for X {}\n";
+        let mut l =
+            UnsafeAudit::new("rust/src/x.rs 2\nrust/src/gone.rs 1\n").unwrap();
+        let out = run_one(&mut l, "rust/src/x.rs", src);
+        assert_eq!(out.len(), 2, "{out:?}");
+        assert!(out.iter().any(|f| f.msg.contains("budget says 2")));
+        assert!(out.iter().any(|f| f.msg.contains("stale budget entry")));
+    }
+
+    #[test]
+    fn kernel_purity_flags_loop_mac_but_not_integer_accounting() {
+        let bad = "fn f(a: &[f32], b: &[f32]) -> f32 {\n    let mut acc = 0.0;\n    for i in 0..a.len() {\n        acc += a[i] * b[i];\n    }\n    acc\n}\n";
+        let out = run_one(&mut KernelPurity, "rust/src/x.rs", bad);
+        assert_eq!(out.len(), 1, "{out:?}");
+        let ints = "fn f(m: usize, n: usize) -> u64 {\n    let mut acc = 0u64;\n    for _ in 0..3 {\n        acc += (m * n) as u64;\n    }\n    acc\n}\n";
+        assert!(run_one(&mut KernelPurity, "rust/src/x.rs", ints).is_empty());
+        // vecops itself is the kernel home
+        assert!(run_one(&mut KernelPurity, "rust/src/vecops/x.rs", bad)
+            .is_empty());
+    }
+
+    #[test]
+    fn kernel_purity_flags_map_mul_sum_and_honors_waiver() {
+        let bad = "fn n(v: &[f32]) -> f64 {\n    v.iter().map(|x| (x * x) as f64).sum::<f64>()\n}\n";
+        let out = run_one(&mut KernelPurity, "rust/src/x.rs", bad);
+        assert_eq!(out.len(), 1, "{out:?}");
+        let waived = "fn n(v: &[f32]) -> f64 {\n    // LINT: allow(kernel-purity): frozen gold definition.\n    v.iter().map(|x| (x * x) as f64).sum::<f64>()\n}\n";
+        assert!(run_one(&mut KernelPurity, "rust/src/x.rs", waived).is_empty());
+    }
+
+    #[test]
+    fn simd_contract_bans_fma_everywhere() {
+        let src = "fn f() { let x = _mm256_fmadd_ps(a, b, c); }\n";
+        let out =
+            run_one(&mut SimdContract, "rust/src/vecops/simd_x86.rs", src);
+        assert_eq!(out.len(), 1, "{out:?}");
+        assert!(out[0].msg.contains("fmadd"));
+    }
+
+    #[test]
+    fn simd_contract_scopes_intrinsics_to_backends() {
+        let outside = "fn f() { let v = _mm256_add_ps(a, b); }\n";
+        let out = run_one(&mut SimdContract, "rust/src/serve/x.rs", outside);
+        assert_eq!(out.len(), 1, "{out:?}");
+        // detection macro is fine anywhere
+        let detect = "fn f() -> bool { std::arch::is_x86_feature_detected!(\"avx2\") }\n";
+        assert!(run_one(&mut SimdContract, "rust/src/x.rs", detect).is_empty());
+        // unknown intrinsic inside a backend must be allowlisted
+        let unknown = "fn f() { let v = _mm256_hadd_ps(a, b); }\n";
+        let out = run_one(
+            &mut SimdContract,
+            "rust/src/vecops/simd_x86.rs",
+            unknown,
+        );
+        assert_eq!(out.len(), 1, "{out:?}");
+        assert!(out[0].msg.contains("allowlist"));
+    }
+
+    #[test]
+    fn panic_path_flags_request_code_not_tests() {
+        let src = "fn f(x: Option<u32>) -> u32 { x.unwrap() }\n#[cfg(test)]\nmod tests {\n    fn g(x: Option<u32>) -> u32 { x.unwrap() }\n}\n";
+        let out = run_one(&mut PanicPath, "rust/src/net/x.rs", src);
+        assert_eq!(out.len(), 1, "{out:?}");
+        assert_eq!(out[0].line, 1);
+        // out of scope entirely
+        assert!(run_one(&mut PanicPath, "rust/src/obs/x.rs", src).is_empty());
+    }
+
+    #[test]
+    fn panic_path_flags_range_indexing_in_net_only() {
+        let src = "fn f(b: &[u8], n: usize) -> &[u8] { &b[..n] }\n";
+        let out = run_one(&mut PanicPath, "rust/src/net/x.rs", src);
+        assert_eq!(out.len(), 1, "{out:?}");
+        assert!(run_one(&mut PanicPath, "rust/src/serve/x.rs", src).is_empty());
+        let waived = "fn f(b: &[u8], n: usize) -> &[u8] {\n    // LINT: allow(panic-path): n <= b.len() by construction.\n    &b[..n]\n}\n";
+        assert!(run_one(&mut PanicPath, "rust/src/net/x.rs", waived).is_empty());
+    }
+
+    #[test]
+    fn ordering_annotation_requires_justification() {
+        let src = "fn f(a: &AtomicU64) -> u64 { a.load(Ordering::Relaxed) }\n";
+        let out = run_one(&mut OrderingAnnotation, "rust/src/net/shed.rs", src);
+        assert_eq!(out.len(), 1, "{out:?}");
+        let ok = "fn f(a: &AtomicU64) -> u64 {\n    a.load(Ordering::Relaxed) // ORDERING: independent counter.\n}\n";
+        assert!(run_one(&mut OrderingAnnotation, "rust/src/net/shed.rs", ok)
+            .is_empty());
+        // not one of the audited files
+        assert!(run_one(&mut OrderingAnnotation, "rust/src/obs/hist.rs", src)
+            .is_empty());
+    }
+
+    #[test]
+    fn marker_attaches_above_a_match_arm() {
+        // the waiver sits on the arm, not on the match statement's head
+        let src = "fn f(r: Result<usize, ()>, b: &[u8]) -> &[u8] {\n    match r {\n        Err(_) => b,\n        // LINT: allow(panic-path): n <= b.len() by contract.\n        Ok(n) => &b[..n],\n    }\n}\n";
+        assert!(run_one(&mut PanicPath, "rust/src/net/x.rs", src).is_empty());
+        // without the waiver the same arm fires
+        let bare = "fn f(r: Result<usize, ()>, b: &[u8]) -> &[u8] {\n    match r {\n        Err(_) => b,\n        Ok(n) => &b[..n],\n    }\n}\n";
+        assert_eq!(run_one(&mut PanicPath, "rust/src/net/x.rs", bare).len(), 1);
+    }
+
+    #[test]
+    fn marker_attaches_through_attributes_and_statements() {
+        // SAFETY above a #[target_feature] attribute still attaches
+        let src = "// SAFETY: dispatch checked avx2.\n#[target_feature(enable = \"avx2\")]\npub unsafe fn f() {}\n";
+        let mut l = UnsafeAudit::new("rust/src/x.rs 1\n").unwrap();
+        assert!(run_one(&mut l, "rust/src/x.rs", src).is_empty());
+        // one comment above a multi-line call covers both Ordering args
+        let src2 = "fn f(a: &AtomicU64) {\n    // ORDERING: saturating counter, no ordered state.\n    let _ = a.fetch_update(\n        Ordering::Relaxed,\n        Ordering::Relaxed,\n        |v| Some(v + 1),\n    );\n}\n";
+        assert!(run_one(&mut OrderingAnnotation, "rust/src/net/shed.rs", src2)
+            .is_empty());
+    }
+}

@@ -1,0 +1,178 @@
+//! `analysis/` — dependency-free static analysis over the repo's own
+//! sources, in the same hand-rolled style as `util/json` and
+//! `net/http`.
+//!
+//! PRs 2–7 created conventions that are load-bearing for both the perf
+//! story and the bit-reproducibility tests, but nothing enforced them
+//! mechanically.  This module turns them into checked facts.  The
+//! pipeline is [`walk`] (enumerate tracked `.rs` sources, minus
+//! `vendor/` and `fixtures/`), [`lexer`] (a comment/string/raw-string
+//! aware tokenizer, property-tested so sealed contexts can never
+//! desync a lint), and [`lints`] (the [`lints::Lint`] trait plus the
+//! five shipped repo-invariant lints):
+//!
+//! | lint | invariant |
+//! |------|-----------|
+//! | `unsafe-audit` | every `unsafe` carries `// SAFETY:` and its file is in `unsafe_budget.txt` with an exact site count |
+//! | `kernel-purity` | no manual f32/f64 multiply-accumulate loops or map-multiply reductions outside `vecops/` |
+//! | `simd-contract` | `std::arch` only inside the two SIMD backends, only allowlisted intrinsics, FMA families banned outright |
+//! | `panic-path` | no `unwrap`/`expect`/`panic!`-family/range-index on the `net/`+`serve/` request paths |
+//! | `ordering-annotation` | every atomic `Ordering::*` in the audited files carries `// ORDERING:` |
+//!
+//! The gate is self-hosting: `rust/tests/lint_repo.rs` runs the suite
+//! over this repo inside tier-1 `cargo test`, and `fullw2v lint
+//! [--json]` runs it from the CLI.
+//!
+//! ## Extending
+//!
+//! A new lint is a struct implementing [`lints::Lint`] (`check` per
+//! file, optional `finish` for cross-file accounting) added to
+//! [`lints::default_lints`], plus a positive + negative fixture under
+//! `rust/tests/fixtures/lint/` proving it fires and stays quiet.
+//!
+//! ## Allowlists are the reviewable artifact
+//!
+//! Suppressions are deliberately diff-visible, never config-file
+//! toggles:
+//!
+//! * a site waiver is a `// LINT: allow(<lint>): <reason>` comment on
+//!   or above the offending statement;
+//! * new `unsafe` edits `unsafe_budget.txt` (path + exact count);
+//! * a new intrinsic edits `X86_ALLOW` / `NEON_ALLOW` in `lints.rs`;
+//! * the FMA-family ban and the unsafe budget itself have **no**
+//!   waiver — those contracts are the point.
+
+pub mod lexer;
+pub mod lints;
+pub mod walk;
+
+use crate::util::json::{obj, Json};
+use std::path::Path;
+
+pub use lints::{Finding, Lint};
+pub use walk::SourceFile;
+
+/// The checked-in unsafe inventory, compiled into the binary so the
+/// linter needs no runtime lookup of its own config.
+pub const UNSAFE_BUDGET: &str = include_str!("unsafe_budget.txt");
+
+/// Outcome of a lint run: all findings plus how many files were seen
+/// (so "0 findings over 0 files" can't masquerade as a clean run).
+pub struct Report {
+    pub findings: Vec<Finding>,
+    pub files: usize,
+}
+
+impl Report {
+    pub fn clean(&self) -> bool {
+        self.findings.is_empty()
+    }
+}
+
+/// Lint a repo checkout rooted at `root` with the shipped lint set and
+/// the checked-in unsafe budget.
+pub fn run(root: &Path) -> Result<Report, String> {
+    let files = walk::walk_repo(root)
+        .map_err(|e| format!("walking {}: {e}", root.display()))?;
+    run_files(&files, UNSAFE_BUDGET)
+}
+
+/// Lint an explicit file set with an explicit budget — the injection
+/// point fixtures and tests use to exercise lints on synthetic paths.
+pub fn run_files(files: &[SourceFile], budget: &str) -> Result<Report, String> {
+    let mut lints = lints::default_lints(budget)?;
+    let mut findings = Vec::new();
+    for f in files {
+        let ctx = lints::FileCtx::new(&f.path, &f.text);
+        for l in lints.iter_mut() {
+            l.check(&ctx, &mut findings);
+        }
+    }
+    for l in lints.iter_mut() {
+        l.finish(&mut findings);
+    }
+    findings.sort_by(|a, b| {
+        (a.file.as_str(), a.line, a.lint).cmp(&(b.file.as_str(), b.line, b.lint))
+    });
+    Ok(Report { findings, files: files.len() })
+}
+
+/// Human-readable rendering: one `file:line: [lint] msg` block per
+/// finding with its fix hint, then a summary line.
+pub fn render_text(r: &Report) -> String {
+    let mut s = String::new();
+    for f in &r.findings {
+        s.push_str(&format!(
+            "{}:{}: [{}] {}\n    fix: {}\n",
+            f.file, f.line, f.lint, f.msg, f.hint
+        ));
+    }
+    s.push_str(&format!(
+        "{} finding(s) across {} file(s)\n",
+        r.findings.len(),
+        r.files
+    ));
+    s
+}
+
+/// Machine-readable rendering via the crate's own JSON layer.
+pub fn render_json(r: &Report) -> String {
+    let findings = r
+        .findings
+        .iter()
+        .map(|f| {
+            obj(vec![
+                ("file", Json::Str(f.file.clone())),
+                ("line", Json::Num(f.line as f64)),
+                ("lint", Json::Str(f.lint.to_string())),
+                ("msg", Json::Str(f.msg.clone())),
+                ("hint", Json::Str(f.hint.to_string())),
+            ])
+        })
+        .collect();
+    obj(vec![
+        ("files", Json::Num(r.files as f64)),
+        ("findings", Json::Arr(findings)),
+    ])
+    .to_string()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn budget_text_parses_and_run_files_sorts() {
+        // the checked-in budget must always parse
+        lints::default_lints(UNSAFE_BUDGET).expect("budget parses");
+        let files = vec![
+            SourceFile {
+                path: "rust/src/net/zzz.rs".to_string(),
+                text: "fn f(x: Option<u32>) -> u32 { x.unwrap() }\n".to_string(),
+            },
+            SourceFile {
+                path: "rust/src/net/aaa.rs".to_string(),
+                text: "fn f(x: Option<u32>) -> u32 { x.unwrap() }\n".to_string(),
+            },
+        ];
+        let rep = run_files(&files, "").expect("run");
+        assert_eq!(rep.files, 2);
+        assert_eq!(rep.findings.len(), 2);
+        assert!(rep.findings[0].file < rep.findings[1].file);
+        assert!(!rep.clean());
+    }
+
+    #[test]
+    fn renderings_carry_location_and_lint_name() {
+        let files = vec![SourceFile {
+            path: "rust/src/serve/z.rs".to_string(),
+            text: "fn f() { panic!(\"boom\") }\n".to_string(),
+        }];
+        let rep = run_files(&files, "").expect("run");
+        let text = render_text(&rep);
+        assert!(text.contains("rust/src/serve/z.rs:1: [panic-path]"), "{text}");
+        let json = render_json(&rep);
+        assert!(json.contains("\"lint\":\"panic-path\""), "{json}");
+        assert!(json.contains("\"files\":1"), "{json}");
+    }
+}

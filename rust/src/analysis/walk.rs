@@ -1,0 +1,87 @@
+//! Source enumeration for the repo lints.
+//!
+//! Walks the crate's own source roots (`rust/src`, `rust/tests`,
+//! `rust/benches`, `examples`) collecting `.rs` files, with two carve-
+//! outs: `rust/vendor/` (third-party shims are not held to the repo
+//! invariants) and any `fixtures/` directory (lint fixtures *violate*
+//! the invariants on purpose — that is what proves each lint fires).
+//!
+//! Paths come back repo-relative with `/` separators regardless of
+//! platform, sorted, so findings and the unsafe budget are stable
+//! across machines.
+
+use std::fs;
+use std::io;
+use std::path::Path;
+
+/// One source file: repo-relative path (`/`-separated) plus content.
+#[derive(Debug, Clone)]
+pub struct SourceFile {
+    pub path: String,
+    pub text: String,
+}
+
+/// Directories (relative to the repo root) the lints cover.
+pub const SOURCE_ROOTS: &[&str] =
+    &["rust/src", "rust/tests", "rust/benches", "examples"];
+
+/// Directory names excluded wherever they appear under a source root.
+const EXCLUDED_DIRS: &[&str] = &["vendor", "fixtures"];
+
+/// Enumerate every lintable `.rs` file under `root` (a repo checkout).
+/// Missing source roots are skipped, not errors, so the walker also
+/// works on partial trees (fixtures in tests).
+pub fn walk_repo(root: &Path) -> io::Result<Vec<SourceFile>> {
+    let mut out = Vec::new();
+    for sub in SOURCE_ROOTS {
+        let dir = root.join(sub);
+        if dir.is_dir() {
+            collect(&dir, sub, &mut out)?;
+        }
+    }
+    out.sort_by(|a, b| a.path.cmp(&b.path));
+    Ok(out)
+}
+
+fn collect(dir: &Path, rel: &str, out: &mut Vec<SourceFile>) -> io::Result<()> {
+    let mut entries: Vec<_> =
+        fs::read_dir(dir)?.collect::<io::Result<Vec<_>>>()?;
+    entries.sort_by_key(|e| e.file_name());
+    for entry in entries {
+        let name = entry.file_name();
+        let name = name.to_string_lossy();
+        let path = entry.path();
+        if path.is_dir() {
+            if EXCLUDED_DIRS.contains(&name.as_ref()) {
+                continue;
+            }
+            collect(&path, &format!("{rel}/{name}"), out)?;
+        } else if name.ends_with(".rs") {
+            let text = fs::read_to_string(&path)?;
+            out.push(SourceFile { path: format!("{rel}/{name}"), text });
+        }
+    }
+    Ok(())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn walks_this_crate_and_excludes_vendor_and_fixtures() {
+        let root = Path::new(env!("CARGO_MANIFEST_DIR"));
+        let files = walk_repo(root).expect("walk");
+        let paths: Vec<&str> =
+            files.iter().map(|f| f.path.as_str()).collect();
+        assert!(paths.contains(&"rust/src/lib.rs"));
+        assert!(paths.contains(&"rust/src/analysis/walk.rs"));
+        assert!(paths.iter().all(|p| !p.contains("/vendor/")));
+        assert!(paths.iter().all(|p| !p.contains("/fixtures/")));
+        // sorted and unique
+        let mut sorted = paths.clone();
+        sorted.sort();
+        sorted.dedup();
+        assert_eq!(paths, sorted);
+    }
+}

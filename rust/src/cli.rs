@@ -9,6 +9,7 @@
 //!   gen-corpus   write a synthetic corpus (+ gold sets) to disk
 //!   gpusim       print the analytical Tables 4/5/6 + projections
 //!   manifest     list AOT executables
+//!   lint         run the repo-invariant lints (analysis/) over sources
 //!
 //! Global flags: -c/--config FILE, -s/--set section.key=value (repeat),
 //! -v/--verbose, -q/--quiet, --simd auto|scalar|avx2|avx512|neon.
@@ -88,6 +89,14 @@ pub enum Command {
     },
     GpuSim,
     Manifest,
+    /// Run the `analysis/` repo-invariant lints and exit non-zero on
+    /// findings (the same suite `rust/tests/lint_repo.rs` self-hosts).
+    Lint {
+        /// Render findings as JSON instead of text.
+        json: bool,
+        /// Repo root to lint (default: the compiled-in manifest dir).
+        root: Option<String>,
+    },
     Help,
     Version,
 }
@@ -120,6 +129,11 @@ COMMANDS:
   gen-corpus --spec tiny|text8|1bw --out DIR
   gpusim
   manifest
+  lint [--json] [--root DIR]
+        run the five repo-invariant lints (unsafe-audit, kernel-purity,
+        simd-contract, panic-path, ordering-annotation) over the repo's
+        sources; exits 1 if anything fires.  --root overrides the repo
+        checkout to lint (default: this build's source tree)
   help | version
 
 FLAGS:
@@ -170,12 +184,15 @@ pub fn parse(args: &[String]) -> Result<Cli> {
             "--corpus" | "--synthetic" | "--out" | "--model" | "--pairs"
             | "--word" | "--k" | "--spec" | "--store" | "--queries"
             | "--shards" | "--batch" | "--clusters" | "--nprobe"
-            | "--impl" | "--threads" | "--listen" | "--simd" => {
+            | "--impl" | "--threads" | "--listen" | "--simd" | "--root" => {
                 let key = a.trim_start_matches('-').to_string();
                 opts.push((key, take_value(&mut i)?));
             }
             "--quantized" => {
                 opts.push(("quantized".to_string(), "true".to_string()));
+            }
+            "--json" => {
+                opts.push(("json".to_string(), "true".to_string()));
             }
             _ if a.starts_with('-') => bail!("unknown flag '{a}'\n{USAGE}"),
             _ => positional.push(a.clone()),
@@ -303,6 +320,10 @@ pub fn parse(args: &[String]) -> Result<Cli> {
         },
         "gpusim" => Command::GpuSim,
         "manifest" => Command::Manifest,
+        "lint" => Command::Lint {
+            json: get("json").is_some(),
+            root: get("root"),
+        },
         "version" | "--version" => Command::Version,
         "help" | "--help" => Command::Help,
         other => bail!("unknown command '{other}'\n{USAGE}"),
@@ -628,6 +649,20 @@ mod tests {
         // every command resolves a selection even without the flag
         let cli = p(&["gpusim"]).unwrap();
         assert!(cli.simd.level.available());
+    }
+
+    #[test]
+    fn lint_flags_parse() {
+        let cli = p(&["lint"]).unwrap();
+        assert_eq!(cli.command, Command::Lint { json: false, root: None });
+        let cli = p(&["lint", "--json", "--root", "/tmp/checkout"]).unwrap();
+        assert_eq!(
+            cli.command,
+            Command::Lint {
+                json: true,
+                root: Some("/tmp/checkout".into())
+            }
+        );
     }
 
     #[test]

@@ -155,10 +155,13 @@ impl SyntheticCorpus {
             words.push(format!("w{c}c{r}r{idx}"));
             let mut v = centroids[c].clone();
             for (vi, ri) in v.iter_mut().zip(&rolevecs[r]) {
+                // LINT: allow(kernel-purity): one-time corpus synthesis
+                // at generation time, not a training kernel.
                 *vi += 0.6 * ri;
             }
             // small per-word identity noise
             for vi in v.iter_mut() {
+                // LINT: allow(kernel-purity): as above — synthesis-time.
                 *vi += 0.15 * (rng.next_f32() * 2.0 - 1.0);
             }
             normalize(&mut v);
@@ -347,6 +350,9 @@ fn random_unit(rng: &mut Pcg32, dim: usize) -> Vec<f32> {
 }
 
 fn normalize(v: &mut [f32]) {
+    // LINT: allow(kernel-purity): frozen gold definition — multiply in
+    // f32 then widen, deliberately NOT vecops::dot_f64's widen-then-
+    // multiply; the generator's output must be bit-stable across PRs.
     let n = v.iter().map(|x| (x * x) as f64).sum::<f64>().sqrt() as f32;
     if n > 0.0 {
         for x in v.iter_mut() {
@@ -356,8 +362,13 @@ fn normalize(v: &mut [f32]) {
 }
 
 fn cosine(a: &[f32], b: &[f32]) -> f64 {
+    // LINT: allow(kernel-purity): frozen gold definition (see normalize
+    // above) — f32-multiply-then-widen, bit-stable generator ground
+    // truth that must not route through the dispatched kernels.
     let dot: f64 = a.iter().zip(b).map(|(x, y)| (x * y) as f64).sum();
+    // LINT: allow(kernel-purity): as above.
     let na: f64 = a.iter().map(|x| (x * x) as f64).sum::<f64>().sqrt();
+    // LINT: allow(kernel-purity): as above.
     let nb: f64 = b.iter().map(|x| (x * x) as f64).sum::<f64>().sqrt();
     if na == 0.0 || nb == 0.0 {
         0.0

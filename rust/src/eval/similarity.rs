@@ -50,8 +50,12 @@ fn pearson(x: &[f64], y: &[f64]) -> f64 {
     let mut sxx = 0.0;
     let mut syy = 0.0;
     for (a, b) in x.iter().zip(y) {
+        // LINT: allow(kernel-purity): f64 rank statistics over a handful
+        // of word pairs — not an embedding kernel, nothing to dispatch.
         sxy += (a - mx) * (b - my);
+        // LINT: allow(kernel-purity): as above.
         sxx += (a - mx) * (a - mx);
+        // LINT: allow(kernel-purity): as above.
         syy += (b - my) * (b - my);
     }
     if sxx == 0.0 || syy == 0.0 {

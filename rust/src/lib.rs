@@ -51,6 +51,7 @@
 //!
 //! See DESIGN.md for the system inventory and per-experiment index.
 
+pub mod analysis;
 pub mod batcher;
 pub mod cli;
 pub mod config;

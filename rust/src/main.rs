@@ -178,6 +178,7 @@ fn run(cli: Cli) -> Result<()> {
         Command::ExportStore { model, out, shards, clusters } => {
             export_store_cmd(&model, &out, shards, clusters)
         }
+        Command::Lint { json, root } => lint_cmd(json, root),
         Command::Serve { store, queries, listen, k, quantized, batch, nprobe } => {
             match (queries, listen) {
                 (Some(queries), _) => {
@@ -196,6 +197,26 @@ fn run(cli: Cli) -> Result<()> {
             }
         }
     }
+}
+
+/// `fullw2v lint [--json] [--root DIR]`: run the repo-invariant lints
+/// and exit non-zero on findings (the CI/test gate, callable ad hoc).
+fn lint_cmd(json: bool, root: Option<String>) -> Result<()> {
+    let root = root.unwrap_or_else(|| env!("CARGO_MANIFEST_DIR").to_string());
+    let report = fullw2v::analysis::run(Path::new(&root))
+        .map_err(anyhow::Error::msg)?;
+    if json {
+        println!("{}", fullw2v::analysis::render_json(&report));
+    } else {
+        print!("{}", fullw2v::analysis::render_text(&report));
+    }
+    if !report.clean() {
+        return Err(anyhow!(
+            "{} lint finding(s) — see above",
+            report.findings.len()
+        ));
+    }
+    Ok(())
 }
 
 #[allow(clippy::too_many_arguments)]

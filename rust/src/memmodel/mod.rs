@@ -212,6 +212,8 @@ pub fn zipf_lru_hit_rate(vocab: usize, zipf_s: f64, cache_rows: f64) -> f64 {
         *x /= z;
     }
     let occupancy = |t: f64| -> f64 {
+        // LINT: allow(kernel-purity): analytical cache-model series
+        // (Che approximation), not an embedding kernel.
         q.iter().map(|&p| 1.0 - (-p * t).exp()).sum()
     };
     // bisection on t: occupancy is increasing in t
@@ -231,6 +233,7 @@ pub fn zipf_lru_hit_rate(vocab: usize, zipf_s: f64, cache_rows: f64) -> f64 {
         }
     }
     let t = 0.5 * (lo + hi);
+    // LINT: allow(kernel-purity): as above — analytical model series.
     q.iter().map(|&p| p * (1.0 - (-p * t).exp())).sum()
 }
 

@@ -205,7 +205,7 @@ pub fn normalize_rows_in_place(rows: &mut [f32], dim: usize) {
     assert!(dim > 0, "dim must be positive");
     assert_eq!(rows.len() % dim, 0, "rows length not a multiple of dim");
     for row in rows.chunks_exact_mut(dim) {
-        let n = row.iter().map(|x| (*x as f64) * (*x as f64)).sum::<f64>();
+        let n = crate::vecops::dot_f64(row, row);
         let n = n.sqrt() as f32;
         if n > 0.0 {
             for x in row.iter_mut() {

@@ -35,10 +35,13 @@ pub struct SharedModel<'a> {
     _model: PhantomData<&'a mut EmbeddingModel>,
 }
 
-// SAFETY: the wrapper owns the only live borrow of the model; all access
-// is row-granular through the methods below, and data races between
-// workers are the documented Hogwild contract (see module docs).
+// SAFETY: the wrapper owns the only live borrow of the model, and all
+// access is row-granular through the methods below, so moving it to
+// another thread cannot invalidate any outstanding reference.
 unsafe impl Send for SharedModel<'_> {}
+// SAFETY: concurrent method calls only race element-wise through raw
+// pointers; those data races between workers are the documented Hogwild
+// contract (see module docs).
 unsafe impl Sync for SharedModel<'_> {}
 
 impl<'a> SharedModel<'a> {

@@ -25,6 +25,7 @@ use crate::metrics::RouteMetrics;
 use crate::obs;
 use crate::serve::{QueryClient, ServeEngine, ServeReport};
 use crate::util::log::{self, Level};
+use crate::util::sync::lock_unpoisoned;
 use anyhow::{Context, Result};
 use std::io::{Read, Write};
 use std::net::{SocketAddr, TcpListener, TcpStream};
@@ -220,9 +221,11 @@ fn worker_loop(
     opts: NetOptions,
 ) {
     loop {
-        // hold the lock only for the pop, never while serving
+        // hold the lock only for the pop, never while serving; a poisoned
+        // lock (another worker panicked mid-pop) must not take this
+        // worker down too — the receiver is still valid
         let stream = {
-            let guard = rx.lock().unwrap();
+            let guard = lock_unpoisoned(&rx);
             guard.recv()
         };
         match stream {
@@ -292,6 +295,9 @@ fn handle_conn(mut stream: TcpStream, state: &Arc<AppState>, opts: &NetOptions) 
                     }
                     match stream.read(&mut rbuf) {
                         Ok(0) => break 'conn, // peer closed
+                        // LINT: allow(panic-path): read() returns n <=
+                        // rbuf.len() by contract, so the slice is in
+                        // bounds for any peer input.
                         Ok(n) => parser.push(&rbuf[..n]),
                         // timeout, reset, ... — nothing mid-flight, close
                         Err(_) => break 'conn,

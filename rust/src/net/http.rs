@@ -173,6 +173,9 @@ impl RequestParser {
         // resume the terminator scan where the last one stopped (backed
         // off 2 bytes so a terminator split across pushes is still seen)
         let start = self.scanned.saturating_sub(2);
+        // LINT: allow(panic-path): `scanned <= buf.len()` always (set to
+        // len() on a partial scan, reset to 0 after drain), so `start..`
+        // is in bounds for any peer input.
         let found = find_blank_line(&self.buf[start..])
             .map(|(h, c)| (start + h, start + c));
         let (head_len, head_consumed) = match found {
@@ -198,6 +201,8 @@ impl RequestParser {
         if head_consumed > self.limits.max_head_bytes {
             return Err(HttpError::new(431, "header section too large"));
         }
+        // LINT: allow(panic-path): `head_len` came from find_blank_line
+        // over this very buffer, so it is <= buf.len() by construction.
         let head = std::str::from_utf8(&self.buf[..head_len])
             .map_err(|_| HttpError::new(400, "non-UTF-8 request head"))?;
         let mut lines = head.split('\n').map(|l| l.strip_suffix('\r').unwrap_or(l));
@@ -299,6 +304,9 @@ impl RequestParser {
             }
             return Ok(None);
         }
+        // LINT: allow(panic-path): the `buf.len() < total` early return
+        // above guarantees the slice is in bounds, and
+        // `head_consumed <= total` by construction.
         let body = self.buf[head_consumed..total].to_vec();
         self.buf.drain(..total);
         self.scanned = 0; // next request scans the shifted buffer afresh
@@ -474,8 +482,12 @@ pub fn read_response(
                     "eof before response head",
                 ));
             }
+            // LINT: allow(panic-path): read() returns n <= tmp.len() by
+            // contract, so the slice is in bounds.
             buf.extend_from_slice(&tmp[..n]);
         };
+        // LINT: allow(panic-path): `head_len` came from find_blank_line
+        // over this very buffer, so it is <= buf.len() by construction.
         let head = std::str::from_utf8(&buf[..head_len])
             .map_err(|_| bad("non-UTF-8 response head"))?;
         let mut lines =
@@ -514,6 +526,8 @@ pub fn read_response(
                         "eof inside response body",
                     ));
                 }
+                // LINT: allow(panic-path): read() returns n <= tmp.len()
+                // by contract, so the slice is in bounds.
                 buf.extend_from_slice(&tmp[..n]);
             }
             // everything past this response belongs to the next one
@@ -528,6 +542,8 @@ pub fn read_response(
                 if n == 0 {
                     break;
                 }
+                // LINT: allow(panic-path): read() returns n <= tmp.len()
+                // by contract, so the slice is in bounds.
                 buf.extend_from_slice(&tmp[..n]);
             }
             buf.drain(..consumed);

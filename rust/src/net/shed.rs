@@ -41,18 +41,30 @@ impl InflightGauge {
     /// Admit one request, or refuse (counting the shed) if `max` are
     /// already in flight.  The returned permit releases on drop.
     pub fn try_acquire(self: &Arc<Self>) -> Option<Permit> {
+        // ORDERING: AcqRel — the increment must be a single RMW ordered
+        // against the paired release in Permit::drop, so a freed slot is
+        // observed before the next admit decision (no overshoot beyond
+        // the documented transient).
         let prev = self.current.fetch_add(1, Ordering::AcqRel);
         if self.max != 0 && prev >= self.max {
+            // ORDERING: AcqRel — undo of the optimistic increment, same
+            // pairing discipline as the acquire above.
             self.current.fetch_sub(1, Ordering::AcqRel);
+            // ORDERING: Relaxed — pure statistic; admission correctness
+            // never reads it.
             self.shed.fetch_add(1, Ordering::Relaxed);
             return None;
         }
+        // ORDERING: Relaxed — pure statistic, as with `shed` above.
         self.admitted.fetch_add(1, Ordering::Relaxed);
         Some(Permit { gauge: self.clone() })
     }
 
     /// Requests currently admitted and not yet released.
     pub fn inflight(&self) -> usize {
+        // ORDERING: Acquire — pairs with the AcqRel RMWs so a reader
+        // polling for drain (inflight == 0) also observes the work those
+        // releases published.
         self.current.load(Ordering::Acquire)
     }
 
@@ -63,11 +75,13 @@ impl InflightGauge {
 
     /// Total refusals so far.
     pub fn shed_total(&self) -> u64 {
+        // ORDERING: Relaxed — statistic read for reports/metrics only.
         self.shed.load(Ordering::Relaxed)
     }
 
     /// Total admissions so far.
     pub fn admitted_total(&self) -> u64 {
+        // ORDERING: Relaxed — statistic read for reports/metrics only.
         self.admitted.load(Ordering::Relaxed)
     }
 }
@@ -80,6 +94,9 @@ pub struct Permit {
 
 impl Drop for Permit {
     fn drop(&mut self) {
+        // ORDERING: AcqRel — the release half of the admission pairing:
+        // publishes this request's completed work to the acquire in
+        // try_acquire/inflight before the slot is reusable.
         self.gauge.current.fetch_sub(1, Ordering::AcqRel);
     }
 }

@@ -68,10 +68,14 @@ impl Counter {
     }
 
     pub fn add(&self, n: u64) {
+        // ORDERING: Relaxed — an independent monotone counter; no other
+        // memory is published through it, only the value itself.
         self.0.fetch_add(n, Ordering::Relaxed);
     }
 
     pub fn get(&self) -> u64 {
+        // ORDERING: Relaxed — scrape-time read of a statistic; staleness
+        // by a few increments is fine and orders nothing.
         self.0.load(Ordering::Relaxed)
     }
 }
@@ -82,15 +86,20 @@ pub struct Gauge(Arc<AtomicU64>);
 
 impl Gauge {
     pub fn set(&self, v: u64) {
+        // ORDERING: Relaxed — last-writer-wins telemetry value; nothing
+        // synchronizes on a gauge.
         self.0.store(v, Ordering::Relaxed);
     }
 
     pub fn add(&self, n: u64) {
+        // ORDERING: Relaxed — independent statistic, same as Counter::add.
         self.0.fetch_add(n, Ordering::Relaxed);
     }
 
     pub fn sub(&self, n: u64) {
         // saturating decrement: gauges never wrap below zero
+        // ORDERING: Relaxed (both) — the RMW itself is atomic, which is
+        // all saturation needs; gauges guard no other state.
         let _ = self.0.fetch_update(
             Ordering::Relaxed,
             Ordering::Relaxed,
@@ -99,6 +108,7 @@ impl Gauge {
     }
 
     pub fn get(&self) -> u64 {
+        // ORDERING: Relaxed — scrape-time read, same as Counter::get.
         self.0.load(Ordering::Relaxed)
     }
 }
@@ -135,6 +145,9 @@ pub fn gauge_with(
 pub fn render(w: &mut PromWriter) {
     let map = registry().lock().unwrap();
     for ((name, labels), entry) in map.iter() {
+        // ORDERING: Relaxed — exposition snapshot; each series is read
+        // independently and tear-free per cell, which is all Prometheus
+        // semantics ask for.
         let v = entry.value.load(Ordering::Relaxed) as f64;
         match entry.kind {
             Kind::Counter => w.counter(name, entry.help, labels, v),

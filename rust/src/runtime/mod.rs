@@ -115,15 +115,19 @@ impl TrainStep {
 }
 
 /// View an f32 slice as bytes (native endianness; XLA literals are host
-/// layout).  Safe: any f32 bit pattern is a valid byte sequence and u8
-/// alignment is 1.
+/// layout).
 fn bytemuck_f32(data: &[f32]) -> &[u8] {
+    // SAFETY: any f32 bit pattern is a valid byte sequence, u8 alignment
+    // is 1, and len * 4 covers exactly the source allocation; the
+    // borrow keeps the source alive for the view's lifetime.
     unsafe {
         std::slice::from_raw_parts(data.as_ptr() as *const u8, data.len() * 4)
     }
 }
 
 fn bytemuck_i32(data: &[i32]) -> &[u8] {
+    // SAFETY: same argument as bytemuck_f32 — plain-old-data reinterpret
+    // to the alignment-1 u8, length covering exactly the source slice.
     unsafe {
         std::slice::from_raw_parts(data.as_ptr() as *const u8, data.len() * 4)
     }

@@ -94,7 +94,7 @@ impl TopK {
         let e = Entry { score, id };
         if self.heap.len() < self.k {
             self.heap.push(Reverse(e));
-        } else if e > self.heap.peek().expect("non-empty").0 {
+        } else if self.heap.peek().is_some_and(|worst| e > worst.0) {
             self.heap.pop();
             self.heap.push(Reverse(e));
         }
@@ -339,6 +339,21 @@ mod tests {
             vec![1, 5, 3]
         );
         assert!(got[0].score >= got[1].score && got[1].score >= got[2].score);
+    }
+
+    /// Regression for the panic-path fix in `consider`: once the heap
+    /// is at capacity the worst-entry comparison goes through a
+    /// non-panicking peek, and candidates on both sides of the floor
+    /// still resolve correctly at the k == heap-len boundary.
+    #[test]
+    fn consider_at_capacity_replaces_without_panicking() {
+        let mut t = TopK::new(1);
+        t.consider(7, 0.3); // fills the heap: len == k == 1
+        t.consider(8, 0.1); // below the floor: dropped via the peek path
+        t.consider(9, 0.6); // above the floor: replaces via the peek path
+        let got = t.into_sorted();
+        assert_eq!(got.len(), 1);
+        assert_eq!(got[0].id, 9);
     }
 
     #[test]

@@ -33,6 +33,7 @@ use super::store::ShardedStore;
 use crate::metrics::LatencyStats;
 use crate::obs::{Histogram, Span, StageTimes};
 use crate::util::json::{obj, Json};
+use crate::util::sync::lock_unpoisoned;
 use std::collections::VecDeque;
 use std::sync::atomic::{AtomicU64, Ordering};
 use std::sync::mpsc::{channel, sync_channel, Receiver, SyncSender};
@@ -525,6 +526,10 @@ impl ServeEngine {
     }
 
     pub fn client(&self) -> QueryClient {
+        // LINT: allow(panic-path): `tx` is only `None` after `stop()`,
+        // and `stop()` is reachable only via `shutdown(self)`/`Drop`,
+        // both of which consume the engine — so `client(&self)` can
+        // never observe the stopped state.
         QueryClient { tx: self.tx.clone().expect("engine running") }
     }
 
@@ -608,7 +613,7 @@ impl EngineStats {
     /// Clone of the engine's latency histogram (for the Prometheus
     /// exposition) — a fixed-size copy under a short lock.
     pub fn latency_histogram(&self) -> Histogram {
-        self.shared.latency.lock().unwrap().clone()
+        lock_unpoisoned(&self.shared.latency).clone()
     }
 
     /// Snapshot of the metrics so far — see [`ServeEngine::report`].
@@ -665,11 +670,7 @@ impl EngineStats {
             busy_seconds: self.shared.busy_ns.load(Ordering::Relaxed)
                 as f64
                 / 1e9,
-            slow: self
-                .shared
-                .slow
-                .lock()
-                .unwrap()
+            slow: lock_unpoisoned(&self.shared.slow)
                 .iter()
                 .cloned()
                 .collect(),
@@ -889,10 +890,19 @@ fn dispatch_loop(
         let mut outbox = Vec::with_capacity(pendings.len());
         let mut slow_entries: Vec<SlowQuery> = Vec::new();
         {
-            let mut lat = shared.latency.lock().unwrap();
+            let mut lat = lock_unpoisoned(&shared.latency);
             for p in pendings {
                 let response = match p.slot {
-                    Ok(i) => results[i].take().expect("one reply per slot"),
+                    // each Ok slot index was handed out exactly once, so
+                    // a missing or doubly-taken slot is an internal bug;
+                    // surface it as a per-request error, never a panic
+                    // on the serving path
+                    Ok(i) => results
+                        .get_mut(i)
+                        .and_then(Option::take)
+                        .unwrap_or_else(|| {
+                            Err("internal: reply slot mismatch".into())
+                        }),
                     Err(e) => Err(e),
                 };
                 // queue wait: enqueue to this batch starting (zero for
@@ -913,7 +923,7 @@ fn dispatch_loop(
             }
         }
         if !slow_entries.is_empty() {
-            let mut slow = shared.slow.lock().unwrap();
+            let mut slow = lock_unpoisoned(&shared.slow);
             for entry in slow_entries {
                 crate::log_debug!(
                     "serve: slow query {:.0}us k={} trace={}",
@@ -1010,11 +1020,7 @@ fn resolve(
                     store.dim()
                 ));
             }
-            let norm = v
-                .iter()
-                .map(|x| (*x as f64) * (*x as f64))
-                .sum::<f64>()
-                .sqrt() as f32;
+            let norm = crate::vecops::dot_f64(&v, &v).sqrt() as f32;
             if norm == 0.0 || !norm.is_finite() {
                 return Err(
                     "query vector must be non-zero and finite".to_string()
@@ -1118,6 +1124,47 @@ mod tests {
         assert_eq!(report.queries, 4);
         assert!(report.latency.count == 4);
         assert_eq!(report.loaded_shards, 4);
+    }
+
+    /// Regression for the panic-path fix in the dispatcher's reply
+    /// loop: a batch mixing resolve-failures (out-of-range ids) with
+    /// valid queries must route every reply to its own request — the
+    /// Err slots shift the reply-slot indices of the Ok ones, which is
+    /// exactly the alignment the old `results[i].take().expect(..)`
+    /// asserted and the rewrite must preserve without panicking.
+    #[test]
+    fn mixed_valid_and_invalid_queries_each_get_their_reply() {
+        let (_model, dir) = setup("mixed", 30, 8);
+        let store =
+            Arc::new(ShardedStore::open(&dir, Precision::Exact).unwrap());
+        let engine = ServeEngine::start(store, opts());
+        let client = engine.client();
+        // enqueue before receiving so the dispatcher can drain several
+        // into one micro-batch (interleaving either way is correct)
+        let rxs = vec![
+            client.submit_id(3, 4),
+            client.submit_id(999, 4), // out of range: Err slot
+            client.submit_id(7, 4),
+            client.submit_id(500, 4), // out of range: Err slot
+            client.submit_id(11, 4),
+        ];
+        let replies: Vec<QueryResponse> =
+            rxs.into_iter().map(recv_response).collect();
+        for (i, want_id) in [(0usize, 3u32), (2, 7), (4, 11)] {
+            let got = replies[i].as_ref().expect("valid query succeeds");
+            assert_eq!(got.len(), 4, "k neighbors for request {i}");
+            assert!(
+                got.iter().all(|n| n.id != want_id),
+                "self-match excluded for request {i}"
+            );
+        }
+        for i in [1usize, 3] {
+            let err = replies[i].as_ref().expect_err("invalid id fails");
+            assert!(err.contains("out of range"), "got: {err}");
+        }
+        drop(client);
+        let report = engine.shutdown();
+        assert_eq!(report.queries, 5, "failed queries still counted");
     }
 
     #[test]

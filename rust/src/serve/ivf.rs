@@ -274,11 +274,7 @@ pub fn train_kmeans(
         let mut reseeded = false;
         for c in 0..k {
             let sum = &sums[c * dim..(c + 1) * dim];
-            let norm = sum
-                .iter()
-                .map(|x| (*x as f64) * (*x as f64))
-                .sum::<f64>()
-                .sqrt();
+            let norm = vecops::dot_f64(sum, sum).sqrt();
             if counts[c] == 0 || norm == 0.0 {
                 // dead cluster: reseed to the row the current centroids
                 // serve worst, and exclude it from further reseeds this

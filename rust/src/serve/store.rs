@@ -280,10 +280,15 @@ impl Shard {
     pub fn ids_block(&self, start: usize, n: usize) -> Option<&[u32]> {
         // same checked arithmetic as row_block: a wrapped end would
         // panic later with a misleading slice error in release builds
+        // LINT: allow(panic-path): an overflowing block request means a
+        // corrupted manifest or caller bug, not client input — fail
+        // loudly at the source instead of slicing garbage.
         let lo = self
             .start_row
             .checked_add(start)
             .unwrap_or_else(|| panic!("ids block start {start} overflows"));
+        // LINT: allow(panic-path): same manifest-corruption invariant
+        // as `lo` above.
         let hi = lo
             .checked_add(n)
             .unwrap_or_else(|| panic!("ids block [{start}, {start}+{n}) overflows"));
@@ -315,6 +320,8 @@ impl Shard {
         // checked: for adversarial inputs `start + n` wraps in release
         // builds, slipping past the bound check only to panic later
         // with a misleading slice error
+        // LINT: allow(panic-path): overflow means a caller bug (scan
+        // ranges come from the manifest, not the wire) — fail loudly.
         let end = start
             .checked_add(n)
             .unwrap_or_else(|| panic!("block [{start}, {start}+{n}) overflows"));
@@ -813,7 +820,9 @@ impl ShardedStore {
         // a concurrent loader may have won the race; either value is
         // identical so the loser's copy is just dropped
         let _ = self.cells[i].set(loaded);
-        Ok(self.cells[i].get().expect("just set"))
+        self.cells[i]
+            .get()
+            .ok_or_else(|| anyhow!("internal: shard {i} cell empty after set"))
     }
 
     /// Materialize a global row.  `None` for out-of-range ids.
@@ -890,6 +899,35 @@ mod tests {
         }
         assert_eq!(store.loaded_shards(), 3);
         assert!(store.fetch_row(10, &mut out).unwrap().is_none());
+    }
+
+    /// Regression for the panic-path fix in `shard`: when several
+    /// threads race the first-touch load of the same shard, exactly one
+    /// `set` wins and every caller — winner and losers alike — gets
+    /// `Ok` with the same loaded shard, never a panic or an error.
+    #[test]
+    fn concurrent_first_touch_loads_resolve_for_all_racers() {
+        let v = vocab(12);
+        let m = EmbeddingModel::init(12, 8, 5);
+        let dir = tmpdir("race");
+        export_store(&m, &v, &dir, 2).unwrap();
+        let store =
+            Arc::new(ShardedStore::open(&dir, Precision::Exact).unwrap());
+        std::thread::scope(|s| {
+            let handles: Vec<_> = (0..8)
+                .map(|_| {
+                    let store = Arc::clone(&store);
+                    s.spawn(move || {
+                        let shard = store.shard(1).expect("load resolves");
+                        shard.rows
+                    })
+                })
+                .collect();
+            for h in handles {
+                assert_eq!(h.join().unwrap(), 6, "all racers see the shard");
+            }
+        });
+        assert_eq!(store.loaded_shards(), 1, "only shard 1 paged in");
     }
 
     #[test]

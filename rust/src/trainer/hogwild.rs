@@ -214,6 +214,8 @@ where
         rep.words += p.words;
         rep.batches += p.chunks;
         rep.stages.merge(&p.stages);
+        // LINT: allow(kernel-purity): unit conversion on per-worker
+        // report fields, not a vector kernel.
         rep.busy_seconds += p.busy_ns as f64 * 1e-9;
         reuse.merge(p.reuse);
     }

@@ -4,6 +4,7 @@ pub mod benchkit;
 pub mod json;
 pub mod log;
 pub mod rng;
+pub mod sync;
 pub mod tables;
 
 use std::time::Instant;

@@ -1,0 +1,51 @@
+//! Panic-free locking for the request paths.
+//!
+//! `Mutex::lock` only errors when another thread panicked while
+//! holding the lock.  On the `net/`/`serve/` request paths that must
+//! not cascade into more panics (the L4 panic-path invariant): the
+//! protected values here are latency/slow-query telemetry that is
+//! valid at every step, so recovering the guard from a poisoned lock
+//! is always sound.
+
+use std::sync::{Mutex, MutexGuard};
+
+/// Lock `m`, recovering the guard if a previous holder panicked.
+///
+/// Use this instead of `.lock().unwrap()` wherever a poisoned mutex
+/// should degrade (keep serving with whatever state the panicking
+/// thread left — by construction always consistent) rather than take
+/// the whole worker down.
+pub fn lock_unpoisoned<T>(m: &Mutex<T>) -> MutexGuard<'_, T> {
+    m.lock().unwrap_or_else(|poisoned| poisoned.into_inner())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::sync::Arc;
+
+    #[test]
+    fn recovers_a_poisoned_mutex() {
+        let m = Arc::new(Mutex::new(7u32));
+        let m2 = Arc::clone(&m);
+        // poison the lock by panicking while holding it
+        let _ = std::thread::spawn(move || {
+            let _guard = m2.lock().unwrap();
+            panic!("poison");
+        })
+        .join();
+        assert!(m.lock().is_err(), "lock must actually be poisoned");
+        let mut g = lock_unpoisoned(&m);
+        assert_eq!(*g, 7);
+        *g += 1;
+        drop(g);
+        assert_eq!(*lock_unpoisoned(&m), 8);
+    }
+
+    #[test]
+    fn plain_lock_still_works() {
+        let m = Mutex::new(vec![1, 2, 3]);
+        lock_unpoisoned(&m).push(4);
+        assert_eq!(lock_unpoisoned(&m).len(), 4);
+    }
+}

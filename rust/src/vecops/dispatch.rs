@@ -133,21 +133,27 @@ type Dot4I8Fn = unsafe fn(&[i8], f32, [&[f32]; Q_TILE]) -> [f32; Q_TILE];
 
 // Scalar entries in the table: trivial unsafe shims so every slot has
 // the same `unsafe fn` pointer type as the `#[target_feature]` paths.
+// SAFETY: wraps a safe fn; `unsafe` only matches the pointer type.
 unsafe fn scalar_dot(a: &[f32], b: &[f32]) -> f32 {
     scalar::dot(a, b)
 }
+// SAFETY: wraps a safe fn; `unsafe` only matches the pointer type.
 unsafe fn scalar_dot_i8(codes: &[i8], scale: f32, x: &[f32]) -> f32 {
     scalar::dot_i8(codes, scale, x)
 }
+// SAFETY: wraps a safe fn; `unsafe` only matches the pointer type.
 unsafe fn scalar_dot_f64(a: &[f32], b: &[f32]) -> f64 {
     scalar::dot_f64(a, b)
 }
+// SAFETY: wraps a safe fn; `unsafe` only matches the pointer type.
 unsafe fn scalar_axpy(alpha: f32, x: &[f32], y: &mut [f32]) {
     scalar::axpy(alpha, x, y)
 }
+// SAFETY: wraps a safe fn; `unsafe` only matches the pointer type.
 unsafe fn scalar_dot4(a: &[f32], b: [&[f32]; Q_TILE]) -> [f32; Q_TILE] {
     scalar::dot4(a, b)
 }
+// SAFETY: wraps a safe fn; `unsafe` only matches the pointer type.
 unsafe fn scalar_dot4_i8(
     codes: &[i8],
     scale: f32,

@@ -21,6 +21,9 @@ use core::arch::aarch64::*;
 use super::scalar::{reduce, reduce_f64, F64_LANES, LANES};
 use super::Q_TILE;
 
+// SAFETY: reached only through the dispatch table, which verified NEON
+// at construction; 4-lane loads stop below a.len() == b.len() (caller
+// contract).
 #[target_feature(enable = "neon")]
 pub(crate) unsafe fn dot_neon(a: &[f32], b: &[f32]) -> f32 {
     let n = a.len();
@@ -48,6 +51,8 @@ pub(crate) unsafe fn dot_neon(a: &[f32], b: &[f32]) -> f32 {
 }
 
 /// Widen 8 int8 codes to two f32x4 registers (exact conversion).
+// SAFETY: callers are NEON target-feature fns and pass a pointer with
+// at least 8 readable codes (chunk loop bound).
 #[inline]
 #[target_feature(enable = "neon")]
 unsafe fn widen8(p: *const i8) -> (float32x4_t, float32x4_t) {
@@ -57,6 +62,8 @@ unsafe fn widen8(p: *const i8) -> (float32x4_t, float32x4_t) {
     (lo, hi)
 }
 
+// SAFETY: dispatch verified NEON; code and f32 loads stop below
+// codes.len(), which the caller keeps == x.len().
 #[target_feature(enable = "neon")]
 pub(crate) unsafe fn dot_i8_neon(codes: &[i8], scale: f32, x: &[f32]) -> f32 {
     let n = codes.len();
@@ -78,6 +85,9 @@ pub(crate) unsafe fn dot_i8_neon(codes: &[i8], scale: f32, x: &[f32]) -> f32 {
     reduce(&acc, (base..n).map(|j| codes[j] as f32 * x[j])) * scale
 }
 
+// SAFETY: dispatch verified NEON; 4-lane loads stop below a.len() ==
+// b.len() (caller contract), and the f64 stores land in the local
+// 4-wide accumulator array.
 #[target_feature(enable = "neon")]
 pub(crate) unsafe fn dot_f64_neon(a: &[f32], b: &[f32]) -> f64 {
     let n = a.len();
@@ -106,6 +116,8 @@ pub(crate) unsafe fn dot_f64_neon(a: &[f32], b: &[f32]) -> f64 {
     reduce_f64(&acc, (base..n).map(|j| a[j] as f64 * b[j] as f64))
 }
 
+// SAFETY: dispatch verified NEON; loads/stores through the raw y
+// pointer stop below x.len(), and the caller keeps y.len() == x.len().
 #[target_feature(enable = "neon")]
 pub(crate) unsafe fn axpy_neon(alpha: f32, x: &[f32], y: &mut [f32]) {
     const W: usize = 4;
@@ -124,6 +136,8 @@ pub(crate) unsafe fn axpy_neon(alpha: f32, x: &[f32], y: &mut [f32]) {
     }
 }
 
+// SAFETY: dispatch verified NEON; all four query rows are kept at
+// a.len() by the tile caller, so every load is in bounds.
 #[target_feature(enable = "neon")]
 pub(crate) unsafe fn dot4_neon(a: &[f32], b: [&[f32]; Q_TILE]) -> [f32; Q_TILE] {
     let n = a.len();
@@ -152,6 +166,9 @@ pub(crate) unsafe fn dot4_neon(a: &[f32], b: [&[f32]; Q_TILE]) -> [f32; Q_TILE] 
     out
 }
 
+// SAFETY: dispatch verified NEON; code loads and the four query-row
+// loads stop below codes.len(), which the tile caller keeps equal to
+// every b[t].len().
 #[target_feature(enable = "neon")]
 pub(crate) unsafe fn dot4_i8_neon(
     codes: &[i8],

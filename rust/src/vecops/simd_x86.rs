@@ -36,6 +36,9 @@ use core::arch::x86_64::*;
 use super::scalar::{reduce, reduce_f64, F64_LANES, LANES};
 use super::Q_TILE;
 
+// SAFETY: reached only through the dispatch table, which verified avx2
+// at construction; unaligned loads (`loadu`) stop below a.len(), and
+// the caller contract (dispatch) guarantees b.len() == a.len().
 #[target_feature(enable = "avx2")]
 pub(crate) unsafe fn dot_avx2(a: &[f32], b: &[f32]) -> f32 {
     let n = a.len();
@@ -56,6 +59,8 @@ pub(crate) unsafe fn dot_avx2(a: &[f32], b: &[f32]) -> f32 {
     reduce(&acc, (base..n).map(|j| a[j] * b[j]))
 }
 
+// SAFETY: dispatch verified avx2; the 8-byte code load and the f32
+// loads stop below codes.len(), which the caller keeps == x.len().
 #[target_feature(enable = "avx2")]
 pub(crate) unsafe fn dot_i8_avx2(codes: &[i8], scale: f32, x: &[f32]) -> f32 {
     let n = codes.len();
@@ -76,6 +81,8 @@ pub(crate) unsafe fn dot_i8_avx2(codes: &[i8], scale: f32, x: &[f32]) -> f32 {
     reduce(&acc, (base..n).map(|j| codes[j] as f32 * x[j])) * scale
 }
 
+// SAFETY: dispatch verified avx2; each 4-lane f32 load stays below
+// a.len() == b.len() (caller contract).
 #[target_feature(enable = "avx2")]
 pub(crate) unsafe fn dot_f64_avx2(a: &[f32], b: &[f32]) -> f64 {
     let n = a.len();
@@ -95,6 +102,8 @@ pub(crate) unsafe fn dot_f64_avx2(a: &[f32], b: &[f32]) -> f64 {
     reduce_f64(&acc, (base..n).map(|j| a[j] as f64 * b[j] as f64))
 }
 
+// SAFETY: dispatch verified avx2; loads/stores through the raw y
+// pointer stop below x.len(), and the caller keeps y.len() == x.len().
 #[target_feature(enable = "avx2")]
 pub(crate) unsafe fn axpy_avx2(alpha: f32, x: &[f32], y: &mut [f32]) {
     let n = x.len();
@@ -115,6 +124,8 @@ pub(crate) unsafe fn axpy_avx2(alpha: f32, x: &[f32], y: &mut [f32]) {
     }
 }
 
+// SAFETY: dispatch verified avx2; all four query rows are kept at
+// a.len() by the tile caller, so every unaligned load is in bounds.
 #[target_feature(enable = "avx2")]
 pub(crate) unsafe fn dot4_avx2(a: &[f32], b: [&[f32]; Q_TILE]) -> [f32; Q_TILE] {
     let n = a.len();
@@ -143,6 +154,9 @@ pub(crate) unsafe fn dot4_avx2(a: &[f32], b: [&[f32]; Q_TILE]) -> [f32; Q_TILE] 
     finish4(a.len(), chunks * LANES, &lanes, |j, t| a[j] * b[t][j])
 }
 
+// SAFETY: dispatch verified avx2; code loads and the four query-row
+// loads stop below codes.len(), which the tile caller keeps equal to
+// every b[t].len().
 #[target_feature(enable = "avx2")]
 pub(crate) unsafe fn dot4_i8_avx2(
     codes: &[i8],
@@ -194,6 +208,8 @@ fn finish4(
     out
 }
 
+// SAFETY: dispatch verified avx512f; 16-lane loads/stores stop below
+// x.len(), and the caller keeps y.len() == x.len().
 #[target_feature(enable = "avx512f")]
 pub(crate) unsafe fn axpy_avx512(alpha: f32, x: &[f32], y: &mut [f32]) {
     const W: usize = 16;
@@ -217,6 +233,8 @@ pub(crate) unsafe fn axpy_avx512(alpha: f32, x: &[f32], y: &mut [f32]) {
 
 /// Broadcast a ymm into both 256-bit halves of a zmm using only
 /// AVX512F ops (`vshuff32x4` with an identity-pair mask).
+// SAFETY: register-only shuffle; callers are themselves avx512f
+// target-feature fns, so the feature is already established.
 #[inline]
 #[target_feature(enable = "avx512f")]
 unsafe fn pair512(lo: __m256, hi: __m256) -> __m512 {
@@ -226,6 +244,9 @@ unsafe fn pair512(lo: __m256, hi: __m256) -> __m512 {
     _mm512_shuffle_f32x4::<0x44>(a, b)
 }
 
+// SAFETY: dispatch verified avx512f; 8-lane loads stop below a.len()
+// (== every b[t].len()), and the zmm stores land inside the 4x8 lanes
+// array whose pointer they are derived from.
 #[target_feature(enable = "avx512f")]
 pub(crate) unsafe fn dot4_avx512(a: &[f32], b: [&[f32]; Q_TILE]) -> [f32; Q_TILE] {
     let n = a.len();
@@ -261,6 +282,9 @@ pub(crate) unsafe fn dot4_avx512(a: &[f32], b: [&[f32]; Q_TILE]) -> [f32; Q_TILE
     finish4(n, chunks * LANES, &lanes, |j, t| a[j] * b[t][j])
 }
 
+// SAFETY: dispatch verified avx512f; code and query-row loads stop
+// below codes.len() (== every b[t].len()), and the zmm stores land
+// inside the 4x8 lanes array.
 #[target_feature(enable = "avx512f")]
 pub(crate) unsafe fn dot4_i8_avx512(
     codes: &[i8],

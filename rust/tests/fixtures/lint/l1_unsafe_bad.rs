@@ -1,0 +1,5 @@
+//! unsafe-audit negative fixture: an `unsafe` block with no
+//! `// SAFETY:` comment.  Linted through `run_files`, never compiled.
+pub fn read_first(p: *const f32) -> f32 {
+    unsafe { *p }
+}

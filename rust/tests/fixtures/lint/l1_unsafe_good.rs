@@ -1,0 +1,6 @@
+//! unsafe-audit positive fixture: the same site, annotated.  Clean only
+//! when the lint run also supplies a budget entry for this file.
+pub fn read_first(p: *const f32) -> f32 {
+    // SAFETY: the caller guarantees `p` is valid for reads.
+    unsafe { *p }
+}

@@ -1,0 +1,13 @@
+//! kernel-purity negative fixture: a hand-rolled f32 multiply-
+//! accumulate loop and a map-multiply reduction, both outside vecops/.
+pub fn dot(a: &[f32], b: &[f32]) -> f32 {
+    let mut acc = 0.0f32;
+    for i in 0..a.len() {
+        acc += a[i] * b[i];
+    }
+    acc
+}
+
+pub fn norm_sq(v: &[f32]) -> f64 {
+    v.iter().map(|x| (*x as f64) * (*x as f64)).sum::<f64>()
+}

@@ -1,0 +1,13 @@
+//! kernel-purity positive fixture: the same reductions routed through
+//! the vecops dispatch API (plus integer accounting, which is exempt).
+pub fn dot(a: &[f32], b: &[f32]) -> f64 {
+    crate::vecops::dot_f64(a, b)
+}
+
+pub fn pairs(m: usize, n: usize) -> u64 {
+    let mut acc = 0u64;
+    for _ in 0..3 {
+        acc += (m * n) as u64;
+    }
+    acc
+}

@@ -1,0 +1,7 @@
+//! simd-contract negative fixture: a raw `std::arch` import, loose
+//! intrinsics outside the backends, and an FMA (never waivable).
+use std::arch::x86_64::*;
+
+pub fn fused(a: __m256, b: __m256, c: __m256) -> __m256 {
+    _mm256_fmadd_ps(a, b, c)
+}

@@ -1,0 +1,6 @@
+//! simd-contract positive fixture: allowlisted, non-fused intrinsics.
+//! Quiet only when linted at the audited backend path
+//! (`rust/src/vecops/simd_x86.rs`); loud anywhere else.
+pub fn mul(a: __m256, b: __m256) -> __m256 {
+    _mm256_mul_ps(a, b)
+}

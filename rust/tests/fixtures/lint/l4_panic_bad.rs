@@ -1,0 +1,6 @@
+//! panic-path negative fixture: a panicking unwrap and wire-facing
+//! range indexing, both fatal on a request path.
+pub fn frame(buf: &[u8], n: Option<usize>) -> &[u8] {
+    let len = n.unwrap();
+    &buf[..len]
+}

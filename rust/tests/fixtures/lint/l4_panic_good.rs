@@ -1,0 +1,11 @@
+//! panic-path positive fixture: the checked idiom (get + error
+//! response) and a justified waiver for a provably-bounded slice.
+pub fn frame(buf: &[u8], n: Option<usize>) -> Result<&[u8], String> {
+    let len = n.ok_or_else(|| "missing length".to_string())?;
+    buf.get(..len).ok_or_else(|| "truncated frame".to_string())
+}
+
+pub fn tail(buf: &[u8], n: usize) -> &[u8] {
+    // LINT: allow(panic-path): caller contract guarantees n <= buf.len().
+    &buf[..n]
+}

@@ -1,0 +1,7 @@
+//! ordering-annotation negative fixture: an atomic ordering with no
+//! `// ORDERING:` justification, in an audited file.
+use std::sync::atomic::{AtomicU64, Ordering};
+
+pub fn bump(c: &AtomicU64) -> u64 {
+    c.fetch_add(1, Ordering::Relaxed)
+}

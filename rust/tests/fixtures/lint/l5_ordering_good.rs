@@ -1,0 +1,8 @@
+//! ordering-annotation positive fixture: the same site, justified.
+use std::sync::atomic::{AtomicU64, Ordering};
+
+pub fn bump(c: &AtomicU64) -> u64 {
+    // ORDERING: Relaxed — independent statistic; the value itself is
+    // the only memory published through this atomic.
+    c.fetch_add(1, Ordering::Relaxed)
+}

@@ -1,0 +1,159 @@
+//! Self-hosting lint gate: the five repo-invariant lints run over this
+//! very checkout inside tier-1 `cargo test`, and every lint is proven
+//! *live* against a negative + positive fixture pair under
+//! `fixtures/lint/` — a directory the source walk excludes, so the
+//! fixtures are linted only through the explicit [`analysis::run_files`]
+//! injection point and are never compiled.
+//!
+//! The fixture tests lint identical text under different *virtual*
+//! paths, because path is what scopes a lint (`net/` for the range-index
+//! rule, the two backend files for the intrinsic allowlists, the three
+//! audited files for ordering annotations).
+
+use fullw2v::analysis::{self, Finding, SourceFile, UNSAFE_BUDGET};
+use std::path::Path;
+
+const L1_BAD: &str = include_str!("fixtures/lint/l1_unsafe_bad.rs");
+const L1_GOOD: &str = include_str!("fixtures/lint/l1_unsafe_good.rs");
+const L2_BAD: &str = include_str!("fixtures/lint/l2_kernel_bad.rs");
+const L2_GOOD: &str = include_str!("fixtures/lint/l2_kernel_good.rs");
+const L3_BAD: &str = include_str!("fixtures/lint/l3_simd_bad.rs");
+const L3_GOOD: &str = include_str!("fixtures/lint/l3_simd_good.rs");
+const L4_BAD: &str = include_str!("fixtures/lint/l4_panic_bad.rs");
+const L4_GOOD: &str = include_str!("fixtures/lint/l4_panic_good.rs");
+const L5_BAD: &str = include_str!("fixtures/lint/l5_ordering_bad.rs");
+const L5_GOOD: &str = include_str!("fixtures/lint/l5_ordering_good.rs");
+
+fn file_at(path: &str, text: &str) -> Vec<SourceFile> {
+    vec![SourceFile { path: path.to_string(), text: text.to_string() }]
+}
+
+/// Lint one fixture at a virtual path with an explicit budget.
+fn lint(path: &str, text: &str, budget: &str) -> Vec<Finding> {
+    analysis::run_files(&file_at(path, text), budget)
+        .expect("lint run")
+        .findings
+}
+
+fn all_are(findings: &[Finding], lint: &str) -> bool {
+    !findings.is_empty() && findings.iter().all(|f| f.lint == lint)
+}
+
+/// The acceptance-criteria test: this checkout lints clean with the
+/// shipped lint set and the checked-in unsafe budget.
+#[test]
+fn repo_is_lint_clean() {
+    let root = Path::new(env!("CARGO_MANIFEST_DIR"));
+    let report = analysis::run(root).expect("walk + lint this checkout");
+    assert!(
+        report.files > 20,
+        "suspiciously few sources walked: {}",
+        report.files
+    );
+    assert!(
+        report.clean(),
+        "the repo must lint clean; findings:\n{}",
+        analysis::render_text(&report)
+    );
+}
+
+#[test]
+fn unsafe_audit_is_live() {
+    // unannotated site in a correctly-budgeted file: SAFETY finding
+    let f = lint("rust/src/demo.rs", L1_BAD, "rust/src/demo.rs 1\n");
+    assert!(all_are(&f, "unsafe-audit"), "{f:?}");
+    assert!(f.iter().any(|x| x.msg.contains("SAFETY")), "{f:?}");
+
+    // annotated site in a file missing from the budget: budget finding
+    let f = lint("rust/src/demo.rs", L1_GOOD, "");
+    assert!(all_are(&f, "unsafe-audit"), "{f:?}");
+    assert!(f.iter().any(|x| x.msg.contains("not in the unsafe budget")));
+
+    // annotated site with a wrong count: mismatch finding
+    let f = lint("rust/src/demo.rs", L1_GOOD, "rust/src/demo.rs 3\n");
+    assert!(f.iter().any(|x| x.msg.contains("budget says 3")), "{f:?}");
+
+    // annotated + exactly budgeted: clean
+    let f = lint("rust/src/demo.rs", L1_GOOD, "rust/src/demo.rs 1\n");
+    assert!(f.is_empty(), "{f:?}");
+}
+
+#[test]
+fn kernel_purity_is_live() {
+    let f = lint("rust/src/demo.rs", L2_BAD, "");
+    assert!(all_are(&f, "kernel-purity"), "{f:?}");
+    assert_eq!(f.len(), 2, "one per shape (loop MAC, map-mul): {f:?}");
+
+    // the vecops-routed + integer-accounting version is clean
+    assert!(lint("rust/src/demo.rs", L2_GOOD, "").is_empty());
+    // and the kernel home itself is allowed to hand-roll reductions
+    assert!(lint("rust/src/vecops/demo.rs", L2_BAD, "").is_empty());
+}
+
+#[test]
+fn simd_contract_is_live() {
+    let f = lint("rust/src/demo.rs", L3_BAD, "");
+    assert!(all_are(&f, "simd-contract"), "{f:?}");
+    assert!(
+        f.iter().any(|x| x.msg.contains("fused multiply-add")),
+        "the FMA family must be called out: {f:?}"
+    );
+    assert!(
+        f.iter().any(|x| x.msg.contains("std::arch")),
+        "the raw arch import must be called out: {f:?}"
+    );
+
+    // allowlisted intrinsics: quiet in the audited backend, loud outside
+    assert!(lint("rust/src/vecops/simd_x86.rs", L3_GOOD, "").is_empty());
+    let f = lint("rust/src/demo.rs", L3_GOOD, "");
+    assert!(all_are(&f, "simd-contract"), "{f:?}");
+}
+
+#[test]
+fn panic_path_is_live() {
+    // net/: both the unwrap and the wire-facing range index fire
+    let f = lint("rust/src/net/demo.rs", L4_BAD, "");
+    assert!(all_are(&f, "panic-path"), "{f:?}");
+    assert_eq!(f.len(), 2, "unwrap + range index: {f:?}");
+
+    // serve/: panics fire, but the range-index rule is net/-only
+    let f = lint("rust/src/serve/demo.rs", L4_BAD, "");
+    assert_eq!(f.len(), 1, "{f:?}");
+
+    // outside the request paths the same text is fine
+    assert!(lint("rust/src/obs/demo.rs", L4_BAD, "").is_empty());
+    // and the checked idiom (plus a justified waiver) is clean in net/
+    assert!(lint("rust/src/net/demo.rs", L4_GOOD, "").is_empty());
+}
+
+#[test]
+fn ordering_annotation_is_live() {
+    let f = lint("rust/src/obs/registry.rs", L5_BAD, "");
+    assert!(all_are(&f, "ordering-annotation"), "{f:?}");
+
+    // only the audited files are in scope
+    assert!(lint("rust/src/obs/other.rs", L5_BAD, "").is_empty());
+    // a justified ordering is clean
+    assert!(lint("rust/src/obs/registry.rs", L5_GOOD, "").is_empty());
+}
+
+/// The checked-in budget parses, and its paths all exist in this
+/// checkout — a stale path would silently stop auditing a real file.
+#[test]
+fn checked_in_budget_paths_exist() {
+    let root = Path::new(env!("CARGO_MANIFEST_DIR"));
+    let mut entries = 0;
+    for raw in UNSAFE_BUDGET.lines() {
+        let line = raw.split('#').next().unwrap_or("").trim();
+        if line.is_empty() {
+            continue;
+        }
+        let path = line.split_whitespace().next().expect("path field");
+        assert!(
+            root.join(path).is_file(),
+            "budget entry {path} does not exist in the checkout"
+        );
+        entries += 1;
+    }
+    assert!(entries >= 5, "the seed budget covers five files");
+}

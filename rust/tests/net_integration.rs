@@ -419,6 +419,78 @@ fn wire_protocol_errors_and_split_reads() {
     server.stop();
 }
 
+/// Regression for the waived range-slicing invariants in the request
+/// parser (`buf[start..]`, `buf[..head_len]`, `buf[head_consumed..
+/// total]`): adversarial body framing — split mid-body, binary garbage,
+/// and empty — must produce clean HTTP errors or answers, never a
+/// panicked worker (which would surface as a dropped connection).
+#[test]
+fn adversarial_body_framing_never_kills_the_connection() {
+    let server = start_server(
+        "advbody",
+        Precision::Exact,
+        engine_opts(),
+        NetOptions::default(),
+    );
+    let addr = server.local_addr().to_string();
+
+    // body split mid-JSON across two writes: the parser must reassemble
+    // across pushes and slice the body out of the shifted buffer
+    let mut s = TcpStream::connect(&addr).unwrap();
+    s.set_read_timeout(Some(Duration::from_secs(10))).unwrap();
+    s.set_nodelay(true).unwrap();
+    let head = format!(
+        "POST /v1/nn HTTP/1.1\r\nHost: {addr}\r\nContent-Length: 8\r\n\r\n"
+    );
+    s.write_all(head.as_bytes()).unwrap();
+    s.write_all(b"{\"id\"").unwrap();
+    std::thread::sleep(Duration::from_millis(20));
+    s.write_all(b":3}").unwrap();
+    let mut carry = Vec::new();
+    let (status, _) = read_response(&mut s, &mut carry).unwrap();
+    assert_eq!(status, 200, "split body reassembles");
+
+    // keep-alive: binary garbage with exact framing on the same
+    // connection is a handler-level 400, and the shifted buffer then
+    // parses a correct follow-up request
+    let garbage = [0xFFu8, 0x00, 0xFE, 0x01, 0x80, 0x7F, 0xAA, 0x55];
+    let head = format!(
+        "POST /v1/nn HTTP/1.1\r\nHost: {addr}\r\nContent-Length: {}\r\n\r\n",
+        garbage.len()
+    );
+    s.write_all(head.as_bytes()).unwrap();
+    s.write_all(&garbage).unwrap();
+    let (status, _) = read_response(&mut s, &mut carry).unwrap();
+    assert_eq!(status, 400, "binary body is rejected, not panicked on");
+
+    let follow = format!(
+        "POST /v1/nn HTTP/1.1\r\nHost: {addr}\r\nContent-Length: 8\r\n\
+         Connection: close\r\n\r\n{{\"id\":3}}"
+    );
+    s.write_all(follow.as_bytes()).unwrap();
+    let (status, body) = read_response(&mut s, &mut carry).unwrap();
+    assert_eq!(status, 200, "connection survives the 400");
+    let parsed = Json::parse(std::str::from_utf8(&body).unwrap()).unwrap();
+    let direct = server.client().query_id(3, 10).unwrap();
+    assert_eq!(
+        neighbor_ids(&parsed),
+        direct.iter().map(|n| n.id).collect::<Vec<_>>(),
+    );
+
+    // zero-length POST body: empty JSON is a clean 400
+    let mut s2 = TcpStream::connect(&addr).unwrap();
+    s2.set_read_timeout(Some(Duration::from_secs(10))).unwrap();
+    let empty = format!(
+        "POST /v1/nn HTTP/1.1\r\nHost: {addr}\r\nContent-Length: 0\r\n\
+         Connection: close\r\n\r\n"
+    );
+    s2.write_all(empty.as_bytes()).unwrap();
+    let (status, _) = read_response(&mut s2, &mut Vec::new()).unwrap();
+    assert_eq!(status, 400, "empty body is a clean error");
+
+    server.stop();
+}
+
 /// `Expect: 100-continue` gets its interim response before the body is
 /// sent (curl withholds large POST bodies until it arrives), and the
 /// exchange then completes normally.
