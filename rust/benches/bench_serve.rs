@@ -4,7 +4,10 @@
 //! The shape that must hold: QPS scales with shards (worker parallelism)
 //! until core count saturates; cache hit rate rises with capacity under
 //! a Zipf query stream; the int8 store trades a little score fidelity
-//! for footprint at comparable throughput.
+//! for footprint at comparable throughput; per-query probe lists cut
+//! rows-advanced-per-query vs the batch-union plan at held recall; and
+//! a v3 sidecar store opens faster than a v2 JSON-index store, with the
+//! gap growing with vocabulary.
 //!
 //! Args: `cargo bench --bench bench_serve
 //!     [-- --rows N --dim D --queries Q --artifact PATH]`
@@ -19,8 +22,9 @@ use fullw2v::memmodel::cpu;
 use fullw2v::model::EmbeddingModel;
 use fullw2v::obs::artifact;
 use fullw2v::serve::{
-    export_store, export_store_clustered, zipf_ids, Precision, ServeEngine,
-    ServeOptions, ServeReport, ShardedStore,
+    export_store, export_store_clustered, export_store_clustered_as,
+    zipf_ids, Precision, ServeEngine, ServeOptions, ServeReport,
+    ShardedStore, StoreFormat,
 };
 use fullw2v::util::benchkit::{banner, bench};
 use fullw2v::util::json::{obj, Json};
@@ -305,6 +309,120 @@ fn main() {
     }
     print!("{}", t5.render());
 
+    // --- probe plan: batch-union vs per-query lists ---
+    // Same store, same probe width; the union plan advances every
+    // query's heap over the whole batch union, per-query lists only
+    // over each query's own clusters.  rows_adv/query is the per-query
+    // traffic metric that must drop at held recall.
+    let nprobe_cmp = (clusters / 4).max(1);
+    let mut t6 = Table::new(
+        &format!(
+            "probe plan at nprobe {nprobe_cmp} ({clusters} clusters): \
+             union vs per-query"
+        ),
+        &["plan", "rows_adv_pq", "rows_scan_pq", "groups", "recall@10", "qps"],
+    );
+    let mut plan_rows: Vec<Json> = Vec::new();
+    for union_probes in [true, false] {
+        let store =
+            Arc::new(ShardedStore::open(&dir_ivf, Precision::Exact).unwrap());
+        let engine = ServeEngine::start(
+            store,
+            ServeOptions { nprobe: nprobe_cmp, union_probes, ..no_cache() },
+        );
+        let (qps, report) = drive(&engine, &ids, 10);
+        let client = engine.client();
+        let mut hit = 0usize;
+        let mut total = 0usize;
+        for (want, &id) in truth.iter().zip(&sample) {
+            let got: Vec<u32> = client
+                .query_id(id, 10)
+                .expect("valid query")
+                .iter()
+                .map(|n| n.id)
+                .collect();
+            total += want.len();
+            hit += want.iter().filter(|&&w| got.contains(&w)).count();
+        }
+        drop(client);
+        engine.shutdown();
+        let recall = hit as f64 / total.max(1) as f64;
+        let name = if union_probes { "union" } else { "per_query" };
+        t6.row(vec![
+            name.to_string(),
+            f(report.rows_advanced_per_query(), 0),
+            f(report.rows_loaded_per_query(), 0),
+            report.probe_groups.to_string(),
+            f(recall, 3),
+            f(qps, 0),
+        ]);
+        plan_rows.push(obj(vec![
+            ("plan", Json::Str(name.to_string())),
+            // the per-query load each query actually pays (heap-advance
+            // rows); the physical rows_scanned split is alongside
+            (
+                "rows_loaded_per_query",
+                Json::Num(report.rows_advanced_per_query()),
+            ),
+            (
+                "rows_scanned_per_query",
+                Json::Num(report.rows_loaded_per_query()),
+            ),
+            ("probe_groups", Json::Num(report.probe_groups as f64)),
+            ("recall_at_10", Json::Num(recall)),
+            ("qps", Json::Num(qps)),
+        ]));
+    }
+    print!("{}", t6.render());
+
+    // --- store open latency: v2 JSON index vs v3 binary sidecar ---
+    // The open path is what `nn --store` pays per invocation; v3 keeps
+    // it O(shards + clusters) by loading the IVF index from the binary
+    // sidecar instead of parsing the O(vocab) JSON permutation.
+    let mut t7 = Table::new(
+        "store open latency (clustered, 4 shards, f32+int8 on disk)",
+        &["vocab", "format", "open_ms"],
+    );
+    let mut open_rows: Vec<Json> = Vec::new();
+    for scale in [1usize, 4] {
+        let v = rows * scale;
+        let vocab_open = Vocab::from_counts(
+            (0..v).map(|i| (format!("v{i:06}"), (v - i) as u64 + 1)),
+            1,
+        );
+        let model_open = EmbeddingModel::init(v, dim, 13);
+        for format in [StoreFormat::V2Manifest, StoreFormat::V3Sidecar] {
+            let dir = store_dir(&format!("open_{v}_{}", format.name()));
+            export_store_clustered_as(
+                &model_open,
+                &vocab_open,
+                &dir,
+                4,
+                clusters,
+                format,
+            )
+            .unwrap();
+            let iters = 5;
+            let t0 = Instant::now();
+            for _ in 0..iters {
+                let s = ShardedStore::open(&dir, Precision::Exact).unwrap();
+                assert!(s.ivf().is_some(), "clustered store carries an index");
+            }
+            let open_ms = t0.elapsed().as_secs_f64() * 1e3 / iters as f64;
+            t7.row(vec![
+                v.to_string(),
+                format.name().to_string(),
+                f(open_ms, 3),
+            ]);
+            open_rows.push(obj(vec![
+                ("vocab", Json::Num(v as f64)),
+                ("format", Json::Str(format.name().to_string())),
+                ("open_ms", Json::Num(open_ms)),
+            ]));
+        }
+    }
+    print!("{}", t7.render());
+
     // --- precision: exact vs int8 ---
     let mut t3 = Table::new(
         "precision at 4 shards",
@@ -405,6 +523,8 @@ fn main() {
                 ("scan_reuse", Json::Arr(reuse_rows)),
                 ("cache_sweep", Json::Arr(cache_rows)),
                 ("ivf_sweep", Json::Arr(ivf_rows)),
+                ("probe_plan", Json::Arr(plan_rows)),
+                ("store_open", Json::Arr(open_rows)),
                 ("precision", Json::Arr(precision_rows)),
                 // stage decomposition + quantiles from the final
                 // (default-options, exact, 4-shard) engine's run

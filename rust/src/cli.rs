@@ -15,6 +15,7 @@
 //! -v/--verbose, -q/--quiet, --simd auto|scalar|avx2|avx512|neon.
 
 use crate::config::Config;
+use crate::serve::StoreFormat;
 use crate::util::log::{self, Level};
 use crate::vecops::SimdSelection;
 use anyhow::{anyhow, bail, Result};
@@ -68,6 +69,9 @@ pub enum Command {
         shards: usize,
         /// IVF clusters to train at export (0 = flat v1 store).
         clusters: usize,
+        /// On-disk layout for clustered exports: v3 (binary `ivf.bin`
+        /// sidecar, the default) or v2 (legacy JSON-embedded index).
+        format: StoreFormat,
     },
     Serve {
         store: String,
@@ -116,6 +120,10 @@ COMMANDS:
   nn (--model MODEL.txt | --store DIR [--quantized] [--nprobe P])
      --word WORD [--k K]
   export-store --model MODEL.txt --out DIR [--shards N] [--clusters C]
+               [--format v3|v2]
+        clustered exports write the IVF index to the binary ivf.bin
+        sidecar by default (format v3: open cost is O(shards+clusters));
+        --format v2 keeps the legacy JSON-embedded index
   serve --store DIR (--queries FILE | --listen ADDR)
         [--k K] [--quantized] [--batch N] [--nprobe P]
         file mode answers a queries file and exits; --listen (or
@@ -184,7 +192,8 @@ pub fn parse(args: &[String]) -> Result<Cli> {
             "--corpus" | "--synthetic" | "--out" | "--model" | "--pairs"
             | "--word" | "--k" | "--spec" | "--store" | "--queries"
             | "--shards" | "--batch" | "--clusters" | "--nprobe"
-            | "--impl" | "--threads" | "--listen" | "--simd" | "--root" => {
+            | "--impl" | "--threads" | "--listen" | "--simd" | "--root"
+            | "--format" => {
                 let key = a.trim_start_matches('-').to_string();
                 opts.push((key, take_value(&mut i)?));
             }
@@ -278,6 +287,13 @@ pub fn parse(args: &[String]) -> Result<Cli> {
                 .ok_or_else(|| anyhow!("export-store needs --out"))?,
             shards: int_flag("shards", 4)?,
             clusters: int_flag("clusters", 0)?,
+            format: match get("format").as_deref() {
+                None | Some("v3") => StoreFormat::V3Sidecar,
+                Some("v2") => StoreFormat::V2Manifest,
+                Some(v) => {
+                    bail!("--format must be v3 or v2, got '{v}'")
+                }
+            },
         },
         "serve" => {
             let queries = get("queries");
@@ -434,7 +450,8 @@ mod tests {
                 model: "m.txt".into(),
                 out: "dir".into(),
                 shards: 8,
-                clusters: 0
+                clusters: 0,
+                format: StoreFormat::V3Sidecar,
             }
         );
         let cli =
@@ -573,6 +590,35 @@ mod tests {
             "nn", "--store", "d", "--word", "w", "--nprobe", "x"
         ])
         .is_err());
+    }
+
+    #[test]
+    fn export_store_format_flag() {
+        // v3 is the default; both layouts parse explicitly
+        for (args, want) in [
+            (vec!["export-store", "--model", "m", "--out", "d"],
+             StoreFormat::V3Sidecar),
+            (vec!["export-store", "--model", "m", "--out", "d",
+                  "--format", "v3"],
+             StoreFormat::V3Sidecar),
+            (vec!["export-store", "--model", "m", "--out", "d",
+                  "--format", "v2"],
+             StoreFormat::V2Manifest),
+        ] {
+            match p(&args).unwrap().command {
+                Command::ExportStore { format, .. } => {
+                    assert_eq!(format, want, "{args:?}")
+                }
+                _ => panic!(),
+            }
+        }
+        // unknown layouts bail instead of silently writing v3
+        let err = p(&[
+            "export-store", "--model", "m", "--out", "d", "--format", "v9",
+        ])
+        .unwrap_err()
+        .to_string();
+        assert!(err.contains("--format must be v3 or v2"), "{err}");
     }
 
     #[test]

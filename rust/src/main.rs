@@ -175,8 +175,8 @@ fn run(cli: Cli) -> Result<()> {
                 }
             }
         }
-        Command::ExportStore { model, out, shards, clusters } => {
-            export_store_cmd(&model, &out, shards, clusters)
+        Command::ExportStore { model, out, shards, clusters, format } => {
+            export_store_cmd(&model, &out, shards, clusters, format)
         }
         Command::Lint { json, root } => lint_cmd(json, root),
         Command::Serve { store, queries, listen, k, quantized, batch, nprobe } => {
@@ -427,8 +427,22 @@ fn nn_store_cmd(
 ) -> Result<()> {
     use fullw2v::serve::{ServeEngine, ServeOptions, ShardedStore};
     let dir = Path::new(store_dir);
+    // ad-hoc lookups pay the store-open cost every invocation, so it
+    // must stay O(shards + clusters): a v3 store reads the binary
+    // `ivf.bin` sidecar instead of parsing an O(vocab) JSON index
+    let open_start = std::time::Instant::now();
     let store =
         Arc::new(ShardedStore::open(dir, store_precision(quantized))?);
+    log::log(
+        log::Level::Debug,
+        format_args!(
+            "store open: {:.2}ms ({} shards, {} clusters, {})",
+            open_start.elapsed().as_secs_f64() * 1e3,
+            store.num_shards(),
+            store.ivf().map(|m| m.num_clusters()).unwrap_or(0),
+            if store.manifest().sidecar { "v3 sidecar" } else { "manifest" },
+        ),
+    );
     let vocab = load_store_vocab(dir, &store)?;
     let id = vocab
         .id(word)
@@ -454,6 +468,7 @@ fn export_store_cmd(
     out: &str,
     shards: usize,
     clusters: usize,
+    format: fullw2v::serve::StoreFormat,
 ) -> Result<()> {
     let (words, model) = EmbeddingModel::load_text(Path::new(model_path))?;
     // text models carry no counts; synthesize strictly-descending counts
@@ -463,12 +478,13 @@ fn export_store_cmd(
         words.into_iter().enumerate().map(|(i, w)| (w, n - i as u64)),
         1,
     );
-    let manifest = fullw2v::serve::export_store_clustered(
+    let manifest = fullw2v::serve::export_store_clustered_as(
         &model,
         &vocab,
         Path::new(out),
         shards,
         clusters,
+        format,
     )?;
     println!(
         "store written to {out}: {} rows x {} dims in {} shards (f32 + int8{})",
@@ -476,8 +492,11 @@ fn export_store_cmd(
         manifest.dim,
         manifest.shards.len(),
         match &manifest.ivf {
-            Some(ivf) =>
-                format!(", {} IVF clusters, format v2", ivf.num_clusters()),
+            Some(ivf) => format!(
+                ", {} IVF clusters, format {}",
+                ivf.num_clusters(),
+                format.name()
+            ),
             None => String::new(),
         }
     );

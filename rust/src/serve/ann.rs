@@ -14,6 +14,9 @@
 //! [`search_shards_batch_ranges`] is the IVF-probed mode: the same tile
 //! machinery restricted to a probe plan's row ranges, so row traffic
 //! goes sublinear in vocabulary size (see [`super::ivf`]).
+//! [`search_shards_batch_groups`] layers per-query probe lists on top:
+//! one ranges-scan per group of co-probing queries, so each query's
+//! heap only advances over its own probe rows.
 //!
 //! Ordering is fully deterministic: ties in score break toward the
 //! smaller word id, in both the heap and the final sort.  For cluster-
@@ -21,6 +24,7 @@
 //! row→id permutation, so tie order is still by word id, not by row
 //! position.
 
+use super::ivf::ProbeGroup;
 use super::store::{RowBlock, Shard};
 use crate::vecops::{self, ROW_TILE};
 use std::cmp::{Ordering, Reverse};
@@ -234,6 +238,53 @@ pub fn search_shards_batch_ranges<'s>(
         }
     }
     rows_scanned
+}
+
+/// Per-query probed scan: each [`ProbeGroup`]'s ranges are scanned once
+/// for just that group's queries ([`search_shards_batch_ranges`] per
+/// group), so a query's heap advances only over rows its **own** probe
+/// list selected — co-probing queries still share their group's row
+/// loads.  Returns `(rows_loaded, rows_advanced)`: physical tile loads
+/// summed across groups, and the per-query heap-advance total (Σ group
+/// rows x group size).  A union scan of the same batch advances
+/// `union_rows x batch_size`; the gap between the two is exactly what
+/// per-query planning saves.
+pub fn search_shards_batch_groups(
+    shards: &[&Shard],
+    groups: &[ProbeGroup],
+    queries: &[BatchQuery<'_>],
+    topks: &mut [TopK],
+) -> (u64, u64) {
+    assert_eq!(queries.len(), topks.len(), "one heap per query");
+    let mut rows_loaded = 0u64;
+    let mut rows_advanced = 0u64;
+    for g in groups {
+        if g.queries.is_empty() || g.ranges.is_empty() {
+            continue;
+        }
+        let sub_queries: Vec<BatchQuery<'_>> =
+            g.queries.iter().map(|&q| queries[q]).collect();
+        // move the group's heaps out, scan, move them back — the borrow
+        // checker can't prove the index subsets disjoint, and an empty
+        // TopK placeholder costs nothing
+        let mut sub_topks: Vec<TopK> = g
+            .queries
+            .iter()
+            .map(|&q| std::mem::replace(&mut topks[q], TopK::new(0)))
+            .collect();
+        let loaded = search_shards_batch_ranges(
+            shards.iter().copied(),
+            &g.ranges,
+            &sub_queries,
+            &mut sub_topks,
+        );
+        rows_loaded += loaded;
+        rows_advanced += loaded * g.queries.len() as u64;
+        for (&q, t) in g.queries.iter().zip(sub_topks) {
+            topks[q] = t;
+        }
+    }
+    (rows_loaded, rows_advanced)
 }
 
 /// One shard's tile loop over local rows `[from, from + len)` (shared

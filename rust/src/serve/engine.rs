@@ -14,6 +14,14 @@
 //! and the rows-scanned count is reported so the reuse factor is
 //! measurable ([`ServeReport::rows_loaded_per_query`]).
 //!
+//! With an IVF index and `nprobe > 0` the dispatcher plans **per-query
+//! probe lists** ([`ivf::plan_probes_per_query`]): queries that picked
+//! the same cluster set share one scan, but a query's heap never
+//! advances over another query's probe rows.  `ServeOptions::
+//! union_probes` restores the old batch-union plan; the two are
+//! compared by [`ServeReport::rows_advanced`] (per-query heap-advance
+//! traffic) vs `rows_scanned` (physical row loads).
+//!
 //! Per-request latency (enqueue to reply) is recorded into a
 //! constant-memory [`Histogram`], and the dispatcher decomposes every
 //! batch's wall time into [`SERVE_STAGES`] (queue-wait / batch-fill /
@@ -24,8 +32,8 @@
 //! whose entries carry the request ids the HTTP router propagates.
 
 use super::ann::{
-    search_shards_batch, search_shards_batch_ranges, BatchQuery, Neighbor,
-    TopK,
+    search_shards_batch, search_shards_batch_groups,
+    search_shards_batch_ranges, BatchQuery, Neighbor, TopK,
 };
 use super::cache::HotCache;
 use super::ivf;
@@ -84,13 +92,18 @@ pub struct ServeOptions {
     pub protected_rows: usize,
     /// Pre-load the protected head at startup.
     pub warm_cache: bool,
-    /// IVF probe width: each batch scans only the union of its queries'
-    /// top-`nprobe` cluster lists (sublinear row traffic, approximate
-    /// results; an aggressive setting can return fewer than `k`
-    /// neighbors when the probed union holds fewer than `k` rows).
-    /// `0` keeps the exact exhaustive scan; a store without an index
-    /// (flat v1 export) also falls back to exhaustive.
+    /// IVF probe width: each query scans only its own top-`nprobe`
+    /// cluster list (sublinear row traffic, approximate results; an
+    /// aggressive setting can return fewer than `k` neighbors when the
+    /// probed clusters hold fewer than `k` rows).  `0` keeps the exact
+    /// exhaustive scan; a store without an index (flat v1 export) also
+    /// falls back to exhaustive.
     pub nprobe: usize,
+    /// Plan probes as one batch-wide cluster union (the pre-v3
+    /// behavior) instead of per-query lists: every query's heap then
+    /// advances over every probed row in the batch.  Kept as the
+    /// baseline arm for the `rows_advanced` comparison in `bench_serve`.
+    pub union_probes: bool,
     /// Requests slower than this (microseconds, enqueue to reply) land
     /// in the bounded slow-query log. 0 logs everything (test/debug).
     pub slow_query_us: u64,
@@ -106,6 +119,7 @@ impl Default for ServeOptions {
             protected_rows: 512,
             warm_cache: true,
             nprobe: 0,
+            union_probes: false,
             slow_query_us: 10_000,
         }
     }
@@ -147,14 +161,20 @@ struct ResolvedQuery {
 
 struct BatchJob {
     queries: Vec<ResolvedQuery>,
-    /// IVF probe plan for this batch (sorted global row ranges);
-    /// `None` scans exhaustively.
+    /// Batch-union IVF probe plan (sorted global row ranges); used when
+    /// [`ServeOptions::union_probes`] is set.  `None` with no `groups`
+    /// scans exhaustively.
     ranges: Option<Vec<(usize, usize)>>,
+    /// Per-query probe plan: one scan per group of queries that picked
+    /// the same cluster set.  Takes precedence over `ranges`.
+    groups: Option<Vec<ivf::ProbeGroup>>,
 }
 
-/// Per-batch worker outcome: partial heaps plus rows scanned (the
-/// memory-traffic accounting behind the reuse-factor report).
-type WorkerResult = Result<(Vec<TopK>, u64), String>;
+/// Per-batch worker outcome: partial heaps, rows loaded from shards,
+/// and rows the queries' heaps advanced over (the per-query compute
+/// traffic — equals `loaded x batch` on union/exhaustive scans, less
+/// under per-query probe lists).
+type WorkerResult = Result<(Vec<TopK>, u64, u64), String>;
 
 struct EngineShared {
     /// Constant-memory latency distribution (replaces the old unbounded
@@ -176,10 +196,19 @@ struct EngineShared {
     /// Store rows scanned across all workers (a batch of B queries
     /// scans each row once, not B times).
     rows_scanned: AtomicU64,
+    /// Sum over queries of rows their top-k heaps advanced over — the
+    /// per-query compute traffic that per-query probe lists shrink.
+    rows_advanced: AtomicU64,
     /// Batches that went through an IVF probe plan (vs exhaustive).
     probed_batches: AtomicU64,
     /// Total clusters in those batches' probe unions.
     clusters_probed: AtomicU64,
+    /// Probe groups dispatched (union plans count one per batch).
+    probe_groups: AtomicU64,
+    /// Cache inserts skipped because the row is mmap-resident (the page
+    /// cache already holds it; pinning a heap copy would only evict
+    /// rows that actually need one).
+    cache_pins_avoided: AtomicU64,
     /// Requests refused by admission control before reaching the queue
     /// (the network front-end's 503 path; see [`crate::net::shed`]).
     shed: AtomicU64,
@@ -203,8 +232,11 @@ impl Default for EngineShared {
             cache_misses: AtomicU64::new(0),
             cache_evictions: AtomicU64::new(0),
             rows_scanned: AtomicU64::new(0),
+            rows_advanced: AtomicU64::new(0),
             probed_batches: AtomicU64::new(0),
             clusters_probed: AtomicU64::new(0),
+            probe_groups: AtomicU64::new(0),
+            cache_pins_avoided: AtomicU64::new(0),
             shed: AtomicU64::new(0),
             window_first_ns: AtomicU64::new(u64::MAX),
             window_last_ns: AtomicU64::new(0),
@@ -237,6 +269,21 @@ pub struct ServeReport {
     /// Rows loaded from shards across the run; divided by `queries`
     /// this is the per-query memory traffic the batched scan amortizes.
     pub rows_scanned: u64,
+    /// Sum over queries of rows their heaps advanced over.  On
+    /// union/exhaustive scans this is `rows_scanned x batch_fill`; with
+    /// per-query probe lists each query only pays its own probe rows,
+    /// so [`Self::rows_advanced_per_query`] drops below the union
+    /// plan's at equal recall.
+    pub rows_advanced: u64,
+    /// Probe groups dispatched (union plans count one per batch; the
+    /// per-query planner emits one per distinct cluster set).
+    pub probe_groups: u64,
+    /// Cache inserts skipped because the row was mmap-resident.
+    pub cache_pins_avoided: u64,
+    /// Shard bytes served zero-copy from mappings vs heap copies (the
+    /// cold-tier split; see `store::ShardedStore`).
+    pub bytes_mapped: u64,
+    pub bytes_heap_loaded: u64,
     pub workers: usize,
     pub shards: usize,
     pub loaded_shards: usize,
@@ -300,6 +347,18 @@ impl ServeReport {
         }
     }
 
+    /// Rows each query's heap advanced over, on average — the
+    /// per-query cost probe-list planning minimizes.  Compare with
+    /// [`Self::rows_loaded_per_query`]: loads are paid once per scan
+    /// group, advances once per (query, row in its probe list).
+    pub fn rows_advanced_per_query(&self) -> f64 {
+        if self.queries == 0 {
+            0.0
+        } else {
+            self.rows_advanced as f64 / self.queries as f64
+        }
+    }
+
     /// Mean clusters in a probed batch's union (0 when exhaustive).
     pub fn mean_clusters_probed(&self) -> f64 {
         if self.probed_batches == 0 {
@@ -321,6 +380,21 @@ impl ServeReport {
             (
                 "rows_loaded_per_query",
                 Json::Num(self.rows_loaded_per_query()),
+            ),
+            ("rows_advanced", Json::Num(self.rows_advanced as f64)),
+            (
+                "rows_advanced_per_query",
+                Json::Num(self.rows_advanced_per_query()),
+            ),
+            ("probe_groups", Json::Num(self.probe_groups as f64)),
+            (
+                "cache_pins_avoided",
+                Json::Num(self.cache_pins_avoided as f64),
+            ),
+            ("bytes_mapped", Json::Num(self.bytes_mapped as f64)),
+            (
+                "bytes_heap_loaded",
+                Json::Num(self.bytes_heap_loaded as f64),
             ),
             ("workers", Json::Num(self.workers as f64)),
             ("shards", Json::Num(self.shards as f64)),
@@ -647,6 +721,17 @@ impl EngineStats {
                 .cache_evictions
                 .load(Ordering::Relaxed),
             rows_scanned: self.shared.rows_scanned.load(Ordering::Relaxed),
+            rows_advanced: self
+                .shared
+                .rows_advanced
+                .load(Ordering::Relaxed),
+            probe_groups: self.shared.probe_groups.load(Ordering::Relaxed),
+            cache_pins_avoided: self
+                .shared
+                .cache_pins_avoided
+                .load(Ordering::Relaxed),
+            bytes_mapped: self.store.bytes_mapped(),
+            bytes_heap_loaded: self.store.bytes_heap_loaded(),
             workers: self.workers,
             shards: self.store.num_shards(),
             loaded_shards: self.store.loaded_shards(),
@@ -782,7 +867,12 @@ fn dispatch_loop(
             // here also bounds every downstream heap allocation against
             // absurd client-supplied k
             let k = k.min(store.vocab_size());
-            let slot = match resolve(kind, &store, &mut cache) {
+            let slot = match resolve(
+                kind,
+                &store,
+                &mut cache,
+                &shared.cache_pins_avoided,
+            ) {
                 Ok((vector, exclude)) => {
                     resolved.push(ResolvedQuery { vector, k, exclude });
                     Ok(resolved.len() - 1)
@@ -796,26 +886,49 @@ fn dispatch_loop(
         let mut results: Vec<Option<QueryResponse>> = Vec::new();
         if !resolved.is_empty() {
             // IVF probe plan for the batch: score every query against
-            // the centroid table once, take the union of their
-            // top-nprobe cluster lists.  Stores without an index (flat
-            // v1 exports) serve exhaustively.
+            // the centroid table once (int8 prescore + exact rescore),
+            // then either group queries by their picked cluster sets
+            // (default) or take the batch-wide union (`union_probes`).
+            // Stores without an index (flat v1 exports) serve
+            // exhaustively.
             let mut ranges = None;
+            let mut groups = None;
             if opts.nprobe > 0 {
                 match store.ivf() {
                     Some(meta) => {
                         let qrefs: Vec<&[f32]> =
                             resolved.iter().map(|q| &q.vector[..]).collect();
-                        let plan = ivf::plan_probes(
-                            meta,
-                            store.dim(),
-                            &qrefs,
-                            opts.nprobe,
-                        );
+                        let clusters_probed;
+                        if opts.union_probes {
+                            let plan = ivf::plan_probes(
+                                meta,
+                                store.dim(),
+                                &qrefs,
+                                opts.nprobe,
+                            );
+                            clusters_probed = plan.clusters_probed;
+                            shared
+                                .probe_groups
+                                .fetch_add(1, Ordering::Relaxed);
+                            ranges = Some(plan.ranges);
+                        } else {
+                            let plan = ivf::plan_probes_per_query(
+                                meta,
+                                store.dim(),
+                                &qrefs,
+                                opts.nprobe,
+                            );
+                            clusters_probed = plan.clusters_probed;
+                            shared.probe_groups.fetch_add(
+                                plan.groups.len() as u64,
+                                Ordering::Relaxed,
+                            );
+                            groups = Some(plan.groups);
+                        }
                         shared.probed_batches.fetch_add(1, Ordering::Relaxed);
                         shared
                             .clusters_probed
-                            .fetch_add(plan.clusters_probed as u64, Ordering::Relaxed);
-                        ranges = Some(plan.ranges);
+                            .fetch_add(clusters_probed as u64, Ordering::Relaxed);
                     }
                     None => {
                         if !warned_no_index {
@@ -830,7 +943,7 @@ fn dispatch_loop(
                 }
             }
             stage[ST_IVF_PROBE] += span.lap_ns();
-            let job = Arc::new(BatchJob { queries: resolved, ranges });
+            let job = Arc::new(BatchJob { queries: resolved, ranges, groups });
             let mut sent = vec![false; links.len()];
             for (link, s) in links.iter().zip(sent.iter_mut()) {
                 *s = link.job_tx.send(job.clone()).is_ok();
@@ -842,6 +955,7 @@ fn dispatch_loop(
             // degraded answer
             let mut failure: Option<String> = None;
             let mut batch_rows = 0u64;
+            let mut batch_advanced = 0u64;
             stage[ST_SHARD_SCAN] += span.lap_ns();
             for (link, s) in links.iter().zip(&sent) {
                 if !*s {
@@ -854,8 +968,9 @@ fn dispatch_loop(
                 let received = link.result_rx.recv();
                 stage[ST_SHARD_SCAN] += span.lap_ns();
                 match received {
-                    Ok(Ok((parts, rows))) => {
+                    Ok(Ok((parts, rows, advanced))) => {
                         batch_rows += rows;
+                        batch_advanced += advanced;
                         for (m, p) in merged.iter_mut().zip(parts) {
                             m.merge(p);
                         }
@@ -882,6 +997,9 @@ fn dispatch_loop(
                     .collect(),
             };
             shared.rows_scanned.fetch_add(batch_rows, Ordering::Relaxed);
+            shared
+                .rows_advanced
+                .fetch_add(batch_advanced, Ordering::Relaxed);
         }
 
         // account the whole batch *before* any reply goes out, so a
@@ -976,11 +1094,18 @@ fn dispatch_loop(
 }
 
 /// Turn a request into a normalized query vector + exclusion id,
-/// serving `ById` lookups through the hot-cache tier.
+/// serving `ById` lookups through the hot-cache tier.  Rows resident in
+/// an mmap-backed shard are *not* pinned into the cache on a miss — the
+/// page cache already holds them, so a heap pin would only evict rows
+/// that need one; each skip is counted (`cache_pins_avoided`).  Cache
+/// warming still pins the protected head unconditionally: those rows
+/// are queried often enough that the Arc-clone hit path beats repeated
+/// shard lookups even over a mapping.
 fn resolve(
     kind: QueryKind,
     store: &ShardedStore,
     cache: &mut HotCache,
+    pins_avoided: &AtomicU64,
 ) -> Result<(Arc<[f32]>, Option<u32>), String> {
     match kind {
         QueryKind::ById(id) => {
@@ -1001,7 +1126,11 @@ fn resolve(
             match store.fetch_row(id, &mut buf) {
                 Ok(Some(())) => {
                     let row: Arc<[f32]> = buf.into();
-                    cache.insert(id, row.clone());
+                    if store.row_is_mapped(id) {
+                        pins_avoided.fetch_add(1, Ordering::Relaxed);
+                    } else {
+                        cache.insert(id, row.clone());
+                    }
                     Ok((row, Some(id)))
                 }
                 // unreachable after the range check, kept as defense
@@ -1036,8 +1165,10 @@ fn resolve(
 
 /// Worker body: scan shards [lo, hi) **once** for the whole batch —
 /// every query's heap advances in the same pass over each shard.  With
-/// a probe plan, only the plan's row ranges (clipped to this worker's
-/// shards) are touched.
+/// a union probe plan, only the plan's row ranges (clipped to this
+/// worker's shards) are touched; with per-query groups, each group's
+/// queries share one pass over that group's ranges and no other
+/// query's heap advances over them.
 fn scan_range(
     store: &ShardedStore,
     lo: usize,
@@ -1054,16 +1185,26 @@ fn scan_range(
     let shards = (lo..hi)
         .map(|si| store.shard(si).map_err(|e| format!("{e:#}")))
         .collect::<Result<Vec<_>, _>>()?;
-    let rows_scanned = match &job.ranges {
-        Some(ranges) => search_shards_batch_ranges(
-            shards.into_iter(),
-            ranges,
-            &queries,
-            &mut parts,
-        ),
-        None => search_shards_batch(shards.into_iter(), &queries, &mut parts),
+    let (rows_scanned, rows_advanced) = match (&job.groups, &job.ranges) {
+        (Some(groups), _) => {
+            search_shards_batch_groups(&shards, groups, &queries, &mut parts)
+        }
+        (None, Some(ranges)) => {
+            let rows = search_shards_batch_ranges(
+                shards.into_iter(),
+                ranges,
+                &queries,
+                &mut parts,
+            );
+            (rows, rows * queries.len() as u64)
+        }
+        (None, None) => {
+            let rows =
+                search_shards_batch(shards.into_iter(), &queries, &mut parts);
+            (rows, rows * queries.len() as u64)
+        }
     };
-    Ok((parts, rows_scanned))
+    Ok((parts, rows_scanned, rows_advanced))
 }
 
 #[cfg(test)]

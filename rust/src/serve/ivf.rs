@@ -53,13 +53,20 @@ pub struct ClusterRange {
     pub rows: usize,
 }
 
-/// The persisted coarse index: centroid table, per-cluster row ranges,
-/// and the row→original-id permutation (`row_ids[new_row] = id`).
+/// The persisted coarse index: centroid table (f32 plus its int8
+/// quantization), per-cluster row ranges, and the row→original-id
+/// permutation (`row_ids[new_row] = id`).
 #[derive(Debug, Clone, PartialEq)]
 pub struct IvfMeta {
     pub clusters: Vec<ClusterRange>,
     /// `clusters.len() * dim` f32, row-major, L2-normalized.
     pub centroids: Vec<f32>,
+    /// Per-centroid symmetric int8 scales (same scheme as shard rows).
+    pub centroid_scales: Vec<f32>,
+    /// `clusters.len() * dim` int8 centroid codes — the probe planner's
+    /// prescore table, 4x smaller than `centroids` so it stays
+    /// cache-resident at large cluster counts.
+    pub centroid_codes: Vec<i8>,
     /// Original word id of each reordered store row.  Shared (`Arc`)
     /// because the store hands the same table to every loaded shard —
     /// one vocab-sized allocation per store, not per shard.
@@ -67,6 +74,35 @@ pub struct IvfMeta {
 }
 
 impl IvfMeta {
+    /// Build a meta from its structural parts, deriving the centroid
+    /// table's int8 quantization — so every construction path (export,
+    /// v2 JSON parse) agrees bit-for-bit on the prescore data; the v3
+    /// sidecar persists and reloads the same derived values.
+    pub fn new(
+        clusters: Vec<ClusterRange>,
+        centroids: Vec<f32>,
+        row_ids: Arc<[u32]>,
+    ) -> IvfMeta {
+        let k = clusters.len();
+        let dim = if k > 0 { centroids.len() / k } else { 0 };
+        let mut centroid_scales = Vec::with_capacity(k);
+        let mut centroid_codes = Vec::with_capacity(centroids.len());
+        if dim > 0 {
+            for row in centroids.chunks_exact(dim) {
+                let (scale, q) = super::store::quantize_row(row);
+                centroid_scales.push(scale);
+                centroid_codes.extend_from_slice(&q);
+            }
+        }
+        IvfMeta {
+            clusters,
+            centroids,
+            centroid_scales,
+            centroid_codes,
+            row_ids,
+        }
+    }
+
     pub fn num_clusters(&self) -> usize {
         self.clusters.len()
     }
@@ -101,6 +137,25 @@ impl IvfMeta {
         }
         if self.centroids.iter().any(|c| !c.is_finite()) {
             bail!("ivf centroid table contains non-finite values");
+        }
+        if self.centroid_scales.len() != k {
+            bail!(
+                "ivf has {} centroid scales, expected {k}",
+                self.centroid_scales.len()
+            );
+        }
+        if self.centroid_codes.len() != want {
+            bail!(
+                "ivf has {} centroid codes, expected {k} x {dim}",
+                self.centroid_codes.len()
+            );
+        }
+        if self
+            .centroid_scales
+            .iter()
+            .any(|s| !s.is_finite() || *s < 0.0)
+        {
+            bail!("ivf centroid scales must be finite and non-negative");
         }
         let mut next = 0usize;
         for (c, r) in self.clusters.iter().enumerate() {
@@ -202,7 +257,9 @@ impl IvfMeta {
                     .ok_or_else(|| anyhow!("ivf row id is not a valid id"))
             })
             .collect::<Result<Vec<_>>>()?;
-        Ok(IvfMeta { clusters, centroids, row_ids: row_ids.into() })
+        // the quantized prescore table is derived, not persisted, in
+        // the v2 JSON format — `new` recomputes it deterministically
+        Ok(IvfMeta::new(clusters, centroids, row_ids.into()))
     }
 }
 
@@ -396,12 +453,15 @@ pub struct ProbePlan {
     pub rows: usize,
 }
 
-/// Score the whole micro-batch against the centroid table (one tile
-/// pass per [`ASSIGN_CHUNK`] queries) and take the **union** of each
-/// query's top-`nprobe` clusters, returned as sorted coalesced row
-/// ranges.  The union — rather than per-query lists — is what keeps the
-/// downstream scan batched: every loaded row still feeds every query's
-/// heap in one pass, exactly like the exhaustive tile scan.
+/// Score the whole micro-batch against the centroid table (two-stage
+/// int8-prescore + f32-rescore selection, see [`select_clusters`]) and
+/// take the **union** of each query's top-`nprobe` clusters, returned
+/// as sorted coalesced row ranges.  The union keeps the downstream scan
+/// maximally batched — every loaded row feeds every query's heap in one
+/// pass — at the cost of inflating per-query row traffic; the default
+/// dispatcher now plans with [`plan_probes_per_query`] instead, and
+/// this union plan remains as the comparison baseline (and for
+/// callers that want one flat range list).
 ///
 /// Empty clusters (k-means cells that ended with no rows) are skipped
 /// during selection so a probe is never wasted on a list with nothing
@@ -417,31 +477,11 @@ pub fn plan_probes(
     nprobe: usize,
 ) -> ProbePlan {
     let k = meta.clusters.len();
-    let nprobe = nprobe.clamp(1, k);
     let mut picked = vec![false; k];
-    let mut scores = vec![0.0f32; ASSIGN_CHUNK * k];
-    let mut start = 0usize;
-    while start < queries.len() {
-        let n = ASSIGN_CHUNK.min(queries.len() - start);
-        let tile = &mut scores[..n * k];
-        vecops::tile_scores_f32(
-            &meta.centroids,
-            dim,
-            &queries[start..start + n],
-            tile,
-        );
-        for row_scores in tile.chunks_exact(k) {
-            let mut top = TopK::new(nprobe);
-            for (c, &s) in row_scores.iter().enumerate() {
-                if meta.clusters[c].rows > 0 {
-                    top.consider(c as u32, s);
-                }
-            }
-            for nb in top.into_sorted() {
-                picked[nb.id as usize] = true;
-            }
+    for ids in select_clusters(meta, dim, queries, nprobe) {
+        for c in ids {
+            picked[c as usize] = true;
         }
-        start += n;
     }
 
     let mut ranges: Vec<(usize, usize)> = Vec::new();
@@ -478,6 +518,171 @@ pub fn plan_probes(
         }
     }
     ProbePlan { ranges, clusters_probed, rows }
+}
+
+/// Per-query top-`nprobe` cluster selection, shared by the union and
+/// per-query planners.  Scoring is two-stage: an **int8 prescore** of
+/// the whole centroid table (the quantized table is 4x smaller than the
+/// f32 one, so it stays cache-resident at large cluster counts) picks a
+/// widened candidate set of `W = min(k, max(2*nprobe, nprobe+4))`
+/// clusters per query, then an **exact f32 rescore** of just those
+/// candidates — walked in ascending cluster-id order, matching the
+/// all-f32 scan's iteration order so tie-breaking is identical — makes
+/// the final `nprobe` picks.  With `W >= k` the result is exactly the
+/// f32 argmax selection by construction; the widened margin keeps the
+/// two identical at larger k too (pinned by test).  Returned cluster
+/// ids are sorted ascending.
+fn select_clusters(
+    meta: &IvfMeta,
+    dim: usize,
+    queries: &[&[f32]],
+    nprobe: usize,
+) -> Vec<Vec<u32>> {
+    let k = meta.clusters.len();
+    let nprobe = nprobe.clamp(1, k);
+    let w = k.min((2 * nprobe).max(nprobe + 4));
+    let mut selected = Vec::with_capacity(queries.len());
+    let mut scores = vec![0.0f32; ASSIGN_CHUNK * k];
+    let mut start = 0usize;
+    while start < queries.len() {
+        let n = ASSIGN_CHUNK.min(queries.len() - start);
+        let tile = &mut scores[..n * k];
+        vecops::tile_scores_i8(
+            &meta.centroid_codes,
+            &meta.centroid_scales,
+            dim,
+            &queries[start..start + n],
+            tile,
+        );
+        for (q, row_scores) in tile.chunks_exact(k).enumerate() {
+            let mut top = TopK::new(w);
+            for (c, &s) in row_scores.iter().enumerate() {
+                // empty cells never earn a probe — a wasted list
+                if meta.clusters[c].rows > 0 {
+                    top.consider(c as u32, s);
+                }
+            }
+            let mut cands: Vec<u32> =
+                top.into_sorted().iter().map(|nb| nb.id).collect();
+            cands.sort_unstable();
+            let query = queries[start + q];
+            let mut exact = TopK::new(nprobe);
+            for c in cands {
+                let cu = c as usize;
+                let cent = &meta.centroids[cu * dim..(cu + 1) * dim];
+                exact.consider(c, vecops::dot(cent, query));
+            }
+            let mut ids: Vec<u32> =
+                exact.into_sorted().iter().map(|nb| nb.id).collect();
+            ids.sort_unstable();
+            selected.push(ids);
+        }
+        start += n;
+    }
+    selected
+}
+
+/// One group of queries sharing an identical probe set: the ranges its
+/// scan pass walks and the batch-local indexes of the queries whose
+/// heaps advance over them.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct ProbeGroup {
+    /// Sorted, coalesced global row ranges `(start_row, rows)`.
+    pub ranges: Vec<(usize, usize)>,
+    /// Batch-local query indexes in this group.
+    pub queries: Vec<usize>,
+    /// Rows the group's ranges cover.
+    pub rows: usize,
+}
+
+/// A batch's per-query probe plan: queries grouped by identical cluster
+/// sets (so co-probing queries share one scan pass and its row loads),
+/// plus the union metrics the old batch-union plan would have had — the
+/// comparison `bench_serve` reports.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct PerQueryPlan {
+    pub groups: Vec<ProbeGroup>,
+    /// Distinct clusters across all groups (the union's cluster count).
+    pub clusters_probed: usize,
+    /// Rows the union of all groups covers — what a union scan loads.
+    pub union_rows: usize,
+    /// Σ over queries of that query's own probe rows — what the grouped
+    /// scan's heaps actually advance over.  Always `<=
+    /// union_rows * queries.len()`, the union scan's advance total.
+    pub advanced_rows: u64,
+}
+
+/// Per-query probe planning: same two-stage selection as
+/// [`plan_probes`], but instead of flattening the batch into one union
+/// range list, queries with identical cluster sets are grouped
+/// (first-appearance order, deterministic) and each group gets its own
+/// coalesced ranges.  Each query's heap then advances only over rows
+/// its own probe list selected — the per-query row traffic the union
+/// plan inflates by every co-batched query's clusters.
+pub fn plan_probes_per_query(
+    meta: &IvfMeta,
+    dim: usize,
+    queries: &[&[f32]],
+    nprobe: usize,
+) -> PerQueryPlan {
+    let k = meta.clusters.len();
+    let selected = select_clusters(meta, dim, queries, nprobe);
+    let mut sigs: Vec<(Vec<u32>, Vec<usize>)> = Vec::new();
+    for (q, ids) in selected.into_iter().enumerate() {
+        match sigs.iter_mut().find(|(sig, _)| *sig == ids) {
+            Some((_, members)) => members.push(q),
+            None => sigs.push((ids, vec![q])),
+        }
+    }
+    let mut picked = vec![false; k];
+    let mut advanced_rows = 0u64;
+    let mut groups = Vec::with_capacity(sigs.len());
+    for (sig, members) in sigs {
+        let mut ranges: Vec<(usize, usize)> = Vec::new();
+        let mut rows = 0usize;
+        for &c in &sig {
+            picked[c as usize] = true;
+            let r = &meta.clusters[c as usize];
+            rows += r.rows;
+            match ranges.last_mut() {
+                // cluster ids are sorted, so adjacency fuses here too
+                Some((s, l)) if *s + *l == r.start_row => *l += r.rows,
+                _ => ranges.push((r.start_row, r.rows)),
+            }
+        }
+        advanced_rows += rows as u64 * members.len() as u64;
+        groups.push(ProbeGroup { ranges, queries: members, rows });
+    }
+    let mut clusters_probed = 0usize;
+    let mut union_rows = 0usize;
+    for (c, &p) in picked.iter().enumerate() {
+        if p {
+            clusters_probed += 1;
+            union_rows += meta.clusters[c].rows;
+        }
+    }
+    if union_rows == 0 && !queries.is_empty() {
+        // same degenerate-index fallback as the union planner: scan
+        // everything once, every query in one group
+        let total = meta
+            .clusters
+            .last()
+            .map(|r| r.start_row + r.rows)
+            .unwrap_or(0);
+        if total > 0 {
+            return PerQueryPlan {
+                groups: vec![ProbeGroup {
+                    ranges: vec![(0, total)],
+                    queries: (0..queries.len()).collect(),
+                    rows: total,
+                }],
+                clusters_probed: k,
+                union_rows: total,
+                advanced_rows: total as u64 * queries.len() as u64,
+            };
+        }
+    }
+    PerQueryPlan { groups, clusters_probed, union_rows, advanced_rows }
 }
 
 #[cfg(test)]
@@ -575,15 +780,15 @@ mod tests {
 
     fn meta_for_tests() -> IvfMeta {
         // 3 clusters over 7 rows in 2-d
-        IvfMeta {
-            clusters: vec![
+        IvfMeta::new(
+            vec![
                 ClusterRange { start_row: 0, rows: 3 },
                 ClusterRange { start_row: 3, rows: 2 },
                 ClusterRange { start_row: 5, rows: 2 },
             ],
-            centroids: vec![1.0, 0.0, 0.0, 1.0, -1.0, 0.0],
-            row_ids: vec![1, 3, 6, 2, 5, 0, 4].into(),
-        }
+            vec![1.0, 0.0, 0.0, 1.0, -1.0, 0.0],
+            vec![1, 3, 6, 2, 5, 0, 4].into(),
+        )
     }
 
     #[test]
@@ -625,6 +830,19 @@ mod tests {
         short.centroids.pop();
         assert!(short.validate(7, 2).is_err());
         assert!(good.validate(8, 2).is_err()); // wrong vocab
+        // the quantized prescore table is validated too
+        let mut badscale = good.clone();
+        badscale.centroid_scales[0] = f32::NAN;
+        assert!(badscale.validate(7, 2).is_err());
+        let mut negscale = good.clone();
+        negscale.centroid_scales[1] = -0.5;
+        assert!(negscale.validate(7, 2).is_err());
+        let mut shortcodes = good.clone();
+        shortcodes.centroid_codes.pop();
+        assert!(shortcodes.validate(7, 2).is_err());
+        let mut shortscales = good;
+        shortscales.centroid_scales.pop();
+        assert!(shortscales.validate(7, 2).is_err());
     }
 
     #[test]
@@ -684,5 +902,109 @@ mod tests {
         // empties, so this still probes c2
         let p = plan_probes(&all_empty, 2, &[q0], 1);
         assert_eq!(p.ranges, vec![(0, 7)]);
+    }
+
+    /// The int8 prescore must not change which clusters get probed: on
+    /// a real trained index the union plan's selection equals a
+    /// pure-f32 reference for every tested nprobe.  (nprobe >= 4 makes
+    /// the candidate width W reach k here, where identity holds by
+    /// construction; nprobe 1 exercises the narrow-W path, where the
+    /// planted separation dwarfs the quantization error.)
+    #[test]
+    fn int8_prescore_keeps_f32_probe_selection() {
+        let (v, dim, blobs) = (160, 16, 8);
+        let rows = planted(v, dim, blobs, 17);
+        let km = train_kmeans(&rows, dim, blobs, 10, 9);
+        let (row_ids, ranges) = build_layout(&km, dim);
+        let meta = IvfMeta::new(ranges, km.centroids.clone(), row_ids.into());
+        meta.validate(v, dim).unwrap();
+        let queries: Vec<&[f32]> =
+            (0..40).map(|i| &rows[i * dim..(i + 1) * dim]).collect();
+        for nprobe in [1usize, 4, 6, 8] {
+            let plan = plan_probes(&meta, dim, &queries, nprobe);
+            // pure-f32 reference selection, same iteration order
+            let mut picked = vec![false; meta.num_clusters()];
+            for q in &queries {
+                let mut top = TopK::new(nprobe.min(meta.num_clusters()));
+                for (c, r) in meta.clusters.iter().enumerate() {
+                    if r.rows > 0 {
+                        let cent = &meta.centroids[c * dim..(c + 1) * dim];
+                        top.consider(c as u32, vecops::dot(cent, q));
+                    }
+                }
+                for nb in top.into_sorted() {
+                    picked[nb.id as usize] = true;
+                }
+            }
+            let mut want_rows = 0usize;
+            let mut want_clusters = 0usize;
+            for (c, &p) in picked.iter().enumerate() {
+                if p {
+                    want_clusters += 1;
+                    want_rows += meta.clusters[c].rows;
+                }
+            }
+            assert_eq!(
+                plan.clusters_probed, want_clusters,
+                "nprobe {nprobe}: prescore changed the probed set"
+            );
+            assert_eq!(plan.rows, want_rows, "nprobe {nprobe}");
+        }
+    }
+
+    #[test]
+    fn per_query_plan_groups_by_cluster_set() {
+        let m = meta_for_tests();
+        let q0: &[f32] = &[1.0, 0.0];
+        let q1: &[f32] = &[0.0, 1.0];
+        let q2: &[f32] = &[-1.0, 0.0];
+        let batch: Vec<&[f32]> = vec![q0, q1, q0, q2];
+        let plan = plan_probes_per_query(&m, 2, &batch, 1);
+        // three distinct cluster sets; the two q0 queries share a group
+        assert_eq!(plan.groups.len(), 3);
+        assert_eq!(plan.groups[0].ranges, vec![(0, 3)]);
+        assert_eq!(plan.groups[0].queries, vec![0, 2]);
+        assert_eq!(plan.groups[1].ranges, vec![(3, 2)]);
+        assert_eq!(plan.groups[1].queries, vec![1]);
+        assert_eq!(plan.groups[2].ranges, vec![(5, 2)]);
+        assert_eq!(plan.groups[2].queries, vec![3]);
+        // union metrics agree with the union planner on the same batch
+        let union = plan_probes(&m, 2, &batch, 1);
+        assert_eq!(plan.union_rows, union.rows);
+        assert_eq!(plan.clusters_probed, union.clusters_probed);
+        // heap advance: 3*2 + 2 + 2 = 10, vs the union scan's 7*4 = 28
+        assert_eq!(plan.advanced_rows, 10);
+        assert!(
+            plan.advanced_rows
+                <= plan.union_rows as u64 * batch.len() as u64
+        );
+        // nprobe >= k: every query selects everything -> one group with
+        // one fused full range
+        let all = plan_probes_per_query(&m, 2, &batch, 10);
+        assert_eq!(all.groups.len(), 1);
+        assert_eq!(all.groups[0].ranges, vec![(0, 7)]);
+        assert_eq!(all.groups[0].queries, vec![0, 1, 2, 3]);
+        assert_eq!(all.advanced_rows, 28);
+    }
+
+    #[test]
+    fn per_query_plan_handles_empty_and_degenerate_batches() {
+        let m = meta_for_tests();
+        let none = plan_probes_per_query(&m, 2, &[], 2);
+        assert!(none.groups.is_empty());
+        assert_eq!((none.union_rows, none.advanced_rows), (0, 0));
+        // degenerate index: every cluster empty except an unselectable
+        // layout -> full-range fallback, all queries in one group
+        let mut all_empty = meta_for_tests();
+        all_empty.clusters = vec![
+            ClusterRange { start_row: 0, rows: 0 },
+            ClusterRange { start_row: 0, rows: 0 },
+            ClusterRange { start_row: 0, rows: 7 },
+        ];
+        let q0: &[f32] = &[1.0, 0.0];
+        let p = plan_probes_per_query(&all_empty, 2, &[q0], 1);
+        assert_eq!(p.groups.len(), 1);
+        assert_eq!(p.groups[0].rows, 7);
+        assert!(p.advanced_rows >= 7);
     }
 }

@@ -1,0 +1,292 @@
+//! Read-only memory-mapped files for the store's cold tier.
+//!
+//! This is the **only** module in `serve/` allowed to contain `unsafe`:
+//! it wraps raw `mmap`/`munmap` (declared directly against the platform
+//! libc that std already links — the crate has no libc dependency)
+//! behind a safe RAII [`Mmap`] owner, and confines the one other unsafe
+//! operation the cold tier needs — reinterpreting a validated byte
+//! range of the mapping as `&[f32]` / `&[i8]` — to [`MappedShard`],
+//! whose constructor checks bounds and alignment up front so the
+//! accessors can't go wrong later.  Every unsafe site carries a
+//! `// SAFETY:` comment and is counted in `analysis/unsafe_budget.txt`;
+//! the unsafe-audit lint reconciles the two.
+//!
+//! Policy, not mechanism, lives in `store.rs`: it decides *whether* to
+//! map (precision, header validation, non-finite payload scan) and
+//! falls back to the heap loader whenever [`map`] declines — on
+//! non-linux targets, on big-endian hosts (the zero-copy cast assumes
+//! the on-disk little-endian layout is the in-memory layout), when
+//! `FULLW2V_NO_MMAP=1` forces the fallback, or when the syscall itself
+//! fails.  The two paths must answer bit-identically; the integration
+//! suite pins that.
+
+use std::path::Path;
+
+/// An owned read-only private mapping of a whole file.  `Drop` unmaps.
+///
+/// Constructed only by [`map`]; on targets where mapping is unsupported
+/// the constructor declines and no value of this type ever exists.
+pub struct Mmap {
+    base: *const u8,
+    len: usize,
+}
+
+// SAFETY: the mapping is PROT_READ and MAP_PRIVATE — immutable shared
+// bytes, never written through after construction — so moving the owner
+// across threads cannot race.
+unsafe impl Send for Mmap {}
+
+// SAFETY: same argument as Send — all access is through `&self` reads
+// of immutable mapped bytes.
+unsafe impl Sync for Mmap {}
+
+impl Mmap {
+    pub fn len(&self) -> usize {
+        self.len
+    }
+}
+
+impl Drop for Mmap {
+    fn drop(&mut self) {
+        #[cfg(all(target_os = "linux", target_endian = "little"))]
+        // SAFETY: `base`/`len` are exactly what mmap returned for this
+        // still-live mapping, and no slice borrowed from it can outlive
+        // `self` (every accessor ties the slice lifetime to `&self`).
+        // The result is ignored: failing to unmap at teardown leaks
+        // address space but breaks no safety invariant.
+        unsafe {
+            let _ = sys::munmap(self.base as *mut sys::CVoid, self.len);
+        }
+    }
+}
+
+/// Mapping is compiled in and not disabled by `FULLW2V_NO_MMAP`.
+pub fn enabled() -> bool {
+    cfg!(all(target_os = "linux", target_endian = "little"))
+        && std::env::var_os("FULLW2V_NO_MMAP").is_none()
+}
+
+/// Map `path` read-only, or decline (`None`) so the caller heap-loads
+/// instead: unsupported target, `FULLW2V_NO_MMAP=1`, empty file, or
+/// any open/stat/mmap failure.  Never errors — the fallback is the
+/// error path.
+pub fn map(path: &Path) -> Option<Mmap> {
+    if !enabled() {
+        return None;
+    }
+    map_impl(path)
+}
+
+#[cfg(all(target_os = "linux", target_endian = "little"))]
+fn map_impl(path: &Path) -> Option<Mmap> {
+    sys::map_file(path)
+}
+
+#[cfg(not(all(target_os = "linux", target_endian = "little")))]
+fn map_impl(path: &Path) -> Option<Mmap> {
+    let _ = path;
+    None
+}
+
+#[cfg(all(target_os = "linux", target_endian = "little"))]
+mod sys {
+    use super::Mmap;
+    use std::fs::File;
+    use std::os::fd::AsRawFd;
+    use std::path::Path;
+
+    /// Stand-in for libc's `void`: only ever used behind a pointer.
+    #[repr(C)]
+    pub struct CVoid {
+        _opaque: [u8; 0],
+    }
+
+    const PROT_READ: i32 = 1;
+    const MAP_PRIVATE: i32 = 2;
+
+    extern "C" {
+        // Both symbols come from the libc std already links; the
+        // signatures match the linux x86_64/aarch64 ABI (off_t = i64).
+        fn mmap(
+            addr: *mut CVoid,
+            len: usize,
+            prot: i32,
+            flags: i32,
+            fd: i32,
+            offset: i64,
+        ) -> *mut CVoid;
+        pub fn munmap(addr: *mut CVoid, len: usize) -> i32;
+    }
+
+    pub fn map_file(path: &Path) -> Option<Mmap> {
+        let file = File::open(path).ok()?;
+        let len = file.metadata().ok()?.len();
+        // zero-length mappings are EINVAL, and usize::try_from guards
+        // the (theoretical) 32-bit truncation
+        let len = usize::try_from(len).ok()?;
+        if len == 0 {
+            return None;
+        }
+        // SAFETY: fd is a live, owned descriptor for the whole call;
+        // addr = null lets the kernel pick placement; len > 0 and the
+        // offset 0 is trivially page-aligned.  A read-only private
+        // mapping of a regular file has no aliasing obligations for us
+        // to uphold.  MAP_FAILED (-1) is checked before the pointer is
+        // kept; the file may close after mmap returns (the mapping
+        // keeps its own reference).
+        let base = unsafe {
+            mmap(
+                std::ptr::null_mut(),
+                len,
+                PROT_READ,
+                MAP_PRIVATE,
+                file.as_raw_fd(),
+                0,
+            )
+        };
+        if base as isize == -1 || base.is_null() {
+            return None;
+        }
+        Some(Mmap { base: base as *const u8, len })
+    }
+}
+
+/// A shard's payload views over one mapping: an f32 region (the exact
+/// payload, or the quantized scales) and an i8 region (the quantized
+/// codes; empty for exact shards).  Construction validates bounds and
+/// alignment once, with checked arithmetic, so the accessors are
+/// infallible afterwards.
+pub struct MappedShard {
+    map: Mmap,
+    f32_off: usize,
+    f32_len: usize,
+    i8_off: usize,
+    i8_len: usize,
+}
+
+impl MappedShard {
+    /// `None` if either region falls outside the mapping or the f32
+    /// region is misaligned (offsets are counted in bytes, lengths in
+    /// elements).
+    pub fn new(
+        map: Mmap,
+        f32_off: usize,
+        f32_len: usize,
+        i8_off: usize,
+        i8_len: usize,
+    ) -> Option<MappedShard> {
+        let f32_bytes = f32_len.checked_mul(4)?;
+        let f32_end = f32_off.checked_add(f32_bytes)?;
+        let i8_end = i8_off.checked_add(i8_len)?;
+        if f32_end > map.len || i8_end > map.len {
+            return None;
+        }
+        // mmap returns page-aligned bases, so this only trips on a
+        // misaligned offset — but check the sum anyway
+        if (map.base as usize).checked_add(f32_off)? % 4 != 0 {
+            return None;
+        }
+        Some(MappedShard { map, f32_off, f32_len, i8_off, i8_len })
+    }
+
+    /// Bytes of file behind this mapping (for traffic accounting).
+    pub fn mapped_bytes(&self) -> usize {
+        self.map.len
+    }
+
+    /// Payload bytes the two typed regions cover.
+    pub fn payload_bytes(&self) -> usize {
+        self.f32_len * 4 + self.i8_len
+    }
+
+    pub fn f32s(&self) -> &[f32] {
+        // SAFETY: `new` checked that `f32_off + 4 * f32_len` lies inside
+        // the mapping and that `base + f32_off` is 4-aligned; the bytes
+        // are immutable (PROT_READ) for the mapping's lifetime, every
+        // bit pattern is a valid f32, and the little-endian on-disk
+        // layout equals the in-memory layout on the little-endian
+        // targets this path is compiled for.  The returned lifetime is
+        // tied to `&self`, which owns the mapping.
+        unsafe {
+            std::slice::from_raw_parts(
+                self.map.base.add(self.f32_off) as *const f32,
+                self.f32_len,
+            )
+        }
+    }
+
+    pub fn i8s(&self) -> &[i8] {
+        // SAFETY: `new` checked `i8_off + i8_len` lies inside the
+        // mapping; i8 has the same size/alignment as the mapped u8
+        // bytes and every bit pattern is valid.  Immutability and
+        // lifetime as in `f32s`.
+        unsafe {
+            std::slice::from_raw_parts(
+                self.map.base.add(self.i8_off) as *const i8,
+                self.i8_len,
+            )
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::io::Write;
+
+    fn tmpfile(name: &str, bytes: &[u8]) -> std::path::PathBuf {
+        let dir = std::env::temp_dir().join("fullw2v_mmapfile_test");
+        std::fs::create_dir_all(&dir).unwrap();
+        let p = dir.join(name);
+        let mut f = std::fs::File::create(&p).unwrap();
+        f.write_all(bytes).unwrap();
+        p
+    }
+
+    #[test]
+    fn maps_round_trip_typed_views() {
+        let vals: Vec<f32> = (0..16).map(|i| i as f32 * 0.5 - 3.0).collect();
+        let mut bytes: Vec<u8> = Vec::new();
+        for v in &vals {
+            bytes.extend_from_slice(&v.to_le_bytes());
+        }
+        bytes.extend_from_slice(&[1u8, 255, 0, 7]);
+        let p = tmpfile("roundtrip.bin", &bytes);
+        let Some(m) = map(&p) else {
+            // non-linux or FULLW2V_NO_MMAP: nothing to verify here
+            return;
+        };
+        assert_eq!(m.len(), bytes.len());
+        let shard = MappedShard::new(m, 0, vals.len(), vals.len() * 4, 4)
+            .expect("in-bounds regions");
+        assert_eq!(shard.f32s(), &vals[..]);
+        assert_eq!(shard.i8s(), &[1i8, -1, 0, 7]);
+        assert_eq!(shard.payload_bytes(), vals.len() * 4 + 4);
+        assert_eq!(shard.mapped_bytes(), bytes.len());
+    }
+
+    #[test]
+    fn rejects_out_of_bounds_and_misaligned_regions() {
+        let p = tmpfile("oob.bin", &[0u8; 64]);
+        let Some(m) = map(&p) else { return };
+        assert!(MappedShard::new(m, 0, 17, 0, 0).is_none(), "f32 overrun");
+        let m = map(&p).unwrap();
+        assert!(MappedShard::new(m, 0, 0, 60, 5).is_none(), "i8 overrun");
+        let m = map(&p).unwrap();
+        assert!(MappedShard::new(m, 2, 4, 0, 0).is_none(), "misaligned f32");
+        let m = map(&p).unwrap();
+        assert!(
+            MappedShard::new(m, usize::MAX, 1, 0, 0).is_none(),
+            "offset overflow"
+        );
+    }
+
+    #[test]
+    fn declines_missing_and_empty_files() {
+        let dir = std::env::temp_dir().join("fullw2v_mmapfile_test");
+        std::fs::create_dir_all(&dir).unwrap();
+        assert!(map(&dir.join("does_not_exist.bin")).is_none());
+        let p = tmpfile("empty.bin", &[]);
+        assert!(map(&p).is_none(), "empty files fall back to the heap");
+    }
+}

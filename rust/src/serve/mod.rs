@@ -16,6 +16,12 @@
 //! |                         | hot working set consulted every batch    |
 //! | HBM: embedding tables   | [`store::ShardedStore`] — lazy shards;   |
 //! |                         | probing touches only `nprobe` clusters   |
+//! | host memory / NVMe      | [`mmapfile`] cold tier — shards are      |
+//! |                         | demand-paged `mmap`s, scanned zero-copy; |
+//! |                         | bytes never transit a heap copy          |
+//! | kernel params / consts  | the binary IVF sidecar (`ivf.bin`) — a   |
+//! |                         | v3 store's metadata loads in O(clusters),|
+//! |                         | never an O(vocab) JSON parse             |
 //! | CUDA streams / batches  | [`engine::ServeEngine`] micro-batches    |
 //!
 //! The scan path is *batched end to end*: the engine hands whole
@@ -27,16 +33,25 @@
 //! paper's context-window reuse — and the realized reuse is reported
 //! as [`engine::ServeReport::rows_loaded_per_query`].
 //!
-//! On top of that, a format-2 store carries an [`ivf`] coarse index:
+//! On top of that, a clustered store carries an [`ivf`] coarse index:
 //! rows are reordered by k-means cluster at export, each batch scores
-//! once against the centroid table, and only the union of its
-//! top-`nprobe` cluster lists is scanned (cluster lists *are*
-//! contiguous row blocks, so the batched tile machinery is unchanged).
-//! That takes row traffic **sublinear in vocabulary size** — the first
-//! time `rows_loaded_per_query` drops below the row count — at a
-//! recall cost measured against the exhaustive scan in `bench_serve`.
-//! `nprobe = 0` (the default) and flat v1 stores keep the exact
-//! exhaustive scan.
+//! once against the centroid table (int8 prescore, exact-f32 rescore
+//! of the shortlist), and queries are grouped into **per-query probe
+//! lists** — co-probing queries share one scan over their cluster
+//! set's contiguous row blocks, and no query's heap advances over
+//! another's probe rows ([`ivf::plan_probes_per_query`]).  That takes
+//! row traffic **sublinear in vocabulary size** — at a recall cost
+//! measured against the exhaustive scan in `bench_serve`, which also
+//! compares per-query vs batch-union planning via
+//! [`engine::ServeReport::rows_advanced`].  `nprobe = 0` (the default)
+//! and flat v1 stores keep the exact exhaustive scan.
+//!
+//! Store formats: v1 = flat shards, v2 = + IVF metadata in
+//! `store.json`, v3 (the `export-store` default) = IVF metadata in the
+//! binary sidecar [`store::SIDECAR_FILE`].  All three open through the
+//! same [`store::ShardedStore::open`] and answer bit-identically at
+//! `nprobe = 0`; mmap and heap-fallback paths (`FULLW2V_NO_MMAP=1`)
+//! are bit-identical too, pinned by the integration suite.
 //!
 //! Typical flow:
 //!
@@ -59,21 +74,27 @@ pub mod ann;
 pub mod cache;
 pub mod engine;
 pub mod ivf;
+pub mod mmapfile;
 pub mod store;
 
 pub use ann::{
     search_rows, search_shard, search_shard_batch, search_shards_batch,
-    search_shards_batch_ranges, BatchQuery, Neighbor, TopK,
+    search_shards_batch_groups, search_shards_batch_ranges, BatchQuery,
+    Neighbor, TopK,
 };
 pub use cache::{CacheStats, HotCache};
 pub use engine::{
     EngineStats, QueryClient, QueryResponse, ServeEngine, ServeOptions,
     ServeReport, SlowQuery, SERVE_STAGES,
 };
-pub use ivf::{ClusterRange, IvfMeta, ProbePlan};
+pub use ivf::{
+    plan_probes_per_query, ClusterRange, IvfMeta, PerQueryPlan, ProbeGroup,
+    ProbePlan,
+};
 pub use store::{
-    export_store, export_store_clustered, Precision, RowBlock, Shard,
-    ShardedStore, StoreManifest,
+    export_store, export_store_clustered, export_store_clustered_as,
+    Precision, RowBlock, Shard, ShardedStore, StoreFormat, StoreManifest,
+    SIDECAR_FILE,
 };
 
 /// Default top-k for neighbor queries — the single source behind the

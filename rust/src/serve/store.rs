@@ -31,8 +31,28 @@
 //! rows are zeroed (with a warning) at export — a single NaN score
 //! would outrank every real neighbor under `total_cmp` — and a shard
 //! whose payload contains non-finite values is rejected at load.
+//!
+//! **Format v3 (binary IVF sidecar):** the default export format.  The
+//! index metadata moves out of `store.json` into `ivf.bin` — magic
+//! `FW2I`, versioned little-endian header, cluster ranges, the f32
+//! centroid table plus its int8 quantization (scales + codes, used by
+//! the probe planner's prefilter), and the row→id permutation — so
+//! opening a store parses an O(shards) JSON manifest and does one
+//! length-validated binary read instead of an O(vocab) JSON walk.
+//! `export_store_clustered_as` still writes v2 on request; v1/v2 stores
+//! open bit-identically to before.
+//!
+//! **Paging (mmap):** on little-endian linux, shard payloads are
+//! memory-mapped ([`super::mmapfile`]) instead of heap-copied, so
+//! "paging in" a cold shard is an address-space reservation and row
+//! traffic is demand-paged by the kernel.  `RowBlock` views come
+//! straight off the mapping.  Heap loading remains the fallback (other
+//! targets, `FULLW2V_NO_MMAP=1`, any syscall failure) and is
+//! bit-identical; [`ShardedStore::bytes_mapped`] /
+//! [`ShardedStore::bytes_heap_loaded`] account which tier paid.
 
 use super::ivf::{self, IvfMeta};
+use super::mmapfile::{self, MappedShard};
 use crate::corpus::vocab::Vocab;
 use crate::model::embeddings::normalize_rows_in_place;
 use crate::model::EmbeddingModel;
@@ -41,13 +61,18 @@ use crate::vecops;
 use anyhow::{anyhow, bail, Context, Result};
 use std::io::{BufReader, BufWriter, Read, Write};
 use std::path::{Path, PathBuf};
+use std::sync::atomic::{AtomicU64, Ordering};
 use std::sync::{Arc, OnceLock};
 
 const MAGIC_F32: &[u8; 4] = b"FW2S";
 const MAGIC_I8: &[u8; 4] = b"FW2Q";
+/// Magic of the format-3 binary IVF sidecar (`ivf.bin`).
+const MAGIC_IVF: &[u8; 4] = b"FW2I";
 const VERSION: u32 = 1;
 /// magic(4) + version(4) + start_row(8) + rows(8) + dim(8).
 const HEADER_BYTES: u64 = 32;
+/// The v3 sidecar file name, next to the shard files.
+pub const SIDECAR_FILE: &str = "ivf.bin";
 /// Seed for the export-time k-means (deterministic stores).
 const KMEANS_SEED: u64 = 0x1Fa5_C0DE;
 
@@ -76,23 +101,31 @@ pub struct ShardMeta {
     pub rows: usize,
 }
 
-/// Parsed `store.json`.  `ivf` is present for format-2 (cluster-
-/// reordered) stores and absent for flat v1 stores.
+/// Parsed `store.json`.  `ivf` is present for cluster-reordered (v2/v3)
+/// stores and absent for flat v1 stores; `sidecar` marks a format-3
+/// store whose index lives in the binary `ivf.bin` next to the shards
+/// (stitched into `ivf` by [`ShardedStore::open`], so a freshly parsed
+/// v3 manifest has `sidecar == true` and `ivf == None`).
 #[derive(Debug, Clone, PartialEq)]
 pub struct StoreManifest {
     pub vocab_size: usize,
     pub dim: usize,
     pub shards: Vec<ShardMeta>,
     pub ivf: Option<IvfMeta>,
+    pub sidecar: bool,
 }
 
 impl StoreManifest {
     pub fn to_json(&self) -> Json {
+        let format = if self.sidecar {
+            3.0
+        } else if self.ivf.is_some() {
+            2.0
+        } else {
+            1.0
+        };
         let mut fields = vec![
-            (
-                "format",
-                Json::Num(if self.ivf.is_some() { 2.0 } else { 1.0 }),
-            ),
+            ("format", Json::Num(format)),
             ("vocab_size", Json::Num(self.vocab_size as f64)),
             ("dim", Json::Num(self.dim as f64)),
             (
@@ -110,8 +143,10 @@ impl StoreManifest {
                 ),
             ),
         ];
-        if let Some(ivf) = &self.ivf {
-            fields.push(("ivf", ivf.to_json()));
+        if !self.sidecar {
+            if let Some(ivf) = &self.ivf {
+                fields.push(("ivf", ivf.to_json()));
+            }
         }
         obj(fields)
     }
@@ -123,7 +158,7 @@ impl StoreManifest {
                 .ok_or_else(|| anyhow!("manifest missing '{key}'"))
         };
         let format = get_usize("format")?;
-        if format != 1 && format != 2 {
+        if !(1..=3).contains(&format) {
             bail!("unsupported store format {format}");
         }
         let vocab_size = get_usize("vocab_size")?;
@@ -142,13 +177,18 @@ impl StoreManifest {
                 Ok(ShardMeta { start_row: f("start_row")?, rows: f("rows")? })
             })
             .collect::<Result<Vec<_>>>()?;
-        let ivf = match (format, j.get("ivf")) {
-            (2, Some(x)) => Some(IvfMeta::from_json(x)?),
+        let (ivf, sidecar) = match (format, j.get("ivf")) {
+            (2, Some(x)) => (Some(IvfMeta::from_json(x)?), false),
             (2, None) => bail!("format 2 store is missing its ivf index"),
+            (3, None) => (None, true),
+            (3, Some(_)) => bail!(
+                "format 3 store keeps its ivf index in the binary sidecar, \
+                 not the manifest"
+            ),
             (_, Some(_)) => bail!("format 1 store must not carry an ivf index"),
-            (_, None) => None,
+            (_, None) => (None, false),
         };
-        let m = StoreManifest { vocab_size, dim, shards, ivf };
+        let m = StoreManifest { vocab_size, dim, shards, ivf, sidecar };
         m.validate()?;
         Ok(m)
     }
@@ -237,6 +277,10 @@ pub fn dequantize_into(scale: f32, q: &[i8], out: &mut [f32]) {
 enum ShardData {
     F32(Vec<f32>),
     I8 { scales: Vec<f32>, codes: Vec<i8> },
+    /// `rows * dim` f32 payload viewed directly over the file mapping.
+    MappedF32(MappedShard),
+    /// Scales (f32 region) + codes (i8 region) over the file mapping.
+    MappedI8(MappedShard),
 }
 
 /// Borrowed view of a contiguous block of shard rows in the shard's
@@ -295,21 +339,33 @@ impl Shard {
         self.ids.as_ref().map(|v| &v[lo..hi])
     }
 
+    /// Whether this shard serves rows straight off a file mapping
+    /// (mmap-resident) rather than a heap copy.
+    pub fn is_mapped(&self) -> bool {
+        matches!(
+            self.data,
+            ShardData::MappedF32(_) | ShardData::MappedI8(_)
+        )
+    }
+
+    /// File bytes behind this shard's mapping; 0 for heap-loaded shards.
+    pub fn mapped_file_bytes(&self) -> usize {
+        match &self.data {
+            ShardData::MappedF32(m) | ShardData::MappedI8(m) => {
+                m.mapped_bytes()
+            }
+            _ => 0,
+        }
+    }
+
     /// Materialize row `local` (shard-relative index) into `out`.
     pub fn row_into(&self, local: usize, out: &mut [f32]) {
         assert!(local < self.rows, "local row {local} >= {}", self.rows);
         assert_eq!(out.len(), self.dim);
-        let base = local * self.dim;
-        match &self.data {
-            ShardData::F32(rows) => {
-                out.copy_from_slice(&rows[base..base + self.dim]);
-            }
-            ShardData::I8 { scales, codes } => {
-                dequantize_into(
-                    scales[local],
-                    &codes[base..base + self.dim],
-                    out,
-                );
+        match self.row_block(local, 1) {
+            RowBlock::F32(row) => out.copy_from_slice(row),
+            RowBlock::I8 { scales, codes } => {
+                dequantize_into(scales[0], codes, out);
             }
         }
     }
@@ -338,6 +394,15 @@ impl Shard {
                 scales: &scales[start..start + n],
                 codes: &codes[base..base + len],
             },
+            // zero-copy views straight off the file mapping: bounds and
+            // alignment were validated when the mapping was constructed
+            ShardData::MappedF32(m) => {
+                RowBlock::F32(&m.f32s()[base..base + len])
+            }
+            ShardData::MappedI8(m) => RowBlock::I8 {
+                scales: &m.f32s()[start..start + n],
+                codes: &m.i8s()[base..base + len],
+            },
         }
     }
 
@@ -349,13 +414,15 @@ impl Shard {
     /// bit.
     pub fn for_each_score<F: FnMut(u32, f32)>(&self, query: &[f32], mut f: F) {
         assert_eq!(query.len(), self.dim);
-        match &self.data {
-            ShardData::F32(rows) => {
+        // the whole-shard block view unifies heap and mmap storage: the
+        // per-precision loops below never care where the bytes live
+        match self.row_block(0, self.rows) {
+            RowBlock::F32(rows) => {
                 for (local, row) in rows.chunks_exact(self.dim).enumerate() {
                     f(self.id_of(local), vecops::dot(row, query));
                 }
             }
-            ShardData::I8 { scales, codes } => {
+            RowBlock::I8 { scales, codes } => {
                 for (local, row) in codes.chunks_exact(self.dim).enumerate() {
                     f(
                         self.id_of(local),
@@ -366,11 +433,14 @@ impl Shard {
         }
     }
 
-    /// In-memory footprint of the row payload in bytes.
+    /// Footprint of the row payload in bytes (heap or mapped file).
     pub fn payload_bytes(&self) -> usize {
         match &self.data {
             ShardData::F32(rows) => rows.len() * 4,
             ShardData::I8 { scales, codes } => scales.len() * 4 + codes.len(),
+            ShardData::MappedF32(m) | ShardData::MappedI8(m) => {
+                m.payload_bytes()
+            }
         }
     }
 }
@@ -404,17 +474,58 @@ pub fn export_store(
     export_store_clustered(model, vocab, dir, shards, 0)
 }
 
+/// Which on-disk layout a clustered export writes.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum StoreFormat {
+    /// Format 2: the IVF index embedded in `store.json` (legacy).
+    V2Manifest,
+    /// Format 3: the IVF index in the binary `ivf.bin` sidecar
+    /// (default — store open stays O(shards + clusters), not O(vocab)).
+    V3Sidecar,
+}
+
+impl StoreFormat {
+    pub fn name(self) -> &'static str {
+        match self {
+            StoreFormat::V2Manifest => "v2",
+            StoreFormat::V3Sidecar => "v3",
+        }
+    }
+}
+
 /// [`export_store`] plus an IVF coarse index: `clusters > 1` trains a
 /// k-means quantizer over the normalized rows, reorders them by cluster
 /// (each cluster one contiguous row block), and persists the centroid
-/// table, cluster ranges, and row→id permutation in a format-2
-/// manifest.  `clusters <= 1` writes a flat v1 store.
+/// table (f32 and its int8 quantization), cluster ranges, and row→id
+/// permutation — in the binary `ivf.bin` sidecar (format 3, the
+/// default).  `clusters <= 1` writes a flat v1 store.
 pub fn export_store_clustered(
     model: &EmbeddingModel,
     vocab: &Vocab,
     dir: &Path,
     shards: usize,
     clusters: usize,
+) -> Result<StoreManifest> {
+    export_store_clustered_as(
+        model,
+        vocab,
+        dir,
+        shards,
+        clusters,
+        StoreFormat::V3Sidecar,
+    )
+}
+
+/// [`export_store_clustered`] with an explicit on-disk format —
+/// `V2Manifest` keeps writing the legacy JSON-embedded index for
+/// downgrade paths and format-matrix tests.
+pub fn export_store_clustered_as(
+    model: &EmbeddingModel,
+    vocab: &Vocab,
+    dir: &Path,
+    shards: usize,
+    clusters: usize,
+    format: StoreFormat,
 ) -> Result<StoreManifest> {
     if model.dim == 0 {
         bail!("model dim must be positive (got a 0-dim model)");
@@ -462,11 +573,9 @@ pub fn export_store_clustered(
                 .copy_from_slice(&normalized[src..src + d]);
         }
         normalized = reordered;
-        Some(IvfMeta {
-            clusters: ranges,
-            centroids: km.centroids,
-            row_ids: row_ids.into(),
-        })
+        // `new` derives the centroid table's int8 quantization so the
+        // probe planner's prefilter data ships with the index
+        Some(IvfMeta::new(ranges, km.centroids, row_ids.into()))
     } else {
         None
     };
@@ -482,15 +591,176 @@ pub fn export_store_clustered(
         metas.push(ShardMeta { start_row: start, rows });
         start = end;
     }
-    let manifest =
-        StoreManifest { vocab_size: v, dim: d, shards: metas, ivf: ivf_meta };
+    let sidecar =
+        ivf_meta.is_some() && format == StoreFormat::V3Sidecar;
+    let manifest = StoreManifest {
+        vocab_size: v,
+        dim: d,
+        shards: metas,
+        ivf: ivf_meta,
+        sidecar,
+    };
     manifest.validate()?;
     vocab
         .save(&dir.join("vocab.tsv"))
         .context("writing vocab.tsv")?;
+    if sidecar {
+        if let Some(ivf) = &manifest.ivf {
+            write_ivf_sidecar(&dir.join(SIDECAR_FILE), ivf, d, v)?;
+        }
+    }
     std::fs::write(dir.join("store.json"), manifest.to_json().to_string())
         .context("writing store.json")?;
     Ok(manifest)
+}
+
+/// Write the format-3 binary IVF sidecar: magic `FW2I`, version, then a
+/// k / dim / vocab header followed by cluster ranges, the f32 centroid
+/// table, its int8 quantization (scales + codes), and the row→id
+/// permutation — all little-endian, mirroring the shard file layout.
+fn write_ivf_sidecar(
+    path: &Path,
+    ivf: &IvfMeta,
+    dim: usize,
+    vocab_size: usize,
+) -> Result<()> {
+    let mut f = BufWriter::new(
+        std::fs::File::create(path)
+            .with_context(|| format!("creating {}", path.display()))?,
+    );
+    f.write_all(MAGIC_IVF)?;
+    f.write_all(&VERSION.to_le_bytes())?;
+    let k = ivf.num_clusters();
+    f.write_all(&(k as u64).to_le_bytes())?;
+    f.write_all(&(dim as u64).to_le_bytes())?;
+    f.write_all(&(vocab_size as u64).to_le_bytes())?;
+    for c in &ivf.clusters {
+        f.write_all(&(c.start_row as u64).to_le_bytes())?;
+        f.write_all(&(c.rows as u64).to_le_bytes())?;
+    }
+    for x in &ivf.centroids {
+        f.write_all(&x.to_le_bytes())?;
+    }
+    for s in &ivf.centroid_scales {
+        f.write_all(&s.to_le_bytes())?;
+    }
+    // i8 -> u8 is a bit-pattern reinterpretation, valid for any value
+    let bytes: Vec<u8> =
+        ivf.centroid_codes.iter().map(|&c| c as u8).collect();
+    f.write_all(&bytes)?;
+    for &id in ivf.row_ids.iter() {
+        f.write_all(&id.to_le_bytes())?;
+    }
+    Ok(())
+}
+
+/// Read and validate a format-3 `ivf.bin` sidecar.  The header must
+/// agree with the manifest's `dim`/`vocab_size` and the on-disk length
+/// must match what the header implies — computed with checked u64 math
+/// (the header is attacker-controllable input) *before* any payload
+/// allocation — so truncation or corruption fails the open fast.
+fn read_ivf_sidecar(
+    path: &Path,
+    dim: usize,
+    vocab_size: usize,
+) -> Result<IvfMeta> {
+    fn next_u64(f: &mut impl Read) -> Result<u64> {
+        let mut b = [0u8; 8];
+        f.read_exact(&mut b)?;
+        Ok(u64::from_le_bytes(b))
+    }
+    let file = std::fs::File::open(path)
+        .with_context(|| format!("opening {}", path.display()))?;
+    let actual_len = file
+        .metadata()
+        .with_context(|| format!("stat {}", path.display()))?
+        .len();
+    let mut f = BufReader::new(file);
+    let mut m = [0u8; 4];
+    f.read_exact(&mut m)
+        .with_context(|| format!("reading {} header", path.display()))?;
+    if &m != MAGIC_IVF {
+        bail!("{}: bad sidecar magic", path.display());
+    }
+    let mut u4 = [0u8; 4];
+    f.read_exact(&mut u4)?;
+    let version = u32::from_le_bytes(u4);
+    if version != VERSION {
+        bail!("{}: unsupported sidecar version {version}", path.display());
+    }
+    let k = next_u64(&mut f)?;
+    let hdim = next_u64(&mut f)?;
+    let hvocab = next_u64(&mut f)?;
+    if hdim != dim as u64 || hvocab != vocab_size as u64 {
+        bail!(
+            "{}: sidecar header (k={k}, dim={hdim}, vocab={hvocab}) \
+             disagrees with manifest (dim={dim}, vocab={vocab_size})",
+            path.display()
+        );
+    }
+    let payload = k
+        .checked_mul(dim as u64)
+        .and_then(|kd| {
+            // ranges 16k + centroids 4kd + scales 4k + codes kd + ids 4V
+            let ranges = k.checked_mul(16)?;
+            let cents = kd.checked_mul(4)?;
+            let scales = k.checked_mul(4)?;
+            let ids = (vocab_size as u64).checked_mul(4)?;
+            ranges
+                .checked_add(cents)?
+                .checked_add(scales)?
+                .checked_add(kd)?
+                .checked_add(ids)
+        })
+        .ok_or_else(|| {
+            anyhow!("{}: sidecar header sizes overflow", path.display())
+        })?;
+    let expected = HEADER_BYTES
+        .checked_add(payload)
+        .ok_or_else(|| anyhow!("{}: sidecar size overflows", path.display()))?;
+    if actual_len != expected {
+        bail!(
+            "{}: {actual_len} bytes on disk, header implies {expected} \
+             (truncated or corrupt sidecar)",
+            path.display()
+        );
+    }
+    let k = k as usize;
+    let mut clusters = Vec::with_capacity(k);
+    for _ in 0..k {
+        let start_row = next_u64(&mut f)? as usize;
+        let rows = next_u64(&mut f)? as usize;
+        clusters.push(ivf::ClusterRange { start_row, rows });
+    }
+    let read_f32s = |f: &mut BufReader<std::fs::File>,
+                     n: usize|
+     -> Result<Vec<f32>> {
+        let mut bytes = vec![0u8; n * 4];
+        f.read_exact(&mut bytes)?;
+        Ok(bytes
+            .chunks_exact(4)
+            .map(|b| f32::from_le_bytes([b[0], b[1], b[2], b[3]]))
+            .collect())
+    };
+    let centroids = read_f32s(&mut f, k * dim)?;
+    let centroid_scales = read_f32s(&mut f, k)?;
+    let mut code_bytes = vec![0u8; k * dim];
+    f.read_exact(&mut code_bytes)?;
+    let centroid_codes: Vec<i8> =
+        code_bytes.iter().map(|&b| b as i8).collect();
+    let mut id_bytes = vec![0u8; vocab_size * 4];
+    f.read_exact(&mut id_bytes)?;
+    let row_ids: Vec<u32> = id_bytes
+        .chunks_exact(4)
+        .map(|b| u32::from_le_bytes([b[0], b[1], b[2], b[3]]))
+        .collect();
+    Ok(IvfMeta {
+        clusters,
+        centroids,
+        centroid_scales,
+        centroid_codes,
+        row_ids: row_ids.into(),
+    })
 }
 
 fn shard_path(dir: &Path, i: usize, precision: Precision) -> PathBuf {
@@ -713,6 +983,86 @@ fn load_shard(
     Ok(Shard { start_row, rows, dim: d, ids, data })
 }
 
+/// Try to memory-map a shard instead of heap-loading it.  `Ok(None)`
+/// means mapping declined (unsupported target, `FULLW2V_NO_MMAP=1`,
+/// syscall failure, size overflow) and the caller should heap-load;
+/// `Err` means actual corruption.  A mapped shard gets the same header
+/// re-validation and non-finite payload scan as [`load_shard`], with
+/// identical error messages, so the two tiers are indistinguishable to
+/// callers — corruption never silently "falls back".
+fn map_shard(
+    path: &Path,
+    precision: Precision,
+    meta: &ShardMeta,
+    dim: usize,
+    ids: Option<Arc<[u32]>>,
+) -> Result<Option<Shard>> {
+    if !mmapfile::enabled() {
+        return Ok(None);
+    }
+    // re-validate the header through the reader (open() already did,
+    // but the file may have changed since) before trusting offsets
+    let mut f = BufReader::new(
+        std::fs::File::open(path)
+            .with_context(|| format!("opening {}", path.display()))?,
+    );
+    let (start_row, rows, d) =
+        read_header(&mut f, shard_magic(precision), path)?;
+    if start_row != meta.start_row || rows != meta.rows || d != dim {
+        bail!(
+            "{}: header ({start_row},{rows},{d}) disagrees with manifest \
+             ({},{},{dim})",
+            path.display(),
+            meta.start_row,
+            meta.rows,
+        );
+    }
+    drop(f);
+    let Some(map) = mmapfile::map(path) else {
+        return Ok(None);
+    };
+    let header = HEADER_BYTES as usize;
+    let Some(cells) = rows.checked_mul(d) else {
+        return Ok(None);
+    };
+    let data = match precision {
+        Precision::Exact => {
+            let Some(m) = MappedShard::new(map, header, cells, 0, 0) else {
+                return Ok(None);
+            };
+            if m.f32s().iter().any(|x| !x.is_finite()) {
+                bail!(
+                    "{}: shard payload contains non-finite values \
+                     (corrupt file or unsanitized export)",
+                    path.display()
+                );
+            }
+            ShardData::MappedF32(m)
+        }
+        Precision::Quantized => {
+            let Some(codes_off) =
+                rows.checked_mul(4).and_then(|b| b.checked_add(header))
+            else {
+                return Ok(None);
+            };
+            let Some(m) =
+                MappedShard::new(map, header, rows, codes_off, cells)
+            else {
+                return Ok(None);
+            };
+            if m.f32s().iter().any(|x| !x.is_finite()) {
+                bail!(
+                    "{}: non-finite quantization scales (corrupt file or \
+                     unsanitized export)",
+                    path.display()
+                );
+            }
+            ShardData::MappedI8(m)
+        }
+    };
+    Ok(Some(Shard { start_row, rows, dim: d, ids, data }))
+}
+
 /// A store opened at a chosen precision, with lazily-loaded shards.
 pub struct ShardedStore {
     dir: PathBuf,
@@ -720,10 +1070,14 @@ pub struct ShardedStore {
     manifest: StoreManifest,
     /// Rows per full shard (every shard except possibly the last).
     rows_per_shard: usize,
-    /// Inverse of the v2 permutation (`row_of[id] = store row`); `None`
-    /// for flat v1 stores where id == row.
+    /// Inverse of the v2/v3 permutation (`row_of[id] = store row`);
+    /// `None` for flat v1 stores where id == row.
     row_of: Option<Vec<u32>>,
     cells: Vec<OnceLock<Shard>>,
+    /// File bytes behind live shard mappings (the mmap cold tier).
+    bytes_mapped: AtomicU64,
+    /// Payload bytes heap-copied by the fallback loader.
+    bytes_heap_loaded: AtomicU64,
 }
 
 impl ShardedStore {
@@ -733,7 +1087,17 @@ impl ShardedStore {
         let text = std::fs::read_to_string(dir.join("store.json"))
             .with_context(|| format!("reading {}/store.json", dir.display()))?;
         let doc = Json::parse(&text).context("parsing store.json")?;
-        let manifest = StoreManifest::from_json(&doc)?;
+        let mut manifest = StoreManifest::from_json(&doc)?;
+        if manifest.sidecar {
+            // format 3: stitch the index in from the binary sidecar —
+            // one length-validated read, no O(vocab) JSON walk
+            manifest.ivf = Some(read_ivf_sidecar(
+                &dir.join(SIDECAR_FILE),
+                manifest.dim,
+                manifest.vocab_size,
+            )?);
+            manifest.validate()?;
+        }
         for (i, meta) in manifest.shards.iter().enumerate() {
             validate_shard_file(
                 &shard_path(dir, i, precision),
@@ -754,6 +1118,8 @@ impl ShardedStore {
             rows_per_shard,
             row_of,
             cells,
+            bytes_mapped: AtomicU64::new(0),
+            bytes_heap_loaded: AtomicU64::new(0),
         })
     }
 
@@ -777,7 +1143,8 @@ impl ShardedStore {
         &self.manifest
     }
 
-    /// The IVF coarse index, when this is a cluster-reordered v2 store.
+    /// The IVF coarse index, when this is a cluster-reordered v2/v3
+    /// store (for v3 it was stitched in from the sidecar at open).
     pub fn ivf(&self) -> Option<&IvfMeta> {
         self.manifest.ivf.as_ref()
     }
@@ -785,6 +1152,26 @@ impl ShardedStore {
     /// How many shards have been paged in so far.
     pub fn loaded_shards(&self) -> usize {
         self.cells.iter().filter(|c| c.get().is_some()).count()
+    }
+
+    /// File bytes behind live shard mappings (0 when the mmap tier is
+    /// unavailable or disabled).
+    pub fn bytes_mapped(&self) -> u64 {
+        self.bytes_mapped.load(Ordering::Relaxed)
+    }
+
+    /// Payload bytes heap-copied by the fallback loader.
+    pub fn bytes_heap_loaded(&self) -> u64 {
+        self.bytes_heap_loaded.load(Ordering::Relaxed)
+    }
+
+    /// Whether `id`'s shard is currently paged in as an mmap view — the
+    /// hot cache uses this to skip pin-copies that would duplicate
+    /// already-resident bytes.
+    pub fn row_is_mapped(&self, id: u32) -> bool {
+        self.locate(id)
+            .and_then(|(idx, _)| self.cells[idx].get())
+            .is_some_and(Shard::is_mapped)
     }
 
     /// (shard index, local row) for an original word id.  For cluster-
@@ -810,16 +1197,35 @@ impl ShardedStore {
         let meta = &self.manifest.shards[i];
         // Arc clone of the manifest's shared permutation — no copy
         let ids = self.manifest.ivf.as_ref().map(|ivf| ivf.row_ids.clone());
-        let loaded = load_shard(
-            &shard_path(&self.dir, i, self.precision),
+        let path = shard_path(&self.dir, i, self.precision);
+        // mmap first (zero-copy cold tier); heap load is the fallback
+        // when mapping declines — never when it finds corruption
+        let loaded = match map_shard(
+            &path,
             self.precision,
             meta,
             self.manifest.dim,
-            ids,
-        )?;
+            ids.clone(),
+        )? {
+            Some(s) => s,
+            None => load_shard(
+                &path,
+                self.precision,
+                meta,
+                self.manifest.dim,
+                ids,
+            )?,
+        };
+        let mapped = loaded.mapped_file_bytes() as u64;
+        let heap =
+            if loaded.is_mapped() { 0 } else { loaded.payload_bytes() as u64 };
         // a concurrent loader may have won the race; either value is
-        // identical so the loser's copy is just dropped
-        let _ = self.cells[i].set(loaded);
+        // identical so the loser's copy is just dropped — and only the
+        // winner's bytes are accounted, so the counters never double
+        if self.cells[i].set(loaded).is_ok() {
+            self.bytes_mapped.fetch_add(mapped, Ordering::Relaxed);
+            self.bytes_heap_loaded.fetch_add(heap, Ordering::Relaxed);
+        }
         self.cells[i]
             .get()
             .ok_or_else(|| anyhow!("internal: shard {i} cell empty after set"))
@@ -968,6 +1374,7 @@ mod tests {
                 ShardMeta { start_row: 5, rows: 5 },
             ],
             ivf: None,
+            sidecar: false,
         };
         assert!(bad.validate().is_err());
         let short = StoreManifest {
@@ -975,6 +1382,7 @@ mod tests {
             dim: 4,
             shards: vec![ShardMeta { start_row: 0, rows: 9 }],
             ivf: None,
+            sidecar: false,
         };
         assert!(short.validate().is_err());
     }
@@ -989,6 +1397,7 @@ mod tests {
                 ShardMeta { start_row: 6, rows: 6 },
             ],
             ivf: None,
+            sidecar: false,
         };
         let j = m.to_json().to_string();
         assert!(j.contains("\"format\":1"), "flat store must stay format 1");
@@ -1002,14 +1411,15 @@ mod tests {
             vocab_size: 4,
             dim: 2,
             shards: vec![ShardMeta { start_row: 0, rows: 4 }],
-            ivf: Some(IvfMeta {
-                clusters: vec![
+            ivf: Some(IvfMeta::new(
+                vec![
                     ivf::ClusterRange { start_row: 0, rows: 3 },
                     ivf::ClusterRange { start_row: 3, rows: 1 },
                 ],
-                centroids: vec![1.0, 0.0, 0.0, 1.0],
-                row_ids: vec![2, 0, 3, 1].into(),
-            }),
+                vec![1.0, 0.0, 0.0, 1.0],
+                vec![2, 0, 3, 1].into(),
+            )),
+            sidecar: false,
         };
         let j = m.to_json().to_string();
         assert!(j.contains("\"format\":2"));
@@ -1044,6 +1454,7 @@ mod tests {
                 ShardMeta { start_row: 9, rows: 1 },
             ],
             ivf: None,
+            sidecar: false,
         };
         m.validate().unwrap();
         // the uniform-layout hint is wrong for every shard here; the
@@ -1302,5 +1713,144 @@ mod tests {
                 }
             }
         }
+    }
+
+    #[test]
+    fn v3_sidecar_export_opens_without_manifest_index() {
+        let v = vocab(14);
+        let m = EmbeddingModel::init(14, 8, 31);
+        let dir = tmpdir("v3");
+        let manifest = export_store_clustered(&m, &v, &dir, 3, 4).unwrap();
+        assert!(manifest.sidecar, "clustered export defaults to v3");
+        // the manifest stays O(shards): no index payload in the JSON
+        let text = std::fs::read_to_string(dir.join("store.json")).unwrap();
+        assert!(text.contains("\"format\":3"), "manifest: {text}");
+        assert!(!text.contains("row_ids"), "permutation leaked into JSON");
+        assert!(!text.contains("centroids"), "centroids leaked into JSON");
+        assert!(dir.join(SIDECAR_FILE).exists());
+        let store = ShardedStore::open(&dir, Precision::Exact).unwrap();
+        let ivf = store.ivf().expect("sidecar stitched in at open");
+        assert_eq!(ivf.row_ids.len(), 14);
+        assert_eq!(ivf.centroid_codes.len(), ivf.num_clusters() * 8);
+        // rows still resolve by original id through the permutation
+        let normalized = m.normalized_rows();
+        let mut out = vec![0.0f32; 8];
+        for id in 0..14u32 {
+            store.fetch_row(id, &mut out).unwrap().unwrap();
+            assert_eq!(
+                &out,
+                &normalized[id as usize * 8..(id as usize + 1) * 8]
+            );
+        }
+    }
+
+    #[test]
+    fn v2_and_v3_exports_carry_identical_indexes() {
+        let v = vocab(11);
+        let m = EmbeddingModel::init(11, 8, 17);
+        let d2 = tmpdir("fmt_v2");
+        let d3 = tmpdir("fmt_v3");
+        let m2 = export_store_clustered_as(
+            &m,
+            &v,
+            &d2,
+            2,
+            3,
+            StoreFormat::V2Manifest,
+        )
+        .unwrap();
+        let m3 = export_store_clustered_as(
+            &m,
+            &v,
+            &d3,
+            2,
+            3,
+            StoreFormat::V3Sidecar,
+        )
+        .unwrap();
+        assert!(!m2.sidecar);
+        assert!(
+            std::fs::read_to_string(d2.join("store.json"))
+                .unwrap()
+                .contains("\"format\":2")
+        );
+        assert_eq!(m2.ivf, m3.ivf, "index must not depend on the format");
+        for precision in [Precision::Exact, Precision::Quantized] {
+            let s2 = ShardedStore::open(&d2, precision).unwrap();
+            let s3 = ShardedStore::open(&d3, precision).unwrap();
+            assert_eq!(s2.ivf(), s3.ivf(), "{}", precision.name());
+            let mut a = vec![0.0f32; 8];
+            let mut b = vec![0.0f32; 8];
+            for id in 0..11u32 {
+                s2.fetch_row(id, &mut a).unwrap().unwrap();
+                s3.fetch_row(id, &mut b).unwrap().unwrap();
+                assert_eq!(a, b, "{} id {id}", precision.name());
+            }
+        }
+    }
+
+    #[test]
+    fn sidecar_corruption_fails_open_fast() {
+        let v = vocab(10);
+        let m = EmbeddingModel::init(10, 4, 13);
+        let dir = tmpdir("sidecar_corrupt");
+        export_store_clustered(&m, &v, &dir, 2, 3).unwrap();
+        let p = dir.join(SIDECAR_FILE);
+        let bytes = std::fs::read(&p).unwrap();
+        // truncated sidecar
+        std::fs::write(&p, &bytes[..bytes.len() - 3]).unwrap();
+        let err = match ShardedStore::open(&dir, Precision::Exact) {
+            Ok(_) => panic!("truncated sidecar must fail open"),
+            Err(e) => format!("{e:#}"),
+        };
+        assert!(err.contains("truncated"), "unexpected error: {err}");
+        // bad magic
+        let mut bad = bytes.clone();
+        bad[0] = b'X';
+        std::fs::write(&p, &bad).unwrap();
+        let err = match ShardedStore::open(&dir, Precision::Exact) {
+            Ok(_) => panic!("bad magic must fail open"),
+            Err(e) => format!("{e:#}"),
+        };
+        assert!(err.contains("bad sidecar magic"), "unexpected: {err}");
+        // header vocab disagrees with the manifest (bytes 24..32)
+        let mut tampered = bytes.clone();
+        tampered[24..32].copy_from_slice(&99u64.to_le_bytes());
+        std::fs::write(&p, &tampered).unwrap();
+        let err = match ShardedStore::open(&dir, Precision::Exact) {
+            Ok(_) => panic!("header mismatch must fail open"),
+            Err(e) => format!("{e:#}"),
+        };
+        assert!(err.contains("disagrees"), "unexpected: {err}");
+        // missing sidecar
+        std::fs::remove_file(&p).unwrap();
+        assert!(ShardedStore::open(&dir, Precision::Exact).is_err());
+        // restored bytes open again
+        std::fs::write(&p, &bytes).unwrap();
+        ShardedStore::open(&dir, Precision::Exact).unwrap();
+    }
+
+    #[test]
+    fn shard_load_accounts_exactly_one_byte_tier() {
+        let v = vocab(9);
+        let m = EmbeddingModel::init(9, 8, 25);
+        let dir = tmpdir("byte_tiers");
+        export_store(&m, &v, &dir, 2).unwrap();
+        let store = ShardedStore::open(&dir, Precision::Exact).unwrap();
+        assert_eq!(store.bytes_mapped() + store.bytes_heap_loaded(), 0);
+        let shard = store.shard(0).unwrap();
+        if mmapfile::enabled() {
+            assert!(shard.is_mapped(), "linux/LE shards should map");
+            assert!(store.bytes_mapped() > 0);
+            assert_eq!(store.bytes_heap_loaded(), 0);
+            assert!(store.row_is_mapped(0));
+        } else {
+            assert!(!shard.is_mapped());
+            assert!(store.bytes_heap_loaded() > 0);
+            assert_eq!(store.bytes_mapped(), 0);
+            assert!(!store.row_is_mapped(0));
+        }
+        // untouched shard: nothing accounted, nothing mapped
+        assert!(!store.row_is_mapped(8));
     }
 }

@@ -9,12 +9,14 @@
 use fullw2v::corpus::vocab::Vocab;
 use fullw2v::model::EmbeddingModel;
 use fullw2v::serve::{
-    export_store, export_store_clustered, search_rows, search_shard,
-    search_shard_batch, search_shards_batch, search_shards_batch_ranges,
-    BatchQuery, Precision, ServeEngine, ServeOptions, ShardedStore, TopK,
+    export_store, export_store_clustered, export_store_clustered_as,
+    search_rows, search_shard, search_shard_batch, search_shards_batch,
+    search_shards_batch_ranges, BatchQuery, Neighbor, Precision,
+    ServeEngine, ServeOptions, ShardedStore, StoreFormat, TopK,
+    SIDECAR_FILE,
 };
 use fullw2v::util::rng::Pcg32;
-use std::path::PathBuf;
+use std::path::{Path, PathBuf};
 use std::sync::Arc;
 
 const V: usize = 101; // odd on purpose: uneven last shard
@@ -530,6 +532,224 @@ fn corrupted_shard_fails_queries_instead_of_poisoning_them() {
     assert!(err.contains("non-finite"), "unexpected error: {err}");
     drop(client);
     engine.shutdown();
+}
+
+/// The store-format matrix: v2 (JSON-embedded index) and v3 (binary
+/// sidecar) must answer bit-identically at every precision and probe
+/// setting, and both must match the flat v1 export when not probing —
+/// the on-disk layout is invisible to query results.
+#[test]
+fn store_format_matrix_answers_bit_identical() {
+    let model = planted_model(8);
+    let dir_v1 = export("fmtv1", &model, 4);
+    let dir_v2 = test_dir("fmtv2");
+    export_store_clustered_as(
+        &model,
+        &vocab(),
+        &dir_v2,
+        4,
+        8,
+        StoreFormat::V2Manifest,
+    )
+    .unwrap();
+    let dir_v3 = test_dir("fmtv3");
+    export_store_clustered_as(
+        &model,
+        &vocab(),
+        &dir_v3,
+        4,
+        8,
+        StoreFormat::V3Sidecar,
+    )
+    .unwrap();
+    assert!(dir_v3.join(SIDECAR_FILE).exists(), "v3 writes the sidecar");
+    assert!(!dir_v2.join(SIDECAR_FILE).exists(), "v2 must not");
+    let answers =
+        |dir: &Path, precision: Precision, nprobe: usize| -> Vec<Vec<Neighbor>> {
+            let store =
+                Arc::new(ShardedStore::open(dir, precision).unwrap());
+            let engine = ServeEngine::start(
+                store,
+                ServeOptions { nprobe, ..ServeOptions::default() },
+            );
+            let client = engine.client();
+            let out: Vec<Vec<Neighbor>> = (0..V as u32)
+                .step_by(4)
+                .map(|id| client.query_id(id, 10).unwrap())
+                .collect();
+            drop(client);
+            engine.shutdown();
+            out
+        };
+    for precision in [Precision::Exact, Precision::Quantized] {
+        for nprobe in [0usize, 3] {
+            let a2 = answers(&dir_v2, precision, nprobe);
+            let a3 = answers(&dir_v3, precision, nprobe);
+            assert_eq!(
+                a2,
+                a3,
+                "{} nprobe {nprobe}: v2 and v3 disagree",
+                precision.name()
+            );
+            if nprobe == 0 {
+                let a1 = answers(&dir_v1, precision, nprobe);
+                assert_eq!(
+                    a1,
+                    a3,
+                    "{}: flat v1 and v3 disagree at nprobe 0",
+                    precision.name()
+                );
+            }
+        }
+    }
+}
+
+/// A truncated sidecar is an open-time error with a pointed message —
+/// never a silently index-less store.
+#[test]
+fn truncated_sidecar_fails_store_open_fast() {
+    let model = clustered_model();
+    let dir = export_clustered("sidecartrunc", &model, 2, CLUSTERS);
+    let p = dir.join(SIDECAR_FILE);
+    let bytes = std::fs::read(&p).unwrap();
+    std::fs::write(&p, &bytes[..bytes.len() - 7]).unwrap();
+    let err = ShardedStore::open(&dir, Precision::Exact).unwrap_err();
+    assert!(
+        format!("{err:#}").contains("truncated or corrupt sidecar"),
+        "unexpected error: {err:#}"
+    );
+    std::fs::write(&p, &bytes).unwrap();
+    ShardedStore::open(&dir, Precision::Exact).unwrap();
+}
+
+/// `FULLW2V_NO_MMAP=1` forces the heap loader; its answers must be
+/// bit-for-bit those of the mmap path, and the byte-tier counters must
+/// attribute every shard to exactly one tier.  This is the single test
+/// that mutates the env var (the flag is read per store-open, and env
+/// mutation is process-global).
+#[test]
+fn heap_fallback_matches_mmap_bit_for_bit() {
+    let model = planted_model(8);
+    let dir = export_clustered("nommap", &model, 3, 8);
+    let run = |dir: &Path| -> (Vec<Vec<Neighbor>>, u64, u64) {
+        let store =
+            Arc::new(ShardedStore::open(dir, Precision::Exact).unwrap());
+        let engine = ServeEngine::start(
+            store,
+            ServeOptions {
+                nprobe: 2,
+                cache_capacity: 0,
+                warm_cache: false,
+                ..ServeOptions::default()
+            },
+        );
+        let client = engine.client();
+        let answers: Vec<Vec<Neighbor>> = (0..V as u32)
+            .step_by(3)
+            .map(|id| client.query_id(id, 10).unwrap())
+            .collect();
+        drop(client);
+        let report = engine.shutdown();
+        (answers, report.bytes_mapped, report.bytes_heap_loaded)
+    };
+    std::env::set_var("FULLW2V_NO_MMAP", "1");
+    let (heap_answers, heap_mapped, heap_loaded) = run(&dir);
+    std::env::remove_var("FULLW2V_NO_MMAP");
+    assert_eq!(heap_mapped, 0, "NO_MMAP run must not map anything");
+    assert!(heap_loaded > 0, "NO_MMAP run must heap-load shards");
+    let (map_answers, map_mapped, map_loaded) = run(&dir);
+    assert_eq!(
+        heap_answers, map_answers,
+        "mmap and heap-fallback paths must answer bit-identically"
+    );
+    #[cfg(all(target_os = "linux", target_endian = "little"))]
+    {
+        assert!(map_mapped > 0, "linux/LE serves shards from mappings");
+        assert_eq!(map_loaded, 0, "mapped shards must not heap-load too");
+    }
+    let _ = (map_mapped, map_loaded);
+}
+
+/// Per-query probe lists: a query's heap advances over at most what the
+/// batch-union plan would have advanced it over (its own clusters are a
+/// subset of any union containing them), at the same recall target the
+/// union plan meets.
+#[test]
+fn per_query_probe_lists_never_advance_more_than_union() {
+    let model = planted_model(8);
+    let dir = export_clustered("perqueryadv", &model, 4, 8);
+    let run = |union_probes: bool| {
+        let store =
+            Arc::new(ShardedStore::open(&dir, Precision::Exact).unwrap());
+        let engine = ServeEngine::start(
+            store,
+            ServeOptions {
+                nprobe: 2,
+                union_probes,
+                cache_capacity: 0,
+                warm_cache: false,
+                ..ServeOptions::default()
+            },
+        );
+        let client = engine.client();
+        // pipelined burst over all blobs so micro-batches mix cluster
+        // sets — the case where per-query lists beat the union
+        let pending: Vec<_> = (0..96u32)
+            .map(|i| client.submit_id(i % V as u32, 10))
+            .collect();
+        let answers: Vec<Vec<u32>> = pending
+            .into_iter()
+            .map(|rx| {
+                rx.recv()
+                    .unwrap()
+                    .unwrap()
+                    .iter()
+                    .map(|n| n.id)
+                    .collect()
+            })
+            .collect();
+        drop(client);
+        (answers, engine.shutdown())
+    };
+    let (_union_answers, union_rep) = run(true);
+    let (pq_answers, pq_rep) = run(false);
+    assert_eq!(pq_rep.queries, 96);
+    assert!(pq_rep.rows_advanced > 0);
+    assert!(
+        pq_rep.rows_advanced <= union_rep.rows_advanced,
+        "per-query advanced {} must never exceed union {}",
+        pq_rep.rows_advanced,
+        union_rep.rows_advanced
+    );
+    // the union plan is a single group per batch; per-query planning
+    // emits one group per distinct cluster set
+    assert_eq!(union_rep.probe_groups, union_rep.probed_batches);
+    assert!(pq_rep.probe_groups >= pq_rep.probed_batches);
+    let j = pq_rep.to_json().to_string();
+    assert!(j.contains("\"rows_advanced\""));
+    assert!(j.contains("\"probe_groups\""));
+    assert!(j.contains("\"bytes_mapped\""));
+
+    // recall@10 of the per-query plan against the exhaustive scan
+    let store =
+        Arc::new(ShardedStore::open(&dir, Precision::Exact).unwrap());
+    let exhaustive = ServeEngine::start(store, ServeOptions::default());
+    let ce = exhaustive.client();
+    let mut hits = 0usize;
+    let mut total = 0usize;
+    for (i, got) in pq_answers.iter().enumerate() {
+        let id = (i as u32) % V as u32;
+        let want: Vec<u32> =
+            ce.query_id(id, 10).unwrap().iter().map(|n| n.id).collect();
+        total += want.len();
+        hits += want.iter().filter(|&&w| got.contains(&w)).count();
+    }
+    drop(ce);
+    exhaustive.shutdown();
+    assert!(
+        hits as f64 / total as f64 >= 0.95,
+        "per-query probe recall@10 {hits}/{total} below 0.95"
+    );
 }
 
 #[test]
