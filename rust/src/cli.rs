@@ -10,6 +10,7 @@
 //!   gpusim       print the analytical Tables 4/5/6 + projections
 //!   manifest     list AOT executables
 //!   lint         run the repo-invariant lints (analysis/) over sources
+//!   benchdiff    gate one BENCH_*.json artifact against a baseline
 //!
 //! Global flags: -c/--config FILE, -s/--set section.key=value (repeat),
 //! -v/--verbose, -q/--quiet, --simd auto|scalar|avx2|avx512|neon.
@@ -101,6 +102,14 @@ pub enum Command {
         /// Repo root to lint (default: the compiled-in manifest dir).
         root: Option<String>,
     },
+    /// Compare two bench artifacts under the pinned perf rules
+    /// (obs/artifact.rs) and exit non-zero on a regression.
+    BenchDiff {
+        old: String,
+        new: String,
+        /// Extra `PATTERN=PCT` gates (repeatable `--fail-on`).
+        fail_on: Vec<String>,
+    },
     Help,
     Version,
 }
@@ -142,6 +151,13 @@ COMMANDS:
         simd-contract, panic-path, ordering-annotation) over the repo's
         sources; exits 1 if anything fires.  --root overrides the repo
         checkout to lint (default: this build's source tree)
+  benchdiff OLD.json NEW.json [--fail-on PATTERN=PCT]...
+        compare two BENCH_*.json artifacts (schema 1) and exit 1 if a
+        pinned perf series regressed past tolerance: rows loaded /
+        advanced and latency quantiles may not grow, reuse ratios and
+        the roofline fraction may not shrink, stage shares may not
+        drift.  --fail-on adds a gate on |relative change| for every
+        dotted series path matching PATTERN (subset regex: ^ $ . *)
   help | version
 
 FLAGS:
@@ -193,7 +209,7 @@ pub fn parse(args: &[String]) -> Result<Cli> {
             | "--word" | "--k" | "--spec" | "--store" | "--queries"
             | "--shards" | "--batch" | "--clusters" | "--nprobe"
             | "--impl" | "--threads" | "--listen" | "--simd" | "--root"
-            | "--format" => {
+            | "--format" | "--fail-on" => {
                 let key = a.trim_start_matches('-').to_string();
                 opts.push((key, take_value(&mut i)?));
             }
@@ -219,6 +235,13 @@ pub fn parse(args: &[String]) -> Result<Cli> {
 
     let get = |key: &str| -> Option<String> {
         opts.iter().find(|(k, _)| k == key).map(|(_, v)| v.clone())
+    };
+    // repeatable flags keep every occurrence, in order
+    let get_all = |key: &str| -> Vec<String> {
+        opts.iter()
+            .filter(|(k, _)| k == key)
+            .map(|(_, v)| v.clone())
+            .collect()
     };
     let cmd = positional.first().map(String::as_str).unwrap_or("help");
     // numeric flags bail on garbage instead of silently using defaults
@@ -340,6 +363,23 @@ pub fn parse(args: &[String]) -> Result<Cli> {
             json: get("json").is_some(),
             root: get("root"),
         },
+        "benchdiff" => {
+            let mut paths = positional.iter().skip(1);
+            let old = paths.next().cloned().ok_or_else(|| {
+                anyhow!("benchdiff needs OLD.json and NEW.json")
+            })?;
+            let new = paths.next().cloned().ok_or_else(|| {
+                anyhow!("benchdiff needs OLD.json and NEW.json")
+            })?;
+            if paths.next().is_some() {
+                bail!("benchdiff takes exactly two artifact paths");
+            }
+            Command::BenchDiff {
+                old,
+                new,
+                fail_on: get_all("fail-on"),
+            }
+        }
         "version" | "--version" => Command::Version,
         "help" | "--help" => Command::Help,
         other => bail!("unknown command '{other}'\n{USAGE}"),
@@ -709,6 +749,34 @@ mod tests {
                 root: Some("/tmp/checkout".into())
             }
         );
+    }
+
+    #[test]
+    fn benchdiff_parses_paths_and_repeatable_fail_on() {
+        let cli = p(&["benchdiff", "old.json", "new.json"]).unwrap();
+        assert_eq!(
+            cli.command,
+            Command::BenchDiff {
+                old: "old.json".into(),
+                new: "new.json".into(),
+                fail_on: vec![],
+            }
+        );
+        // --fail-on repeats and keeps order
+        let cli = p(&[
+            "benchdiff", "a.json", "b.json", "--fail-on", "p50_us$=5",
+            "--fail-on", "rows.*=2",
+        ])
+        .unwrap();
+        match cli.command {
+            Command::BenchDiff { fail_on, .. } => {
+                assert_eq!(fail_on, vec!["p50_us$=5", "rows.*=2"]);
+            }
+            _ => panic!(),
+        }
+        // arity is enforced: one path or three is a parse error
+        assert!(p(&["benchdiff", "only.json"]).is_err());
+        assert!(p(&["benchdiff", "a.json", "b.json", "c.json"]).is_err());
     }
 
     #[test]

@@ -179,6 +179,9 @@ fn run(cli: Cli) -> Result<()> {
             export_store_cmd(&model, &out, shards, clusters, format)
         }
         Command::Lint { json, root } => lint_cmd(json, root),
+        Command::BenchDiff { old, new, fail_on } => {
+            benchdiff_cmd(&old, &new, &fail_on)
+        }
         Command::Serve { store, queries, listen, k, quantized, batch, nprobe } => {
             match (queries, listen) {
                 (Some(queries), _) => {
@@ -215,6 +218,23 @@ fn lint_cmd(json: bool, root: Option<String>) -> Result<()> {
             "{} lint finding(s) — see above",
             report.findings.len()
         ));
+    }
+    Ok(())
+}
+
+/// `fullw2v benchdiff OLD.json NEW.json [--fail-on PATTERN=PCT]...`:
+/// gate a bench artifact against a baseline; non-zero exit past
+/// tolerance on any pinned perf series (the CI perf-trajectory gate).
+fn benchdiff_cmd(old: &str, new: &str, fail_on: &[String]) -> Result<()> {
+    let (report, regressed) = fullw2v::obs::artifact::benchdiff(
+        Path::new(old),
+        Path::new(new),
+        fail_on,
+    )
+    .map_err(anyhow::Error::msg)?;
+    print!("{report}");
+    if regressed {
+        return Err(anyhow!("bench artifact regressed — see above"));
     }
     Ok(())
 }
@@ -599,8 +619,8 @@ fn serve_net_cmd(
     )?;
     println!("fullw2v serving on http://{}", server.local_addr());
     println!(
-        "routes: POST /v1/nn /v1/embed | GET /healthz /stats /metrics | \
-         POST /admin/shutdown (drain)"
+        "routes: POST /v1/nn /v1/embed | GET /healthz /stats /metrics \
+         /debug/traces | POST /admin/shutdown (drain)"
     );
     // smoke scripts grep the port from redirected stdout: flush past
     // the pipe's block buffering before parking in join()

@@ -251,6 +251,7 @@ fn route_labels(route: &'static str) -> obs::registry::LabelSet {
         "healthz" => &[("route", "healthz")],
         "stats" => &[("route", "stats")],
         "metrics" => &[("route", "metrics")],
+        "traces" => &[("route", "traces")],
         "shutdown" => &[("route", "shutdown")],
         _ => &[("route", "other")],
     }
@@ -323,8 +324,12 @@ fn handle_conn(mut stream: TcpStream, state: &Arc<AppState>, opts: &NetOptions) 
         let mut pendings = Vec::with_capacity(window.len());
         for req in &window {
             let rid = NEXT_REQ_ID.fetch_add(1, Ordering::Relaxed);
-            starts.push((rid, Instant::now()));
-            pendings.push(router::begin(state, req, rid));
+            // trace id: adopt the caller's `x-fullw2v-trace` header so
+            // an upstream tier can nest this node's spans under its
+            // own; otherwise the fresh request id doubles as one
+            let tid = req.trace_id().unwrap_or(rid);
+            starts.push((rid, tid, Instant::now()));
+            pendings.push(router::begin(state, req, tid));
         }
         drop(window);
         // read the stop flag *after* begin: a window containing
@@ -338,10 +343,13 @@ fn handle_conn(mut stream: TcpStream, state: &Arc<AppState>, opts: &NetOptions) 
 
         // phase 2: answer in order
         let mut close_after = closing;
-        for ((pending, keep_pref), (rid, started)) in
+        for ((pending, keep_pref), (rid, tid, started)) in
             pendings.into_iter().zip(keep_pref).zip(starts)
         {
             let (route, resp) = router::finish(state, pending);
+            // close the propagation loop: the effective trace id rides
+            // back on every response, matching GET /debug/traces
+            let resp = resp.with_trace(tid);
             let took = started.elapsed();
             state.routes.record(route, took);
             obs::registry::counter_with(

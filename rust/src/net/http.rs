@@ -32,6 +32,17 @@ pub const MAX_HEADERS: usize = 64;
 /// Default cap on a declared request body.
 pub const MAX_BODY_BYTES: usize = 1 << 20;
 
+/// Trace-propagation header: a decimal `u64` trace id.  A client (or an
+/// upstream router tier) sends it on a request to adopt its own id for
+/// the request's span tree; the server echoes the effective id — sent or
+/// freshly minted — on the response, so the caller can correlate against
+/// `GET /debug/traces` either way.
+pub const TRACE_HEADER: &str = "x-fullw2v-trace";
+
+/// Prometheus text exposition format 0.0.4 — what `GET /metrics` must
+/// declare for scrapers that content-negotiate.
+pub const PROMETHEUS_CONTENT_TYPE: &str = "text/plain; version=0.0.4";
+
 /// Hard caps enforced while parsing; crossing one is a protocol error
 /// (431 for line/header caps, 413 for the body cap), not a truncation.
 #[derive(Debug, Clone)]
@@ -93,6 +104,16 @@ impl Request {
             .iter()
             .find(|(n, _)| *n == name)
             .map(|(_, v)| v.as_str())
+    }
+
+    /// Parsed [`TRACE_HEADER`] value: a nonzero decimal `u64` trace id
+    /// minted by the caller.  Anything malformed (and the reserved id
+    /// `0`, which reads as "no id" everywhere) is ignored rather than
+    /// rejected — tracing must never fail a request.
+    pub fn trace_id(&self) -> Option<u64> {
+        self.header(TRACE_HEADER)
+            .and_then(|v| v.trim().parse::<u64>().ok())
+            .filter(|id| *id != 0)
     }
 
     /// Connection persistence: explicit `Connection` header wins,
@@ -391,6 +412,13 @@ impl Response {
         self
     }
 
+    /// Re-emit the effective trace id on the wire ([`TRACE_HEADER`]),
+    /// closing the propagation loop: request header in, response header
+    /// out.
+    pub fn with_trace(self, id: u64) -> Response {
+        self.with_header(TRACE_HEADER, &id.to_string())
+    }
+
     pub fn reason(status: u16) -> &'static str {
         match status {
             200 => "OK",
@@ -615,6 +643,39 @@ mod tests {
         assert_eq!(r.body, b"{\"id\":7}");
         assert_eq!(r.header("x-a"), Some("b"));
         assert_eq!(p.buffered(), 0, "everything consumed");
+    }
+
+    /// Trace propagation parsing: well-formed decimal ids are adopted,
+    /// anything else (and the reserved 0) is ignored, and the response
+    /// side re-emits the id as a header.
+    #[test]
+    fn trace_header_parses_and_reemits() {
+        let r = &parse_all(
+            b"GET / HTTP/1.1\r\nX-FullW2V-Trace: 4242\r\n\r\n",
+        )
+        .unwrap()[0];
+        assert_eq!(r.trace_id(), Some(4242), "case-insensitive lookup");
+        let r = &parse_all(
+            b"GET / HTTP/1.1\r\nx-fullw2v-trace:  987654321  \r\n\r\n",
+        )
+        .unwrap()[0];
+        assert_eq!(r.trace_id(), Some(987654321), "whitespace trimmed");
+        for bad in ["0", "-3", "1.5", "abc", "", "18446744073709551616"] {
+            let wire = format!(
+                "GET / HTTP/1.1\r\n{TRACE_HEADER}: {bad}\r\n\r\n"
+            );
+            let r = &parse_all(wire.as_bytes()).unwrap()[0];
+            assert_eq!(r.trace_id(), None, "malformed value {bad:?}");
+        }
+        let r = &parse_all(b"GET / HTTP/1.1\r\n\r\n").unwrap()[0];
+        assert_eq!(r.trace_id(), None, "absent header");
+
+        let resp = Response::text(200, "ok").with_trace(u64::MAX);
+        let text = String::from_utf8(resp.to_bytes(true)).unwrap();
+        assert!(
+            text.contains("x-fullw2v-trace: 18446744073709551615\r\n"),
+            "response echoes the id: {text}"
+        );
     }
 
     #[test]

@@ -20,7 +20,8 @@
 //! * [`conn`] — nonblocking acceptor + fixed worker pool, keep-alive
 //!   with read/write timeouts, graceful drain ([`NetServer`]).
 //! * [`router`] — `POST /v1/nn`, `POST /v1/embed`, `GET /healthz`,
-//!   `GET /stats`, `GET /metrics`, `POST /admin/shutdown`.
+//!   `GET /stats`, `GET /metrics`, `GET /debug/traces`,
+//!   `POST /admin/shutdown`.
 //! * [`shed`] — bounded in-flight gauge; saturation answers 503 +
 //!   `Retry-After` and lands in [`crate::serve::ServeReport::shed`].
 //!
@@ -35,7 +36,21 @@
 //! `_bucket`/`_sum`/`_count` histogram series for engine and per-route
 //! wire latency.  The benches persist the same numbers as
 //! `BENCH_*.json` artifacts (`--artifact`; schema in
-//! [`crate::obs::artifact`]) so CI can upload the perf trajectory.
+//! [`crate::obs::artifact`]) so CI can upload the perf trajectory and
+//! gate it with `fullw2v benchdiff`.
+//!
+//! **Trace propagation** (the per-request view the aggregate metrics
+//! can't give): every request carries an `x-fullw2v-trace` header — a
+//! nonzero decimal `u64` trace id.  A client-sent id is adopted
+//! verbatim (so a caller can correlate across services); absent or
+//! malformed values fall back to the server's own request id, and the
+//! resolved id is echoed on the response in the same header.  Traced
+//! engine requests record a span tree (root `request` span + one child
+//! per [`crate::serve::SERVE_STAGES`] stage interval) into the bounded
+//! global ring in [`crate::obs::trace`], exported at
+//! `GET /debug/traces?n=K` (JSON, newest first) and
+//! `GET /debug/traces?format=chrome` (Chrome trace-event JSON, loadable
+//! in `about:tracing` / Perfetto).
 //!
 //! The transport-level reuse lesson (Ji et al., arXiv:1604.04661, and
 //! the FULL-W2V batching thesis) is wired in at two points: requests

@@ -7,6 +7,7 @@
 //! | `GET  /healthz`        | liveness (503 once draining)                |
 //! | `GET  /stats`          | engine report + net-layer gauges            |
 //! | `GET  /metrics`        | Prometheus text exposition ([`crate::obs`]) |
+//! | `GET  /debug/traces`   | recent request span trees ([`obs::trace`])  |
 //! | `POST /admin/shutdown` | trigger graceful drain                      |
 //!
 //! Dispatch is **two-phase** so the wire layer can feed the engine's
@@ -73,13 +74,18 @@ pub(crate) enum Pending {
 }
 
 /// Phase 1: parse, admit, and submit.  Engine-bound work is *in the
-/// micro-batcher's queue* when this returns.  `trace` is the request id
-/// minted by the connection layer; nn queries carry it into the engine.
+/// micro-batcher's queue* when this returns.  `trace` is the request's
+/// effective trace id — minted by the connection layer, or adopted from
+/// the `x-fullw2v-trace` request header; nn queries carry it into the
+/// engine, which records their span trees under it ([`obs::trace`]).
 pub(crate) fn begin(state: &AppState, req: &Request, trace: u64) -> Pending {
     match (req.method.as_str(), req.path()) {
         ("GET", "/healthz") => Pending::Ready("healthz", healthz(state)),
         ("GET", "/stats") => Pending::Ready("stats", stats(state)),
         ("GET", "/metrics") => Pending::Ready("metrics", metrics(state)),
+        ("GET", "/debug/traces") => {
+            Pending::Ready("traces", traces(&req.target))
+        }
         ("POST", "/v1/nn") => nn_begin(state, req, trace),
         ("POST", "/v1/embed") => match parse_body(req) {
             Err(resp) => Pending::Ready("embed", resp),
@@ -100,8 +106,8 @@ pub(crate) fn begin(state: &AppState, req: &Request, trace: u64) -> Pending {
         }
         (
             _,
-            "/healthz" | "/stats" | "/metrics" | "/v1/nn" | "/v1/embed"
-            | "/admin/shutdown",
+            "/healthz" | "/stats" | "/metrics" | "/debug/traces"
+            | "/v1/nn" | "/v1/embed" | "/admin/shutdown",
         ) => Pending::Ready(
             "other",
             error(405, &format!("method {} not allowed here", req.method)),
@@ -336,6 +342,9 @@ fn healthz(state: &AppState) -> Response {
 /// latency histograms (engine-side and per-route wire-side). Families
 /// named here are what the CI smoke test and `net_integration` grep for.
 fn metrics(state: &AppState) -> Response {
+    // sample process self-metrics (RSS, thread count) so every scrape
+    // sees fresh values without a background sampler thread
+    obs::registry::refresh_process_metrics();
     let mut w = PromWriter::new();
     obs::registry::render(&mut w);
     w.gauge(
@@ -423,7 +432,41 @@ fn metrics(state: &AppState) -> Response {
             1e-9,
         );
     }
-    Response::text(200, &w.finish())
+    let mut resp = Response::text(200, &w.finish());
+    // scrapers content-negotiate on the exposition version, so the
+    // generic text type from Response::text is not enough here
+    resp.content_type = super::http::PROMETHEUS_CONTENT_TYPE;
+    resp
+}
+
+/// Smallest useful query-string accessor: the value of `key` in
+/// `?k=v&k2=v2`, no decoding (trace-export parameters are plain
+/// integers/idents).  Never panics — L4 territory.
+fn query_param<'a>(target: &'a str, key: &str) -> Option<&'a str> {
+    let (_, query) = target.split_once('?')?;
+    query.split('&').find_map(|pair| {
+        let (k, v) = pair.split_once('=')?;
+        (k == key).then_some(v)
+    })
+}
+
+/// Traces served newest-first by default (`?n=K` bounds the count,
+/// `?format=chrome` switches to the Chrome trace-event export).
+const DEFAULT_TRACES: usize = 32;
+
+/// `GET /debug/traces`: recent request span trees from the global
+/// trace ring ([`obs::trace`]).
+fn traces(target: &str) -> Response {
+    let n = query_param(target, "n")
+        .and_then(|v| v.parse::<usize>().ok())
+        .unwrap_or(DEFAULT_TRACES)
+        .min(obs::trace::TRACE_RING_CAP);
+    let snap = obs::trace::global().snapshot(n);
+    let body = match query_param(target, "format") {
+        Some("chrome") => obs::trace::to_chrome(&snap),
+        _ => obs::trace::to_json(&snap),
+    };
+    Response::json(200, &body)
 }
 
 fn stats(state: &AppState) -> Response {

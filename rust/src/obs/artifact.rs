@@ -17,7 +17,17 @@
 //!
 //! Every section a bench emits should be a plain array/object of numbers
 //! so downstream diffing needs no schema knowledge beyond v1.
+//!
+//! The reader half ([`read`], [`diff`], [`benchdiff`]) turns two such
+//! artifacts into a regression verdict: numeric leaves are flattened to
+//! dotted paths (`probe_plan.2.rows_loaded_per_query`), a pinned rule
+//! table names the series whose drift gates CI (direction-aware: fewer
+//! rows loaded is good, less reuse is bad), and `fullw2v benchdiff`
+//! exits non-zero past tolerance. Sections absent from either artifact
+//! are tolerated — benches grow sections over time, and the first CI run
+//! after a new bench lands has no old counterpart to compare.
 
+use std::collections::BTreeMap;
 use std::io;
 use std::path::Path;
 
@@ -67,6 +77,362 @@ pub fn emit(
     std::fs::write(path, format!("{}\n", obj(fields)))
 }
 
+/// Read and validate a schema-v1 artifact document.
+pub fn read(path: &Path) -> io::Result<Json> {
+    let text = std::fs::read_to_string(path)?;
+    let doc = Json::parse(text.trim()).map_err(|e| {
+        io::Error::new(
+            io::ErrorKind::InvalidData,
+            format!("{}: not a JSON artifact: {e}", path.display()),
+        )
+    })?;
+    match doc.get("schema").and_then(Json::as_f64) {
+        Some(v) if v == 1.0 => Ok(doc),
+        other => Err(io::Error::new(
+            io::ErrorKind::InvalidData,
+            format!(
+                "{}: unsupported artifact schema {other:?} (want 1)",
+                path.display()
+            ),
+        )),
+    }
+}
+
+/// Flatten every numeric leaf to a dotted path (`latency.p50_us`,
+/// `thread_scaling.0.words_per_sec`). Array elements are addressed by
+/// index — row order is stable for a given bench. The run-identity
+/// fields (`schema`, `created_unix`) are excluded: they differ between
+/// any two runs by construction and must never trip a `--fail-on .*`.
+pub fn flatten(doc: &Json) -> BTreeMap<String, f64> {
+    let mut out = BTreeMap::new();
+    walk(doc, "", 0, &mut out);
+    out
+}
+
+fn walk(j: &Json, prefix: &str, depth: usize, out: &mut BTreeMap<String, f64>) {
+    match j {
+        Json::Num(n) => {
+            out.insert(prefix.to_string(), *n);
+        }
+        Json::Arr(v) => {
+            for (i, x) in v.iter().enumerate() {
+                walk(x, &join(prefix, &i.to_string()), depth + 1, out);
+            }
+        }
+        Json::Obj(m) => {
+            for (k, v) in m {
+                if depth == 0 && (k == "schema" || k == "created_unix") {
+                    continue;
+                }
+                walk(v, &join(prefix, k), depth + 1, out);
+            }
+        }
+        _ => {}
+    }
+}
+
+fn join(prefix: &str, key: &str) -> String {
+    if prefix.is_empty() {
+        key.to_string()
+    } else {
+        format!("{prefix}.{key}")
+    }
+}
+
+/// Which way a pinned series is allowed to move.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Direction {
+    /// Growth past tolerance is a regression (rows loaded, latency).
+    LowerIsBetter,
+    /// Shrinkage past tolerance is a regression (reuse, roofline frac).
+    HigherIsBetter,
+    /// Any relative drift past tolerance is a regression (`--fail-on`).
+    Either,
+}
+
+/// One gating rule: series matching `pattern` may drift at most
+/// `tol_pct` percent in the bad direction.
+#[derive(Debug, Clone)]
+pub struct Rule {
+    pub pattern: String,
+    pub direction: Direction,
+    pub tol_pct: f64,
+}
+
+/// The pinned perf series every benchdiff run gates on. Tolerances are
+/// deliberately loose — CI runners are noisy; these catch collapses
+/// (a reuse path silently disabled, a probe plan scanning everything),
+/// not single-digit noise.
+pub fn default_rules() -> Vec<Rule> {
+    let pin = |pattern: &str, direction, tol_pct| Rule {
+        pattern: pattern.to_string(),
+        direction,
+        tol_pct,
+    };
+    vec![
+        pin("rows_loaded_per_query$", Direction::LowerIsBetter, 10.0),
+        pin("rows_advanced$", Direction::LowerIsBetter, 10.0),
+        pin("neg_reuse$", Direction::HigherIsBetter, 10.0),
+        pin("achieved_frac$", Direction::HigherIsBetter, 20.0),
+        pin("p50_us$", Direction::LowerIsBetter, 50.0),
+        pin("p99_us$", Direction::LowerIsBetter, 50.0),
+    ]
+}
+
+/// Absolute percentage-point drift allowed for any stage's share of its
+/// breakdown (stage *seconds* scale with runner speed, shares don't).
+pub const STAGE_SHARE_TOL_POINTS: f64 = 15.0;
+
+/// One series that moved past its rule's tolerance.
+#[derive(Debug, Clone)]
+pub struct Regression {
+    pub path: String,
+    pub old: f64,
+    pub new: f64,
+    /// Relative drift in percent (share drift in points for stages).
+    pub change_pct: f64,
+    pub tol_pct: f64,
+}
+
+/// Outcome of comparing two artifacts.
+#[derive(Debug, Default)]
+pub struct DiffReport {
+    /// Series matched by some rule and present in both artifacts.
+    pub compared: usize,
+    pub regressions: Vec<Regression>,
+    /// Rule-matched series present in only one artifact (informational:
+    /// sections come and go as benches evolve).
+    pub missing: Vec<String>,
+}
+
+impl DiffReport {
+    pub fn regressed(&self) -> bool {
+        !self.regressions.is_empty()
+    }
+
+    /// Human-readable verdict, one line per finding.
+    pub fn render(&self) -> String {
+        let mut out = String::new();
+        for r in &self.regressions {
+            out.push_str(&format!(
+                "REGRESSION {}: {} -> {} ({:+.1}% vs tol {:.0}%)\n",
+                r.path, r.old, r.new, r.change_pct, r.tol_pct
+            ));
+        }
+        for m in &self.missing {
+            out.push_str(&format!("note: {m} present in only one artifact\n"));
+        }
+        out.push_str(&format!(
+            "benchdiff: {} series compared, {} regression(s)\n",
+            self.compared,
+            self.regressions.len()
+        ));
+        out
+    }
+}
+
+/// Parse one `--fail-on PATTERN=PCT` argument.
+pub fn parse_fail_on(s: &str) -> Result<Rule, String> {
+    let (pattern, pct) = s
+        .rsplit_once('=')
+        .ok_or_else(|| format!("--fail-on wants PATTERN=PCT, got '{s}'"))?;
+    if pattern.is_empty() {
+        return Err(format!("--fail-on has an empty pattern: '{s}'"));
+    }
+    let tol_pct: f64 = pct
+        .parse()
+        .map_err(|_| format!("--fail-on tolerance must be a number, got '{pct}'"))?;
+    if tol_pct.is_nan() || tol_pct < 0.0 {
+        return Err(format!("--fail-on tolerance must be >= 0, got '{pct}'"));
+    }
+    Ok(Rule {
+        pattern: pattern.to_string(),
+        direction: Direction::Either,
+        tol_pct,
+    })
+}
+
+/// Compare two artifacts under the pinned rules plus any `extra` rules.
+///
+/// Stage breakdowns (paths containing a `stages` component) are compared
+/// as shares of their own breakdown's total, in absolute percentage
+/// points — wall-clock seconds vary with runner speed, the *shape* of
+/// the decomposition shouldn't. Everything else is gated on relative
+/// drift in the rule's bad direction. Series matched by a rule but
+/// present in only one artifact are reported, not failed.
+pub fn diff(old: &Json, new: &Json, extra: &[Rule]) -> DiffReport {
+    let old_flat = flatten(old);
+    let new_flat = flatten(new);
+    let mut report = DiffReport::default();
+
+    let mut rules = default_rules();
+    rules.extend(extra.iter().cloned());
+    for rule in &rules {
+        for (path, &old_v) in &old_flat {
+            if !rx_match(&rule.pattern, path) {
+                continue;
+            }
+            let Some(&new_v) = new_flat.get(path) else {
+                report.missing.push(path.clone());
+                continue;
+            };
+            report.compared += 1;
+            if old_v.abs() < 1e-12 {
+                continue; // relative drift from zero is undefined
+            }
+            let rel_pct = (new_v - old_v) / old_v * 100.0;
+            let bad = match rule.direction {
+                Direction::LowerIsBetter => rel_pct,
+                Direction::HigherIsBetter => -rel_pct,
+                Direction::Either => rel_pct.abs(),
+            };
+            if bad > rule.tol_pct {
+                report.regressions.push(Regression {
+                    path: path.clone(),
+                    old: old_v,
+                    new: new_v,
+                    change_pct: rel_pct,
+                    tol_pct: rule.tol_pct,
+                });
+            }
+        }
+        for path in new_flat.keys() {
+            if rx_match(&rule.pattern, path) && !old_flat.contains_key(path) {
+                report.missing.push(path.clone());
+            }
+        }
+    }
+
+    diff_stage_shares(&old_flat, &new_flat, &mut report);
+    report.missing.sort();
+    report.missing.dedup();
+    report
+}
+
+/// Group `...stages.<name>` paths by breakdown, normalize each side to
+/// shares, and flag absolute drift past [`STAGE_SHARE_TOL_POINTS`].
+fn diff_stage_shares(
+    old_flat: &BTreeMap<String, f64>,
+    new_flat: &BTreeMap<String, f64>,
+    report: &mut DiffReport,
+) {
+    // prefix (up to and including "stages") -> [(path, old, new)]
+    let mut groups: BTreeMap<String, Vec<(String, f64, f64)>> = BTreeMap::new();
+    for (path, &old_v) in old_flat {
+        let Some(prefix) = stages_prefix(path) else { continue };
+        let Some(&new_v) = new_flat.get(path) else { continue };
+        groups
+            .entry(prefix.to_string())
+            .or_default()
+            .push((path.clone(), old_v, new_v));
+    }
+    for members in groups.values() {
+        let old_total: f64 = members.iter().map(|(_, o, _)| o).sum();
+        let new_total: f64 = members.iter().map(|(_, _, n)| n).sum();
+        if old_total <= 0.0 || new_total <= 0.0 {
+            continue; // empty breakdown: shares undefined
+        }
+        for (path, old_v, new_v) in members {
+            report.compared += 1;
+            let old_share = old_v / old_total * 100.0;
+            let new_share = new_v / new_total * 100.0;
+            let drift = new_share - old_share;
+            if drift.abs() > STAGE_SHARE_TOL_POINTS {
+                report.regressions.push(Regression {
+                    path: format!("{path} (share)"),
+                    old: old_share,
+                    new: new_share,
+                    change_pct: drift,
+                    tol_pct: STAGE_SHARE_TOL_POINTS,
+                });
+            }
+        }
+    }
+}
+
+/// `Some(prefix through "stages")` if `path` sits inside a stage
+/// breakdown: `stages.batch_fill`, `thread_scaling.0.stages.lookup`.
+fn stages_prefix(path: &str) -> Option<&str> {
+    let parts: Vec<&str> = path.split('.').collect();
+    let pos = parts.iter().rposition(|p| *p == "stages")?;
+    if pos + 1 != parts.len() - 1 {
+        return None; // "stages" must hold the leaf directly
+    }
+    let prefix_len: usize =
+        parts[..=pos].iter().map(|p| p.len() + 1).sum::<usize>() - 1;
+    Some(&path[..prefix_len])
+}
+
+/// Minimal regex matcher over the subset the rule table needs:
+/// `^` (anchor start), `$` (anchor end), `.` (any char), `c*`
+/// (zero or more of the preceding char) — the classic Kernighan–Pike
+/// matcher, byte-wise. Everything else matches literally. No regex
+/// crate offline; this subset covers every pinned pattern and keeps
+/// `--fail-on` expressive enough for dotted-path selection.
+pub fn rx_match(pattern: &str, text: &str) -> bool {
+    let p = pattern.as_bytes();
+    let t = text.as_bytes();
+    if p.first() == Some(&b'^') {
+        return match_here(&p[1..], t);
+    }
+    let mut i = 0;
+    loop {
+        if match_here(p, &t[i..]) {
+            return true;
+        }
+        if i >= t.len() {
+            return false;
+        }
+        i += 1;
+    }
+}
+
+fn match_here(p: &[u8], t: &[u8]) -> bool {
+    let Some(&first) = p.first() else { return true };
+    if p.get(1) == Some(&b'*') {
+        return match_star(first, &p[2..], t);
+    }
+    if p == b"$" {
+        return t.is_empty();
+    }
+    match t.first() {
+        Some(&c) if first == b'.' || first == c => {
+            match_here(&p[1..], &t[1..])
+        }
+        _ => false,
+    }
+}
+
+fn match_star(c: u8, p: &[u8], t: &[u8]) -> bool {
+    let mut i = 0;
+    loop {
+        if match_here(p, &t[i..]) {
+            return true;
+        }
+        match t.get(i) {
+            Some(&x) if c == b'.' || x == c => i += 1,
+            _ => return false,
+        }
+    }
+}
+
+/// CLI entry: read both artifacts, diff under the pinned rules plus
+/// `--fail-on` extras, return the rendered report and whether to fail.
+pub fn benchdiff(
+    old_path: &Path,
+    new_path: &Path,
+    fail_on: &[String],
+) -> Result<(String, bool), String> {
+    let mut extra = Vec::new();
+    for s in fail_on {
+        extra.push(parse_fail_on(s)?);
+    }
+    let old = read(old_path).map_err(|e| e.to_string())?;
+    let new = read(new_path).map_err(|e| e.to_string())?;
+    let report = diff(&old, &new, &extra);
+    Ok((report.render(), report.regressed()))
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -100,5 +466,215 @@ mod tests {
             Some(1.25)
         );
         std::fs::remove_file(&path).ok();
+    }
+
+    /// A minimal but representative artifact: probe-plan rows, reuse
+    /// ratio, roofline fraction, latency quantiles, a stage breakdown.
+    fn fixture(
+        rows_loaded: f64,
+        neg_reuse: f64,
+        achieved: f64,
+        p99: f64,
+        stage_a: f64,
+        stage_b: f64,
+    ) -> Json {
+        Json::parse(&format!(
+            r#"{{
+              "schema": 1, "bench": "bench_serve", "git_rev": "abc",
+              "created_unix": 1754000000,
+              "config": {{"shards": 4}},
+              "probe_plan": [
+                {{"nprobe": 4, "rows_loaded_per_query": {rows_loaded}}}
+              ],
+              "scan_reuse": {{"rows_advanced": 5000, "neg_reuse": {neg_reuse}}},
+              "roofline": {{"achieved_frac": {achieved}}},
+              "latency": {{"p50_us": 100, "p99_us": {p99}}},
+              "stages": {{"shard_scan": {stage_a}, "topk_merge": {stage_b}}}
+            }}"#
+        ))
+        .unwrap()
+    }
+
+    #[test]
+    fn flatten_produces_dotted_paths_and_skips_identity_fields() {
+        let flat = flatten(&fixture(1000.0, 4.0, 0.5, 900.0, 8.0, 2.0));
+        assert_eq!(flat.get("probe_plan.0.rows_loaded_per_query"), Some(&1000.0));
+        assert_eq!(flat.get("scan_reuse.neg_reuse"), Some(&4.0));
+        assert_eq!(flat.get("latency.p99_us"), Some(&900.0));
+        assert_eq!(flat.get("stages.shard_scan"), Some(&8.0));
+        assert_eq!(flat.get("config.shards"), Some(&4.0));
+        // run identity never participates in diffing
+        assert!(!flat.contains_key("schema"));
+        assert!(!flat.contains_key("created_unix"));
+    }
+
+    #[test]
+    fn rx_matcher_covers_the_rule_subset() {
+        assert!(rx_match("rows_loaded_per_query$", "probe_plan.0.rows_loaded_per_query"));
+        assert!(!rx_match("rows_loaded_per_query$", "rows_loaded_per_query_x"));
+        assert!(rx_match("^latency", "latency.p50_us"));
+        assert!(!rx_match("^latency", "x.latency.p50_us"));
+        assert!(rx_match("p.._us$", "latency.p99_us"));
+        assert!(rx_match("probe.*query$", "probe_plan.0.rows_loaded_per_query"));
+        assert!(rx_match("a*b", "b"));
+        assert!(rx_match("a*b", "aaab"));
+        assert!(!rx_match("^a*b$", "aaac"));
+        assert!(rx_match("", "anything"));
+        assert!(rx_match("^$", ""));
+        assert!(!rx_match("^$", "x"));
+    }
+
+    #[test]
+    fn identical_artifacts_pass() {
+        let a = fixture(1000.0, 4.0, 0.5, 900.0, 8.0, 2.0);
+        let report = diff(&a, &a, &[]);
+        assert!(!report.regressed(), "{}", report.render());
+        assert!(report.compared > 0);
+        assert!(report.missing.is_empty());
+    }
+
+    #[test]
+    fn rows_loaded_regression_fails_improvement_passes() {
+        let old = fixture(1000.0, 4.0, 0.5, 900.0, 8.0, 2.0);
+        // +20% rows loaded per query: past the 10% gate
+        let worse = fixture(1200.0, 4.0, 0.5, 900.0, 8.0, 2.0);
+        let report = diff(&old, &worse, &[]);
+        assert!(report.regressed());
+        assert!(report
+            .regressions
+            .iter()
+            .any(|r| r.path == "probe_plan.0.rows_loaded_per_query"));
+        let shown = report.render();
+        assert!(shown.contains("REGRESSION"), "{shown}");
+        assert!(shown.contains("rows_loaded_per_query"), "{shown}");
+        // -20% is an improvement under LowerIsBetter: no finding
+        let better = fixture(800.0, 4.0, 0.5, 900.0, 8.0, 2.0);
+        assert!(!diff(&old, &better, &[]).regressed());
+    }
+
+    #[test]
+    fn higher_is_better_series_gate_on_drops() {
+        let old = fixture(1000.0, 4.0, 0.5, 900.0, 8.0, 2.0);
+        // reuse collapsing 4.0 -> 2.0 and roofline 0.5 -> 0.3 both fail
+        let worse = fixture(1000.0, 2.0, 0.3, 900.0, 8.0, 2.0);
+        let report = diff(&old, &worse, &[]);
+        let paths: Vec<&str> =
+            report.regressions.iter().map(|r| r.path.as_str()).collect();
+        assert!(paths.contains(&"scan_reuse.neg_reuse"), "{paths:?}");
+        assert!(paths.contains(&"roofline.achieved_frac"), "{paths:?}");
+        // gains in those series never fail
+        let better = fixture(1000.0, 8.0, 0.9, 900.0, 8.0, 2.0);
+        assert!(!diff(&old, &better, &[]).regressed());
+    }
+
+    #[test]
+    fn stage_shares_gate_on_point_drift_not_seconds() {
+        let old = fixture(1000.0, 4.0, 0.5, 900.0, 8.0, 2.0);
+        // 10x slower runner, identical 80/20 shape: no finding
+        let slower = fixture(1000.0, 4.0, 0.5, 900.0, 80.0, 20.0);
+        assert!(!diff(&old, &slower, &[]).regressed());
+        // same total, shape inverts 80/20 -> 20/80: both stages flagged
+        let inverted = fixture(1000.0, 4.0, 0.5, 900.0, 2.0, 8.0);
+        let report = diff(&old, &inverted, &[]);
+        assert!(report
+            .regressions
+            .iter()
+            .any(|r| r.path == "stages.shard_scan (share)"));
+    }
+
+    #[test]
+    fn missing_sections_are_tolerated() {
+        let old = fixture(1000.0, 4.0, 0.5, 900.0, 8.0, 2.0);
+        let new = Json::parse(
+            r#"{"schema": 1, "bench": "bench_serve",
+                "latency": {"p50_us": 100, "p99_us": 900}}"#,
+        )
+        .unwrap();
+        let report = diff(&old, &new, &[]);
+        assert!(!report.regressed(), "{}", report.render());
+        assert!(report
+            .missing
+            .iter()
+            .any(|m| m == "probe_plan.0.rows_loaded_per_query"));
+    }
+
+    #[test]
+    fn fail_on_overrides_add_rules_in_both_directions() {
+        let old = fixture(1000.0, 4.0, 0.5, 900.0, 8.0, 2.0);
+        // p50 drifts +6%: passes the loose 50% default gate
+        let new = Json::parse(
+            r#"{"schema": 1,
+                "latency": {"p50_us": 106, "p99_us": 900}}"#,
+        )
+        .unwrap();
+        assert!(!diff(&old, &new, &[]).regressed());
+        let strict = parse_fail_on("p50_us$=5").unwrap();
+        assert_eq!(strict.direction, Direction::Either);
+        let report = diff(&old, &new, &[strict.clone()]);
+        assert!(report.regressed(), "{}", report.render());
+        // Either also fires on drops past tolerance
+        let dropped = Json::parse(
+            r#"{"schema": 1,
+                "latency": {"p50_us": 90, "p99_us": 900}}"#,
+        )
+        .unwrap();
+        assert!(diff(&old, &dropped, &[strict]).regressed());
+
+        assert!(parse_fail_on("nope").is_err());
+        assert!(parse_fail_on("=5").is_err());
+        assert!(parse_fail_on("x=fast").is_err());
+        assert!(parse_fail_on("x=-2").is_err());
+    }
+
+    #[test]
+    fn zero_baselines_never_divide() {
+        let old = Json::parse(
+            r#"{"schema": 1, "scan_reuse": {"neg_reuse": 0},
+                "stages": {"a": 0, "b": 0}}"#,
+        )
+        .unwrap();
+        let new = Json::parse(
+            r#"{"schema": 1, "scan_reuse": {"neg_reuse": 3},
+                "stages": {"a": 0, "b": 0}}"#,
+        )
+        .unwrap();
+        let report = diff(&old, &new, &[]);
+        assert!(!report.regressed(), "{}", report.render());
+    }
+
+    #[test]
+    fn benchdiff_end_to_end_exit_semantics() {
+        let dir = std::env::temp_dir().join("fullw2v_benchdiff_test");
+        std::fs::create_dir_all(&dir).unwrap();
+        let old_p = dir.join("old.json");
+        let new_p = dir.join("new.json");
+        std::fs::write(
+            &old_p,
+            fixture(1000.0, 4.0, 0.5, 900.0, 8.0, 2.0).to_string(),
+        )
+        .unwrap();
+        std::fs::write(
+            &new_p,
+            fixture(1000.0, 4.0, 0.5, 900.0, 8.0, 2.0).to_string(),
+        )
+        .unwrap();
+        let (_, regressed) = benchdiff(&old_p, &new_p, &[]).unwrap();
+        assert!(!regressed, "identical artifacts must pass");
+        std::fs::write(
+            &new_p,
+            fixture(1300.0, 4.0, 0.5, 900.0, 8.0, 2.0).to_string(),
+        )
+        .unwrap();
+        let (text, regressed) = benchdiff(&old_p, &new_p, &[]).unwrap();
+        assert!(regressed, "injected +30% rows regression must fail");
+        assert!(text.contains("rows_loaded_per_query"), "{text}");
+        // malformed --fail-on and unreadable inputs surface as errors
+        assert!(benchdiff(&old_p, &new_p, &["bogus".into()]).is_err());
+        assert!(benchdiff(Path::new("/nonexistent.json"), &new_p, &[]).is_err());
+        // schema gate: v2 documents are rejected, not misread
+        std::fs::write(&new_p, r#"{"schema": 2}"#).unwrap();
+        assert!(read(&new_p).is_err());
+        std::fs::remove_file(&old_p).ok();
+        std::fs::remove_file(&new_p).ok();
     }
 }

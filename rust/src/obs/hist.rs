@@ -223,6 +223,44 @@ mod tests {
         assert_eq!(ab_c.count(), 1500);
     }
 
+    /// Merging histograms whose samples occupy disjoint octaves must
+    /// keep both populations intact: counts add, the max comes from the
+    /// high histogram, and quantiles straddle the gap correctly.
+    #[test]
+    fn merge_across_disjoint_octave_ranges() {
+        // low: 1000 samples in the exact/linear range (< 2*SUB)
+        let mut low = Histogram::new();
+        for i in 0..1000u64 {
+            low.record(i % (2 * SUB as u64));
+        }
+        // high: 1000 samples many octaves up (~1ms .. ~2ms)
+        let mut high = Histogram::new();
+        for i in 0..1000u64 {
+            high.record(1_000_000 + i * 1_000);
+        }
+        assert_eq!(low.max_ns(), 2 * SUB as u64 - 1);
+        assert!(high.quantile(0.01) >= 1_000_000.0);
+
+        let mut merged = low.clone();
+        merged.merge(&high);
+        assert_eq!(merged.count(), 2000);
+        assert_eq!(merged.max_ns(), high.max_ns());
+        assert_eq!(
+            merged.sum_ns(),
+            low.sum_ns() + high.sum_ns(),
+            "disjoint octaves must not collide in any bucket"
+        );
+        // the median sits at the boundary between the two populations:
+        // p49 still in the low range, p51 already in the high range
+        assert!(merged.quantile(0.49) < 2.0 * 2.0 * SUB as f64);
+        assert!(merged.quantile(0.51) >= 1_000_000.0);
+        // cumulative buckets cover both clusters and end at the total
+        let b = merged.cumulative_buckets();
+        assert_eq!(b.last().unwrap().1, 2000);
+        assert!(b.iter().any(|&(upper, _)| upper < 2 * SUB as u64));
+        assert!(b.iter().any(|&(upper, _)| upper >= 1_000_000));
+    }
+
     #[test]
     fn quantiles_are_monotone_in_q() {
         let mut rng = Pcg32::new(7);

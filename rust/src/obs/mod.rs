@@ -14,20 +14,24 @@
 //! | [`registry`] | process-global named atomic [`Counter`]s/[`Gauge`]s   |
 //! | [`stage`]    | [`StageTimes`] accumulator + [`Span`] lap clock       |
 //! | [`prom`]     | hand-rolled Prometheus text exposition ([`PromWriter`])|
-//! | [`artifact`] | `BENCH_*.json` bench-artifact emitter                 |
+//! | [`artifact`] | `BENCH_*.json` artifact emitter + reader + `benchdiff`|
+//! | [`trace`]    | per-request span trees in a bounded [`trace::TraceRing`]|
 //!
 //! Everything is dependency-free (like `util::json`) and cheap enough to
 //! stay on in production paths: the histogram is a fixed ~15 KB of
-//! buckets, counters are single relaxed atomics, and stage timers are two
-//! monotonic-clock reads per section.
+//! buckets, counters are single relaxed atomics, stage timers are two
+//! monotonic-clock reads per section, and the trace ring holds a bounded
+//! number of recent span trees (oldest evicted).
 
 pub mod artifact;
 pub mod hist;
 pub mod prom;
 pub mod registry;
 pub mod stage;
+pub mod trace;
 
 pub use hist::Histogram;
 pub use prom::PromWriter;
 pub use registry::{Counter, Gauge};
 pub use stage::{Span, StageTimes};
+pub use trace::TraceRing;

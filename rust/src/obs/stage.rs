@@ -187,6 +187,56 @@ mod tests {
         assert!(table.contains("75.0%"));
     }
 
+    /// Merging breakdowns built over different stage lists must panic:
+    /// stage sets are fixed per pipeline, and silently zipping mismatched
+    /// lists would attribute time to the wrong stage names.
+    #[test]
+    fn merge_rejects_disjoint_stage_sets() {
+        const OTHER: &[&str] = &["x", "y"];
+        let mut a = StageTimes::new(STAGES);
+        a.add(0, 1);
+        let mut b = StageTimes::new(OTHER);
+        b.add(1, 2);
+        let err = std::panic::catch_unwind(move || a.merge(&b));
+        assert!(err.is_err(), "disjoint stage sets must not merge");
+    }
+
+    /// Both empty-adopt directions: an empty breakdown adopts its peer's
+    /// stage list, and merging an empty peer leaves the target untouched
+    /// (including its name list).
+    #[test]
+    fn merge_empty_adopts_in_both_directions() {
+        let mut filled = StageTimes::new(STAGES);
+        filled.add(1, 42);
+
+        let mut empty = StageTimes::default();
+        empty.merge(&filled);
+        assert_eq!(empty.names(), STAGES);
+        assert_eq!(empty.get_ns(1), 42);
+
+        let mut target = filled.clone();
+        target.merge(&StageTimes::default());
+        assert_eq!(target, filled);
+
+        let mut both = StageTimes::default();
+        both.merge(&StageTimes::default());
+        assert!(both.is_empty());
+        assert_eq!(both.total_ns(), 0);
+    }
+
+    /// The share column must not divide by zero when no time has been
+    /// recorded: an all-zero breakdown renders 0.0% shares, not NaN/inf.
+    #[test]
+    fn render_table_normalizes_shares_at_zero_total() {
+        let t = StageTimes::new(STAGES);
+        assert_eq!(t.total_ns(), 0);
+        let table = t.render_table("empty");
+        assert!(table.contains("== empty =="));
+        assert!(table.contains("0.0%"));
+        assert!(!table.contains("NaN"));
+        assert!(!table.contains("inf"));
+    }
+
     #[test]
     fn ensure_initialises_once() {
         let mut t = StageTimes::default();

@@ -1,0 +1,372 @@
+//! Request-scoped trace spans: per-request span trees in a bounded,
+//! lock-sharded ring of recent traces.
+//!
+//! The aggregate stage timers ([`super::stage`]) answer "where does the
+//! engine spend time overall"; this module answers "where did *this
+//! request* spend its time".  A trace is identified by a `u64` id —
+//! minted by the connection layer where `req_id` originates, or adopted
+//! from the `x-fullw2v-trace` request header so an upstream tier (the
+//! planned scatter-gather router) can nest a worker's spans under its
+//! own.  The serving engine records one span tree per traced request:
+//! a `request` root covering enqueue-to-reply, with child spans that
+//! reuse the `SERVE_STAGES` stage vocabulary and tile the request's
+//! portion of its batch's stage laps — the same sum-reconciliation
+//! contract the aggregate timers keep with `busy_seconds`.
+//!
+//! Storage is a process-global ring ([`global`]) of the most recent
+//! [`TRACE_RING_CAP`] traces, sharded across several mutexes so the
+//! engine's dispatcher and the HTTP export path never serialize on one
+//! lock.  Memory is constant: each shard is a bounded `VecDeque` that
+//! evicts its oldest trace on overflow.  Export is pull-based via
+//! `GET /debug/traces` ([`to_json`] newest-first, or [`to_chrome`] in
+//! the Chrome trace-event format loadable in `chrome://tracing` /
+//! Perfetto).
+//!
+//! Timestamps are monotonic nanoseconds relative to the recording
+//! engine's start epoch — meaningful for intra-trace arithmetic and
+//! cross-trace ordering within one process, not wall-clock times.
+
+use crate::util::json::{obj, Json};
+use crate::util::sync::lock_unpoisoned;
+use std::collections::VecDeque;
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::{Mutex, OnceLock};
+
+/// Traces retained by the process-global ring (oldest evicted first).
+pub const TRACE_RING_CAP: usize = 256;
+
+/// Mutex shards in a ring; traces land round-robin so concurrent
+/// recorders (engine dispatcher) and readers (`/debug/traces`) rarely
+/// contend on the same lock.
+const RING_SHARDS: usize = 8;
+
+/// One span in a trace: a named interval with an optional parent
+/// (index into the owning trace's span vector).  Names are `'static`
+/// because every recorded span reuses the fixed stage vocabulary —
+/// recording never allocates strings.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct SpanRec {
+    pub name: &'static str,
+    /// Index of the parent span within the same trace (`None` = root).
+    pub parent: Option<u16>,
+    /// Monotonic ns relative to the recording engine's start epoch.
+    pub start_ns: u64,
+    pub end_ns: u64,
+}
+
+impl SpanRec {
+    pub fn duration_ns(&self) -> u64 {
+        self.end_ns.saturating_sub(self.start_ns)
+    }
+}
+
+/// One recorded trace: the request's id and its span tree (span 0 is
+/// the root by convention — the engine records `request` first).
+#[derive(Debug, Clone)]
+pub struct Trace {
+    pub id: u64,
+    pub spans: Vec<SpanRec>,
+    /// Global recording sequence number — the newest-first sort key
+    /// across shards.
+    seq: u64,
+}
+
+impl Trace {
+    /// The root span, if the trace has any spans at all.
+    pub fn root(&self) -> Option<&SpanRec> {
+        self.spans.first()
+    }
+}
+
+/// Bounded, lock-sharded ring of recent traces.
+pub struct TraceRing {
+    shards: Vec<Mutex<VecDeque<Trace>>>,
+    per_shard: usize,
+    seq: AtomicU64,
+}
+
+impl TraceRing {
+    /// A ring retaining at most `cap` traces (rounded up to a multiple
+    /// of the shard count so every shard gets an equal bound).
+    pub fn with_capacity(cap: usize) -> TraceRing {
+        let per_shard = cap.div_ceil(RING_SHARDS).max(1);
+        TraceRing {
+            shards: (0..RING_SHARDS)
+                .map(|_| {
+                    Mutex::new(VecDeque::with_capacity(per_shard))
+                })
+                .collect(),
+            per_shard,
+            seq: AtomicU64::new(0),
+        }
+    }
+
+    /// Record one trace.  Constant memory: the target shard evicts its
+    /// oldest trace when full.  The only allocation on this path is the
+    /// span vector the caller already built.
+    pub fn record(&self, id: u64, spans: Vec<SpanRec>) {
+        let seq = self.seq.fetch_add(1, Ordering::Relaxed);
+        // round-robin placement keeps eviction age-uniform across
+        // shards and spreads recorder contention
+        let idx = (seq as usize) % self.shards.len();
+        let Some(shard) = self.shards.get(idx) else { return };
+        let mut q = lock_unpoisoned(shard);
+        if q.len() >= self.per_shard {
+            q.pop_front();
+        }
+        q.push_back(Trace { id, spans, seq });
+    }
+
+    /// Up to `n` most recent traces, newest first.
+    pub fn snapshot(&self, n: usize) -> Vec<Trace> {
+        let mut out: Vec<Trace> = Vec::new();
+        for shard in &self.shards {
+            out.extend(lock_unpoisoned(shard).iter().cloned());
+        }
+        out.sort_by(|a, b| b.seq.cmp(&a.seq));
+        out.truncate(n);
+        out
+    }
+
+    /// Traces currently retained (bounded by the ring capacity).
+    pub fn len(&self) -> usize {
+        self.shards
+            .iter()
+            .map(|s| lock_unpoisoned(s).len())
+            .sum()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+}
+
+/// The process-global trace ring (what the engine records into and
+/// `GET /debug/traces` serves).  Process-global for the same reason the
+/// metric registry is: the recorder (engine dispatcher) and the
+/// exporter (HTTP front-end) meet here without threading a handle
+/// through every constructor.
+pub fn global() -> &'static TraceRing {
+    static RING: OnceLock<TraceRing> = OnceLock::new();
+    RING.get_or_init(|| TraceRing::with_capacity(TRACE_RING_CAP))
+}
+
+fn span_json(s: &SpanRec) -> Json {
+    obj(vec![
+        ("name", Json::Str(s.name.to_string())),
+        (
+            "parent",
+            s.parent
+                .map(|p| Json::Num(p as f64))
+                .unwrap_or(Json::Null),
+        ),
+        ("start_ns", Json::Num(s.start_ns as f64)),
+        ("end_ns", Json::Num(s.end_ns as f64)),
+        ("dur_ns", Json::Num(s.duration_ns() as f64)),
+    ])
+}
+
+/// JSON export: `{"traces":[{trace_id, spans:[...]}, ...]}`, in the
+/// order given (callers pass a newest-first [`TraceRing::snapshot`]).
+/// Trace ids are emitted as decimal strings — a wire-adopted id can use
+/// the full `u64` range, which `f64` JSON numbers cannot carry exactly.
+pub fn to_json(traces: &[Trace]) -> Json {
+    obj(vec![(
+        "traces",
+        Json::Arr(
+            traces
+                .iter()
+                .map(|t| {
+                    obj(vec![
+                        ("trace_id", Json::Str(t.id.to_string())),
+                        (
+                            "spans",
+                            Json::Arr(
+                                t.spans.iter().map(span_json).collect(),
+                            ),
+                        ),
+                    ])
+                })
+                .collect(),
+        ),
+    )])
+}
+
+/// Chrome trace-event export: `{"traceEvents":[...]}` with one
+/// complete (`ph:"X"`) event per span, `ts`/`dur` in microseconds —
+/// the JSON object format `chrome://tracing` and Perfetto load
+/// directly.  Each trace gets its own `tid` lane so concurrent
+/// requests render as parallel tracks.
+pub fn to_chrome(traces: &[Trace]) -> Json {
+    let mut events = Vec::new();
+    for (lane, t) in traces.iter().enumerate() {
+        for s in &t.spans {
+            events.push(obj(vec![
+                ("name", Json::Str(s.name.to_string())),
+                ("ph", Json::Str("X".to_string())),
+                ("ts", Json::Num(s.start_ns as f64 / 1e3)),
+                ("dur", Json::Num(s.duration_ns() as f64 / 1e3)),
+                ("pid", Json::Num(1.0)),
+                ("tid", Json::Num((lane + 1) as f64)),
+                (
+                    "args",
+                    obj(vec![(
+                        "trace_id",
+                        Json::Str(t.id.to_string()),
+                    )]),
+                ),
+            ]));
+        }
+    }
+    obj(vec![("traceEvents", Json::Arr(events))])
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn spans(base: u64) -> Vec<SpanRec> {
+        vec![
+            SpanRec {
+                name: "request",
+                parent: None,
+                start_ns: base,
+                end_ns: base + 100,
+            },
+            SpanRec {
+                name: "queue_wait",
+                parent: Some(0),
+                start_ns: base,
+                end_ns: base + 40,
+            },
+            SpanRec {
+                name: "shard_scan",
+                parent: Some(0),
+                start_ns: base + 40,
+                end_ns: base + 100,
+            },
+        ]
+    }
+
+    #[test]
+    fn ring_is_bounded_and_evicts_oldest() {
+        let ring = TraceRing::with_capacity(16);
+        for i in 0..50u64 {
+            ring.record(i, spans(i * 1000));
+        }
+        // rounded-up per-shard bound: never more than cap + shard slack
+        assert!(ring.len() <= 16, "len {} exceeds cap", ring.len());
+        let snap = ring.snapshot(usize::MAX);
+        assert_eq!(snap.len(), ring.len());
+        // everything retained is from the newest recordings
+        assert!(
+            snap.iter().all(|t| t.id >= 50 - 16),
+            "oldest traces must be evicted first"
+        );
+    }
+
+    #[test]
+    fn snapshot_is_newest_first_and_truncates() {
+        let ring = TraceRing::with_capacity(64);
+        for i in 0..20u64 {
+            ring.record(i, spans(i));
+        }
+        let snap = ring.snapshot(5);
+        assert_eq!(snap.len(), 5);
+        let ids: Vec<u64> = snap.iter().map(|t| t.id).collect();
+        assert_eq!(ids, vec![19, 18, 17, 16, 15]);
+    }
+
+    #[test]
+    fn concurrent_recorders_never_exceed_the_bound() {
+        let ring = std::sync::Arc::new(TraceRing::with_capacity(32));
+        std::thread::scope(|s| {
+            for t in 0..4u64 {
+                let ring = ring.clone();
+                s.spawn(move || {
+                    for i in 0..100u64 {
+                        ring.record(t * 1000 + i, spans(i));
+                    }
+                });
+            }
+        });
+        assert!(ring.len() <= 32);
+        assert_eq!(ring.snapshot(usize::MAX).len(), ring.len());
+    }
+
+    #[test]
+    fn json_export_round_trips_ids_and_span_tree() {
+        let ring = TraceRing::with_capacity(8);
+        ring.record(u64::MAX, spans(0)); // full-range id stays exact
+        let j = to_json(&ring.snapshot(8));
+        let text = j.to_string();
+        let parsed = Json::parse(&text).expect("valid JSON");
+        let traces = parsed
+            .get("traces")
+            .and_then(|t| t.as_arr())
+            .expect("traces array");
+        assert_eq!(traces.len(), 1);
+        assert_eq!(
+            traces[0].get("trace_id").and_then(|v| v.as_str()),
+            Some(u64::MAX.to_string()).as_deref()
+        );
+        let spans = traces[0]
+            .get("spans")
+            .and_then(|s| s.as_arr())
+            .expect("spans array");
+        assert_eq!(spans.len(), 3);
+        assert_eq!(
+            spans[0].get("name").and_then(|v| v.as_str()),
+            Some("request")
+        );
+        assert!(matches!(spans[0].get("parent"), Some(Json::Null)));
+        assert_eq!(
+            spans[1].get("parent").and_then(|v| v.as_f64()),
+            Some(0.0)
+        );
+        assert_eq!(
+            spans[2].get("dur_ns").and_then(|v| v.as_f64()),
+            Some(60.0)
+        );
+    }
+
+    #[test]
+    fn chrome_export_emits_matched_complete_events() {
+        let ring = TraceRing::with_capacity(8);
+        ring.record(7, spans(2_000));
+        ring.record(8, spans(3_000));
+        let j = to_chrome(&ring.snapshot(8));
+        let parsed = Json::parse(&j.to_string()).expect("valid JSON");
+        let events = parsed
+            .get("traceEvents")
+            .and_then(|e| e.as_arr())
+            .expect("traceEvents array");
+        assert_eq!(events.len(), 6, "one X event per span");
+        for e in events {
+            assert_eq!(e.get("ph").and_then(|v| v.as_str()), Some("X"));
+            let ts = e.get("ts").and_then(|v| v.as_f64()).expect("ts");
+            let dur = e.get("dur").and_then(|v| v.as_f64()).expect("dur");
+            assert!(ts >= 0.0 && dur >= 0.0);
+            assert!(e.get("name").is_some() && e.get("tid").is_some());
+        }
+        // the two traces render on distinct lanes
+        let tids: std::collections::BTreeSet<u64> = events
+            .iter()
+            .filter_map(|e| e.get("tid").and_then(|v| v.as_f64()))
+            .map(|t| t as u64)
+            .collect();
+        assert_eq!(tids.len(), 2);
+    }
+
+    #[test]
+    fn global_ring_is_shared() {
+        let before = global().len();
+        global().record(0xDEAD_BEEF, spans(1));
+        assert!(global().len() >= 1);
+        assert!(global().len() >= before.min(TRACE_RING_CAP));
+        assert!(global()
+            .snapshot(TRACE_RING_CAP)
+            .iter()
+            .any(|t| t.id == 0xDEAD_BEEF));
+    }
+}

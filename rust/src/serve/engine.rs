@@ -30,6 +30,12 @@
 //! by construction.  Both are summarized as a [`ServeReport`] via
 //! [`crate::metrics::LatencyStats`], alongside a bounded slow-query log
 //! whose entries carry the request ids the HTTP router propagates.
+//!
+//! Requests submitted with a trace id (`submit_*_traced`) additionally
+//! get a per-request **span tree** recorded into the global
+//! [`crate::obs::trace`] ring: a `request` root plus children reusing
+//! the [`SERVE_STAGES`] vocabulary that tile the request's share of its
+//! batch — followable end to end from `GET /debug/traces`.
 
 use super::ann::{
     search_shards_batch, search_shards_batch_groups,
@@ -39,6 +45,7 @@ use super::cache::HotCache;
 use super::ivf;
 use super::store::ShardedStore;
 use crate::metrics::LatencyStats;
+use crate::obs::trace::{self, SpanRec};
 use crate::obs::{Histogram, Span, StageTimes};
 use crate::util::json::{obj, Json};
 use crate::util::sync::lock_unpoisoned;
@@ -763,6 +770,27 @@ impl EngineStats {
     }
 }
 
+/// Advance the batch's stage clock: book the lap into `stage[idx]` and,
+/// when the batch carries at least one traced request, also record the
+/// absolute interval (epoch-relative ns) so traced requests' span trees
+/// can tile the batch stages ([`crate::obs::trace`]).  The untraced
+/// path records nothing and allocates nothing.
+fn lap(
+    span: &mut Span,
+    stage: &mut [u64; 5],
+    idx: usize,
+    cursor: &mut u64,
+    traced: bool,
+    intervals: &mut Vec<(&'static str, u64, u64)>,
+) {
+    let ns = span.lap_ns();
+    stage[idx] += ns;
+    if traced && ns > 0 {
+        intervals.push((SERVE_STAGES[idx], *cursor, *cursor + ns));
+    }
+    *cursor += ns;
+}
+
 /// Split `shards` into `workers` near-equal contiguous ranges.
 fn shard_ranges(shards: usize, workers: usize) -> Vec<(usize, usize)> {
     let base = shards / workers;
@@ -847,6 +875,10 @@ fn dispatch_loop(
         let batch_start = Instant::now();
         let mut span = Span::start();
         let mut stage = [0u64; 5];
+        // absolute (epoch-relative) stage intervals for this batch,
+        // recorded only when at least one request carries a trace id
+        let mut intervals: Vec<(&'static str, u64, u64)> = Vec::new();
+        let mut cursor_ns = batch_start_ns;
         let mut reqs = vec![first];
         while reqs.len() < batch_max {
             match rx.try_recv() {
@@ -881,7 +913,15 @@ fn dispatch_loop(
             };
             pendings.push(Pending { reply, enqueued, slot, trace, k });
         }
-        stage[ST_BATCH_FILL] += span.lap_ns();
+        let traced = pendings.iter().any(|p| p.trace.is_some());
+        lap(
+            &mut span,
+            &mut stage,
+            ST_BATCH_FILL,
+            &mut cursor_ns,
+            traced,
+            &mut intervals,
+        );
 
         let mut results: Vec<Option<QueryResponse>> = Vec::new();
         if !resolved.is_empty() {
@@ -942,7 +982,14 @@ fn dispatch_loop(
                     }
                 }
             }
-            stage[ST_IVF_PROBE] += span.lap_ns();
+            lap(
+                &mut span,
+                &mut stage,
+                ST_IVF_PROBE,
+                &mut cursor_ns,
+                traced,
+                &mut intervals,
+            );
             let job = Arc::new(BatchJob { queries: resolved, ranges, groups });
             let mut sent = vec![false; links.len()];
             for (link, s) in links.iter().zip(sent.iter_mut()) {
@@ -956,7 +1003,14 @@ fn dispatch_loop(
             let mut failure: Option<String> = None;
             let mut batch_rows = 0u64;
             let mut batch_advanced = 0u64;
-            stage[ST_SHARD_SCAN] += span.lap_ns();
+            lap(
+                &mut span,
+                &mut stage,
+                ST_SHARD_SCAN,
+                &mut cursor_ns,
+                traced,
+                &mut intervals,
+            );
             for (link, s) in links.iter().zip(&sent) {
                 if !*s {
                     failure =
@@ -966,7 +1020,14 @@ fn dispatch_loop(
                 // the scan stage is the wait for this worker's result;
                 // folding its partial heaps in is the merge stage
                 let received = link.result_rx.recv();
-                stage[ST_SHARD_SCAN] += span.lap_ns();
+                lap(
+                    &mut span,
+                    &mut stage,
+                    ST_SHARD_SCAN,
+                    &mut cursor_ns,
+                    traced,
+                    &mut intervals,
+                );
                 match received {
                     Ok(Ok((parts, rows, advanced))) => {
                         batch_rows += rows;
@@ -983,7 +1044,14 @@ fn dispatch_loop(
                             Some("worker thread died mid-batch".into());
                     }
                 }
-                stage[ST_TOPK_MERGE] += span.lap_ns();
+                lap(
+                    &mut span,
+                    &mut stage,
+                    ST_TOPK_MERGE,
+                    &mut cursor_ns,
+                    traced,
+                    &mut intervals,
+                );
             }
             results = match failure {
                 None => merged
@@ -1007,6 +1075,19 @@ fn dispatch_loop(
         // includes this batch
         let mut outbox = Vec::with_capacity(pendings.len());
         let mut slow_entries: Vec<SlowQuery> = Vec::new();
+        let mut traces: Vec<(u64, Vec<SpanRec>)> = Vec::new();
+        // the tail between the last recorded lap and this accounting
+        // point is merge-stage work (the final span.lap_ns() below books
+        // it there); close the interval now so traced requests' spans
+        // tile right up to where their latency is measured
+        let acct_ns = epoch.elapsed().as_nanos() as u64;
+        if traced && acct_ns > cursor_ns {
+            intervals.push((
+                SERVE_STAGES[ST_TOPK_MERGE],
+                cursor_ns,
+                acct_ns,
+            ));
+        }
         {
             let mut lat = lock_unpoisoned(&shared.latency);
             for p in pendings {
@@ -1025,11 +1106,45 @@ fn dispatch_loop(
                 };
                 // queue wait: enqueue to this batch starting (zero for
                 // requests drained mid-fill)
-                stage[ST_QUEUE_WAIT] += batch_start
+                let wait_ns = batch_start
                     .saturating_duration_since(p.enqueued)
                     .as_nanos() as u64;
+                stage[ST_QUEUE_WAIT] += wait_ns;
                 let nanos = p.enqueued.elapsed().as_nanos() as u64;
                 lat.record(nanos);
+                if let Some(tid) = p.trace {
+                    // span tree: a `request` root over enqueue-to-reply
+                    // plus children reusing the SERVE_STAGES vocabulary
+                    // — the request's own queue wait, then the batch's
+                    // stage intervals it shared.  Children tile the
+                    // root, so per-trace sums reconcile with the
+                    // recorded latency (same contract the aggregate
+                    // stage timers keep with busy_seconds).
+                    let enq_ns = batch_start_ns.saturating_sub(wait_ns);
+                    let mut spans =
+                        Vec::with_capacity(intervals.len() + 2);
+                    spans.push(SpanRec {
+                        name: "request",
+                        parent: None,
+                        start_ns: enq_ns,
+                        end_ns: enq_ns.saturating_add(nanos),
+                    });
+                    spans.push(SpanRec {
+                        name: SERVE_STAGES[ST_QUEUE_WAIT],
+                        parent: Some(0),
+                        start_ns: enq_ns,
+                        end_ns: batch_start_ns,
+                    });
+                    for &(name, s, e) in &intervals {
+                        spans.push(SpanRec {
+                            name,
+                            parent: Some(0),
+                            start_ns: s,
+                            end_ns: e,
+                        });
+                    }
+                    traces.push((tid, spans));
+                }
                 if nanos >= slow_ns {
                     slow_entries.push(SlowQuery {
                         trace: p.trace,
@@ -1038,6 +1153,15 @@ fn dispatch_loop(
                     });
                 }
                 outbox.push((p.reply, response));
+            }
+        }
+        // publish span trees outside the latency lock: the ring has its
+        // own sharded locks and readers (/debug/traces) must never
+        // contend with the histogram
+        if !traces.is_empty() {
+            let ring = trace::global();
+            for (tid, spans) in traces {
+                ring.record(tid, spans);
             }
         }
         if !slow_entries.is_empty() {
@@ -1575,6 +1699,66 @@ mod tests {
             r2.slow.is_empty() || r2.slow[0].micros >= 10_000.0,
             "fast queries must not spam the slow log"
         );
+    }
+
+    /// Traced requests leave span trees in the global trace ring: a
+    /// `request` root, children restricted to the SERVE_STAGES
+    /// vocabulary, and child durations that tile the root within the
+    /// same drift tolerance the aggregate stage timers are held to.
+    #[test]
+    fn traced_requests_record_span_trees_in_the_ring() {
+        let (_, dir) = setup("tracering", 30, 8);
+        let store =
+            Arc::new(ShardedStore::open(&dir, Precision::Exact).unwrap());
+        let engine = ServeEngine::start(store, opts());
+        let client = engine.client();
+        // id range chosen to never collide with other tests recording
+        // into the same process-global ring
+        let base = 0x00E2_E000_0001u64;
+        for i in 0..10u64 {
+            let rx =
+                client.submit_id_traced((i % 30) as u32, 4, base + i);
+            rx.recv().unwrap().unwrap();
+        }
+        // untraced queries take the no-allocation path and must not
+        // record (asserted below by exact-count on this test's id range;
+        // other tests share the process-global ring, so only the ids
+        // minted here are safe to reason about)
+        client.query_id(0, 3).unwrap();
+        drop(client);
+        engine.shutdown();
+        let snap = trace::global().snapshot(trace::TRACE_RING_CAP);
+        let mine: Vec<_> = snap
+            .iter()
+            .filter(|t| t.id >= base && t.id < base + 10)
+            .collect();
+        assert_eq!(mine.len(), 10, "every traced request recorded");
+        for t in &mine {
+            let root = t.root().expect("non-empty span tree");
+            assert_eq!(root.name, "request");
+            assert!(root.parent.is_none());
+            let mut child_ns = 0u64;
+            for s in &t.spans[1..] {
+                assert!(
+                    SERVE_STAGES.contains(&s.name),
+                    "unknown stage name {}",
+                    s.name
+                );
+                assert_eq!(s.parent, Some(0), "children hang off root");
+                assert!(s.end_ns >= s.start_ns);
+                assert!(s.start_ns >= root.start_ns);
+                child_ns += s.duration_ns();
+            }
+            // children tile the root: same reconciliation contract as
+            // stage_sums_reconcile_with_busy_time
+            let total = root.duration_ns().max(1);
+            let drift = total.abs_diff(child_ns);
+            assert!(
+                drift < 2_000_000 || drift * 50 < total,
+                "trace {} children {child_ns}ns vs root {total}ns",
+                t.id
+            );
+        }
     }
 
     #[test]

@@ -228,4 +228,34 @@ mod tests {
         assert_eq!(doc.get("msg").unwrap().as_str(), Some("served \"q\""));
         assert_eq!(doc.get("req_id").unwrap().as_str(), Some("7"));
     }
+
+    /// Regression guard: field values are caller-controlled strings (the
+    /// HTTP layer logs request targets verbatim), so quotes, newlines,
+    /// backslashes, and control characters must all survive the JSON
+    /// escaper — one record per line, parseable, values intact.
+    #[test]
+    fn json_mode_escapes_hostile_field_values() {
+        let hostile = "a\"b\\c\nd\te\rf\u{1}g";
+        set_format(Format::Json);
+        let line = render(
+            Level::Warn,
+            &[("target", hostile), ("note", "\u{0}leading-nul")],
+            format_args!("bad query {}", "\"quoted\"\nline2"),
+        );
+        set_format(Format::Text);
+        // the record must stay a single line: embedded newlines would
+        // split one log record into two and break line-oriented readers
+        assert!(!line.contains('\n'), "record spans lines: {line:?}");
+        assert!(!line.contains('\r'));
+        let doc = Json::parse(&line).unwrap();
+        assert_eq!(doc.get("target").unwrap().as_str(), Some(hostile));
+        assert_eq!(
+            doc.get("note").unwrap().as_str(),
+            Some("\u{0}leading-nul")
+        );
+        assert_eq!(
+            doc.get("msg").unwrap().as_str(),
+            Some("bad query \"quoted\"\nline2")
+        );
+    }
 }

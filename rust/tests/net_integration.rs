@@ -357,6 +357,187 @@ fn metrics_endpoint_emits_valid_prometheus_text() {
     server.stop();
 }
 
+/// `GET /metrics` must declare the Prometheus exposition content type
+/// (`text/plain; version=0.0.4`) — scrapers key the parser off it — and
+/// on linux the per-scrape process self-metrics render as gauges.
+#[test]
+fn metrics_content_type_is_prometheus_text() {
+    let server = start_server(
+        "metrics_ct",
+        Precision::Exact,
+        engine_opts(),
+        NetOptions::default(),
+    );
+    let addr = server.local_addr().to_string();
+    // simple_request drops headers, so read the raw response text
+    let mut s = TcpStream::connect(&addr).unwrap();
+    s.set_read_timeout(Some(Duration::from_secs(10))).unwrap();
+    s.write_all(
+        format!(
+            "GET /metrics HTTP/1.1\r\nHost: {addr}\r\n\
+             Connection: close\r\n\r\n"
+        )
+        .as_bytes(),
+    )
+    .unwrap();
+    let mut raw = Vec::new();
+    std::io::Read::read_to_end(&mut s, &mut raw).unwrap();
+    let text = String::from_utf8_lossy(&raw).into_owned();
+    assert!(text.starts_with("HTTP/1.1 200"), "{text}");
+    assert!(
+        text.to_ascii_lowercase()
+            .contains("content-type: text/plain; version=0.0.4"),
+        "Prometheus exposition content type missing: {text}"
+    );
+    if cfg!(target_os = "linux") {
+        assert!(
+            text.contains("# TYPE process_rss_bytes gauge"),
+            "scrape-time process metrics missing: {text}"
+        );
+        assert!(text.contains("# TYPE process_threads gauge"), "{text}");
+    }
+    server.stop();
+}
+
+/// The acceptance-criteria trace test: a wire request carrying an
+/// `x-fullw2v-trace` id gets it echoed on the response, and
+/// `GET /debug/traces` returns that trace as a span tree whose root is
+/// `request`, whose children are `SERVE_STAGES` names, and whose child
+/// durations tile the root; the Chrome export is valid trace-event
+/// JSON with `ph:"X"` complete events.
+#[test]
+fn trace_propagation_end_to_end() {
+    let server = start_server(
+        "trace",
+        Precision::Exact,
+        engine_opts(),
+        NetOptions::default(),
+    );
+    let addr = server.local_addr().to_string();
+
+    let raw_nn = |trace_header: Option<&str>| -> String {
+        let mut s = TcpStream::connect(&addr).unwrap();
+        s.set_read_timeout(Some(Duration::from_secs(10))).unwrap();
+        let extra = trace_header
+            .map(|v| format!("x-fullw2v-trace: {v}\r\n"))
+            .unwrap_or_default();
+        s.write_all(
+            format!(
+                "POST /v1/nn HTTP/1.1\r\nHost: {addr}\r\n{extra}\
+                 Content-Length: 8\r\nConnection: close\r\n\r\n{{\"id\":3}}"
+            )
+            .as_bytes(),
+        )
+        .unwrap();
+        let mut raw = Vec::new();
+        std::io::Read::read_to_end(&mut s, &mut raw).unwrap();
+        String::from_utf8_lossy(&raw).into_owned()
+    };
+
+    // with no client id the server mints one and still echoes it
+    let text = raw_nn(None);
+    assert!(text.starts_with("HTTP/1.1 200"), "{text}");
+    assert!(text.contains("x-fullw2v-trace: "), "{text}");
+    // malformed ids are ignored, not parroted back
+    let text = raw_nn(Some("not-a-number"));
+    assert!(text.starts_with("HTTP/1.1 200"), "{text}");
+    assert!(!text.contains("x-fullw2v-trace: not-a-number"), "{text}");
+
+    // the trace ring is process-global and bounded, so other tests in
+    // this binary can evict between our POST and GET — retry with fresh
+    // ids until one survives the round trip (first attempt normally does)
+    let base = 0x00F0_0D00_0000_0001u64;
+    let mut found = None;
+    for attempt in 0..10u64 {
+        let id = base + attempt;
+        let text = raw_nn(Some(&id.to_string()));
+        assert!(text.starts_with("HTTP/1.1 200"), "{text}");
+        assert!(
+            text.contains(&format!("x-fullw2v-trace: {id}")),
+            "client-sent id must be echoed verbatim: {text}"
+        );
+        let (status, body) =
+            simple_request(&addr, "GET", "/debug/traces?n=256", None)
+                .unwrap();
+        assert_eq!(status, 200);
+        let doc =
+            Json::parse(std::str::from_utf8(&body).unwrap()).unwrap();
+        let traces = doc.get("traces").and_then(|t| t.as_arr()).unwrap();
+        let id_str = id.to_string();
+        if let Some(t) = traces.iter().find(|t| {
+            t.get("trace_id").and_then(|i| i.as_str())
+                == Some(id_str.as_str())
+        }) {
+            found = Some(t.clone());
+            break;
+        }
+    }
+    let trace = found.expect("sent trace id must appear in /debug/traces");
+    let spans = trace.get("spans").and_then(|s| s.as_arr()).unwrap();
+    assert!(spans.len() >= 2, "root plus stage children: {trace}");
+    let root = &spans[0];
+    assert_eq!(root.get("name").and_then(|n| n.as_str()), Some("request"));
+    assert_eq!(root.get("parent"), Some(&Json::Null));
+    let total = root.get("dur_ns").and_then(|d| d.as_f64()).unwrap();
+    let mut child_sum = 0.0;
+    for child in &spans[1..] {
+        let name = child.get("name").and_then(|n| n.as_str()).unwrap();
+        assert!(
+            fullw2v::serve::SERVE_STAGES.contains(&name),
+            "child '{name}' must be a SERVE_STAGES stage: {trace}"
+        );
+        assert_eq!(
+            child.get("parent").and_then(|p| p.as_f64()),
+            Some(0.0),
+            "stage spans parent the request root: {trace}"
+        );
+        child_sum += child.get("dur_ns").and_then(|d| d.as_f64()).unwrap();
+    }
+    // the same sum-consistency contract as ServeReport::stages: children
+    // tile the root up to clock-read jitter
+    let drift = (total - child_sum).abs();
+    assert!(
+        drift < 2e6 || drift * 50.0 < total,
+        "stage children must tile the request span: \
+         sum {child_sum} vs root {total} ({trace})"
+    );
+
+    // Chrome export: valid trace-event JSON, complete (ph:"X") events
+    // with microsecond ts/dur, at least one request-root event
+    let (status, body) = simple_request(
+        &addr,
+        "GET",
+        "/debug/traces?n=256&format=chrome",
+        None,
+    )
+    .unwrap();
+    assert_eq!(status, 200);
+    let doc = Json::parse(std::str::from_utf8(&body).unwrap()).unwrap();
+    let events = doc.get("traceEvents").and_then(|e| e.as_arr()).unwrap();
+    assert!(!events.is_empty(), "chrome export has events");
+    for e in events {
+        assert_eq!(e.get("ph").and_then(|p| p.as_str()), Some("X"), "{e}");
+        assert!(e.get("ts").and_then(|t| t.as_f64()).is_some(), "{e}");
+        assert!(e.get("dur").and_then(|d| d.as_f64()).is_some(), "{e}");
+        assert!(
+            e.get("args")
+                .and_then(|a| a.get("trace_id"))
+                .and_then(|i| i.as_str())
+                .is_some(),
+            "{e}"
+        );
+    }
+    assert!(
+        events
+            .iter()
+            .any(|e| e.get("name").and_then(|n| n.as_str())
+                == Some("request")),
+        "at least one request root event renders"
+    );
+
+    server.stop();
+}
+
 /// Raw-socket protocol abuse: the parser's 400/413/431 paths over a real
 /// connection, including a request head split byte-by-byte across reads.
 #[test]
